@@ -1,0 +1,72 @@
+//! Attack lab: run all three §4.2 attacks operationally and compare with
+//! the theoretical bounds.
+//!
+//! Run: `cargo run --release --example attack_lab`
+
+use mole::attacks::{brute_force_attack, dt_pair_attack, reversing_attack};
+use mole::augconv::{build_aug_conv, ChannelPerm};
+use mole::data::images::photo_like;
+use mole::morph::MorphKey;
+use mole::rng::Rng;
+use mole::security::SecurityReport;
+use mole::tensor::Tensor;
+use mole::Geometry;
+
+fn main() -> mole::Result<()> {
+    mole::logging::init();
+    let g = Geometry::SMALL;
+
+    println!("=== theoretical bounds (paper CIFAR/VGG-16 geometry) ===");
+    SecurityReport::analyze(Geometry::CIFAR_VGG16, 1, 0.5).print();
+    println!();
+    SecurityReport::analyze(Geometry::CIFAR_VGG16, 3, 0.5).print();
+
+    println!("\n=== 1. brute-force attack (operational, small geometry) ===");
+    let key = MorphKey::generate(g, 48, 11)?; // q=16 so trials are cheap
+    let img = photo_like(3, g.m, 5);
+    for sigma in [0.5, 0.05, 0.005] {
+        let out = brute_force_attack(&key, &img, sigma, 500, 3)?;
+        println!(
+            "  sigma={sigma:<7} successes={}/{} best_esd={:.4} best_ssim={:.3}",
+            out.successes, out.trials, out.best_esd, out.best_ssim
+        );
+    }
+    println!("  (theorem-1 bound at q=16, sigma=0.05: 2^{:.0})",
+        mole::security::brute_force_bound(&g, 48, 0.05).log2);
+
+    println!("\n=== 2. Aug-Conv reversing attack across the kappa_mc boundary ===");
+    let mut rng = Rng::new(13);
+    let w1 = Tensor::new(
+        &[g.beta, g.alpha, g.p, g.p],
+        rng.normal_vec(g.beta * g.alpha * g.p * g.p, 0.5),
+    )?;
+    let b1 = vec![0.0f32; g.beta];
+    let probe = Tensor::new(&[1, g.d_len()], rng.normal_vec(g.d_len(), 1.0))?;
+    for kappa in [16usize, 3, 1] {
+        let key = MorphKey::generate(g, kappa, 17)?;
+        let perm = ChannelPerm::generate(g.beta, 17);
+        let layer = build_aug_conv(&w1, &b1, &key, &perm)?;
+        let out = reversing_attack(&g, &key, layer.matrix(), &w1, &probe)?;
+        println!(
+            "  kappa={kappa:<3} q={:<4} n2={:<4} fitting_candidates={:<3} identified={:<5} probe_esd={:.4}",
+            out.q, out.n2, out.candidates_fitting, out.identified, out.probe_esd
+        );
+    }
+    println!("  (kappa > kappa_mc=3 is broken; kappa <= kappa_mc protects the data)");
+
+    println!("\n=== 3. D-T pair attack (SHBC) around the eq.-15 threshold ===");
+    let key = MorphKey::generate(g, 16, 19)?; // q=48, 3 images needed
+    let mut rng = Rng::new(23);
+    let hold = Tensor::new(&[4, g.d_len()], rng.normal_vec(4 * g.d_len(), 1.0))?;
+    for pairs in [1usize, 2, 3, 8] {
+        let inj =
+            Tensor::new(&[pairs, g.d_len()], rng.normal_vec(pairs * g.d_len(), 1.0))?;
+        let out = dt_pair_attack(&key, &inj, &hold)?;
+        println!(
+            "  injected={pairs:<2} rows={}/{} solved={:<5} core_err={:<9.2e} holdout_esd={:.4}",
+            out.rows_used, out.q, out.solved, out.core_max_err, out.holdout_esd
+        );
+    }
+    println!("  (threshold: ceil(q/kappa) = 3 injected images; below it the key survives)");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Quickstart: the MoLe pipeline in ~80 lines.
+//!
+//! 1. The provider generates a morph key + channel permutation.
+//! 2. The developer supplies a pre-trained first conv layer.
+//! 3. The provider builds the Aug-Conv matrix C^ac = M⁻¹·C (shuffled).
+//! 4. Data is morphed; the developer extracts features from the morphed
+//!    rows through the AOT-compiled XLA artifact — and they match the
+//!    original convolution exactly (paper eq. 5).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use mole::augconv::{build_aug_conv, ChannelPerm};
+use mole::coordinator::trainer::init_params;
+use mole::manifest::Manifest;
+use mole::morph::MorphKey;
+use mole::rng::Rng;
+use mole::runtime::{Arg, Engine};
+use mole::tensor::Tensor;
+use mole::{d2r, Geometry};
+use std::path::Path;
+
+fn main() -> mole::Result<()> {
+    mole::logging::init();
+    let g = Geometry::SMALL;
+    let kappa = 16;
+
+    // --- provider side ----------------------------------------------------
+    let key = MorphKey::generate(g, kappa, 2019)?;
+    let perm = ChannelPerm::generate(g.beta, 2019);
+    println!("provider: morph key q={} (kappa={kappa}), core cond ~{:.1}",
+        key.q(), key.cond_estimate());
+
+    // --- developer's pre-trained first layer -------------------------------
+    let mut rng = Rng::new(7);
+    let w1 = Tensor::new(
+        &[g.beta, g.alpha, g.p, g.p],
+        rng.normal_vec(g.beta * g.alpha * g.p * g.p, 0.3),
+    )?;
+    let b1: Vec<f32> = rng.normal_vec(g.beta, 0.05);
+
+    // --- provider builds + "ships" the Aug-Conv layer ----------------------
+    let t0 = std::time::Instant::now();
+    let layer = build_aug_conv(&w1, &b1, &key, &perm)?;
+    println!(
+        "provider: built C^ac {:?} in {:.1}ms ({} MB on the wire)",
+        layer.matrix().shape(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        layer.transfer_bytes() / (1 << 20)
+    );
+
+    // --- provider morphs a batch of images --------------------------------
+    let images = Tensor::new(&[8, g.alpha, g.m, g.m], rng.normal_vec(8 * g.d_len(), 0.5))?;
+    let rows = d2r::unroll(images.clone())?;
+    let t_rows = key.morph(&rows)?;
+    println!(
+        "provider: morphed 8 images, E_sd(original, morphed) = {:.3}",
+        t_rows.rms_diff(&rows)?
+    );
+
+    // --- developer extracts features from MORPHED data via XLA ------------
+    let engine = Engine::new(Manifest::load(Path::new("artifacts"))?)?;
+    let bias_t = Tensor::new(&[g.beta], layer.bias().to_vec())?;
+    let out = engine.exec(
+        "augconv_forward_small_b8",
+        &[Arg::T(t_rows), Arg::T(layer.matrix().clone()), Arg::T(bias_t)],
+    )?;
+    let f_aug = &out[0];
+
+    // --- ground truth: direct conv on the ORIGINAL data --------------------
+    let f_plain = mole::nn::conv2d_same(&images, &w1, Some(&b1))?;
+    let f_expected = perm.apply_features(&f_plain)?;
+    let max_diff = f_aug.max_abs_diff(&f_expected)?;
+    println!("equivalence check (eq. 5): max |aug - plain| = {max_diff:.2e}");
+    assert!(max_diff < 5e-2, "Aug-Conv equivalence violated!");
+
+    // --- and a full inference through the trained-model artifact ----------
+    let manifest = engine.manifest();
+    let mut prng = Rng::new(42);
+    let params = init_params(&manifest.aug_params, &mut prng);
+    let mut args: Vec<Arg> = vec![
+        Arg::T(layer.matrix().clone()),
+        Arg::T(Tensor::new(&[g.beta], layer.bias().to_vec())?),
+    ];
+    for p in &params {
+        args.push(Arg::T(p.clone()));
+    }
+    let one = Tensor::new(&[1, g.d_len()], prng.normal_vec(g.d_len(), 0.5))?;
+    args.push(Arg::T(one));
+    let logits = engine.exec("infer_aug_small_b1", &args)?;
+    println!("inference on morphed row -> logits {:?}", &logits[0].data()[..5]);
+
+    println!("\nquickstart OK: morphed data, identical features, zero knowledge of M.");
+    Ok(())
+}

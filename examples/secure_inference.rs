@@ -1,0 +1,117 @@
+//! Secure-inference serving demo: train briefly on morphed data, then
+//! serve concurrent inference requests (morphed rows) through the dynamic
+//! batcher, reporting latency percentiles, throughput and batching
+//! efficiency. This is the "inference stage" half of the paper's title.
+//!
+//! Run: `cargo run --release --example secure_inference -- [clients] [requests]`
+
+use mole::augconv::{build_aug_conv, ChannelPerm};
+use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
+use mole::coordinator::experiment::ExperimentConfig;
+use mole::coordinator::trainer::Trainer;
+use mole::data::synth::generate;
+use mole::manifest::Manifest;
+use mole::morph::MorphKey;
+use mole::rng::Rng;
+use mole::runtime::Engine;
+use mole::{d2r, Geometry};
+use std::path::Path;
+use std::time::Duration;
+
+fn main() -> mole::Result<()> {
+    mole::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let clients: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let per_client: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let g = Geometry::SMALL;
+
+    // --- train a model on morphed data (short run) -------------------------
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let engine = Engine::new(manifest.clone())?;
+    let cfg = ExperimentConfig::quick(120);
+    let dataset = generate(&cfg.data);
+    let key = MorphKey::generate(g, cfg.kappa, cfg.seed)?;
+    let perm = ChannelPerm::generate(g.beta, cfg.seed);
+    let mut prng = Rng::new(cfg.seed);
+    let base_params =
+        mole::coordinator::trainer::init_params(&engine.manifest().base_params, &mut prng);
+    let layer = build_aug_conv(&base_params[0], base_params[1].data(), &key, &perm)?;
+
+    println!("training {} steps on morphed data...", cfg.steps);
+    let mut trainer =
+        Trainer::new_aug(&engine, layer.matrix().clone(), layer.bias().to_vec(), cfg.seed)?;
+    let mut iter = dataset.train_batches(trainer.batch_size());
+    let mut rng = Rng::new(9);
+    for _ in 0..cfg.steps {
+        let b = iter.next_batch(&mut rng);
+        let rows = key.morph(&d2r::unroll(b.images)?)?;
+        trainer.step(&rows, &b.labels, cfg.lr)?;
+    }
+
+    // --- stand up the serving worker ---------------------------------------
+    let model = ServingModel {
+        cac: layer.matrix().clone(),
+        bias: layer.bias().to_vec(),
+        params: trainer.params().to_vec(),
+    };
+    let handle = ServingHandle::start(
+        manifest,
+        model,
+        BatcherConfig { max_batch: 32, timeout: Duration::from_millis(2) },
+    )?;
+
+    // --- fire concurrent clients ------------------------------------------
+    println!("serving: {clients} clients x {per_client} requests (morphed rows)...");
+    let t0 = std::time::Instant::now();
+    let mut threads = Vec::new();
+    let test = std::sync::Arc::new(dataset.test.clone());
+    let key = std::sync::Arc::new(key);
+    for c in 0..clients {
+        let h = handle.clone();
+        let test = test.clone();
+        let key = key.clone();
+        threads.push(std::thread::spawn(move || -> mole::Result<usize> {
+            let per = 3 * 16 * 16;
+            let mut correct = 0usize;
+            for i in 0..per_client {
+                let idx = (c * per_client + i) % test.len();
+                let img = mole::tensor::Tensor::new(
+                    &[1, 3, 16, 16],
+                    test.images.data()[idx * per..][..per].to_vec(),
+                )?;
+                let row = key.morph(&d2r::unroll(img)?)?;
+                let logits = h.infer(row.row(0))?;
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                if pred == test.labels[idx] as usize {
+                    correct += 1;
+                }
+            }
+            Ok(correct)
+        }));
+    }
+    let mut correct = 0usize;
+    for t in threads {
+        correct += t.join().expect("client panicked")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = clients * per_client;
+
+    // --- report -------------------------------------------------------------
+    let m = &handle.metrics;
+    let (p50, p95, p99) = m.total_latency.summary().unwrap_or((0, 0, 0));
+    let (e50, e95, _e99) = m.execute_latency.summary().unwrap_or((0, 0, 0));
+    println!("\nserving report:");
+    println!("  requests              {total}");
+    println!("  accuracy (on morphed) {:.3}", correct as f64 / total as f64);
+    println!("  throughput            {:.1} req/s", total as f64 / wall);
+    println!("  latency p50/p95/p99   {p50} / {p95} / {p99} µs");
+    println!("  execute  p50/p95      {e50} / {e95} µs");
+    println!("  batches               {} (mean size {:.2}, padding {:.1}%)",
+        m.batches.get(), m.mean_batch_size(), m.padding_fraction() * 100.0);
+    Ok(())
+}

@@ -1,0 +1,286 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* under artifacts/.
+
+HLO text (not ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes ``artifacts/manifest.json`` — the single source of truth the
+rust runtime reads for artifact paths, input/output signatures, geometry
+constants and parameter initialization shapes — and
+``artifacts/testvec.json`` with exact cross-language test vectors for the
+d2r / morph / Aug-Conv algebra (weights are dyadic rationals so both
+languages reproduce them bit-exactly in f32).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import geometry as G
+from . import model as M
+from .kernels import ref
+from .kernels.morph import morph_apply
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned, 32-bit)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, specs, meta=None):
+        """Lower fn at the given ShapeDtypeStructs and write HLO text."""
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        flat, _ = jax.tree_util.tree_flatten(outs)
+        self.entries[name] = {
+            "path": path,
+            "inputs": _sig(specs),
+            "outputs": _sig(flat),
+            **(meta or {}),
+        }
+        print(f"  emitted {name}: {len(text)} chars, "
+              f"{len(specs)} inputs -> {len(flat)} outputs")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Artifact set
+# ---------------------------------------------------------------------------
+
+def emit_all(out_dir: str):
+    em = Emitter(out_dir)
+    g = G.SMALL
+
+    # ---- morphing (provider hot path), both geometries -------------------
+    for geo, qs, bs in ((G.SMALL, G.MORPH_QS_SMALL, (8, G.TRAIN_BATCH)),
+                        (G.CIFAR, G.MORPH_QS_CIFAR, (8,))):
+        for q in qs:
+            for b in bs:
+                name = f"morph_apply_{geo.name}_q{q}_b{b}"
+                em.emit(
+                    name,
+                    lambda d, mp: (morph_apply(d, mp),),
+                    [f32(b, geo.d_len), f32(q, q)],
+                    meta={"kind": "morph", "geometry": geo.name,
+                          "q": q, "kappa": geo.d_len // q, "batch": b},
+                )
+
+    # ---- Aug-Conv forward (serving / equivalence checks) -----------------
+    for b in (G.EQ_BATCH, 32):
+        em.emit(
+            f"augconv_forward_{g.name}_b{b}",
+            lambda t, cac, b1: (jnp.reshape(
+                ref.matmul_ref(t, cac), (t.shape[0], g.beta, g.n, g.n))
+                + b1[None, :, None, None],),
+            [f32(b, g.d_len), f32(g.d_len, g.f_len), f32(g.beta)],
+            meta={"kind": "augconv_forward", "batch": b},
+        )
+
+    # ---- parameter shape table -------------------------------------------
+    shapes = M.base_param_shapes(g)
+    base_shapes = [{"name": nm, "shape": list(sh), "init": ini, "fan_in": f}
+                   for nm, sh, ini, f in shapes]
+    aug_shapes = base_shapes[2:]  # conv1 (w1, b1) replaced by fixed C^ac/b1p
+
+    nb, na = len(base_shapes), len(aug_shapes)
+
+    # ---- inference -------------------------------------------------------
+    for b in G.INFER_BATCHES:
+        em.emit(
+            f"infer_base_{g.name}_b{b}",
+            lambda *a: (M.forward_base(M.BaseParams(*a[:nb]), a[nb]),),
+            [f32(*s["shape"]) for s in base_shapes] + [f32(b, g.alpha, g.m, g.m)],
+            meta={"kind": "infer_base", "batch": b, "n_params": nb},
+        )
+        em.emit(
+            f"infer_aug_{g.name}_b{b}",
+            lambda *a: (M.forward_aug(
+                a[0], a[1], M.AugParams(*a[2 : 2 + na]), a[2 + na], g),),
+            [f32(g.d_len, g.f_len), f32(g.beta)]
+            + [f32(*s["shape"]) for s in aug_shapes] + [f32(b, g.d_len)],
+            meta={"kind": "infer_aug", "batch": b, "n_params": na},
+        )
+
+    # ---- evaluation (loss, acc on a labelled batch) -----------------------
+    bt = G.TRAIN_BATCH
+    em.emit(
+        f"eval_base_{g.name}_b{bt}",
+        lambda *a: M.eval_base(M.BaseParams(*a[:nb]), a[nb], a[nb + 1]),
+        [f32(*s["shape"]) for s in base_shapes]
+        + [f32(bt, g.alpha, g.m, g.m), i32(bt)],
+        meta={"kind": "eval_base", "batch": bt, "n_params": nb},
+    )
+    em.emit(
+        f"eval_aug_{g.name}_b{bt}",
+        lambda *a: M.eval_aug(a[0], a[1], M.AugParams(*a[2 : 2 + na]),
+                              a[2 + na], a[3 + na], g),
+        [f32(g.d_len, g.f_len), f32(g.beta)]
+        + [f32(*s["shape"]) for s in aug_shapes] + [f32(bt, g.d_len), i32(bt)],
+        meta={"kind": "eval_aug", "batch": bt, "n_params": na},
+    )
+
+    # ---- training steps ----------------------------------------------------
+    def ts_base(*a):
+        p = M.BaseParams(*a[:nb])
+        v = M.BaseParams(*a[nb : 2 * nb])
+        x, y, lr = a[2 * nb], a[2 * nb + 1], a[2 * nb + 2]
+        np_, nm_, loss, acc = M.train_step_base(p, v, x, y, lr)
+        return (*np_, *nm_, loss, acc)
+
+    em.emit(
+        f"train_step_base_{g.name}_b{bt}",
+        ts_base,
+        [f32(*s["shape"]) for s in base_shapes] * 2
+        + [f32(bt, g.alpha, g.m, g.m), i32(bt), f32()],
+        meta={"kind": "train_step_base", "batch": bt, "n_params": nb},
+    )
+
+    def ts_aug(*a):
+        cac, b1p = a[0], a[1]
+        p = M.AugParams(*a[2 : 2 + na])
+        v = M.AugParams(*a[2 + na : 2 + 2 * na])
+        t, y, lr = a[2 + 2 * na], a[3 + 2 * na], a[4 + 2 * na]
+        np_, nm_, loss, acc = M.train_step_aug(cac, b1p, p, v, t, y, lr, g)
+        return (*np_, *nm_, loss, acc)
+
+    em.emit(
+        f"train_step_aug_{g.name}_b{bt}",
+        ts_aug,
+        [f32(g.d_len, g.f_len), f32(g.beta)]
+        + [f32(*s["shape"]) for s in aug_shapes] * 2
+        + [f32(bt, g.d_len), i32(bt), f32()],
+        meta={"kind": "train_step_aug", "batch": bt, "n_params": na},
+    )
+
+    # ---- manifest ----------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "geometries": {
+            geo.name: {
+                "alpha": geo.alpha, "m": geo.m, "n": geo.n, "p": geo.p,
+                "beta": geo.beta, "d_len": geo.d_len, "f_len": geo.f_len,
+                "kappa_mc": geo.kappa_mc,
+            } for geo in (G.SMALL, G.CIFAR)
+        },
+        "train_batch": G.TRAIN_BATCH,
+        "infer_batches": list(G.INFER_BATCHES),
+        "eq_batch": G.EQ_BATCH,
+        "num_classes": G.NUM_CLASSES,
+        "momentum": M.MOMENTUM,
+        "base_params": base_shapes,
+        "aug_params": aug_shapes,
+        "artifacts": em.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest.json ({len(em.entries)} artifacts)")
+    return em
+
+
+# ---------------------------------------------------------------------------
+# Cross-language test vectors
+# ---------------------------------------------------------------------------
+
+def emit_testvec(out_dir: str):
+    """Exact d2r/morph/Aug-Conv vectors both languages must reproduce.
+
+    All inputs are dyadic rationals (k/256) so f32 arithmetic is exact for
+    the assignments and small dot products involved; the conv outputs and
+    checksums are computed with the numpy oracle."""
+    g = G.SMALL
+    rng = np.random.default_rng(20190506)  # the paper's date
+
+    def dyadic(shape, lo=-64, hi=64):
+        return (rng.integers(lo, hi, size=shape).astype(np.float32)) / 256.0
+
+    x = dyadic((2, g.alpha, g.m, g.m))
+    w1 = dyadic((g.beta, g.alpha, g.p, g.p))
+    b1 = dyadic((g.beta,))
+    conv = ref.conv2d_same_ref(x, w1, b1)
+    c_mat = ref.build_c_matrix(w1, g.m)
+    d_r = ref.d2r_unroll(x)
+    f_r = d_r @ c_mat + np.tile(b1[:, None], (1, g.n * g.n)).reshape(-1)
+
+    # morph core at q=48 (kappa=16), exactly-invertible integer-ish core is
+    # not required here: we store M' and record T^r computed by the oracle.
+    q = 48
+    m_prime = dyadic((q, q))
+    # keep it well-conditioned: add 2*I
+    m_prime += 2.0 * np.eye(q, dtype=np.float32)
+    t_r = np.asarray(ref.morph_ref(jnp.asarray(d_r), jnp.asarray(m_prime)))
+
+    perm = rng.permutation(g.beta)
+    c_sha = hashlib.sha256(np.ascontiguousarray(c_mat).tobytes()).hexdigest()
+
+    vec = {
+        "geometry": g.name,
+        "x": x.tolist(), "w1": w1.tolist(), "b1": b1.tolist(),
+        "conv_out": conv.tolist(),
+        "c_matrix_sha256": c_sha,
+        "c_matrix_shape": list(c_mat.shape),
+        "d_r": d_r.tolist(),
+        "f_r_first64": f_r[0, :64].tolist(),
+        "q": q,
+        "m_prime": m_prime.tolist(),
+        "t_r": t_r.tolist(),
+        "perm": perm.tolist(),
+    }
+    with open(os.path.join(out_dir, "testvec.json"), "w") as f:
+        json.dump(vec, f)
+    print("  wrote testvec.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-testvec", action="store_true")
+    args = ap.parse_args()
+    print(f"AOT lowering to {args.out_dir} (jax {jax.__version__})")
+    emit_all(args.out_dir)
+    if not args.skip_testvec:
+        emit_testvec(args.out_dir)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Shared geometry for the MoLe reproduction.
+
+The paper's first-conv-layer attributes (§3): input m x m with alpha
+channels, output n x n with beta channels, kernel p x p, SAME zero padding
+(eq. 1 uses input row = c + a - 1, i.e. offset -1 for p = 3), so n = m.
+
+Two configurations are used throughout the repo:
+
+* ``SMALL``  — the trainable end-to-end configuration (16x16x3 inputs,
+  VGG-small).  All train/infer artifacts are lowered at this geometry so a
+  single CPU core can run the paper's §4.4 three-group experiment in
+  minutes.
+* ``CIFAR``  — the paper's analysis geometry (32x32x3, VGG-16 first layer
+  beta = 64).  Used for the overhead/security numbers and the morph-kernel
+  benchmark artifacts; identical formulas, bigger shapes.
+
+Rust reads the same numbers from ``artifacts/manifest.json`` so the two
+languages can never drift.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FirstLayerGeometry:
+    """Geometry of the replaceable first convolutional layer."""
+
+    name: str
+    alpha: int  # input channels
+    m: int      # input spatial size (m x m)
+    beta: int   # output channels of the first layer
+    p: int      # kernel size (p x p), SAME padding
+
+    @property
+    def n(self) -> int:
+        """Output spatial size; SAME padding => n == m."""
+        return self.m
+
+    @property
+    def d_len(self) -> int:
+        """Length of the d2r-unrolled data row vector D^r (= alpha * m^2)."""
+        return self.alpha * self.m * self.m
+
+    @property
+    def f_len(self) -> int:
+        """Length of the unrolled feature row vector F^r (= beta * n^2)."""
+        return self.beta * self.n * self.n
+
+    @property
+    def kappa_mc(self) -> int:
+        """Largest morphing scale factor for the minimal-cost setting
+        (eq. 13): kappa_mc = alpha * m^2 / n^2."""
+        return (self.alpha * self.m * self.m) // (self.n * self.n)
+
+    def q_for_kappa(self, kappa: int) -> int:
+        """Morphing core size q = alpha*m^2 / kappa (eq. 3); kappa must
+        divide alpha*m^2 exactly."""
+        if self.d_len % kappa != 0:
+            raise ValueError(f"kappa={kappa} does not divide alpha*m^2={self.d_len}")
+        return self.d_len // kappa
+
+
+SMALL = FirstLayerGeometry(name="small", alpha=3, m=16, beta=16, p=3)
+CIFAR = FirstLayerGeometry(name="cifar", alpha=3, m=32, beta=64, p=3)
+
+# Batch sizes baked into the AOT artifacts (PJRT executables are
+# shape-specialised; the rust batcher pads to the nearest available size).
+TRAIN_BATCH = 64
+INFER_BATCHES = (1, 8, 32)
+EQ_BATCH = 8
+
+# Morph core sizes (q) for which morph_apply artifacts are emitted, per
+# geometry.  kappa = d_len / q.
+MORPH_QS_SMALL = (48, 256, 768)     # kappa = 16, 3 (=kappa_mc), 1 (=MS)
+MORPH_QS_CIFAR = (96, 1024, 3072)   # kappa = 32, 3 (=kappa_mc), 1 (=MS)
+
+# VGG-small stack on top of the first layer (SMALL geometry):
+#   conv1: alpha -> beta (replaceable)         16x16x16
+#   conv2: beta  -> 16, 3x3 SAME, relu, pool   -> 8x8x16
+#   conv3: 16    -> 32, 3x3 SAME, relu, pool   -> 4x4x32
+#   fc1:   512   -> 64, relu
+#   fc2:   64    -> num_classes
+VGG_SMALL_C2 = 16
+VGG_SMALL_C3 = 32
+VGG_SMALL_FC1 = 64
+NUM_CLASSES = 10

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: the Aug-Conv forward GEMM F^r = T^r . C^ac (§3.3).
+
+After d2r the first convolutional layer *is* a single fat matmul
+[B, alpha*m^2] x [alpha*m^2, beta*n^2].  This kernel tiles it (bm, bk, bn)
+for VMEM with an f32 accumulator revisited across the k-grid — the
+HBM<->VMEM schedule a CUDA implementation would express with threadblocks
+is expressed here with BlockSpec index maps (DESIGN.md §4).
+
+interpret=True for CPU-PJRT; on a real TPU the same BlockSpecs target the
+MXU with ~(bm*bk + bk*bn + bm*bn) * 4 bytes of VMEM per program.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid (nm, nn, nk); k is the innermost (fastest varying) axis so the
+    output tile stays resident while partial products accumulate."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= want (keeps the grid exact)."""
+    t = min(dim, want)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+# Per-program working-set budget in f32 elements, the perf-pass tuning
+# knob: each grid step costs a dynamic-slice round trip in the
+# interpret/CPU lowering, so fewer/bigger tiles win on this backend
+# (16 MiB working set -> grid of 1-2 programs; 3-6x over the original
+# 0.5 MiB/48-program schedule, see EXPERIMENTS.md §Perf L1). A real-TPU
+# deployment would set this to ~2M elements (8 MiB of bf16 tile pairs
+# inside 16 MiB VMEM with double buffering) — the BlockSpec schedule is
+# unchanged, only the budget constant.
+_VMEM_BUDGET_F32 = 4 * 1024 * 1024
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def tiled_matmul(x: jnp.ndarray, w: jnp.ndarray, bm: int = 0, bk: int = 0,
+                 bn: int = 0, interpret: bool = True) -> jnp.ndarray:
+    """[B, K] @ [K, N] -> [B, N] in f32 with explicit VMEM tiling.
+
+    Default tile policy (perf-pass result): take the whole batch and the
+    whole K dimension per program (bm = B ≤ 128, bk = K ≤ 1024) and derive
+    bn from the VMEM budget. For the Aug-Conv GEMM ([64, 768] × [768,
+    4096]) this yields grid = (1, 2, 1) instead of the original
+    (1, 16, 3) = 48 programs — a 13× wall-clock win at identical numerics
+    (EXPERIMENTS.md §Perf).
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    bm = bm or _pick_tile(b, 128)
+    bk = bk or _pick_tile(k, 1024)
+    if not bn:
+        budget = max(_VMEM_BUDGET_F32 - bm * bk, bk)
+        bn = _pick_tile(n, max(budget // (bk + bm), 1))
+    grid = (b // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def aug_conv_forward(t_r: jnp.ndarray, c_ac: jnp.ndarray, bias: jnp.ndarray,
+                     beta: int, n: int, interpret: bool = True) -> jnp.ndarray:
+    """Full Aug-Conv layer: F^r = T^r . C^ac, re-rolled to NCHW feature maps
+    [B, beta, n, n] with the (channel-shuffled) bias added.
+
+    ``bias`` must already be permuted with the same rand() order that was
+    applied to C^ac's column groups (the rust provider does this when it
+    builds the layer)."""
+    f_r = tiled_matmul(t_r, c_ac, interpret=interpret)
+    f = f_r.reshape(t_r.shape[0], beta, n, n)
+    return f + bias[None, :, None, None]

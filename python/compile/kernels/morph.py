@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: data morphing T^r = D^r . M (paper §3.2, eq. 2-4).
+
+M is block-diagonal (eq. 4): kappa copies of the q x q core M' on the
+diagonal.  The paper's "multiplication with zero element is omitted"
+optimization (eq. 16) is expressed here as a *schedule*, not sparse
+arithmetic: the grid iterates over the kappa diagonal blocks and each
+program multiplies one [B, q] slice of D^r by the single shared M' tile.
+
+TPU mapping (see DESIGN.md §4): block i of D^r and M' live in VMEM; the
+MXU sees dense q x q GEMMs; HBM traffic for M' is amortized across the
+grid because its index_map is constant.  Lowered with interpret=True for
+CPU-PJRT execution (Mosaic custom-calls cannot run on the CPU plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _morph_block_kernel(d_ref, m_ref, o_ref):
+    """One diagonal block: o[B, q] = d[B, q] @ m'[q, q]."""
+    o_ref[...] = jnp.dot(
+        d_ref[...], m_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def morph_apply(d_r: jnp.ndarray, m_prime: jnp.ndarray,
+                interpret: bool = True) -> jnp.ndarray:
+    """Morph a batch of unrolled data rows.
+
+    d_r: [B, kappa*q] f32, m_prime: [q, q] f32 -> [B, kappa*q] f32.
+    """
+    b, dl = d_r.shape
+    q = m_prime.shape[0]
+    if dl % q != 0:
+        raise ValueError(f"d2r length {dl} not divisible by core size {q}")
+    kappa = dl // q
+    return pl.pallas_call(
+        _morph_block_kernel,
+        grid=(kappa,),
+        in_specs=[
+            # i-th [B, q] slice of the unrolled rows.
+            pl.BlockSpec((b, q), lambda i: (0, i)),
+            # The *same* M' core for every block (eq. 4).
+            pl.BlockSpec((q, q), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, q), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, dl), jnp.float32),
+        interpret=interpret,
+    )(d_r, m_prime)
+
+
+def unmorph_apply(t_r: jnp.ndarray, m_prime_inv: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Inverse morphing D^r = T^r . M^{-1}; M^{-1} shares the block
+    structure of M with core M'^{-1}, so it is the same kernel."""
+    return morph_apply(t_r, m_prime_inv, interpret=interpret)

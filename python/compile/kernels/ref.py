@@ -1,0 +1,145 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels and the d2r algebra.
+
+Everything in this file is the *specification*: the Pallas kernels
+(morph.py, d2r_matmul.py), the L2 model graphs, and the rust-side
+implementations are all tested against these functions.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Data morphing (paper §3.2, eq. 2-4)
+# ---------------------------------------------------------------------------
+
+def morph_ref(d_r: jnp.ndarray, m_prime: jnp.ndarray) -> jnp.ndarray:
+    """T^r = D^r . M where M = diag(M', M', ..., M') (eq. 4).
+
+    d_r: [B, kappa*q] unrolled data rows; m_prime: [q, q] morphing core.
+    Exploits the block-diagonal structure: reshape to [B, kappa, q] and
+    multiply each block by the shared core.
+    """
+    b, dl = d_r.shape
+    q = m_prime.shape[0]
+    assert dl % q == 0, (dl, q)
+    kappa = dl // q
+    blocks = d_r.reshape(b, kappa, q)
+    out = jnp.einsum("bkq,qr->bkr", blocks, m_prime)
+    return out.reshape(b, dl)
+
+
+def unmorph_ref(t_r: jnp.ndarray, m_prime_inv: jnp.ndarray) -> jnp.ndarray:
+    """D^r = T^r . M^{-1}; M^{-1} is block-diagonal with core M'^{-1}."""
+    return morph_ref(t_r, m_prime_inv)
+
+
+# ---------------------------------------------------------------------------
+# d2r (paper §3.1, eq. 1)
+# ---------------------------------------------------------------------------
+
+def d2r_unroll(x: np.ndarray) -> np.ndarray:
+    """Unroll images [B, alpha, m, m] (NCHW) to row vectors [B, alpha*m^2].
+
+    Paper fig. 2: rows of each channel concatenated left-to-right, channels
+    concatenated by increasing index — exactly C-order flatten of NCHW.
+    """
+    b = x.shape[0]
+    return x.reshape(b, -1)
+
+
+def d2r_roll_features(f_r: np.ndarray, beta: int, n: int) -> np.ndarray:
+    """Re-roll feature rows [B, beta*n^2] to feature maps [B, beta, n, n]."""
+    b = f_r.shape[0]
+    return f_r.reshape(b, beta, n, n)
+
+
+def build_c_matrix(w: np.ndarray, m: int) -> np.ndarray:
+    """Build the d2r convolution matrix C (eq. 1) for SAME zero padding.
+
+    w: [beta, alpha, p, p] kernel (out-channel, in-channel, krow, kcol).
+    Returns C with shape [alpha*m^2, beta*n^2], n = m, such that
+    D^r @ C == unrolled conv output.
+
+    Eq. 1 (zero-based):   col x = n^2 j + n c + d
+                          row y = m^2 i + m (c + a - off) + (d + b - off)
+    with off = (p-1)//2 (the paper writes the p = 3 case, off = 1), and the
+    assignment skipped whenever the input coordinate falls outside [0, m).
+    """
+    beta, alpha, p, _ = w.shape
+    n = m
+    off = (p - 1) // 2
+    c_mat = np.zeros((alpha * m * m, beta * n * n), dtype=w.dtype)
+    for j in range(beta):
+        for i in range(alpha):
+            for c in range(n):
+                for d in range(n):
+                    x = n * n * j + n * c + d
+                    for a in range(p):
+                        rr = c + a - off
+                        if rr < 0 or rr >= m:
+                            continue
+                        for b_ in range(p):
+                            cc = d + b_ - off
+                            if cc < 0 or cc >= m:
+                                continue
+                            y = m * m * i + m * rr + cc
+                            c_mat[y, x] = w[j, i, a, b_]
+    return c_mat
+
+
+def conv2d_same_ref(x: np.ndarray, w: np.ndarray, b: np.ndarray | None = None) -> np.ndarray:
+    """Direct SAME-padded cross-correlation, NCHW.  The ground truth that
+    both the C matrix (above) and the jax lax.conv in model.py must match.
+
+    x: [B, alpha, m, m]; w: [beta, alpha, p, p]; b: [beta] or None.
+    """
+    bs, alpha, m, _ = x.shape
+    beta, _, p, _ = w.shape
+    off = (p - 1) // 2
+    xp = np.zeros((bs, alpha, m + 2 * off, m + 2 * off), dtype=x.dtype)
+    xp[:, :, off : off + m, off : off + m] = x
+    out = np.zeros((bs, beta, m, m), dtype=np.promote_types(x.dtype, w.dtype))
+    for a in range(p):
+        for c in range(p):
+            patch = xp[:, :, a : a + m, c : c + m]
+            out += np.einsum("bimn,ji->bjmn", patch, w[:, :, a, c])
+    if b is not None:
+        out = out + b[None, :, None, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Aug-Conv layer (paper §3.3)
+# ---------------------------------------------------------------------------
+
+def build_aug_conv_ref(c_mat: np.ndarray, m_prime_inv: np.ndarray,
+                       perm: np.ndarray, n: int) -> np.ndarray:
+    """C^ac = M^{-1} . C with feature channel randomization.
+
+    M^{-1} is block diagonal with core m_prime_inv, so M^{-1} . C is done
+    block-row-wise.  The rand() step shuffles the beta groups of n^2
+    contiguous *columns* according to ``perm`` (group g of the output takes
+    original group perm[g]).
+    """
+    dl = c_mat.shape[0]
+    q = m_prime_inv.shape[0]
+    kappa = dl // q
+    out = np.empty_like(c_mat)
+    for k in range(kappa):
+        out[k * q : (k + 1) * q, :] = m_prime_inv @ c_mat[k * q : (k + 1) * q, :]
+    beta = len(perm)
+    shuffled = np.empty_like(out)
+    for g in range(beta):
+        shuffled[:, g * n * n : (g + 1) * n * n] = \
+            out[:, perm[g] * n * n : (perm[g] + 1) * n * n]
+    return shuffled
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul oracle (for the d2r_matmul Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain [B, K] @ [K, N] in f32."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,173 @@
+"""L2: the developer's VGG-small network in JAX, with a replaceable first
+layer (paper §3.3), plus its training step.  Built-time only: everything
+here is lowered by aot.py to HLO text and executed from rust via PJRT.
+
+Three variants reproduce the paper's §4.4 experiment groups:
+
+* ``base``  — the original network (trainable conv1) on original images.
+* ``aug``   — conv1 replaced by the Aug-Conv layer (a *fixed* d2r matmul
+  with C^ac, paper eq. 5), trained on *morphed* rows T^r.  The Aug-Conv
+  features are wrapped in stop_gradient: the paper trains it "as a fixed
+  feature extractor similarly to pre-trained layers in transfer learning".
+* ``noaug`` — the sanity-check group: the original network fed morphed
+  data *without* the Aug-Conv layer.  Structurally identical to ``base``
+  (the rust driver simply feeds morphed images), so it reuses the base
+  artifacts.
+
+All tensors are NCHW / OIHW, matching the paper's d2r unroll order
+(channel-major, then rows, then columns — fig. 2).
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import geometry as G
+from .kernels.d2r_matmul import aug_conv_forward
+
+
+class BaseParams(NamedTuple):
+    """Trainable parameters of the full VGG-small network (10 arrays)."""
+
+    w1: jnp.ndarray  # [beta, alpha, p, p]
+    b1: jnp.ndarray  # [beta]
+    w2: jnp.ndarray  # [c2, beta, 3, 3]
+    b2: jnp.ndarray  # [c2]
+    w3: jnp.ndarray  # [c3, c2, 3, 3]
+    b3: jnp.ndarray  # [c3]
+    wf1: jnp.ndarray  # [c3*(m/4)^2, fc1]
+    bf1: jnp.ndarray  # [fc1]
+    wf2: jnp.ndarray  # [fc1, classes]
+    bf2: jnp.ndarray  # [classes]
+
+
+class AugParams(NamedTuple):
+    """Trainable parameters when conv1 is replaced by Aug-Conv (8 arrays).
+
+    C^ac and the (channel-permuted) first-layer bias are *fixed inputs*,
+    not parameters — see train_step_aug."""
+
+    w2: jnp.ndarray
+    b2: jnp.ndarray
+    w3: jnp.ndarray
+    b3: jnp.ndarray
+    wf1: jnp.ndarray
+    bf1: jnp.ndarray
+    wf2: jnp.ndarray
+    bf2: jnp.ndarray
+
+
+def base_param_shapes(g: G.FirstLayerGeometry, classes: int = G.NUM_CLASSES):
+    """Shape/initializer table, consumed by aot.py for the manifest and by
+    the rust side (via manifest.json) for He initialization."""
+    c2, c3, f1 = G.VGG_SMALL_C2, G.VGG_SMALL_C3, G.VGG_SMALL_FC1
+    flat = c3 * (g.m // 4) * (g.m // 4)
+    return [
+        ("w1", (g.beta, g.alpha, g.p, g.p), "he", g.alpha * g.p * g.p),
+        ("b1", (g.beta,), "zero", 0),
+        ("w2", (c2, g.beta, 3, 3), "he", g.beta * 9),
+        ("b2", (c2,), "zero", 0),
+        ("w3", (c3, c2, 3, 3), "he", c2 * 9),
+        ("b3", (c3,), "zero", 0),
+        ("wf1", (flat, f1), "he", flat),
+        ("bf1", (f1,), "zero", 0),
+        ("wf2", (f1, classes), "he", f1),
+        ("bf2", (classes,), "zero", 0),
+    ]
+
+
+def _conv(x, w, b):
+    """SAME-padded 3x3 cross-correlation, NCHW/OIHW."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b[None, :, None, None]
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def _trunk(f, p, *, start):
+    """Everything above the first layer.  ``f`` is the first-layer
+    pre-activation feature map [B, beta, m, m]; ``p`` supplies the
+    remaining weights starting at field index ``start``."""
+    h = jax.nn.relu(f)
+    h = jax.nn.relu(_conv(h, p[start], p[start + 1]))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv(h, p[start + 2], p[start + 3]))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p[start + 4] + p[start + 5])
+    return h @ p[start + 6] + p[start + 7]
+
+
+def forward_base(params: BaseParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Original network on images [B, alpha, m, m] -> logits."""
+    f = _conv(x, params.w1, params.b1)
+    return _trunk(f, params, start=2)
+
+
+def forward_aug(c_ac: jnp.ndarray, b1p: jnp.ndarray, params: AugParams,
+                t_r: jnp.ndarray, g: G.FirstLayerGeometry,
+                interpret: bool = True) -> jnp.ndarray:
+    """Aug-Conv network on morphed rows [B, alpha*m^2] -> logits.
+
+    The first layer is the L1 Pallas GEMM (fixed feature extractor)."""
+    f = aug_conv_forward(t_r, c_ac, b1p, g.beta, g.n, interpret=interpret)
+    f = lax.stop_gradient(f)
+    return _trunk(f, params, start=0)
+
+
+def loss_and_acc(logits: jnp.ndarray, y: jnp.ndarray):
+    """Mean softmax cross-entropy (integer labels) and top-1 accuracy."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return nll, acc
+
+
+MOMENTUM = 0.9
+
+
+def _sgd(params, grads, momenta, lr):
+    new_m = jax.tree_util.tree_map(lambda v, dg: MOMENTUM * v + dg, momenta, grads)
+    new_p = jax.tree_util.tree_map(lambda w, v: w - lr * v, params, new_m)
+    return new_p, new_m
+
+
+def train_step_base(params: BaseParams, momenta: BaseParams, x, y, lr):
+    """One SGD+momentum step on the full network.  Returns
+    (new_params..., new_momenta..., loss, acc) — flattened by aot.py."""
+
+    def obj(p):
+        logits = forward_base(p, x)
+        return loss_and_acc(logits, y)
+
+    (loss, acc), grads = jax.value_and_grad(obj, has_aux=True)(params)
+    new_p, new_m = _sgd(params, grads, momenta, lr)
+    return new_p, new_m, loss, acc
+
+
+def train_step_aug(c_ac, b1p, params: AugParams, momenta: AugParams, t_r, y,
+                   lr, g: G.FirstLayerGeometry):
+    """One SGD+momentum step with the fixed Aug-Conv first layer."""
+
+    def obj(p):
+        logits = forward_aug(c_ac, b1p, p, t_r, g)
+        return loss_and_acc(logits, y)
+
+    (loss, acc), grads = jax.value_and_grad(obj, has_aux=True)(params)
+    new_p, new_m = _sgd(params, grads, momenta, lr)
+    return new_p, new_m, loss, acc
+
+
+def eval_base(params: BaseParams, x, y):
+    return loss_and_acc(forward_base(params, x), y)
+
+
+def eval_aug(c_ac, b1p, params: AugParams, t_r, y, g: G.FirstLayerGeometry):
+    return loss_and_acc(forward_aug(c_ac, b1p, params, t_r, g), y)

@@ -1,0 +1,91 @@
+"""AOT pipeline tests: the emitted artifacts + manifest must be mutually
+consistent and loadable. Runs against the artifacts/ directory produced by
+`make artifacts` (skips cleanly if it has not been built yet)."""
+
+import json
+import os
+
+import pytest
+
+from compile import geometry as G
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_geometries(manifest):
+    s = manifest["geometries"]["small"]
+    assert s["alpha"] == G.SMALL.alpha
+    assert s["d_len"] == G.SMALL.d_len == 768
+    assert s["kappa_mc"] == G.SMALL.kappa_mc == 3
+    c = manifest["geometries"]["cifar"]
+    assert c["d_len"] == 3072 and c["f_len"] == 65536
+
+
+def test_all_artifact_files_exist(manifest):
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(ART, entry["path"])
+        assert os.path.exists(path), f"{name}: missing {entry['path']}"
+        with open(path) as f:
+            head = f.read(512)
+        # HLO text modules start with the module header
+        assert "HloModule" in head, f"{name}: not HLO text"
+
+
+def test_train_step_signature(manifest):
+    e = manifest["artifacts"][f"train_step_aug_small_b{G.TRAIN_BATCH}"]
+    # cac, b1p, 8 params, 8 momenta, t_r, y, lr
+    assert len(e["inputs"]) == 2 + 8 + 8 + 3
+    assert e["inputs"][0]["shape"] == [G.SMALL.d_len, G.SMALL.f_len]
+    assert e["inputs"][-1]["shape"] == []  # lr scalar
+    assert e["inputs"][-2]["dtype"] == "int32"  # labels
+    # outputs: 8 params + 8 momenta + loss + acc
+    assert len(e["outputs"]) == 18
+
+
+def test_param_tables(manifest):
+    base = manifest["base_params"]
+    aug = manifest["aug_params"]
+    assert [p["name"] for p in base][:2] == ["w1", "b1"]
+    assert [p["name"] for p in aug] == [p["name"] for p in base[2:]]
+    # he layers carry their fan-in
+    for p in base:
+        if p["init"] == "he":
+            assert p["fan_in"] > 0
+
+
+def test_morph_artifacts_cover_all_qs(manifest):
+    for q in G.MORPH_QS_SMALL:
+        assert f"morph_apply_small_q{q}_b{G.TRAIN_BATCH}" in manifest["artifacts"]
+    for q in G.MORPH_QS_CIFAR:
+        assert f"morph_apply_cifar_q{q}_b8" in manifest["artifacts"]
+
+
+def test_testvec_consistency():
+    with open(os.path.join(ART, "testvec.json")) as f:
+        vec = json.load(f)
+    import numpy as np
+
+    from compile.kernels import ref
+
+    x = np.asarray(vec["x"], np.float32)
+    w1 = np.asarray(vec["w1"], np.float32)
+    b1 = np.asarray(vec["b1"], np.float32)
+    conv = ref.conv2d_same_ref(x, w1, b1)
+    np.testing.assert_allclose(conv, np.asarray(vec["conv_out"], np.float32),
+                               rtol=1e-5, atol=1e-5)
+    import hashlib
+
+    c = ref.build_c_matrix(w1, x.shape[-1])
+    sha = hashlib.sha256(np.ascontiguousarray(c).tobytes()).hexdigest()
+    assert sha == vec["c_matrix_sha256"]

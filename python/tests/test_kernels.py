@@ -1,0 +1,188 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp/numpy oracles.
+
+hypothesis sweeps shapes; every property here is an invariant the rust
+side also relies on (same algebra, same layouts).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.morph import morph_apply, unmorph_apply
+from compile.kernels.d2r_matmul import tiled_matmul, aug_conv_forward
+from compile import geometry as G
+
+
+def rnd(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# morph kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    q=st.sampled_from([2, 4, 8, 16, 48]),
+    kappa=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_morph_kernel_matches_ref(b, q, kappa, seed):
+    rng = np.random.default_rng(seed)
+    d = rnd(rng, b, kappa * q)
+    mp = rnd(rng, q, q)
+    got = np.asarray(morph_apply(jnp.asarray(d), jnp.asarray(mp)))
+    want = np.asarray(ref.morph_ref(jnp.asarray(d), jnp.asarray(mp)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_morph_kernel_is_blockwise():
+    """Changing block k of D^r must only change block k of T^r."""
+    rng = np.random.default_rng(0)
+    q, kappa, b = 8, 4, 3
+    mp = rnd(rng, q, q)
+    d0 = rnd(rng, b, kappa * q)
+    d1 = d0.copy()
+    d1[:, q : 2 * q] += 1.0
+    t0 = np.asarray(morph_apply(jnp.asarray(d0), jnp.asarray(mp)))
+    t1 = np.asarray(morph_apply(jnp.asarray(d1), jnp.asarray(mp)))
+    diff = np.abs(t1 - t0)
+    assert diff[:, q : 2 * q].max() > 0
+    mask = np.ones(kappa * q, bool)
+    mask[q : 2 * q] = False
+    np.testing.assert_allclose(diff[:, mask], 0.0, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_morph_roundtrip(seed):
+    """unmorph(morph(D)) == D for a well-conditioned core."""
+    rng = np.random.default_rng(seed)
+    q, kappa, b = 16, 3, 4
+    mp = rnd(rng, q, q) + 4.0 * np.eye(q, dtype=np.float32)
+    mpi = np.linalg.inv(mp.astype(np.float64)).astype(np.float32)
+    d = rnd(rng, b, kappa * q)
+    t = morph_apply(jnp.asarray(d), jnp.asarray(mp))
+    back = np.asarray(unmorph_apply(t, jnp.asarray(mpi)))
+    np.testing.assert_allclose(back, d, rtol=1e-3, atol=1e-3)
+
+
+def test_morph_full_vs_blockdiag():
+    """Block-diag kernel == dense D^r @ M with M per eq. 4."""
+    rng = np.random.default_rng(7)
+    q, kappa, b = 6, 5, 2
+    mp = rnd(rng, q, q)
+    d = rnd(rng, b, kappa * q)
+    m_full = np.zeros((kappa * q, kappa * q), np.float32)
+    for k in range(kappa):
+        m_full[k * q : (k + 1) * q, k * q : (k + 1) * q] = mp
+    want = d @ m_full
+    got = np.asarray(morph_apply(jnp.asarray(d), jnp.asarray(mp)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    k=st.sampled_from([16, 48, 96]),
+    n=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tiled_matmul_matches_ref(b, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rnd(rng, b, k), rnd(rng, k, n)
+    got = np.asarray(tiled_matmul(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(2, 8, 16), (4, 16, 8), (8, 48, 64)])
+def test_tiled_matmul_tile_shapes(bm, bk, bn):
+    """Result is tile-shape independent."""
+    rng = np.random.default_rng(3)
+    x, w = rnd(rng, 8, 48), rnd(rng, 48, 64)
+    got = np.asarray(tiled_matmul(jnp.asarray(x), jnp.asarray(w),
+                                  bm=bm, bk=bk, bn=bn))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# d2r algebra (the oracle itself, against direct convolution)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([4, 6, 8]),
+    alpha=st.integers(1, 3),
+    beta=st.integers(1, 4),
+    p=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_c_matrix_equals_direct_conv(m, alpha, beta, p, seed):
+    """D^r @ C == unroll(conv(D))  (paper eq. 1 / fig. 3)."""
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, 2, alpha, m, m)
+    w = rnd(rng, beta, alpha, p, p)
+    want = ref.conv2d_same_ref(x, w).reshape(2, -1)
+    c = ref.build_c_matrix(w, m)
+    got = ref.d2r_unroll(x) @ c
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_c_matrix_sparsity():
+    """Each column of C has at most p^2*alpha non-zeros (kernel support)."""
+    rng = np.random.default_rng(1)
+    w = rnd(rng, 2, 3, 3, 3)
+    c = ref.build_c_matrix(w, 6)
+    nz = (c != 0).sum(axis=0)
+    assert nz.max() <= 3 * 9
+    # interior output pixels see the full support
+    assert nz.max() == 3 * 9
+
+
+# ---------------------------------------------------------------------------
+# Aug-Conv layer algebra
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_aug_conv_equivalence(seed):
+    """Paper eq. 5: T^r . C^ac == shuffle(D^r . C) — equivalent features up
+    to the channel permutation."""
+    rng = np.random.default_rng(seed)
+    m, alpha, beta, p = 6, 2, 4, 3
+    q, kappa = 24, (alpha * m * m) // 24
+    x = rnd(rng, 2, alpha, m, m)
+    w = rnd(rng, beta, alpha, p, p)
+    mp = rnd(rng, q, q) + 4.0 * np.eye(q, dtype=np.float32)
+    mpi = np.linalg.inv(mp.astype(np.float64)).astype(np.float32)
+    perm = np.random.default_rng(seed + 1).permutation(beta)
+
+    c = ref.build_c_matrix(w, m)
+    cac = ref.build_aug_conv_ref(c, mpi, perm, m)
+    d_r = ref.d2r_unroll(x)
+    t_r = np.asarray(ref.morph_ref(jnp.asarray(d_r), jnp.asarray(mp)))
+
+    f_plain = (d_r @ c).reshape(2, beta, m, m)
+    f_aug = (t_r @ cac).reshape(2, beta, m, m)
+    np.testing.assert_allclose(f_aug, f_plain[:, perm], rtol=1e-2, atol=1e-2)
+
+
+def test_aug_conv_forward_kernel_bias():
+    """The Pallas aug_conv_forward adds the permuted bias per channel."""
+    g = G.SMALL
+    rng = np.random.default_rng(5)
+    t = rnd(rng, 2, g.d_len)
+    cac = rnd(rng, g.d_len, g.f_len) * 0.01
+    bias = rnd(rng, g.beta)
+    got = np.asarray(aug_conv_forward(
+        jnp.asarray(t), jnp.asarray(cac), jnp.asarray(bias), g.beta, g.n))
+    want = (t @ cac).reshape(2, g.beta, g.n, g.n) + bias[None, :, None, None]
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,121 @@
+"""L2 model correctness: shapes, the three-group equivalence (paper §4.4 at
+toy scale), and train-step sanity (loss decreases, Aug-Conv layer stays
+fixed)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import geometry as G
+from compile import model as M
+from compile.kernels import ref
+
+g = G.SMALL
+
+
+def init_params(rng) -> M.BaseParams:
+    vals = []
+    for name, shape, kind, fan in M.base_param_shapes(g):
+        if kind == "zero":
+            vals.append(np.zeros(shape, np.float32))
+        else:
+            std = np.sqrt(2.0 / fan)
+            vals.append((rng.standard_normal(shape) * std).astype(np.float32))
+    return M.BaseParams(*[jnp.asarray(v) for v in vals])
+
+
+def make_augconv(rng, w1, b1, q=48):
+    mp = (rng.standard_normal((q, q)).astype(np.float32)
+          + 4.0 * np.eye(q, dtype=np.float32))
+    mpi = np.linalg.inv(mp.astype(np.float64)).astype(np.float32)
+    perm = rng.permutation(g.beta)
+    c = ref.build_c_matrix(np.asarray(w1), g.m)
+    cac = ref.build_aug_conv_ref(c, mpi, perm, g.n)
+    b1p = np.asarray(b1)[perm]
+    return mp, cac, b1p, perm
+
+
+def test_forward_base_shape():
+    rng = np.random.default_rng(0)
+    p = init_params(rng)
+    x = jnp.asarray(rng.standard_normal((4, g.alpha, g.m, g.m)), jnp.float32)
+    logits = M.forward_base(p, x)
+    assert logits.shape == (4, G.NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_aug_equals_base_up_to_permutation():
+    """With C^ac built from the base w1, forward_aug(morph(x)) must equal a
+    base network whose conv1 channels were permuted — and since the trunk
+    weights are channel-symmetric only when permuted consistently, we
+    check at the *feature* level instead, then at the logit level using a
+    trunk that consumes permuted channels."""
+    rng = np.random.default_rng(1)
+    p = init_params(rng)
+    mp, cac, b1p, perm = make_augconv(rng, p.w1, p.b1)
+    x = rng.standard_normal((4, g.alpha, g.m, g.m)).astype(np.float32)
+    d_r = x.reshape(4, -1)
+    t_r = np.asarray(ref.morph_ref(jnp.asarray(d_r), jnp.asarray(mp)))
+
+    f_aug = np.asarray(ref.matmul_ref(
+        jnp.asarray(t_r), jnp.asarray(cac))).reshape(4, g.beta, g.n, g.n) \
+        + b1p[None, :, None, None]
+    f_base = ref.conv2d_same_ref(x, np.asarray(p.w1), np.asarray(p.b1))
+    np.testing.assert_allclose(f_aug, f_base[:, perm], rtol=5e-3, atol=5e-3)
+
+    # Logit-level: permute conv2's input channels to match.
+    aug_p = M.AugParams(p.w2[:, perm], p.b2, p.w3, p.b3, p.wf1, p.bf1,
+                        p.wf2, p.bf2)
+    logits_aug = M.forward_aug(jnp.asarray(cac), jnp.asarray(b1p), aug_p,
+                               jnp.asarray(t_r), g)
+    logits_base = M.forward_base(p, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(logits_aug),
+                               np.asarray(logits_base), rtol=2e-2, atol=2e-2)
+
+
+def test_train_step_base_decreases_loss():
+    rng = np.random.default_rng(2)
+    p = init_params(rng)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    x = jnp.asarray(rng.standard_normal((G.TRAIN_BATCH, g.alpha, g.m, g.m)),
+                    jnp.float32)
+    y = jnp.asarray(rng.integers(0, G.NUM_CLASSES, G.TRAIN_BATCH), jnp.int32)
+    losses = []
+    for _ in range(12):
+        p, v, loss, acc = M.train_step_base(p, v, x, y, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_train_step_aug_decreases_loss_and_keeps_cac_fixed():
+    rng = np.random.default_rng(3)
+    p = init_params(rng)
+    mp, cac, b1p, _ = make_augconv(rng, p.w1, p.b1)
+    aug_p = M.AugParams(p.w2, p.b2, p.w3, p.b3, p.wf1, p.bf1, p.wf2, p.bf2)
+    v = jax.tree_util.tree_map(jnp.zeros_like, aug_p)
+    d = rng.standard_normal((G.TRAIN_BATCH, g.d_len)).astype(np.float32)
+    t = ref.morph_ref(jnp.asarray(d), jnp.asarray(mp))
+    y = jnp.asarray(rng.integers(0, G.NUM_CLASSES, G.TRAIN_BATCH), jnp.int32)
+    cac_j = jnp.asarray(cac)
+    losses = []
+    for _ in range(12):
+        aug_p, v, loss, acc = M.train_step_aug(
+            cac_j, jnp.asarray(b1p), aug_p, v, t, y, jnp.float32(0.05), g)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+    # C^ac is an input, not a parameter: by construction it cannot change;
+    # check the step is numerically finite end-to-end instead.
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_eval_matches_forward():
+    rng = np.random.default_rng(4)
+    p = init_params(rng)
+    x = jnp.asarray(rng.standard_normal((G.TRAIN_BATCH, g.alpha, g.m, g.m)),
+                    jnp.float32)
+    y = jnp.asarray(rng.integers(0, G.NUM_CLASSES, G.TRAIN_BATCH), jnp.int32)
+    loss, acc = M.eval_base(p, x, y)
+    logits = M.forward_base(p, x)
+    want_acc = float((jnp.argmax(logits, -1) == y).mean())
+    assert abs(float(acc) - want_acc) < 1e-6
+    assert 0.0 <= float(acc) <= 1.0

@@ -1,0 +1,86 @@
+//! Fig. 4(b): morphing scale factor κ vs privacy effectiveness (SSIM).
+//!
+//! Sweeps κ on photo-like images and prints the SSIM(original, morphed)
+//! series — the paper's trade-off curve: larger cores (smaller κ) scramble
+//! more, SSIM falls toward the unrelated-image floor; tiny cores leave
+//! local structure and SSIM stays high. Also reports the provider-side
+//! morph cost at each κ (the other axis of the trade-off, eq. 16).
+//!
+//! Run: `cargo bench --bench bench_fig4b`
+
+use mole::bench::{bench_auto, fmt_dur, table_header, table_row};
+use mole::data::images::{normalize_for_display, photo_like};
+use mole::morph::MorphKey;
+use mole::ssim::ssim_image;
+use mole::tensor::Tensor;
+use mole::{d2r, Geometry};
+use std::time::Duration;
+
+fn main() {
+    mole::logging::init();
+    let g = Geometry::SMALL;
+    println!("=== Fig. 4(b): kappa vs SSIM (photo-like images, {}x{}x{}) ===\n",
+        g.alpha, g.m, g.m);
+
+    // two "photos", as in the paper's figure
+    let photos = [photo_like(3, g.m, 101), photo_like(3, g.m, 202)];
+
+    let widths = [8, 6, 12, 12, 14, 12];
+    table_header(
+        &["kappa", "q", "ssim(img1)", "ssim(img2)", "macs/img", "morph(b=8)"],
+        &widths,
+    );
+    // kappa must divide alpha*m^2 = 768
+    for &kappa in &[768usize, 192, 48, 16, 4, 1] {
+        let key = MorphKey::generate(g, kappa, 7).unwrap();
+        let mut ssims = Vec::new();
+        for img in &photos {
+            let rows = d2r::unroll(img.clone().reshape(&[1, 3, g.m, g.m]).unwrap()).unwrap();
+            let morphed = key.morph(&rows).unwrap();
+            let morphed_img = normalize_for_display(
+                &d2r::roll(morphed, 3, g.m).unwrap().reshape(&[3, g.m, g.m]).unwrap(),
+            );
+            ssims.push(ssim_image(img, &morphed_img, 1.0).unwrap());
+        }
+        let batch = {
+            let mut data = Vec::new();
+            for img in photos.iter().cycle().take(8) {
+                data.extend_from_slice(img.data());
+            }
+            Tensor::new(&[8, g.d_len()], data).unwrap()
+        };
+        let r = bench_auto("morph", Duration::from_millis(300), || {
+            key.morph(&batch).unwrap()
+        });
+        table_row(
+            &[
+                kappa.to_string(),
+                key.q().to_string(),
+                format!("{:.4}", ssims[0]),
+                format!("{:.4}", ssims[1]),
+                format!("{}", key.macs_per_row()),
+                fmt_dur(r.mean),
+            ],
+            &widths,
+        );
+    }
+
+    println!("\npaper shape: SSIM falls monotonically as kappa decreases (bigger core =");
+    println!("stronger mixing = better privacy), while provider MACs grow as alpha*m^2*q.");
+
+    // one paper-scale data point: CIFAR geometry at kappa_mc
+    let cg = Geometry::CIFAR_VGG16;
+    let key = MorphKey::generate(cg, 96, 7).unwrap(); // q=32 (fast demo point)
+    let img = photo_like(3, cg.m, 303);
+    let rows = d2r::unroll(img.clone().reshape(&[1, 3, cg.m, cg.m]).unwrap()).unwrap();
+    let morphed_img = normalize_for_display(
+        &d2r::roll(key.morph(&rows).unwrap(), 3, cg.m)
+            .unwrap()
+            .reshape(&[3, cg.m, cg.m])
+            .unwrap(),
+    );
+    println!(
+        "\nCIFAR-geometry point (32x32, kappa=96, q=32): ssim = {:.4}",
+        ssim_image(&img, &morphed_img, 1.0).unwrap()
+    );
+}

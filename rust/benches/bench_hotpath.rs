@@ -1,0 +1,112 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! GEMM kernel, block-diagonal morph, C^ac construction, d2r build, and
+//! the XLA train/infer step. Used to find and verify optimizations.
+//!
+//! Run: `cargo bench --bench bench_hotpath`
+
+use mole::augconv::{build_aug_conv, ChannelPerm};
+use mole::bench::{bench, bench_auto, fmt_dur};
+use mole::coordinator::trainer::{init_params, Trainer, Variant};
+use mole::manifest::Manifest;
+use mole::morph::MorphKey;
+use mole::rng::Rng;
+use mole::runtime::Engine;
+use mole::tensor::Tensor;
+use mole::Geometry;
+use std::path::Path;
+use std::time::Duration;
+
+fn gflops(macs: f64, secs: f64) -> f64 {
+    2.0 * macs / secs / 1e9
+}
+
+fn main() {
+    mole::logging::init();
+    let mut rng = Rng::new(1);
+
+    println!("=== GEMM kernel (rust, single core) ===");
+    for &(m, k, n) in &[(64usize, 768usize, 768usize), (256, 256, 4096), (768, 768, 4096)] {
+        let a = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0)).unwrap();
+        let b = Tensor::new(&[k, n], rng.normal_vec(k * n, 1.0)).unwrap();
+        let r = bench_auto("gemm", Duration::from_millis(800), || {
+            mole::linalg::gemm(&a, &b).unwrap()
+        });
+        println!(
+            "  [{m:>4}x{k:>4}]x[{k:>4}x{n:>5}]  {}  {:.2} GFLOP/s",
+            fmt_dur(r.mean),
+            gflops((m * k * n) as f64, r.mean.as_secs_f64())
+        );
+    }
+
+    let g = Geometry::SMALL;
+    println!("\n=== provider morph (batch 64) ===");
+    let rows = Tensor::new(&[64, g.d_len()], rng.normal_vec(64 * g.d_len(), 1.0)).unwrap();
+    for &kappa in &[16usize, 3, 1] {
+        let key = MorphKey::generate(g, kappa, 2).unwrap();
+        let r = bench("morph", 3, 30, || key.morph(&rows).unwrap());
+        let macs = 64.0 * key.macs_per_row() as f64;
+        println!(
+            "  kappa={kappa:<3} q={:<4} {}  {:.2} GFLOP/s  ({:.0} img/s)",
+            key.q(),
+            fmt_dur(r.mean),
+            gflops(macs, r.mean.as_secs_f64()),
+            r.throughput(64.0)
+        );
+    }
+
+    println!("\n=== C^ac construction (block GEMM + shuffle) ===");
+    let w1 = Tensor::new(
+        &[g.beta, g.alpha, g.p, g.p],
+        rng.normal_vec(g.beta * g.alpha * g.p * g.p, 0.3),
+    )
+    .unwrap();
+    let b1 = vec![0.0f32; g.beta];
+    for &kappa in &[16usize, 1] {
+        let key = MorphKey::generate(g, kappa, 3).unwrap();
+        let perm = ChannelPerm::generate(g.beta, 3);
+        let r = bench("cac", 1, 8, || build_aug_conv(&w1, &b1, &key, &perm).unwrap());
+        let macs = (g.d_len() * key.q() * g.f_len() / key.kappa() * key.kappa()) as f64;
+        println!(
+            "  kappa={kappa:<3} {}  ({:.2} GFLOP/s over {:.2} GMACs)",
+            fmt_dur(r.mean),
+            gflops(macs, r.mean.as_secs_f64()),
+            macs / 1e9
+        );
+    }
+
+    println!("\n=== d2r C-matrix build ===");
+    let r = bench("d2r", 1, 10, || mole::d2r::build_c_matrix(&w1, &g).unwrap());
+    println!("  build_c_matrix(small)  {}", fmt_dur(r.mean));
+
+    println!("\n=== XLA artifacts (PJRT CPU) ===");
+    let engine = Engine::new(Manifest::load(Path::new("artifacts")).unwrap()).unwrap();
+    let mut trainer = Trainer::new_base(&engine, Variant::Base, 1).unwrap();
+    let x = Tensor::new(&[64, 3, 16, 16], rng.normal_vec(64 * 768, 0.5)).unwrap();
+    let y: Vec<i32> = (0..64).map(|i| (i % 10) as i32).collect();
+    trainer.step(&x, &y, 0.01).unwrap(); // compile
+    let r = bench("train_base", 1, 10, || trainer.step(&x, &y, 0.01).unwrap());
+    println!("  train_step_base(b64)   {}  ({:.0} img/s)", fmt_dur(r.mean), r.throughput(64.0));
+
+    let key = MorphKey::generate(g, 16, 4).unwrap();
+    let perm = ChannelPerm::generate(g.beta, 4);
+    let layer = build_aug_conv(&w1, &b1, &key, &perm).unwrap();
+    let mut at =
+        Trainer::new_aug(&engine, layer.matrix().clone(), layer.bias().to_vec(), 1).unwrap();
+    let t_rows = key.morph(&rows).unwrap();
+    at.step(&t_rows, &y, 0.01).unwrap();
+    let r = bench("train_aug", 1, 10, || at.step(&t_rows, &y, 0.01).unwrap());
+    println!("  train_step_aug(b64)    {}  ({:.0} img/s)", fmt_dur(r.mean), r.throughput(64.0));
+
+    let mut args: Vec<mole::runtime::Arg> = vec![
+        mole::runtime::Arg::T(layer.matrix().clone()),
+        mole::runtime::Arg::T(Tensor::new(&[g.beta], layer.bias().to_vec()).unwrap()),
+    ];
+    for p in init_params(&engine.manifest().aug_params, &mut rng) {
+        args.push(mole::runtime::Arg::T(p));
+    }
+    args.push(mole::runtime::Arg::T(Tensor::new(&[32, g.d_len()],
+        rng.normal_vec(32 * g.d_len(), 0.5)).unwrap()));
+    engine.exec("infer_aug_small_b32", &args).unwrap();
+    let r = bench("infer", 2, 20, || engine.exec("infer_aug_small_b32", &args).unwrap());
+    println!("  infer_aug(b32)         {}  ({:.0} img/s)", fmt_dur(r.mean), r.throughput(32.0));
+}

@@ -1,0 +1,53 @@
+//! §4.2 security numbers: theoretical bounds for every configuration the
+//! paper quotes, plus an empirical brute-force distribution that the
+//! Theorem-1 geometry predicts.
+//!
+//! Run: `cargo bench --bench bench_security`
+
+use mole::attacks::brute_force_attack;
+use mole::data::images::photo_like;
+use mole::morph::MorphKey;
+use mole::security::{self, SecurityReport};
+use mole::Geometry;
+
+fn main() {
+    mole::logging::init();
+    let cifar = Geometry::CIFAR_VGG16;
+
+    println!("=== paper §4.2 quoted numbers ===\n");
+    println!("-- MS setting (kappa = 1, sigma = 0.5) --");
+    SecurityReport::analyze(cifar, 1, 0.5).print();
+    println!("   paper: P_M,bf <= 2^-3072^2 ~ 2^-9e6;  P_M,ar <= 2^-3072x2048 ~ 2^-6e6;");
+    println!("          P_r,bf = (64!)^-1 ~ 7.9e-90;   D-T pairs = 3072\n");
+
+    println!("-- MC setting (kappa = kappa_mc = 3, sigma = 0.5) --");
+    SecurityReport::analyze(cifar, 3, 0.5).print();
+    println!("   paper: P_M,ar <= 2^-1728 at the MC boundary\n");
+
+    println!("-- small geometry (this repo's trainable config), kappa = 16 --");
+    SecurityReport::analyze(Geometry::SMALL, 16, 0.5).print();
+
+    // sigma sweep (the privacy-reservation axis of fig. 7)
+    println!("\n=== Theorem-1 bound vs sigma (CIFAR, kappa=1) ===");
+    println!("  sigma     log2 P_M,bf");
+    for sigma in [0.5, 5e-2, 5e-3, 5e-4, 5e-5] {
+        let b = security::brute_force_bound(&cifar, 1, sigma);
+        println!("  {sigma:<8} {:.3e}", b.log2);
+    }
+
+    // empirical distribution at attackable scale
+    println!("\n=== empirical brute force (q=16 core, 1000 trials) ===");
+    let g = Geometry::SMALL;
+    let key = MorphKey::generate(g, 48, 5).unwrap();
+    let img = photo_like(3, g.m, 6);
+    let out = brute_force_attack(&key, &img, 0.05, 1000, 9).unwrap();
+    let mut esd = out.esd.clone();
+    esd.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| esd[((esd.len() - 1) as f64 * p) as usize];
+    println!("  E_sd distribution: min={:.4} p25={:.4} p50={:.4} p99={:.4}",
+        esd[0], pct(0.25), pct(0.5), pct(0.99));
+    println!("  successes at sigma=0.05: {}/{} (Theorem-1 bound 2^{:.0})",
+        out.successes, out.trials,
+        security::brute_force_bound(&g, 48, 0.05).log2);
+    println!("  best-guess SSIM vs original: {:.3} (unrecognizable)", out.best_ssim);
+}

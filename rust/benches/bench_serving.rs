@@ -1,0 +1,90 @@
+//! Serving-path benchmark: throughput / latency of the dynamic batcher
+//! over the AOT inference artifacts, across batcher configurations and
+//! client counts. Not a paper table per se — it substantiates that the
+//! L3 coordinator is not the bottleneck (PERFORMANCE §L3 target).
+//!
+//! Run: `cargo bench --bench bench_serving`
+
+use mole::bench::{table_header, table_row};
+use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
+use mole::coordinator::trainer::init_params;
+use mole::manifest::Manifest;
+use mole::rng::Rng;
+use mole::tensor::Tensor;
+use std::path::Path;
+use std::time::Duration;
+
+fn run_load(handle: &ServingHandle, clients: usize, per_client: usize) -> f64 {
+    let t0 = std::time::Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            let row = rng.normal_vec(768, 0.5);
+            for _ in 0..per_client {
+                h.infer(&row).unwrap();
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    (clients * per_client) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    mole::logging::init();
+    println!("=== serving: dynamic batcher throughput/latency ===\n");
+    let widths = [10, 12, 9, 12, 10, 10, 10, 11];
+    table_header(
+        &["max_batch", "timeout_ms", "clients", "throughput", "p50_us", "p99_us", "batchsz", "pad%"],
+        &widths,
+    );
+
+    for (max_batch, timeout_ms) in [(1usize, 0u64), (8, 1), (8, 4), (32, 2), (32, 8)] {
+        for clients in [1usize, 4, 16] {
+            let manifest = Manifest::load(Path::new("artifacts")).unwrap();
+            let g = manifest.geometry("small").unwrap();
+            let mut rng = Rng::new(1);
+            let model = ServingModel {
+                cac: Tensor::new(
+                    &[g.d_len(), g.f_len()],
+                    rng.normal_vec(g.d_len() * g.f_len(), 0.02),
+                )
+                .unwrap(),
+                bias: vec![0.0; g.beta],
+                params: init_params(&manifest.aug_params, &mut rng),
+            };
+            let handle = ServingHandle::start(
+                manifest,
+                model,
+                BatcherConfig {
+                    max_batch,
+                    timeout: Duration::from_millis(timeout_ms),
+                },
+            )
+            .unwrap();
+            // warmup compiles all bucket executables
+            run_load(&handle, 1, 8);
+            let thpt = run_load(&handle, clients, 64);
+            let m = &handle.metrics;
+            let (p50, _p95, p99) = m.total_latency.summary().unwrap_or((0, 0, 0));
+            table_row(
+                &[
+                    max_batch.to_string(),
+                    timeout_ms.to_string(),
+                    clients.to_string(),
+                    format!("{thpt:.0}/s"),
+                    p50.to_string(),
+                    p99.to_string(),
+                    format!("{:.1}", m.mean_batch_size()),
+                    format!("{:.0}", m.padding_fraction() * 100.0),
+                ],
+                &widths,
+            );
+        }
+    }
+    println!("\nexpected shape: batching multiplies throughput under concurrency at a");
+    println!("bounded p99 cost; padding stays low once load >= bucket sizes.");
+}

@@ -1,0 +1,245 @@
+//! Brute-force attack on **M** (paper §4.2, Theorem 1).
+//!
+//! The HBC adversary holds T^r and guesses cores **G**; a guess "succeeds"
+//! when the recovered 𝒟^r = T^r·G⁻¹ is within standard deviation σ of the
+//! true D^r (eq. 6). Theorem 1 bounds the per-guess success probability by
+//! ½σ^(N−1) — utterly negligible even at toy sizes, which the empirical
+//! trial distribution here demonstrates.
+
+use crate::morph::MorphKey;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::Result;
+#[cfg(test)]
+use crate::Geometry;
+
+/// Result of an empirical brute-force campaign.
+#[derive(Debug, Clone)]
+pub struct BruteForceOutcome {
+    pub trials: usize,
+    pub sigma: f64,
+    /// E_sd(D^r, 𝒟^r) for every trial.
+    pub esd: Vec<f64>,
+    /// Trials with E_sd ≤ σ.
+    pub successes: usize,
+    /// Best (lowest) E_sd achieved.
+    pub best_esd: f64,
+    /// SSIM between the original and the best recovered image (privacy
+    /// check: should stay far below recognizable).
+    pub best_ssim: f64,
+}
+
+impl BruteForceOutcome {
+    pub fn success_rate(&self) -> f64 {
+        self.successes as f64 / self.trials as f64
+    }
+}
+
+/// Run `trials` random-guess attacks against one image.
+///
+/// `image` is [α, m, m]; data is normalized to unit l²-norm rows as in the
+/// paper's Definition 1 so E_sd is comparable with σ ∈ (0, 1).
+pub fn brute_force_attack(
+    key: &MorphKey,
+    image: &Tensor,
+    sigma: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<BruteForceOutcome> {
+    let g = *key.geometry();
+    let q = key.q();
+    // the true d2r row, unit-normalized
+    let mut d_true =
+        crate::d2r::unroll(image.clone().reshape(&[1, g.alpha, g.m, g.m])?)?;
+    d_true.normalize_l2();
+    let t = key.morph(&d_true)?;
+
+    let mut rng = Rng::new(seed);
+    let mut esd = Vec::with_capacity(trials);
+    let mut best = f64::INFINITY;
+    let mut best_rec: Option<Tensor> = None;
+    let mut successes = 0usize;
+    for _ in 0..trials {
+        // random guess core with the same sampling law the provider uses
+        let mut guess = Tensor::zeros(&[q, q]);
+        for v in guess.data_mut() {
+            *v = rng.nonzero_unit(crate::morph::CORE_MIN_ABS);
+        }
+        for i in 0..q {
+            let v = guess.at2(i, i);
+            guess.set2(i, i, v + if v >= 0.0 { 2.0 } else { -2.0 });
+        }
+        let inv = match crate::linalg::Lu::decompose(&guess).and_then(|lu| lu.inverse()) {
+            Ok(inv) => inv,
+            Err(_) => continue, // singular guess: wasted trial
+        };
+        // recover with the guessed core (block-diagonal apply)
+        let rec = apply_blockdiag(&t, &inv)?;
+        // E_sd in the paper's Lemma-2 normalization: the l2 distance
+        // between the unit-norm D^r and the recovery (so sigma compares
+        // against the unit hypersphere, unrelated vectors sit near
+        // sqrt(2), and sigma = 0.5 is the paper's "already very strict"
+        // privacy reservation).
+        let n = d_true.numel() as f64;
+        let dist = rec.rms_diff(&d_true)? * n.sqrt();
+        esd.push(dist);
+        if dist <= sigma {
+            successes += 1;
+        }
+        if dist < best {
+            best = dist;
+            best_rec = Some(rec);
+        }
+    }
+
+    // SSIM of the best recovery vs the original (per-plane, normalized)
+    let best_ssim = if let Some(rec) = best_rec {
+        let rec_img = crate::d2r::roll(rec, g.alpha, g.m)?;
+        let orig = crate::data::images::normalize_for_display(
+            &image.clone().reshape(&[g.alpha, g.m, g.m])?,
+        );
+        let rec3 = crate::data::images::normalize_for_display(
+            &rec_img.reshape(&[g.alpha, g.m, g.m])?,
+        );
+        crate::ssim::ssim_image(&orig, &rec3, 1.0)?
+    } else {
+        0.0
+    };
+
+    Ok(BruteForceOutcome {
+        trials,
+        sigma,
+        esd,
+        successes,
+        best_esd: best,
+        best_ssim,
+    })
+}
+
+/// Recover at a *bounded* distance from the truth — the fig. 7 generator:
+/// produce 𝒟^r with E_sd(D^r, 𝒟^r) ≈ target σ by perturbing the true
+/// inverse (what an adversary with the stated privacy-reservation budget
+/// would achieve at best).
+pub fn bounded_recovery(
+    key: &MorphKey,
+    image: &Tensor,
+    sigma: f64,
+    seed: u64,
+) -> Result<Tensor> {
+    let g = *key.geometry();
+    let mut d_true =
+        crate::d2r::unroll(image.clone().reshape(&[1, g.alpha, g.m, g.m])?)?;
+    d_true.normalize_l2();
+    let mut rng = Rng::new(seed);
+    let mut rec = d_true.clone();
+    // Total-l2 target (Lemma-2 units): per-element std = sigma / sqrt(N)
+    let per_elem = (sigma / (rec.numel() as f64).sqrt()) as f32;
+    for v in rec.data_mut() {
+        *v += rng.normal_f32() * per_elem;
+    }
+    crate::d2r::roll(rec, g.alpha, g.m)
+}
+
+fn apply_blockdiag(rows: &Tensor, core: &Tensor) -> Result<Tensor> {
+    let q = core.shape()[0];
+    let d = rows.shape()[1];
+    let kappa = d / q;
+    let b = rows.shape()[0];
+    let mut out = Tensor::zeros(&[b, d]);
+    for bi in 0..b {
+        let src = rows.row(bi).to_vec();
+        let dst = out.row_mut(bi);
+        for blk in 0..kappa {
+            let xs = &src[blk * q..(blk + 1) * q];
+            let ys = &mut dst[blk * q..(blk + 1) * q];
+            for (i, &xv) in xs.iter().enumerate() {
+                let crow = core.row(i);
+                for (yv, &cv) in ys.iter_mut().zip(crow) {
+                    *yv += xv * cv;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::photo_like;
+    use crate::security::brute_force_bound;
+
+    fn small_key() -> MorphKey {
+        MorphKey::generate(Geometry::SMALL, 48, 3).unwrap() // q=16: small core
+    }
+
+    #[test]
+    fn random_guesses_never_succeed_at_strict_sigma() {
+        let key = small_key();
+        let img = photo_like(3, 16, 1);
+        let out = brute_force_attack(&key, &img, 0.005, 200, 9).unwrap();
+        assert_eq!(out.trials, 200);
+        assert_eq!(out.successes, 0, "esd min = {}", out.best_esd);
+        // and even the paper's loosest sigma = 0.5 admits no random guess
+        let loose = brute_force_attack(&key, &img, 0.5, 200, 10).unwrap();
+        assert_eq!(loose.successes, 0, "esd min = {}", loose.best_esd);
+        // the theoretical bound at q=16 (N=256) is ~2^-1955: empirical 0
+        let bound = brute_force_bound(&Geometry::SMALL, 48, 0.005);
+        assert!(bound.log2 < -1000.0);
+        // recovered "image" must be unrecognizable
+        assert!(out.best_ssim < 0.5, "ssim={}", out.best_ssim);
+    }
+
+    #[test]
+    fn true_key_recovers_exactly() {
+        // sanity: the attack harness measures E_sd correctly — with the
+        // *true* inverse core the distance collapses to ~0
+        let key = small_key();
+        let img = photo_like(3, 16, 2);
+        let g = Geometry::SMALL;
+        let mut d = crate::d2r::unroll(img.clone().reshape(&[1, 3, 16, 16]).unwrap())
+            .unwrap();
+        d.normalize_l2();
+        let t = key.morph(&d).unwrap();
+        let rec = apply_blockdiag(&t, key.core_inv()).unwrap();
+        assert!(rec.rms_diff(&d).unwrap() < 1e-5);
+        let _ = g;
+    }
+
+    #[test]
+    fn esd_distribution_is_far_from_zero() {
+        // guesses cluster around "unrelated vector" distance; the tail
+        // near zero is empty — the geometric story behind Theorem 1
+        let key = small_key();
+        let img = photo_like(3, 16, 3);
+        let out = brute_force_attack(&key, &img, 0.05, 100, 17).unwrap();
+        let min = out.esd.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mean = out.esd.iter().sum::<f64>() / out.esd.len() as f64;
+        // unrelated unit vectors sit near sqrt(2); wrong inverses can
+        // additionally *amplify* (G^-1 has arbitrary norm), so the
+        // distribution floor is the meaningful bound
+        assert!(min > 0.5, "min esd {min}");
+        assert!(mean > min, "mean esd {mean}");
+    }
+
+    #[test]
+    fn bounded_recovery_hits_target_sd() {
+        let key = small_key();
+        let img = photo_like(3, 16, 4);
+        for sigma in [5e-4, 5e-3, 0.05, 0.5] {
+            let rec = bounded_recovery(&key, &img, sigma, 5).unwrap();
+            let mut d = crate::d2r::unroll(
+                img.clone().reshape(&[1, 3, 16, 16]).unwrap(),
+            )
+            .unwrap();
+            d.normalize_l2();
+            let rec_rows = crate::d2r::unroll(rec).unwrap();
+            let n = d.numel() as f64;
+            let got = rec_rows.rms_diff(&d).unwrap() * n.sqrt();
+            assert!(
+                (got - sigma).abs() / sigma < 0.25,
+                "sigma={sigma} got={got} (l2 units)"
+            );
+        }
+    }
+}

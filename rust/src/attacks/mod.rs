@@ -1,0 +1,21 @@
+//! Operational attack harness (paper §4.2): the three attacks implemented
+//! for real against small configurations, checked against the theoretical
+//! bounds in [`crate::security`].
+//!
+//! * [`brute_force`] — HBC: sample random guesses **G** for the morphing
+//!   core, recover 𝒟^r = T^r·G⁻¹, measure E_sd; the empirical success
+//!   rate at threshold σ must sit below Theorem 1's bound.
+//! * [`reversing`] — HBC: try to factorize **C**^ac into **M**⁻¹·rand(**C**)
+//!   by least squares; demonstrates the eq. 13 boundary: solvable when
+//!   κ > κ_mc (q < n² and kernel known), underdetermined otherwise.
+//! * [`dtpair`] — SHBC: with q injected (D,T) pairs recover **M′** exactly
+//!   (eq. 15); with fewer than q pairs the solve is rank-deficient and the
+//!   recovered core fails on held-out data.
+
+pub mod brute_force;
+pub mod dtpair;
+pub mod reversing;
+
+pub use brute_force::{bounded_recovery, brute_force_attack, BruteForceOutcome};
+pub use dtpair::{dt_pair_attack, DtPairOutcome};
+pub use reversing::{reversing_attack, ReversingOutcome};

@@ -1,0 +1,219 @@
+//! Aug-Conv reversing attack (paper §4.2, eq. 11-14).
+//!
+//! The HBC adversary holds **C**^ac and knows the kernel he sent, but NOT
+//! the channel randomization `rand`. Fixing one shuffled output-channel
+//! group g and one diagonal block k, the columns obey
+//!
+//! ```text
+//! U_g = M'^-1 . C_{k,s}        (s = the unknown true source channel)
+//! ```
+//!
+//! where C_{k,s} (q × n²) is computable from the adversary's own kernel
+//! for every *candidate* source s. The attack therefore: solves the least
+//! squares system for each candidate s and looks at residuals.
+//!
+//! * q < n² (κ > κ_mc): over-determined — only the true s fits with ~zero
+//!   residual; the adversary identifies s, recovers **M′**⁻¹ and the data.
+//! * q ≥ n² (κ ≤ κ_mc): square/under-determined — **every** candidate fits
+//!   exactly, the residual carries no signal, and combining groups to gain
+//!   equations requires guessing the full permutation (P = 1/β!, §4.2).
+//!
+//! This is the operational content of eq. 13's κ_mc boundary; the module
+//! demonstrates both regimes for real.
+
+use crate::linalg::{gemm, transpose, Lu};
+use crate::morph::MorphKey;
+use crate::tensor::Tensor;
+use crate::{Geometry, Result};
+
+/// Outcome of the reversing attack.
+#[derive(Debug, Clone)]
+pub struct ReversingOutcome {
+    pub q: usize,
+    pub n2: usize,
+    /// Per-candidate-source residuals ‖M̂′⁻¹·C_s − U‖_F for group 0.
+    pub residuals: Vec<f64>,
+    /// Candidates whose system fit with near-zero residual.
+    pub candidates_fitting: usize,
+    /// True iff exactly one candidate fit — the adversary identified the
+    /// source channel and recovered the core.
+    pub identified: bool,
+    /// E_sd between a probe D^r and its recovery via the best-residual
+    /// candidate's core.
+    pub probe_esd: f64,
+}
+
+/// Residual tolerance for "the system fit" (relative to ‖U‖_F).
+const FIT_TOL: f64 = 1e-3;
+/// Tikhonov ridge for the normal equations (keeps near-singular grams
+/// solvable so we can observe that *wrong* candidates also fit at q ≥ n²).
+const RIDGE: f32 = 1e-6;
+
+/// Mount the attack against a built C^ac (block 0, shuffled group 0).
+pub fn reversing_attack(
+    g: &Geometry,
+    key: &MorphKey,
+    c_ac: &Tensor,
+    w1: &Tensor,
+    probe: &Tensor,
+) -> Result<ReversingOutcome> {
+    let q = key.q();
+    let n2 = g.n() * g.n();
+    let _f_len = g.f_len();
+
+    // U_g: block-0 rows of the first shuffled column group.
+    let mut u = Tensor::zeros(&[q, n2]);
+    for r in 0..q {
+        u.row_mut(r).copy_from_slice(&c_ac.row(r)[0..n2]);
+    }
+    let u_norm = crate::linalg::fro_norm(&u).max(1e-12);
+
+    // Candidate source channels: single-channel conv matrices C_{k=0,s}.
+    let c_full = crate::d2r::build_c_matrix(w1, g)?;
+    let mut residuals = Vec::with_capacity(g.beta);
+    let mut best: Option<(f64, Tensor)> = None;
+    for s in 0..g.beta {
+        // C_{0,s}: rows 0..q (block 0 of the input space), columns of
+        // output group s.
+        let mut c_s = Tensor::zeros(&[q, n2]);
+        for r in 0..q {
+            c_s.row_mut(r)
+                .copy_from_slice(&c_full.row(r)[s * n2..(s + 1) * n2]);
+        }
+        // Normal equations with ridge: M̂ (C Cᵀ + λI) = U Cᵀ.
+        let c_t = transpose(&c_s)?;
+        let mut gram = gemm(&c_s, &c_t)?;
+        for i in 0..q {
+            let v = gram.at2(i, i) + RIDGE;
+            gram.set2(i, i, v);
+        }
+        let rhs = gemm(&u, &c_t)?;
+        let m_hat = match Lu::decompose(&gram) {
+            Ok(lu) => {
+                let mut m = Tensor::zeros(&[q, q]);
+                let mut ok = true;
+                for i in 0..q {
+                    match lu.solve(rhs.row(i)) {
+                        Ok(x) => m.row_mut(i).copy_from_slice(&x),
+                        Err(_) => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok {
+                    Some(m)
+                } else {
+                    None
+                }
+            }
+            Err(_) => None,
+        };
+        let res = match &m_hat {
+            Some(m) => {
+                let fit = gemm(m, &c_s)?;
+                let mut diff = fit;
+                diff.sub_assign(&u)?;
+                crate::linalg::fro_norm(&diff) / u_norm
+            }
+            None => f64::INFINITY,
+        };
+        residuals.push(res);
+        if let Some(m) = m_hat {
+            if best.as_ref().map(|(b, _)| res < *b).unwrap_or(true) {
+                best = Some((res, m));
+            }
+        }
+    }
+
+    let candidates_fitting = residuals.iter().filter(|&&r| r < FIT_TOL).count();
+    let identified = candidates_fitting == 1;
+
+    // Recover the probe with the best-residual core.
+    let probe_esd = match best {
+        Some((_, m_inv_rec)) => {
+            let t = key.morph(probe)?;
+            let kappa = key.kappa();
+            let mut rec = Tensor::zeros(probe.shape());
+            for bi in 0..probe.shape()[0] {
+                for k in 0..kappa {
+                    let x = Tensor::new(&[1, q], t.row(bi)[k * q..(k + 1) * q].to_vec())?;
+                    let y = gemm(&x, &m_inv_rec)?;
+                    rec.row_mut(bi)[k * q..(k + 1) * q].copy_from_slice(y.data());
+                }
+            }
+            rec.rms_diff(probe)?
+        }
+        None => f64::INFINITY,
+    };
+
+    Ok(ReversingOutcome { q, n2, residuals, candidates_fitting, identified, probe_esd })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::augconv::{build_aug_conv, ChannelPerm};
+    use crate::rng::Rng;
+
+    fn setup(kappa: usize, seed: u64) -> (Geometry, MorphKey, Tensor, Tensor, Tensor) {
+        let g = Geometry::SMALL;
+        let mut rng = Rng::new(seed);
+        let w1 = Tensor::new(
+            &[g.beta, g.alpha, g.p, g.p],
+            rng.normal_vec(g.beta * g.alpha * g.p * g.p, 0.5),
+        )
+        .unwrap();
+        let b1: Vec<f32> = vec![0.0; g.beta];
+        let key = MorphKey::generate(g, kappa, seed).unwrap();
+        let perm = ChannelPerm::generate(g.beta, seed);
+        let layer = build_aug_conv(&w1, &b1, &key, &perm).unwrap();
+        let probe = Tensor::new(&[1, g.d_len()], rng.normal_vec(g.d_len(), 1.0)).unwrap();
+        (g, key, w1, layer.matrix().clone(), probe)
+    }
+
+    /// κ = 16 ⇒ q = 48 < n² = 256: over-determined — exactly one candidate
+    /// fits, the adversary identifies the channel and RECOVERS the data.
+    /// Operational proof that κ > κ_mc is unsafe.
+    #[test]
+    fn large_kappa_is_broken() {
+        let (g, key, w1, cac, probe) = setup(16, 1);
+        let out = reversing_attack(&g, &key, &cac, &w1, &probe).unwrap();
+        assert!(out.q < out.n2);
+        assert!(out.identified, "residuals: {:?}", out.residuals);
+        assert!(out.probe_esd < 1e-2, "probe esd {}", out.probe_esd);
+    }
+
+    /// κ = κ_mc = 3 ⇒ q = n² = 256 (square system). The conv matrix is
+    /// near-singular (3×3 smoothing attenuates high frequencies), which
+    /// produces an interesting split verdict, reproduced here for real:
+    /// residual *separation* can leak which channel a group came from
+    /// (a `rand()` bit), yet the recovered M̂′⁻¹ is wrong along the conv
+    /// matrix's near-null space, so the DATA stays protected — probe
+    /// recovery fails with E_sd ≈ the unrelated-vector distance. κ ≤ κ_mc
+    /// therefore protects the data (the paper's claim) even when the
+    /// permutation partially leaks (a nuance the paper's counting misses).
+    /// Recorded in EXPERIMENTS.md §Findings.
+    #[test]
+    fn kappa_mc_protects_data_despite_channel_leak() {
+        let (g, key, w1, cac, probe) = setup(3, 2);
+        let out = reversing_attack(&g, &key, &cac, &w1, &probe).unwrap();
+        assert_eq!(out.q, out.n2);
+        // the core recovery must fail at/below kappa_mc regardless of
+        // whether the channel was singled out
+        assert!(
+            out.probe_esd > 0.1,
+            "data recovered at kappa_mc: esd {}",
+            out.probe_esd
+        );
+    }
+
+    /// MS setting κ = 1 ⇒ q = 768 > n²: under-determined, same ambiguity.
+    #[test]
+    fn ms_setting_resists() {
+        let (g, key, w1, cac, probe) = setup(1, 3);
+        let out = reversing_attack(&g, &key, &cac, &w1, &probe).unwrap();
+        assert!(out.q > out.n2);
+        assert!(out.candidates_fitting > 1 || !out.identified);
+    }
+}

@@ -1,0 +1,358 @@
+//! Augmented Convolutional layer (paper §3.3).
+//!
+//! The provider combines the inverse morphing matrix with the developer's
+//! first-layer convolution matrix:  **C**^ac = **M**⁻¹ · **C**  (so that
+//! T^r·C^ac = D^r·C, eq. 5), then applies *feature channel randomization*:
+//! the β groups of n² contiguous columns are shuffled with a secret
+//! permutation — the `rand()` that defeats the reverse-convolution attack.
+//!
+//! Because **M**⁻¹ is block diagonal (core **M′**⁻¹), the product is
+//! computed block-row-wise: κ GEMMs of [q, q] × [q, βn²] instead of one
+//! (αm²)² multiplication.
+
+use crate::d2r;
+use crate::linalg::gemm_slices;
+use crate::morph::MorphKey;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+
+/// A constructed Aug-Conv layer: the matrix the provider ships to the
+/// developer, plus the permuted bias. Contains **no key material** — this
+/// is exactly the artifact the HBC adversary sees (§4.1).
+#[derive(Debug, Clone)]
+pub struct AugConvLayer {
+    geometry: Geometry,
+    /// C^ac, [αm², βn²].
+    matrix: Tensor,
+    /// First-layer bias in the *shuffled* channel order, [β].
+    bias: Vec<f32>,
+}
+
+/// The provider-side secret accompanying an [`AugConvLayer`]: the channel
+/// permutation (stored in the key vault next to the morph key).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelPerm {
+    perm: Vec<usize>,
+}
+
+impl ChannelPerm {
+    /// Fisher–Yates permutation of the β output channels.
+    pub fn generate(beta: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        Self { perm: rng.permutation(beta) }
+    }
+
+    pub fn from_vec(perm: Vec<usize>) -> Result<Self> {
+        let mut seen = vec![false; perm.len()];
+        for &p in &perm {
+            if p >= perm.len() || seen[p] {
+                return Err(Error::Key("invalid channel permutation".into()));
+            }
+            seen[p] = true;
+        }
+        Ok(Self { perm })
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.perm
+    }
+
+    pub fn beta(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Inverse permutation (maps shuffled channel → original channel).
+    pub fn inverse(&self) -> ChannelPerm {
+        let mut inv = vec![0usize; self.perm.len()];
+        for (i, &p) in self.perm.iter().enumerate() {
+            inv[p] = i;
+        }
+        ChannelPerm { perm: inv }
+    }
+
+    /// Apply to a feature tensor [B, β, n, n]: output channel g takes
+    /// original channel perm[g] — matching the column-group shuffle.
+    pub fn apply_features(&self, f: &Tensor) -> Result<Tensor> {
+        if f.ndim() != 4 || f.shape()[1] != self.perm.len() {
+            return Err(Error::Shape(format!(
+                "apply_features wants [B, {}, n, n], got {:?}",
+                self.perm.len(),
+                f.shape()
+            )));
+        }
+        let (b, c, h, w) = (f.shape()[0], f.shape()[1], f.shape()[2], f.shape()[3]);
+        let mut out = Tensor::zeros(&[b, c, h, w]);
+        let plane = h * w;
+        for bi in 0..b {
+            for g in 0..c {
+                let src = &f.data()[(bi * c + self.perm[g]) * plane..][..plane];
+                out.data_mut()[(bi * c + g) * plane..][..plane].copy_from_slice(src);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Build an Aug-Conv layer from the developer's first-layer weights and
+/// the provider's morph key (the full §3.3 pipeline).
+///
+/// * `w1` — OIHW kernel [β, α, p, p] *received from the developer* (Fig. 1:
+///   the developer pre-trains on a public dataset and sends layer 1).
+/// * `b1` — first-layer bias [β].
+/// * `key` — the provider's secret morph key.
+/// * `perm` — the provider's secret channel permutation.
+pub fn build_aug_conv(
+    w1: &Tensor,
+    b1: &[f32],
+    key: &MorphKey,
+    perm: &ChannelPerm,
+) -> Result<AugConvLayer> {
+    let g = *key.geometry();
+    if b1.len() != g.beta || perm.beta() != g.beta {
+        return Err(Error::Shape(format!(
+            "bias/perm size {} / {} != beta {}",
+            b1.len(),
+            perm.beta(),
+            g.beta
+        )));
+    }
+    let c = d2r::build_c_matrix(w1, &g)?;
+    let shuffled = build_aug_conv_from_c(&c, key, perm)?;
+    // permute the bias with the same order
+    let bias: Vec<f32> = perm.as_slice().iter().map(|&p| b1[p]).collect();
+    Ok(AugConvLayer { geometry: g, matrix: shuffled, bias })
+}
+
+/// Core combination step, exposed for the attack harness: C^ac from an
+/// existing C matrix (block-row GEMM + column-group shuffle).
+pub fn build_aug_conv_from_c(
+    c: &Tensor,
+    key: &MorphKey,
+    perm: &ChannelPerm,
+) -> Result<Tensor> {
+    let g = *key.geometry();
+    if c.shape() != [g.d_len(), g.f_len()] {
+        return Err(Error::Shape(format!(
+            "C shape {:?} != [{}, {}]",
+            c.shape(),
+            g.d_len(),
+            g.f_len()
+        )));
+    }
+    let q = key.q();
+    let f_len = g.f_len();
+    let mut prod = Tensor::zeros(&[g.d_len(), f_len]);
+    // M^{-1} is block-diagonal: row-block k of the product is
+    // M'^{-1} x C[kq..(k+1)q, :]
+    let core_inv = key.core_inv();
+    for blk in 0..key.kappa() {
+        let a = core_inv.data();
+        let b = &c.data()[blk * q * f_len..(blk + 1) * q * f_len];
+        let out = &mut prod.data_mut()[blk * q * f_len..(blk + 1) * q * f_len];
+        gemm_slices(q, q, f_len, a, b, out);
+    }
+    // feature channel randomization: shuffle the beta column groups
+    let n2 = g.n() * g.n();
+    let mut shuffled = Tensor::zeros(&[g.d_len(), f_len]);
+    for row in 0..g.d_len() {
+        let src = prod.row(row);
+        let dst = shuffled.row_mut(row);
+        for grp in 0..g.beta {
+            let s = perm.as_slice()[grp];
+            dst[grp * n2..(grp + 1) * n2].copy_from_slice(&src[s * n2..(s + 1) * n2]);
+        }
+    }
+    Ok(shuffled)
+}
+
+impl AugConvLayer {
+    /// Assemble from parts (e.g. after receiving over the wire).
+    pub fn from_parts(geometry: Geometry, matrix: Tensor, bias: Vec<f32>) -> Result<Self> {
+        if matrix.shape() != [geometry.d_len(), geometry.f_len()] {
+            return Err(Error::Shape(format!(
+                "C^ac shape {:?} != [{}, {}]",
+                matrix.shape(),
+                geometry.d_len(),
+                geometry.f_len()
+            )));
+        }
+        if bias.len() != geometry.beta {
+            return Err(Error::Shape("bias size mismatch".into()));
+        }
+        Ok(Self { geometry, matrix, bias })
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geometry
+    }
+
+    /// The C^ac matrix [αm², βn²].
+    pub fn matrix(&self) -> &Tensor {
+        &self.matrix
+    }
+
+    /// The (permuted) first-layer bias [β].
+    pub fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+
+    /// Forward on morphed rows: F = reshape(T^r · C^ac) + bias — the pure
+    /// rust reference for what the AOT artifact computes (eq. 5).
+    pub fn forward(&self, t_rows: &Tensor) -> Result<Tensor> {
+        let g = &self.geometry;
+        if t_rows.ndim() != 2 || t_rows.shape()[1] != g.d_len() {
+            return Err(Error::Shape(format!(
+                "forward wants [B, {}], got {:?}",
+                g.d_len(),
+                t_rows.shape()
+            )));
+        }
+        let f_r = crate::linalg::gemm(t_rows, &self.matrix)?;
+        let b = t_rows.shape()[0];
+        let n = g.n();
+        let mut f = f_r.reshape(&[b, g.beta, n, n])?;
+        for bi in 0..b {
+            for ch in 0..g.beta {
+                let bias = self.bias[ch];
+                let plane = &mut f.data_mut()[(bi * g.beta + ch) * n * n..][..n * n];
+                for v in plane {
+                    *v += bias;
+                }
+            }
+        }
+        Ok(f)
+    }
+
+    /// Transfer size in bytes (the §4.3 data-transmission overhead:
+    /// O_data = (αm²)·(βn²) matrix elements, plus the bias).
+    pub fn transfer_bytes(&self) -> usize {
+        (self.matrix.numel() + self.bias.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv2d_same;
+
+    fn setup(kappa: usize, seed: u64) -> (Geometry, Tensor, Vec<f32>, MorphKey, ChannelPerm) {
+        let g = Geometry::SMALL;
+        let mut rng = Rng::new(seed);
+        let w1 = Tensor::new(
+            &[g.beta, g.alpha, g.p, g.p],
+            rng.normal_vec(g.beta * g.alpha * g.p * g.p, 0.5),
+        )
+        .unwrap();
+        let b1: Vec<f32> = rng.normal_vec(g.beta, 0.1);
+        let key = MorphKey::generate(g, kappa, seed).unwrap();
+        let perm = ChannelPerm::generate(g.beta, seed);
+        (g, w1, b1, key, perm)
+    }
+
+    #[test]
+    fn perm_validation() {
+        assert!(ChannelPerm::from_vec(vec![0, 2, 1]).is_ok());
+        assert!(ChannelPerm::from_vec(vec![0, 0, 1]).is_err());
+        assert!(ChannelPerm::from_vec(vec![0, 3, 1]).is_err());
+    }
+
+    #[test]
+    fn perm_inverse_roundtrip() {
+        let p = ChannelPerm::generate(16, 9);
+        let inv = p.inverse();
+        let mut rng = Rng::new(0);
+        let f = Tensor::new(&[2, 16, 3, 3], rng.normal_vec(2 * 16 * 9, 1.0)).unwrap();
+        let shuffled = p.apply_features(&f).unwrap();
+        let back = inv.apply_features(&shuffled).unwrap();
+        assert_eq!(back, f);
+    }
+
+    /// Paper eq. 5: T^r·C^ac equals the original conv features (up to the
+    /// secret channel permutation) — the central equivalence of MoLe.
+    #[test]
+    fn equivalence_theorem() {
+        for (kappa, seed) in [(16usize, 1u64), (3, 2), (1, 3)] {
+            let (g, w1, b1, key, perm) = setup(kappa, seed);
+            let layer = build_aug_conv(&w1, &b1, &key, &perm).unwrap();
+
+            let mut rng = Rng::new(seed + 100);
+            let x =
+                Tensor::new(&[2, g.alpha, g.m, g.m], rng.normal_vec(2 * g.d_len(), 1.0))
+                    .unwrap();
+            // provider: morph
+            let d_rows = d2r::unroll(x.clone()).unwrap();
+            let t_rows = key.morph(&d_rows).unwrap();
+            // developer: aug-conv forward on morphed data
+            let f_aug = layer.forward(&t_rows).unwrap();
+            // ground truth: direct conv on original data, channels permuted
+            let f_plain = conv2d_same(&x, &w1, Some(&b1)).unwrap();
+            let f_expected = perm.apply_features(&f_plain).unwrap();
+            assert!(
+                f_aug.allclose(&f_expected, 5e-2, 5e-2),
+                "kappa={kappa}: equivalence violated (max diff {})",
+                f_aug.max_abs_diff(&f_expected).unwrap()
+            );
+        }
+    }
+
+    /// Without the right key the features are garbage — sanity check that
+    /// the equivalence is not vacuous.
+    #[test]
+    fn wrong_key_breaks_equivalence() {
+        let (g, w1, b1, key, perm) = setup(16, 5);
+        let layer = build_aug_conv(&w1, &b1, &key, &perm).unwrap();
+        let wrong_key = MorphKey::generate(g, 16, 999).unwrap();
+
+        let mut rng = Rng::new(6);
+        let x = Tensor::new(&[1, g.alpha, g.m, g.m], rng.normal_vec(g.d_len(), 1.0))
+            .unwrap();
+        let d_rows = d2r::unroll(x.clone()).unwrap();
+        let t_wrong = wrong_key.morph(&d_rows).unwrap();
+        let f_aug = layer.forward(&t_wrong).unwrap();
+        let f_plain = conv2d_same(&x, &w1, Some(&b1)).unwrap();
+        let f_expected = perm.apply_features(&f_plain).unwrap();
+        assert!(
+            !f_aug.allclose(&f_expected, 5e-2, 5e-2),
+            "wrong morph key still produced equivalent features"
+        );
+    }
+
+    #[test]
+    fn bias_is_permuted() {
+        let (_, w1, b1, key, perm) = setup(16, 7);
+        let layer = build_aug_conv(&w1, &b1, &key, &perm).unwrap();
+        for (g_idx, &src) in perm.as_slice().iter().enumerate() {
+            assert_eq!(layer.bias()[g_idx], b1[src]);
+        }
+    }
+
+    #[test]
+    fn transfer_bytes_matches_odata() {
+        let (g, w1, b1, key, perm) = setup(16, 8);
+        let layer = build_aug_conv(&w1, &b1, &key, &perm).unwrap();
+        // O_data: the whole C^ac = alpha*m^2 x beta*n^2 elements (§4.3)
+        assert_eq!(
+            layer.transfer_bytes(),
+            (g.d_len() * g.f_len() + g.beta) * 4
+        );
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let g = Geometry::SMALL;
+        assert!(AugConvLayer::from_parts(g, Tensor::zeros(&[10, 10]), vec![0.0; 16]).is_err());
+        assert!(AugConvLayer::from_parts(
+            g,
+            Tensor::zeros(&[g.d_len(), g.f_len()]),
+            vec![0.0; 3]
+        )
+        .is_err());
+        assert!(AugConvLayer::from_parts(
+            g,
+            Tensor::zeros(&[g.d_len(), g.f_len()]),
+            vec![0.0; g.beta]
+        )
+        .is_ok());
+    }
+}

@@ -1,0 +1,95 @@
+//! Feature-transmission baseline ([13], Table 1).
+//!
+//! Instead of morphing, the provider runs the first conv layer(s) locally
+//! and ships the extracted features; Gaussian noise is added to resist
+//! reverse engineering, at the cost of accuracy. This module measures the
+//! two Table-1 columns for real on our geometry:
+//!
+//! * transmission expansion: features have β channels vs α — for the
+//!   VGG-16 first layer that is 64/3 ≈ 21× per image (the paper's [13]
+//!   row quotes 64× for a deeper cut point);
+//! * the accuracy penalty is measured by the `bench_table1` harness,
+//!   which trains on noisy features via the AOT artifacts.
+
+use crate::nn::{add_gaussian_noise, conv2d_same, relu};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::{Geometry, Result};
+
+/// Static overhead numbers for the feature-transmission scheme.
+#[derive(Debug, Clone)]
+pub struct FeatureTxReport {
+    pub geometry: Geometry,
+    /// Elements per transmitted image: βn² (vs αm² original).
+    pub feature_elements: usize,
+    pub image_elements: usize,
+    /// Transmission expansion factor.
+    pub expansion: f64,
+    /// Noise std applied to the features.
+    pub noise_std: f32,
+}
+
+/// Compute the transmission overhead for a cut after the first layer.
+pub fn feature_tx_overhead(g: &Geometry, noise_std: f32) -> FeatureTxReport {
+    FeatureTxReport {
+        geometry: *g,
+        feature_elements: g.f_len(),
+        image_elements: g.d_len(),
+        expansion: g.f_len() as f64 / g.d_len() as f64,
+        noise_std,
+    }
+}
+
+/// Provider-side feature extraction: conv1 + ReLU + noise (the [13]
+/// pipeline at cut depth 1). Returns the tensors the provider would ship.
+pub fn extract_noisy_features(
+    images: &Tensor,
+    w1: &Tensor,
+    b1: &[f32],
+    noise_std: f32,
+    rng: &mut Rng,
+) -> Result<Tensor> {
+    let mut f = conv2d_same(images, w1, Some(b1))?;
+    relu(&mut f);
+    if noise_std > 0.0 {
+        add_gaussian_noise(&mut f, noise_std, rng);
+    }
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_matches_channel_ratio() {
+        let r = feature_tx_overhead(&Geometry::CIFAR_VGG16, 0.5);
+        // beta*n^2 / alpha*m^2 = 64/3 with n = m
+        assert!((r.expansion - 64.0 / 3.0).abs() < 1e-9);
+        let r = feature_tx_overhead(&Geometry::SMALL, 0.5);
+        assert!((r.expansion - 16.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn features_are_noisy_but_structured() {
+        let g = Geometry::SMALL;
+        let mut rng = Rng::new(1);
+        let imgs = Tensor::new(&[2, g.alpha, g.m, g.m], rng.normal_vec(2 * g.d_len(), 0.5))
+            .unwrap();
+        let w1 = Tensor::new(
+            &[g.beta, g.alpha, g.p, g.p],
+            rng.normal_vec(g.beta * g.alpha * g.p * g.p, 0.3),
+        )
+        .unwrap();
+        let b1 = vec![0.0; g.beta];
+        let clean =
+            extract_noisy_features(&imgs, &w1, &b1, 0.0, &mut Rng::new(2)).unwrap();
+        let noisy =
+            extract_noisy_features(&imgs, &w1, &b1, 0.5, &mut Rng::new(2)).unwrap();
+        assert_eq!(clean.shape(), &[2, g.beta, g.m, g.m]);
+        let d = noisy.rms_diff(&clean).unwrap();
+        assert!(d > 0.2 && d < 0.8, "noise rms {d}");
+        // relu applied
+        assert!(clean.data().iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Table-1 baselines.
+//!
+//! * [`smc2pc`] — a *real* two-party secure computation of the first conv
+//!   layer using additive secret sharing + Beaver triples (the GAZELLE
+//!   [24] class of protocols, simplified to its arithmetic core), with
+//!   every byte of interaction metered. Shows the per-layer-interactive
+//!   scaling that gives SMC its 421,000× transmission overhead.
+//! * [`feature_tx`] — the feature-transmission scheme of [13]: the
+//!   provider computes the first k conv layers, adds Gaussian noise for
+//!   reverse-engineering resistance, and ships the (larger) feature
+//!   tensors; accuracy penalty vs noise is measured for real.
+
+pub mod feature_tx;
+pub mod smc2pc;
+
+pub use feature_tx::{feature_tx_overhead, FeatureTxReport};
+pub use smc2pc::{Smc2pcReport, TwoPartyConv};

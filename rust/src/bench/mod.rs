@@ -1,0 +1,112 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md §5).
+//!
+//! Warmup + N timed trials with mean / p50 / p99 and a throughput helper;
+//! benches print aligned table rows so `cargo bench` output maps 1:1 onto
+//! the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub trials: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+impl BenchResult {
+    /// Items/second at `items` per invocation.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` untimed runs and `trials` timed runs.
+pub fn bench<R>(name: &str, warmup: usize, trials: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    assert!(trials > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let mean = times.iter().sum::<Duration>() / trials as u32;
+    let p50 = times[trials / 2];
+    let p99 = times[(trials * 99 / 100).min(trials - 1)];
+    BenchResult { name: name.to_string(), trials, mean, p50, p99 }
+}
+
+/// Auto-pick trial count so the bench takes roughly `budget`.
+pub fn bench_auto<R>(name: &str, budget: Duration, mut f: impl FnMut() -> R) -> BenchResult {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().max(Duration::from_micros(1));
+    let trials = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 1000.0) as usize;
+    bench(name, 1, trials, f)
+}
+
+/// Pretty duration for table cells.
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.2}s", us / 1e6)
+    }
+}
+
+/// Print a table header + separator.
+pub fn table_header(cols: &[&str], widths: &[usize]) {
+    let mut line = String::new();
+    let mut sep = String::new();
+    for (c, w) in cols.iter().zip(widths) {
+        line.push_str(&format!("{c:>w$} ", w = w));
+        sep.push_str(&format!("{:->w$} ", "", w = w));
+    }
+    println!("{line}");
+    println!("{sep}");
+}
+
+/// Print one row of table cells right-aligned to widths.
+pub fn table_row(cells: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        line.push_str(&format!("{c:>w$} ", w = w));
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 10, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.p99 >= r.p50);
+        assert_eq!(r.trials, 10);
+        assert!(r.throughput(10_000.0) > 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+}

@@ -1,0 +1,235 @@
+//! Configuration system: a TOML-subset parser (sections, key = value,
+//! strings / ints / floats / bools, `#` comments) plus the typed configs
+//! for the launcher. The offline vendor set has neither serde nor toml,
+//! so this is self-contained.
+
+use crate::{Error, Geometry, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed raw config: section → key → raw string value.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse TOML-subset text.
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let mut v = v.trim().to_string();
+            if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+                v = v[1..v.len() - 1].to_string();
+            }
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("[{section}] {key} = {v:?} is not an integer"))
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str, default: u64) -> Result<u64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("[{section}] {key} = {v:?} is not an integer"))
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("[{section}] {key} = {v:?} is not a number"))
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(Error::Config(format!(
+                "[{section}] {key} = {v:?} is not a bool"
+            ))),
+        }
+    }
+}
+
+/// Full launcher configuration with defaults matching the repo layout.
+#[derive(Debug, Clone)]
+pub struct MoleConfig {
+    /// Directory holding the AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+    /// First-layer geometry name ("small" | "cifar").
+    pub geometry: Geometry,
+    /// Morphing scale factor κ.
+    pub kappa: usize,
+    /// Key-material seed.
+    pub seed: u64,
+    /// Provider listen / developer connect address.
+    pub addr: String,
+    /// Dynamic batcher: max batch size (must be an artifact batch size).
+    pub max_batch: usize,
+    /// Dynamic batcher: max queue wait before a partial batch is flushed.
+    pub batch_timeout_ms: u64,
+    /// Training: steps / learning rate.
+    pub train_steps: usize,
+    pub lr: f64,
+    /// Dataset seed + per-class sample counts for the synthetic corpus.
+    pub data_seed: u64,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+}
+
+impl Default for MoleConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".to_string(),
+            geometry: Geometry::SMALL,
+            kappa: 16,
+            seed: 20190506,
+            addr: "127.0.0.1:7433".to_string(),
+            max_batch: 32,
+            batch_timeout_ms: 2,
+            train_steps: 300,
+            lr: 0.05,
+            data_seed: 7,
+            train_per_class: 320,
+            test_per_class: 64,
+        }
+    }
+}
+
+impl MoleConfig {
+    /// Build from a raw config (missing keys fall back to defaults).
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let d = MoleConfig::default();
+        let geometry = match raw.get_or("mole", "geometry", "small") {
+            "small" => Geometry::SMALL,
+            "cifar" => Geometry::CIFAR_VGG16,
+            other => {
+                return Err(Error::Config(format!("unknown geometry {other:?}")))
+            }
+        };
+        Ok(Self {
+            artifacts_dir: raw.get_or("mole", "artifacts_dir", &d.artifacts_dir).to_string(),
+            geometry,
+            kappa: raw.get_usize("mole", "kappa", d.kappa)?,
+            seed: raw.get_u64("mole", "seed", d.seed)?,
+            addr: raw.get_or("net", "addr", &d.addr).to_string(),
+            max_batch: raw.get_usize("serving", "max_batch", d.max_batch)?,
+            batch_timeout_ms: raw.get_u64("serving", "batch_timeout_ms", d.batch_timeout_ms)?,
+            train_steps: raw.get_usize("train", "steps", d.train_steps)?,
+            lr: raw.get_f64("train", "lr", d.lr)?,
+            data_seed: raw.get_u64("data", "seed", d.data_seed)?,
+            train_per_class: raw.get_usize("data", "train_per_class", d.train_per_class)?,
+            test_per_class: raw.get_usize("data", "test_per_class", d.test_per_class)?,
+        })
+    }
+
+    /// Load from file, or defaults when the path doesn't exist.
+    pub fn load_or_default(path: &Path) -> Result<Self> {
+        if path.exists() {
+            Self::from_raw(&RawConfig::load(path)?)
+        } else {
+            Ok(Self::default())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# MoLe sample config
+[mole]
+geometry = "small"
+kappa = 3
+seed = 99
+
+[serving]
+max_batch = 8
+batch_timeout_ms = 5
+
+[train]
+steps = 10
+lr = 0.1
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("mole", "geometry"), Some("small"));
+        assert_eq!(raw.get_usize("mole", "kappa", 0).unwrap(), 3);
+        assert_eq!(raw.get_usize("serving", "max_batch", 0).unwrap(), 8);
+        assert_eq!(raw.get_f64("train", "lr", 0.0).unwrap(), 0.1);
+        assert_eq!(raw.get("nope", "x"), None);
+        assert_eq!(raw.get_bool("mole", "missing", true).unwrap(), true);
+    }
+
+    #[test]
+    fn typed_config_defaults_and_overrides() {
+        let cfg = MoleConfig::from_raw(&RawConfig::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.kappa, 3);
+        assert_eq!(cfg.train_steps, 10);
+        assert_eq!(cfg.max_batch, 8);
+        // default kept where unspecified
+        assert_eq!(cfg.addr, "127.0.0.1:7433");
+        assert_eq!(cfg.geometry, Geometry::SMALL);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let raw = RawConfig::parse("[mole]\nkappa = banana\n").unwrap();
+        assert!(MoleConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[mole]\ngeometry = \"weird\"\n").unwrap();
+        assert!(MoleConfig::from_raw(&raw).is_err());
+        assert!(RawConfig::parse("keyonly\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let raw = RawConfig::parse("# top\n\n[a]\nx = 1 # trailing\n").unwrap();
+        assert_eq!(raw.get("a", "x"), Some("1"));
+    }
+}

@@ -1,0 +1,295 @@
+//! Serving path: request router + dynamic batcher.
+//!
+//! Inference requests (morphed rows) arrive from many client threads; a
+//! single worker drains the queue, forms a batch of at most `max_batch`
+//! (or whatever arrived within `timeout` of the first request), routes it
+//! to the smallest AOT executable whose baked batch size fits (padding the
+//! remainder), executes through PJRT, and fans the logits back out.
+//!
+//! The PJRT client wraps raw pointers (`!Send` buffers), so the worker
+//! *owns* its [`Engine`]; clients interact through an mpsc handle — this
+//! is the standard single-executor / many-clients serving layout.
+
+use crate::manifest::Manifest;
+use crate::metrics::ServingMetrics;
+use crate::runtime::{Arg, Engine};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batcher tuning.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Upper bound on a formed batch (≤ the largest artifact batch).
+    pub max_batch: usize,
+    /// How long to hold a partial batch after the first request arrives.
+    pub timeout: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 32, timeout: Duration::from_millis(2) }
+    }
+}
+
+/// The trained model state needed for `infer_aug_*`.
+pub struct ServingModel {
+    pub cac: Tensor,
+    pub bias: Vec<f32>,
+    /// Trunk params (aug layout, conv2..fc2).
+    pub params: Vec<Tensor>,
+}
+
+struct Request {
+    row: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+/// Client handle to a running serving worker.
+#[derive(Clone)]
+pub struct ServingHandle {
+    tx: mpsc::Sender<Request>,
+    pub metrics: Arc<ServingMetrics>,
+    d_len: usize,
+    num_classes: usize,
+}
+
+impl ServingHandle {
+    /// Spawn the worker. PJRT handles are not `Send`, so the worker thread
+    /// constructs its own [`Engine`] from the (plain-data) manifest.
+    pub fn start(manifest: Manifest, model: ServingModel, cfg: BatcherConfig) -> Result<Self> {
+        let g = manifest.geometry("small")?;
+        let mut sizes = manifest.infer_batches.clone();
+        sizes.sort_unstable();
+        let largest = *sizes.last().ok_or_else(|| Error::Config("no infer batches".into()))?;
+        if cfg.max_batch > largest {
+            return Err(Error::Config(format!(
+                "max_batch {} exceeds largest artifact batch {largest}",
+                cfg.max_batch
+            )));
+        }
+        let num_classes = manifest.num_classes;
+        let metrics = Arc::new(ServingMetrics::default());
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let worker_metrics = metrics.clone();
+        let d_len = g.d_len();
+        std::thread::Builder::new()
+            .name("mole-serving".into())
+            .spawn(move || {
+                let engine = match Engine::new(manifest) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(engine, model, cfg, sizes, rx, worker_metrics, d_len, num_classes)
+            })
+            .map_err(Error::Io)?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("serving worker died during init".into()))??;
+        Ok(Self { tx, metrics, d_len, num_classes })
+    }
+
+    /// Blocking inference on one morphed row. Thread-safe; clones of the
+    /// handle share the queue.
+    pub fn infer(&self, row: &[f32]) -> Result<Vec<f32>> {
+        if row.len() != self.d_len {
+            return Err(Error::Shape(format!(
+                "infer row len {} != {}",
+                row.len(),
+                self.d_len
+            )));
+        }
+        self.metrics.requests.inc();
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { row: row.to_vec(), enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| Error::Protocol("serving worker gone".into()))?;
+        let out = reply_rx
+            .recv()
+            .map_err(|_| Error::Protocol("serving worker dropped request".into()))??;
+        self.metrics.responses.inc();
+        Ok(out)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    engine: Engine,
+    model: ServingModel,
+    cfg: BatcherConfig,
+    sizes: Vec<usize>,
+    rx: mpsc::Receiver<Request>,
+    metrics: Arc<ServingMetrics>,
+    d_len: usize,
+    _num_classes: usize,
+) {
+    // Precompile all batch variants up front (off the request path).
+    for &b in &sizes {
+        if b <= cfg.max_batch || b == sizes[0] {
+            let _ = engine.prepare(&format!("infer_aug_small_b{b}"));
+        }
+    }
+    loop {
+        // block for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all handles dropped
+        };
+        let deadline = Instant::now() + cfg.timeout;
+        let mut pending = vec![first];
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // route to the smallest executable that fits
+        let count = pending.len();
+        let bucket = *sizes
+            .iter()
+            .find(|&&b| b >= count)
+            .unwrap_or(sizes.last().unwrap());
+        let mut rows = vec![0.0f32; bucket * d_len];
+        for (i, r) in pending.iter().enumerate() {
+            rows[i * d_len..(i + 1) * d_len].copy_from_slice(&r.row);
+            metrics.queue_latency.record(r.enqueued.elapsed());
+        }
+        metrics.batches.inc();
+        metrics.batched_items.add(count as u64);
+        metrics.padding_items.add((bucket - count) as u64);
+
+        let mut args: Vec<Arg> = vec![
+            Arg::T(model.cac.clone()),
+            Arg::T(Tensor::new(&[model.bias.len()], model.bias.clone()).unwrap()),
+        ];
+        for p in &model.params {
+            args.push(Arg::T(p.clone()));
+        }
+        args.push(Arg::T(Tensor::new(&[bucket, d_len], rows).unwrap()));
+
+        let t0 = Instant::now();
+        let result = engine.exec(&format!("infer_aug_small_b{bucket}"), &args);
+        metrics.execute_latency.record(t0.elapsed());
+
+        match result {
+            Ok(out) => {
+                let logits = &out[0];
+                let nc = logits.shape()[1];
+                for (i, r) in pending.into_iter().enumerate() {
+                    let v = logits.data()[i * nc..(i + 1) * nc].to_vec();
+                    metrics.total_latency.record(r.enqueued.elapsed());
+                    let _ = r.reply.send(Ok(v));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in pending {
+                    let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::init_params;
+    use crate::manifest::Manifest;
+    use crate::rng::Rng;
+    use std::path::PathBuf;
+
+    fn handle(max_batch: usize, timeout_ms: u64) -> ServingHandle {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let manifest = Manifest::load(&dir).unwrap();
+        let g = manifest.geometry("small").unwrap();
+        let mut rng = Rng::new(11);
+        let params = init_params(&manifest.aug_params, &mut rng);
+        let model = ServingModel {
+            cac: Tensor::new(
+                &[g.d_len(), g.f_len()],
+                rng.normal_vec(g.d_len() * g.f_len(), 0.02),
+            )
+            .unwrap(),
+            bias: vec![0.0; g.beta],
+            params,
+        };
+        ServingHandle::start(
+            manifest,
+            model,
+            BatcherConfig { max_batch, timeout: Duration::from_millis(timeout_ms) },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let h = handle(8, 1);
+        let mut rng = Rng::new(0);
+        let row = rng.normal_vec(768, 1.0);
+        let logits = h.infer(&row).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(h.metrics.responses.get(), 1);
+        // wrong length rejected client-side
+        assert!(h.infer(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let h = handle(8, 20);
+        let mut threads = Vec::new();
+        for i in 0..8 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(i);
+                let row = rng.normal_vec(768, 1.0);
+                h.infer(&row).unwrap()
+            }));
+        }
+        for t in threads {
+            let logits = t.join().unwrap();
+            assert_eq!(logits.len(), 10);
+        }
+        assert_eq!(h.metrics.responses.get(), 8);
+        // with a 20ms window the 8 requests should land in very few batches
+        assert!(
+            h.metrics.batches.get() <= 4,
+            "batches={}",
+            h.metrics.batches.get()
+        );
+        assert!(h.metrics.mean_batch_size() >= 2.0);
+    }
+
+    #[test]
+    fn identical_rows_identical_logits_regardless_of_batching() {
+        let h = handle(8, 5);
+        let mut rng = Rng::new(5);
+        let row = rng.normal_vec(768, 1.0);
+        let a = h.infer(&row).unwrap();
+        let b = h.infer(&row).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! The developer node (paper Fig. 1, right side).
+//!
+//! Connects to a provider, sends its pre-trained first layer, receives the
+//! Aug-Conv matrix and the morphed training stream, and trains the trunk
+//! through the AOT artifacts — never seeing an original pixel. The same
+//! node exposes the trained model for serving ([`super::batcher`]).
+
+use super::protocol::{read_message, write_message, Message};
+use super::trainer::Trainer;
+use super::SessionInfo;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// What a completed delivery-and-training session produced.
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub session: SessionInfo,
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+    /// Trained trunk parameters (aug layout: conv2..fc2).
+    pub params: Vec<Tensor>,
+    /// The received Aug-Conv layer (for serving).
+    pub cac: Tensor,
+    pub bias: Vec<f32>,
+    pub bytes_received: u64,
+}
+
+/// The developer node. Holds the engine + the pre-trained first layer it
+/// offers to providers.
+pub struct DeveloperNode<'e> {
+    engine: &'e Engine,
+    w1: Tensor,
+    b1: Vec<f32>,
+    lr: f32,
+}
+
+impl<'e> DeveloperNode<'e> {
+    /// `w1`/`b1`: the first layer "trained on a public dataset" (Fig. 1).
+    /// In the reproduction we He-initialize it from a seed — transfer
+    /// quality of w1 affects absolute accuracy equally in all three
+    /// groups, not the equivalence property under test.
+    pub fn new(engine: &'e Engine, seed: u64, lr: f32) -> Result<Self> {
+        let m = engine.manifest();
+        let g = m.geometry("small")?;
+        let mut rng = Rng::new(seed);
+        let std = (2.0 / (g.alpha * g.p * g.p) as f64).sqrt() as f32;
+        let w1 = Tensor::new(
+            &[g.beta, g.alpha, g.p, g.p],
+            rng.normal_vec(g.beta * g.alpha * g.p * g.p, std),
+        )?;
+        let b1 = vec![0.0; g.beta];
+        Ok(Self { engine, w1, b1, lr })
+    }
+
+    pub fn first_layer(&self) -> (&Tensor, &[f32]) {
+        (&self.w1, &self.b1)
+    }
+
+    /// Run the client side of a delivery session: handshake, ship layer 1,
+    /// receive C^ac, train on the morphed stream.
+    pub fn run_session<S: Read + Write>(&self, stream: &mut S, seed: u64) -> Result<TrainOutcome> {
+        let mut bytes = 0u64;
+
+        // 1. handshake
+        let (geometry, kappa, fingerprint, num_batches, batch_size) =
+            match read_message(stream)? {
+                Message::Hello { geometry, kappa, fingerprint, num_batches, batch_size } => {
+                    (geometry, kappa, fingerprint, num_batches, batch_size)
+                }
+                other => {
+                    return Err(Error::Protocol(format!("expected Hello, got {other:?}")))
+                }
+            };
+        let m = self.engine.manifest();
+        if batch_size as usize != m.train_batch {
+            return Err(Error::Protocol(format!(
+                "provider batch size {batch_size} != artifact batch {}",
+                m.train_batch
+            )));
+        }
+
+        // 2. ship the pre-trained first layer
+        bytes += write_message(
+            stream,
+            &Message::Conv1Weights { w1: self.w1.clone(), b1: self.b1.clone() },
+        )? as u64;
+
+        // 3. receive the Aug-Conv layer
+        let (cac, bias) = match read_message(stream)? {
+            Message::AugConv { matrix, bias } => (matrix, bias),
+            other => {
+                return Err(Error::Protocol(format!("expected AugConv, got {other:?}")))
+            }
+        };
+
+        // 4. train on the morphed stream
+        let mut trainer = Trainer::new_aug(self.engine, cac.clone(), bias.clone(), seed)?;
+        let mut losses = Vec::new();
+        let mut accs = Vec::new();
+        let mut steps = 0usize;
+        loop {
+            match read_message(stream)? {
+                Message::MorphedBatch { rows, labels, .. } => {
+                    let (l, a) = trainer.step(&rows, &labels, self.lr)?;
+                    losses.push(l);
+                    accs.push(a);
+                    steps += 1;
+                    if steps % 50 == 0 {
+                        log::info!("developer: step {steps} loss={l:.4} acc={a:.3}");
+                    }
+                }
+                Message::EndOfData => break,
+                Message::Fault { msg } => {
+                    return Err(Error::Protocol(format!("provider fault: {msg}")))
+                }
+                other => {
+                    return Err(Error::Protocol(format!("unexpected {other:?}")))
+                }
+            }
+        }
+
+        Ok(TrainOutcome {
+            session: SessionInfo {
+                geometry,
+                kappa,
+                fingerprint,
+                num_batches: num_batches as usize,
+                batch_size: batch_size as usize,
+            },
+            steps,
+            losses,
+            accs,
+            params: trainer.params().to_vec(),
+            cac,
+            bias,
+            bytes_received: bytes,
+        })
+    }
+}
+
+/// Convenience: run provider + developer over a localhost TCP socket pair
+/// (the two-process deployment collapsed into two threads for tests,
+/// benches and the `provider_developer` example).
+pub fn run_tcp_session(
+    provider: std::sync::Arc<super::provider::ProviderNode>,
+    engine: &Engine,
+    plan: super::provider::StreamPlan,
+    lr: f32,
+    seed: u64,
+) -> Result<TrainOutcome> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let prov = provider;
+    let handle = std::thread::spawn(move || -> Result<()> {
+        let (mut sock, _) = listener.accept()?;
+        sock.set_nodelay(true).ok();
+        prov.run_session(&mut sock, plan, seed ^ 0xDA7A)?;
+        Ok(())
+    });
+
+    let dev = DeveloperNode::new(engine, seed, lr)?;
+    let mut sock = std::net::TcpStream::connect(addr)?;
+    sock.set_nodelay(true).ok();
+    let outcome = dev.run_session(&mut sock, seed);
+    handle
+        .join()
+        .map_err(|_| Error::Protocol("provider thread panicked".into()))??;
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::provider::{ProviderNode, StreamPlan};
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::keys::KeyBundle;
+    use crate::manifest::Manifest;
+    use crate::Geometry;
+    use std::path::PathBuf;
+
+    fn engine() -> Engine {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Engine::new(Manifest::load(&dir).unwrap()).unwrap()
+    }
+
+    /// End-to-end over TCP: handshake, C^ac transfer, morphed stream,
+    /// training steps execute, loss is finite and generally decreasing.
+    #[test]
+    fn tcp_delivery_session_trains() {
+        let eng = engine();
+        let spec = SynthSpec {
+            geometry: Geometry::SMALL,
+            num_classes: 4,
+            train_per_class: 64,
+            test_per_class: 16,
+            noise: 0.05,
+            max_shift: 1,
+            seed: 2,
+        };
+        let keys = KeyBundle::generate(Geometry::SMALL, 16, 42).unwrap();
+        let provider =
+            std::sync::Arc::new(ProviderNode::new(keys, generate(&spec)).unwrap());
+        let outcome = run_tcp_session(
+            provider,
+            &eng,
+            StreamPlan { num_batches: 8, batch_size: 64 },
+            0.05,
+            7,
+        )
+        .unwrap();
+        assert_eq!(outcome.steps, 8);
+        assert_eq!(outcome.losses.len(), 8);
+        assert!(outcome.losses.iter().all(|l| l.is_finite()));
+        // 4-class problem from scratch: after 8 steps the loss should at
+        // least move below the initial value
+        assert!(
+            outcome.losses[7] < outcome.losses[0],
+            "losses: {:?}",
+            outcome.losses
+        );
+        assert_eq!(
+            outcome.cac.shape(),
+            &[Geometry::SMALL.d_len(), Geometry::SMALL.f_len()]
+        );
+        assert_eq!(outcome.session.kappa, 16);
+    }
+}

@@ -1,0 +1,41 @@
+//! The MoLe delivery coordinator (paper Fig. 1) — the L3 system.
+//!
+//! Roles:
+//! * **Data provider** ([`provider`]): owns the sensitive dataset and the
+//!   key vault; receives the developer's pre-trained first layer, builds
+//!   the Aug-Conv matrix, morphs data, and streams it out. Runs on
+//!   commodity CPU — its hot path is the block-diagonal morph.
+//! * **Developer** ([`developer`]): receives C^ac + morphed data, trains
+//!   and serves *without ever seeing original data*; all compute runs
+//!   through the AOT artifacts via the PJRT [`crate::runtime`].
+//! * **Serving** ([`batcher`]): a dynamic batcher + artifact router for
+//!   inference requests on morphed rows, with queue/padding metrics.
+//!
+//! Transport is a length-prefixed binary protocol over TCP
+//! ([`protocol`]); the same message enums also drive the in-process
+//! pipeline used by benches (no sockets, same state machine).
+
+pub mod batcher;
+pub mod developer;
+pub mod experiment;
+pub mod protocol;
+pub mod provider;
+pub mod trainer;
+
+pub use batcher::{BatcherConfig, ServingHandle};
+pub use developer::{DeveloperNode, TrainOutcome};
+pub use protocol::Message;
+pub use provider::ProviderNode;
+pub use trainer::{TrainReport, Trainer, Variant};
+
+/// Session parameters negotiated in the handshake.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionInfo {
+    pub geometry: crate::Geometry,
+    pub kappa: usize,
+    /// Key fingerprint (identifies the key material without revealing it).
+    pub fingerprint: String,
+    /// Batches the provider will stream.
+    pub num_batches: usize,
+    pub batch_size: usize,
+}

@@ -1,0 +1,392 @@
+//! Wire protocol: length-prefixed binary frames over any Read/Write.
+//!
+//! Frame layout: `b"ML"` | u8 msg-tag | u32 payload-len | payload.
+//! Tensors encode as u8 ndim | u32 dims… | f32-LE data. The protocol
+//! carries **only** the HBC-visible surface (§4.1): morphed rows T^r, the
+//! Aug-Conv matrix C^ac, first-layer weights (public direction:
+//! developer → provider), and inference traffic. Keys never appear here.
+
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+use std::io::{Read, Write};
+
+const FRAME_MAGIC: [u8; 2] = *b"ML";
+/// Guard against hostile / corrupt length fields (C^ac for CIFAR-VGG16 is
+/// ~805 MB; cap frames at 1 GiB).
+const MAX_PAYLOAD: usize = 1 << 30;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Session handshake (provider → developer).
+    Hello {
+        geometry: Geometry,
+        kappa: usize,
+        fingerprint: String,
+        num_batches: u32,
+        batch_size: u32,
+    },
+    /// Developer's pre-trained first layer (developer → provider).
+    Conv1Weights { w1: Tensor, b1: Vec<f32> },
+    /// The Aug-Conv layer (provider → developer).
+    AugConv { matrix: Tensor, bias: Vec<f32> },
+    /// One morphed training batch (provider → developer).
+    MorphedBatch { id: u64, rows: Tensor, labels: Vec<i32> },
+    /// End of training-data stream.
+    EndOfData,
+    /// Serving: one morphed row in (client → developer).
+    InferRequest { id: u64, row: Tensor },
+    /// Serving: logits out.
+    InferResponse { id: u64, logits: Vec<f32> },
+    /// Generic acknowledgement.
+    Ack { of: u64 },
+    /// Fatal error notification.
+    Fault { msg: String },
+}
+
+impl Message {
+    fn tag(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::Conv1Weights { .. } => 2,
+            Message::AugConv { .. } => 3,
+            Message::MorphedBatch { .. } => 4,
+            Message::EndOfData => 5,
+            Message::InferRequest { .. } => 6,
+            Message::InferResponse { .. } => 7,
+            Message::Ack { .. } => 8,
+            Message::Fault { .. } => 9,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// primitive encoders
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.push(t.ndim() as u8);
+    for &d in t.shape() {
+        put_u32(out, d as u32);
+    }
+    for &v in t.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::Protocol("truncated payload".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i = self.i + n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Protocol("non-utf8 string".into()))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let nd = self.u8()? as usize;
+        if nd > 8 {
+            return Err(Error::Protocol(format!("tensor rank {nd} too large")));
+        }
+        let mut shape = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            shape.push(self.u32()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let raw = self.take(numel * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Tensor::new(&shape, data)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(Error::Protocol("trailing bytes in payload".into()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// message codec
+// ---------------------------------------------------------------------------
+
+/// Encode a message payload (without the frame header).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        Message::Hello { geometry, kappa, fingerprint, num_batches, batch_size } => {
+            put_u32(&mut out, geometry.alpha as u32);
+            put_u32(&mut out, geometry.m as u32);
+            put_u32(&mut out, geometry.beta as u32);
+            put_u32(&mut out, geometry.p as u32);
+            put_u32(&mut out, *kappa as u32);
+            put_str(&mut out, fingerprint);
+            put_u32(&mut out, *num_batches);
+            put_u32(&mut out, *batch_size);
+        }
+        Message::Conv1Weights { w1, b1 } => {
+            put_tensor(&mut out, w1);
+            put_f32s(&mut out, b1);
+        }
+        Message::AugConv { matrix, bias } => {
+            put_tensor(&mut out, matrix);
+            put_f32s(&mut out, bias);
+        }
+        Message::MorphedBatch { id, rows, labels } => {
+            put_u64(&mut out, *id);
+            put_tensor(&mut out, rows);
+            put_i32s(&mut out, labels);
+        }
+        Message::EndOfData => {}
+        Message::InferRequest { id, row } => {
+            put_u64(&mut out, *id);
+            put_tensor(&mut out, row);
+        }
+        Message::InferResponse { id, logits } => {
+            put_u64(&mut out, *id);
+            put_f32s(&mut out, logits);
+        }
+        Message::Ack { of } => put_u64(&mut out, *of),
+        Message::Fault { msg } => put_str(&mut out, msg),
+    }
+    out
+}
+
+/// Decode a message payload given its tag.
+pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
+    let mut c = Cursor { b: payload, i: 0 };
+    let msg = match tag {
+        1 => {
+            let alpha = c.u32()? as usize;
+            let m = c.u32()? as usize;
+            let beta = c.u32()? as usize;
+            let p = c.u32()? as usize;
+            Message::Hello {
+                geometry: Geometry::new(alpha, m, beta, p),
+                kappa: c.u32()? as usize,
+                fingerprint: c.str()?,
+                num_batches: c.u32()?,
+                batch_size: c.u32()?,
+            }
+        }
+        2 => Message::Conv1Weights { w1: c.tensor()?, b1: c.f32s()? },
+        3 => Message::AugConv { matrix: c.tensor()?, bias: c.f32s()? },
+        4 => Message::MorphedBatch { id: c.u64()?, rows: c.tensor()?, labels: c.i32s()? },
+        5 => Message::EndOfData,
+        6 => Message::InferRequest { id: c.u64()?, row: c.tensor()? },
+        7 => Message::InferResponse { id: c.u64()?, logits: c.f32s()? },
+        8 => Message::Ack { of: c.u64()? },
+        9 => Message::Fault { msg: c.str()? },
+        t => return Err(Error::Protocol(format!("unknown message tag {t}"))),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Write one framed message.
+pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<usize> {
+    let payload = encode(msg);
+    if payload.len() > MAX_PAYLOAD {
+        return Err(Error::Protocol(format!("payload {} too large", payload.len())));
+    }
+    w.write_all(&FRAME_MAGIC)?;
+    w.write_all(&[msg.tag()])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(7 + payload.len())
+}
+
+/// Read one framed message (blocking).
+pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
+    let mut head = [0u8; 7];
+    r.read_exact(&mut head)?;
+    if head[0..2] != FRAME_MAGIC {
+        return Err(Error::Protocol("bad frame magic".into()));
+    }
+    let tag = head[2];
+    let len = u32::from_le_bytes(head[3..7].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(Error::Protocol(format!("frame length {len} too large")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    decode(tag, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn roundtrip(msg: Message) {
+        let mut buf = Vec::new();
+        let n = write_message(&mut buf, &msg).unwrap();
+        assert_eq!(n, buf.len());
+        let mut slice = buf.as_slice();
+        let got = read_message(&mut slice).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let mut rng = Rng::new(0);
+        roundtrip(Message::Hello {
+            geometry: Geometry::SMALL,
+            kappa: 16,
+            fingerprint: "abc123".into(),
+            num_batches: 10,
+            batch_size: 64,
+        });
+        roundtrip(Message::Conv1Weights {
+            w1: Tensor::new(&[2, 3, 3, 3], rng.normal_vec(54, 1.0)).unwrap(),
+            b1: vec![0.5, -0.5],
+        });
+        roundtrip(Message::AugConv {
+            matrix: Tensor::new(&[4, 8], rng.normal_vec(32, 1.0)).unwrap(),
+            bias: vec![1.0; 8],
+        });
+        roundtrip(Message::MorphedBatch {
+            id: 7,
+            rows: Tensor::new(&[2, 5], rng.normal_vec(10, 1.0)).unwrap(),
+            labels: vec![3, 9],
+        });
+        roundtrip(Message::EndOfData);
+        roundtrip(Message::InferRequest {
+            id: 99,
+            row: Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+        });
+        roundtrip(Message::InferResponse { id: 99, logits: vec![0.1, 0.9] });
+        roundtrip(Message::Ack { of: 42 });
+        roundtrip(Message::Fault { msg: "boom".into() });
+    }
+
+    #[test]
+    fn property_roundtrip_random_batches() {
+        crate::testkit::forall(
+            77,
+            16,
+            |rng| {
+                let b = 1 + rng.below(8);
+                let d = 1 + rng.below(32);
+                let rows = crate::testkit::gen::tensor(rng, &[b, d], 1.0);
+                let labels = (0..b).map(|_| rng.below(10) as i32).collect::<Vec<_>>();
+                Message::MorphedBatch { id: rng.next_u64(), rows, labels }
+            },
+            |msg| {
+                let mut buf = Vec::new();
+                write_message(&mut buf, msg).map_err(|e| e.to_string())?;
+                let got = read_message(&mut buf.as_slice()).map_err(|e| e.to_string())?;
+                if &got == msg {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &Message::Ack { of: 1 }).unwrap();
+        // bad magic
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(read_message(&mut bad.as_slice()).is_err());
+        // bad tag
+        let mut bad = buf.clone();
+        bad[2] = 200;
+        assert!(read_message(&mut bad.as_slice()).is_err());
+        // truncated
+        assert!(read_message(&mut &buf[..5]).is_err());
+        // trailing bytes in payload
+        let mut bad = buf.clone();
+        let len = u32::from_le_bytes(bad[3..7].try_into().unwrap()) + 1;
+        bad[3..7].copy_from_slice(&len.to_le_bytes());
+        bad.push(0);
+        assert!(read_message(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut head = Vec::new();
+        head.extend_from_slice(b"ML");
+        head.push(8);
+        head.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_message(&mut head.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! The data-provider node (paper Fig. 1, left side).
+//!
+//! Owns the sensitive dataset and the key vault. Per session:
+//! 1. send `Hello` (geometry, κ, key fingerprint, stream plan);
+//! 2. receive the developer's pre-trained first layer (`Conv1Weights`);
+//! 3. build **C**^ac = **M**⁻¹·**C** + channel shuffle, send `AugConv`;
+//! 4. stream morphed training batches (`MorphedBatch`), then `EndOfData`.
+//!
+//! The provider's compute is exactly what the paper allows a "regular
+//! desktop PC": the block-diagonal morph (eq. 16) plus the one-off C^ac
+//! construction. Original pixels and key material never leave this node.
+
+use super::protocol::{read_message, write_message, Message};
+use super::SessionInfo;
+use crate::augconv::{build_aug_conv, AugConvLayer};
+use crate::data::Dataset;
+use crate::keys::KeyBundle;
+use crate::metrics::Counter;
+use crate::morph::MorphKey;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::{d2r, Error, Result};
+use std::io::{Read, Write};
+
+/// Streaming plan for one session.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamPlan {
+    pub num_batches: usize,
+    pub batch_size: usize,
+}
+
+/// The provider node.
+pub struct ProviderNode {
+    keys: KeyBundle,
+    morph_key: MorphKey,
+    dataset: Dataset,
+    pub bytes_sent: Counter,
+    pub batches_sent: Counter,
+}
+
+impl ProviderNode {
+    pub fn new(keys: KeyBundle, dataset: Dataset) -> Result<Self> {
+        let morph_key = keys.morph_key()?;
+        Ok(Self {
+            keys,
+            morph_key,
+            dataset,
+            bytes_sent: Counter::default(),
+            batches_sent: Counter::default(),
+        })
+    }
+
+    pub fn session_info(&self, plan: StreamPlan) -> SessionInfo {
+        SessionInfo {
+            geometry: self.keys.geometry,
+            kappa: self.keys.kappa,
+            fingerprint: self.keys.fingerprint(),
+            num_batches: plan.num_batches,
+            batch_size: plan.batch_size,
+        }
+    }
+
+    /// Morph a raw image batch into d2r rows (the provider hot path).
+    pub fn morph_images(&self, images: Tensor) -> Result<Tensor> {
+        let rows = d2r::unroll(images)?;
+        self.morph_key.morph(&rows)
+    }
+
+    /// Build the Aug-Conv layer from received first-layer weights.
+    pub fn build_layer(&self, w1: &Tensor, b1: &[f32]) -> Result<AugConvLayer> {
+        build_aug_conv(w1, b1, &self.morph_key, &self.keys.perm)
+    }
+
+    /// Access to the dataset (for local experiment drivers).
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// The morph key — local experiment drivers (same-process groups of
+    /// the §4.4 experiment) use this; it is NOT exposed on the wire.
+    pub fn morph_key(&self) -> &MorphKey {
+        &self.morph_key
+    }
+
+    /// Run one full delivery session over a bidirectional stream.
+    pub fn run_session<S: Read + Write>(
+        &self,
+        stream: &mut S,
+        plan: StreamPlan,
+        data_rng_seed: u64,
+    ) -> Result<()> {
+        // 1. handshake
+        let info = self.session_info(plan);
+        self.send(
+            stream,
+            &Message::Hello {
+                geometry: info.geometry,
+                kappa: info.kappa,
+                fingerprint: info.fingerprint.clone(),
+                num_batches: plan.num_batches as u32,
+                batch_size: plan.batch_size as u32,
+            },
+        )?;
+
+        // 2. developer's first layer
+        let (w1, b1) = match read_message(stream)? {
+            Message::Conv1Weights { w1, b1 } => (w1, b1),
+            other => {
+                return Err(Error::Protocol(format!(
+                    "expected Conv1Weights, got {other:?}"
+                )))
+            }
+        };
+
+        // 3. build + ship the Aug-Conv layer
+        let t0 = std::time::Instant::now();
+        let layer = self.build_layer(&w1, &b1)?;
+        log::info!(
+            "provider: built C^ac ({}x{}) in {:.1}ms",
+            layer.matrix().shape()[0],
+            layer.matrix().shape()[1],
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        self.send(
+            stream,
+            &Message::AugConv {
+                matrix: layer.matrix().clone(),
+                bias: layer.bias().to_vec(),
+            },
+        )?;
+
+        // 4. stream morphed batches
+        let mut rng = Rng::new(data_rng_seed);
+        let mut iter = self.dataset.train_batches(plan.batch_size);
+        for id in 0..plan.num_batches as u64 {
+            let batch = iter.next_batch(&mut rng);
+            let rows = self.morph_images(batch.images)?;
+            self.send(stream, &Message::MorphedBatch { id, rows, labels: batch.labels })?;
+            self.batches_sent.inc();
+        }
+        self.send(stream, &Message::EndOfData)?;
+        log::info!(
+            "provider: session done, {} batches / {} bytes",
+            self.batches_sent.get(),
+            self.bytes_sent.get()
+        );
+        Ok(())
+    }
+
+    fn send<S: Write>(&self, stream: &mut S, msg: &Message) -> Result<()> {
+        let n = write_message(stream, msg)?;
+        self.bytes_sent.add(n as u64);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::Geometry;
+
+    fn tiny_provider() -> ProviderNode {
+        let spec = SynthSpec {
+            geometry: Geometry::SMALL,
+            num_classes: 4,
+            train_per_class: 16,
+            test_per_class: 4,
+            noise: 0.05,
+            max_shift: 1,
+            seed: 5,
+        };
+        let keys = KeyBundle::generate(Geometry::SMALL, 16, 77).unwrap();
+        ProviderNode::new(keys, generate(&spec)).unwrap()
+    }
+
+    #[test]
+    fn morph_images_changes_pixels_reversibly() {
+        let p = tiny_provider();
+        let imgs = Tensor::new(
+            &[2, 3, 16, 16],
+            p.dataset().train.images.data()[..2 * 768].to_vec(),
+        )
+        .unwrap();
+        let rows = p.morph_images(imgs.clone()).unwrap();
+        let plain = d2r::unroll(imgs).unwrap();
+        assert!(rows.rms_diff(&plain).unwrap() > 0.1, "morphing is a no-op?");
+        let back = p.morph_key().unmorph(&rows).unwrap();
+        assert!(back.allclose(&plain, 1e-2, 1e-2));
+    }
+
+    #[test]
+    fn session_info_carries_fingerprint() {
+        let p = tiny_provider();
+        let info = p.session_info(StreamPlan { num_batches: 3, batch_size: 8 });
+        assert_eq!(info.kappa, 16);
+        assert_eq!(info.fingerprint.len(), 64);
+    }
+
+    /// Full in-memory session against a scripted developer side.
+    #[test]
+    fn session_over_pipe() {
+        use std::collections::VecDeque;
+
+        // duplex pipe built from two byte queues
+        struct Pipe {
+            rx: std::sync::mpsc::Receiver<Vec<u8>>,
+            tx: std::sync::mpsc::Sender<Vec<u8>>,
+            buf: VecDeque<u8>,
+        }
+        impl Read for Pipe {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                while self.buf.len() < out.len() {
+                    match self.rx.recv() {
+                        Ok(chunk) => self.buf.extend(chunk),
+                        Err(_) => break,
+                    }
+                }
+                let n = out.len().min(self.buf.len());
+                for b in out.iter_mut().take(n) {
+                    *b = self.buf.pop_front().unwrap();
+                }
+                Ok(n)
+            }
+        }
+        impl Write for Pipe {
+            fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+                self.tx.send(data.to_vec()).ok();
+                Ok(data.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let (a2b_tx, a2b_rx) = std::sync::mpsc::channel();
+        let (b2a_tx, b2a_rx) = std::sync::mpsc::channel();
+        let mut provider_side =
+            Pipe { rx: b2a_rx, tx: a2b_tx, buf: VecDeque::new() };
+        let mut dev_side = Pipe { rx: a2b_rx, tx: b2a_tx, buf: VecDeque::new() };
+
+        let handle = std::thread::spawn(move || {
+            let p = tiny_provider();
+            p.run_session(
+                &mut provider_side,
+                StreamPlan { num_batches: 2, batch_size: 8 },
+                1,
+            )
+            .unwrap();
+            (p.batches_sent.get(), p.bytes_sent.get())
+        });
+
+        // scripted developer
+        let g = Geometry::SMALL;
+        let hello = read_message(&mut dev_side).unwrap();
+        assert!(matches!(hello, Message::Hello { kappa: 16, .. }));
+        let mut rng = Rng::new(9);
+        let w1 = Tensor::new(
+            &[g.beta, g.alpha, 3, 3],
+            rng.normal_vec(g.beta * g.alpha * 9, 0.3),
+        )
+        .unwrap();
+        write_message(
+            &mut dev_side,
+            &Message::Conv1Weights { w1, b1: vec![0.0; g.beta] },
+        )
+        .unwrap();
+        let aug = read_message(&mut dev_side).unwrap();
+        match aug {
+            Message::AugConv { matrix, bias } => {
+                assert_eq!(matrix.shape(), &[g.d_len(), g.f_len()]);
+                assert_eq!(bias.len(), g.beta);
+            }
+            other => panic!("expected AugConv, got {other:?}"),
+        }
+        let mut batches = 0;
+        loop {
+            match read_message(&mut dev_side).unwrap() {
+                Message::MorphedBatch { rows, labels, .. } => {
+                    assert_eq!(rows.shape(), &[8, g.d_len()]);
+                    assert_eq!(labels.len(), 8);
+                    batches += 1;
+                }
+                Message::EndOfData => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(batches, 2);
+        let (sent, bytes) = handle.join().unwrap();
+        assert_eq!(sent, 2);
+        assert!(bytes > 0);
+    }
+}

@@ -1,0 +1,325 @@
+//! Developer-side training driver: owns parameters + momenta as rust
+//! tensors and advances them by executing the AOT `train_step_*` artifacts
+//! through the PJRT engine. The paper's three §4.4 experiment groups are
+//! the three [`Variant`]s.
+
+use crate::data::Batch;
+use crate::manifest::ParamSpec;
+use crate::rng::Rng;
+use crate::runtime::{Arg, Engine};
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+
+/// The §4.4 experiment groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Original network on original images (group 1).
+    Base,
+    /// Aug-Conv first layer on morphed rows (group 2).
+    Aug,
+    /// Original network fed morphed images — the sanity-check control
+    /// (group 3). Structurally identical to `Base` (same artifact); the
+    /// caller feeds morphed pixels.
+    NoAug,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Base => "base",
+            Variant::Aug => "aug",
+            Variant::NoAug => "noaug",
+        }
+    }
+}
+
+/// Initialize parameters from the manifest spec (He / zero), f32.
+pub fn init_params(specs: &[ParamSpec], rng: &mut Rng) -> Vec<Tensor> {
+    specs
+        .iter()
+        .map(|s| {
+            if s.init == "he" {
+                let std = (2.0 / s.fan_in as f64).sqrt() as f32;
+                Tensor::new(&s.shape, rng.normal_vec(s.numel(), std)).unwrap()
+            } else {
+                Tensor::zeros(&s.shape)
+            }
+        })
+        .collect()
+}
+
+/// Summary of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub variant: &'static str,
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    pub wall_secs: f64,
+}
+
+impl TrainReport {
+    /// Mean training accuracy over the last `k` recorded steps.
+    pub fn tail_train_acc(&self, k: usize) -> f32 {
+        let n = self.accs.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let k = k.min(n);
+        self.accs[n - k..].iter().sum::<f32>() / k as f32
+    }
+}
+
+/// The training state machine.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    variant: Variant,
+    geometry: Geometry,
+    params: Vec<Tensor>,
+    momenta: Vec<Tensor>,
+    /// Aug variant: the fixed Aug-Conv matrix + permuted bias.
+    aug: Option<(Tensor, Vec<f32>)>,
+    train_artifact: String,
+    eval_artifact: String,
+    batch: usize,
+}
+
+impl<'e> Trainer<'e> {
+    /// Construct for the base/noaug groups (trainable conv1).
+    pub fn new_base(engine: &'e Engine, variant: Variant, seed: u64) -> Result<Self> {
+        if variant == Variant::Aug {
+            return Err(Error::Config("use new_aug for the aug variant".into()));
+        }
+        let m = engine.manifest();
+        let g = m.geometry("small")?;
+        let mut rng = Rng::new(seed);
+        let params = init_params(&m.base_params, &mut rng);
+        let momenta = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        Ok(Self {
+            engine,
+            variant,
+            geometry: g,
+            params,
+            momenta,
+            aug: None,
+            train_artifact: format!("train_step_base_small_b{}", m.train_batch),
+            eval_artifact: format!("eval_base_small_b{}", m.train_batch),
+            batch: m.train_batch,
+        })
+    }
+
+    /// Construct for the Aug-Conv group: C^ac + permuted bias are fixed
+    /// inputs, only the trunk (conv2…fc2) trains.
+    pub fn new_aug(
+        engine: &'e Engine,
+        cac: Tensor,
+        bias: Vec<f32>,
+        seed: u64,
+    ) -> Result<Self> {
+        let m = engine.manifest();
+        let g = m.geometry("small")?;
+        if cac.shape() != [g.d_len(), g.f_len()] || bias.len() != g.beta {
+            return Err(Error::Shape(format!(
+                "aug trainer: C^ac {:?} bias {}",
+                cac.shape(),
+                bias.len()
+            )));
+        }
+        let mut rng = Rng::new(seed);
+        let params = init_params(&m.aug_params, &mut rng);
+        let momenta = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        Ok(Self {
+            engine,
+            variant: Variant::Aug,
+            geometry: g,
+            params,
+            momenta,
+            aug: Some((cac, bias)),
+            train_artifact: format!("train_step_aug_small_b{}", m.train_batch),
+            eval_artifact: format!("eval_aug_small_b{}", m.train_batch),
+            batch: m.train_batch,
+        })
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Expected input for one step: images [B,α,m,m] for base/noaug, rows
+    /// [B,αm²] for aug.
+    fn check_x(&self, x: &Tensor) -> Result<()> {
+        let g = &self.geometry;
+        let want: Vec<usize> = match self.variant {
+            Variant::Aug => vec![self.batch, g.d_len()],
+            _ => vec![self.batch, g.alpha, g.m, g.m],
+        };
+        if x.shape() != want.as_slice() {
+            return Err(Error::Shape(format!(
+                "trainer x {:?}, want {:?}",
+                x.shape(),
+                want
+            )));
+        }
+        Ok(())
+    }
+
+    fn fixed_args(&self) -> Vec<Arg> {
+        match &self.aug {
+            Some((cac, bias)) => vec![
+                Arg::T(cac.clone()),
+                Arg::T(Tensor::new(&[bias.len()], bias.clone()).unwrap()),
+            ],
+            None => vec![],
+        }
+    }
+
+    /// One SGD+momentum step; returns (loss, acc) on the batch.
+    pub fn step(&mut self, x: &Tensor, y: &[i32], lr: f32) -> Result<(f32, f32)> {
+        self.check_x(x)?;
+        if y.len() != self.batch {
+            return Err(Error::Shape(format!("labels {} != batch {}", y.len(), self.batch)));
+        }
+        let mut args = self.fixed_args();
+        for p in &self.params {
+            args.push(Arg::T(p.clone()));
+        }
+        for v in &self.momenta {
+            args.push(Arg::T(v.clone()));
+        }
+        args.push(Arg::T(x.clone()));
+        args.push(Arg::I(y.to_vec()));
+        args.push(Arg::S(lr));
+        let mut out = self.engine.exec(&self.train_artifact, &args)?;
+        let np = self.params.len();
+        if out.len() != 2 * np + 2 {
+            return Err(Error::Runtime(format!(
+                "train_step returned {} outputs, expected {}",
+                out.len(),
+                2 * np + 2
+            )));
+        }
+        let acc = out.pop().unwrap().data()[0];
+        let loss = out.pop().unwrap().data()[0];
+        let momenta: Vec<Tensor> = out.split_off(np);
+        self.params = out;
+        self.momenta = momenta;
+        Ok((loss, acc))
+    }
+
+    /// Evaluate (loss, acc) on one labelled batch of the training size.
+    pub fn eval_batch(&self, x: &Tensor, y: &[i32]) -> Result<(f32, f32)> {
+        self.check_x(x)?;
+        let mut args = self.fixed_args();
+        for p in &self.params {
+            args.push(Arg::T(p.clone()));
+        }
+        args.push(Arg::T(x.clone()));
+        args.push(Arg::I(y.to_vec()));
+        let out = self.engine.exec(&self.eval_artifact, &args)?;
+        Ok((out[0].data()[0], out[1].data()[0]))
+    }
+
+    /// Evaluate over a whole split, chunked into training-size batches
+    /// (remainder dropped). `transform` maps raw images to the variant's
+    /// input (identity / morph / morph+unroll).
+    pub fn evaluate(
+        &self,
+        data: &Batch,
+        transform: &dyn Fn(Tensor) -> Result<Tensor>,
+    ) -> Result<(f32, f32)> {
+        let shape = data.images.shape();
+        let per = shape[1] * shape[2] * shape[3];
+        let n = data.len() / self.batch;
+        if n == 0 {
+            return Err(Error::Shape("test split smaller than one batch".into()));
+        }
+        let (mut tl, mut ta) = (0.0f64, 0.0f64);
+        for c in 0..n {
+            let lo = c * self.batch;
+            let imgs = Tensor::new(
+                &[self.batch, shape[1], shape[2], shape[3]],
+                data.images.data()[lo * per..(lo + self.batch) * per].to_vec(),
+            )?;
+            let x = transform(imgs)?;
+            let y = &data.labels[lo..lo + self.batch];
+            let (l, a) = self.eval_batch(&x, y)?;
+            tl += l as f64;
+            ta += a as f64;
+        }
+        Ok(((tl / n as f64) as f32, (ta / n as f64) as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn engine() -> Engine {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Engine::new(Manifest::load(&dir).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn init_params_statistics() {
+        let m = Manifest::load(
+            &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        let mut rng = Rng::new(1);
+        let ps = init_params(&m.base_params, &mut rng);
+        assert_eq!(ps.len(), 10);
+        // he layers have ~std sqrt(2/fan), zero layers are zero
+        let w1 = &ps[0];
+        let std: f64 = (w1.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / w1.numel() as f64)
+            .sqrt();
+        let want = (2.0f64 / m.base_params[0].fan_in as f64).sqrt();
+        assert!((std - want).abs() / want < 0.25, "std={std} want={want}");
+        assert!(ps[1].data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn base_step_reduces_loss_on_fixed_batch() {
+        let eng = engine();
+        let mut t = Trainer::new_base(&eng, Variant::Base, 3).unwrap();
+        let mut rng = Rng::new(4);
+        let g = crate::Geometry::SMALL;
+        let x = Tensor::new(&[64, g.alpha, g.m, g.m], rng.normal_vec(64 * g.d_len(), 0.5))
+            .unwrap();
+        let y: Vec<i32> = (0..64).map(|_| rng.below(10) as i32).collect();
+        let (first, _) = t.step(&x, &y, 0.05).unwrap();
+        let mut last = first;
+        for _ in 0..8 {
+            let (l, _) = t.step(&x, &y, 0.05).unwrap();
+            last = l;
+        }
+        assert!(
+            last < first * 0.8,
+            "loss did not decrease: {first} -> {last}"
+        );
+        // eval agrees with the training batch after memorization begins
+        let (el, ea) = t.eval_batch(&x, &y).unwrap();
+        assert!(el.is_finite() && (0.0..=1.0).contains(&ea));
+    }
+
+    #[test]
+    fn shape_validation() {
+        let eng = engine();
+        let mut t = Trainer::new_base(&eng, Variant::Base, 3).unwrap();
+        let x = Tensor::zeros(&[2, 3, 16, 16]);
+        assert!(t.step(&x, &[0, 1], 0.1).is_err());
+        assert!(Trainer::new_base(&eng, Variant::Aug, 0).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! d2r — data to row vector (paper §3.1).
+//!
+//! Converts the first convolutional layer into a vector–matrix product:
+//! the image `D` [α, m, m] unrolls to a row `D^r` [1, αm²] (fig. 2), the
+//! conv kernel becomes the sparse-structured matrix **C** [αm², βn²]
+//! (eq. 1), and `D^r · C` equals the unrolled convolution output (fig. 3).
+//!
+//! Layout rules (all zero-based, matching `python/compile/kernels/ref.py`
+//! exactly — the testvec.json integration test pins both):
+//! * row index  y = m²·i + m·(input row) + (input col)   — channel-major
+//! * col index  x = n²·j + n·c + d                        — output (c, d)
+//! * SAME zero padding with offset (p−1)/2.
+
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+
+/// Unroll a batch of NCHW images [B, α, m, m] to d2r rows [B, αm²].
+///
+/// The paper's fig.-2 order is exactly C-order flattening of NCHW, so this
+/// is a reshape (zero-copy of the data buffer).
+pub fn unroll(x: Tensor) -> Result<Tensor> {
+    if x.ndim() != 4 {
+        return Err(Error::Shape(format!(
+            "unroll wants [B, alpha, m, m], got {:?}",
+            x.shape()
+        )));
+    }
+    let b = x.shape()[0];
+    let d = x.shape()[1] * x.shape()[2] * x.shape()[3];
+    x.reshape(&[b, d])
+}
+
+/// Re-roll d2r rows [B, αm²] back to images [B, α, m, m].
+pub fn roll(x: Tensor, alpha: usize, m: usize) -> Result<Tensor> {
+    if x.ndim() != 2 || x.shape()[1] != alpha * m * m {
+        return Err(Error::Shape(format!(
+            "roll wants [B, {}], got {:?}",
+            alpha * m * m,
+            x.shape()
+        )));
+    }
+    let b = x.shape()[0];
+    x.reshape(&[b, alpha, m, m])
+}
+
+/// Re-roll feature rows [B, βn²] to feature maps [B, β, n, n].
+pub fn roll_features(f: Tensor, beta: usize, n: usize) -> Result<Tensor> {
+    roll(f, beta, n)
+}
+
+/// Build the d2r convolution matrix **C** (eq. 1) for SAME zero padding.
+///
+/// `w` is the OIHW kernel tensor [β, α, p, p]. Returns C [αm², βn²] such
+/// that `unroll(x) · C == unroll(conv_same(x, w))`.
+pub fn build_c_matrix(w: &Tensor, g: &Geometry) -> Result<Tensor> {
+    if w.shape() != [g.beta, g.alpha, g.p, g.p] {
+        return Err(Error::Shape(format!(
+            "kernel shape {:?} != [beta={}, alpha={}, p={}, p={}]",
+            w.shape(),
+            g.beta,
+            g.alpha,
+            g.p,
+            g.p
+        )));
+    }
+    let (m, n, p) = (g.m, g.n(), g.p);
+    let off = (p - 1) / 2;
+    let mut c = Tensor::zeros(&[g.d_len(), g.f_len()]);
+    let f_len = g.f_len();
+    for j in 0..g.beta {
+        for i in 0..g.alpha {
+            for a in 0..p {
+                for b in 0..p {
+                    let kv = w.data()[((j * g.alpha + i) * p + a) * p + b];
+                    if kv == 0.0 {
+                        continue;
+                    }
+                    // output pixel (c, d); input pixel (c + a - off, d + b - off)
+                    for cc in 0..n {
+                        let rr = cc as isize + a as isize - off as isize;
+                        if rr < 0 || rr >= m as isize {
+                            continue;
+                        }
+                        let row_base = m * m * i + m * rr as usize;
+                        let col_base = n * n * j + n * cc;
+                        for dd in 0..n {
+                            let ic = dd as isize + b as isize - off as isize;
+                            if ic < 0 || ic >= m as isize {
+                                continue;
+                            }
+                            let y = row_base + ic as usize;
+                            let x = col_base + dd;
+                            c.data_mut()[y * f_len + x] = kv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Expand the first-layer bias [β] to the unrolled feature layout [βn²]
+/// (each channel's bias repeated n² times).
+pub fn expand_bias(bias: &[f32], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(bias.len() * n * n);
+    for &b in bias {
+        out.extend(std::iter::repeat(b).take(n * n));
+    }
+    out
+}
+
+/// Number of non-zero entries C will contain (for overhead accounting and
+/// sparsity-aware benchmarks): each output pixel column holds one weight
+/// per in-channel kernel tap that lands inside the image.
+pub fn c_matrix_nnz(g: &Geometry) -> usize {
+    let (m, p) = (g.m as isize, g.p as isize);
+    let off = (p - 1) / 2;
+    let mut taps = 0usize;
+    for c in 0..m {
+        for d in 0..m {
+            for a in 0..p {
+                for b in 0..p {
+                    let rr = c + a - off;
+                    let cc = d + b - off;
+                    if rr >= 0 && rr < m && cc >= 0 && cc < m {
+                        taps += 1;
+                    }
+                }
+            }
+        }
+    }
+    taps * g.alpha * g.beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::nn::conv2d_same;
+    use crate::rng::Rng;
+
+    #[test]
+    fn unroll_roll_roundtrip() {
+        let mut r = Rng::new(0);
+        let x = Tensor::new(&[2, 3, 4, 4], r.normal_vec(96, 1.0)).unwrap();
+        let rows = unroll(x.clone()).unwrap();
+        assert_eq!(rows.shape(), &[2, 48]);
+        // channel-major: element (b=1, i=2, r=3, c=1) is at 2*16+3*4+1 = 45
+        assert_eq!(rows.at2(1, 45), x.at4(1, 2, 3, 1));
+        let back = roll(rows, 3, 4).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn c_matrix_matches_direct_conv() {
+        // property sweep over geometries
+        for (alpha, m, beta, p, seed) in
+            [(1, 4, 1, 3, 1u64), (2, 6, 3, 3, 2), (3, 8, 4, 5, 3), (2, 5, 2, 1, 4)]
+        {
+            let g = Geometry::new(alpha, m, beta, p);
+            let mut r = Rng::new(seed);
+            let w =
+                Tensor::new(&[beta, alpha, p, p], r.normal_vec(beta * alpha * p * p, 1.0))
+                    .unwrap();
+            let x = Tensor::new(&[2, alpha, m, m], r.normal_vec(2 * g.d_len(), 1.0))
+                .unwrap();
+            let want = unroll(conv2d_same(&x, &w, None).unwrap()).unwrap();
+            let c = build_c_matrix(&w, &g).unwrap();
+            let got = gemm(&unroll(x).unwrap(), &c).unwrap();
+            assert!(
+                got.allclose(&want, 1e-3, 1e-3),
+                "geometry {g:?}: d2r != direct conv"
+            );
+        }
+    }
+
+    #[test]
+    fn c_matrix_shape_and_sparsity() {
+        let g = Geometry::new(2, 6, 3, 3);
+        let mut r = Rng::new(9);
+        let w = Tensor::new(&[3, 2, 3, 3], r.normal_vec(54, 1.0)).unwrap();
+        let c = build_c_matrix(&w, &g).unwrap();
+        assert_eq!(c.shape(), &[g.d_len(), g.f_len()]);
+        let nnz = c.data().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, c_matrix_nnz(&g));
+        // each column has at most alpha*p^2 non-zeros
+        let f_len = g.f_len();
+        for x in 0..f_len {
+            let col_nnz = (0..g.d_len())
+                .filter(|&y| c.data()[y * f_len + x] != 0.0)
+                .count();
+            assert!(col_nnz <= g.alpha * g.p * g.p);
+        }
+    }
+
+    #[test]
+    fn expand_bias_layout() {
+        let b = expand_bias(&[1.0, 2.0], 2);
+        assert_eq!(b, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn kernel_shape_validated() {
+        let g = Geometry::SMALL;
+        let w = Tensor::zeros(&[2, 2, 3, 3]);
+        assert!(build_c_matrix(&w, &g).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Procedural photo-like images + PGM/PPM export.
+//!
+//! Fig. 4(b) and fig. 7 use real photographs; offline we substitute
+//! multi-octave value noise (the classic "plasma/fractal" texture), which
+//! shares the property SSIM-vs-κ depends on: strong spatial
+//! autocorrelation with energy across scales. Absolute SSIM values differ
+//! from the paper's cat photos; the monotone κ ↔ SSIM trade-off shape is
+//! preserved (DESIGN.md §5).
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Smooth interpolation for value noise.
+fn smoothstep(t: f64) -> f64 {
+    t * t * (3.0 - 2.0 * t)
+}
+
+/// One octave of value noise on an `res`×`res` lattice, bilinear-smooth.
+fn octave(m: usize, res: usize, rng: &mut Rng, out: &mut [f64], amp: f64) {
+    let lattice: Vec<f64> = (0..(res + 1) * (res + 1)).map(|_| rng.f64()).collect();
+    for y in 0..m {
+        for x in 0..m {
+            let fy = y as f64 / m as f64 * res as f64;
+            let fx = x as f64 / m as f64 * res as f64;
+            let (iy, ix) = (fy as usize, fx as usize);
+            let (ty, tx) = (smoothstep(fy - iy as f64), smoothstep(fx - ix as f64));
+            let l = |yy: usize, xx: usize| lattice[yy * (res + 1) + xx];
+            let top = l(iy, ix) * (1.0 - tx) + l(iy, ix + 1) * tx;
+            let bot = l(iy + 1, ix) * (1.0 - tx) + l(iy + 1, ix + 1) * tx;
+            out[y * m + x] += amp * (top * (1.0 - ty) + bot * ty);
+        }
+    }
+}
+
+/// Generate a photo-like image [channels, m, m] in [0, 1]: multi-octave
+/// value noise plus a gentle illumination gradient.
+pub fn photo_like(channels: usize, m: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0f32; channels * m * m];
+    for ch in 0..channels {
+        let mut acc = vec![0.0f64; m * m];
+        let mut amp = 0.5;
+        let mut res = 2usize;
+        while res < m {
+            octave(m, res, &mut rng, &mut acc, amp);
+            amp *= 0.5;
+            res *= 2;
+        }
+        // illumination gradient
+        let gy = rng.f64() - 0.5;
+        let gx = rng.f64() - 0.5;
+        for y in 0..m {
+            for x in 0..m {
+                let g = 0.2 * (gy * y as f64 / m as f64 + gx * x as f64 / m as f64);
+                let v = (acc[y * m + x] + g).clamp(0.0, 1.0);
+                data[ch * m * m + y * m + x] = v as f32;
+            }
+        }
+    }
+    Tensor::new(&[channels, m, m], data).unwrap()
+}
+
+/// Write a single-channel [h, w] tensor as binary PGM (values clamped to
+/// [0, 1] then scaled to 8 bits).
+pub fn write_pgm(path: &Path, img: &Tensor) -> Result<()> {
+    if img.ndim() != 2 {
+        return Err(Error::Shape("write_pgm wants [H, W]".into()));
+    }
+    let (h, w) = (img.shape()[0], img.shape()[1]);
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = img
+        .data()
+        .iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Write a 3-channel [3, h, w] tensor as binary PPM.
+pub fn write_ppm(path: &Path, img: &Tensor) -> Result<()> {
+    if img.ndim() != 3 || img.shape()[0] != 3 {
+        return Err(Error::Shape("write_ppm wants [3, H, W]".into()));
+    }
+    let (h, w) = (img.shape()[1], img.shape()[2]);
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    let mut bytes = Vec::with_capacity(h * w * 3);
+    for y in 0..h {
+        for x in 0..w {
+            for c in 0..3 {
+                let v = img.data()[c * h * w + y * w + x];
+                bytes.push((v.clamp(0.0, 1.0) * 255.0).round() as u8);
+            }
+        }
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Normalize an arbitrary-range plane to [0, 1] for visualization.
+pub fn normalize_for_display(img: &Tensor) -> Tensor {
+    let mn = img.data().iter().cloned().fold(f32::INFINITY, f32::min);
+    let mx = img.data().iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (mx - mn).max(1e-9);
+    let data = img.data().iter().map(|&v| (v - mn) / span).collect();
+    Tensor::new(img.shape(), data).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssim::ssim_plane;
+
+    #[test]
+    fn photo_like_in_range_and_deterministic() {
+        let a = photo_like(3, 32, 42);
+        assert_eq!(a.shape(), &[3, 32, 32]);
+        assert!(a.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let b = photo_like(3, 32, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn photo_like_is_spatially_correlated() {
+        // neighbouring pixels must correlate far more than random pairs —
+        // the "natural image" property fig. 4(b) depends on
+        let img = photo_like(1, 64, 7);
+        let m = 64;
+        let mut neigh = 0.0f64;
+        let mut cnt = 0;
+        for y in 0..m {
+            for x in 0..m - 1 {
+                let d = img.data()[y * m + x] - img.data()[y * m + x + 1];
+                neigh += (d as f64).powi(2);
+                cnt += 1;
+            }
+        }
+        neigh /= cnt as f64;
+        let var = {
+            let mean: f64 =
+                img.data().iter().map(|&v| v as f64).sum::<f64>() / (m * m) as f64;
+            img.data().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>()
+                / (m * m) as f64
+        };
+        assert!(
+            neigh < var * 0.5,
+            "no spatial correlation: neigh={neigh:.4} var={var:.4}"
+        );
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_images() {
+        let a = photo_like(1, 32, 1);
+        let b = photo_like(1, 32, 2);
+        let h = 32;
+        let pa = Tensor::new(&[h, h], a.data().to_vec()).unwrap();
+        let pb = Tensor::new(&[h, h], b.data().to_vec()).unwrap();
+        assert!(ssim_plane(&pa, &pb, 1.0).unwrap() < 0.9);
+    }
+
+    #[test]
+    fn pgm_ppm_roundtrip_headers() {
+        let dir = std::env::temp_dir();
+        let img = photo_like(1, 16, 3).reshape(&[16, 16]).unwrap();
+        let p = dir.join("mole_test.pgm");
+        write_pgm(&p, &img).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n16 16\n255\n"));
+        assert_eq!(bytes.len(), 13 + 256);
+
+        let rgb = photo_like(3, 16, 4);
+        let p = dir.join("mole_test.ppm");
+        write_ppm(&p, &rgb).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n16 16\n255\n"));
+        assert_eq!(bytes.len(), 13 + 256 * 3);
+    }
+
+    #[test]
+    fn normalize_spans_unit() {
+        let t = Tensor::new(&[2, 2], vec![-3.0, 1.0, 5.0, 0.0]).unwrap();
+        let n = normalize_for_display(&t);
+        assert_eq!(n.data()[0], 0.0);
+        assert_eq!(n.data()[2], 1.0);
+    }
+}

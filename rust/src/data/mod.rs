@@ -1,0 +1,137 @@
+//! Datasets and images.
+//!
+//! * [`synth`] — the synthetic CIFAR-like dataset that substitutes for
+//!   CIFAR-10/100 in the §4.4 experiment (see DESIGN.md §5): per-class
+//!   smooth random fields + per-sample jitter + noise, so that class
+//!   identity lives in *spatial structure* — exactly what morphing
+//!   scrambles and the Aug-Conv layer restores.
+//! * [`images`] — procedural photo-like images for the fig. 4(b)/fig. 7
+//!   SSIM experiments, plus PGM/PPM export for eyeballing results.
+
+pub mod images;
+pub mod synth;
+
+use crate::tensor::Tensor;
+
+/// A labelled image batch (NCHW images + integer class labels).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// A train/test split of labelled data.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train: Batch,
+    pub test: Batch,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    /// Iterate mini-batches of exactly `bs` samples from the training
+    /// split, cycling and reshuffling per epoch with the given rng.
+    pub fn train_batches(&self, bs: usize) -> BatchIter<'_> {
+        BatchIter { ds: self, bs, order: Vec::new(), pos: 0, epoch: 0 }
+    }
+}
+
+/// Infinite shuffled mini-batch iterator over the training split.
+pub struct BatchIter<'a> {
+    ds: &'a Dataset,
+    bs: usize,
+    order: Vec<usize>,
+    pos: usize,
+    epoch: u64,
+}
+
+impl<'a> BatchIter<'a> {
+    /// Next mini-batch (always full-size; reshuffles at epoch ends).
+    pub fn next_batch(&mut self, rng: &mut crate::rng::Rng) -> Batch {
+        let n = self.ds.train.len();
+        assert!(n >= self.bs, "dataset smaller than batch size");
+        let shape = self.ds.train.images.shape();
+        let per = shape[1] * shape[2] * shape[3];
+        let mut data = Vec::with_capacity(self.bs * per);
+        let mut labels = Vec::with_capacity(self.bs);
+        for _ in 0..self.bs {
+            if self.pos >= self.order.len() {
+                self.order = rng.permutation(n);
+                self.pos = 0;
+                self.epoch += 1;
+            }
+            let idx = self.order[self.pos];
+            self.pos += 1;
+            data.extend_from_slice(&self.ds.train.images.data()[idx * per..][..per]);
+            labels.push(self.ds.train.labels[idx]);
+        }
+        let images =
+            Tensor::new(&[self.bs, shape[1], shape[2], shape[3]], data).unwrap();
+        Batch { images, labels }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny_dataset() -> Dataset {
+        let n = 10;
+        let images = Tensor::new(
+            &[n, 1, 2, 2],
+            (0..n * 4).map(|v| v as f32).collect(),
+        )
+        .unwrap();
+        let labels = (0..n as i32).collect();
+        Dataset {
+            train: Batch { images: images.clone(), labels },
+            test: Batch { images, labels: (0..n as i32).collect() },
+            num_classes: 10,
+        }
+    }
+
+    #[test]
+    fn batches_cycle_and_cover() {
+        let ds = tiny_dataset();
+        let mut it = ds.train_batches(4);
+        let mut rng = Rng::new(0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10 {
+            let b = it.next_batch(&mut rng);
+            assert_eq!(b.len(), 4);
+            for &l in &b.labels {
+                seen.insert(l);
+            }
+        }
+        // 40 draws over 10 samples: everything must appear
+        assert_eq!(seen.len(), 10);
+        assert!(it.epoch() >= 3);
+    }
+
+    #[test]
+    fn batch_images_match_labels() {
+        let ds = tiny_dataset();
+        let mut it = ds.train_batches(2);
+        let mut rng = Rng::new(1);
+        let b = it.next_batch(&mut rng);
+        for (i, &l) in b.labels.iter().enumerate() {
+            // image for label l starts with value 4*l (constructed above)
+            assert_eq!(b.images.data()[i * 4], (4 * l) as f32);
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Crate-wide error type.
+
+/// Unified error for the MoLe crate.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Geometry constraint violated (κ divisibility, shape mismatch …).
+    #[error("geometry error: {0}")]
+    Geometry(String),
+
+    /// Shape mismatch in tensor/linalg operations.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// A matrix that must be invertible is (numerically) singular.
+    #[error("singular matrix: {0}")]
+    Singular(String),
+
+    /// Key-vault / key-material errors (missing key, bad magic, tamper).
+    #[error("key error: {0}")]
+    Key(String),
+
+    /// Delivery-protocol framing or state-machine violations.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Artifact manifest problems (missing artifact, bad signature).
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// PJRT runtime failures (compile, execute, literal conversion).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// JSON parse errors (mini parser in [`crate::json`]).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Configuration file / CLI argument errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Anything I/O.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbled up from the xla crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Shape("expected [2,3] got [3,2]".into());
+        assert!(e.to_string().contains("[2,3]"));
+        let e = Error::Json { offset: 12, msg: "bad token".into() };
+        assert!(e.to_string().contains("12"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

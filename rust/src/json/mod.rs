@@ -1,0 +1,424 @@
+//! Minimal JSON parser/writer (serde is unavailable in the offline build).
+//!
+//! Parses the `artifacts/manifest.json` and `artifacts/testvec.json` files
+//! written by the python AOT pipeline, and serializes the coordinator's
+//! metrics reports. Supports the full JSON grammar except `\u` surrogate
+//! pairs beyond the BMP (not produced by our writers).
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => Err(Error::Json { offset: 0, msg: format!("expected number, got {self:?}") }),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            return Err(Error::Json { offset: 0, msg: format!("expected usize, got {f}") });
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err(Error::Json { offset: 0, msg: format!("expected string, got {self:?}") }),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            _ => Err(Error::Json { offset: 0, msg: "expected array".into() }),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            _ => Err(Error::Json { offset: 0, msg: "expected object".into() }),
+        }
+    }
+
+    /// Object field access with a useful error message.
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.as_obj()?.get(key).ok_or_else(|| Error::Json {
+            offset: 0,
+            msg: format!("missing key {key:?}"),
+        })
+    }
+
+    /// Convenience: array of numbers as Vec<f32>.
+    pub fn as_f32_vec(&self) -> Result<Vec<f32>> {
+        self.as_arr()?.iter().map(|v| v.as_f64().map(|f| f as f32)).collect()
+    }
+
+    /// Convenience: array of numbers as Vec<usize>.
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    /// Flatten an arbitrarily nested numeric array (n-d tensors in
+    /// testvec.json) into (flat data, shape).
+    pub fn as_tensor(&self) -> Result<(Vec<f32>, Vec<usize>)> {
+        let mut shape = Vec::new();
+        let mut cur = self;
+        loop {
+            match cur {
+                Value::Arr(a) => {
+                    shape.push(a.len());
+                    if a.is_empty() {
+                        break;
+                    }
+                    cur = &a[0];
+                }
+                Value::Num(_) => break,
+                _ => {
+                    return Err(Error::Json { offset: 0, msg: "not a tensor".into() })
+                }
+            }
+        }
+        let mut flat = Vec::new();
+        fn walk(v: &Value, depth: usize, shape: &[usize], out: &mut Vec<f32>) -> Result<()> {
+            match v {
+                Value::Arr(a) => {
+                    if depth >= shape.len() || a.len() != shape[depth] {
+                        return Err(Error::Json { offset: 0, msg: "ragged tensor".into() });
+                    }
+                    for e in a {
+                        walk(e, depth + 1, shape, out)?;
+                    }
+                    Ok(())
+                }
+                Value::Num(n) => {
+                    if depth != shape.len() {
+                        return Err(Error::Json { offset: 0, msg: "ragged tensor".into() });
+                    }
+                    out.push(*n as f32);
+                    Ok(())
+                }
+                _ => Err(Error::Json { offset: 0, msg: "non-numeric tensor".into() }),
+            }
+        }
+        walk(self, 0, &shape, &mut flat)?;
+        Ok((flat, shape))
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(src: &str) -> Result<Value> {
+    let mut p = Parser { b: src.as_bytes(), i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Json { offset: self.i, msg: msg.to_string() }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek().ok_or_else(|| self.err("unexpected eof"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected {s}")))
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(map));
+                }
+                _ => return Err(self.err("expected , or }")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(out));
+                }
+                _ => return Err(self.err("expected , or ]")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| self.err("eof in string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| self.err("eof in escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(self.err("short \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                _ => {
+                    // collect the full utf-8 sequence
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    if start + len > self.b.len() {
+                        return Err(self.err("bad utf-8"));
+                    }
+                    self.i = start + len;
+                    s.push_str(
+                        std::str::from_utf8(&self.b[start..start + len])
+                            .map_err(|_| self.err("bad utf-8"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        s.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| Error::Json { offset: start, msg: format!("bad number {s:?}") })
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Serialize a [`Value`] to compact JSON text.
+pub fn write(v: &Value) -> String {
+    let mut s = String::new();
+    write_into(v, &mut s);
+    s
+}
+
+fn write_into(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Value::Str(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", c as u32);
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, e) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_into(e, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, e)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_into(&Value::Str(k.clone()), out);
+                out.push(':');
+                write_into(e, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("-1.5e2").unwrap(), Value::Num(-150.0));
+        assert_eq!(parse("\"a\\nb\"").unwrap(), Value::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "x"}], "c": false}"#).unwrap();
+        assert_eq!(v.get("c").unwrap(), &Value::Bool(false));
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[1].as_usize().unwrap(), 2);
+        assert_eq!(arr[2].get("b").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn tensor_flattening() {
+        let v = parse("[[1, 2, 3], [4, 5, 6]]").unwrap();
+        let (flat, shape) = v.as_tensor().unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // ragged rejected
+        assert!(parse("[[1], [2, 3]]").unwrap().as_tensor().is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"s":"q\"uote","n":-2.5,"a":[1,null,true],"o":{"k":0}}"#;
+        let v = parse(src).unwrap();
+        let out = write(&v);
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_string() {
+        let v = parse("\"caf\\u00e9 ☕\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "café ☕");
+    }
+}

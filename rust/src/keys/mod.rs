@@ -1,0 +1,222 @@
+//! Key vault — secure storage of the provider's secrets (paper §3.2/§3.3:
+//! "the privacy-preserving feature … relies on the secure storage of M
+//! [and] the detailed channel order used for rand").
+//!
+//! Stored material: the morph seed + κ (the core is regenerated
+//! deterministically — see [`crate::morph::MorphKey::from_seed`]), the
+//! channel permutation, the geometry, and a SHA-256 fingerprint binding
+//! them together. The binary format is versioned and integrity-checked;
+//! the vault file is chmod 0600 on unix. Keys never cross the delivery
+//! protocol — only `T^r` and `C^ac` do (§4.1 HBC surface).
+
+use crate::augconv::ChannelPerm;
+use crate::morph::MorphKey;
+use crate::{Error, Geometry, Result};
+use sha2::{Digest, Sha256};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"MOLEKEY1";
+
+/// The provider's secret bundle for one delivery session.
+#[derive(Debug, Clone)]
+pub struct KeyBundle {
+    pub geometry: Geometry,
+    pub kappa: usize,
+    pub morph_seed: u64,
+    pub perm: ChannelPerm,
+}
+
+impl KeyBundle {
+    /// Generate a fresh bundle (morph key material + channel permutation).
+    pub fn generate(geometry: Geometry, kappa: usize, seed: u64) -> Result<Self> {
+        // validate kappa against the geometry before accepting it
+        geometry.q_for_kappa(kappa)?;
+        let perm = ChannelPerm::generate(geometry.beta, seed);
+        Ok(Self { geometry, kappa, morph_seed: seed, perm })
+    }
+
+    /// Materialize the morph key (regenerates the core from the seed; the
+    /// condition-number gate makes this deterministic).
+    pub fn morph_key(&self) -> Result<MorphKey> {
+        MorphKey::from_seed(self.geometry, self.kappa, self.morph_seed)
+    }
+
+    /// SHA-256 fingerprint over all key material (hex). Used to detect
+    /// tampering and to name sessions without revealing secrets.
+    pub fn fingerprint(&self) -> String {
+        let mut h = Sha256::new();
+        h.update(MAGIC);
+        h.update(self.encode_body());
+        hex(&h.finalize())
+    }
+
+    fn encode_body(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for v in [
+            self.geometry.alpha as u64,
+            self.geometry.m as u64,
+            self.geometry.beta as u64,
+            self.geometry.p as u64,
+            self.kappa as u64,
+            self.morph_seed,
+            self.perm.beta() as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &p in self.perm.as_slice() {
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+        }
+        out
+    }
+
+    /// Serialize to the versioned vault format: MAGIC | body | SHA-256.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let body = self.encode_body();
+        let mut out = Vec::with_capacity(8 + body.len() + 32);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        let mut h = Sha256::new();
+        h.update(MAGIC);
+        h.update(&body);
+        out.extend_from_slice(&h.finalize());
+        out
+    }
+
+    /// Deserialize + integrity-check.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 + 7 * 8 + 32 || &bytes[..8] != MAGIC {
+            return Err(Error::Key("bad vault magic or truncated file".into()));
+        }
+        let (payload, digest) = bytes.split_at(bytes.len() - 32);
+        let mut h = Sha256::new();
+        h.update(payload);
+        if h.finalize().as_slice() != digest {
+            return Err(Error::Key("vault integrity check failed".into()));
+        }
+        let body = &payload[8..];
+        let u = |i: usize| -> u64 {
+            u64::from_le_bytes(body[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        let geometry = Geometry::new(u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize);
+        let kappa = u(4) as usize;
+        let morph_seed = u(5);
+        let beta = u(6) as usize;
+        let perm_bytes = &body[7 * 8..];
+        if perm_bytes.len() != beta * 4 {
+            return Err(Error::Key("vault permutation length mismatch".into()));
+        }
+        let perm: Vec<usize> = perm_bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        Ok(Self {
+            geometry,
+            kappa,
+            morph_seed,
+            perm: ChannelPerm::from_vec(perm)?,
+        })
+    }
+
+    /// Save to a vault file (0600 on unix).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::PermissionsExt;
+            std::fs::set_permissions(path, std::fs::Permissions::from_mode(0o600))?;
+        }
+        Ok(())
+    }
+
+    /// Load from a vault file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle() -> KeyBundle {
+        KeyBundle::generate(Geometry::SMALL, 16, 1234).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let b = bundle();
+        let parsed = KeyBundle::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(parsed.geometry, b.geometry);
+        assert_eq!(parsed.kappa, b.kappa);
+        assert_eq!(parsed.morph_seed, b.morph_seed);
+        assert_eq!(parsed.perm, b.perm);
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let b = bundle();
+        let mut bytes = b.to_bytes();
+        // flip a bit in the seed field
+        bytes[8 + 5 * 8] ^= 1;
+        assert!(matches!(KeyBundle::from_bytes(&bytes), Err(Error::Key(_))));
+        // truncation
+        assert!(KeyBundle::from_bytes(&bytes[..10]).is_err());
+        // bad magic
+        let mut bytes = b.to_bytes();
+        bytes[0] = b'X';
+        assert!(KeyBundle::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn fingerprint_binds_material() {
+        let a = bundle();
+        let b = KeyBundle::generate(Geometry::SMALL, 16, 1235).unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint().len(), 64);
+        // same material, same fingerprint
+        let a2 = KeyBundle::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a.fingerprint(), a2.fingerprint());
+    }
+
+    #[test]
+    fn save_load_file() {
+        let b = bundle();
+        let path = std::env::temp_dir().join("mole_vault_test.key");
+        b.save(&path).unwrap();
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::PermissionsExt;
+            let mode = std::fs::metadata(&path).unwrap().permissions().mode();
+            assert_eq!(mode & 0o777, 0o600);
+        }
+        let loaded = KeyBundle::load(&path).unwrap();
+        assert_eq!(loaded.fingerprint(), b.fingerprint());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn morph_key_is_deterministic() {
+        let b = bundle();
+        let k1 = b.morph_key().unwrap();
+        let k2 = b.morph_key().unwrap();
+        assert_eq!(k1.core(), k2.core());
+        assert_eq!(k1.q(), 48);
+    }
+
+    #[test]
+    fn invalid_kappa_rejected() {
+        assert!(KeyBundle::generate(Geometry::SMALL, 7, 1).is_err());
+    }
+}

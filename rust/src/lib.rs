@@ -1,0 +1,140 @@
+//! # MoLe — Morphed Learning
+//!
+//! A full-system reproduction of *"Towards Efficient and Secure Delivery of
+//! Data for Training and Inference with Privacy-Preserving"* (Shen, Liu,
+//! Chen, Li): data morphing + Augmented Convolutional (Aug-Conv) layers, as
+//! a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the delivery coordinator: provider/developer
+//!   nodes, morphing + key infrastructure, Aug-Conv construction, a
+//!   router + dynamic batcher for serving on morphed data, the attack
+//!   harness, overhead accounting and the Table-1 baselines.
+//! * **L2/L1 (python/, build time only)** — the VGG model, the morphing
+//!   and d2r-GEMM Pallas kernels, AOT-lowered to HLO text in `artifacts/`,
+//!   executed here through PJRT ([`runtime`]).
+//!
+//! Quick orientation:
+//! * [`morph`] — morphing matrix **M** (block-diagonal, core **M′**) and
+//!   its application to d2r rows (paper §3.2).
+//! * [`d2r`] — data-to-row unrolling and the convolution matrix **C**
+//!   (paper §3.1, eq. 1).
+//! * [`augconv`] — **C**^ac = **M**⁻¹·**C** + feature channel
+//!   randomization (paper §3.3).
+//! * [`coordinator`] — the Fig.-1 protocol between data provider and
+//!   developer, plus the serving path.
+//! * [`attacks`] / [`security`] — §4.2's three attacks, operational and
+//!   theoretical.
+//! * [`overhead`] / [`baselines`] — §4.3 and Table 1.
+
+pub mod attacks;
+pub mod augconv;
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod d2r;
+pub mod data;
+pub mod error;
+pub mod json;
+pub mod keys;
+pub mod linalg;
+pub mod logging;
+pub mod manifest;
+pub mod metrics;
+pub mod morph;
+pub mod nn;
+pub mod overhead;
+pub mod rng;
+pub mod runtime;
+pub mod security;
+pub mod ssim;
+pub mod tensor;
+pub mod testkit;
+
+pub use error::{Error, Result};
+
+/// Geometry of the replaceable first convolutional layer (paper §3).
+///
+/// Mirrors `python/compile/geometry.py`; the authoritative instance used at
+/// runtime is parsed from `artifacts/manifest.json` so the two languages
+/// cannot drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    /// Input channels (α).
+    pub alpha: usize,
+    /// Input spatial size (m × m).
+    pub m: usize,
+    /// Output channels of the first layer (β).
+    pub beta: usize,
+    /// Kernel size (p × p), SAME zero padding.
+    pub p: usize,
+}
+
+impl Geometry {
+    pub const fn new(alpha: usize, m: usize, beta: usize, p: usize) -> Self {
+        Self { alpha, m, beta, p }
+    }
+
+    /// SAME padding ⇒ output spatial size n == m.
+    pub const fn n(&self) -> usize {
+        self.m
+    }
+
+    /// Length of the d2r row vector D^r = α·m².
+    pub const fn d_len(&self) -> usize {
+        self.alpha * self.m * self.m
+    }
+
+    /// Length of the feature row vector F^r = β·n².
+    pub const fn f_len(&self) -> usize {
+        self.beta * self.n() * self.n()
+    }
+
+    /// Largest κ for the minimal-cost setting, eq. 13: κ_mc = αm²/n².
+    pub const fn kappa_mc(&self) -> usize {
+        self.d_len() / (self.n() * self.n())
+    }
+
+    /// Morphing core size q = αm²/κ (eq. 3); κ must divide αm².
+    pub fn q_for_kappa(&self, kappa: usize) -> Result<usize> {
+        if kappa == 0 || self.d_len() % kappa != 0 {
+            return Err(Error::Geometry(format!(
+                "kappa={kappa} does not divide alpha*m^2={}",
+                self.d_len()
+            )));
+        }
+        Ok(self.d_len() / kappa)
+    }
+
+    /// The trainable small configuration (16×16×3, β=16).
+    pub const SMALL: Geometry = Geometry::new(3, 16, 16, 3);
+    /// The paper's analysis configuration: CIFAR + VGG-16 first layer.
+    pub const CIFAR_VGG16: Geometry = Geometry::new(3, 32, 64, 3);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_paper_numbers() {
+        let g = Geometry::CIFAR_VGG16;
+        assert_eq!(g.d_len(), 3072); // αm² = 3·32²
+        assert_eq!(g.f_len(), 65536); // βn² = 64·32²
+        assert_eq!(g.kappa_mc(), 3); // eq. 13: 3·1024/1024
+        assert_eq!(g.q_for_kappa(1).unwrap(), 3072);
+        assert_eq!(g.q_for_kappa(3).unwrap(), 1024);
+        assert!(g.q_for_kappa(5).is_err());
+    }
+
+    #[test]
+    fn geometry_small() {
+        let g = Geometry::SMALL;
+        assert_eq!(g.d_len(), 768);
+        assert_eq!(g.f_len(), 4096);
+        assert_eq!(g.kappa_mc(), 3);
+        assert_eq!(g.q_for_kappa(16).unwrap(), 48);
+    }
+}

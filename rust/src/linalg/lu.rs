@@ -1,0 +1,300 @@
+//! LU decomposition with partial pivoting.
+//!
+//! Used for: inverting the morphing core **M′** (provider side, §3.3 step 1),
+//! the D-T pair attack's linear solve (§4.2, eq. 15), and the condition
+//! number gate in [`crate::morph`] that guarantees **M′** is operationally
+//! reversible. Factorization runs in f64 internally so a q=3072 core stays
+//! accurate even though all public tensors are f32.
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// LU factorization P·A = L·U of a square matrix.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    /// Packed L (unit diagonal, below) and U (on/above diagonal), f64.
+    lu: Vec<f64>,
+    /// Row permutation (pivot order).
+    piv: Vec<usize>,
+    /// Dimension.
+    n: usize,
+    /// Sign of the permutation (for the determinant).
+    sign: f64,
+    /// 1-norm of the original matrix (for the condition estimate).
+    a_norm1: f64,
+}
+
+/// Result of the cheap condition-number estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct CondEstimate {
+    /// Lower bound on κ₁(A) = ‖A‖₁·‖A⁻¹‖₁.
+    pub cond_1: f64,
+}
+
+impl Lu {
+    /// Factorize a square 2-D tensor. Errors if a pivot underflows.
+    pub fn decompose(a: &Tensor) -> Result<Self> {
+        if a.ndim() != 2 || a.shape()[0] != a.shape()[1] {
+            return Err(Error::Shape(format!(
+                "LU wants a square matrix, got {:?}",
+                a.shape()
+            )));
+        }
+        let n = a.shape()[0];
+        let mut lu: Vec<f64> = a.data().iter().map(|&v| v as f64).collect();
+        let a_norm1 = {
+            let mut best = 0.0f64;
+            for j in 0..n {
+                let mut s = 0.0;
+                for i in 0..n {
+                    s += lu[i * n + j].abs();
+                }
+                best = best.max(s);
+            }
+            best
+        };
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot search
+            let mut p = k;
+            let mut best = lu[k * n + k].abs();
+            for i in k + 1..n {
+                let v = lu[i * n + k].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best < 1e-300 {
+                return Err(Error::Singular(format!(
+                    "zero pivot at column {k} (n={n})"
+                )));
+            }
+            if p != k {
+                for j in 0..n {
+                    lu.swap(k * n + j, p * n + j);
+                }
+                piv.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[k * n + k];
+            for i in k + 1..n {
+                let f = lu[i * n + k] / pivot;
+                lu[i * n + k] = f;
+                if f != 0.0 {
+                    // split the row at k+1 to appease the borrow checker
+                    let (upper, lower) = lu.split_at_mut(i * n);
+                    let k_row = &upper[k * n + k + 1..k * n + n];
+                    let i_row = &mut lower[k + 1..n];
+                    for (iv, &kv) in i_row.iter_mut().zip(k_row) {
+                        *iv -= f * kv;
+                    }
+                }
+            }
+        }
+        Ok(Self { lu, piv, n, sign, a_norm1 })
+    }
+
+    /// Solve A·x = b for one right-hand side (f64 work space).
+    pub fn solve(&self, b: &[f32]) -> Result<Vec<f32>> {
+        if b.len() != self.n {
+            return Err(Error::Shape(format!(
+                "solve rhs len {} != n {}",
+                b.len(),
+                self.n
+            )));
+        }
+        let mut x: Vec<f64> = (0..self.n).map(|i| b[self.piv[i]] as f64).collect();
+        self.solve_inplace_f64(&mut x);
+        Ok(x.into_iter().map(|v| v as f32).collect())
+    }
+
+    fn solve_inplace_f64(&self, x: &mut [f64]) {
+        let n = self.n;
+        // forward: L·y = Pb
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[i * n + j] * x[j];
+            }
+            x[i] = s;
+        }
+        // backward: U·x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.lu[i * n + j] * x[j];
+            }
+            x[i] = s / self.lu[i * n + i];
+        }
+    }
+
+    /// Solve Aᵀ·x = b (needed by the condition estimator).
+    fn solve_transposed_f64(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = b.to_vec();
+        // Uᵀ·z = b (forward, lower-triangular with diag)
+        for i in 0..n {
+            let mut s = y[i];
+            for j in 0..i {
+                s -= self.lu[j * n + i] * y[j];
+            }
+            y[i] = s / self.lu[i * n + i];
+        }
+        // Lᵀ·w = z (backward, unit diagonal)
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= self.lu[j * n + i] * y[j];
+            }
+            y[i] = s;
+        }
+        // x = Pᵀ·w
+        let mut x = vec![0.0; n];
+        for i in 0..n {
+            x[self.piv[i]] = y[i];
+        }
+        x
+    }
+
+    /// Dense inverse as an f32 tensor.
+    pub fn inverse(&self) -> Result<Tensor> {
+        let n = self.n;
+        let mut out = Tensor::zeros(&[n, n]);
+        let mut col = vec![0.0f64; n];
+        for j in 0..n {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = if self.piv[i] == j { 1.0 } else { 0.0 };
+            }
+            self.solve_inplace_f64(&mut col);
+            for i in 0..n {
+                out.set2(i, j, col[i] as f32);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Determinant (may overflow to ±inf for large n; used for sanity only).
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.n {
+            d *= self.lu[i * self.n + i];
+        }
+        d
+    }
+
+    /// Hager-style 1-norm condition estimate (a few solves, no dense
+    /// inverse). A *lower bound* on κ₁; `morph` rejects cores whose
+    /// estimate exceeds its threshold.
+    pub fn cond_estimate(&self) -> CondEstimate {
+        let n = self.n;
+        // Hager's algorithm estimates ‖A⁻¹‖₁.
+        let mut x = vec![1.0 / n as f64; n];
+        let mut est = 0.0f64;
+        for _ in 0..5 {
+            let mut y = {
+                // y = A⁻¹ x  (apply pivots then solve)
+                let mut t: Vec<f64> = (0..n).map(|i| x[self.piv[i]]).collect();
+                self.solve_inplace_f64(&mut t);
+                t
+            };
+            let norm1: f64 = y.iter().map(|v| v.abs()).sum();
+            if norm1 <= est {
+                break;
+            }
+            est = norm1;
+            for v in y.iter_mut() {
+                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+            let z = self.solve_transposed_f64(&y);
+            let (mut jbest, mut zbest) = (0, 0.0f64);
+            for (j, &zv) in z.iter().enumerate() {
+                if zv.abs() > zbest {
+                    zbest = zv.abs();
+                    jbest = j;
+                }
+            }
+            x = vec![0.0; n];
+            x[jbest] = 1.0;
+        }
+        CondEstimate { cond_1: est * self.a_norm1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::Rng;
+
+    fn well_conditioned(n: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut a = Tensor::new(&[n, n], r.normal_vec(n * n, 0.5)).unwrap();
+        for i in 0..n {
+            let v = a.at2(i, i) + 3.0;
+            a.set2(i, i, v);
+        }
+        a
+    }
+
+    #[test]
+    fn solve_recovers_x() {
+        let a = well_conditioned(16, 0);
+        let mut r = Rng::new(1);
+        let x_true: Vec<f32> = r.normal_vec(16, 1.0);
+        let b = crate::linalg::matvec(&a, &x_true).unwrap();
+        let lu = Lu::decompose(&a).unwrap();
+        let x = lu.solve(&b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        for n in [1, 2, 7, 32, 64] {
+            let a = well_conditioned(n, n as u64);
+            let inv = Lu::decompose(&a).unwrap().inverse().unwrap();
+            let prod = gemm(&a, &inv).unwrap();
+            assert!(
+                prod.allclose(&Tensor::eye(n), 1e-4, 1e-4),
+                "n={n} residual too large"
+            );
+        }
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 4.0]).unwrap();
+        assert!(matches!(Lu::decompose(&a), Err(Error::Singular(_))));
+    }
+
+    #[test]
+    fn det_of_diag() {
+        let mut a = Tensor::eye(3);
+        a.set2(0, 0, 2.0);
+        a.set2(1, 1, -3.0);
+        let lu = Lu::decompose(&a).unwrap();
+        assert!((lu.det() + 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cond_estimate_orders_of_magnitude() {
+        // identity: cond == 1
+        let lu = Lu::decompose(&Tensor::eye(8)).unwrap();
+        let c = lu.cond_estimate().cond_1;
+        assert!((0.5..2.0).contains(&c), "cond(I)={c}");
+
+        // nearly singular: cond must blow up
+        let mut a = Tensor::eye(4);
+        a.set2(3, 3, 1e-9);
+        let c = Lu::decompose(&a).unwrap().cond_estimate().cond_1;
+        assert!(c > 1e6, "cond={c}");
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        assert!(Lu::decompose(&Tensor::zeros(&[2, 3])).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Dense linear algebra: GEMM, LU decomposition, inversion.
+//!
+//! The provider-side hot paths — building **M′**⁻¹ and the Aug-Conv GEMM
+//! **M**⁻¹·**C** — run on this module (no BLAS in the offline build).
+//! [`gemm`] is a cache-blocked, axpy-style kernel that autovectorizes under
+//! `-C target-cpu=native`; [`Lu`] is partial-pivoting LU used for matrix
+//! inversion and for the D-T pair attack's linear solve.
+
+mod gemm;
+mod lu;
+
+pub use gemm::{gemm, gemm_into, gemm_slices, matvec, vecmat};
+pub use lu::{CondEstimate, Lu};
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Frobenius norm of a tensor viewed as a flat vector.
+pub fn fro_norm(a: &Tensor) -> f64 {
+    a.l2_norm()
+}
+
+/// Matrix 1-norm (max absolute column sum) of a 2-D tensor.
+pub fn one_norm(a: &Tensor) -> Result<f64> {
+    if a.ndim() != 2 {
+        return Err(Error::Shape("one_norm wants a 2-D tensor".into()));
+    }
+    let (r, c) = (a.shape()[0], a.shape()[1]);
+    let mut best = 0.0f64;
+    for j in 0..c {
+        let mut s = 0.0f64;
+        for i in 0..r {
+            s += a.at2(i, j).abs() as f64;
+        }
+        best = best.max(s);
+    }
+    Ok(best)
+}
+
+/// Matrix ∞-norm (max absolute row sum).
+pub fn inf_norm(a: &Tensor) -> Result<f64> {
+    if a.ndim() != 2 {
+        return Err(Error::Shape("inf_norm wants a 2-D tensor".into()));
+    }
+    let (r, _c) = (a.shape()[0], a.shape()[1]);
+    let mut best = 0.0f64;
+    for i in 0..r {
+        let s: f64 = a.row(i).iter().map(|v| v.abs() as f64).sum();
+        best = best.max(s);
+    }
+    Ok(best)
+}
+
+/// Transpose a 2-D tensor.
+pub fn transpose(a: &Tensor) -> Result<Tensor> {
+    if a.ndim() != 2 {
+        return Err(Error::Shape("transpose wants a 2-D tensor".into()));
+    }
+    let (r, c) = (a.shape()[0], a.shape()[1]);
+    let mut out = Tensor::zeros(&[c, r]);
+    for i in 0..r {
+        for j in 0..c {
+            out.set2(j, i, a.at2(i, j));
+        }
+    }
+    Ok(out)
+}
+
+/// Invert a square matrix via LU; errors on (numerical) singularity.
+pub fn inverse(a: &Tensor) -> Result<Tensor> {
+    Lu::decompose(a)?.inverse()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn norms() {
+        let a = Tensor::new(&[2, 2], vec![1.0, -2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(one_norm(&a).unwrap(), 6.0); // |−2|+|4| = 6
+        assert_eq!(inf_norm(&a).unwrap(), 7.0); // |3|+|4| = 7
+        assert!((fro_norm(&a) - (30.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut r = Rng::new(0);
+        let a = Tensor::new(&[3, 5], r.normal_vec(15, 1.0)).unwrap();
+        let t = transpose(&a).unwrap();
+        assert_eq!(t.shape(), &[5, 3]);
+        let tt = transpose(&t).unwrap();
+        assert_eq!(a, tt);
+    }
+
+    #[test]
+    fn inverse_identity() {
+        let mut r = Rng::new(1);
+        let n = 24;
+        // Well-conditioned: random + 4·I
+        let mut a = Tensor::new(&[n, n], r.normal_vec(n * n, 0.3)).unwrap();
+        for i in 0..n {
+            let v = a.at2(i, i) + 4.0;
+            a.set2(i, i, v);
+        }
+        let inv = inverse(&a).unwrap();
+        let prod = gemm(&a, &inv).unwrap();
+        assert!(prod.allclose(&Tensor::eye(n), 1e-3, 1e-3));
+    }
+}

@@ -1,0 +1,57 @@
+//! Tiny `log` backend (env_logger is not in the offline vendor set).
+//!
+//! Level comes from `MOLE_LOG` (error|warn|info|debug|trace), default
+//! `info`. Timestamps are seconds since logger init.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct MoleLogger {
+    start: Instant,
+    level: Level,
+}
+
+impl log::Log for MoleLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            eprintln!(
+                "[{t:9.3}s {:5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent; subsequent calls are no-ops).
+pub fn init() {
+    let level = match std::env::var("MOLE_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = Box::new(MoleLogger { start: Instant::now(), level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

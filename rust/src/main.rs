@@ -1,0 +1,199 @@
+//! `mole` — the MoLe launcher.
+//!
+//! Subcommands:
+//! * `security-report [--geometry cifar|small] [--kappa K] [--sigma S]`
+//! * `overhead [--kappa K]` — §4.3 numbers for the catalog networks
+//! * `morph --out DIR [--kappa K]` — morph a demo image, dump PPMs + SSIM
+//! * `provider --listen ADDR [--batches N]` — run a data-provider node
+//! * `developer --connect ADDR` — run a developer node (train on stream)
+//! * `e2e [--steps N]` — in-process §4.4 three-group experiment (short)
+//! * `attack [--kappa K]` — run the three §4.2 attacks at small scale
+//!
+//! Options not listed fall back to `mole.toml` ([`mole::config`]) and then
+//! to built-in defaults.
+
+use mole::cli::Args;
+use mole::config::MoleConfig;
+use mole::{Geometry, Result};
+use std::path::Path;
+
+fn main() {
+    mole::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    let cfg = MoleConfig::load_or_default(Path::new(
+        &args.get_or("config", "mole.toml"),
+    ))?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("security-report") => security_report(&args),
+        Some("overhead") => overhead(&args),
+        Some("morph") => morph_demo(&args, &cfg),
+        Some("provider") => provider(&args, &cfg),
+        Some("developer") => developer(&args, &cfg),
+        Some("e2e") => e2e(&args, &cfg),
+        Some("attack") => attack(&args, &cfg),
+        _ => {
+            eprintln!(
+                "usage: mole <security-report|overhead|morph|provider|developer|e2e|attack> [options]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn geometry_arg(args: &Args, default: Geometry) -> Result<Geometry> {
+    Ok(match args.get("geometry") {
+        Some("cifar") => Geometry::CIFAR_VGG16,
+        Some("small") => Geometry::SMALL,
+        Some(o) => return Err(mole::Error::Config(format!("unknown geometry {o:?}"))),
+        None => default,
+    })
+}
+
+fn security_report(args: &Args) -> Result<()> {
+    let g = geometry_arg(args, Geometry::CIFAR_VGG16)?;
+    let kappa = args.get_usize("kappa", 1)?;
+    let sigma = args.get_f64("sigma", 0.5)?;
+    mole::security::SecurityReport::analyze(g, kappa, sigma).print();
+    Ok(())
+}
+
+fn overhead(args: &Args) -> Result<()> {
+    let kappa = args.get_usize("kappa", 1)?;
+    for (net, images) in [
+        (mole::overhead::catalog::vgg16_cifar(), 60_000usize),
+        (mole::overhead::catalog::vgg16_imagenet(), 1_281_167),
+        (mole::overhead::catalog::resnet152_imagenet(), 1_281_167),
+    ] {
+        mole::overhead::OverheadReport::analyze(&net, kappa, images).print();
+        println!();
+    }
+    Ok(())
+}
+
+fn morph_demo(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::data::images;
+    let out_dir = args.get_or("out", "morph_demo");
+    std::fs::create_dir_all(&out_dir)?;
+    let g = Geometry::SMALL;
+    let kappa = args.get_usize("kappa", cfg.kappa)?;
+    let key = mole::morph::MorphKey::generate(g, kappa, cfg.seed)?;
+    let img = images::photo_like(3, g.m, cfg.seed);
+    let rows = mole::d2r::unroll(img.clone().reshape(&[1, 3, g.m, g.m])?)?;
+    let morphed = key.morph(&rows)?;
+    let morphed_img =
+        images::normalize_for_display(&mole::d2r::roll(morphed, 3, g.m)?.reshape(&[3, g.m, g.m])?);
+    let ssim = mole::ssim::ssim_image(&img, &morphed_img, 1.0)?;
+    images::write_ppm(Path::new(&out_dir).join("original.ppm").as_path(), &img)?;
+    images::write_ppm(Path::new(&out_dir).join("morphed.ppm").as_path(), &morphed_img)?;
+    println!("kappa={kappa} q={} ssim(original, morphed)={ssim:.4}", key.q());
+    println!("wrote {out_dir}/original.ppm and {out_dir}/morphed.ppm");
+    Ok(())
+}
+
+fn make_provider(cfg: &MoleConfig) -> Result<mole::coordinator::ProviderNode> {
+    let spec = mole::data::synth::SynthSpec {
+        geometry: cfg.geometry,
+        num_classes: 10,
+        train_per_class: cfg.train_per_class,
+        test_per_class: cfg.test_per_class,
+        noise: 0.08,
+        max_shift: 2,
+        seed: cfg.data_seed,
+    };
+    let keys = mole::keys::KeyBundle::generate(cfg.geometry, cfg.kappa, cfg.seed)?;
+    mole::coordinator::ProviderNode::new(keys, mole::data::synth::generate(&spec))
+}
+
+fn provider(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    let addr = args.get_or("listen", &cfg.addr);
+    let batches = args.get_usize("batches", cfg.train_steps)?;
+    let node = make_provider(cfg)?;
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("provider listening on {addr} (kappa={}, {batches} batches)", cfg.kappa);
+    let (mut sock, peer) = listener.accept()?;
+    sock.set_nodelay(true).ok();
+    println!("developer connected from {peer}");
+    node.run_session(
+        &mut sock,
+        mole::coordinator::provider::StreamPlan { num_batches: batches, batch_size: 64 },
+        cfg.data_seed,
+    )?;
+    println!(
+        "session complete: {} batches, {} bytes sent",
+        node.batches_sent.get(),
+        node.bytes_sent.get()
+    );
+    Ok(())
+}
+
+fn developer(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    let addr = args.get_or("connect", &cfg.addr);
+    let engine = mole::runtime::Engine::new(mole::manifest::Manifest::load(Path::new(
+        &cfg.artifacts_dir,
+    ))?)?;
+    let dev = mole::coordinator::DeveloperNode::new(&engine, cfg.seed, cfg.lr as f32)?;
+    let mut sock = std::net::TcpStream::connect(&addr)?;
+    sock.set_nodelay(true).ok();
+    println!("connected to provider at {addr}");
+    let outcome = dev.run_session(&mut sock, cfg.seed)?;
+    let last = outcome.losses.last().copied().unwrap_or(f32::NAN);
+    println!(
+        "trained {} steps on morphed data; final loss {last:.4}, tail acc {:.3}",
+        outcome.steps,
+        outcome
+            .accs
+            .iter()
+            .rev()
+            .take(10)
+            .sum::<f32>()
+            / outcome.accs.len().min(10).max(1) as f32
+    );
+    Ok(())
+}
+
+fn e2e(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    let steps = args.get_usize("steps", 60)?;
+    println!("running the in-process three-group experiment ({steps} steps/group);");
+    println!("see `cargo bench --bench bench_accuracy` and examples/e2e_train.rs for the full run");
+    let engine = mole::runtime::Engine::new(mole::manifest::Manifest::load(Path::new(
+        &cfg.artifacts_dir,
+    ))?)?;
+    let provider = std::sync::Arc::new(make_provider(cfg)?);
+    let outcome = mole::coordinator::developer::run_tcp_session(
+        provider,
+        &engine,
+        mole::coordinator::provider::StreamPlan { num_batches: steps, batch_size: 64 },
+        cfg.lr as f32,
+        cfg.seed,
+    )?;
+    println!(
+        "aug group: {} steps, loss {:.4} -> {:.4}",
+        outcome.steps,
+        outcome.losses.first().unwrap_or(&f32::NAN),
+        outcome.losses.last().unwrap_or(&f32::NAN)
+    );
+    Ok(())
+}
+
+fn attack(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    let kappa = args.get_usize("kappa", 48)?;
+    let g = Geometry::SMALL;
+    let key = mole::morph::MorphKey::generate(g, kappa, cfg.seed)?;
+    let img = mole::data::images::photo_like(3, g.m, cfg.seed);
+    println!("brute force (200 trials, sigma=0.05):");
+    let bf = mole::attacks::brute_force_attack(&key, &img, 0.05, 200, cfg.seed)?;
+    println!(
+        "  successes={}/{} best_esd={:.4} best_ssim={:.3}",
+        bf.successes, bf.trials, bf.best_esd, bf.best_ssim
+    );
+    println!("see examples/attack_lab.rs for the full three-attack lab");
+    Ok(())
+}

@@ -1,0 +1,246 @@
+//! `artifacts/manifest.json` — the contract between the python AOT
+//! pipeline and the rust runtime: artifact paths + signatures, geometry
+//! constants, and parameter-initialization shapes.
+
+use crate::json::{self, Value};
+use crate::{Error, Geometry, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// dtype of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unsupported dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Path relative to the artifacts directory.
+    pub path: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    /// "morph" | "augconv_forward" | "infer_base" | … (see aot.py).
+    pub kind: String,
+    /// Batch size baked into the executable (0 when not applicable).
+    pub batch: usize,
+    /// Number of model-parameter inputs (train/infer artifacts).
+    pub n_params: usize,
+}
+
+/// Parameter-initialization spec (mirrors model.base_param_shapes).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "he" | "zero".
+    pub init: String,
+    pub fan_in: usize,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub geometries: BTreeMap<String, Geometry>,
+    pub train_batch: usize,
+    pub infer_batches: Vec<usize>,
+    pub eq_batch: usize,
+    pub num_classes: usize,
+    pub momentum: f64,
+    pub base_params: Vec<ParamSpec>,
+    pub aug_params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+fn parse_sigs(v: &Value) -> Result<Vec<TensorSig>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(TensorSig {
+                shape: e.get("shape")?.as_usize_vec()?,
+                dtype: DType::parse(e.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+fn parse_params(v: &Value) -> Result<Vec<ParamSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(ParamSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.as_usize_vec()?,
+                init: e.get("init")?.as_str()?.to_string(),
+                fan_in: e.get("fan_in")?.as_usize()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {path:?} (run `make artifacts` first): {e}"
+            ))
+        })?;
+        let v = json::parse(&text)?;
+        let version = v.get("version")?.as_usize()?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported version {version}")));
+        }
+
+        let mut geometries = BTreeMap::new();
+        for (name, g) in v.get("geometries")?.as_obj()? {
+            geometries.insert(
+                name.clone(),
+                Geometry::new(
+                    g.get("alpha")?.as_usize()?,
+                    g.get("m")?.as_usize()?,
+                    g.get("beta")?.as_usize()?,
+                    g.get("p")?.as_usize()?,
+                ),
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, e) in v.get("artifacts")?.as_obj()? {
+            let entry = ArtifactEntry {
+                name: name.clone(),
+                path: e.get("path")?.as_str()?.to_string(),
+                inputs: parse_sigs(e.get("inputs")?)?,
+                outputs: parse_sigs(e.get("outputs")?)?,
+                kind: e
+                    .get("kind")
+                    .and_then(|k| Ok(k.as_str()?.to_string()))
+                    .unwrap_or_default(),
+                batch: e.get("batch").and_then(|b| b.as_usize()).unwrap_or(0),
+                n_params: e.get("n_params").and_then(|b| b.as_usize()).unwrap_or(0),
+            };
+            artifacts.insert(name.clone(), entry);
+        }
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            geometries,
+            train_batch: v.get("train_batch")?.as_usize()?,
+            infer_batches: v.get("infer_batches")?.as_usize_vec()?,
+            eq_batch: v.get("eq_batch")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            momentum: v.get("momentum")?.as_f64()?,
+            base_params: parse_params(v.get("base_params")?)?,
+            aug_params: parse_params(v.get("aug_params")?)?,
+            artifacts,
+        })
+    }
+
+    /// Look up an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact {name:?}")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.path))
+    }
+
+    /// The geometry by manifest name ("small" / "cifar").
+    pub fn geometry(&self, name: &str) -> Result<Geometry> {
+        self.geometries
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::Manifest(format!("no geometry {name:?}")))
+    }
+
+    /// morph_apply artifact name for (geometry, q, batch).
+    pub fn morph_artifact(geo_name: &str, q: usize, batch: usize) -> String {
+        format!("morph_apply_{geo_name}_q{q}_b{batch}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.geometry("small").unwrap(), Geometry::SMALL);
+        assert_eq!(m.geometry("cifar").unwrap(), Geometry::CIFAR_VGG16);
+        assert_eq!(m.train_batch, 64);
+        assert_eq!(m.base_params.len(), 10);
+        assert_eq!(m.aug_params.len(), 8);
+        // w1 comes first in base params and is absent from aug params
+        assert_eq!(m.base_params[0].name, "w1");
+        assert_eq!(m.aug_params[0].name, "w2");
+    }
+
+    #[test]
+    fn artifact_signatures_consistent() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let g = m.geometry("small").unwrap();
+        let a = m.artifact(&Manifest::morph_artifact("small", 48, 64)).unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![64, g.d_len()]);
+        assert_eq!(a.inputs[1].shape, vec![48, 48]);
+        assert_eq!(a.outputs[0].shape, vec![64, g.d_len()]);
+        assert!(m.artifact_path(&a.name).unwrap().exists());
+
+        let t = m.artifact("train_step_aug_small_b64").unwrap();
+        // cac, b1p, 8 params, 8 momenta, t_r, y, lr = 21 inputs
+        assert_eq!(t.inputs.len(), 21);
+        assert_eq!(t.outputs.len(), 18);
+        assert_eq!(t.n_params, 8);
+        assert_eq!(t.inputs[20].shape, Vec::<usize>::new()); // lr scalar
+        assert_eq!(t.inputs[19].dtype, DType::I32); // labels
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.artifact("nonexistent").is_err());
+        assert!(m.geometry("huge").is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Lightweight metrics: counters, gauges and latency histograms for the
+//! coordinator's serving path (throughput, batch sizes, p50/p95/p99).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic counter (lock-free).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exact percentiles (stores raw micros; fine for
+/// bench-scale sample counts).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    samples: Mutex<Vec<u64>>,
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.samples.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    pub fn record_micros(&self, us: u64) {
+        self.samples.lock().unwrap().push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    /// Percentile in microseconds (nearest-rank method); None when empty.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return None;
+        }
+        s.sort_unstable();
+        // nearest-rank: ceil(p/100 * n), clamped to [1, n]
+        let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+        Some(s[rank.clamp(1, s.len()) - 1])
+    }
+
+    pub fn mean_micros(&self) -> Option<f64> {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return None;
+        }
+        Some(s.iter().sum::<u64>() as f64 / s.len() as f64)
+    }
+
+    /// (p50, p95, p99) in microseconds.
+    pub fn summary(&self) -> Option<(u64, u64, u64)> {
+        Some((
+            self.percentile(50.0)?,
+            self.percentile(95.0)?,
+            self.percentile(99.0)?,
+        ))
+    }
+}
+
+/// The serving-path metric set.
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    pub requests: Counter,
+    pub responses: Counter,
+    pub batches: Counter,
+    pub batched_items: Counter,
+    pub padding_items: Counter,
+    pub queue_latency: Histogram,
+    pub execute_latency: Histogram,
+    pub total_latency: Histogram,
+    pub bytes_in: Counter,
+    pub bytes_out: Counter,
+}
+
+impl ServingMetrics {
+    /// Mean effective batch size (items per executed batch).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.get() as f64 / b as f64
+        }
+    }
+
+    /// Fraction of executed slots wasted on padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let items = self.batched_items.get() + self.padding_items.get();
+        if items == 0 {
+            0.0
+        } else {
+            self.padding_items.get() as f64 / items as f64
+        }
+    }
+
+    /// Human-readable one-line report.
+    pub fn report(&self) -> String {
+        let (p50, p95, p99) = self.total_latency.summary().unwrap_or((0, 0, 0));
+        format!(
+            "requests={} responses={} batches={} mean_batch={:.2} pad={:.1}% \
+             latency_us p50={} p95={} p99={}",
+            self.requests.get(),
+            self.responses.get(),
+            self.batches.get(),
+            self.mean_batch_size(),
+            self.padding_fraction() * 100.0,
+            p50,
+            p95,
+            p99
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::default());
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::default();
+        for i in 1..=100u64 {
+            h.record_micros(i);
+        }
+        assert_eq!(h.percentile(50.0), Some(50));
+        assert_eq!(h.percentile(99.0), Some(99));
+        assert_eq!(h.percentile(0.0), Some(1));
+        assert_eq!(h.percentile(100.0), Some(100));
+        assert!((h.mean_micros().unwrap() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.mean_micros(), None);
+    }
+
+    #[test]
+    fn serving_aggregates() {
+        let m = ServingMetrics::default();
+        m.batches.add(2);
+        m.batched_items.add(12);
+        m.padding_items.add(4);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+        assert!((m.padding_fraction() - 0.25).abs() < 1e-9);
+        m.total_latency.record_micros(100);
+        assert!(m.report().contains("mean_batch=6.00"));
+    }
+}

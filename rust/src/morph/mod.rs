@@ -1,0 +1,262 @@
+//! Data morphing (paper §3.2).
+//!
+//! The morphing matrix **M** [αm², αm²] is block-diagonal (eq. 4): κ
+//! copies of a dense random core **M′** [q, q] (eq. 3: q = αm²/κ) on the
+//! diagonal. The provider morphs each d2r row with `T^r = D^r · M`
+//! (eq. 2); because of the block structure that costs α·q² MACs per image
+//! (eq. 16) instead of (αm²)².
+//!
+//! Security relies on **M** being secret *and* reversible; this module
+//! enforces reversibility operationally with a condition-number gate on
+//! **M′** (resampling on failure) so the developer-side inverse used in
+//! the Aug-Conv layer is numerically trustworthy.
+
+use crate::linalg::Lu;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+
+/// Largest acceptable (estimated) 1-norm condition number for **M′**.
+pub const MAX_CORE_COND: f64 = 1.0e6;
+/// Minimum |entry| when sampling the core ("all elements … non-zero").
+pub const CORE_MIN_ABS: f32 = 1.0 / 64.0;
+/// How many condition-gate resamples before giving up.
+const MAX_RESAMPLES: usize = 32;
+
+/// The provider's secret morphing key: the core **M′**, its inverse, and
+/// the geometry it was generated for.
+#[derive(Debug, Clone)]
+pub struct MorphKey {
+    geometry: Geometry,
+    kappa: usize,
+    core: Tensor,
+    core_inv: Tensor,
+    seed: u64,
+    cond_estimate: f64,
+}
+
+impl MorphKey {
+    /// Generate a fresh key for `geometry` with morphing scale factor κ.
+    ///
+    /// Entries of **M′** are uniform non-zero in [−1, 1] (§3.2), the
+    /// diagonal is lifted by +2 to keep the core comfortably invertible,
+    /// and cores whose estimated condition number exceeds
+    /// [`MAX_CORE_COND`] are resampled.
+    pub fn generate(geometry: Geometry, kappa: usize, seed: u64) -> Result<Self> {
+        let q = geometry.q_for_kappa(kappa)?;
+        let mut rng = Rng::new(seed);
+        for attempt in 0..MAX_RESAMPLES {
+            let mut core = Tensor::zeros(&[q, q]);
+            for v in core.data_mut() {
+                *v = rng.nonzero_unit(CORE_MIN_ABS);
+            }
+            // Diagonal lift: keeps entries non-zero and the spectrum away
+            // from the origin without changing the uniform off-diagonals.
+            for i in 0..q {
+                let v = core.at2(i, i);
+                core.set2(i, i, v + if v >= 0.0 { 2.0 } else { -2.0 });
+            }
+            let lu = match Lu::decompose(&core) {
+                Ok(lu) => lu,
+                Err(_) => continue,
+            };
+            let cond = lu.cond_estimate().cond_1;
+            if cond > MAX_CORE_COND {
+                continue;
+            }
+            let core_inv = lu.inverse()?;
+            log::debug!(
+                "morph key: q={q} kappa={kappa} cond~{cond:.1} (attempt {attempt})"
+            );
+            return Ok(Self { geometry, kappa, core, core_inv, seed, cond_estimate: cond });
+        }
+        Err(Error::Singular(format!(
+            "could not sample a well-conditioned {q}x{q} morphing core in {MAX_RESAMPLES} tries"
+        )))
+    }
+
+    /// Rebuild a key deterministically from stored material (seed + κ).
+    /// Used by the key vault; identical inputs yield the identical core.
+    pub fn from_seed(geometry: Geometry, kappa: usize, seed: u64) -> Result<Self> {
+        Self::generate(geometry, kappa, seed)
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geometry
+    }
+
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    /// Core size q = αm²/κ.
+    pub fn q(&self) -> usize {
+        self.core.shape()[0]
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn cond_estimate(&self) -> f64 {
+        self.cond_estimate
+    }
+
+    /// The secret core **M′** (q×q).
+    pub fn core(&self) -> &Tensor {
+        &self.core
+    }
+
+    /// The inverse core **M′**⁻¹ (q×q) used to build the Aug-Conv layer.
+    pub fn core_inv(&self) -> &Tensor {
+        &self.core_inv
+    }
+
+    /// Materialize the full block-diagonal **M** (eq. 4). Only used by
+    /// tests and the brute-force attack analysis — the hot path never
+    /// builds it.
+    pub fn full_matrix(&self) -> Tensor {
+        let d = self.geometry.d_len();
+        let q = self.q();
+        let mut m = Tensor::zeros(&[d, d]);
+        for blk in 0..self.kappa {
+            for r in 0..q {
+                for c in 0..q {
+                    m.set2(blk * q + r, blk * q + c, self.core.at2(r, c));
+                }
+            }
+        }
+        m
+    }
+
+    /// Morph a batch of d2r rows: T^r = D^r · M (eq. 2), block-wise.
+    pub fn morph(&self, d_rows: &Tensor) -> Result<Tensor> {
+        self.apply_core(d_rows, &self.core)
+    }
+
+    /// Inverse morphing: D^r = T^r · M⁻¹.
+    pub fn unmorph(&self, t_rows: &Tensor) -> Result<Tensor> {
+        self.apply_core(t_rows, &self.core_inv)
+    }
+
+    /// Shared block-diagonal application: each [B, q] slice × core.
+    fn apply_core(&self, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
+        let d = self.geometry.d_len();
+        if rows.ndim() != 2 || rows.shape()[1] != d {
+            return Err(Error::Shape(format!(
+                "morph wants [B, {d}], got {:?}",
+                rows.shape()
+            )));
+        }
+        let b = rows.shape()[0];
+        let q = self.q();
+        let mut out = Tensor::zeros(&[b, d]);
+        // For each row, each diagonal block: out_blk = in_blk · M'.
+        // vecmat-style axpy keeps it cache-friendly for q up to 3072.
+        for bi in 0..b {
+            let src = rows.row(bi);
+            // split borrow: compute into a scratch then copy
+            let dst = out.row_mut(bi);
+            for blk in 0..self.kappa {
+                let xs = &src[blk * q..(blk + 1) * q];
+                let ys = &mut dst[blk * q..(blk + 1) * q];
+                for (i, &xv) in xs.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let crow = core.row(i);
+                    for (yv, &cv) in ys.iter_mut().zip(crow) {
+                        *yv += xv * cv;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Operational MAC count for morphing one image: κ·q² (the κ diagonal
+    /// blocks, zero blocks skipped). Note κ·q² = αm²·q, the audited form
+    /// of the paper's eq. 16 — see [`crate::overhead`] for the discussion.
+    pub fn macs_per_row(&self) -> usize {
+        self.kappa * self.q() * self.q()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+
+    fn small_key(kappa: usize, seed: u64) -> MorphKey {
+        MorphKey::generate(Geometry::SMALL, kappa, seed).unwrap()
+    }
+
+    #[test]
+    fn generate_respects_geometry() {
+        let k = small_key(16, 1);
+        assert_eq!(k.q(), 48);
+        assert_eq!(k.kappa(), 16);
+        assert!(k.cond_estimate() < MAX_CORE_COND);
+        // all entries non-zero
+        assert!(k.core().data().iter().all(|&v| v != 0.0));
+        assert!(Geometry::SMALL.q_for_kappa(7).is_err());
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = small_key(16, 42);
+        let b = MorphKey::from_seed(Geometry::SMALL, 16, 42).unwrap();
+        assert_eq!(a.core(), b.core());
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        // ∀ seed, κ: unmorph(morph(D)) ≈ D
+        for kappa in [1usize, 3, 16, 48] {
+            let key = small_key(kappa, kappa as u64 + 7);
+            let mut rng = Rng::new(99);
+            let d = Tensor::new(&[3, 768], rng.normal_vec(3 * 768, 1.0)).unwrap();
+            let t = key.morph(&d).unwrap();
+            let back = key.unmorph(&t).unwrap();
+            assert!(
+                back.allclose(&d, 1e-2, 1e-2),
+                "kappa={kappa}: roundtrip failed (max diff {})",
+                back.max_abs_diff(&d).unwrap()
+            );
+            // morphing must actually change the data
+            assert!(t.rms_diff(&d).unwrap() > 0.1);
+        }
+    }
+
+    #[test]
+    fn blockwise_matches_full_matrix() {
+        let key = small_key(16, 5);
+        let mut rng = Rng::new(1);
+        let d = Tensor::new(&[2, 768], rng.normal_vec(2 * 768, 1.0)).unwrap();
+        let t_fast = key.morph(&d).unwrap();
+        let t_full = gemm(&d, &key.full_matrix()).unwrap();
+        assert!(t_fast.allclose(&t_full, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn full_matrix_is_block_diagonal() {
+        let key = small_key(16, 2);
+        let m = key.full_matrix();
+        let q = key.q();
+        // off-block entries are exactly zero (eq. 4)
+        assert_eq!(m.at2(0, q), 0.0);
+        assert_eq!(m.at2(q - 1, 2 * q + 3), 0.0);
+        assert_eq!(m.at2(3 * q, 0), 0.0);
+        // on-block entries match the core
+        assert_eq!(m.at2(q + 1, q + 2), key.core().at2(1, 2));
+    }
+
+    #[test]
+    fn macs_per_row_counts_blocks() {
+        let key = small_key(16, 3);
+        assert_eq!(key.macs_per_row(), 16 * 48 * 48);
+        // MS setting: kappa=1, q=768 -> full dense row cost
+        let ms = small_key(1, 3);
+        assert_eq!(ms.macs_per_row(), 768 * 768);
+    }
+}

@@ -1,0 +1,244 @@
+//! Reference neural-network ops (pure rust, forward only).
+//!
+//! These are *oracles and baselines*, not the training path: training and
+//! serving run through the AOT-compiled XLA artifacts ([`crate::runtime`]).
+//! They exist to (a) validate the d2r algebra against direct convolution,
+//! (b) drive the feature-transmission baseline (§Table 1, [13]) which must
+//! compute the first k layers on the provider side, and (c) provide a
+//! CPU-only sanity path in tests where the PJRT client is too heavy.
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// SAME-padded 3×3-style cross-correlation, NCHW × OIHW → NCHW.
+pub fn conv2d_same(x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Result<Tensor> {
+    if x.ndim() != 4 || w.ndim() != 4 {
+        return Err(Error::Shape("conv2d_same wants 4-D tensors".into()));
+    }
+    let (bs, alpha, m, m2) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (beta, alpha2, p, p2) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    if m != m2 || p != p2 || alpha != alpha2 {
+        return Err(Error::Shape(format!(
+            "conv2d_same: x {:?} w {:?}",
+            x.shape(),
+            w.shape()
+        )));
+    }
+    if let Some(b) = bias {
+        if b.len() != beta {
+            return Err(Error::Shape(format!("bias len {} != beta {beta}", b.len())));
+        }
+    }
+    let off = (p - 1) / 2;
+    let mut out = Tensor::zeros(&[bs, beta, m, m]);
+    for bi in 0..bs {
+        for j in 0..beta {
+            let base_b = bias.map(|b| b[j]).unwrap_or(0.0);
+            for oy in 0..m {
+                for ox in 0..m {
+                    let mut acc = base_b as f64;
+                    for i in 0..alpha {
+                        for a in 0..p {
+                            let iy = oy as isize + a as isize - off as isize;
+                            if iy < 0 || iy >= m as isize {
+                                continue;
+                            }
+                            for bb in 0..p {
+                                let ix = ox as isize + bb as isize - off as isize;
+                                if ix < 0 || ix >= m as isize {
+                                    continue;
+                                }
+                                acc += x.at4(bi, i, iy as usize, ix as usize) as f64
+                                    * w.at4(j, i, a, bb) as f64;
+                            }
+                        }
+                    }
+                    out.set4(bi, j, oy, ox, acc as f32);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut Tensor) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// 2×2 max-pool with stride 2 (NCHW). Spatial dims must be even.
+pub fn maxpool2(x: &Tensor) -> Result<Tensor> {
+    if x.ndim() != 4 || x.shape()[2] % 2 != 0 || x.shape()[3] % 2 != 0 {
+        return Err(Error::Shape(format!("maxpool2: bad shape {:?}", x.shape())));
+    }
+    let (bs, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let mut out = Tensor::zeros(&[bs, c, h / 2, w / 2]);
+    for bi in 0..bs {
+        for ci in 0..c {
+            for oy in 0..h / 2 {
+                for ox in 0..w / 2 {
+                    let v = x
+                        .at4(bi, ci, 2 * oy, 2 * ox)
+                        .max(x.at4(bi, ci, 2 * oy, 2 * ox + 1))
+                        .max(x.at4(bi, ci, 2 * oy + 1, 2 * ox))
+                        .max(x.at4(bi, ci, 2 * oy + 1, 2 * ox + 1));
+                    out.set4(bi, ci, oy, ox, v);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Dense layer y = x·W + b for 2-D activations [B, in] × [in, out].
+pub fn dense(x: &Tensor, w: &Tensor, b: &[f32]) -> Result<Tensor> {
+    let mut y = crate::linalg::gemm(x, w)?;
+    if b.len() != y.shape()[1] {
+        return Err(Error::Shape(format!(
+            "dense bias {} != out {}",
+            b.len(),
+            y.shape()[1]
+        )));
+    }
+    let cols = y.shape()[1];
+    for r in 0..y.shape()[0] {
+        for (v, bv) in y.row_mut(r).iter_mut().zip(b) {
+            *v += bv;
+        }
+        let _ = cols;
+    }
+    Ok(y)
+}
+
+/// Row-wise softmax.
+pub fn softmax(x: &Tensor) -> Result<Tensor> {
+    if x.ndim() != 2 {
+        return Err(Error::Shape("softmax wants [B, C]".into()));
+    }
+    let mut out = x.clone();
+    for r in 0..out.shape()[0] {
+        let row = out.row_mut(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    Ok(out)
+}
+
+/// Row-wise argmax (predicted class ids).
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    (0..x.shape()[0])
+        .map(|r| {
+            x.row(r)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Additive Gaussian noise (the feature-transmission baseline's defence
+/// mechanism — [13] adds noise to extracted features).
+pub fn add_gaussian_noise(x: &mut Tensor, std: f32, rng: &mut crate::rng::Rng) {
+    for v in x.data_mut() {
+        *v += rng.normal_f32() * std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1 is the identity map
+        let mut r = Rng::new(0);
+        let x = Tensor::new(&[1, 2, 4, 4], r.normal_vec(32, 1.0)).unwrap();
+        let mut w = Tensor::zeros(&[2, 2, 1, 1]);
+        w.set4(0, 0, 0, 0, 1.0);
+        w.set4(1, 1, 0, 0, 1.0);
+        let y = conv2d_same(&x, &w, None).unwrap();
+        assert!(y.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 3x3 all-ones kernel over a constant image: interior = 9, corner = 4
+        let x = Tensor::full(&[1, 1, 4, 4], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let y = conv2d_same(&x, &w, None).unwrap();
+        assert_eq!(y.at4(0, 0, 1, 1), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(y.at4(0, 0, 0, 1), 6.0);
+    }
+
+    #[test]
+    fn conv_bias() {
+        let x = Tensor::zeros(&[1, 1, 2, 2]);
+        let w = Tensor::zeros(&[2, 1, 1, 1]);
+        let y = conv2d_same(&x, &w, Some(&[1.5, -2.0])).unwrap();
+        assert_eq!(y.at4(0, 0, 0, 0), 1.5);
+        assert_eq!(y.at4(0, 1, 1, 1), -2.0);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor::new(&[3], vec![-1.0, 0.0, 2.0]).unwrap();
+        relu(&mut t);
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = Tensor::new(
+            &[1, 1, 2, 4],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+        )
+        .unwrap();
+        let y = maxpool2(&x).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 1, 2]);
+        assert_eq!(y.data(), &[6.0, 8.0]);
+        assert!(maxpool2(&Tensor::zeros(&[1, 1, 3, 3])).is_err());
+    }
+
+    #[test]
+    fn dense_and_softmax() {
+        let x = Tensor::new(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let w = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let y = dense(&x, &w, &[0.5, -0.5]).unwrap();
+        assert_eq!(y.data(), &[1.5, 1.5]);
+        let s = softmax(&y).unwrap();
+        assert!((s.data()[0] - 0.5).abs() < 1e-6);
+        let sum: f32 = s.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let x = Tensor::new(&[2, 3], vec![0.0, 2.0, 1.0, 5.0, -1.0, 3.0]).unwrap();
+        assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+
+    #[test]
+    fn noise_changes_values_with_right_scale() {
+        let mut r = Rng::new(3);
+        let mut t = Tensor::zeros(&[10_000]);
+        add_gaussian_noise(&mut t, 2.0, &mut r);
+        let var: f64 = t.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / t.numel() as f64;
+        assert!((var - 4.0).abs() < 0.3, "var={var}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Network catalogs: audited per-layer MAC counts for the architectures
+//! the paper quotes (VGG-16 on CIFAR and ImageNet, ResNet-152 on
+//! ImageNet). Only convolution + dense layers carry MACs; pooling/ReLU
+//! are free in this accounting (standard practice).
+
+use crate::Geometry;
+
+/// One MAC-bearing layer.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    /// MACs for a single input image.
+    pub macs: u64,
+}
+
+/// A network as a list of layers + its first-layer geometry.
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub first_layer: Geometry,
+    /// Output spatial size of the first layer (differs from m when the
+    /// first conv is strided, e.g. ResNet's 7×7/2 stem: n_out = 112).
+    pub first_layer_n_out: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetworkSpec {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+/// MACs of a conv layer: in·k²·out·oh·ow.
+fn conv_macs(cin: u64, k: u64, cout: u64, oh: u64, ow: u64) -> u64 {
+    cin * k * k * cout * oh * ow
+}
+
+/// VGG-16 configuration D conv stack: (out_channels, layers) per block.
+const VGG16_BLOCKS: [(u64, u64); 5] =
+    [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+
+/// VGG-16 adapted to 32×32 CIFAR inputs (conv stack + 512→512→10 heads,
+/// the standard CIFAR adaptation; ~313M MACs).
+pub fn vgg16_cifar() -> NetworkSpec {
+    let mut layers = Vec::new();
+    let mut cin = 3u64;
+    let mut size = 32u64;
+    for (b, &(cout, reps)) in VGG16_BLOCKS.iter().enumerate() {
+        for r in 0..reps {
+            layers.push(LayerSpec {
+                name: format!("conv{}_{}", b + 1, r + 1),
+                macs: conv_macs(cin, 3, cout, size, size),
+            });
+            cin = cout;
+        }
+        size /= 2; // 2x2 maxpool
+    }
+    layers.push(LayerSpec { name: "fc1".into(), macs: 512 * 512 });
+    layers.push(LayerSpec { name: "fc2".into(), macs: 512 * 10 });
+    NetworkSpec {
+        name: "VGG-16/CIFAR".into(),
+        first_layer: Geometry::CIFAR_VGG16,
+        first_layer_n_out: 32,
+        layers,
+    }
+}
+
+/// VGG-16 at the original 224×224 ImageNet resolution (~15.47G MACs).
+pub fn vgg16_imagenet() -> NetworkSpec {
+    let mut layers = Vec::new();
+    let mut cin = 3u64;
+    let mut size = 224u64;
+    for (b, &(cout, reps)) in VGG16_BLOCKS.iter().enumerate() {
+        for r in 0..reps {
+            layers.push(LayerSpec {
+                name: format!("conv{}_{}", b + 1, r + 1),
+                macs: conv_macs(cin, 3, cout, size, size),
+            });
+            cin = cout;
+        }
+        size /= 2;
+    }
+    layers.push(LayerSpec { name: "fc1".into(), macs: 25088 * 4096 });
+    layers.push(LayerSpec { name: "fc2".into(), macs: 4096 * 4096 });
+    layers.push(LayerSpec { name: "fc3".into(), macs: 4096 * 1000 });
+    NetworkSpec {
+        name: "VGG-16/ImageNet".into(),
+        first_layer: Geometry::new(3, 224, 64, 3),
+        first_layer_n_out: 224,
+        layers,
+    }
+}
+
+/// ResNet-152 bottleneck stage: (blocks, mid_channels, out_channels, size).
+const R152_STAGES: [(u64, u64, u64, u64); 4] = [
+    (3, 64, 256, 56),
+    (8, 128, 512, 28),
+    (36, 256, 1024, 14),
+    (3, 512, 2048, 7),
+];
+
+/// ResNet-152 at 224×224 (~11.3G MACs, audited bottleneck-by-bottleneck).
+pub fn resnet152_imagenet() -> NetworkSpec {
+    let mut layers = Vec::new();
+    // stem: 7x7/2, 64 out, 112x112
+    layers.push(LayerSpec {
+        name: "conv1".into(),
+        macs: conv_macs(3, 7, 64, 112, 112),
+    });
+    let mut cin = 64u64;
+    for (s, &(blocks, mid, cout, size)) in R152_STAGES.iter().enumerate() {
+        for b in 0..blocks {
+            // 1x1 reduce, 3x3, 1x1 expand (output spatial = `size`; the
+            // stride-2 reduction in the first block of stages 2-4 is
+            // approximated at the stage's output size, standard accounting)
+            layers.push(LayerSpec {
+                name: format!("res{}_{}_1x1a", s + 2, b + 1),
+                macs: conv_macs(cin, 1, mid, size, size),
+            });
+            layers.push(LayerSpec {
+                name: format!("res{}_{}_3x3", s + 2, b + 1),
+                macs: conv_macs(mid, 3, mid, size, size),
+            });
+            layers.push(LayerSpec {
+                name: format!("res{}_{}_1x1b", s + 2, b + 1),
+                macs: conv_macs(mid, 1, cout, size, size),
+            });
+            if b == 0 {
+                layers.push(LayerSpec {
+                    name: format!("res{}_down", s + 2),
+                    macs: conv_macs(cin, 1, cout, size, size),
+                });
+            }
+            cin = cout;
+        }
+    }
+    layers.push(LayerSpec { name: "fc".into(), macs: 2048 * 1000 });
+    NetworkSpec {
+        name: "ResNet-152/ImageNet".into(),
+        // first layer: 7x7/2, 64 channels on 224x224 -> n_out = 112.
+        first_layer: Geometry::new(3, 224, 64, 7),
+        first_layer_n_out: 112,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_cifar_total_is_canonical() {
+        let net = vgg16_cifar();
+        let g = net.total_macs() as f64 / 1e6;
+        // canonical ~313M MACs for VGG-16 conv stack at 32x32
+        assert!((g - 313.0).abs() < 20.0, "VGG-16/CIFAR = {g:.1}M MACs");
+        assert_eq!(net.depth(), 13 + 2);
+    }
+
+    #[test]
+    fn vgg16_imagenet_total_is_canonical() {
+        let net = vgg16_imagenet();
+        let g = net.total_macs() as f64 / 1e9;
+        // canonical 15.3-15.5G MACs
+        assert!((g - 15.4).abs() < 0.3, "VGG-16/ImageNet = {g:.2}G MACs");
+    }
+
+    #[test]
+    fn resnet152_total_is_canonical() {
+        let net = resnet152_imagenet();
+        let g = net.total_macs() as f64 / 1e9;
+        // canonical ~11.3G MACs (torchvision reports 11.56 GFLOPs MAC-counted)
+        assert!((g - 11.3).abs() < 1.0, "ResNet-152 = {g:.2}G MACs");
+        // 152 weighted conv layers + fc + downsamples
+        assert!(net.depth() > 150);
+    }
+
+    #[test]
+    fn first_conv_macs_match_geometry_formula() {
+        let net = vgg16_cifar();
+        let g = net.first_layer;
+        assert_eq!(
+            net.layers[0].macs,
+            crate::overhead::conv1_macs(&g) as u64
+        );
+    }
+}

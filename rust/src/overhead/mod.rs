@@ -1,0 +1,233 @@
+//! Overhead accounting (paper §4.3 + Table 1).
+//!
+//! Reproduces the paper's computational- and transmission-overhead numbers
+//! from geometry alone:
+//!
+//! * provider compute per image (eq. 16, zero blocks omitted): the audited
+//!   block-diagonal count is κ·q² = αm²·q MACs per image (the paper prints
+//!   `αq²`, which coincides at κ = α);
+//! * developer compute overhead (eq. 17): (m²−p²)·αβn² extra MACs from
+//!   replacing the p×p conv with the dense d2r GEMM;
+//! * transmission overhead: the paper's eq. states O_data = (αm²)² "equals
+//!   the number of elements in C^ac" and derives 5.12 % for CIFAR — note
+//!   that C^ac actually has αm²·βn² elements; we reproduce the paper's
+//!   formula *and* report the audited size (see EXPERIMENTS.md for the
+//!   discrepancy discussion).
+//!
+//! [`catalog`] carries per-layer MAC counts for VGG-16 (CIFAR + ImageNet)
+//! and ResNet-152 so ratios like the ResNet "10×" are reproduced from
+//! audited per-layer numbers, not assumed.
+
+pub mod catalog;
+
+use crate::Geometry;
+use catalog::NetworkSpec;
+
+/// Morphing MACs per image on the provider (block-diagonal, zeros omitted):
+/// κ blocks × q² = αm²·q.
+pub fn provider_macs_per_image(g: &Geometry, kappa: usize) -> usize {
+    let q = g.d_len() / kappa;
+    g.d_len() * q
+}
+
+/// Eq. 17: extra developer MACs per image from the Aug-Conv replacement:
+/// (m² − p²)·α·β·n².
+pub fn developer_extra_macs(g: &Geometry) -> usize {
+    developer_extra_macs_n(g, g.n())
+}
+
+/// Eq. 17 with an explicit first-layer output size (strided stems such as
+/// ResNet's 7×7/2 have n ≠ m).
+pub fn developer_extra_macs_n(g: &Geometry, n_out: usize) -> usize {
+    (g.m * g.m - g.p * g.p) * g.alpha * g.beta * n_out * n_out
+}
+
+/// MACs of the *original* first convolutional layer: αp²·βn².
+pub fn conv1_macs(g: &Geometry) -> usize {
+    g.alpha * g.p * g.p * g.beta * g.n() * g.n()
+}
+
+/// MACs of the Aug-Conv layer (dense [1, αm²] × [αm², βn²]).
+pub fn aug_conv_macs(g: &Geometry) -> usize {
+    g.d_len() * g.f_len()
+}
+
+/// Audited C^ac size: αm² × βn² elements (what actually crosses the wire).
+pub fn c_ac_elements(g: &Geometry) -> usize {
+    g.d_len() * g.f_len()
+}
+
+/// The paper's §4.3 O_data formula: (αm²)² elements — the number behind
+/// the quoted 5.12 % (3072² / (60000·3072) = 3072/60000).
+pub fn paper_o_data_elements(g: &Geometry) -> usize {
+    g.d_len() * g.d_len()
+}
+
+/// Full overhead report for a (network, dataset, κ) configuration.
+#[derive(Debug, Clone)]
+pub struct OverheadReport {
+    pub network: String,
+    pub geometry: Geometry,
+    pub kappa: usize,
+    pub dataset_images: usize,
+    /// Total network MACs per image (catalog).
+    pub network_macs: u64,
+    /// Developer-side extra MACs per image (eq. 17).
+    pub dev_extra_macs: u64,
+    /// Developer computational overhead ratio vs the audited network MACs.
+    pub dev_overhead_ratio: f64,
+    /// Provider-side morphing MACs per image (eq. 16 audited form).
+    pub provider_macs: u64,
+    /// Provider morphing as a fraction of one network forward pass.
+    pub provider_ratio: f64,
+    /// Paper-formula O_data = (αm²)² and its dataset ratio (the 5.12 %).
+    pub paper_o_data: u64,
+    pub paper_data_ratio: f64,
+    /// Audited C^ac elements and dataset ratio.
+    pub c_ac_elements: u64,
+    pub audited_data_ratio: f64,
+}
+
+impl OverheadReport {
+    pub fn analyze(net: &NetworkSpec, kappa: usize, dataset_images: usize) -> Self {
+        let g = net.first_layer;
+        let network_macs = net.total_macs();
+        let dev_extra = developer_extra_macs_n(&g, net.first_layer_n_out) as u64;
+        let provider = provider_macs_per_image(&g, kappa) as u64;
+        let cac = c_ac_elements(&g) as u64;
+        let paper_od = paper_o_data_elements(&g) as u64;
+        let dataset_elems = (dataset_images * g.d_len()) as f64;
+        Self {
+            network: net.name.clone(),
+            geometry: g,
+            kappa,
+            dataset_images,
+            network_macs,
+            dev_extra_macs: dev_extra,
+            dev_overhead_ratio: dev_extra as f64 / network_macs as f64,
+            provider_macs: provider,
+            provider_ratio: provider as f64 / network_macs as f64,
+            paper_o_data: paper_od,
+            paper_data_ratio: paper_od as f64 / dataset_elems,
+            c_ac_elements: cac,
+            audited_data_ratio: cac as f64 / dataset_elems,
+        }
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{}: kappa={} network={:.3}G MACs/img",
+            self.network,
+            self.kappa,
+            self.network_macs as f64 / 1e9
+        );
+        println!(
+            "  developer overhead: +{:.3}G MACs/img = {:.1}% of network  [eq. 17]",
+            self.dev_extra_macs as f64 / 1e9,
+            self.dev_overhead_ratio * 100.0
+        );
+        println!(
+            "  provider morphing:  {:.3}M MACs/img = {:.3}% of network  [eq. 16]",
+            self.provider_macs as f64 / 1e6,
+            self.provider_ratio * 100.0
+        );
+        println!(
+            "  data transmission:  paper O_data=(am^2)^2 {:.1}M elems = {:.2}% of dataset; \
+             audited C^ac {:.1}M elems = {:.1}%",
+            self.paper_o_data as f64 / 1e6,
+            self.paper_data_ratio * 100.0,
+            self.c_ac_elements as f64 / 1e6,
+            self.audited_data_ratio * 100.0
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::catalog;
+
+    #[test]
+    fn formulas_cifar_vgg16() {
+        let g = Geometry::CIFAR_VGG16;
+        // eq. 17: (1024-9)*3*64*1024 = 199,557,120
+        assert_eq!(developer_extra_macs(&g), (1024 - 9) * 3 * 64 * 1024);
+        // audited C^ac: 3072 * 65536
+        assert_eq!(c_ac_elements(&g), 3072 * 65536);
+        // paper O_data: 3072^2
+        assert_eq!(paper_o_data_elements(&g), 3072 * 3072);
+        // provider at MS (κ=1): 3072^2; at κ=3: 3072*1024
+        assert_eq!(provider_macs_per_image(&g, 1), 3072 * 3072);
+        assert_eq!(provider_macs_per_image(&g, 3), 3072 * 1024);
+        // conv1 + extra = aug-conv total
+        assert_eq!(conv1_macs(&g), 3 * 9 * 64 * 1024);
+        assert_eq!(aug_conv_macs(&g), conv1_macs(&g) + developer_extra_macs(&g));
+    }
+
+    /// §4.3: "O_data is 5.12% to the whole dataset" — exact under the
+    /// paper's (αm²)² formula: 3072²/(60000·3072) = 3072/60000 = 5.12 %.
+    #[test]
+    fn paper_five_point_one_two_percent() {
+        let net = catalog::vgg16_cifar();
+        let r = OverheadReport::analyze(&net, 1, 60_000);
+        assert!(
+            (r.paper_data_ratio - 0.0512).abs() < 1e-6,
+            "paper data overhead {:.5}",
+            r.paper_data_ratio
+        );
+        // audited C^ac is beta*n^2/d_len = 21.33x larger
+        assert!((r.audited_data_ratio / r.paper_data_ratio - 64.0 / 3.0).abs() < 1e-6);
+    }
+
+    /// eq. 17 ratio vs our audited VGG-16-CIFAR MAC count. The paper quotes
+    /// 9 %, which is not derivable from VGG-16's CIFAR MACs (313M); the
+    /// audited ratio is ~64 %. Documented in EXPERIMENTS.md §Discrepancies.
+    #[test]
+    fn audited_vgg16_cifar_ratio() {
+        let net = catalog::vgg16_cifar();
+        let r = OverheadReport::analyze(&net, 1, 60_000);
+        assert!(
+            r.dev_overhead_ratio > 0.4 && r.dev_overhead_ratio < 0.9,
+            "dev overhead {:.4}",
+            r.dev_overhead_ratio
+        );
+    }
+
+    /// §4.3: "10 times for ResNet-152 network on ImageNet dataset" — this
+    /// one *is* derivable: (224²−49)·3·64·112² / 11.3G ≈ 10.7×.
+    #[test]
+    fn paper_resnet_ten_x() {
+        let net = catalog::resnet152_imagenet();
+        let r = OverheadReport::analyze(&net, 1, 1_281_167);
+        assert!(
+            r.dev_overhead_ratio > 8.0 && r.dev_overhead_ratio < 13.0,
+            "dev overhead {:.2} not ~10x",
+            r.dev_overhead_ratio
+        );
+    }
+
+    /// §4.3: "For large dataset like ImageNet, O_data is merely 1%" under
+    /// the paper formula: (3·224²)²/(1.28M·3·224²) = 150528/1.28M ≈ 11.7 %…
+    /// the paper's 1 % needs the JPEG-compressed dataset size; with raw
+    /// elements the ratio is ~12 %. Assert the formula value.
+    #[test]
+    fn paper_imagenet_o_data() {
+        let net = catalog::resnet152_imagenet();
+        let r = OverheadReport::analyze(&net, 1, 1_281_167);
+        let want = 150_528.0 / 1_281_167.0;
+        assert!(
+            (r.paper_data_ratio - want).abs() < 1e-4,
+            "paper data overhead {:.4} want {want:.4}",
+            r.paper_data_ratio
+        );
+    }
+
+    #[test]
+    fn provider_ratio_shrinks_with_kappa() {
+        let net = catalog::vgg16_cifar();
+        let r1 = OverheadReport::analyze(&net, 1, 60_000);
+        let r3 = OverheadReport::analyze(&net, 3, 60_000);
+        assert!(r3.provider_macs * 3 == r1.provider_macs);
+        assert!(r3.provider_ratio < r1.provider_ratio);
+    }
+}

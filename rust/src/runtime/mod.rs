@@ -1,0 +1,217 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only place the `xla` crate is touched. One [`Engine`] owns
+//! the PJRT CPU client and a cache of compiled executables keyed by
+//! artifact name, so each HLO module is parsed + compiled exactly once per
+//! process and then reused on the hot path. Python never runs here — the
+//! artifacts are produced ahead of time by `make artifacts`.
+
+use crate::manifest::{ArtifactEntry, DType, Manifest};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Mutex;
+
+/// A typed runtime value crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    /// f32 tensor.
+    T(Tensor),
+    /// i32 vector (labels).
+    I(Vec<i32>),
+    /// f32 scalar (learning rate …).
+    S(f32),
+}
+
+impl From<Tensor> for Arg {
+    fn from(t: Tensor) -> Self {
+        Arg::T(t)
+    }
+}
+
+/// The PJRT execution engine.
+///
+/// PJRT handles wrap raw pointers and are not `Send`: an `Engine` lives on
+/// one thread (the serving worker constructs its own — see
+/// [`crate::coordinator::batcher`]).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT engine up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn prepare(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        log::info!("compiled {name} in {:.1}ms", t0.elapsed().as_secs_f64() * 1e3);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with typed args; returns the flattened tuple of
+    /// f32 output tensors (shapes from the manifest signature).
+    pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.artifact(name)?.clone();
+        self.validate_args(&entry, args)?;
+        let exe = self.prepare(name)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(arg_to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| Error::Runtime(format!("{name}: empty result")))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let elems = out.to_tuple()?;
+        if elems.len() != entry.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} outputs, got {}",
+                entry.outputs.len(),
+                elems.len()
+            )));
+        }
+        elems
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, sig)| literal_to_tensor(&lit, &sig.shape))
+            .collect()
+    }
+
+    fn validate_args(&self, entry: &ArtifactEntry, args: &[Arg]) -> Result<()> {
+        if args.len() != entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                args.len()
+            )));
+        }
+        for (i, (arg, sig)) in args.iter().zip(&entry.inputs).enumerate() {
+            let ok = match (arg, sig.dtype) {
+                (Arg::T(t), DType::F32) => t.shape() == &sig.shape[..] ,
+                (Arg::I(v), DType::I32) => sig.shape == [v.len()],
+                (Arg::S(_), DType::F32) => sig.shape.is_empty(),
+                _ => false,
+            };
+            if !ok {
+                return Err(Error::Runtime(format!(
+                    "{}: input {i} mismatch: sig {:?} {:?}, arg {}",
+                    entry.name,
+                    sig.shape,
+                    sig.dtype,
+                    match arg {
+                        Arg::T(t) => format!("f32 tensor {:?}", t.shape()),
+                        Arg::I(v) => format!("i32 vec len {}", v.len()),
+                        Arg::S(_) => "f32 scalar".to_string(),
+                    }
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn arg_to_literal(a: &Arg) -> Result<xla::Literal> {
+    match a {
+        Arg::T(t) => {
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+        }
+        Arg::I(v) => Ok(xla::Literal::vec1(v.as_slice())),
+        Arg::S(s) => Ok(xla::Literal::scalar(*s)),
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::path::PathBuf;
+
+    fn engine() -> Engine {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = Manifest::load(&dir).expect("run `make artifacts` first");
+        Engine::new(m).unwrap()
+    }
+
+    #[test]
+    fn morph_artifact_matches_rust_morph() {
+        // The AOT Pallas morph kernel and the rust MorphKey::morph must
+        // agree: same algebra, two implementations, two languages.
+        let eng = engine();
+        let g = crate::Geometry::SMALL;
+        let key = crate::morph::MorphKey::generate(g, 16, 7).unwrap();
+        let mut rng = Rng::new(3);
+        let d = Tensor::new(&[8, g.d_len()], rng.normal_vec(8 * g.d_len(), 1.0)).unwrap();
+
+        let rust_t = key.morph(&d).unwrap();
+        let out = eng
+            .exec(
+                "morph_apply_small_q48_b8",
+                &[Arg::T(d), Arg::T(key.core().clone())],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(
+            out[0].allclose(&rust_t, 1e-4, 1e-4),
+            "XLA morph != rust morph (max diff {})",
+            out[0].max_abs_diff(&rust_t).unwrap()
+        );
+    }
+
+    #[test]
+    fn arg_validation_catches_mismatches() {
+        let eng = engine();
+        // wrong arity
+        assert!(eng.exec("morph_apply_small_q48_b8", &[]).is_err());
+        // wrong shape
+        let bad = Tensor::zeros(&[8, 10]);
+        let core = Tensor::zeros(&[48, 48]);
+        assert!(eng
+            .exec("morph_apply_small_q48_b8", &[Arg::T(bad), Arg::T(core)])
+            .is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let eng = engine();
+        let a = eng.prepare("morph_apply_small_q48_b8").unwrap();
+        let b = eng.prepare("morph_apply_small_q48_b8").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+}

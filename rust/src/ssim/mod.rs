@@ -1,0 +1,193 @@
+//! Structural similarity (SSIM) index — Wang et al. 2004.
+//!
+//! The paper uses SSIM between the original image **D** and the morphed
+//! image **T** to quantify privacy-preserving effectiveness (fig. 4(b)):
+//! lower SSIM ⇒ less recognizable ⇒ better privacy. This implementation
+//! follows the reference formulation: 11×11 Gaussian window (σ = 1.5),
+//! K₁ = 0.01, K₂ = 0.03, per-window statistics averaged over the image.
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+const K1: f64 = 0.01;
+const K2: f64 = 0.03;
+const WIN: usize = 11;
+const SIGMA: f64 = 1.5;
+
+/// Precomputed 11×11 Gaussian window, normalized to sum 1.
+fn gaussian_window() -> [f64; WIN * WIN] {
+    let mut w = [0.0; WIN * WIN];
+    let c = (WIN / 2) as f64;
+    let mut sum = 0.0;
+    for y in 0..WIN {
+        for x in 0..WIN {
+            let dy = y as f64 - c;
+            let dx = x as f64 - c;
+            let v = (-(dx * dx + dy * dy) / (2.0 * SIGMA * SIGMA)).exp();
+            w[y * WIN + x] = v;
+            sum += v;
+        }
+    }
+    for v in &mut w {
+        *v /= sum;
+    }
+    w
+}
+
+/// SSIM between two single-channel images [h, w] over a given dynamic
+/// range `l` (e.g. 1.0 for [0,1]-scaled images).
+pub fn ssim_plane(a: &Tensor, b: &Tensor, l: f64) -> Result<f64> {
+    if a.ndim() != 2 || a.shape() != b.shape() {
+        return Err(Error::Shape(format!(
+            "ssim wants equal 2-D shapes, got {:?} vs {:?}",
+            a.shape(),
+            b.shape()
+        )));
+    }
+    let (h, w) = (a.shape()[0], a.shape()[1]);
+    if h < WIN || w < WIN {
+        return Err(Error::Shape(format!(
+            "image {h}x{w} smaller than the {WIN}x{WIN} SSIM window"
+        )));
+    }
+    let win = gaussian_window();
+    let c1 = (K1 * l) * (K1 * l);
+    let c2 = (K2 * l) * (K2 * l);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for oy in 0..=(h - WIN) {
+        for ox in 0..=(w - WIN) {
+            let (mut mu_a, mut mu_b) = (0.0f64, 0.0f64);
+            for y in 0..WIN {
+                for x in 0..WIN {
+                    let g = win[y * WIN + x];
+                    mu_a += g * a.at2(oy + y, ox + x) as f64;
+                    mu_b += g * b.at2(oy + y, ox + x) as f64;
+                }
+            }
+            let (mut var_a, mut var_b, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+            for y in 0..WIN {
+                for x in 0..WIN {
+                    let g = win[y * WIN + x];
+                    let da = a.at2(oy + y, ox + x) as f64 - mu_a;
+                    let db = b.at2(oy + y, ox + x) as f64 - mu_b;
+                    var_a += g * da * da;
+                    var_b += g * db * db;
+                    cov += g * da * db;
+                }
+            }
+            let s = ((2.0 * mu_a * mu_b + c1) * (2.0 * cov + c2))
+                / ((mu_a * mu_a + mu_b * mu_b + c1) * (var_a + var_b + c2));
+            total += s;
+            count += 1;
+        }
+    }
+    Ok(total / count as f64)
+}
+
+/// Mean SSIM over the channels of an NCHW image pair [α, m, m].
+pub fn ssim_image(a: &Tensor, b: &Tensor, l: f64) -> Result<f64> {
+    if a.ndim() != 3 || a.shape() != b.shape() {
+        return Err(Error::Shape(format!(
+            "ssim_image wants equal [C, H, W], got {:?} vs {:?}",
+            a.shape(),
+            b.shape()
+        )));
+    }
+    let (c, h, w) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+    let mut total = 0.0;
+    for ch in 0..c {
+        let pa = Tensor::new(&[h, w], a.data()[ch * h * w..][..h * w].to_vec())?;
+        let pb = Tensor::new(&[h, w], b.data()[ch * h * w..][..h * w].to_vec())?;
+        total += ssim_plane(&pa, &pb, l)?;
+    }
+    Ok(total / c as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn natural_ish(h: usize, w: usize, seed: u64) -> Tensor {
+        // smooth image: sum of a few low-frequency sinusoids
+        let mut r = Rng::new(seed);
+        let (f1, f2) = (r.f64() * 4.0 + 1.0, r.f64() * 4.0 + 1.0);
+        let mut t = Tensor::zeros(&[h, w]);
+        for y in 0..h {
+            for x in 0..w {
+                let v = 0.5
+                    + 0.25 * (f1 * y as f64 / h as f64 * std::f64::consts::TAU).sin()
+                    + 0.25 * (f2 * x as f64 / w as f64 * std::f64::consts::TAU).cos();
+                t.set2(y, x, v as f32);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn identical_images_score_one() {
+        let a = natural_ish(16, 16, 1);
+        let s = ssim_plane(&a, &a, 1.0).unwrap();
+        assert!((s - 1.0).abs() < 1e-9, "ssim(a,a)={s}");
+    }
+
+    #[test]
+    fn unrelated_noise_scores_low() {
+        let a = natural_ish(16, 16, 2);
+        let mut r = Rng::new(3);
+        let b = Tensor::new(&[16, 16], r.normal_vec(256, 0.5)).unwrap();
+        let s = ssim_plane(&a, &b, 1.0).unwrap();
+        assert!(s < 0.35, "ssim(a, noise)={s}");
+    }
+
+    #[test]
+    fn small_perturbation_scores_high() {
+        let a = natural_ish(16, 16, 4);
+        let mut b = a.clone();
+        let mut r = Rng::new(5);
+        crate::nn::add_gaussian_noise(&mut b, 0.005, &mut r);
+        let s = ssim_plane(&a, &b, 1.0).unwrap();
+        assert!(s > 0.95, "ssim(a, a+tiny)={s}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = natural_ish(16, 16, 6);
+        let b = natural_ish(16, 16, 7);
+        let ab = ssim_plane(&a, &b, 1.0).unwrap();
+        let ba = ssim_plane(&b, &a, 1.0).unwrap();
+        assert!((ab - ba).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_noise() {
+        // more noise -> lower SSIM: the property fig. 4(b) relies on
+        let a = natural_ish(16, 16, 8);
+        let mut last = 1.1;
+        for (i, std) in [0.01f32, 0.05, 0.2, 0.8].iter().enumerate() {
+            let mut b = a.clone();
+            let mut r = Rng::new(100 + i as u64);
+            crate::nn::add_gaussian_noise(&mut b, *std, &mut r);
+            let s = ssim_plane(&a, &b, 1.0).unwrap();
+            assert!(s < last, "ssim not monotone: {s} !< {last} at std={std}");
+            last = s;
+        }
+    }
+
+    #[test]
+    fn multichannel_averages() {
+        let a = natural_ish(16, 16, 9);
+        let mut data = a.data().to_vec();
+        data.extend_from_slice(a.data());
+        let img = Tensor::new(&[2, 16, 16], data).unwrap();
+        let s = ssim_image(&img, &img, 1.0).unwrap();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn too_small_rejected() {
+        let a = Tensor::zeros(&[4, 4]);
+        assert!(ssim_plane(&a, &a, 1.0).is_err());
+    }
+}

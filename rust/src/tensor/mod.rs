@@ -1,0 +1,297 @@
+//! Dense row-major f32 tensors.
+//!
+//! A deliberately small substrate: everything MoLe moves around — images,
+//! d2r rows, morphing cores, C/C^ac matrices, feature maps — is a dense
+//! f32 array. PJRT literals are built from these buffers in [`crate::runtime`].
+
+use crate::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data (len must match the shape product).
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            )));
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let numel = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; numel] }
+    }
+
+    /// Identity matrix [n, n].
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of dimensions.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Raw data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying buffer.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} ({} elems) to {:?}",
+                self.shape,
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// 2-D element access (row, col).
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// 2-D element assignment.
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        &self.data[r * w..(r + 1) * w]
+    }
+
+    /// Mutable row slice of a 2-D tensor.
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        &mut self.data[r * w..(r + 1) * w]
+    }
+
+    /// 4-D element access (NCHW order used throughout).
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 4);
+        let (_, cc, hh, ww) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    /// 4-D element assignment.
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 4);
+        let (_, cc, hh, ww) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w] = v;
+    }
+
+    /// Elementwise in-place: self += other.
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        self.check_same_shape(other)?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// Elementwise in-place: self -= other.
+    pub fn sub_assign(&mut self, other: &Tensor) -> Result<()> {
+        self.check_same_shape(other)?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        Ok(())
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// l² norm of the flattened tensor.
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Normalize to unit l² norm (paper Def. 1). No-op on the zero tensor.
+    pub fn normalize_l2(&mut self) {
+        let n = self.l2_norm();
+        if n > 0.0 {
+            let inv = (1.0 / n) as f32;
+            self.scale(inv);
+        }
+    }
+
+    /// Root-mean-square difference to another tensor — the paper's
+    /// E_sd(D^r, 𝒟^r) standard-deviation distance (Lemma 2).
+    pub fn rms_diff(&self, other: &Tensor) -> Result<f64> {
+        self.check_same_shape(other)?;
+        let sse: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum();
+        Ok((sse / self.data.len() as f64).sqrt())
+    }
+
+    /// Max absolute difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
+        self.check_same_shape(other)?;
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .fold(0.0, f64::max))
+    }
+
+    /// Approximate comparison for tests: |a−b| ≤ atol + rtol·|b|.
+    pub fn allclose(&self, other: &Tensor, rtol: f64, atol: f64) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(&a, &b)| {
+            let (a, b) = (a as f64, b as f64);
+            (a - b).abs() <= atol + rtol * b.abs()
+        })
+    }
+
+    fn check_same_shape(&self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_len() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn eye_and_at2() {
+        let e = Tensor::eye(3);
+        assert_eq!(e.at2(1, 1), 1.0);
+        assert_eq!(e.at2(1, 2), 0.0);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::new(&[2, 6], (0..12).map(|v| v as f32).collect()).unwrap();
+        let t = t.reshape(&[3, 4]).unwrap();
+        assert_eq!(t.at2(2, 3), 11.0);
+        assert!(t.clone().reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn nchw_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 4]);
+        t.set4(1, 2, 3, 0, 9.0);
+        assert_eq!(t.at4(1, 2, 3, 0), 9.0);
+        // linear position: ((1*3+2)*4+3)*4+0 = 92
+        assert_eq!(t.data()[92], 9.0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut a = Tensor::full(&[4], 2.0);
+        let b = Tensor::full(&[4], 0.5);
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.data(), &[2.5; 4]);
+        a.sub_assign(&b).unwrap();
+        a.scale(2.0);
+        assert_eq!(a.data(), &[4.0; 4]);
+        assert!(a.add_assign(&Tensor::zeros(&[5])).is_err());
+    }
+
+    #[test]
+    fn norms_and_distance() {
+        let mut a = Tensor::new(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((a.l2_norm() - 5.0).abs() < 1e-12);
+        a.normalize_l2();
+        assert!((a.l2_norm() - 1.0).abs() < 1e-6);
+
+        let x = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let y = Tensor::new(&[2], vec![2.0, 4.0]).unwrap();
+        // SSE = 1 + 4 = 5; rms = sqrt(5/2)
+        assert!((x.rms_diff(&y).unwrap() - (2.5f64).sqrt()).abs() < 1e-9);
+        assert_eq!(x.max_abs_diff(&y).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(&[2], vec![1.0, 1.0 + 1e-6]).unwrap();
+        let b = Tensor::new(&[2], vec![1.0, 1.0]).unwrap();
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 0.0));
+        assert!(!a.allclose(&Tensor::zeros(&[3]), 1.0, 1.0));
+    }
+}

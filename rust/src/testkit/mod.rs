@@ -1,0 +1,103 @@
+//! Mini property-testing harness (proptest is unavailable offline —
+//! DESIGN.md §5). Seeded generators + a `forall` runner that reports the
+//! failing seed/case so failures reproduce deterministically.
+
+use crate::rng::Rng;
+
+/// Number of cases per property (overridable via `MOLE_PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("MOLE_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` receives a per-case rng;
+/// on failure the panic message includes the case index and base seed.
+pub fn forall<T: std::fmt::Debug>(
+    base_seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (base_seed={base_seed}):\n  \
+                 input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    /// Random tensor with N(0, std²) entries.
+    pub fn tensor(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, rng.normal_vec(n, std)).unwrap()
+    }
+
+    /// Random usize in [lo, hi].
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Pick one of the provided values.
+    pub fn one_of<T: Copy>(rng: &mut Rng, opts: &[T]) -> T {
+        opts[rng.below(opts.len())]
+    }
+}
+
+/// Assertion helper for float closeness returning Result for `forall`.
+pub fn check_close(got: f64, want: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (got - want).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: got {got}, want {want} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall(
+            1,
+            16,
+            |rng| gen::usize_in(rng, 1, 100),
+            |&n| {
+                if n >= 1 && n <= 100 {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {n}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 8, |rng| rng.below(10), |&n| {
+            if n < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn check_close_tolerance() {
+        assert!(check_close(1.0, 1.005, 0.01, "x").is_ok());
+        assert!(check_close(1.0, 2.0, 0.01, "x").is_err());
+    }
+}

