@@ -6,6 +6,7 @@
 //! ½σ^(N−1) — utterly negligible even at toy sizes, which the empirical
 //! trial distribution here demonstrates.
 
+use crate::backend::Backend as _;
 use crate::morph::MorphKey;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -74,7 +75,7 @@ pub fn brute_force_attack(
             Err(_) => continue, // singular guess: wasted trial
         };
         // recover with the guessed core (block-diagonal apply)
-        let rec = apply_blockdiag(&t, &inv)?;
+        let rec = crate::backend::active().apply_blockdiag(&t, &inv)?;
         // E_sd in the paper's Lemma-2 normalization: the l2 distance
         // between the unit-norm D^r and the recovery (so sigma compares
         // against the unit hypersphere, unrelated vectors sit near
@@ -140,29 +141,6 @@ pub fn bounded_recovery(
     crate::d2r::roll(rec, g.alpha, g.m)
 }
 
-fn apply_blockdiag(rows: &Tensor, core: &Tensor) -> Result<Tensor> {
-    let q = core.shape()[0];
-    let d = rows.shape()[1];
-    let kappa = d / q;
-    let b = rows.shape()[0];
-    let mut out = Tensor::zeros(&[b, d]);
-    for bi in 0..b {
-        let src = rows.row(bi).to_vec();
-        let dst = out.row_mut(bi);
-        for blk in 0..kappa {
-            let xs = &src[blk * q..(blk + 1) * q];
-            let ys = &mut dst[blk * q..(blk + 1) * q];
-            for (i, &xv) in xs.iter().enumerate() {
-                let crow = core.row(i);
-                for (yv, &cv) in ys.iter_mut().zip(crow) {
-                    *yv += xv * cv;
-                }
-            }
-        }
-    }
-    Ok(out)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,7 +179,9 @@ mod tests {
             .unwrap();
         d.normalize_l2();
         let t = key.morph(&d).unwrap();
-        let rec = apply_blockdiag(&t, key.core_inv()).unwrap();
+        let rec = crate::backend::active()
+            .apply_blockdiag(&t, key.core_inv())
+            .unwrap();
         assert!(rec.rms_diff(&d).unwrap() < 1e-5);
         let _ = g;
     }

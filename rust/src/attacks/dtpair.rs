@@ -8,7 +8,8 @@
 //! fresh rows the core is recovered to machine precision; with fewer the
 //! system is rank-deficient and held-out data stays protected.
 
-use crate::linalg::{gemm, Lu};
+use crate::backend::Backend as _;
+use crate::linalg::Lu;
 use crate::morph::MorphKey;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -70,13 +71,14 @@ pub fn dt_pair_attack(
     }
     // pad missing equations with zero rows -> singular when under-supplied
 
+    let be = crate::backend::active();
     let solved_core = Lu::decompose(&dmat)
         .and_then(|lu| {
             // M' = D^{-1} T, column by column
             let mut m = Tensor::zeros(&[q, q]);
             for j in 0..q {
                 let col: Vec<f32> = (0..q).map(|i| tmat.at2(i, j)).collect();
-                let x = lu.solve(&col)?;
+                let x = be.lu_solve(&lu, &col)?;
                 for i in 0..q {
                     m.set2(i, j, x[i]);
                 }
@@ -91,7 +93,7 @@ pub fn dt_pair_attack(
             // recover held-out data with the attacked core
             let inv = Lu::decompose(&rec_core)?.inverse()?;
             let t_hold = key.morph(holdout)?;
-            let rec = blockdiag_apply(&t_hold, &inv)?;
+            let rec = crate::backend::active().apply_blockdiag(&t_hold, &inv)?;
             let esd = rec.rms_diff(holdout)?;
             (err < 1e-2, err, esd)
         }
@@ -103,22 +105,6 @@ pub fn dt_pair_attack(
     };
 
     Ok(DtPairOutcome { rows_used, q, solved, core_max_err, holdout_esd })
-}
-
-fn blockdiag_apply(rows: &Tensor, core: &Tensor) -> Result<Tensor> {
-    let q = core.shape()[0];
-    let b = rows.shape()[0];
-    let d = rows.shape()[1];
-    let kappa = d / q;
-    let mut out = Tensor::zeros(&[b, d]);
-    for bi in 0..b {
-        for blk in 0..kappa {
-            let x = Tensor::new(&[1, q], rows.row(bi)[blk * q..(blk + 1) * q].to_vec())?;
-            let y = gemm(&x, core)?;
-            out.row_mut(bi)[blk * q..(blk + 1) * q].copy_from_slice(y.data());
-        }
-    }
-    Ok(out)
 }
 
 #[cfg(test)]

@@ -21,6 +21,7 @@
 //! This is the operational content of eq. 13's κ_mc boundary; the module
 //! demonstrates both regimes for real.
 
+use crate::backend::Backend as _;
 use crate::linalg::{gemm, transpose, Lu};
 use crate::morph::MorphKey;
 use crate::tensor::Tensor;
@@ -88,12 +89,13 @@ pub fn reversing_attack(
             gram.set2(i, i, v);
         }
         let rhs = gemm(&u, &c_t)?;
+        let be = crate::backend::active();
         let m_hat = match Lu::decompose(&gram) {
             Ok(lu) => {
                 let mut m = Tensor::zeros(&[q, q]);
                 let mut ok = true;
                 for i in 0..q {
-                    match lu.solve(rhs.row(i)) {
+                    match be.lu_solve(&lu, rhs.row(i)) {
                         Ok(x) => m.row_mut(i).copy_from_slice(&x),
                         Err(_) => {
                             ok = false;
@@ -133,15 +135,7 @@ pub fn reversing_attack(
     let probe_esd = match best {
         Some((_, m_inv_rec)) => {
             let t = key.morph(probe)?;
-            let kappa = key.kappa();
-            let mut rec = Tensor::zeros(probe.shape());
-            for bi in 0..probe.shape()[0] {
-                for k in 0..kappa {
-                    let x = Tensor::new(&[1, q], t.row(bi)[k * q..(k + 1) * q].to_vec())?;
-                    let y = gemm(&x, &m_inv_rec)?;
-                    rec.row_mut(bi)[k * q..(k + 1) * q].copy_from_slice(y.data());
-                }
-            }
+            let rec = crate::backend::active().apply_blockdiag(&t, &m_inv_rec)?;
             rec.rms_diff(probe)?
         }
         None => f64::INFINITY,

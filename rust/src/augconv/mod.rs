@@ -10,8 +10,8 @@
 //! computed block-row-wise: κ GEMMs of [q, q] × [q, βn²] instead of one
 //! (αm²)² multiplication.
 
+use crate::backend::Backend;
 use crate::d2r;
-use crate::linalg::gemm_slices;
 use crate::morph::MorphKey;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -125,8 +125,16 @@ pub fn build_aug_conv(
 }
 
 /// Core combination step, exposed for the attack harness: C^ac from an
-/// existing C matrix (block-row GEMM + column-group shuffle).
-pub fn build_aug_conv_from_c(
+/// existing C matrix (block-row GEMM + column-group shuffle), on the
+/// process-wide active backend.
+pub fn build_aug_conv_from_c(c: &Tensor, key: &MorphKey, perm: &ChannelPerm) -> Result<Tensor> {
+    build_aug_conv_from_c_on(crate::backend::active(), c, key, perm)
+}
+
+/// [`build_aug_conv_from_c`] on an explicit backend (the hot-path bench
+/// compares backends on exactly this build).
+pub fn build_aug_conv_from_c_on(
+    be: &dyn Backend,
     c: &Tensor,
     key: &MorphKey,
     perm: &ChannelPerm,
@@ -150,7 +158,8 @@ pub fn build_aug_conv_from_c(
         let a = core_inv.data();
         let b = &c.data()[blk * q * f_len..(blk + 1) * q * f_len];
         let out = &mut prod.data_mut()[blk * q * f_len..(blk + 1) * q * f_len];
-        gemm_slices(q, q, f_len, a, b, out);
+        // prod is freshly zeroed: accumulate=true avoids re-clearing
+        be.gemm_slices(q, q, f_len, a, b, out, true);
     }
     // feature channel randomization: shuffle the beta column groups
     let n2 = g.n() * g.n();

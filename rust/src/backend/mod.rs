@@ -1,0 +1,315 @@
+//! Pluggable compute backends for the hot-path linear algebra.
+//!
+//! Every dense kernel MoLe runs in anger — the Aug-Conv **M′**⁻¹·**C**
+//! construction, batched d2r morphing, the attack solves, the interpreter
+//! engine's training/inference GEMMs — dispatches through the [`Backend`]
+//! trait so implementations can be swapped without touching the callers:
+//!
+//! * [`RefBackend`] — the cache-blocked single-threaded kernel (the
+//!   original `linalg::gemm` code, moved here verbatim; the semantics
+//!   oracle every other backend is tested against).
+//! * [`ParallelBackend`] — the same kernel fanned out over row panels with
+//!   `std::thread::scope` (no extra dependencies). Per-row accumulation
+//!   order is identical to [`RefBackend`], so outputs match bit-for-bit.
+//!
+//! Selection: the first selection wins for the whole process. The `mole`
+//! launcher resolves `--backend` flag > `MOLE_BACKEND` env var > the
+//! `[backend]` config section and calls [`install`]; library/test use
+//! that never installs falls back lazily at first GEMM to `MOLE_BACKEND`
+//! or the auto default (parallel when the machine has >1 core).
+//! `linalg::gemm`/`gemm_into` delegate to [`active`], so code that does
+//! not care about backends keeps calling the same free functions it
+//! always did.
+//!
+//! Future backends (SIMD-intrinsic, GPU, sharded serving) plug in by
+//! implementing the trait and registering a name in [`by_name`].
+
+mod parallel;
+mod reference;
+
+pub use parallel::ParallelBackend;
+pub use reference::RefBackend;
+
+use crate::linalg::Lu;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::sync::OnceLock;
+
+/// A dense-compute implementation. All methods must be semantically
+/// equivalent to [`RefBackend`]; parallel implementations must keep the
+/// per-element accumulation order (f32 addition is not associative, and
+/// the parity tests assert exact agreement).
+pub trait Backend: Send + Sync {
+    /// Short identifier ("ref", "parallel") for logs and benches.
+    fn name(&self) -> &'static str;
+
+    /// Raw-slice GEMM: row-major `c[m,n] = a[m,k]·b[k,n]` when
+    /// `accumulate` is false, `c += a·b` when true.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_slices(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        accumulate: bool,
+    );
+
+    /// `C = A·B` for 2-D tensors.
+    fn gemm(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let (m, k, n) = gemm_dims(a, b)?;
+        let mut c = Tensor::zeros(&[m, n]);
+        // the buffer is freshly zeroed: accumulate=true skips a second
+        // clearing pass over m*n with bitwise-identical results
+        self.gemm_slices(m, k, n, a.data(), b.data(), c.data_mut(), true);
+        Ok(c)
+    }
+
+    /// GEMM into an existing output tensor; `accumulate` selects
+    /// `C += A·B` (true) vs `C = A·B` (false) explicitly.
+    fn gemm_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, accumulate: bool) -> Result<()> {
+        let (m, k, n) = gemm_dims(a, b)?;
+        if c.shape() != [m, n] {
+            return Err(Error::Shape(format!(
+                "gemm_into output {:?} != [{m}, {n}]",
+                c.shape()
+            )));
+        }
+        self.gemm_slices(m, k, n, a.data(), b.data(), c.data_mut(), accumulate);
+        Ok(())
+    }
+
+    /// Batched block-diagonal apply — the morphing hot path (eq. 2/4).
+    ///
+    /// `rows` is [B, κ·q], `core` is [q, q]; each q-block of each row is
+    /// multiplied by the shared core: `out_blk = in_blk · core`.
+    fn apply_blockdiag(&self, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
+        let (b, q, _kappa) = blockdiag_dims(rows, core)?;
+        let mut out = Tensor::zeros(&[b, rows.shape()[1]]);
+        reference::blockdiag_rows(rows.data(), core.data(), q, rows.shape()[1], out.data_mut());
+        Ok(out)
+    }
+
+    /// Linear solve through an existing LU decomposition (the D-T pair
+    /// attack and condition estimation paths).
+    fn lu_solve(&self, lu: &Lu, rhs: &[f32]) -> Result<Vec<f32>> {
+        lu.solve(rhs)
+    }
+}
+
+/// Validate GEMM operand shapes, returning (m, k, n).
+pub(crate) fn gemm_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
+    if a.ndim() != 2 || b.ndim() != 2 {
+        return Err(Error::Shape("gemm wants 2-D tensors".into()));
+    }
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!(
+            "gemm inner dims mismatch: [{m},{k}] x [{k2},{n}]"
+        )));
+    }
+    Ok((m, k, n))
+}
+
+/// Validate block-diagonal operand shapes, returning (batch, q, kappa).
+pub(crate) fn blockdiag_dims(rows: &Tensor, core: &Tensor) -> Result<(usize, usize, usize)> {
+    if rows.ndim() != 2 || core.ndim() != 2 || core.shape()[0] != core.shape()[1] {
+        return Err(Error::Shape(format!(
+            "apply_blockdiag wants rows [B, d] and a square core, got {:?} / {:?}",
+            rows.shape(),
+            core.shape()
+        )));
+    }
+    let q = core.shape()[0];
+    let d = rows.shape()[1];
+    if q == 0 || d % q != 0 {
+        return Err(Error::Shape(format!(
+            "apply_blockdiag: core size {q} does not divide row length {d}"
+        )));
+    }
+    Ok((rows.shape()[0], q, d / q))
+}
+
+static ACTIVE: OnceLock<Box<dyn Backend>> = OnceLock::new();
+
+/// The process-wide backend. First use wins: [`install`] (config), the
+/// `MOLE_BACKEND` env var, or the auto default.
+pub fn active() -> &'static dyn Backend {
+    ACTIVE
+        .get_or_init(|| match std::env::var("MOLE_BACKEND") {
+            Ok(name) => by_name(&name, 0).unwrap_or_else(|_| {
+                crate::logging::warn(&format!(
+                    "MOLE_BACKEND={name:?} is not a backend; using auto"
+                ));
+                auto()
+            }),
+            Err(_) => auto(),
+        })
+        .as_ref()
+}
+
+/// Install the process-wide backend from a config selection. Returns an
+/// error for unknown names; if a backend was already activated (first
+/// GEMM already ran) the existing one is kept — including its thread
+/// count — and the ignored request is logged.
+pub fn install(kind: &str, threads: usize) -> Result<()> {
+    let chosen = by_name(kind, threads)?;
+    let name = chosen.name();
+    if ACTIVE.set(chosen).is_err() {
+        crate::logging::warn(&format!(
+            "backend {name:?} (threads={threads}) requested but {:?} was already \
+             activated; request ignored",
+            active().name()
+        ));
+    }
+    Ok(())
+}
+
+/// Construct a backend by name: "ref" | "parallel" | "auto".
+/// `threads` is the worker count for parallel backends (0 = one per core).
+pub fn by_name(kind: &str, threads: usize) -> Result<Box<dyn Backend>> {
+    match kind {
+        "ref" | "reference" | "single" => Ok(Box::new(RefBackend::new())),
+        "parallel" | "par" => Ok(Box::new(ParallelBackend::new(threads))),
+        "auto" | "" => Ok(auto()),
+        other => Err(Error::Config(format!(
+            "unknown backend {other:?} (expected ref|parallel|auto)"
+        ))),
+    }
+}
+
+/// The automatic default: parallel on multi-core machines, ref otherwise.
+pub fn auto() -> Box<dyn Backend> {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores > 1 {
+        Box::new(ParallelBackend::new(0))
+    } else {
+        Box::new(RefBackend::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                c[i * n + j] = s as f32;
+            }
+        }
+        c
+    }
+
+    fn backends() -> Vec<Box<dyn Backend>> {
+        vec![
+            Box::new(RefBackend::new()),
+            Box::new(ParallelBackend::new(0)),
+            Box::new(ParallelBackend::new(3)),
+        ]
+    }
+
+    #[test]
+    fn both_backends_match_naive() {
+        let mut r = Rng::new(2);
+        for be in backends() {
+            for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (17, 33, 9), (70, 300, 130)] {
+                let a: Vec<f32> = r.normal_vec(m * k, 1.0);
+                let b: Vec<f32> = r.normal_vec(k * n, 1.0);
+                let want = naive(m, k, n, &a, &b);
+                let mut got = vec![0.0f32; m * n];
+                be.gemm_slices(m, k, n, &a, &b, &mut got, false);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-3 + 1e-4 * w.abs(),
+                        "{}: {g} vs {w}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_flag_is_explicit() {
+        for be in backends() {
+            let a = Tensor::full(&[2, 2], 1.0);
+            let b = Tensor::eye(2);
+            let mut c = Tensor::full(&[2, 2], 10.0);
+            be.gemm_into(&a, &b, &mut c, true).unwrap();
+            assert_eq!(c.data(), &[11.0, 11.0, 11.0, 11.0], "{} acc", be.name());
+            be.gemm_into(&a, &b, &mut c, false).unwrap();
+            assert_eq!(c.data(), &[1.0, 1.0, 1.0, 1.0], "{} overwrite", be.name());
+        }
+    }
+
+    #[test]
+    fn gemm_shape_errors() {
+        for be in backends() {
+            let a = Tensor::zeros(&[2, 3]);
+            let bad = Tensor::zeros(&[4, 5]);
+            assert!(be.gemm(&a, &bad).is_err());
+            let b = Tensor::zeros(&[3, 5]);
+            assert_eq!(be.gemm(&a, &b).unwrap().shape(), &[2, 5]);
+            let mut small = Tensor::zeros(&[2, 4]);
+            assert!(be.gemm_into(&a, &b, &mut small, false).is_err());
+        }
+    }
+
+    #[test]
+    fn blockdiag_matches_full_gemm() {
+        let mut r = Rng::new(5);
+        let (bsz, q, kappa) = (3usize, 8usize, 4usize);
+        let rows = Tensor::new(&[bsz, q * kappa], r.normal_vec(bsz * q * kappa, 1.0)).unwrap();
+        let core = Tensor::new(&[q, q], r.normal_vec(q * q, 1.0)).unwrap();
+        // dense equivalent: block-diagonal matrix multiply
+        let mut full = Tensor::zeros(&[q * kappa, q * kappa]);
+        for blk in 0..kappa {
+            for i in 0..q {
+                for j in 0..q {
+                    full.set2(blk * q + i, blk * q + j, core.at2(i, j));
+                }
+            }
+        }
+        let reference = RefBackend::new().gemm(&rows, &full).unwrap();
+        for be in backends() {
+            let got = be.apply_blockdiag(&rows, &core).unwrap();
+            assert!(
+                got.allclose(&reference, 1e-4, 1e-4),
+                "{} blockdiag mismatch",
+                be.name()
+            );
+        }
+    }
+
+    #[test]
+    fn blockdiag_shape_errors() {
+        let be = RefBackend::new();
+        let rows = Tensor::zeros(&[2, 10]);
+        let core = Tensor::zeros(&[3, 3]); // 3 does not divide 10
+        assert!(be.apply_blockdiag(&rows, &core).is_err());
+        let rect = Tensor::zeros(&[2, 5]);
+        assert!(be.apply_blockdiag(&rows, &rect).is_err());
+    }
+
+    #[test]
+    fn by_name_selection() {
+        assert_eq!(by_name("ref", 0).unwrap().name(), "ref");
+        assert_eq!(by_name("parallel", 2).unwrap().name(), "parallel");
+        assert!(by_name("gpu", 0).is_err());
+        let _ = by_name("auto", 0).unwrap();
+        // active() is callable and stable
+        assert_eq!(active().name(), active().name());
+    }
+}

@@ -1,0 +1,127 @@
+//! The reference single-threaded backend: the original cache-blocked
+//! axpy GEMM kernel, unchanged semantics. Every other backend is tested
+//! for exact agreement against this one.
+
+use super::{blockdiag_dims, Backend};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Block sizes tuned for ~32 KiB L1 / 1 MiB L2 on the test machine
+/// (see EXPERIMENTS.md §Perf for the sweep).
+const MC: usize = 64; // rows of A per block
+const KC: usize = 256; // depth per block
+const NC: usize = 1024; // columns of B per block
+
+/// Cache-blocked single-threaded GEMM.
+///
+/// Row-major C = A·B implemented as an axpy-style rank-1-per-k update
+/// inside L1-sized blocks: for each (i, k) the inner loop is
+/// `c_row[j] += a_ik * b_row[j]`, which LLVM vectorizes to FMA lanes under
+/// `-C target-cpu=native`. Blocking keeps the active B panel in L2.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RefBackend;
+
+impl RefBackend {
+    pub fn new() -> Self {
+        RefBackend
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn gemm_slices(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        accumulate: bool,
+    ) {
+        gemm_kernel(m, k, n, a, b, c, accumulate);
+    }
+
+    fn apply_blockdiag(&self, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
+        let (bsz, q, _kappa) = blockdiag_dims(rows, core)?;
+        let d = rows.shape()[1];
+        let mut out = Tensor::zeros(&[bsz, d]);
+        blockdiag_rows(rows.data(), core.data(), q, d, out.data_mut());
+        Ok(out)
+    }
+}
+
+/// The shared micro-kernel: `c[m,n] (+)= a[m,k]·b[k,n]`, all row-major.
+/// Also the work unit the parallel backend hands to each thread (with `a`
+/// and `c` sliced to a row panel), which is what keeps outputs bitwise
+/// identical across backends.
+pub(crate) fn gemm_kernel(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        for v in c.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                // micro block: axpy over rows
+                for i in ic..ic + mb {
+                    let a_row = &a[i * k + pc..i * k + pc + kb];
+                    let c_row = &mut c[i * n + jc..i * n + jc + nb];
+                    for (dk, &aik) in a_row.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue; // morphing matrices are block-sparse
+                        }
+                        let b_row = &b[(pc + dk) * n + jc..(pc + dk) * n + jc + nb];
+                        for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Block-diagonal work unit over a contiguous range of rows: for each row
+/// of `rows` (length `d` each, `d = kappa*q`) every q-block is multiplied
+/// by the shared `core` [q, q] with the vecmat-style axpy order the morph
+/// path has always used. `out` must be zeroed on entry.
+pub(crate) fn blockdiag_rows(rows: &[f32], core: &[f32], q: usize, d: usize, out: &mut [f32]) {
+    debug_assert_eq!(rows.len(), out.len());
+    debug_assert_eq!(rows.len() % d, 0);
+    debug_assert_eq!(core.len(), q * q);
+    let kappa = d / q;
+    for (src, dst) in rows.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        for blk in 0..kappa {
+            let xs = &src[blk * q..(blk + 1) * q];
+            let ys = &mut dst[blk * q..(blk + 1) * q];
+            for (i, &xv) in xs.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let crow = &core[i * q..(i + 1) * q];
+                for (yv, &cv) in ys.iter_mut().zip(crow) {
+                    *yv += xv * cv;
+                }
+            }
+        }
+    }
+}

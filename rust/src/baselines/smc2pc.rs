@@ -208,8 +208,12 @@ impl Smc2pcReport {
             let sec = engine.conv_layer(&img, &w1)?;
             t_2pc += t0.elapsed().as_secs_f64();
 
+            // plain-path timing uses the production conv (im2col + the
+            // active backend GEMM) so the Table-1 ratio reflects what MoLe
+            // actually runs, not the scalar oracle
             let t0 = std::time::Instant::now();
-            let plain = crate::nn::conv2d_same(
+            let plain = crate::nn::conv2d_same_gemm(
+                crate::backend::active(),
                 &img.clone().reshape(&[1, g.alpha, g.m, g.m])?,
                 &w1,
                 None,

@@ -118,6 +118,11 @@ pub struct MoleConfig {
     pub data_seed: u64,
     pub train_per_class: usize,
     pub test_per_class: usize,
+    /// Compute backend for the hot-path linalg: "auto" | "ref" |
+    /// "parallel" (see [`crate::backend`]).
+    pub backend: String,
+    /// Worker threads for parallel backends (0 = one per core).
+    pub backend_threads: usize,
 }
 
 impl Default for MoleConfig {
@@ -135,6 +140,8 @@ impl Default for MoleConfig {
             data_seed: 7,
             train_per_class: 320,
             test_per_class: 64,
+            backend: "auto".to_string(),
+            backend_threads: 0,
         }
     }
 }
@@ -163,6 +170,8 @@ impl MoleConfig {
             data_seed: raw.get_u64("data", "seed", d.data_seed)?,
             train_per_class: raw.get_usize("data", "train_per_class", d.train_per_class)?,
             test_per_class: raw.get_usize("data", "test_per_class", d.test_per_class)?,
+            backend: raw.get_or("backend", "kind", &d.backend).to_string(),
+            backend_threads: raw.get_usize("backend", "threads", d.backend_threads)?,
         })
     }
 
@@ -173,6 +182,12 @@ impl MoleConfig {
         } else {
             Ok(Self::default())
         }
+    }
+
+    /// Activate the configured compute backend for this process (no-op if
+    /// a backend was already selected by env var or first use).
+    pub fn install_backend(&self) -> Result<()> {
+        crate::backend::install(&self.backend, self.backend_threads)
     }
 }
 
@@ -225,6 +240,21 @@ lr = 0.1
         let raw = RawConfig::parse("[mole]\ngeometry = \"weird\"\n").unwrap();
         assert!(MoleConfig::from_raw(&raw).is_err());
         assert!(RawConfig::parse("keyonly\n").is_err());
+    }
+
+    #[test]
+    fn backend_section() {
+        let raw =
+            RawConfig::parse("[backend]\nkind = \"parallel\"\nthreads = 4\n").unwrap();
+        let cfg = MoleConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.backend, "parallel");
+        assert_eq!(cfg.backend_threads, 4);
+        // default is auto with per-core threads
+        assert_eq!(MoleConfig::default().backend, "auto");
+        assert_eq!(MoleConfig::default().backend_threads, 0);
+        // unknown kinds surface as config errors on install
+        let bad = MoleConfig { backend: "quantum".into(), ..MoleConfig::default() };
+        assert!(bad.install_backend().is_err());
     }
 
     #[test]

@@ -110,7 +110,9 @@ impl<'e> DeveloperNode<'e> {
                     accs.push(a);
                     steps += 1;
                     if steps % 50 == 0 {
-                        log::info!("developer: step {steps} loss={l:.4} acc={a:.3}");
+                        crate::logging::info(&format!(
+                            "developer: step {steps} loss={l:.4} acc={a:.3}"
+                        ));
                     }
                 }
                 Message::EndOfData => break,

@@ -160,12 +160,12 @@ fn run_group(
         losses.push(l);
         accs.push(a);
         if cfg.log_every > 0 && (step + 1) % cfg.log_every == 0 {
-            log::info!(
+            crate::logging::info(&format!(
                 "[{}] step {}/{} loss={l:.4} acc={a:.3}",
                 trainer.variant().name(),
                 step + 1,
                 cfg.steps
-            );
+            ));
         }
     }
     let (test_loss, test_acc) = trainer.evaluate(&dataset.test, transform)?;

@@ -115,12 +115,12 @@ impl ProviderNode {
         // 3. build + ship the Aug-Conv layer
         let t0 = std::time::Instant::now();
         let layer = self.build_layer(&w1, &b1)?;
-        log::info!(
+        crate::logging::info(&format!(
             "provider: built C^ac ({}x{}) in {:.1}ms",
             layer.matrix().shape()[0],
             layer.matrix().shape()[1],
             t0.elapsed().as_secs_f64() * 1e3
-        );
+        ));
         self.send(
             stream,
             &Message::AugConv {
@@ -139,11 +139,11 @@ impl ProviderNode {
             self.batches_sent.inc();
         }
         self.send(stream, &Message::EndOfData)?;
-        log::info!(
+        crate::logging::info(&format!(
             "provider: session done, {} batches / {} bytes",
             self.batches_sent.get(),
             self.bytes_sent.get()
-        );
+        ));
         Ok(())
     }
 

@@ -1,53 +1,77 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! default build carries no external crates, so there is no `thiserror`).
 
 /// Unified error for the MoLe crate.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Geometry constraint violated (κ divisibility, shape mismatch …).
-    #[error("geometry error: {0}")]
     Geometry(String),
 
     /// Shape mismatch in tensor/linalg operations.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// A matrix that must be invertible is (numerically) singular.
-    #[error("singular matrix: {0}")]
     Singular(String),
 
     /// Key-vault / key-material errors (missing key, bad magic, tamper).
-    #[error("key error: {0}")]
     Key(String),
 
     /// Delivery-protocol framing or state-machine violations.
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// Artifact manifest problems (missing artifact, bad signature).
-    #[error("manifest error: {0}")]
     Manifest(String),
 
-    /// PJRT runtime failures (compile, execute, literal conversion).
-    #[error("runtime error: {0}")]
+    /// Runtime failures (interpreter or PJRT: compile, execute, dispatch).
     Runtime(String),
 
     /// JSON parse errors (mini parser in [`crate::json`]).
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Configuration file / CLI argument errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Anything I/O.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Errors bubbled up from the xla crate.
-    #[error("xla error: {0}")]
+    /// Errors bubbled up from the xla crate (`pjrt` feature builds).
     Xla(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Geometry(m) => write!(f, "geometry error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Singular(m) => write!(f, "singular matrix: {m}"),
+            Error::Key(m) => write!(f, "key error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -74,5 +98,6 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -10,9 +10,9 @@
 //! protocol — only `T^r` and `C^ac` do (§4.1 HBC surface).
 
 use crate::augconv::ChannelPerm;
+use crate::hash::{to_hex, Sha256};
 use crate::morph::MorphKey;
 use crate::{Error, Geometry, Result};
-use sha2::{Digest, Sha256};
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -48,7 +48,7 @@ impl KeyBundle {
         let mut h = Sha256::new();
         h.update(MAGIC);
         h.update(self.encode_body());
-        hex(&h.finalize())
+        to_hex(&h.finalize())
     }
 
     fn encode_body(&self) -> Vec<u8> {
@@ -136,14 +136,6 @@ impl KeyBundle {
         std::fs::File::open(path)?.read_to_end(&mut bytes)?;
         Self::from_bytes(&bytes)
     }
-}
-
-fn hex(bytes: &[u8]) -> String {
-    let mut s = String::with_capacity(bytes.len() * 2);
-    for b in bytes {
-        s.push_str(&format!("{b:02x}"));
-    }
-    s
 }
 
 #[cfg(test)]

@@ -2,17 +2,29 @@
 //!
 //! A full-system reproduction of *"Towards Efficient and Secure Delivery of
 //! Data for Training and Inference with Privacy-Preserving"* (Shen, Liu,
-//! Chen, Li): data morphing + Augmented Convolutional (Aug-Conv) layers, as
-//! a three-layer Rust + JAX + Pallas stack.
+//! Chen, Li): data morphing + Augmented Convolutional (Aug-Conv) layers.
 //!
-//! Layer map:
-//! * **L3 (this crate)** — the delivery coordinator: provider/developer
-//!   nodes, morphing + key infrastructure, Aug-Conv construction, a
-//!   router + dynamic batcher for serving on morphed data, the attack
-//!   harness, overhead accounting and the Table-1 baselines.
-//! * **L2/L1 (python/, build time only)** — the VGG model, the morphing
-//!   and d2r-GEMM Pallas kernels, AOT-lowered to HLO text in `artifacts/`,
-//!   executed here through PJRT ([`runtime`]).
+//! Layer map (bottom to top):
+//! * **Compute backends ([`backend`])** — the pluggable dense-kernel
+//!   layer every hot path dispatches through: `RefBackend` (cache-blocked
+//!   single-threaded oracle) and `ParallelBackend` (row-panel scoped
+//!   threads, bitwise-identical outputs). Selected via the `[backend]`
+//!   config section, `MOLE_BACKEND`, or auto (parallel on multi-core).
+//!   Future SIMD/GPU/sharded backends plug in here.
+//! * **Linear algebra ([`linalg`], [`tensor`])** — tensor GEMM entry
+//!   points delegating to the active backend, plus LU / inversion /
+//!   norms.
+//! * **Runtime ([`runtime`], [`manifest`])** — one `Engine` surface with
+//!   two implementations: the default pure-Rust *interpreter* (executes
+//!   every artifact kind against in-crate ops; no files, no external
+//!   deps) and, behind the `pjrt` cargo feature, the PJRT/XLA path that
+//!   runs the AOT-lowered HLO artifacts from `python/` (`make
+//!   artifacts`). The manifest falls back to a built-in contract when no
+//!   `artifacts/` directory exists, so the default build is
+//!   self-contained.
+//! * **Delivery system ([`coordinator`])** — the Fig.-1 protocol between
+//!   data provider and developer, training on morphed streams, and the
+//!   dynamic-batching serving path.
 //!
 //! Quick orientation:
 //! * [`morph`] — morphing matrix **M** (block-diagonal, core **M′**) and
@@ -21,14 +33,13 @@
 //!   (paper §3.1, eq. 1).
 //! * [`augconv`] — **C**^ac = **M**⁻¹·**C** + feature channel
 //!   randomization (paper §3.3).
-//! * [`coordinator`] — the Fig.-1 protocol between data provider and
-//!   developer, plus the serving path.
 //! * [`attacks`] / [`security`] — §4.2's three attacks, operational and
 //!   theoretical.
 //! * [`overhead`] / [`baselines`] — §4.3 and Table 1.
 
 pub mod attacks;
 pub mod augconv;
+pub mod backend;
 pub mod baselines;
 pub mod bench;
 pub mod cli;
@@ -37,6 +48,7 @@ pub mod coordinator;
 pub mod d2r;
 pub mod data;
 pub mod error;
+pub mod hash;
 pub mod json;
 pub mod keys;
 pub mod linalg;

@@ -1,81 +1,29 @@
-//! Cache-blocked single-threaded GEMM.
+//! Tensor-level GEMM entry points.
 //!
-//! Row-major C = A·B implemented as an axpy-style rank-1-per-k update
-//! inside L1-sized blocks: for each (i, k) the inner loop is
-//! `c_row[j] += a_ik * b_row[j]`, which LLVM vectorizes to FMA lanes under
-//! `-C target-cpu=native`. Blocking keeps the active B panel in L2.
-//!
-//! This is the provider's workhorse (M′⁻¹·C construction, attack solves);
-//! the *serving* GEMM runs inside XLA via the AOT artifacts.
+//! These free functions are thin shims over the process-wide
+//! [`crate::backend`] (see [`crate::backend::active`]): callers that do
+//! not care which implementation runs keep using `linalg::gemm` exactly as
+//! before, while the actual kernels live in `backend::{RefBackend,
+//! ParallelBackend}`. The matrix–vector helpers stay here — they are not
+//! worth dispatching.
 
+use crate::backend::{self, Backend as _};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
-/// Block sizes tuned for ~32 KiB L1 / 1 MiB L2 on the test machine
-/// (see EXPERIMENTS.md §Perf for the sweep).
-const MC: usize = 64; // rows of A per block
-const KC: usize = 256; // depth per block
-const NC: usize = 1024; // columns of B per block
-
-/// C = A·B for 2-D tensors.
+/// C = A·B for 2-D tensors, on the active backend.
 pub fn gemm(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    if a.ndim() != 2 || b.ndim() != 2 {
-        return Err(Error::Shape("gemm wants 2-D tensors".into()));
-    }
-    let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (k2, n) = (b.shape()[0], b.shape()[1]);
-    if k != k2 {
-        return Err(Error::Shape(format!(
-            "gemm inner dims mismatch: [{m},{k}] x [{k2},{n}]"
-        )));
-    }
-    let mut c = Tensor::zeros(&[m, n]);
-    gemm_slices(m, k, n, a.data(), b.data(), c.data_mut());
-    Ok(c)
+    backend::active().gemm(a, b)
 }
 
-/// C += A·B into an existing output tensor.
-pub fn gemm_into(a: &Tensor, b: &Tensor, c: &mut Tensor) -> Result<()> {
-    let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (k2, n) = (b.shape()[0], b.shape()[1]);
-    if k != k2 || c.shape() != [m, n] {
-        return Err(Error::Shape(format!(
-            "gemm_into shapes: [{m},{k}] x [{k2},{n}] -> {:?}",
-            c.shape()
-        )));
-    }
-    gemm_slices(m, k, n, a.data(), b.data(), c.data_mut());
-    Ok(())
-}
-
-/// Raw-slice kernel: c[m,n] += a[m,k] · b[k,n], all row-major.
-pub fn gemm_slices(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for jc in (0..n).step_by(NC) {
-        let nb = NC.min(n - jc);
-        for pc in (0..k).step_by(KC) {
-            let kb = KC.min(k - pc);
-            for ic in (0..m).step_by(MC) {
-                let mb = MC.min(m - ic);
-                // micro block: axpy over rows
-                for i in ic..ic + mb {
-                    let a_row = &a[i * k + pc..i * k + pc + kb];
-                    let c_row = &mut c[i * n + jc..i * n + jc + nb];
-                    for (dk, &aik) in a_row.iter().enumerate() {
-                        if aik == 0.0 {
-                            continue; // morphing matrices are block-sparse
-                        }
-                        let b_row = &b[(pc + dk) * n + jc..(pc + dk) * n + jc + nb];
-                        for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                            *cv += aik * bv;
-                        }
-                    }
-                }
-            }
-        }
-    }
+/// GEMM into an existing output tensor on the active backend.
+///
+/// `accumulate = true` computes `C += A·B`; `false` overwrites with
+/// `C = A·B`. (Historically this function always accumulated while plain
+/// [`gemm`] overwrote — the flag makes the choice explicit at every call
+/// site.)
+pub fn gemm_into(a: &Tensor, b: &Tensor, c: &mut Tensor, accumulate: bool) -> Result<()> {
+    backend::active().gemm_into(a, b, c, accumulate)
 }
 
 /// y = A·x (matrix–vector).
@@ -120,35 +68,6 @@ mod tests {
     use super::*;
     use crate::rng::Rng;
 
-    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
-        let mut c = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                let mut s = 0.0f64;
-                for kk in 0..k {
-                    s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
-                }
-                c[i * n + j] = s as f32;
-            }
-        }
-        c
-    }
-
-    #[test]
-    fn matches_naive_various_shapes() {
-        let mut r = Rng::new(2);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (70, 300, 130)] {
-            let a: Vec<f32> = r.normal_vec(m * k, 1.0);
-            let b: Vec<f32> = r.normal_vec(k * n, 1.0);
-            let want = naive(m, k, n, &a, &b);
-            let mut got = vec![0.0f32; m * n];
-            gemm_slices(m, k, n, &a, &b, &mut got);
-            for (g, w) in got.iter().zip(&want) {
-                assert!((g - w).abs() < 1e-3 + 1e-4 * w.abs(), "{g} vs {w}");
-            }
-        }
-    }
-
     #[test]
     fn gemm_tensor_api_checks_shapes() {
         let a = Tensor::zeros(&[2, 3]);
@@ -159,12 +78,14 @@ mod tests {
     }
 
     #[test]
-    fn gemm_into_accumulates() {
+    fn gemm_into_accumulate_flag() {
         let a = Tensor::full(&[2, 2], 1.0);
         let b = Tensor::eye(2);
         let mut c = Tensor::full(&[2, 2], 10.0);
-        gemm_into(&a, &b, &mut c).unwrap();
+        gemm_into(&a, &b, &mut c, true).unwrap();
         assert_eq!(c.data(), &[11.0, 11.0, 11.0, 11.0]);
+        gemm_into(&a, &b, &mut c, false).unwrap();
+        assert_eq!(c.data(), &[1.0, 1.0, 1.0, 1.0]);
     }
 
     #[test]

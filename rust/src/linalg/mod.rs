@@ -1,15 +1,17 @@
-//! Dense linear algebra: GEMM, LU decomposition, inversion.
+//! Dense linear algebra: GEMM entry points, LU decomposition, inversion.
 //!
-//! The provider-side hot paths — building **M′**⁻¹ and the Aug-Conv GEMM
-//! **M**⁻¹·**C** — run on this module (no BLAS in the offline build).
-//! [`gemm`] is a cache-blocked, axpy-style kernel that autovectorizes under
-//! `-C target-cpu=native`; [`Lu`] is partial-pivoting LU used for matrix
-//! inversion and for the D-T pair attack's linear solve.
+//! The actual GEMM kernels live in [`crate::backend`] (reference
+//! single-threaded and row-panel parallel implementations); [`gemm`] and
+//! [`gemm_into`] here dispatch to the process-wide active backend, so this
+//! module remains the one import site for callers that don't care which
+//! implementation runs. [`Lu`] is partial-pivoting LU used for matrix
+//! inversion and for the D-T pair attack's linear solve (no BLAS/LAPACK in
+//! the offline build).
 
 mod gemm;
 mod lu;
 
-pub use gemm::{gemm, gemm_into, gemm_slices, matvec, vecmat};
+pub use gemm::{gemm, gemm_into, matvec, vecmat};
 pub use lu::{CondEstimate, Lu};
 
 use crate::tensor::Tensor;

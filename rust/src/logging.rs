@@ -1,57 +1,111 @@
-//! Tiny `log` backend (env_logger is not in the offline vendor set).
+//! Tiny self-contained logger (the default build carries no external
+//! crates, so there is no `log`/`env_logger` facade).
 //!
 //! Level comes from `MOLE_LOG` (error|warn|info|debug|trace), default
-//! `info`. Timestamps are seconds since logger init.
+//! `info`. Timestamps are seconds since logger init. Call sites use
+//! [`info`]/[`debug`]/[`warn`] with a preformatted message:
+//!
+//! ```
+//! mole::logging::info(&format!("compiled in {:.1}ms", 1.25));
+//! ```
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-struct MoleLogger {
-    start: Instant,
-    level: Level,
+/// Log severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
 }
 
-impl log::Log for MoleLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let t = self.start.elapsed().as_secs_f64();
-            eprintln!(
-                "[{t:9.3}s {:5} {}] {}",
-                record.level(),
-                record.target(),
-                record.args()
-            );
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
     }
-
-    fn flush(&self) {}
 }
 
-/// Install the logger (idempotent; subsequent calls are no-ops).
+struct Logger {
+    start: Instant,
+    max: Level,
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+fn logger() -> &'static Logger {
+    LOGGER.get_or_init(|| {
+        let max = match std::env::var("MOLE_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        Logger { start: Instant::now(), max }
+    })
+}
+
+/// Install the logger (idempotent; lazily initialized on first use, so
+/// calling this is optional — it just pins the start timestamp).
 pub fn init() {
-    let level = match std::env::var("MOLE_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    };
-    let logger = Box::new(MoleLogger { start: Instant::now(), level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(LevelFilter::Trace);
+    let _ = logger();
+}
+
+/// Whether `level` is currently emitted (lets hot paths skip formatting).
+pub fn enabled(level: Level) -> bool {
+    level <= logger().max
+}
+
+/// Emit one log line at `level`.
+pub fn log(level: Level, msg: &str) {
+    let l = logger();
+    if level <= l.max {
+        let t = l.start.elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {:5} mole] {msg}", level.label());
     }
+}
+
+pub fn error(msg: &str) {
+    log(Level::Error, msg);
+}
+
+pub fn warn(msg: &str) {
+    log(Level::Warn, msg);
+}
+
+pub fn info(msg: &str) {
+    log(Level::Info, msg);
+}
+
+pub fn debug(msg: &str) {
+    log(Level::Debug, msg);
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+        init();
+        init();
+        info("logging smoke test");
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Info);
+        assert!(Level::Debug > Level::Info);
+        // default level emits info but not debug/trace
+        assert!(enabled(Level::Error));
     }
 }

@@ -10,7 +10,9 @@
 //! * `attack [--kappa K]` — run the three §4.2 attacks at small scale
 //!
 //! Options not listed fall back to `mole.toml` ([`mole::config`]) and then
-//! to built-in defaults.
+//! to built-in defaults. `--backend ref|parallel|auto` (or the `[backend]`
+//! config section / `MOLE_BACKEND` env var) selects the compute backend
+//! for all hot-path linalg ([`mole::backend`]).
 
 use mole::cli::Args;
 use mole::config::MoleConfig;
@@ -31,6 +33,16 @@ fn run(raw: Vec<String>) -> Result<()> {
     let cfg = MoleConfig::load_or_default(Path::new(
         &args.get_or("config", "mole.toml"),
     ))?;
+    // backend precedence: --backend flag > MOLE_BACKEND env > [backend]
+    // config section. All three paths get hard validation and the
+    // configured thread count.
+    match args.get("backend") {
+        Some(kind) => mole::backend::install(kind, cfg.backend_threads)?,
+        None => match std::env::var("MOLE_BACKEND") {
+            Ok(kind) => mole::backend::install(&kind, cfg.backend_threads)?,
+            Err(_) => cfg.install_backend()?,
+        },
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("security-report") => security_report(&args),
         Some("overhead") => overhead(&args),

@@ -1,6 +1,15 @@
-//! `artifacts/manifest.json` — the contract between the python AOT
-//! pipeline and the rust runtime: artifact paths + signatures, geometry
-//! constants, and parameter-initialization shapes.
+//! The artifact manifest — the contract between the AOT pipeline and the
+//! rust runtime: artifact names + signatures, geometry constants, and
+//! parameter-initialization shapes.
+//!
+//! Two sources, one type:
+//! * **Disk** — `artifacts/manifest.json` written by `python -m
+//!   compile.aot` alongside the HLO text files ([`Manifest::from_disk`] is
+//!   true; required for the `pjrt` execution path).
+//! * **Built-in** — [`Manifest::builtin`], the same contract synthesized
+//!   in code (kept in lock-step with `python/compile/aot.py`), which the
+//!   dependency-free interpreter engine runs against when no artifacts
+//!   directory exists. [`Manifest::load`] falls back to it automatically.
 
 use crate::json::{self, Value};
 use crate::{Error, Geometry, Result};
@@ -82,6 +91,9 @@ pub struct Manifest {
     pub base_params: Vec<ParamSpec>,
     pub aug_params: Vec<ParamSpec>,
     pub artifacts: BTreeMap<String, ArtifactEntry>,
+    /// True when parsed from `manifest.json` (HLO files exist on disk);
+    /// false for the built-in interpreter contract.
+    from_disk: bool,
 }
 
 fn parse_sigs(v: &Value) -> Result<Vec<TensorSig>> {
@@ -111,13 +123,19 @@ fn parse_params(v: &Value) -> Result<Vec<ParamSpec>> {
 }
 
 impl Manifest {
-    /// Load and validate `<dir>/manifest.json`.
+    /// Load `<dir>/manifest.json` when it exists, otherwise return the
+    /// [`Manifest::builtin`] contract for the interpreter engine. Parse
+    /// errors in an *existing* manifest.json are still reported.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
+        if !path.exists() {
+            crate::logging::info(&format!(
+                "no manifest at {path:?}; using the built-in interpreter contract"
+            ));
+            return Ok(Self::builtin(dir));
+        }
         let text = std::fs::read_to_string(&path).map_err(|e| {
-            Error::Manifest(format!(
-                "cannot read {path:?} (run `make artifacts` first): {e}"
-            ))
+            Error::Manifest(format!("cannot read {path:?}: {e}"))
         })?;
         let v = json::parse(&text)?;
         let version = v.get("version")?.as_usize()?;
@@ -166,7 +184,196 @@ impl Manifest {
             base_params: parse_params(v.get("base_params")?)?,
             aug_params: parse_params(v.get("aug_params")?)?,
             artifacts,
+            from_disk: true,
         })
+    }
+
+    /// Whether HLO artifact files back this manifest on disk (required
+    /// for the `pjrt` engine; the interpreter does not care).
+    pub fn from_disk(&self) -> bool {
+        self.from_disk
+    }
+
+    /// The built-in contract, kept in lock-step with
+    /// `python/compile/aot.py::emit_all` (the `loads_real_manifest` /
+    /// `artifact_signatures_consistent` tests pin the invariants both
+    /// sides rely on).
+    pub fn builtin(dir: &Path) -> Self {
+        let small = Geometry::SMALL;
+        let cifar = Geometry::CIFAR_VGG16;
+        let mut geometries = BTreeMap::new();
+        geometries.insert("small".to_string(), small);
+        geometries.insert("cifar".to_string(), cifar);
+
+        let train_batch = 64usize;
+        let infer_batches = vec![1usize, 8, 32];
+        let eq_batch = 8usize;
+        let num_classes = 10usize;
+
+        // VGG-small stack (python/compile/model.py::base_param_shapes)
+        let (c2, c3, f1) = (16usize, 32usize, 64usize);
+        let flat = c3 * (small.m / 4) * (small.m / 4);
+        let spec = |name: &str, shape: Vec<usize>, init: &str, fan_in: usize| ParamSpec {
+            name: name.to_string(),
+            shape,
+            init: init.to_string(),
+            fan_in,
+        };
+        let base_params = vec![
+            spec("w1", vec![small.beta, small.alpha, small.p, small.p], "he", small.alpha * small.p * small.p),
+            spec("b1", vec![small.beta], "zero", 0),
+            spec("w2", vec![c2, small.beta, 3, 3], "he", small.beta * 9),
+            spec("b2", vec![c2], "zero", 0),
+            spec("w3", vec![c3, c2, 3, 3], "he", c2 * 9),
+            spec("b3", vec![c3], "zero", 0),
+            spec("wf1", vec![flat, f1], "he", flat),
+            spec("bf1", vec![f1], "zero", 0),
+            spec("wf2", vec![f1, num_classes], "he", f1),
+            spec("bf2", vec![num_classes], "zero", 0),
+        ];
+        let aug_params: Vec<ParamSpec> = base_params[2..].to_vec();
+
+        let f32sig = |shape: Vec<usize>| TensorSig { shape, dtype: DType::F32 };
+        let i32sig = |shape: Vec<usize>| TensorSig { shape, dtype: DType::I32 };
+        let psigs = |specs: &[ParamSpec]| -> Vec<TensorSig> {
+            specs.iter().map(|s| f32sig(s.shape.clone())).collect()
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: String, inputs: Vec<TensorSig>, outputs: Vec<TensorSig>, kind: &str, batch: usize, n_params: usize| {
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    path: format!("{name}.hlo.txt"),
+                    name,
+                    inputs,
+                    outputs,
+                    kind: kind.to_string(),
+                    batch,
+                    n_params,
+                },
+            );
+        };
+
+        // morphing (both geometries, same q/batch grid as aot.py)
+        for (geo_name, geo, qs, bs) in [
+            ("small", small, vec![48usize, 256, 768], vec![8usize, train_batch]),
+            ("cifar", cifar, vec![96usize, 1024, 3072], vec![8usize]),
+        ] {
+            for &q in &qs {
+                for &b in &bs {
+                    add(
+                        Self::morph_artifact(geo_name, q, b),
+                        vec![f32sig(vec![b, geo.d_len()]), f32sig(vec![q, q])],
+                        vec![f32sig(vec![b, geo.d_len()])],
+                        "morph",
+                        b,
+                        0,
+                    );
+                }
+            }
+        }
+
+        // Aug-Conv forward (serving / equivalence checks)
+        for b in [eq_batch, 32] {
+            add(
+                format!("augconv_forward_small_b{b}"),
+                vec![
+                    f32sig(vec![b, small.d_len()]),
+                    f32sig(vec![small.d_len(), small.f_len()]),
+                    f32sig(vec![small.beta]),
+                ],
+                vec![f32sig(vec![b, small.beta, small.n(), small.n()])],
+                "augconv_forward",
+                b,
+                0,
+            );
+        }
+
+        // inference
+        let nb = base_params.len();
+        let na = aug_params.len();
+        for &b in &infer_batches {
+            let mut inputs = psigs(&base_params);
+            inputs.push(f32sig(vec![b, small.alpha, small.m, small.m]));
+            add(
+                format!("infer_base_small_b{b}"),
+                inputs,
+                vec![f32sig(vec![b, num_classes])],
+                "infer_base",
+                b,
+                nb,
+            );
+            let mut inputs = vec![
+                f32sig(vec![small.d_len(), small.f_len()]),
+                f32sig(vec![small.beta]),
+            ];
+            inputs.extend(psigs(&aug_params));
+            inputs.push(f32sig(vec![b, small.d_len()]));
+            add(
+                format!("infer_aug_small_b{b}"),
+                inputs,
+                vec![f32sig(vec![b, num_classes])],
+                "infer_aug",
+                b,
+                na,
+            );
+        }
+
+        // evaluation (loss, acc on one labelled train-size batch)
+        let bt = train_batch;
+        let scalars = vec![f32sig(vec![]), f32sig(vec![])];
+        let mut inputs = psigs(&base_params);
+        inputs.push(f32sig(vec![bt, small.alpha, small.m, small.m]));
+        inputs.push(i32sig(vec![bt]));
+        add(format!("eval_base_small_b{bt}"), inputs, scalars.clone(), "eval_base", bt, nb);
+        let mut inputs = vec![
+            f32sig(vec![small.d_len(), small.f_len()]),
+            f32sig(vec![small.beta]),
+        ];
+        inputs.extend(psigs(&aug_params));
+        inputs.push(f32sig(vec![bt, small.d_len()]));
+        inputs.push(i32sig(vec![bt]));
+        add(format!("eval_aug_small_b{bt}"), inputs, scalars.clone(), "eval_aug", bt, na);
+
+        // training steps: params, momenta, x, y, lr -> params', momenta', loss, acc
+        let mut inputs = psigs(&base_params);
+        inputs.extend(psigs(&base_params));
+        inputs.push(f32sig(vec![bt, small.alpha, small.m, small.m]));
+        inputs.push(i32sig(vec![bt]));
+        inputs.push(f32sig(vec![]));
+        let mut outputs = psigs(&base_params);
+        outputs.extend(psigs(&base_params));
+        outputs.extend(scalars.clone());
+        add(format!("train_step_base_small_b{bt}"), inputs, outputs, "train_step_base", bt, nb);
+
+        let mut inputs = vec![
+            f32sig(vec![small.d_len(), small.f_len()]),
+            f32sig(vec![small.beta]),
+        ];
+        inputs.extend(psigs(&aug_params));
+        inputs.extend(psigs(&aug_params));
+        inputs.push(f32sig(vec![bt, small.d_len()]));
+        inputs.push(i32sig(vec![bt]));
+        inputs.push(f32sig(vec![]));
+        let mut outputs = psigs(&aug_params);
+        outputs.extend(psigs(&aug_params));
+        outputs.extend(scalars);
+        add(format!("train_step_aug_small_b{bt}"), inputs, outputs, "train_step_aug", bt, na);
+
+        Self {
+            dir: dir.to_path_buf(),
+            geometries,
+            train_batch,
+            infer_batches,
+            eq_batch,
+            num_classes,
+            momentum: 0.9,
+            base_params,
+            aug_params,
+            artifacts,
+            from_disk: false,
+        }
     }
 
     /// Look up an artifact by name.
@@ -205,8 +412,10 @@ mod tests {
     }
 
     #[test]
-    fn loads_real_manifest() {
-        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+    fn loads_manifest_with_builtin_fallback() {
+        // with no manifest.json on disk this is the builtin contract;
+        // with AOT artifacts present the parsed file must agree
+        let m = Manifest::load(&artifacts_dir()).unwrap();
         assert_eq!(m.geometry("small").unwrap(), Geometry::SMALL);
         assert_eq!(m.geometry("cifar").unwrap(), Geometry::CIFAR_VGG16);
         assert_eq!(m.train_batch, 64);
@@ -226,7 +435,10 @@ mod tests {
         assert_eq!(a.inputs[0].shape, vec![64, g.d_len()]);
         assert_eq!(a.inputs[1].shape, vec![48, 48]);
         assert_eq!(a.outputs[0].shape, vec![64, g.d_len()]);
-        assert!(m.artifact_path(&a.name).unwrap().exists());
+        if m.from_disk() {
+            // HLO text files only accompany an on-disk manifest
+            assert!(m.artifact_path(&a.name).unwrap().exists());
+        }
 
         let t = m.artifact("train_step_aug_small_b64").unwrap();
         // cac, b1p, 8 params, 8 momenta, t_r, y, lr = 21 inputs
@@ -235,6 +447,40 @@ mod tests {
         assert_eq!(t.n_params, 8);
         assert_eq!(t.inputs[20].shape, Vec::<usize>::new()); // lr scalar
         assert_eq!(t.inputs[19].dtype, DType::I32); // labels
+
+        // train outputs echo the param specs, then loss + acc scalars
+        assert_eq!(t.outputs[0].shape, m.aug_params[0].shape);
+        assert_eq!(t.outputs[16].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn builtin_matches_aot_grid() {
+        let m = Manifest::builtin(&artifacts_dir());
+        assert!(!m.from_disk());
+        // the full morph grid exists for both geometries
+        for (geo, q, b) in [
+            ("small", 48usize, 8usize),
+            ("small", 256, 64),
+            ("small", 768, 64),
+            ("cifar", 96, 8),
+            ("cifar", 3072, 8),
+        ] {
+            assert!(
+                m.artifact(&Manifest::morph_artifact(geo, q, b)).is_ok(),
+                "missing morph artifact {geo} q={q} b={b}"
+            );
+        }
+        for b in [1usize, 8, 32] {
+            assert!(m.artifact(&format!("infer_aug_small_b{b}")).is_ok());
+            assert!(m.artifact(&format!("infer_base_small_b{b}")).is_ok());
+        }
+        assert!(m.artifact("eval_base_small_b64").is_ok());
+        assert!(m.artifact("train_step_base_small_b64").is_ok());
+        // wf1 input size is the flattened pool output: 32 * (16/4)^2
+        let wf1 = &m.base_params[6];
+        assert_eq!(wf1.shape, vec![512, 64]);
+        assert_eq!(m.num_classes, 10);
+        assert!((m.momentum - 0.9).abs() < 1e-12);
     }
 
     #[test]

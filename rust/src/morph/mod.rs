@@ -11,6 +11,7 @@
 //! **M′** (resampling on failure) so the developer-side inverse used in
 //! the Aug-Conv layer is numerically trustworthy.
 
+use crate::backend::Backend;
 use crate::linalg::Lu;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -65,9 +66,9 @@ impl MorphKey {
                 continue;
             }
             let core_inv = lu.inverse()?;
-            log::debug!(
+            crate::logging::debug(&format!(
                 "morph key: q={q} kappa={kappa} cond~{cond:.1} (attempt {attempt})"
-            );
+            ));
             return Ok(Self { geometry, kappa, core, core_inv, seed, cond_estimate: cond });
         }
         Err(Error::Singular(format!(
@@ -129,18 +130,30 @@ impl MorphKey {
         m
     }
 
-    /// Morph a batch of d2r rows: T^r = D^r · M (eq. 2), block-wise.
+    /// Morph a batch of d2r rows: T^r = D^r · M (eq. 2), block-wise, on
+    /// the process-wide active backend.
     pub fn morph(&self, d_rows: &Tensor) -> Result<Tensor> {
-        self.apply_core(d_rows, &self.core)
+        self.morph_on(crate::backend::active(), d_rows)
     }
 
-    /// Inverse morphing: D^r = T^r · M⁻¹.
+    /// Inverse morphing: D^r = T^r · M⁻¹, on the active backend.
     pub fn unmorph(&self, t_rows: &Tensor) -> Result<Tensor> {
-        self.apply_core(t_rows, &self.core_inv)
+        self.unmorph_on(crate::backend::active(), t_rows)
     }
 
-    /// Shared block-diagonal application: each [B, q] slice × core.
-    fn apply_core(&self, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
+    /// [`Self::morph`] on an explicit backend (benches compare backends).
+    pub fn morph_on(&self, be: &dyn Backend, d_rows: &Tensor) -> Result<Tensor> {
+        self.apply_core(be, d_rows, &self.core)
+    }
+
+    /// [`Self::unmorph`] on an explicit backend.
+    pub fn unmorph_on(&self, be: &dyn Backend, t_rows: &Tensor) -> Result<Tensor> {
+        self.apply_core(be, t_rows, &self.core_inv)
+    }
+
+    /// Shared block-diagonal application: each [B, q] slice × core, via
+    /// the backend's batched morph-row kernel.
+    fn apply_core(&self, be: &dyn Backend, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
         let d = self.geometry.d_len();
         if rows.ndim() != 2 || rows.shape()[1] != d {
             return Err(Error::Shape(format!(
@@ -148,30 +161,7 @@ impl MorphKey {
                 rows.shape()
             )));
         }
-        let b = rows.shape()[0];
-        let q = self.q();
-        let mut out = Tensor::zeros(&[b, d]);
-        // For each row, each diagonal block: out_blk = in_blk · M'.
-        // vecmat-style axpy keeps it cache-friendly for q up to 3072.
-        for bi in 0..b {
-            let src = rows.row(bi);
-            // split borrow: compute into a scratch then copy
-            let dst = out.row_mut(bi);
-            for blk in 0..self.kappa {
-                let xs = &src[blk * q..(blk + 1) * q];
-                let ys = &mut dst[blk * q..(blk + 1) * q];
-                for (i, &xv) in xs.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let crow = core.row(i);
-                    for (yv, &cv) in ys.iter_mut().zip(crow) {
-                        *yv += xv * cv;
-                    }
-                }
-            }
-        }
-        Ok(out)
+        be.apply_blockdiag(rows, core)
     }
 
     /// Operational MAC count for morphing one image: κ·q² (the κ diagonal

@@ -1,14 +1,178 @@
-//! Reference neural-network ops (pure rust, forward only).
+//! Neural-network ops (pure rust).
 //!
-//! These are *oracles and baselines*, not the training path: training and
-//! serving run through the AOT-compiled XLA artifacts ([`crate::runtime`]).
-//! They exist to (a) validate the d2r algebra against direct convolution,
-//! (b) drive the feature-transmission baseline (§Table 1, [13]) which must
-//! compute the first k layers on the provider side, and (c) provide a
-//! CPU-only sanity path in tests where the PJRT client is too heavy.
+//! [`conv2d_same`] is the scalar *oracle* every faster path is validated
+//! against; [`conv2d_same_gemm`] is the production path: im2col + a
+//! [`crate::backend`] GEMM, which is what the interpreter engine
+//! ([`crate::runtime`]) runs for training and serving when no PJRT
+//! artifacts are available. The im2col/col2im primitives are shared with
+//! the interpreter's backward pass.
 
+use crate::backend::Backend;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
+
+/// Gather SAME-padded p×p receptive fields of `x` [B, C, m, m] into a
+/// matrix [B·m², C·p²] whose row r = (b·m + oy)·m + ox holds the patch
+/// feeding output pixel (oy, ox), in (channel, krow, kcol) order —
+/// matching the OIHW kernel layout flattened by [`kernel_matrix`].
+pub(crate) fn im2col(x: &Tensor, p: usize) -> Result<Tensor> {
+    if x.ndim() != 4 || x.shape()[2] != x.shape()[3] {
+        return Err(Error::Shape(format!("im2col wants [B, C, m, m], got {:?}", x.shape())));
+    }
+    let (bs, ch, m) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let off = (p - 1) / 2;
+    let patch = ch * p * p;
+    let mut cols = Tensor::zeros(&[bs * m * m, patch]);
+    let xd = x.data();
+    let cd = cols.data_mut();
+    for b in 0..bs {
+        for oy in 0..m {
+            for ox in 0..m {
+                let row = ((b * m + oy) * m + ox) * patch;
+                for i in 0..ch {
+                    for a in 0..p {
+                        let iy = oy as isize + a as isize - off as isize;
+                        if iy < 0 || iy >= m as isize {
+                            continue; // zero padding: cols is pre-zeroed
+                        }
+                        let src = ((b * ch + i) * m + iy as usize) * m;
+                        let dst = row + (i * p + a) * p;
+                        for bb in 0..p {
+                            let ix = ox as isize + bb as isize - off as isize;
+                            if ix < 0 || ix >= m as isize {
+                                continue;
+                            }
+                            cd[dst + bb] = xd[src + ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(cols)
+}
+
+/// Scatter-add the reverse of [`im2col`]: fold `dcols` [B·m², C·p²] back
+/// into an image-shaped gradient [B, C, m, m] (out-of-bounds taps drop,
+/// mirroring the zero padding).
+pub(crate) fn col2im_add(dcols: &Tensor, bs: usize, ch: usize, m: usize, p: usize) -> Result<Tensor> {
+    let patch = ch * p * p;
+    if dcols.shape() != [bs * m * m, patch] {
+        return Err(Error::Shape(format!(
+            "col2im wants [{}, {patch}], got {:?}",
+            bs * m * m,
+            dcols.shape()
+        )));
+    }
+    let off = (p - 1) / 2;
+    let mut dx = Tensor::zeros(&[bs, ch, m, m]);
+    let dd = dcols.data();
+    let xd = dx.data_mut();
+    for b in 0..bs {
+        for oy in 0..m {
+            for ox in 0..m {
+                let row = ((b * m + oy) * m + ox) * patch;
+                for i in 0..ch {
+                    for a in 0..p {
+                        let iy = oy as isize + a as isize - off as isize;
+                        if iy < 0 || iy >= m as isize {
+                            continue;
+                        }
+                        let dst = ((b * ch + i) * m + iy as usize) * m;
+                        let src = row + (i * p + a) * p;
+                        for bb in 0..p {
+                            let ix = ox as isize + bb as isize - off as isize;
+                            if ix < 0 || ix >= m as isize {
+                                continue;
+                            }
+                            xd[dst + ix as usize] += dd[src + bb];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(dx)
+}
+
+/// Flatten an OIHW kernel [β, C, p, p] into the [C·p², β] matrix that
+/// multiplies [`im2col`] patches.
+pub(crate) fn kernel_matrix(w: &Tensor) -> Tensor {
+    let (beta, ch, p) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+    let patch = ch * p * p;
+    let mut wm = Tensor::zeros(&[patch, beta]);
+    let wd = w.data();
+    let md = wm.data_mut();
+    for j in 0..beta {
+        for r in 0..patch {
+            md[r * beta + j] = wd[j * patch + r];
+        }
+    }
+    wm
+}
+
+/// [B·m², C] column matrix → NCHW [B, C, m, m] (+ optional channel bias)
+/// — the output-side layout transform of the im2col convolution, shared
+/// with the interpreter's forward/backward passes.
+pub(crate) fn cols_to_nchw(
+    ycol: &Tensor,
+    bs: usize,
+    ch: usize,
+    m: usize,
+    bias: Option<&[f32]>,
+) -> Result<Tensor> {
+    if ycol.shape() != [bs * m * m, ch] {
+        return Err(Error::Shape(format!(
+            "cols_to_nchw wants [{}, {ch}], got {:?}",
+            bs * m * m,
+            ycol.shape()
+        )));
+    }
+    let mut out = Tensor::zeros(&[bs, ch, m, m]);
+    let yd = ycol.data();
+    let od = out.data_mut();
+    for b in 0..bs {
+        for py in 0..m {
+            for px in 0..m {
+                let row = ((b * m + py) * m + px) * ch;
+                for j in 0..ch {
+                    let v = yd[row + j] + bias.map(|bv| bv[j]).unwrap_or(0.0);
+                    od[((b * ch + j) * m + py) * m + px] = v;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// SAME-padded cross-correlation via im2col + backend GEMM — numerically
+/// the f32-accumulation counterpart of [`conv2d_same`], and the layer the
+/// interpreter engine trains/serves through.
+pub fn conv2d_same_gemm(
+    be: &dyn Backend,
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+) -> Result<Tensor> {
+    if x.ndim() != 4 || w.ndim() != 4 || x.shape()[1] != w.shape()[1] {
+        return Err(Error::Shape(format!(
+            "conv2d_same_gemm: x {:?} w {:?}",
+            x.shape(),
+            w.shape()
+        )));
+    }
+    let (bs, m) = (x.shape()[0], x.shape()[2]);
+    let beta = w.shape()[0];
+    if let Some(b) = bias {
+        if b.len() != beta {
+            return Err(Error::Shape(format!("bias len {} != beta {beta}", b.len())));
+        }
+    }
+    let cols = im2col(x, w.shape()[2])?;
+    let wm = kernel_matrix(w);
+    let y_col = be.gemm(&cols, &wm)?; // [B*m*m, beta]
+    cols_to_nchw(&y_col, bs, beta, m, bias)
+}
 
 /// SAME-padded 3×3-style cross-correlation, NCHW × OIHW → NCHW.
 pub fn conv2d_same(x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Result<Tensor> {
@@ -230,6 +394,57 @@ mod tests {
     fn argmax_rows_basic() {
         let x = Tensor::new(&[2, 3], vec![0.0, 2.0, 1.0, 5.0, -1.0, 3.0]).unwrap();
         assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+
+    #[test]
+    fn gemm_conv_matches_scalar_oracle() {
+        let mut r = Rng::new(21);
+        for &(bs, ch, m, beta, p) in
+            &[(1usize, 1usize, 4usize, 1usize, 3usize), (2, 3, 8, 4, 3), (1, 2, 5, 3, 1), (2, 2, 6, 2, 5)]
+        {
+            let x = Tensor::new(&[bs, ch, m, m], r.normal_vec(bs * ch * m * m, 1.0)).unwrap();
+            let w =
+                Tensor::new(&[beta, ch, p, p], r.normal_vec(beta * ch * p * p, 0.5)).unwrap();
+            let bias: Vec<f32> = r.normal_vec(beta, 0.1);
+            let want = conv2d_same(&x, &w, Some(&bias)).unwrap();
+            for be in [
+                &crate::backend::RefBackend::new() as &dyn Backend,
+                &crate::backend::ParallelBackend::new(2) as &dyn Backend,
+            ] {
+                let got = conv2d_same_gemm(be, &x, &w, Some(&bias)).unwrap();
+                assert!(
+                    got.allclose(&want, 1e-4, 1e-4),
+                    "conv mismatch on {} at ({bs},{ch},{m},{beta},{p}): {}",
+                    be.name(),
+                    got.max_abs_diff(&want).unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> — the pair is a true adjoint,
+        // which is exactly what the conv backward pass relies on.
+        let mut r = Rng::new(22);
+        let (bs, ch, m, p) = (2usize, 3usize, 6usize, 3usize);
+        let x = Tensor::new(&[bs, ch, m, m], r.normal_vec(bs * ch * m * m, 1.0)).unwrap();
+        let cols = im2col(&x, p).unwrap();
+        let y = Tensor::new(cols.shape(), r.normal_vec(cols.numel(), 1.0)).unwrap();
+        let lhs: f64 = cols
+            .data()
+            .iter()
+            .zip(y.data())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        let back = col2im_add(&y, bs, ch, m, p).unwrap();
+        let rhs: f64 = x
+            .data()
+            .iter()
+            .zip(back.data())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
     }
 
     #[test]

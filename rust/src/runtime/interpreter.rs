@@ -1,0 +1,706 @@
+//! The pure-Rust interpreter engine.
+//!
+//! Executes every artifact *kind* the manifest declares — morphing,
+//! Aug-Conv forward, inference, evaluation and SGD+momentum training
+//! steps — against the same signatures the AOT/XLA path uses, with all
+//! dense math dispatched through the active [`crate::backend`]. This is
+//! what the default (dependency-free) build trains and serves with; the
+//! `pjrt` feature swaps in compiled HLO executables behind the identical
+//! [`super::Engine`] surface.
+//!
+//! The network is the VGG-small graph from `python/compile/model.py`:
+//!
+//! ```text
+//! f  = conv1(x)            (base)   |   f = reshape(T^r·C^ac)+b1p  (aug)
+//! h  = relu(f)
+//! h  = maxpool2(relu(conv2(h)))
+//! h  = maxpool2(relu(conv3(h)))
+//! h  = relu(flatten(h)·wf1 + bf1)
+//! logits = h·wf2 + bf2
+//! ```
+//!
+//! Convolutions run as im2col + GEMM both forward and backward (weight
+//! gradient = colsᵀ·dY, input gradient = col2im(dY·Wᵀ)); in the aug
+//! variant the first layer is a fixed feature extractor (stop_gradient in
+//! the python graph), so backward stops at conv2 — exactly matching the
+//! paper's "train it like a pre-trained layer" setup.
+
+use super::Arg;
+use crate::backend::Backend;
+use crate::linalg::transpose;
+use crate::manifest::{ArtifactEntry, Manifest};
+use crate::nn;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// The interpreter engine: stateless apart from the manifest (parameters
+/// travel through the artifact arguments, as with PJRT).
+pub struct Interpreter {
+    manifest: Manifest,
+}
+
+impl Interpreter {
+    pub fn new(manifest: Manifest) -> Self {
+        Self { manifest }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute one artifact. `args` have already been validated against
+    /// the entry's signature by [`super::Engine::exec`].
+    pub fn exec(&self, entry: &ArtifactEntry, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let be = crate::backend::active();
+        let classes = self.manifest.num_classes;
+        let momentum = self.manifest.momentum as f32;
+        match entry.kind.as_str() {
+            "morph" => {
+                let rows = want_tensor(args, 0)?;
+                let core = want_tensor(args, 1)?;
+                Ok(vec![be.apply_blockdiag(rows, core)?])
+            }
+            "augconv_forward" => {
+                let t = want_tensor(args, 0)?;
+                let cac = want_tensor(args, 1)?;
+                let b1 = want_tensor(args, 2)?;
+                Ok(vec![aug_first_layer(be, t, cac, b1)?])
+            }
+            "infer_base" => {
+                let np = entry.n_params;
+                let x = want_tensor(args, np)?;
+                let params = tensors(args, 0, np)?;
+                let (_, f) = conv_fwd(be, x, params[0], params[1])?;
+                let cache = trunk_forward(be, f, &params[2..])?;
+                Ok(vec![cache.logits])
+            }
+            "infer_aug" => {
+                let np = entry.n_params;
+                let cac = want_tensor(args, 0)?;
+                let b1p = want_tensor(args, 1)?;
+                let params = tensors(args, 2, np)?;
+                let t = want_tensor(args, 2 + np)?;
+                let f = aug_first_layer(be, t, cac, b1p)?;
+                let cache = trunk_forward(be, f, &params)?;
+                Ok(vec![cache.logits])
+            }
+            "eval_base" => {
+                let np = entry.n_params;
+                let params = tensors(args, 0, np)?;
+                let x = want_tensor(args, np)?;
+                let y = want_labels(args, np + 1)?;
+                let (_, f) = conv_fwd(be, x, params[0], params[1])?;
+                let cache = trunk_forward(be, f, &params[2..])?;
+                let (loss, acc, _) = softmax_ce(&cache.logits, y, classes)?;
+                Ok(vec![scalar_tensor(loss), scalar_tensor(acc)])
+            }
+            "eval_aug" => {
+                let np = entry.n_params;
+                let cac = want_tensor(args, 0)?;
+                let b1p = want_tensor(args, 1)?;
+                let params = tensors(args, 2, np)?;
+                let t = want_tensor(args, 2 + np)?;
+                let y = want_labels(args, 3 + np)?;
+                let f = aug_first_layer(be, t, cac, b1p)?;
+                let cache = trunk_forward(be, f, &params)?;
+                let (loss, acc, _) = softmax_ce(&cache.logits, y, classes)?;
+                Ok(vec![scalar_tensor(loss), scalar_tensor(acc)])
+            }
+            "train_step_base" => {
+                let np = entry.n_params;
+                let params = tensors(args, 0, np)?;
+                let momenta = tensors(args, np, np)?;
+                let x = want_tensor(args, 2 * np)?;
+                let y = want_labels(args, 2 * np + 1)?;
+                let lr = want_scalar(args, 2 * np + 2)?;
+
+                let (cols1, f) = conv_fwd(be, x, params[0], params[1])?;
+                let cache = trunk_forward(be, f, &params[2..])?;
+                let (loss, acc, dlogits) = softmax_ce(&cache.logits, y, classes)?;
+                let tg = trunk_backward(be, &cache, &params[2..], &dlogits, true)?;
+                // conv1 gradients through df (relu at f is part of the trunk)
+                let df = tg.df.as_ref().expect("trunk_backward(need_df) returns df");
+                let dy1 = nchw_to_cols(df);
+                let dw1m = be.gemm(&transpose(&cols1)?, &dy1)?;
+                let dw1 = matrix_to_kernel(&dw1m, params[0].shape())?;
+                let db1 = colsum(&dy1);
+
+                let grads = [
+                    &dw1, &db1, &tg.dw2, &tg.db2, &tg.dw3, &tg.db3, &tg.dwf1, &tg.dbf1,
+                    &tg.dwf2, &tg.dbf2,
+                ];
+                let mut out = sgd_step(&params, &momenta, &grads, lr, momentum)?;
+                out.push(scalar_tensor(loss));
+                out.push(scalar_tensor(acc));
+                Ok(out)
+            }
+            "train_step_aug" => {
+                let np = entry.n_params;
+                let cac = want_tensor(args, 0)?;
+                let b1p = want_tensor(args, 1)?;
+                let params = tensors(args, 2, np)?;
+                let momenta = tensors(args, 2 + np, np)?;
+                let t = want_tensor(args, 2 + 2 * np)?;
+                let y = want_labels(args, 3 + 2 * np)?;
+                let lr = want_scalar(args, 4 + 2 * np)?;
+
+                let f = aug_first_layer(be, t, cac, b1p)?;
+                let cache = trunk_forward(be, f, &params)?;
+                let (loss, acc, dlogits) = softmax_ce(&cache.logits, y, classes)?;
+                // stop_gradient on the Aug-Conv features: no df needed
+                let tg = trunk_backward(be, &cache, &params, &dlogits, false)?;
+
+                let grads = [
+                    &tg.dw2, &tg.db2, &tg.dw3, &tg.db3, &tg.dwf1, &tg.dbf1, &tg.dwf2,
+                    &tg.dbf2,
+                ];
+                let mut out = sgd_step(&params, &momenta, &grads, lr, momentum)?;
+                out.push(scalar_tensor(loss));
+                out.push(scalar_tensor(acc));
+                Ok(out)
+            }
+            other => Err(Error::Runtime(format!(
+                "interpreter cannot execute artifact kind {other:?} ({})",
+                entry.name
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// argument accessors (signatures already validated)
+// ---------------------------------------------------------------------------
+
+fn want_tensor<'a>(args: &'a [Arg], i: usize) -> Result<&'a Tensor> {
+    match args.get(i) {
+        Some(Arg::T(t)) => Ok(t),
+        _ => Err(Error::Runtime(format!("argument {i}: expected a tensor"))),
+    }
+}
+
+fn want_labels<'a>(args: &'a [Arg], i: usize) -> Result<&'a [i32]> {
+    match args.get(i) {
+        Some(Arg::I(v)) => Ok(v),
+        _ => Err(Error::Runtime(format!("argument {i}: expected i32 labels"))),
+    }
+}
+
+fn want_scalar(args: &[Arg], i: usize) -> Result<f32> {
+    match args.get(i) {
+        Some(Arg::S(s)) => Ok(*s),
+        _ => Err(Error::Runtime(format!("argument {i}: expected an f32 scalar"))),
+    }
+}
+
+fn tensors<'a>(args: &'a [Arg], start: usize, count: usize) -> Result<Vec<&'a Tensor>> {
+    (start..start + count).map(|i| want_tensor(args, i)).collect()
+}
+
+fn scalar_tensor(v: f32) -> Tensor {
+    Tensor::new(&[], vec![v]).expect("scalar tensor")
+}
+
+// ---------------------------------------------------------------------------
+// layer primitives
+// ---------------------------------------------------------------------------
+
+/// Aug-Conv first layer: F = reshape(T^r·C^ac, [B, β, n, n]) + b1p.
+fn aug_first_layer(be: &dyn Backend, t: &Tensor, cac: &Tensor, b1p: &Tensor) -> Result<Tensor> {
+    let f_r = be.gemm(t, cac)?;
+    let bs = t.shape()[0];
+    let beta = b1p.numel();
+    let f_len = cac.shape()[1];
+    if beta == 0 || f_len % beta != 0 {
+        return Err(Error::Shape(format!("f_len {f_len} not divisible by beta {beta}")));
+    }
+    let n2 = f_len / beta;
+    let n = (n2 as f64).sqrt() as usize;
+    if n * n != n2 {
+        return Err(Error::Shape(format!("feature group size {n2} is not square")));
+    }
+    let mut f = f_r.reshape(&[bs, beta, n, n])?;
+    let bias = b1p.data();
+    for bi in 0..bs {
+        for ch in 0..beta {
+            let plane = &mut f.data_mut()[(bi * beta + ch) * n2..][..n2];
+            for v in plane {
+                *v += bias[ch];
+            }
+        }
+    }
+    Ok(f)
+}
+
+/// Convolution forward via im2col; returns (cols, pre-activation NCHW) —
+/// cols are reused by the backward pass for the weight gradient.
+fn conv_fwd(be: &dyn Backend, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<(Tensor, Tensor)> {
+    let p = w.shape()[2];
+    let cols = nn::im2col(x, p)?;
+    let wm = nn::kernel_matrix(w);
+    let ycol = be.gemm(&cols, &wm)?;
+    let z = nn::cols_to_nchw(&ycol, x.shape()[0], w.shape()[0], x.shape()[2], Some(b.data()))?;
+    Ok((cols, z))
+}
+
+/// NCHW [B, C, m, m] → [B·m², C] column matrix (transpose of
+/// [`nn::cols_to_nchw`], used to feed activation gradients into GEMMs).
+fn nchw_to_cols(x: &Tensor) -> Tensor {
+    let (bs, ch, m) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let mut out = Tensor::zeros(&[bs * m * m, ch]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for b in 0..bs {
+        for j in 0..ch {
+            for py in 0..m {
+                for px in 0..m {
+                    od[(((b * m + py) * m + px) * ch) + j] = xd[((b * ch + j) * m + py) * m + px];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [C·p², β] gradient matrix back to the OIHW kernel shape.
+fn matrix_to_kernel(dwm: &Tensor, kernel_shape: &[usize]) -> Result<Tensor> {
+    let (beta, ch, p) = (kernel_shape[0], kernel_shape[1], kernel_shape[2]);
+    let patch = ch * p * p;
+    if dwm.shape() != [patch, beta] {
+        return Err(Error::Shape(format!(
+            "matrix_to_kernel wants [{patch}, {beta}], got {:?}",
+            dwm.shape()
+        )));
+    }
+    let mut w = Tensor::zeros(kernel_shape);
+    let md = dwm.data();
+    let wd = w.data_mut();
+    for j in 0..beta {
+        for r in 0..patch {
+            wd[j * patch + r] = md[r * beta + j];
+        }
+    }
+    Ok(w)
+}
+
+/// 2×2/2 max-pool returning the pooled map and, per output element, the
+/// flat index of the winning input element (first max wins on ties).
+fn maxpool2_idx(x: &Tensor) -> Result<(Tensor, Vec<u32>)> {
+    let (bs, ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    if h % 2 != 0 || w % 2 != 0 {
+        return Err(Error::Shape(format!("maxpool2: odd spatial dims {:?}", x.shape())));
+    }
+    let mut out = Tensor::zeros(&[bs, ch, h / 2, w / 2]);
+    let mut idx = vec![0u32; out.numel()];
+    let xd = x.data();
+    let od = out.data_mut();
+    let mut o = 0usize;
+    for b in 0..bs {
+        for c in 0..ch {
+            let plane = (b * ch + c) * h * w;
+            for oy in 0..h / 2 {
+                for ox in 0..w / 2 {
+                    let base = plane + 2 * oy * w + 2 * ox;
+                    let cands = [base, base + 1, base + w, base + w + 1];
+                    let mut best = cands[0];
+                    for &cand in &cands[1..] {
+                        if xd[cand] > xd[best] {
+                            best = cand;
+                        }
+                    }
+                    od[o] = xd[best];
+                    idx[o] = best as u32;
+                    o += 1;
+                }
+            }
+        }
+    }
+    Ok((out, idx))
+}
+
+/// Scatter pooled-gradient elements back to the argmax positions.
+fn unpool(dy: &Tensor, idx: &[u32], src_shape: &[usize]) -> Result<Tensor> {
+    if dy.numel() != idx.len() {
+        return Err(Error::Shape("unpool: index/gradient size mismatch".into()));
+    }
+    let mut dx = Tensor::zeros(src_shape);
+    let xd = dx.data_mut();
+    for (g, &i) in dy.data().iter().zip(idx) {
+        xd[i as usize] += g;
+    }
+    Ok(dx)
+}
+
+/// Dense layer z = x·W + b on the backend.
+fn dense_fwd(be: &dyn Backend, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let mut z = be.gemm(x, w)?;
+    let bias = b.data();
+    for r in 0..z.shape()[0] {
+        for (v, bv) in z.row_mut(r).iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+    Ok(z)
+}
+
+/// Column sums of a [R, C] matrix as a [C] tensor (bias gradients).
+fn colsum(x: &Tensor) -> Tensor {
+    let (r, c) = (x.shape()[0], x.shape()[1]);
+    let mut out = Tensor::zeros(&[c]);
+    let od = out.data_mut();
+    for i in 0..r {
+        for (o, &v) in od.iter_mut().zip(x.row(i)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Elementwise `g ⊙ (z > 0)` — the ReLU gradient mask.
+fn relu_mask(mut g: Tensor, z: &Tensor) -> Result<Tensor> {
+    if g.shape() != z.shape() {
+        return Err(Error::Shape("relu_mask shape mismatch".into()));
+    }
+    for (gv, &zv) in g.data_mut().iter_mut().zip(z.data()) {
+        if zv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+    Ok(g)
+}
+
+/// Mean softmax cross-entropy + top-1 accuracy + logits gradient.
+fn softmax_ce(logits: &Tensor, y: &[i32], classes: usize) -> Result<(f32, f32, Tensor)> {
+    let bs = logits.shape()[0];
+    if y.len() != bs || logits.shape()[1] != classes {
+        return Err(Error::Shape(format!(
+            "softmax_ce: logits {:?}, {} labels, {classes} classes",
+            logits.shape(),
+            y.len()
+        )));
+    }
+    let mut dlogits = Tensor::zeros(&[bs, classes]);
+    let inv_b = 1.0 / bs as f32;
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..bs {
+        let yi = y[i];
+        if yi < 0 || yi as usize >= classes {
+            return Err(Error::Runtime(format!("label {yi} out of range 0..{classes}")));
+        }
+        let yi = yi as usize;
+        let row = logits.row(i);
+        let mut mx = row[0];
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                arg = j;
+            }
+        }
+        if arg == yi {
+            correct += 1;
+        }
+        let mut se = 0.0f64;
+        for &v in row {
+            se += ((v - mx) as f64).exp();
+        }
+        loss -= (row[yi] - mx) as f64 - se.ln();
+        let drow = dlogits.row_mut(i);
+        for (j, dv) in drow.iter_mut().enumerate() {
+            let p = (((row[j] - mx) as f64).exp() / se) as f32;
+            *dv = (p - if j == yi { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    Ok((
+        (loss / bs as f64) as f32,
+        correct as f32 / bs as f32,
+        dlogits,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// the shared trunk (conv2 → pool → conv3 → pool → fc1 → fc2)
+// ---------------------------------------------------------------------------
+
+struct TrunkCache {
+    /// First-layer pre-activation features [B, β, m, m].
+    f: Tensor,
+    cols2: Tensor,
+    z2: Tensor,
+    idx1: Vec<u32>,
+    cols3: Tensor,
+    z3: Tensor,
+    idx2: Vec<u32>,
+    flat: Tensor,
+    z4: Tensor,
+    a4: Tensor,
+    logits: Tensor,
+}
+
+struct TrunkGrads {
+    dw2: Tensor,
+    db2: Tensor,
+    dw3: Tensor,
+    db3: Tensor,
+    dwf1: Tensor,
+    dbf1: Tensor,
+    dwf2: Tensor,
+    dbf2: Tensor,
+    /// dL/df (through the leading ReLU) — only when requested (base).
+    df: Option<Tensor>,
+}
+
+/// Forward through everything above the first layer. `p` is
+/// [w2, b2, w3, b3, wf1, bf1, wf2, bf2] (the aug parameter layout).
+fn trunk_forward(be: &dyn Backend, f: Tensor, p: &[&Tensor]) -> Result<TrunkCache> {
+    if p.len() != 8 {
+        return Err(Error::Runtime(format!("trunk wants 8 params, got {}", p.len())));
+    }
+    let bs = f.shape()[0];
+    let mut h0 = f.clone();
+    nn::relu(&mut h0);
+    let (cols2, z2) = conv_fwd(be, &h0, p[0], p[1])?;
+    let mut a2 = z2.clone();
+    nn::relu(&mut a2);
+    let (p1, idx1) = maxpool2_idx(&a2)?;
+    let (cols3, z3) = conv_fwd(be, &p1, p[2], p[3])?;
+    let mut a3 = z3.clone();
+    nn::relu(&mut a3);
+    let (p2, idx2) = maxpool2_idx(&a3)?;
+    let flat_len = p2.numel() / bs;
+    let flat = p2.reshape(&[bs, flat_len])?;
+    let z4 = dense_fwd(be, &flat, p[4], p[5])?;
+    let mut a4 = z4.clone();
+    nn::relu(&mut a4);
+    let logits = dense_fwd(be, &a4, p[6], p[7])?;
+    Ok(TrunkCache { f, cols2, z2, idx1, cols3, z3, idx2, flat, z4, a4, logits })
+}
+
+/// Backward through the trunk. Returns parameter gradients in the aug
+/// layout order; `need_df` additionally propagates to the first-layer
+/// pre-activation (the base variant's conv1 needs it).
+fn trunk_backward(
+    be: &dyn Backend,
+    cache: &TrunkCache,
+    p: &[&Tensor],
+    dlogits: &Tensor,
+    need_df: bool,
+) -> Result<TrunkGrads> {
+    let (w2, w3, wf1, wf2) = (p[0], p[2], p[4], p[6]);
+    let bs = cache.f.shape()[0];
+
+    // fc2
+    let dwf2 = be.gemm(&transpose(&cache.a4)?, dlogits)?;
+    let dbf2 = colsum(dlogits);
+    let da4 = be.gemm(dlogits, &transpose(wf2)?)?;
+    let dz4 = relu_mask(da4, &cache.z4)?;
+
+    // fc1
+    let dwf1 = be.gemm(&transpose(&cache.flat)?, &dz4)?;
+    let dbf1 = colsum(&dz4);
+    let dflat = be.gemm(&dz4, &transpose(wf1)?)?;
+
+    // unflatten to the pooled conv3 map [B, c3, m/4, m/4]
+    let (c3, m2) = (cache.z3.shape()[1], cache.z3.shape()[2]);
+    let dp2 = dflat.reshape(&[bs, c3, m2 / 2, m2 / 2])?;
+    let da3 = unpool(&dp2, &cache.idx2, cache.z3.shape())?;
+    let dz3 = relu_mask(da3, &cache.z3)?;
+
+    // conv3
+    let dy3 = nchw_to_cols(&dz3);
+    let dw3m = be.gemm(&transpose(&cache.cols3)?, &dy3)?;
+    let dw3 = matrix_to_kernel(&dw3m, w3.shape())?;
+    let db3 = colsum(&dy3);
+    let dcols3 = be.gemm(&dy3, &transpose(&nn::kernel_matrix(w3))?)?;
+    let c2 = cache.z2.shape()[1];
+    let dp1 = nn::col2im_add(&dcols3, bs, c2, m2, w3.shape()[2])?;
+
+    // pool1 + conv2
+    let da2 = unpool(&dp1, &cache.idx1, cache.z2.shape())?;
+    let dz2 = relu_mask(da2, &cache.z2)?;
+    let dy2 = nchw_to_cols(&dz2);
+    let dw2m = be.gemm(&transpose(&cache.cols2)?, &dy2)?;
+    let dw2 = matrix_to_kernel(&dw2m, w2.shape())?;
+    let db2 = colsum(&dy2);
+
+    let df = if need_df {
+        let dcols2 = be.gemm(&dy2, &transpose(&nn::kernel_matrix(w2))?)?;
+        let beta = cache.f.shape()[1];
+        let m = cache.f.shape()[2];
+        let dh0 = nn::col2im_add(&dcols2, bs, beta, m, w2.shape()[2])?;
+        Some(relu_mask(dh0, &cache.f)?)
+    } else {
+        None
+    };
+
+    Ok(TrunkGrads { dw2, db2, dw3, db3, dwf1, dbf1, dwf2, dbf2, df })
+}
+
+/// One SGD+momentum update: v' = μ·v + g, p' = p − lr·v'. Returns the
+/// output layout the train_step artifacts declare: params' then momenta'.
+fn sgd_step(
+    params: &[&Tensor],
+    momenta: &[&Tensor],
+    grads: &[&Tensor],
+    lr: f32,
+    momentum: f32,
+) -> Result<Vec<Tensor>> {
+    if params.len() != momenta.len() || params.len() != grads.len() {
+        return Err(Error::Runtime("sgd_step: param/momentum/grad arity mismatch".into()));
+    }
+    let mut new_params = Vec::with_capacity(params.len());
+    let mut new_momenta = Vec::with_capacity(params.len());
+    for ((p, v), g) in params.iter().zip(momenta).zip(grads) {
+        if p.shape() != g.shape() || p.shape() != v.shape() {
+            return Err(Error::Shape(format!(
+                "sgd_step: param {:?} / momentum {:?} / grad {:?}",
+                p.shape(),
+                v.shape(),
+                g.shape()
+            )));
+        }
+        let mut nv = (*v).clone();
+        for (mv, &gv) in nv.data_mut().iter_mut().zip(g.data()) {
+            *mv = momentum * *mv + gv;
+        }
+        let mut np = (*p).clone();
+        for (pv, &mv) in np.data_mut().iter_mut().zip(nv.data()) {
+            *pv -= lr * mv;
+        }
+        new_params.push(np);
+        new_momenta.push(nv);
+    }
+    new_params.extend(new_momenta);
+    Ok(new_params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::RefBackend;
+    use crate::rng::Rng;
+
+    /// Finite-difference check of the full trunk gradient chain on a tiny
+    /// geometry: the single most bug-prone part of the interpreter.
+    #[test]
+    fn trunk_gradients_match_finite_differences() {
+        let be = RefBackend::new();
+        let mut rng = Rng::new(42);
+        // tiny trunk: beta=2, m=4, c2=2, c3=2, flat=2*(4/4)^2=2, fc1=3, classes=2
+        let (bs, beta, m, c2, c3, f1, classes) = (2usize, 2usize, 4usize, 2usize, 2usize, 3usize, 2usize);
+        let flat = c3 * (m / 4) * (m / 4);
+        let w2 = Tensor::new(&[c2, beta, 3, 3], rng.normal_vec(c2 * beta * 9, 0.5)).unwrap();
+        let b2 = Tensor::new(&[c2], rng.normal_vec(c2, 0.1)).unwrap();
+        let w3 = Tensor::new(&[c3, c2, 3, 3], rng.normal_vec(c3 * c2 * 9, 0.5)).unwrap();
+        let b3 = Tensor::new(&[c3], rng.normal_vec(c3, 0.1)).unwrap();
+        let wf1 = Tensor::new(&[flat, f1], rng.normal_vec(flat * f1, 0.5)).unwrap();
+        let bf1 = Tensor::new(&[f1], rng.normal_vec(f1, 0.1)).unwrap();
+        let wf2 = Tensor::new(&[f1, classes], rng.normal_vec(f1 * classes, 0.5)).unwrap();
+        let bf2 = Tensor::new(&[classes], rng.normal_vec(classes, 0.1)).unwrap();
+        let f = Tensor::new(&[bs, beta, m, m], rng.normal_vec(bs * beta * m * m, 1.0)).unwrap();
+        let y = vec![0i32, 1];
+
+        let loss_of = |ps: &[Tensor], fx: &Tensor| -> f32 {
+            let refs: Vec<&Tensor> = ps.iter().collect();
+            let cache = trunk_forward(&be, fx.clone(), &refs).unwrap();
+            softmax_ce(&cache.logits, &y, classes).unwrap().0
+        };
+
+        let params = vec![w2, b2, w3, b3, wf1, bf1, wf2, bf2];
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let cache = trunk_forward(&be, f.clone(), &refs).unwrap();
+        let (_, _, dlogits) = softmax_ce(&cache.logits, &y, classes).unwrap();
+        let tg = trunk_backward(&be, &cache, &refs, &dlogits, true).unwrap();
+
+        let analytic = [
+            &tg.dw2, &tg.db2, &tg.dw3, &tg.db3, &tg.dwf1, &tg.dbf1, &tg.dwf2, &tg.dbf2,
+        ];
+        let eps = 1e-2f32;
+        for (pi, grad) in analytic.iter().enumerate() {
+            // probe a handful of coordinates per parameter
+            let numel = params[pi].numel();
+            for probe in 0..numel.min(5) {
+                let idx = (probe * 37) % numel;
+                let mut plus = params.clone();
+                plus[pi].data_mut()[idx] += eps;
+                let mut minus = params.clone();
+                minus[pi].data_mut()[idx] -= eps;
+                let fd = (loss_of(&plus, &f) - loss_of(&minus, &f)) / (2.0 * eps);
+                let an = grad.data()[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 + 0.15 * fd.abs().max(an.abs()),
+                    "param {pi} elem {idx}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+
+        // and the input gradient df
+        let df = tg.df.unwrap();
+        for probe in 0..5 {
+            let idx = (probe * 53) % f.numel();
+            let mut plus = f.clone();
+            plus.data_mut()[idx] += eps;
+            let mut minus = f.clone();
+            minus.data_mut()[idx] -= eps;
+            let fd = (loss_of(&params, &plus) - loss_of(&params, &minus)) / (2.0 * eps);
+            let an = df.data()[idx];
+            assert!(
+                (fd - an).abs() < 2e-2 + 0.15 * fd.abs().max(an.abs()),
+                "df elem {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let y = vec![0, 1, 2, 3];
+        let (loss, acc, d) = softmax_ce(&logits, &y, 10).unwrap();
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+        // uniform logits: argmax = 0 everywhere, only label 0 counts
+        assert!((acc - 0.25).abs() < 1e-6);
+        // gradient rows sum to zero
+        for i in 0..4 {
+            let s: f32 = d.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        assert!(softmax_ce(&logits, &[11, 0, 0, 0], 10).is_err());
+    }
+
+    #[test]
+    fn maxpool_roundtrip_gradient() {
+        let x = Tensor::new(
+            &[1, 1, 2, 4],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+        )
+        .unwrap();
+        let (p, idx) = maxpool2_idx(&x).unwrap();
+        assert_eq!(p.data(), &[6.0, 8.0]);
+        let dy = Tensor::new(&[1, 1, 1, 2], vec![10.0, 20.0]).unwrap();
+        let dx = unpool(&dy, &idx, x.shape()).unwrap();
+        // gradient lands exactly on the max positions (elements 5 and 7)
+        assert_eq!(dx.data(), &[0.0, 0.0, 0.0, 0.0, 0.0, 10.0, 0.0, 20.0]);
+    }
+
+    #[test]
+    fn sgd_momentum_matches_formula() {
+        let p = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let v = Tensor::new(&[2], vec![0.5, -0.5]).unwrap();
+        let g = Tensor::new(&[2], vec![0.1, 0.2]).unwrap();
+        let out = sgd_step(&[&p], &[&v], &[&g], 0.1, 0.9).unwrap();
+        // v' = 0.9*v + g, p' = p - 0.1*v'
+        assert!((out[1].data()[0] - 0.55).abs() < 1e-6);
+        assert!((out[1].data()[1] - (-0.25)).abs() < 1e-6);
+        assert!((out[0].data()[0] - (1.0 - 0.055)).abs() < 1e-6);
+        assert!((out[0].data()[1] - (2.0 + 0.025)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cols_nchw_roundtrip() {
+        let mut rng = Rng::new(7);
+        let x = Tensor::new(&[2, 3, 4, 4], rng.normal_vec(96, 1.0)).unwrap();
+        let cols = nchw_to_cols(&x);
+        let back = nn::cols_to_nchw(&cols, 2, 3, 4, None).unwrap();
+        assert_eq!(back, x);
+    }
+}

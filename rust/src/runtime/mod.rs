@@ -1,19 +1,31 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution runtime: one [`Engine`] surface, two implementations.
 //!
-//! This is the only place the `xla` crate is touched. One [`Engine`] owns
-//! the PJRT CPU client and a cache of compiled executables keyed by
-//! artifact name, so each HLO module is parsed + compiled exactly once per
-//! process and then reused on the hot path. Python never runs here — the
-//! artifacts are produced ahead of time by `make artifacts`.
+//! * [`Interpreter`] (default) — a pure-Rust engine that executes every
+//!   manifest artifact kind (morph, Aug-Conv forward, inference, eval,
+//!   train steps) against the dense ops in this crate, dispatching all
+//!   GEMMs through the active [`crate::backend`]. Needs no artifact files
+//!   and no external crates: `Manifest::load` falls back to the built-in
+//!   contract when `artifacts/` is absent.
+//! * PJRT (`pjrt` cargo feature) — loads the AOT-lowered HLO text files
+//!   produced by `python -m compile.aot` and executes them through the
+//!   `xla` crate (see `runtime/pjrt.rs`; the crate must be vendored into
+//!   `[dependencies]` for this feature to build). Chosen automatically
+//!   when the feature is on and on-disk artifacts exist.
+//!
+//! Both paths validate arguments against the manifest signature before
+//! executing, so shape bugs surface as typed errors rather than garbage.
+
+mod interpreter;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use interpreter::Interpreter;
 
 use crate::manifest::{ArtifactEntry, DType, Manifest};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
-use std::collections::HashMap;
-use std::rc::Rc;
-use std::sync::Mutex;
 
-/// A typed runtime value crossing the PJRT boundary.
+/// A typed runtime value crossing the engine boundary.
 #[derive(Debug, Clone)]
 pub enum Arg {
     /// f32 tensor.
@@ -30,131 +42,102 @@ impl From<Tensor> for Arg {
     }
 }
 
-/// The PJRT execution engine.
-///
-/// PJRT handles wrap raw pointers and are not `Send`: an `Engine` lives on
-/// one thread (the serving worker constructs its own — see
-/// [`crate::coordinator::batcher`]).
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+/// The execution engine. Constructed per worker thread (cheap for the
+/// interpreter; the PJRT variant owns a non-`Send` client, which is why
+/// the serving worker builds its own — see [`crate::coordinator::batcher`]).
+pub enum Engine {
+    Interpreter(Interpreter),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtEngine),
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifact directory.
+    /// Create an engine over a manifest: PJRT when the feature is enabled
+    /// and HLO artifacts exist on disk, the interpreter otherwise.
     pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        log::info!(
-            "PJRT engine up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+        #[cfg(feature = "pjrt")]
+        {
+            if manifest.from_disk() {
+                return Ok(Engine::Pjrt(pjrt::PjrtEngine::new(manifest)?));
+            }
+            crate::logging::warn(
+                "pjrt feature enabled but no on-disk artifacts; using the interpreter engine",
+            );
+        }
+        Ok(Engine::Interpreter(Interpreter::new(manifest)))
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        match self {
+            Engine::Interpreter(i) => i.manifest(),
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(p) => p.manifest(),
+        }
     }
 
-    /// Compile (or fetch from cache) an artifact's executable.
-    pub fn prepare(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+    /// Name of the active implementation ("interpreter" | "pjrt").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Engine::Interpreter(_) => "interpreter",
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(_) => "pjrt",
         }
-        let path = self.manifest.artifact_path(name)?;
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        log::info!("compiled {name} in {:.1}ms", t0.elapsed().as_secs_f64() * 1e3);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+    }
+
+    /// Warm up an artifact off the request path: compiles + caches the
+    /// executable under PJRT; validates existence under the interpreter.
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        match self {
+            Engine::Interpreter(i) => i.manifest().artifact(name).map(|_| ()),
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(p) => p.prepare(name).map(|_| ()),
+        }
     }
 
     /// Execute an artifact with typed args; returns the flattened tuple of
     /// f32 output tensors (shapes from the manifest signature).
     pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
-        let entry = self.manifest.artifact(name)?.clone();
-        self.validate_args(&entry, args)?;
-        let exe = self.prepare(name)?;
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(arg_to_literal)
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let out = result
-            .into_iter()
-            .next()
-            .and_then(|d| d.into_iter().next())
-            .ok_or_else(|| Error::Runtime(format!("{name}: empty result")))?
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let elems = out.to_tuple()?;
-        if elems.len() != entry.outputs.len() {
-            return Err(Error::Runtime(format!(
-                "{name}: expected {} outputs, got {}",
-                entry.outputs.len(),
-                elems.len()
-            )));
+        let entry = self.manifest().artifact(name)?.clone();
+        validate_args(&entry, args)?;
+        match self {
+            Engine::Interpreter(i) => i.exec(&entry, args),
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(p) => p.exec(&entry, args),
         }
-        elems
-            .into_iter()
-            .zip(&entry.outputs)
-            .map(|(lit, sig)| literal_to_tensor(&lit, &sig.shape))
-            .collect()
     }
+}
 
-    fn validate_args(&self, entry: &ArtifactEntry, args: &[Arg]) -> Result<()> {
-        if args.len() != entry.inputs.len() {
+fn validate_args(entry: &ArtifactEntry, args: &[Arg]) -> Result<()> {
+    if args.len() != entry.inputs.len() {
+        return Err(Error::Runtime(format!(
+            "{}: expected {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            args.len()
+        )));
+    }
+    for (i, (arg, sig)) in args.iter().zip(&entry.inputs).enumerate() {
+        let ok = match (arg, sig.dtype) {
+            (Arg::T(t), DType::F32) => t.shape() == &sig.shape[..],
+            (Arg::I(v), DType::I32) => sig.shape == [v.len()],
+            (Arg::S(_), DType::F32) => sig.shape.is_empty(),
+            _ => false,
+        };
+        if !ok {
             return Err(Error::Runtime(format!(
-                "{}: expected {} inputs, got {}",
+                "{}: input {i} mismatch: sig {:?} {:?}, arg {}",
                 entry.name,
-                entry.inputs.len(),
-                args.len()
+                sig.shape,
+                sig.dtype,
+                match arg {
+                    Arg::T(t) => format!("f32 tensor {:?}", t.shape()),
+                    Arg::I(v) => format!("i32 vec len {}", v.len()),
+                    Arg::S(_) => "f32 scalar".to_string(),
+                }
             )));
         }
-        for (i, (arg, sig)) in args.iter().zip(&entry.inputs).enumerate() {
-            let ok = match (arg, sig.dtype) {
-                (Arg::T(t), DType::F32) => t.shape() == &sig.shape[..] ,
-                (Arg::I(v), DType::I32) => sig.shape == [v.len()],
-                (Arg::S(_), DType::F32) => sig.shape.is_empty(),
-                _ => false,
-            };
-            if !ok {
-                return Err(Error::Runtime(format!(
-                    "{}: input {i} mismatch: sig {:?} {:?}, arg {}",
-                    entry.name,
-                    sig.shape,
-                    sig.dtype,
-                    match arg {
-                        Arg::T(t) => format!("f32 tensor {:?}", t.shape()),
-                        Arg::I(v) => format!("i32 vec len {}", v.len()),
-                        Arg::S(_) => "f32 scalar".to_string(),
-                    }
-                )));
-            }
-        }
-        Ok(())
     }
-}
-
-fn arg_to_literal(a: &Arg) -> Result<xla::Literal> {
-    match a {
-        Arg::T(t) => {
-            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-            Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
-        }
-        Arg::I(v) => Ok(xla::Literal::vec1(v.as_slice())),
-        Arg::S(s) => Ok(xla::Literal::scalar(*s)),
-    }
-}
-
-fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
-    let data = lit.to_vec::<f32>()?;
-    Tensor::new(shape, data)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -165,14 +148,13 @@ mod tests {
 
     fn engine() -> Engine {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let m = Manifest::load(&dir).expect("run `make artifacts` first");
-        Engine::new(m).unwrap()
+        Engine::new(Manifest::load(&dir).unwrap()).unwrap()
     }
 
     #[test]
     fn morph_artifact_matches_rust_morph() {
-        // The AOT Pallas morph kernel and the rust MorphKey::morph must
-        // agree: same algebra, two implementations, two languages.
+        // The engine's morph kernel and MorphKey::morph must agree: same
+        // algebra, two dispatch paths.
         let eng = engine();
         let g = crate::Geometry::SMALL;
         let key = crate::morph::MorphKey::generate(g, 16, 7).unwrap();
@@ -189,8 +171,41 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert!(
             out[0].allclose(&rust_t, 1e-4, 1e-4),
-            "XLA morph != rust morph (max diff {})",
+            "engine morph != rust morph (max diff {})",
             out[0].max_abs_diff(&rust_t).unwrap()
+        );
+    }
+
+    #[test]
+    fn augconv_artifact_matches_layer_forward() {
+        // augconv_forward_small_b8 == AugConvLayer::forward (eq. 5 path)
+        let eng = engine();
+        let g = crate::Geometry::SMALL;
+        let mut rng = Rng::new(11);
+        let cac = Tensor::new(
+            &[g.d_len(), g.f_len()],
+            rng.normal_vec(g.d_len() * g.f_len(), 0.05),
+        )
+        .unwrap();
+        let bias: Vec<f32> = rng.normal_vec(g.beta, 0.1);
+        let t = Tensor::new(&[8, g.d_len()], rng.normal_vec(8 * g.d_len(), 1.0)).unwrap();
+        let layer =
+            crate::augconv::AugConvLayer::from_parts(g, cac.clone(), bias.clone()).unwrap();
+        let want = layer.forward(&t).unwrap();
+        let out = eng
+            .exec(
+                "augconv_forward_small_b8",
+                &[
+                    Arg::T(t),
+                    Arg::T(cac),
+                    Arg::T(Tensor::new(&[g.beta], bias).unwrap()),
+                ],
+            )
+            .unwrap();
+        assert!(
+            out[0].allclose(&want, 1e-4, 1e-4),
+            "max diff {}",
+            out[0].max_abs_diff(&want).unwrap()
         );
     }
 
@@ -205,13 +220,31 @@ mod tests {
         assert!(eng
             .exec("morph_apply_small_q48_b8", &[Arg::T(bad), Arg::T(core)])
             .is_err());
+        // unknown artifact
+        assert!(eng.exec("no_such_artifact", &[]).is_err());
+        // prepare validates existence
+        assert!(eng.prepare("morph_apply_small_q48_b8").is_ok());
+        assert!(eng.prepare("nonexistent").is_err());
     }
 
     #[test]
-    fn executable_cache_reuses() {
+    fn infer_artifact_runs_and_is_deterministic() {
         let eng = engine();
-        let a = eng.prepare("morph_apply_small_q48_b8").unwrap();
-        let b = eng.prepare("morph_apply_small_q48_b8").unwrap();
-        assert!(Rc::ptr_eq(&a, &b));
+        let m = eng.manifest();
+        let g = m.geometry("small").unwrap();
+        let mut rng = Rng::new(5);
+        let params = crate::coordinator::trainer::init_params(&m.base_params, &mut rng);
+        let mut args: Vec<Arg> = params.into_iter().map(Arg::T).collect();
+        let x = Tensor::new(
+            &[8, g.alpha, g.m, g.m],
+            rng.normal_vec(8 * g.d_len(), 0.5),
+        )
+        .unwrap();
+        args.push(Arg::T(x));
+        let a = eng.exec("infer_base_small_b8", &args).unwrap();
+        let b = eng.exec("infer_base_small_b8", &args).unwrap();
+        assert_eq!(a[0].shape(), &[8, m.num_classes]);
+        assert_eq!(a[0], b[0]);
+        assert!(a[0].data().iter().all(|v| v.is_finite()));
     }
 }

@@ -1,0 +1,112 @@
+//! PJRT execution engine (`pjrt` cargo feature).
+//!
+//! Loads AOT artifacts (HLO text, written by `python -m compile.aot`) and
+//! executes them through the `xla` crate. One [`PjrtEngine`] owns the
+//! PJRT CPU client and a cache of compiled executables keyed by artifact
+//! name, so each HLO module is parsed + compiled exactly once per process
+//! and then reused on the hot path.
+//!
+//! NOTE: the `xla` crate is not part of the default dependency set — to
+//! build with `--features pjrt`, vendor it and add
+//! `xla = { path = "…" }` to `[dependencies]` in `rust/Cargo.toml`.
+
+use super::Arg;
+use crate::manifest::{ArtifactEntry, Manifest};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Mutex;
+
+/// The PJRT execution engine.
+///
+/// PJRT handles wrap raw pointers and are not `Send`: a `PjrtEngine`
+/// lives on one thread (the serving worker constructs its own — see
+/// [`crate::coordinator::batcher`]).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        crate::logging::info(&format!(
+            "PJRT engine up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        ));
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn prepare(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        crate::logging::info(&format!(
+            "compiled {name} in {:.1}ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        ));
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with pre-validated typed args.
+    pub fn exec(&self, entry: &ArtifactEntry, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let exe = self.prepare(&entry.name)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(arg_to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| Error::Runtime(format!("{}: empty result", entry.name)))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let elems = out.to_tuple()?;
+        if elems.len() != entry.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                entry.name,
+                entry.outputs.len(),
+                elems.len()
+            )));
+        }
+        elems
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, sig)| literal_to_tensor(&lit, &sig.shape))
+            .collect()
+    }
+}
+
+fn arg_to_literal(a: &Arg) -> Result<xla::Literal> {
+    match a {
+        Arg::T(t) => {
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+        }
+        Arg::I(v) => Ok(xla::Literal::vec1(v.as_slice())),
+        Arg::S(s) => Ok(xla::Literal::scalar(*s)),
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(shape, data)
+}

@@ -1,0 +1,201 @@
+//! Backend parity: the parallel backend must produce outputs identical to
+//! the reference backend across random shapes — including the κ-block-
+//! diagonal morph cases — plus tensor/linalg shape-error behaviour.
+//!
+//! "Identical" here is *bitwise*: the parallel backend runs the same
+//! blocked kernel per row, only on different threads, so there is no
+//! tolerance to hide behind.
+
+use mole::backend::{Backend, ParallelBackend, RefBackend};
+use mole::morph::MorphKey;
+use mole::tensor::Tensor;
+use mole::testkit::{forall, gen};
+use mole::Geometry;
+
+#[test]
+fn prop_parallel_gemm_equals_ref() {
+    forall(
+        11,
+        24,
+        |rng| {
+            let m = gen::usize_in(rng, 1, 150);
+            let k = gen::usize_in(rng, 1, 200);
+            let n = gen::usize_in(rng, 1, 180);
+            let threads = gen::one_of(rng, &[0usize, 2, 3, 7]);
+            let a = gen::tensor(rng, &[m, k], 1.0);
+            let b = gen::tensor(rng, &[k, n], 1.0);
+            (a, b, threads)
+        },
+        |(a, b, threads)| {
+            let want = RefBackend::new().gemm(a, b).map_err(|e| e.to_string())?;
+            let got = ParallelBackend::new(*threads)
+                .gemm(a, b)
+                .map_err(|e| e.to_string())?;
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!(
+                    "parallel({threads}) output differs (max diff {})",
+                    got.max_abs_diff(&want).unwrap()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_gemm_accumulate_equals_ref() {
+    forall(
+        12,
+        12,
+        |rng| {
+            let m = gen::usize_in(rng, 1, 80);
+            let k = gen::usize_in(rng, 1, 80);
+            let n = gen::usize_in(rng, 1, 80);
+            let a = gen::tensor(rng, &[m, k], 1.0);
+            let b = gen::tensor(rng, &[k, n], 1.0);
+            let seed_c = gen::tensor(rng, &[m, n], 1.0);
+            (a, b, seed_c)
+        },
+        |(a, b, seed_c)| {
+            let mut want = seed_c.clone();
+            RefBackend::new()
+                .gemm_into(a, b, &mut want, true)
+                .map_err(|e| e.to_string())?;
+            let mut got = seed_c.clone();
+            ParallelBackend::new(4)
+                .gemm_into(a, b, &mut got, true)
+                .map_err(|e| e.to_string())?;
+            if got == want {
+                Ok(())
+            } else {
+                Err("accumulating gemm differs across backends".into())
+            }
+        },
+    );
+}
+
+/// κ-block-diagonal parity over every κ the SMALL geometry admits in the
+/// paper's settings, driven through the real MorphKey path.
+#[test]
+fn prop_blockdiag_and_morph_parity() {
+    forall(
+        13,
+        10,
+        |rng| {
+            let kappa = gen::one_of(rng, &[1usize, 3, 16, 48, 256]);
+            let batch = gen::usize_in(rng, 1, 9);
+            let seed = rng.next_u64();
+            let rows = gen::tensor(rng, &[batch, 768], 1.0);
+            (kappa, seed, rows)
+        },
+        |(kappa, seed, rows)| {
+            let refb = RefBackend::new();
+            let parb = ParallelBackend::new(0);
+            // raw kernel parity
+            let q = 768 / kappa;
+            let core = {
+                let mut r = mole::rng::Rng::new(*seed);
+                gen::tensor(&mut r, &[q, q], 0.5)
+            };
+            let want = refb.apply_blockdiag(rows, &core).map_err(|e| e.to_string())?;
+            let got = parb.apply_blockdiag(rows, &core).map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!("blockdiag differs at kappa={kappa}"));
+            }
+            // and through the MorphKey API (explicit backends)
+            let key = MorphKey::generate(Geometry::SMALL, *kappa, *seed)
+                .map_err(|e| e.to_string())?;
+            let a = key.morph_on(&refb, rows).map_err(|e| e.to_string())?;
+            let b = key.morph_on(&parb, rows).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("morph differs at kappa={kappa}"));
+            }
+            let ua = key.unmorph_on(&refb, &a).map_err(|e| e.to_string())?;
+            let ub = key.unmorph_on(&parb, &b).map_err(|e| e.to_string())?;
+            if ua != ub {
+                return Err(format!("unmorph differs at kappa={kappa}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The C^ac construction — the acceptance-criteria hot path — agrees
+/// across backends through the public build API.
+#[test]
+fn aug_conv_build_parity() {
+    use mole::augconv::{build_aug_conv_from_c_on, ChannelPerm};
+    let g = Geometry::SMALL;
+    let mut rng = mole::rng::Rng::new(31);
+    let w1 = Tensor::new(
+        &[g.beta, g.alpha, g.p, g.p],
+        rng.normal_vec(g.beta * g.alpha * g.p * g.p, 0.4),
+    )
+    .unwrap();
+    let c = mole::d2r::build_c_matrix(&w1, &g).unwrap();
+    for kappa in [3usize, 16] {
+        let key = MorphKey::generate(g, kappa, 17).unwrap();
+        let perm = ChannelPerm::generate(g.beta, 17);
+        let a = build_aug_conv_from_c_on(&RefBackend::new(), &c, &key, &perm).unwrap();
+        let b = build_aug_conv_from_c_on(&ParallelBackend::new(0), &c, &key, &perm).unwrap();
+        assert_eq!(a, b, "C^ac differs across backends at kappa={kappa}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shape-error behaviour (Tensor + backend surfaces)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tensor_shape_errors() {
+    // construction
+    assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    assert!(Tensor::new(&[0, 3], vec![]).is_ok()); // empty is legal
+    // reshape must conserve elements
+    let t = Tensor::zeros(&[4, 4]);
+    assert!(t.clone().reshape(&[2, 9]).is_err());
+    assert!(t.clone().reshape(&[2, 8]).is_ok());
+    // elementwise ops demand equal shapes
+    let mut a = Tensor::zeros(&[3]);
+    assert!(a.add_assign(&Tensor::zeros(&[4])).is_err());
+    assert!(a.sub_assign(&Tensor::zeros(&[2])).is_err());
+    assert!(a.rms_diff(&Tensor::zeros(&[5])).is_err());
+    assert!(a.max_abs_diff(&Tensor::zeros(&[5])).is_err());
+    // allclose returns false (not panic) on shape mismatch
+    assert!(!Tensor::zeros(&[2]).allclose(&Tensor::zeros(&[3]), 1.0, 1.0));
+}
+
+#[test]
+fn backend_shape_errors_are_uniform() {
+    for be in [
+        Box::new(RefBackend::new()) as Box<dyn Backend>,
+        Box::new(ParallelBackend::new(2)) as Box<dyn Backend>,
+    ] {
+        // inner-dim mismatch
+        assert!(be.gemm(&Tensor::zeros(&[2, 3]), &Tensor::zeros(&[4, 2])).is_err());
+        // non-2d operands
+        assert!(be.gemm(&Tensor::zeros(&[2]), &Tensor::zeros(&[2, 2])).is_err());
+        // gemm_into output shape
+        let mut c = Tensor::zeros(&[3, 3]);
+        assert!(be
+            .gemm_into(&Tensor::zeros(&[2, 2]), &Tensor::zeros(&[2, 2]), &mut c, false)
+            .is_err());
+        // blockdiag divisibility + squareness
+        assert!(be
+            .apply_blockdiag(&Tensor::zeros(&[1, 10]), &Tensor::zeros(&[3, 3]))
+            .is_err());
+        assert!(be
+            .apply_blockdiag(&Tensor::zeros(&[1, 10]), &Tensor::zeros(&[2, 5]))
+            .is_err());
+    }
+}
+
+#[test]
+fn morph_rejects_wrong_row_length() {
+    let key = MorphKey::generate(Geometry::SMALL, 16, 3).unwrap();
+    let bad = Tensor::zeros(&[2, 100]);
+    assert!(key.morph(&bad).is_err());
+    let bad3d = Tensor::zeros(&[2, 768]).reshape(&[2, 24, 32]).unwrap();
+    assert!(key.morph(&bad3d).is_err());
+}
