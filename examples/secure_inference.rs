@@ -57,7 +57,11 @@ fn main() -> mole::Result<()> {
     let handle = ServingHandle::start(
         manifest,
         model,
-        BatcherConfig { max_batch: 32, timeout: Duration::from_millis(2) },
+        BatcherConfig {
+            max_batch: 32,
+            timeout: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
     )?;
 
     // --- fire concurrent clients ------------------------------------------

@@ -1,15 +1,23 @@
-//! Serving-path benchmark: throughput / latency of the dynamic batcher
-//! over the AOT inference artifacts, across batcher configurations and
-//! client counts. Not a paper table per se — it substantiates that the
-//! L3 coordinator is not the bottleneck (PERFORMANCE §L3 target).
+//! Serving-path benchmark: throughput / latency of the adaptive
+//! micro-batcher, in-process and over the real TCP serving layer.
+//!
+//! Part 1 sweeps batcher configurations against in-process clients (no
+//! sockets — isolates the batcher). Part 2 drives `Server` + `loadgen`
+//! over loopback TCP at 8 concurrent connections and compares
+//! one-request-per-GEMM (`max_batch=1`) against micro-batching
+//! (`max_batch=32`), reporting the throughput multiple — the number the
+//! ISSUE acceptance gate reads (batched ≥ 2x unbatched).
 //!
 //! Run: `cargo bench --bench bench_serving`
 
 use mole::bench::{table_header, table_row};
 use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
+use mole::coordinator::loadgen::{run as run_loadgen, LoadgenConfig};
+use mole::coordinator::server::{demo_model, ServeConfig, Server};
 use mole::coordinator::trainer::init_params;
 use mole::manifest::Manifest;
 use mole::rng::Rng;
+use mole::runtime::SharedEngine;
 use mole::tensor::Tensor;
 use std::path::Path;
 use std::time::Duration;
@@ -33,12 +41,20 @@ fn run_load(handle: &ServingHandle, clients: usize, per_client: usize) -> f64 {
     (clients * per_client) as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn main() {
-    mole::logging::init();
-    println!("=== serving: dynamic batcher throughput/latency ===\n");
+fn in_process_sweep() {
+    println!("--- part 1: in-process batcher sweep ---\n");
     let widths = [10, 12, 9, 12, 10, 10, 10, 11];
     table_header(
-        &["max_batch", "timeout_ms", "clients", "throughput", "p50_us", "p99_us", "batchsz", "pad%"],
+        &[
+            "max_batch",
+            "timeout_ms",
+            "clients",
+            "throughput",
+            "p50_us",
+            "p99_us",
+            "batchsz",
+            "pad%",
+        ],
         &widths,
     );
 
@@ -62,6 +78,7 @@ fn main() {
                 BatcherConfig {
                     max_batch,
                     timeout: Duration::from_millis(timeout_ms),
+                    ..BatcherConfig::default()
                 },
             )
             .unwrap();
@@ -85,6 +102,99 @@ fn main() {
             );
         }
     }
+}
+
+/// Start a loopback server with the given batch policy and drive it with
+/// the loadgen; returns (throughput_rps, p50_us, p99_us, mean_batch).
+fn tcp_run(
+    max_batch: usize,
+    timeout: Duration,
+    adaptive: bool,
+    conns: usize,
+) -> (f64, u64, u64, f64) {
+    let manifest = Manifest::load(Path::new("artifacts")).unwrap();
+    let (model, fingerprint) = demo_model(&manifest, 16, 7).unwrap();
+    let engine = SharedEngine::new(manifest);
+    let server = Server::bind(
+        engine,
+        model,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: conns,
+            batcher: BatcherConfig {
+                max_batch,
+                timeout,
+                min_timeout: Duration::from_micros(100),
+                adaptive,
+            },
+            kappa: 16,
+            fingerprint,
+        },
+    )
+    .unwrap();
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        connections: conns,
+        requests_per_conn: 96,
+        pipeline: 8,
+        seed: 3,
+    };
+    // warmup
+    run_loadgen(&LoadgenConfig { requests_per_conn: 8, ..cfg.clone() }).unwrap();
+    // snapshot so the reported batch size covers the measured run only
+    let batches0 = server.metrics().batches.get();
+    let items0 = server.metrics().batched_items.get();
+    let report = run_loadgen(&cfg).unwrap();
+    assert_eq!(report.errors, 0, "loadgen errors under bench load");
+    let (p50, _p95, p99) = report.latency.summary().unwrap_or((0, 0, 0));
+    let batches = server.metrics().batches.get() - batches0;
+    let items = server.metrics().batched_items.get() - items0;
+    let mean_batch = if batches == 0 { 0.0 } else { items as f64 / batches as f64 };
+    server.stop();
+    (report.throughput_rps(), p50, p99, mean_batch)
+}
+
+fn tcp_comparison() {
+    println!("\n--- part 2: TCP serving, 8 connections, pipeline 8 ---\n");
+    let widths = [24, 12, 10, 10, 10];
+    table_header(&["policy", "throughput", "p50_us", "p99_us", "batchsz"], &widths);
+    let conns = 8;
+    let (base_rps, bp50, bp99, bbs) =
+        tcp_run(1, Duration::from_millis(0), false, conns);
+    table_row(
+        &[
+            "one-request-per-GEMM".into(),
+            format!("{base_rps:.0}/s"),
+            bp50.to_string(),
+            bp99.to_string(),
+            format!("{bbs:.1}"),
+        ],
+        &widths,
+    );
+    let (micro_rps, mp50, mp99, mbs) =
+        tcp_run(32, Duration::from_millis(2), true, conns);
+    table_row(
+        &[
+            "micro-batch 32, adaptive".into(),
+            format!("{micro_rps:.0}/s"),
+            mp50.to_string(),
+            mp99.to_string(),
+            format!("{mbs:.1}"),
+        ],
+        &widths,
+    );
+    println!(
+        "\nmicro-batched throughput = {:.2}x one-request-per-GEMM at {conns} connections \
+         (acceptance gate: >= 2x)",
+        micro_rps / base_rps.max(1e-9)
+    );
+}
+
+fn main() {
+    mole::logging::init();
+    println!("=== serving: adaptive micro-batcher throughput/latency ===\n");
+    in_process_sweep();
+    tcp_comparison();
     println!("\nexpected shape: batching multiplies throughput under concurrency at a");
     println!("bounded p99 cost; padding stays low once load >= bucket sizes.");
 }

@@ -107,10 +107,16 @@ pub struct MoleConfig {
     pub seed: u64,
     /// Provider listen / developer connect address.
     pub addr: String,
-    /// Dynamic batcher: max batch size (must be an artifact batch size).
+    /// Micro-batcher: max batch size (must be an artifact batch size).
     pub max_batch: usize,
-    /// Dynamic batcher: max queue wait before a partial batch is flushed.
+    /// Micro-batcher: max queue wait before a partial batch is flushed.
     pub batch_timeout_ms: u64,
+    /// Micro-batcher: floor of the adaptive hold window, in µs.
+    pub min_batch_timeout_us: u64,
+    /// Micro-batcher: adapt the hold window to observed fill levels.
+    pub adaptive_batching: bool,
+    /// Serving: session worker threads (max concurrent TCP sessions).
+    pub serve_workers: usize,
     /// Training: steps / learning rate.
     pub train_steps: usize,
     pub lr: f64,
@@ -135,6 +141,9 @@ impl Default for MoleConfig {
             addr: "127.0.0.1:7433".to_string(),
             max_batch: 32,
             batch_timeout_ms: 2,
+            min_batch_timeout_us: 200,
+            adaptive_batching: true,
+            serve_workers: 8,
             train_steps: 300,
             lr: 0.05,
             data_seed: 7,
@@ -165,6 +174,13 @@ impl MoleConfig {
             addr: raw.get_or("net", "addr", &d.addr).to_string(),
             max_batch: raw.get_usize("serving", "max_batch", d.max_batch)?,
             batch_timeout_ms: raw.get_u64("serving", "batch_timeout_ms", d.batch_timeout_ms)?,
+            min_batch_timeout_us: raw.get_u64(
+                "serving",
+                "min_timeout_us",
+                d.min_batch_timeout_us,
+            )?,
+            adaptive_batching: raw.get_bool("serving", "adaptive", d.adaptive_batching)?,
+            serve_workers: raw.get_usize("serving", "workers", d.serve_workers)?,
             train_steps: raw.get_usize("train", "steps", d.train_steps)?,
             lr: raw.get_f64("train", "lr", d.lr)?,
             data_seed: raw.get_u64("data", "seed", d.data_seed)?,
@@ -189,6 +205,16 @@ impl MoleConfig {
     pub fn install_backend(&self) -> Result<()> {
         crate::backend::install(&self.backend, self.backend_threads)
     }
+
+    /// The micro-batcher policy encoded by the `[serving]` section.
+    pub fn batcher(&self) -> crate::coordinator::BatcherConfig {
+        crate::coordinator::BatcherConfig {
+            max_batch: self.max_batch,
+            timeout: std::time::Duration::from_millis(self.batch_timeout_ms),
+            min_timeout: std::time::Duration::from_micros(self.min_batch_timeout_us),
+            adaptive: self.adaptive_batching,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +231,9 @@ seed = 99
 [serving]
 max_batch = 8
 batch_timeout_ms = 5
+min_timeout_us = 150
+adaptive = false
+workers = 4
 
 [train]
 steps = 10
@@ -228,9 +257,18 @@ lr = 0.1
         assert_eq!(cfg.kappa, 3);
         assert_eq!(cfg.train_steps, 10);
         assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.min_batch_timeout_us, 150);
+        assert!(!cfg.adaptive_batching);
+        assert_eq!(cfg.serve_workers, 4);
         // default kept where unspecified
         assert_eq!(cfg.addr, "127.0.0.1:7433");
         assert_eq!(cfg.geometry, Geometry::SMALL);
+        // the [serving] section round-trips into a batcher policy
+        let b = cfg.batcher();
+        assert_eq!(b.max_batch, 8);
+        assert_eq!(b.timeout, std::time::Duration::from_millis(5));
+        assert_eq!(b.min_timeout, std::time::Duration::from_micros(150));
+        assert!(!b.adaptive);
     }
 
     #[test]

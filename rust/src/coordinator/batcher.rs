@@ -1,18 +1,35 @@
-//! Serving path: request router + dynamic batcher.
+//! Serving path: request router + adaptive micro-batcher.
 //!
-//! Inference requests (morphed rows) arrive from many client threads; a
-//! single worker drains the queue, forms a batch of at most `max_batch`
-//! (or whatever arrived within `timeout` of the first request), routes it
-//! to the smallest AOT executable whose baked batch size fits (padding the
-//! remainder), executes through PJRT, and fans the logits back out.
+//! Inference requests (morphed rows) arrive from many client threads and
+//! TCP sessions; a single worker drains the queue, coalesces concurrent
+//! rows into one Aug-Conv GEMM (amortizing the `C^ac` multiply across
+//! requests), routes the batch to the smallest AOT executable whose baked
+//! batch size fits (padding the remainder), executes it, and fans the
+//! logits back out per request.
 //!
-//! The PJRT client wraps raw pointers (`!Send` buffers), so the worker
-//! *owns* its [`Engine`]; clients interact through an mpsc handle — this
-//! is the standard single-executor / many-clients serving layout.
+//! Flushing is **size-or-deadline**: a batch goes out as soon as it holds
+//! `max_batch` rows, or when the hold window expires after the first row
+//! arrived. With [`BatcherConfig::adaptive`] the hold window adapts to
+//! load (see [`AdaptiveWindow`]): light traffic shrinks it toward
+//! `min_timeout` so singleton requests aren't taxed, bursts widen it back
+//! toward `timeout` so batches fill.
+//!
+//! Execution goes through a [`SharedEngine`] (`Send + Sync`), so the
+//! worker shares one engine with every other consumer in the process
+//! instead of constructing its own. (The PJRT engine wraps a non-`Send`
+//! client and is not shareable; serving always executes on the
+//! interpreter engine.)
+//!
+//! Two entry points:
+//! * [`ServingHandle::infer`] — blocking, one row in / logits out;
+//! * [`ServingHandle::submit`] — asynchronous, completion delivered to an
+//!   `mpsc` channel; this is what the TCP session layer uses to keep many
+//!   requests per connection in flight (responses may complete out of
+//!   order across batches).
 
 use crate::manifest::Manifest;
 use crate::metrics::ServingMetrics;
-use crate::runtime::{Arg, Engine};
+use crate::runtime::{Arg, SharedEngine};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 use std::sync::mpsc;
@@ -24,13 +41,67 @@ use std::time::{Duration, Instant};
 pub struct BatcherConfig {
     /// Upper bound on a formed batch (≤ the largest artifact batch).
     pub max_batch: usize,
-    /// How long to hold a partial batch after the first request arrives.
+    /// Longest hold for a partial batch after the first request arrives.
     pub timeout: Duration,
+    /// Floor for the adaptive hold window.
+    pub min_timeout: Duration,
+    /// Adapt the hold window to the observed fill level (see
+    /// [`AdaptiveWindow`]). When false the window is fixed at `timeout`.
+    pub adaptive: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 32, timeout: Duration::from_millis(2) }
+        Self {
+            max_batch: 32,
+            timeout: Duration::from_millis(2),
+            min_timeout: Duration::from_micros(200),
+            adaptive: false,
+        }
+    }
+}
+
+/// The size-or-deadline flush policy's adaptive half: a multiplicative
+/// increase / decrease controller on the hold window.
+///
+/// * a batch that fills to `max_batch` flushed on **size** — demand is
+///   high, double the window (up to `timeout`) so future partial batches
+///   get the best chance to fill;
+/// * a deadline flush at ≤ ¼ fill — holding bought almost no coalescing,
+///   halve the window (down to `min_timeout`) so light traffic pays the
+///   minimum latency tax;
+/// * anything in between holds the window steady.
+///
+/// Pure state machine, no clocks: drive it with [`AdaptiveWindow::on_batch`]
+/// and read [`AdaptiveWindow::window`]. Unit-testable without threads.
+#[derive(Debug, Clone)]
+pub struct AdaptiveWindow {
+    current: Duration,
+    min: Duration,
+    max: Duration,
+}
+
+impl AdaptiveWindow {
+    pub fn new(cfg: &BatcherConfig) -> Self {
+        let min = cfg.min_timeout.min(cfg.timeout);
+        Self { current: cfg.timeout, min, max: cfg.timeout }
+    }
+
+    /// The hold window to apply to the next batch.
+    pub fn window(&self) -> Duration {
+        self.current
+    }
+
+    /// Record a flushed batch of `fill` rows under the `max_batch` cap.
+    pub fn on_batch(&mut self, fill: usize, max_batch: usize) {
+        // low-fill threshold is at least 1 so small max_batch configs can
+        // still decay (with max_batch <= 3, `max_batch / 4` would be 0 and
+        // the window could only ever ratchet up)
+        if fill >= max_batch {
+            self.current = (self.current * 2).min(self.max);
+        } else if fill <= (max_batch / 4).max(1) {
+            self.current = (self.current / 2).max(self.min);
+        }
     }
 }
 
@@ -42,10 +113,18 @@ pub struct ServingModel {
     pub params: Vec<Tensor>,
 }
 
+/// An asynchronous completion delivered by [`ServingHandle::submit`].
+pub struct Completion {
+    pub id: u64,
+    pub result: Result<Vec<f32>>,
+}
+
+type Reply = Box<dyn FnOnce(Result<Vec<f32>>) + Send>;
+
 struct Request {
     row: Vec<f32>,
     enqueued: Instant,
-    reply: mpsc::SyncSender<Result<Vec<f32>>>,
+    reply: Reply,
 }
 
 /// Client handle to a running serving worker.
@@ -58,13 +137,26 @@ pub struct ServingHandle {
 }
 
 impl ServingHandle {
-    /// Spawn the worker. PJRT handles are not `Send`, so the worker thread
-    /// constructs its own [`Engine`] from the (plain-data) manifest.
+    /// Spawn the worker over a fresh [`SharedEngine`] for `manifest`.
     pub fn start(manifest: Manifest, model: ServingModel, cfg: BatcherConfig) -> Result<Self> {
+        Self::start_shared(SharedEngine::new(manifest), model, cfg)
+    }
+
+    /// Spawn the worker over an engine shared with the rest of the
+    /// process (the TCP server, other batchers, eval paths …).
+    pub fn start_shared(
+        engine: SharedEngine,
+        model: ServingModel,
+        cfg: BatcherConfig,
+    ) -> Result<Self> {
+        let manifest = engine.manifest();
         let g = manifest.geometry("small")?;
         let mut sizes = manifest.infer_batches.clone();
         sizes.sort_unstable();
         let largest = *sizes.last().ok_or_else(|| Error::Config("no infer batches".into()))?;
+        if cfg.max_batch == 0 {
+            return Err(Error::Config("max_batch must be >= 1".into()));
+        }
         if cfg.max_batch > largest {
             return Err(Error::Config(format!(
                 "max_batch {} exceeds largest artifact batch {largest}",
@@ -74,34 +166,72 @@ impl ServingHandle {
         let num_classes = manifest.num_classes;
         let metrics = Arc::new(ServingMetrics::default());
         let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let worker_metrics = metrics.clone();
         let d_len = g.d_len();
+        // Precompile / validate all bucket executables off the request path.
+        for &b in &sizes {
+            if b <= cfg.max_batch || b == sizes[0] {
+                engine.prepare(&format!("infer_aug_small_b{b}"))?;
+            }
+        }
         std::thread::Builder::new()
             .name("mole-serving".into())
-            .spawn(move || {
-                let engine = match Engine::new(manifest) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                worker_loop(engine, model, cfg, sizes, rx, worker_metrics, d_len, num_classes)
-            })
+            .spawn(move || worker_loop(engine, model, cfg, sizes, rx, worker_metrics, d_len))
             .map_err(Error::Io)?;
-        ready_rx
-            .recv()
-            .map_err(|_| Error::Runtime("serving worker died during init".into()))??;
         Ok(Self { tx, metrics, d_len, num_classes })
     }
 
     /// Blocking inference on one morphed row. Thread-safe; clones of the
     /// handle share the queue.
     pub fn infer(&self, row: &[f32]) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.enqueue(
+            row,
+            Instant::now(),
+            Box::new(move |r| {
+                let _ = reply_tx.send(r);
+            }),
+        )?;
+        let out = reply_rx
+            .recv()
+            .map_err(|_| Error::Protocol("serving worker dropped request".into()))??;
+        self.metrics.responses.inc();
+        Ok(out)
+    }
+
+    /// Asynchronous inference: enqueue one row; the completion (tagged
+    /// with `id`) is delivered to `done` when its batch executes.
+    /// Completions for different ids may arrive out of order relative to
+    /// submission — match on [`Completion::id`].
+    pub fn submit(&self, id: u64, row: &[f32], done: mpsc::Sender<Completion>) -> Result<()> {
+        self.submit_with(row, move |result| {
+            let _ = done.send(Completion { id, result });
+        })
+    }
+
+    /// Asynchronous inference with an arbitrary completion callback,
+    /// invoked on the batcher worker thread when the row's batch
+    /// executes. The TCP session layer uses this to write
+    /// `InferResponse` frames straight into a connection's writer queue.
+    pub fn submit_with<F>(&self, row: &[f32], reply: F) -> Result<()>
+    where
+        F: FnOnce(Result<Vec<f32>>) + Send + 'static,
+    {
+        let metrics = self.metrics.clone();
+        self.enqueue(
+            row,
+            Instant::now(),
+            Box::new(move |result| {
+                // like the blocking path, only successes count as served
+                if result.is_ok() {
+                    metrics.responses.inc();
+                }
+                reply(result);
+            }),
+        )
+    }
+
+    fn enqueue(&self, row: &[f32], enqueued: Instant, reply: Reply) -> Result<()> {
         if row.len() != self.d_len {
             return Err(Error::Shape(format!(
                 "infer row len {} != {}",
@@ -110,46 +240,51 @@ impl ServingHandle {
             )));
         }
         self.metrics.requests.inc();
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         self.tx
-            .send(Request { row: row.to_vec(), enqueued: Instant::now(), reply: reply_tx })
-            .map_err(|_| Error::Protocol("serving worker gone".into()))?;
-        let out = reply_rx
-            .recv()
-            .map_err(|_| Error::Protocol("serving worker dropped request".into()))??;
-        self.metrics.responses.inc();
-        Ok(out)
+            .send(Request { row: row.to_vec(), enqueued, reply })
+            .map_err(|_| Error::Protocol("serving worker gone".into()))
     }
 
     pub fn num_classes(&self) -> usize {
         self.num_classes
     }
+
+    /// Row length this model serves (α·m²).
+    pub fn d_len(&self) -> usize {
+        self.d_len
+    }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    engine: Engine,
+    engine: SharedEngine,
     model: ServingModel,
     cfg: BatcherConfig,
     sizes: Vec<usize>,
     rx: mpsc::Receiver<Request>,
     metrics: Arc<ServingMetrics>,
     d_len: usize,
-    _num_classes: usize,
 ) {
-    // Precompile all batch variants up front (off the request path).
-    for &b in &sizes {
-        if b <= cfg.max_batch || b == sizes[0] {
-            let _ = engine.prepare(&format!("infer_aug_small_b{b}"));
-        }
+    let mut adaptive = AdaptiveWindow::new(&cfg);
+    // The constant arg prefix (C^ac, bias, trunk params) is built once;
+    // only the trailing rows tensor changes per batch. Cloning the
+    // multi-megabyte C^ac on every flush would dominate small-batch
+    // latency.
+    let mut args: Vec<Arg> = Vec::with_capacity(model.params.len() + 3);
+    args.push(Arg::T(model.cac.clone()));
+    args.push(Arg::T(Tensor::new(&[model.bias.len()], model.bias.clone()).unwrap()));
+    for p in &model.params {
+        args.push(Arg::T(p.clone()));
     }
+    args.push(Arg::T(Tensor::zeros(&[0]))); // rows slot, replaced per batch
     loop {
         // block for the first request of the batch
         let first = match rx.recv() {
             Ok(r) => r,
             Err(_) => return, // all handles dropped
         };
-        let deadline = Instant::now() + cfg.timeout;
+        let window = if cfg.adaptive { adaptive.window() } else { cfg.timeout };
+        metrics.window_us.set(window.as_micros() as u64);
+        let deadline = Instant::now() + window;
         let mut pending = vec![first];
         while pending.len() < cfg.max_batch {
             let now = Instant::now();
@@ -162,6 +297,7 @@ fn worker_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
+        adaptive.on_batch(pending.len(), cfg.max_batch);
 
         // route to the smallest executable that fits
         let count = pending.len();
@@ -178,14 +314,7 @@ fn worker_loop(
         metrics.batched_items.add(count as u64);
         metrics.padding_items.add((bucket - count) as u64);
 
-        let mut args: Vec<Arg> = vec![
-            Arg::T(model.cac.clone()),
-            Arg::T(Tensor::new(&[model.bias.len()], model.bias.clone()).unwrap()),
-        ];
-        for p in &model.params {
-            args.push(Arg::T(p.clone()));
-        }
-        args.push(Arg::T(Tensor::new(&[bucket, d_len], rows).unwrap()));
+        *args.last_mut().unwrap() = Arg::T(Tensor::new(&[bucket, d_len], rows).unwrap());
 
         let t0 = Instant::now();
         let result = engine.exec(&format!("infer_aug_small_b{bucket}"), &args);
@@ -198,13 +327,13 @@ fn worker_loop(
                 for (i, r) in pending.into_iter().enumerate() {
                     let v = logits.data()[i * nc..(i + 1) * nc].to_vec();
                     metrics.total_latency.record(r.enqueued.elapsed());
-                    let _ = r.reply.send(Ok(v));
+                    (r.reply)(Ok(v));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
                 for r in pending {
-                    let _ = r.reply.send(Err(Error::Runtime(msg.clone())));
+                    (r.reply)(Err(Error::Runtime(msg.clone())));
                 }
             }
         }
@@ -237,7 +366,11 @@ mod tests {
         ServingHandle::start(
             manifest,
             model,
-            BatcherConfig { max_batch, timeout: Duration::from_millis(timeout_ms) },
+            BatcherConfig {
+                max_batch,
+                timeout: Duration::from_millis(timeout_ms),
+                ..BatcherConfig::default()
+            },
         )
         .unwrap()
     }
@@ -288,8 +421,128 @@ mod tests {
         let row = rng.normal_vec(768, 1.0);
         let a = h.infer(&row).unwrap();
         let b = h.infer(&row).unwrap();
-        for (x, y) in a.iter().zip(&b) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        assert_eq!(a, b, "same row must produce bitwise-identical logits");
+    }
+
+    /// `submit` keeps many requests in flight from one thread; completions
+    /// (possibly spread over several batches, finishing out of order
+    /// relative to submission) must carry the right id → logits pairing.
+    #[test]
+    fn submit_pairs_ids_with_rows_across_batches() {
+        let h = handle(8, 2);
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<f32>> = (0..24).map(|_| rng.normal_vec(768, 1.0)).collect();
+
+        // expected logits one at a time, before loading the queue
+        let expect: Vec<Vec<f32>> = rows.iter().map(|r| h.infer(r).unwrap()).collect();
+
+        let (done_tx, done_rx) = mpsc::channel();
+        for (i, row) in rows.iter().enumerate() {
+            h.submit(i as u64, row, done_tx.clone()).unwrap();
         }
+        drop(done_tx);
+
+        let mut got: Vec<Option<Vec<f32>>> = vec![None; rows.len()];
+        let mut order = Vec::new();
+        for c in done_rx {
+            order.push(c.id);
+            let slot = &mut got[c.id as usize];
+            assert!(slot.is_none(), "duplicate completion for id {}", c.id);
+            *slot = Some(c.result.unwrap());
+        }
+        assert!(order.len() == rows.len());
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(
+                g.as_deref(),
+                Some(expect[i].as_slice()),
+                "id {i} paired with wrong logits"
+            );
+        }
+        // 24 rows through max_batch=8 ⇒ at least 3 executed batches and
+        // real coalescing
+        assert!(h.metrics.batches.get() >= 3);
+        assert!(h.metrics.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn adaptive_window_policy() {
+        let cfg = BatcherConfig {
+            max_batch: 32,
+            timeout: Duration::from_millis(4),
+            min_timeout: Duration::from_micros(250),
+            adaptive: true,
+        };
+        let mut w = AdaptiveWindow::new(&cfg);
+        assert_eq!(w.window(), Duration::from_millis(4));
+        // singleton deadline flushes decay toward the floor…
+        for _ in 0..10 {
+            w.on_batch(1, 32);
+        }
+        assert_eq!(w.window(), Duration::from_micros(250));
+        // …mid-fill batches hold steady…
+        w.on_batch(16, 32);
+        assert_eq!(w.window(), Duration::from_micros(250));
+        // …size flushes double back up, capped at the configured max.
+        for _ in 0..10 {
+            w.on_batch(32, 32);
+        }
+        assert_eq!(w.window(), Duration::from_millis(4));
+        // degenerate config: floor above max clamps to max
+        let odd = BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_micros(100),
+            min_timeout: Duration::from_millis(9),
+            adaptive: true,
+        };
+        let w = AdaptiveWindow::new(&odd);
+        assert_eq!(w.window(), Duration::from_micros(100));
+        // small max_batch must still decay on singleton flushes (a
+        // max_batch/4 == 0 threshold would be an up-only ratchet)
+        let small = BatcherConfig {
+            max_batch: 2,
+            timeout: Duration::from_millis(4),
+            min_timeout: Duration::from_micros(250),
+            adaptive: true,
+        };
+        let mut w = AdaptiveWindow::new(&small);
+        w.on_batch(2, 2); // full batch holds the ceiling
+        for _ in 0..10 {
+            w.on_batch(1, 2);
+        }
+        assert_eq!(w.window(), Duration::from_micros(250));
+    }
+
+    #[test]
+    fn adaptive_batcher_still_serves() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let manifest = Manifest::load(&dir).unwrap();
+        let g = manifest.geometry("small").unwrap();
+        let mut rng = Rng::new(21);
+        let model = ServingModel {
+            cac: Tensor::new(
+                &[g.d_len(), g.f_len()],
+                rng.normal_vec(g.d_len() * g.f_len(), 0.02),
+            )
+            .unwrap(),
+            bias: vec![0.0; g.beta],
+            params: init_params(&manifest.aug_params, &mut rng),
+        };
+        let h = ServingHandle::start(
+            manifest,
+            model,
+            BatcherConfig {
+                max_batch: 8,
+                timeout: Duration::from_millis(2),
+                min_timeout: Duration::from_micros(100),
+                adaptive: true,
+            },
+        )
+        .unwrap();
+        let row = rng.normal_vec(768, 1.0);
+        let a = h.infer(&row).unwrap();
+        let b = h.infer(&row).unwrap();
+        assert_eq!(a, b);
+        // after singleton traffic the adaptive window must have decayed
+        assert!(h.metrics.window_us.get() <= 2000);
     }
 }

@@ -1,0 +1,177 @@
+//! Multi-connection load generator for the serving layer (`mole
+//! loadgen`): N client connections, each pipelining `InferRequest`
+//! frames against a [`super::server::Server`], reporting throughput and
+//! latency percentiles through the [`crate::metrics`] machinery.
+
+use super::server::ServingClient;
+use crate::metrics::{Counter, Histogram};
+use crate::rng::Rng;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Load shape.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address to connect to.
+    pub addr: String,
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Requests issued per connection.
+    pub requests_per_conn: usize,
+    /// In-flight requests per connection (1 = strict request/response
+    /// ping-pong; deeper pipelines let the server batch across one
+    /// connection as well as across connections).
+    pub pipeline: usize,
+    /// Seed for the synthetic morphed rows (per-connection streams are
+    /// derived from it, so runs are reproducible).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7433".to_string(),
+            connections: 8,
+            requests_per_conn: 64,
+            pipeline: 4,
+            seed: 1,
+        }
+    }
+}
+
+/// Aggregated outcome of one load run.
+pub struct LoadReport {
+    pub connections: usize,
+    /// Successfully answered requests.
+    pub ok: u64,
+    /// Requests that failed or were abandoned when a connection errored.
+    pub errors: u64,
+    pub elapsed: Duration,
+    /// Per-request wall latency (send → matching response).
+    pub latency: Arc<Histogram>,
+    pub bytes_out: u64,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.ok as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// One-line summary, same idiom as
+    /// [`crate::metrics::ServingMetrics::report`].
+    pub fn report(&self) -> String {
+        let (p50, p95, p99) = self.latency.summary().unwrap_or((0, 0, 0));
+        format!(
+            "conns={} ok={} errors={} elapsed_ms={:.1} throughput={:.0}/s \
+             latency_us p50={p50} p95={p95} p99={p99}",
+            self.connections,
+            self.ok,
+            self.errors,
+            self.elapsed.as_secs_f64() * 1e3,
+            self.throughput_rps(),
+        )
+    }
+}
+
+/// Drive one connection's request stream; returns how many requests
+/// completed successfully plus the error that abandoned the remainder
+/// (if any).
+fn run_connection(
+    cfg: &LoadgenConfig,
+    conn_index: u64,
+    latency: &Histogram,
+    bytes_out: &Counter,
+) -> (u64, Option<Error>) {
+    let mut ok = 0u64;
+    match drive_connection(cfg, conn_index, latency, bytes_out, &mut ok) {
+        Ok(()) => (ok, None),
+        Err(e) => (ok, Some(e)),
+    }
+}
+
+fn drive_connection(
+    cfg: &LoadgenConfig,
+    conn_index: u64,
+    latency: &Histogram,
+    bytes_out: &Counter,
+    ok: &mut u64,
+) -> Result<()> {
+    let mut client = ServingClient::connect(&cfg.addr)?;
+    let d_len = client.d_len();
+    let total = cfg.requests_per_conn as u64;
+    let depth = cfg.pipeline.max(1) as u64;
+    let mut rng = Rng::new(cfg.seed ^ (0xC0FFEE + conn_index * 0x9E3779B9));
+
+    let mut inflight: HashMap<u64, Instant> = HashMap::new();
+    let mut next_id = 0u64;
+    while *ok < total {
+        while (inflight.len() as u64) < depth && next_id < total {
+            let row = rng.normal_vec(d_len, 0.5);
+            bytes_out.add(client.send_request(next_id, &row)? as u64);
+            inflight.insert(next_id, Instant::now());
+            next_id += 1;
+        }
+        let (id, logits) = client.recv_response()?;
+        let sent = inflight.remove(&id).ok_or_else(|| {
+            Error::Protocol(format!("response for unknown/duplicate id {id}"))
+        })?;
+        if logits.is_empty() || logits.iter().any(|v| !v.is_finite()) {
+            return Err(Error::Protocol(format!("request {id}: non-finite logits")));
+        }
+        latency.record(sent.elapsed());
+        *ok += 1;
+    }
+    client.finish()
+}
+
+/// Run the full load shape; one thread per connection.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.connections == 0 || cfg.requests_per_conn == 0 {
+        return Err(Error::Config("loadgen needs connections >= 1 and requests >= 1".into()));
+    }
+    let latency = Arc::new(Histogram::default());
+    let bytes_out = Arc::new(Counter::default());
+    let t0 = Instant::now();
+    let mut threads = Vec::with_capacity(cfg.connections);
+    for c in 0..cfg.connections {
+        let cfg = cfg.clone();
+        let latency = latency.clone();
+        let bytes_out = bytes_out.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("mole-loadgen-{c}"))
+                .spawn(move || run_connection(&cfg, c as u64, &latency, &bytes_out))
+                .map_err(Error::Io)?,
+        );
+    }
+    let mut ok = 0u64;
+    let mut errors = 0u64;
+    let per_conn = cfg.requests_per_conn as u64;
+    for t in threads {
+        match t.join() {
+            Ok((n, err)) => {
+                ok += n;
+                if let Some(e) = err {
+                    // a clean-shutdown failure after all requests answered
+                    // still counts as one error (CI smoke must fail on it)
+                    errors += (per_conn - n).max(1);
+                    crate::logging::warn(&format!("loadgen connection failed: {e}"));
+                }
+            }
+            Err(_) => {
+                crate::logging::warn("loadgen connection thread panicked");
+                errors += per_conn;
+            }
+        }
+    }
+    Ok(LoadReport {
+        connections: cfg.connections,
+        ok,
+        errors,
+        elapsed: t0.elapsed(),
+        latency,
+        bytes_out: bytes_out.get(),
+    })
+}

@@ -8,8 +8,12 @@
 //! * **Developer** ([`developer`]): receives C^ac + morphed data, trains
 //!   and serves *without ever seeing original data*; all compute runs
 //!   through the AOT artifacts via the PJRT [`crate::runtime`].
-//! * **Serving** ([`batcher`]): a dynamic batcher + artifact router for
-//!   inference requests on morphed rows, with queue/padding metrics.
+//! * **Serving** ([`batcher`], [`server`]): an adaptive micro-batcher +
+//!   artifact router for inference requests on morphed rows (queue /
+//!   padding / window metrics), fronted by a concurrent TCP server
+//!   (`mole serve`) that fans many client sessions into one shared
+//!   engine; [`loadgen`] (`mole loadgen`) is the matching
+//!   multi-connection driver.
 //!
 //! Transport is a length-prefixed binary protocol over TCP
 //! ([`protocol`]); the same message enums also drive the in-process
@@ -18,14 +22,18 @@
 pub mod batcher;
 pub mod developer;
 pub mod experiment;
+pub mod loadgen;
 pub mod protocol;
 pub mod provider;
+pub mod server;
 pub mod trainer;
 
-pub use batcher::{BatcherConfig, ServingHandle};
+pub use batcher::{AdaptiveWindow, BatcherConfig, ServingHandle};
 pub use developer::{DeveloperNode, TrainOutcome};
+pub use loadgen::{LoadReport, LoadgenConfig};
 pub use protocol::Message;
 pub use provider::ProviderNode;
+pub use server::{ServeConfig, Server, ServingClient};
 pub use trainer::{TrainReport, Trainer, Variant};
 
 /// Session parameters negotiated in the handshake.

@@ -108,11 +108,15 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
+        let end = self
+            .i
+            .checked_add(n)
+            .ok_or_else(|| Error::Protocol("payload offset overflows".into()))?;
+        if end > self.b.len() {
             return Err(Error::Protocol("truncated payload".into()));
         }
-        let s = &self.b[self.i..self.i + n];
-        self.i = self.i + n;
+        let s = &self.b[self.i..end];
+        self.i = end;
         Ok(s)
     }
 
@@ -134,6 +138,17 @@ impl<'a> Cursor<'a> {
             .map_err(|_| Error::Protocol("non-utf8 string".into()))
     }
 
+    /// `count * 4` bytes with overflow-checked arithmetic — dims in a
+    /// hostile frame can multiply past `usize::MAX` (8 dims of u32::MAX
+    /// wrap a 64-bit product), which must fail typed, not wrap into a
+    /// bogus small read.
+    fn take_f32_sized(&mut self, count: usize) -> Result<&'a [u8]> {
+        let nbytes = count
+            .checked_mul(4)
+            .ok_or_else(|| Error::Protocol(format!("element count {count} overflows")))?;
+        self.take(nbytes)
+    }
+
     fn tensor(&mut self) -> Result<Tensor> {
         let nd = self.u8()? as usize;
         if nd > 8 {
@@ -143,8 +158,13 @@ impl<'a> Cursor<'a> {
         for _ in 0..nd {
             shape.push(self.u32()? as usize);
         }
-        let numel: usize = shape.iter().product();
-        let raw = self.take(numel * 4)?;
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                Error::Protocol(format!("tensor shape {shape:?} overflows element count"))
+            })?;
+        let raw = self.take_f32_sized(numel)?;
         let data: Vec<f32> = raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -154,7 +174,7 @@ impl<'a> Cursor<'a> {
 
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
-        let raw = self.take(n * 4)?;
+        let raw = self.take_f32_sized(n)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -163,7 +183,7 @@ impl<'a> Cursor<'a> {
 
     fn i32s(&mut self) -> Result<Vec<i32>> {
         let n = self.u32()? as usize;
-        let raw = self.take(n * 4)?;
+        let raw = self.take_f32_sized(n)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
@@ -271,6 +291,11 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<usize> {
 }
 
 /// Read one framed message (blocking).
+///
+/// The payload buffer grows with the bytes that actually arrive rather
+/// than being sized up-front from the length field, so a hostile header
+/// claiming a near-`MAX_PAYLOAD` frame over a short stream fails with a
+/// typed error without ever allocating gigabytes.
 pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
     let mut head = [0u8; 7];
     r.read_exact(&mut head)?;
@@ -282,8 +307,14 @@ pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
     if len > MAX_PAYLOAD {
         return Err(Error::Protocol(format!("frame length {len} too large")));
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
+    let mut payload = Vec::new();
+    r.by_ref().take(len as u64).read_to_end(&mut payload)?;
+    if payload.len() < len {
+        return Err(Error::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("frame truncated: header claims {len} bytes, got {}", payload.len()),
+        )));
+    }
     decode(tag, &payload)
 }
 
@@ -388,5 +419,131 @@ mod tests {
         head.push(8);
         head.extend_from_slice(&(u32::MAX).to_le_bytes());
         assert!(read_message(&mut head.as_slice()).is_err());
+    }
+
+    /// One representative frame per `Message` variant (every tag).
+    fn all_variants() -> Vec<Message> {
+        let mut rng = Rng::new(0);
+        vec![
+            Message::Hello {
+                geometry: Geometry::SMALL,
+                kappa: 16,
+                fingerprint: "abc123".into(),
+                num_batches: 10,
+                batch_size: 64,
+            },
+            Message::Conv1Weights {
+                w1: Tensor::new(&[2, 3, 3, 3], rng.normal_vec(54, 1.0)).unwrap(),
+                b1: vec![0.5, -0.5],
+            },
+            Message::AugConv {
+                matrix: Tensor::new(&[4, 8], rng.normal_vec(32, 1.0)).unwrap(),
+                bias: vec![1.0; 8],
+            },
+            Message::MorphedBatch {
+                id: 7,
+                rows: Tensor::new(&[2, 5], rng.normal_vec(10, 1.0)).unwrap(),
+                labels: vec![3, 9],
+            },
+            Message::EndOfData,
+            Message::InferRequest {
+                id: 99,
+                row: Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            },
+            Message::InferResponse { id: 99, logits: vec![0.1, 0.9] },
+            Message::Ack { of: 42 },
+            Message::Fault { msg: "boom".into() },
+        ]
+    }
+
+    /// Every variant must reject (not panic on) a frame whose stream is
+    /// cut mid-header or mid-payload, and — when the header length is
+    /// patched to lie about a shorter payload — fail typed from the
+    /// cursor instead of reading past the buffer.
+    #[test]
+    fn every_variant_rejects_truncation() {
+        for msg in all_variants() {
+            let mut buf = Vec::new();
+            write_message(&mut buf, &msg).unwrap();
+            // cut mid-header
+            assert!(read_message(&mut &buf[..3.min(buf.len())]).is_err(), "{msg:?}");
+            // cut one byte short of a complete frame (EndOfData's frame is
+            // header-only, so cutting it hits the header read instead)
+            assert!(read_message(&mut &buf[..buf.len() - 1]).is_err(), "{msg:?}");
+            // lie in the header: claim 4 fewer payload bytes than the
+            // fields need — decode must error, not read out of bounds
+            let payload_len = buf.len() - 7;
+            if payload_len >= 4 {
+                let mut lying = buf.clone();
+                lying[3..7].copy_from_slice(&((payload_len - 4) as u32).to_le_bytes());
+                lying.truncate(buf.len() - 4);
+                assert!(read_message(&mut lying.as_slice()).is_err(), "{msg:?}");
+            }
+        }
+    }
+
+    /// A hostile header claiming a ~1 GiB payload over a 2-byte stream
+    /// must fail fast without allocating the claimed size (the payload
+    /// buffer grows with arriving bytes only).
+    #[test]
+    fn hostile_length_does_not_overallocate() {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"ML");
+        frame.push(7); // InferResponse
+        frame.extend_from_slice(&((MAX_PAYLOAD as u32) - 1).to_le_bytes());
+        frame.extend_from_slice(&[0u8, 0u8]); // 2 bytes instead of ~1 GiB
+        let t0 = std::time::Instant::now();
+        match read_message(&mut frame.as_slice()) {
+            Err(Error::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
+            other => panic!("expected truncated-frame io error, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(1),
+            "hostile length field should fail fast"
+        );
+    }
+
+    /// Tensor dims whose product overflows `usize` must come back as a
+    /// typed protocol error (unchecked math would wrap into a tiny read
+    /// and hand a corrupt tensor to the caller).
+    #[test]
+    fn tensor_dim_overflow_rejected() {
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1); // request id
+        payload.push(8); // ndim = 8
+        for _ in 0..8 {
+            put_u32(&mut payload, u32::MAX); // 2^256 elements total
+        }
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"ML");
+        frame.push(6); // InferRequest
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        match read_message(&mut frame.as_slice()) {
+            Err(Error::Protocol(m)) => {
+                assert!(m.contains("overflow"), "unexpected message: {m}")
+            }
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+    }
+
+    /// An element count that does not overflow but exceeds the actual
+    /// payload must also fail from the cursor bounds check.
+    #[test]
+    fn element_count_beyond_payload_rejected() {
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1);
+        put_u32(&mut payload, 1_000_000); // logits: claims 4 MB of f32s
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"ML");
+        frame.push(7); // InferResponse
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        match read_message(&mut frame.as_slice()) {
+            Err(Error::Protocol(m)) => {
+                assert!(m.contains("truncated"), "unexpected message: {m}")
+            }
+            other => panic!("expected protocol error, got {other:?}"),
+        }
     }
 }

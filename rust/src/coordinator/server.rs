@@ -1,0 +1,397 @@
+//! The concurrent TCP serving layer (`mole serve`).
+//!
+//! A [`Server`] binds a `std::net::TcpListener` and accepts many
+//! concurrent client sessions on a fixed thread pool. Each session runs
+//! the serving half of the wire protocol ([`super::protocol`]):
+//!
+//! 1. the server opens with `Hello` (geometry, κ, key fingerprint, and
+//!    the batcher's `max_batch` in the `batch_size` slot) so clients can
+//!    size their morphed rows and verify they hold matching keys;
+//! 2. the client streams `InferRequest { id, row }` frames — any number,
+//!    pipelined as deep as it likes;
+//! 3. the server routes every row into the shared adaptive micro-batcher
+//!    ([`super::batcher`]), which coalesces rows from *all* sessions into
+//!    single Aug-Conv GEMMs, and fans `InferResponse { id, logits }`
+//!    frames back on the originating connection — possibly out of order
+//!    across ids (clients match on `id`);
+//! 4. the client closes with `EndOfData`; the server flushes every
+//!    in-flight response, answers `EndOfData`, and ends the session.
+//!
+//! Per-request failures (bad row length, engine faults) come back as
+//! `Fault` frames; framing violations fault the session but never the
+//! server. All sessions execute against one `Send + Sync`
+//! [`SharedEngine`] — no per-connection engine or model state.
+
+use super::batcher::{BatcherConfig, ServingHandle, ServingModel};
+use super::protocol::{read_message, write_message, Message};
+use crate::coordinator::trainer::init_params;
+use crate::manifest::Manifest;
+use crate::metrics::ServingMetrics;
+use crate::rng::Rng;
+use crate::runtime::SharedEngine;
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+use std::io::Read;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server tuning.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7433` (`:0` picks a free port).
+    pub addr: String,
+    /// Session worker threads == max concurrently served connections
+    /// (excess connections queue in the accept channel).
+    pub session_workers: usize,
+    /// Micro-batcher policy shared by all sessions.
+    pub batcher: BatcherConfig,
+    /// Advertised in `Hello` so clients can check key compatibility.
+    pub kappa: usize,
+    /// Key fingerprint advertised in `Hello`.
+    pub fingerprint: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7433".to_string(),
+            session_workers: 8,
+            batcher: BatcherConfig::default(),
+            kappa: 0,
+            fingerprint: String::new(),
+        }
+    }
+}
+
+/// A running serving instance: acceptor thread + session pool + batcher.
+pub struct Server {
+    local_addr: SocketAddr,
+    handle: ServingHandle,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    sessions: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind the listener and start serving `model` through `engine`.
+    pub fn bind(engine: SharedEngine, model: ServingModel, cfg: ServeConfig) -> Result<Self> {
+        let geometry = engine.manifest().geometry("small")?;
+        let handle = ServingHandle::start_shared(engine, model, cfg.batcher.clone())?;
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let hello = Message::Hello {
+            geometry,
+            kappa: cfg.kappa,
+            fingerprint: cfg.fingerprint.clone(),
+            num_batches: 0,
+            batch_size: cfg.batcher.max_batch as u32,
+        };
+
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let workers = cfg.session_workers.max(1);
+        let mut sessions = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let conn_rx = conn_rx.clone();
+            let handle = handle.clone();
+            let hello = hello.clone();
+            sessions.push(
+                std::thread::Builder::new()
+                    .name(format!("mole-session-{w}"))
+                    .spawn(move || loop {
+                        let sock = match conn_rx.lock().unwrap().recv() {
+                            Ok(s) => s,
+                            Err(_) => return, // acceptor gone: drain done
+                        };
+                        if let Err(e) = run_session(sock, &handle, &hello) {
+                            crate::logging::warn(&format!("session ended with error: {e}"));
+                        }
+                    })
+                    .map_err(Error::Io)?,
+            );
+        }
+
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            let metrics = handle.metrics.clone();
+            std::thread::Builder::new()
+                .name("mole-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return; // drops conn_tx → session pool drains
+                        }
+                        match conn {
+                            Ok(sock) => {
+                                sock.set_nodelay(true).ok();
+                                metrics.connections.inc();
+                                if conn_tx.send(sock).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                crate::logging::warn(&format!("accept failed: {e}"));
+                            }
+                        }
+                    }
+                })
+                .map_err(Error::Io)?
+        };
+
+        Ok(Self { local_addr, handle, shutdown, acceptor: Some(acceptor), sessions })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn metrics(&self) -> &Arc<ServingMetrics> {
+        &self.handle.metrics
+    }
+
+    /// The in-process handle (tests/benches can mix direct `infer` calls
+    /// with TCP traffic; both share the batcher and the engine).
+    pub fn handle(&self) -> &ServingHandle {
+        &self.handle
+    }
+
+    /// Block until `n` responses have been served or `timeout` elapses;
+    /// true iff the target was reached. Drives `mole serve
+    /// --max-requests` (CI smoke) without signal handling.
+    pub fn wait_for_responses(&self, n: u64, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.handle.metrics.responses.get() < n {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
+
+    /// Stop accepting, finish queued sessions, and join every thread.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // unblock the acceptor's blocking accept()
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for s in self.sessions.drain(..) {
+            let _ = s.join();
+        }
+    }
+}
+
+/// Counts protocol bytes as they stream in, so `bytes_in` reflects real
+/// wire traffic (the 5.12%-overhead story is about these bytes).
+struct CountingReader<R: Read> {
+    inner: R,
+    metrics: Arc<ServingMetrics>,
+}
+
+impl<R: Read> Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.metrics.bytes_in.add(n as u64);
+        Ok(n)
+    }
+}
+
+/// One client session: reader (this thread) + writer thread, linked by a
+/// message queue. In-flight batcher completions hold queue senders, so
+/// the writer drains every pending response before `EndOfData`.
+fn run_session(sock: TcpStream, handle: &ServingHandle, hello: &Message) -> Result<()> {
+    let metrics = handle.metrics.clone();
+    let mut writer_sock = sock.try_clone()?;
+    let (out_tx, out_rx) = mpsc::channel::<Message>();
+
+    let writer_metrics = metrics.clone();
+    let writer = std::thread::Builder::new()
+        .name("mole-session-writer".into())
+        .spawn(move || {
+            for msg in out_rx {
+                match write_message(&mut writer_sock, &msg) {
+                    Ok(n) => writer_metrics.bytes_out.add(n as u64),
+                    Err(_) => return, // peer gone; reader will notice too
+                }
+            }
+            // all senders dropped ⇒ every in-flight response is written
+            let _ = write_message(&mut writer_sock, &Message::EndOfData);
+            let _ = writer_sock.shutdown(Shutdown::Write);
+        })
+        .map_err(Error::Io)?;
+
+    // greet before reading: clients size their rows from this
+    out_tx
+        .send(hello.clone())
+        .map_err(|_| Error::Protocol("session writer died at handshake".into()))?;
+
+    let mut reader = CountingReader { inner: sock, metrics: metrics.clone() };
+    let result = loop {
+        match read_message(&mut reader) {
+            Ok(Message::InferRequest { id, row }) => {
+                let tx = out_tx.clone();
+                let m = metrics.clone();
+                // row-length validation happens inside the batcher
+                // (`enqueue`); a synchronous Err here faults this request
+                // only, not the session
+                let outcome = handle.submit_with(row.data(), move |result| {
+                    let msg = match result {
+                        Ok(logits) => Message::InferResponse { id, logits },
+                        Err(e) => {
+                            m.faults.inc();
+                            Message::Fault { msg: format!("request {id}: {e}") }
+                        }
+                    };
+                    let _ = tx.send(msg);
+                });
+                if let Err(e) = outcome {
+                    metrics.faults.inc();
+                    let _ =
+                        out_tx.send(Message::Fault { msg: format!("request {id}: {e}") });
+                }
+            }
+            Ok(Message::EndOfData) => break Ok(()),
+            Ok(other) => {
+                metrics.faults.inc();
+                let _ = out_tx.send(Message::Fault {
+                    msg: format!("serving session got unexpected {other:?}"),
+                });
+                break Err(Error::Protocol(format!(
+                    "unexpected message in serving session: {other:?}"
+                )));
+            }
+            // peer hung up without EndOfData: close quietly
+            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => break Ok(()),
+            Err(e) => {
+                metrics.faults.inc();
+                let _ = out_tx.send(Message::Fault { msg: e.to_string() });
+                break Err(e);
+            }
+        }
+    };
+
+    // Drop our sender; in-flight completions still hold clones, so the
+    // writer exits only after the last response frame is on the wire.
+    drop(out_tx);
+    let _ = writer.join();
+    result
+}
+
+/// Deterministic demo serving stack for `mole serve`, benches and tests:
+/// real keys + a He-initialized first layer pushed through the provider's
+/// `C^ac` construction, He-initialized trunk. Same `(kappa, seed)` ⇒
+/// bitwise-identical model on every call.
+pub fn demo_model(
+    manifest: &Manifest,
+    kappa: usize,
+    seed: u64,
+) -> Result<(ServingModel, String)> {
+    let g = manifest.geometry("small")?;
+    let keys = crate::keys::KeyBundle::generate(g, kappa, seed)?;
+    let morph_key = keys.morph_key()?;
+    let mut rng = Rng::new(seed ^ 0x5E57E);
+    let std = (2.0 / (g.alpha * g.p * g.p) as f64).sqrt() as f32;
+    let w1 = Tensor::new(
+        &[g.beta, g.alpha, g.p, g.p],
+        rng.normal_vec(g.beta * g.alpha * g.p * g.p, std),
+    )?;
+    let b1 = vec![0.0f32; g.beta];
+    let layer = crate::augconv::build_aug_conv(&w1, &b1, &morph_key, &keys.perm)?;
+    let model = ServingModel {
+        cac: layer.matrix().clone(),
+        bias: layer.bias().to_vec(),
+        params: init_params(&manifest.aug_params, &mut rng),
+    };
+    Ok((model, keys.fingerprint()))
+}
+
+/// What a serving session's `Hello` told the client.
+#[derive(Debug, Clone)]
+pub struct ServingHello {
+    pub geometry: Geometry,
+    pub kappa: usize,
+    pub fingerprint: String,
+    pub max_batch: usize,
+}
+
+/// Thin client for one serving session (used by `mole loadgen`, tests
+/// and benches). Requests pipeline freely; responses arrive tagged by id.
+pub struct ServingClient {
+    sock: TcpStream,
+    pub hello: ServingHello,
+}
+
+impl ServingClient {
+    pub fn connect<A: std::net::ToSocketAddrs>(addr: A) -> Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        let mut me = Self {
+            sock,
+            hello: ServingHello {
+                geometry: Geometry::SMALL,
+                kappa: 0,
+                fingerprint: String::new(),
+                max_batch: 0,
+            },
+        };
+        match read_message(&mut me.sock)? {
+            Message::Hello { geometry, kappa, fingerprint, batch_size, .. } => {
+                me.hello = ServingHello {
+                    geometry,
+                    kappa,
+                    fingerprint,
+                    max_batch: batch_size as usize,
+                };
+                Ok(me)
+            }
+            other => Err(Error::Protocol(format!("expected Hello, got {other:?}"))),
+        }
+    }
+
+    /// Row length the server expects (α·m² of the advertised geometry).
+    pub fn d_len(&self) -> usize {
+        self.hello.geometry.d_len()
+    }
+
+    pub fn send_request(&mut self, id: u64, row: &[f32]) -> Result<usize> {
+        let msg = Message::InferRequest {
+            id,
+            row: Tensor::new(&[row.len()], row.to_vec())?,
+        };
+        write_message(&mut self.sock, &msg)
+    }
+
+    /// Next `InferResponse`; `Fault` frames surface as `Err`.
+    pub fn recv_response(&mut self) -> Result<(u64, Vec<f32>)> {
+        match read_message(&mut self.sock)? {
+            Message::InferResponse { id, logits } => Ok((id, logits)),
+            Message::Fault { msg } => Err(Error::Protocol(format!("server fault: {msg}"))),
+            other => Err(Error::Protocol(format!("expected InferResponse, got {other:?}"))),
+        }
+    }
+
+    /// Graceful close: `EndOfData` out, drain stragglers until the
+    /// server's `EndOfData` (or EOF) comes back.
+    pub fn finish(mut self) -> Result<()> {
+        write_message(&mut self.sock, &Message::EndOfData)?;
+        loop {
+            match read_message(&mut self.sock) {
+                Ok(Message::EndOfData) => return Ok(()),
+                Ok(Message::InferResponse { .. }) => continue, // late straggler
+                Ok(other) => {
+                    return Err(Error::Protocol(format!("at session end, got {other:?}")))
+                }
+                Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                    return Ok(())
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}

@@ -24,7 +24,9 @@
 //!   self-contained.
 //! * **Delivery system ([`coordinator`])** — the Fig.-1 protocol between
 //!   data provider and developer, training on morphed streams, and the
-//!   dynamic-batching serving path.
+//!   serving path: a concurrent TCP server (`mole serve`) feeding an
+//!   adaptive micro-batcher over a shared `Send + Sync` engine, plus the
+//!   matching multi-connection load driver (`mole loadgen`).
 //!
 //! Quick orientation:
 //! * [`morph`] — morphing matrix **M** (block-diagonal, core **M′**) and

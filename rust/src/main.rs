@@ -6,6 +6,13 @@
 //! * `morph --out DIR [--kappa K]` — morph a demo image, dump PPMs + SSIM
 //! * `provider --listen ADDR [--batches N]` — run a data-provider node
 //! * `developer --connect ADDR` — run a developer node (train on stream)
+//! * `serve [--listen ADDR] [--max-batch N] [--timeout-ms T] [--workers W]
+//!   [--fixed-window] [--max-requests N]` — concurrent TCP inference
+//!   server over the adaptive micro-batcher (`--max-requests` exits after
+//!   N answered requests; for smoke tests)
+//! * `loadgen [--connect ADDR] [--connections C] [--requests R]
+//!   [--pipeline P]` — multi-connection serving load driver; prints
+//!   throughput + latency percentiles, exits nonzero on any error
 //! * `e2e [--steps N]` — in-process §4.4 three-group experiment (short)
 //! * `attack [--kappa K]` — run the three §4.2 attacks at small scale
 //!
@@ -49,11 +56,13 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("morph") => morph_demo(&args, &cfg),
         Some("provider") => provider(&args, &cfg),
         Some("developer") => developer(&args, &cfg),
+        Some("serve") => serve(&args, &cfg),
+        Some("loadgen") => loadgen(&args, &cfg),
         Some("e2e") => e2e(&args, &cfg),
         Some("attack") => attack(&args, &cfg),
         _ => {
             eprintln!(
-                "usage: mole <security-report|overhead|morph|provider|developer|e2e|attack> [options]"
+                "usage: mole <security-report|overhead|morph|provider|developer|serve|loadgen|e2e|attack> [options]"
             );
             Ok(())
         }
@@ -168,6 +177,95 @@ fn developer(args: &Args, cfg: &MoleConfig) -> Result<()> {
             .sum::<f32>()
             / outcome.accs.len().min(10).max(1) as f32
     );
+    Ok(())
+}
+
+fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::coordinator::server::{demo_model, ServeConfig, Server};
+    use mole::runtime::SharedEngine;
+
+    let addr = args.get_or("listen", &cfg.addr);
+    let mut batcher = cfg.batcher();
+    batcher.max_batch = args.get_usize("max-batch", batcher.max_batch)?;
+    batcher.timeout =
+        std::time::Duration::from_millis(args.get_u64("timeout-ms", cfg.batch_timeout_ms)?);
+    if args.flag("fixed-window") {
+        batcher.adaptive = false;
+    }
+    let workers = args.get_usize("workers", cfg.serve_workers)?;
+    let max_requests = args.get_u64("max-requests", 0)?;
+
+    let manifest = mole::manifest::Manifest::load(Path::new(&cfg.artifacts_dir))?;
+    let (model, fingerprint) = demo_model(&manifest, cfg.kappa, cfg.seed)?;
+    let engine = SharedEngine::new(manifest);
+    let server = Server::bind(
+        engine,
+        model,
+        ServeConfig {
+            addr: addr.clone(),
+            session_workers: workers,
+            batcher: batcher.clone(),
+            kappa: cfg.kappa,
+            fingerprint,
+        },
+    )?;
+    println!(
+        "serving on {} (workers={workers}, max_batch={}, window={}..{}us{})",
+        server.local_addr(),
+        batcher.max_batch,
+        batcher.min_timeout.as_micros(),
+        batcher.timeout.as_micros(),
+        if batcher.adaptive { ", adaptive" } else { ", fixed" },
+    );
+    if max_requests > 0 {
+        // smoke mode: exit once N requests were answered (or give up
+        // after 10 minutes so CI never hangs)
+        let reached =
+            server.wait_for_responses(max_requests, std::time::Duration::from_secs(600));
+        println!("{}", server.metrics().report());
+        server.stop();
+        if !reached {
+            return Err(mole::Error::Protocol(format!(
+                "timed out before {max_requests} responses"
+            )));
+        }
+        return Ok(());
+    }
+    // serve forever, logging a metrics line every 10s of activity
+    let mut last = 0u64;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let served = server.metrics().responses.get();
+        if served != last {
+            println!("{}", server.metrics().report());
+            last = served;
+        }
+    }
+}
+
+fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::coordinator::loadgen::{run, LoadgenConfig};
+
+    let lg = LoadgenConfig {
+        addr: args.get_or("connect", &cfg.addr),
+        connections: args.get_usize("connections", 8)?,
+        requests_per_conn: args.get_usize("requests", 64)?,
+        pipeline: args.get_usize("pipeline", 4)?,
+        seed: args.get_u64("seed", cfg.data_seed)?,
+    };
+    println!(
+        "loadgen: {} connections x {} requests (pipeline {}) -> {}",
+        lg.connections, lg.requests_per_conn, lg.pipeline, lg.addr
+    );
+    let report = run(&lg)?;
+    println!("{}", report.report());
+    if report.errors > 0 {
+        return Err(mole::Error::Protocol(format!(
+            "{} of {} requests failed",
+            report.errors,
+            report.errors + report.ok
+        )));
+    }
     Ok(())
 }
 

@@ -25,6 +25,23 @@ impl Counter {
     }
 }
 
+/// Last-write-wins gauge (lock-free); e.g. the batcher's current
+/// adaptive hold window.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
 /// Latency histogram with exact percentiles (stores raw micros; fine for
 /// bench-scale sample counts).
 #[derive(Debug, Default)]
@@ -88,6 +105,12 @@ pub struct ServingMetrics {
     pub total_latency: Histogram,
     pub bytes_in: Counter,
     pub bytes_out: Counter,
+    /// TCP sessions accepted over the server's lifetime.
+    pub connections: Counter,
+    /// Per-request protocol/execution failures surfaced to clients.
+    pub faults: Counter,
+    /// The batcher's current hold window in µs (adaptive mode moves it).
+    pub window_us: Gauge,
 }
 
 impl ServingMetrics {
@@ -115,10 +138,12 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         let (p50, p95, p99) = self.total_latency.summary().unwrap_or((0, 0, 0));
         format!(
-            "requests={} responses={} batches={} mean_batch={:.2} pad={:.1}% \
-             latency_us p50={} p95={} p99={}",
+            "conns={} requests={} responses={} faults={} batches={} mean_batch={:.2} \
+             pad={:.1}% latency_us p50={} p95={} p99={}",
+            self.connections.get(),
             self.requests.get(),
             self.responses.get(),
+            self.faults.get(),
             self.batches.get(),
             self.mean_batch_size(),
             self.padding_fraction() * 100.0,
@@ -169,6 +194,15 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.percentile(50.0), None);
         assert_eq!(h.mean_micros(), None);
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(2000);
+        g.set(250);
+        assert_eq!(g.get(), 250);
     }
 
     #[test]

@@ -42,9 +42,10 @@ impl From<Tensor> for Arg {
     }
 }
 
-/// The execution engine. Constructed per worker thread (cheap for the
-/// interpreter; the PJRT variant owns a non-`Send` client, which is why
-/// the serving worker builds its own — see [`crate::coordinator::batcher`]).
+/// The execution engine. Constructed per thread (cheap for the
+/// interpreter; the PJRT variant owns a non-`Send` client). Concurrent
+/// consumers that only need the interpreter share one [`SharedEngine`]
+/// instead.
 pub enum Engine {
     Interpreter(Interpreter),
     #[cfg(feature = "pjrt")]
@@ -106,6 +107,53 @@ impl Engine {
         }
     }
 }
+
+/// A thread-safe, shareable inference engine for the concurrent serving
+/// path: cheap-to-clone (`Arc` inside), `Send + Sync`, so many server
+/// sessions and batcher workers can execute artifacts against one engine
+/// without per-thread construction.
+///
+/// Always backed by the [`Interpreter`] — its state is plain manifest
+/// data, so sharing is free. The PJRT engine wraps a non-`Send` client
+/// and cannot be shared across threads, so the serving path
+/// ([`crate::coordinator::batcher`], [`crate::coordinator::server`])
+/// executes on the interpreter engine even when the `pjrt` feature is
+/// enabled; PJRT stays available through the per-thread [`Engine`].
+#[derive(Clone)]
+pub struct SharedEngine {
+    inner: std::sync::Arc<Interpreter>,
+}
+
+impl SharedEngine {
+    pub fn new(manifest: Manifest) -> Self {
+        Self { inner: std::sync::Arc::new(Interpreter::new(manifest)) }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    /// Validate that an artifact exists (the interpreter has no compile
+    /// step, so this is the whole warm-up).
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        self.inner.manifest().artifact(name).map(|_| ())
+    }
+
+    /// Execute an artifact with typed args (same contract as
+    /// [`Engine::exec`]).
+    pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let entry = self.inner.manifest().artifact(name)?.clone();
+        validate_args(&entry, args)?;
+        self.inner.exec(&entry, args)
+    }
+}
+
+// The whole point of SharedEngine is cross-thread sharing; fail the build
+// if an interpreter field ever stops being Send + Sync.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<SharedEngine>();
+};
 
 fn validate_args(entry: &ArtifactEntry, args: &[Arg]) -> Result<()> {
     if args.len() != entry.inputs.len() {
@@ -207,6 +255,34 @@ mod tests {
             "max diff {}",
             out[0].max_abs_diff(&want).unwrap()
         );
+    }
+
+    #[test]
+    fn shared_engine_concurrent_exec_is_deterministic() {
+        // many threads, one engine: same args ⇒ bitwise-identical logits
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let se = SharedEngine::new(Manifest::load(&dir).unwrap());
+        let g = crate::Geometry::SMALL;
+        let key = crate::morph::MorphKey::generate(g, 16, 7).unwrap();
+        let mut rng = Rng::new(3);
+        let d = Tensor::new(&[8, g.d_len()], rng.normal_vec(8 * g.d_len(), 1.0)).unwrap();
+        let args = vec![Arg::T(d), Arg::T(key.core().clone())];
+        let baseline = se.exec("morph_apply_small_q48_b8", &args).unwrap();
+        let mut threads = Vec::new();
+        for _ in 0..4 {
+            let se = se.clone();
+            let args = args.clone();
+            threads.push(std::thread::spawn(move || {
+                se.exec("morph_apply_small_q48_b8", &args).unwrap()
+            }));
+        }
+        for t in threads {
+            let out = t.join().unwrap();
+            assert_eq!(out[0], baseline[0]);
+        }
+        // prepare validates existence without a compile step
+        assert!(se.prepare("morph_apply_small_q48_b8").is_ok());
+        assert!(se.prepare("nope").is_err());
     }
 
     #[test]

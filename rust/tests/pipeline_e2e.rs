@@ -62,7 +62,11 @@ fn deliver_train_serve_roundtrip() {
             bias: outcome.bias.clone(),
             params: outcome.params.clone(),
         },
-        BatcherConfig { max_batch: 8, timeout: Duration::from_millis(1) },
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(1),
+            ..BatcherConfig::default()
+        },
     )
     .unwrap();
 

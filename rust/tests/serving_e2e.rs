@@ -1,0 +1,237 @@
+//! Loopback end-to-end tests for the concurrent TCP serving layer:
+//! a real `TcpListener` on port 0, many concurrent pipelined client
+//! sessions, and the hard invariant that micro-batched serving is
+//! **bitwise identical** to one-at-a-time inference.
+
+use mole::coordinator::batcher::BatcherConfig;
+use mole::coordinator::loadgen::{run, LoadgenConfig};
+use mole::coordinator::protocol::{read_message, write_message, Message};
+use mole::coordinator::server::{demo_model, ServeConfig, Server, ServingClient};
+use mole::manifest::Manifest;
+use mole::rng::Rng;
+use mole::runtime::{Arg, SharedEngine};
+use mole::tensor::Tensor;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const KAPPA: usize = 16;
+const SEED: u64 = 4242;
+
+fn manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).unwrap()
+}
+
+fn start_server(max_batch: usize, timeout_ms: u64) -> (Server, SharedEngine) {
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let (model, fingerprint) = demo_model(&m, KAPPA, SEED).unwrap();
+    let server = Server::bind(
+        engine.clone(),
+        model,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 8,
+            batcher: BatcherConfig {
+                max_batch,
+                timeout: Duration::from_millis(timeout_ms),
+                ..BatcherConfig::default()
+            },
+            kappa: KAPPA,
+            fingerprint,
+        },
+    )
+    .unwrap();
+    (server, engine)
+}
+
+/// Reference: run one row through the batch-1 artifact directly on the
+/// shared engine — the "one-at-a-time inference" the batcher must match.
+/// (`model` is a fresh `demo_model(KAPPA, SEED)` — bitwise identical to
+/// the one the server is holding.)
+fn single_row_logits(
+    engine: &SharedEngine,
+    model: &mole::coordinator::batcher::ServingModel,
+    row: &[f32],
+) -> Vec<f32> {
+    let mut args: Vec<Arg> = vec![
+        Arg::T(model.cac.clone()),
+        Arg::T(Tensor::new(&[model.bias.len()], model.bias.clone()).unwrap()),
+    ];
+    for p in &model.params {
+        args.push(Arg::T(p.clone()));
+    }
+    args.push(Arg::T(Tensor::new(&[1, row.len()], row.to_vec()).unwrap()));
+    let out = engine.exec("infer_aug_small_b1", &args).unwrap();
+    out[0].data().to_vec()
+}
+
+fn client_rows(client_id: u64, n: usize, d_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0xE2E ^ (client_id * 7919));
+    (0..n).map(|_| rng.normal_vec(d_len, 0.5)).collect()
+}
+
+/// N concurrent pipelined TCP clients; every batched response must be
+/// bitwise identical to the same row pushed through the batch-1 artifact
+/// alone. Exercises cross-connection coalescing, out-of-order completion
+/// and the id → logits pairing end to end.
+#[test]
+fn batched_tcp_serving_is_bitwise_identical_to_single() {
+    const CLIENTS: u64 = 6;
+    const PER_CLIENT: usize = 4;
+    let (server, engine) = start_server(8, 20);
+    let addr = server.local_addr();
+
+    let mut threads = Vec::new();
+    for c in 0..CLIENTS {
+        threads.push(std::thread::spawn(move || {
+            let mut client = ServingClient::connect(addr).unwrap();
+            assert_eq!(client.hello.kappa, KAPPA);
+            assert!(!client.hello.fingerprint.is_empty());
+            let rows = client_rows(c, PER_CLIENT, client.d_len());
+            // pipeline everything before reading: the server sees a burst
+            for (i, row) in rows.iter().enumerate() {
+                client.send_request(i as u64, row).unwrap();
+            }
+            let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+            for _ in 0..PER_CLIENT {
+                let (id, logits) = client.recv_response().unwrap();
+                assert!(got.insert(id, logits).is_none(), "duplicate id {id}");
+            }
+            client.finish().unwrap();
+            got
+        }));
+    }
+    let per_client: Vec<HashMap<u64, Vec<f32>>> =
+        threads.into_iter().map(|t| t.join().unwrap()).collect();
+
+    let d_len = engine.manifest().geometry("small").unwrap().d_len();
+    let (reference_model, _) = demo_model(engine.manifest(), KAPPA, SEED).unwrap();
+    for (c, got) in per_client.iter().enumerate() {
+        let rows = client_rows(c as u64, PER_CLIENT, d_len);
+        for (i, row) in rows.iter().enumerate() {
+            let want = single_row_logits(&engine, &reference_model, row);
+            let have = &got[&(i as u64)];
+            let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let have_bits: Vec<u32> = have.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                want_bits, have_bits,
+                "client {c} row {i}: batched logits differ from single-row inference"
+            );
+        }
+    }
+
+    let m = server.metrics();
+    let total = (CLIENTS as usize * PER_CLIENT) as u64;
+    assert_eq!(m.responses.get(), total);
+    assert_eq!(m.connections.get(), CLIENTS);
+    assert_eq!(m.faults.get(), 0);
+    assert!(m.bytes_in.get() > 0 && m.bytes_out.get() > 0);
+    assert!(
+        m.batches.get() < total,
+        "pipelined burst produced no coalescing at all (batches={})",
+        m.batches.get()
+    );
+    server.stop();
+}
+
+/// A malformed frame faults its own session; other sessions and the
+/// server keep working, and a row of the wrong length faults only that
+/// request.
+#[test]
+fn bad_frames_fault_the_session_not_the_server() {
+    let (server, _engine) = start_server(8, 2);
+    let addr = server.local_addr();
+
+    // session 1: garbage after the handshake
+    {
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        match read_message(&mut sock).unwrap() {
+            Message::Hello { .. } => {}
+            other => panic!("expected Hello, got {other:?}"),
+        }
+        use std::io::Write;
+        sock.write_all(b"XXXXXXXXXXXX").unwrap();
+        sock.flush().unwrap();
+        // server answers Fault (then EndOfData) and ends the session
+        match read_message(&mut sock).unwrap() {
+            Message::Fault { msg } => assert!(msg.contains("magic"), "{msg}"),
+            other => panic!("expected Fault, got {other:?}"),
+        }
+    }
+
+    // session 2: wrong row length faults the request, not the session
+    {
+        let mut client = ServingClient::connect(addr).unwrap();
+        let d = client.d_len();
+        client.send_request(1, &[0.0; 3]).unwrap();
+        let err = client.recv_response().unwrap_err();
+        assert!(err.to_string().contains("request 1"), "{err}");
+        assert!(err.to_string().contains("infer row len 3"), "{err}");
+        // same session still serves a correct request
+        client.send_request(2, &vec![0.1; d]).unwrap();
+        let (id, logits) = client.recv_response().unwrap();
+        assert_eq!(id, 2);
+        assert!(!logits.is_empty());
+        client.finish().unwrap();
+    }
+
+    assert!(server.metrics().faults.get() >= 2);
+    server.stop();
+}
+
+/// The loadgen driver against a live server: all requests answered, no
+/// errors, latency recorded per request, clean shutdown counts intact.
+#[test]
+fn loadgen_drives_the_server_cleanly() {
+    let (server, _engine) = start_server(32, 4);
+    let report = run(&LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 4,
+        requests_per_conn: 16,
+        pipeline: 4,
+        seed: 9,
+    })
+    .unwrap();
+    assert_eq!(report.ok, 64);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.latency.count(), 64);
+    assert!(report.throughput_rps() > 0.0);
+    assert!(report.bytes_out > 0);
+    let line = report.report();
+    assert!(line.contains("ok=64") && line.contains("errors=0"), "{line}");
+    assert_eq!(server.metrics().responses.get(), 64);
+    server.stop();
+}
+
+/// `EndOfData` handshake: the server flushes in-flight responses before
+/// confirming, so a client that sends its close immediately after its
+/// last request still gets every response.
+#[test]
+fn end_of_data_flushes_in_flight_responses() {
+    let (server, _engine) = start_server(8, 10);
+    let mut sock = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    let hello = read_message(&mut sock).unwrap();
+    let d = match hello {
+        Message::Hello { geometry, .. } => geometry.d_len(),
+        other => panic!("expected Hello, got {other:?}"),
+    };
+    let mut rng = Rng::new(77);
+    for id in 0..5u64 {
+        let row = Tensor::new(&[d], rng.normal_vec(d, 0.5)).unwrap();
+        write_message(&mut sock, &Message::InferRequest { id, row }).unwrap();
+    }
+    // close immediately — responses are still pending server-side
+    write_message(&mut sock, &Message::EndOfData).unwrap();
+    let mut seen = 0;
+    loop {
+        match read_message(&mut sock).unwrap() {
+            Message::InferResponse { .. } => seen += 1,
+            Message::EndOfData => break,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(seen, 5, "EndOfData must not race ahead of in-flight responses");
+    server.stop();
+}
