@@ -1,19 +1,24 @@
 //! Secure-inference serving demo: train briefly on morphed data, then
-//! serve concurrent inference requests (morphed rows) through the dynamic
-//! batcher, reporting latency percentiles, throughput and batching
-//! efficiency. This is the "inference stage" half of the paper's title.
+//! register the trained model with a serving registry and drive it with
+//! concurrent typed `MoleClient` sessions over loopback TCP, reporting
+//! latency percentiles, throughput and batching efficiency. This is the
+//! "inference stage" half of the paper's title, on the multi-tenant
+//! serving stack.
 //!
 //! Run: `cargo run --release --example secure_inference -- [clients] [requests]`
 
-use mole::augconv::{build_aug_conv, ChannelPerm};
-use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
+use mole::augconv::build_aug_conv;
+use mole::coordinator::batcher::BatcherConfig;
+use mole::coordinator::client::MoleClient;
 use mole::coordinator::experiment::ExperimentConfig;
+use mole::coordinator::registry::{ModelRegistry, RegisteredModel};
+use mole::coordinator::server::{ServeConfig, Server};
 use mole::coordinator::trainer::Trainer;
 use mole::data::synth::generate;
+use mole::keys::KeyBundle;
 use mole::manifest::Manifest;
-use mole::morph::MorphKey;
 use mole::rng::Rng;
-use mole::runtime::Engine;
+use mole::runtime::{Engine, SharedEngine};
 use mole::{d2r, Geometry};
 use std::path::Path;
 use std::time::Duration;
@@ -30,12 +35,12 @@ fn main() -> mole::Result<()> {
     let engine = Engine::new(manifest.clone())?;
     let cfg = ExperimentConfig::quick(120);
     let dataset = generate(&cfg.data);
-    let key = MorphKey::generate(g, cfg.kappa, cfg.seed)?;
-    let perm = ChannelPerm::generate(g.beta, cfg.seed);
+    let keys = KeyBundle::generate(g, cfg.kappa, cfg.seed)?;
+    let key = keys.morph_key()?;
     let mut prng = Rng::new(cfg.seed);
     let base_params =
         mole::coordinator::trainer::init_params(&engine.manifest().base_params, &mut prng);
-    let layer = build_aug_conv(&base_params[0], base_params[1].data(), &key, &perm)?;
+    let layer = build_aug_conv(&base_params[0], base_params[1].data(), &key, &keys.perm)?;
 
     println!("training {} steps on morphed data...", cfg.steps);
     let mut trainer =
@@ -48,33 +53,38 @@ fn main() -> mole::Result<()> {
         trainer.step(&rows, &b.labels, cfg.lr)?;
     }
 
-    // --- stand up the serving worker ---------------------------------------
-    let model = ServingModel {
-        cac: layer.matrix().clone(),
-        bias: layer.bias().to_vec(),
-        params: trainer.params().to_vec(),
-    };
-    let handle = ServingHandle::start(
-        manifest,
-        model,
+    // --- register the trained model and bind the TCP server ---------------
+    let mut registry = ModelRegistry::new(
+        SharedEngine::new(manifest),
         BatcherConfig {
             max_batch: 32,
             timeout: Duration::from_millis(2),
             ..BatcherConfig::default()
         },
+    );
+    registry.register(RegisteredModel::new(
+        "secure_demo",
+        &keys,
+        layer,
+        trainer.params().to_vec(),
+    ))?;
+    let server = Server::bind(
+        registry,
+        ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
     )?;
+    let addr = server.local_addr();
 
-    // --- fire concurrent clients ------------------------------------------
-    println!("serving: {clients} clients x {per_client} requests (morphed rows)...");
+    // --- fire concurrent typed clients over TCP ----------------------------
+    println!("serving: {clients} MoleClient sessions x {per_client} requests -> {addr}");
     let t0 = std::time::Instant::now();
     let mut threads = Vec::new();
     let test = std::sync::Arc::new(dataset.test.clone());
     let key = std::sync::Arc::new(key);
     for c in 0..clients {
-        let h = handle.clone();
         let test = test.clone();
         let key = key.clone();
         threads.push(std::thread::spawn(move || -> mole::Result<usize> {
+            let mut client = MoleClient::connect(addr)?;
             let per = 3 * 16 * 16;
             let mut correct = 0usize;
             for i in 0..per_client {
@@ -84,7 +94,7 @@ fn main() -> mole::Result<()> {
                     test.images.data()[idx * per..][..per].to_vec(),
                 )?;
                 let row = key.morph(&d2r::unroll(img)?)?;
-                let logits = h.infer(row.row(0))?;
+                let logits = client.infer(row.row(0))?;
                 let pred = logits
                     .iter()
                     .enumerate()
@@ -95,6 +105,7 @@ fn main() -> mole::Result<()> {
                     correct += 1;
                 }
             }
+            client.finish()?;
             Ok(correct)
         }));
     }
@@ -106,16 +117,29 @@ fn main() -> mole::Result<()> {
     let total = clients * per_client;
 
     // --- report -------------------------------------------------------------
-    let m = &handle.metrics;
+    let lane = server.registry().resolve("secure_demo", mole::coordinator::EPOCH_LATEST)?;
+    let m = &lane.handle().metrics;
     let (p50, p95, p99) = m.total_latency.summary().unwrap_or((0, 0, 0));
     let (e50, e95, _e99) = m.execute_latency.summary().unwrap_or((0, 0, 0));
-    println!("\nserving report:");
+    let sm = server.metrics();
+    println!("\nserving report ({}@{}):", lane.name(), lane.epoch());
     println!("  requests              {total}");
     println!("  accuracy (on morphed) {:.3}", correct as f64 / total as f64);
     println!("  throughput            {:.1} req/s", total as f64 / wall);
     println!("  latency p50/p95/p99   {p50} / {p95} / {p99} µs");
     println!("  execute  p50/p95      {e50} / {e95} µs");
-    println!("  batches               {} (mean size {:.2}, padding {:.1}%)",
-        m.batches.get(), m.mean_batch_size(), m.padding_fraction() * 100.0);
+    println!(
+        "  batches               {} (mean size {:.2}, padding {:.1}%)",
+        m.batches.get(),
+        m.mean_batch_size(),
+        m.padding_fraction() * 100.0
+    );
+    println!(
+        "  wire                  {} conns, {} B in / {} B out",
+        sm.connections.get(),
+        sm.bytes_in.get(),
+        sm.bytes_out.get()
+    );
+    server.stop();
     Ok(())
 }

@@ -13,8 +13,10 @@
 use mole::bench::{table_header, table_row};
 use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
 use mole::coordinator::loadgen::{run as run_loadgen, LoadgenConfig};
-use mole::coordinator::server::{demo_model, ServeConfig, Server};
+use mole::coordinator::registry::{demo_entry, ModelRegistry};
+use mole::coordinator::server::{ServeConfig, Server};
 use mole::coordinator::trainer::init_params;
+use mole::coordinator::EPOCH_LATEST;
 use mole::manifest::Manifest;
 use mole::rng::Rng;
 use mole::runtime::SharedEngine;
@@ -113,22 +115,23 @@ fn tcp_run(
     conns: usize,
 ) -> (f64, u64, u64, f64) {
     let manifest = Manifest::load(Path::new("artifacts")).unwrap();
-    let (model, fingerprint) = demo_model(&manifest, 16, 7).unwrap();
-    let engine = SharedEngine::new(manifest);
-    let server = Server::bind(
+    let engine = SharedEngine::new(manifest.clone());
+    let mut registry = ModelRegistry::new(
         engine,
-        model,
+        BatcherConfig {
+            max_batch,
+            timeout,
+            min_timeout: Duration::from_micros(100),
+            adaptive,
+        },
+    );
+    registry.register(demo_entry(&manifest, "bench", 16, 7).unwrap()).unwrap();
+    let server = Server::bind(
+        registry,
         ServeConfig {
             addr: "127.0.0.1:0".to_string(),
             session_workers: conns,
-            batcher: BatcherConfig {
-                max_batch,
-                timeout,
-                min_timeout: Duration::from_micros(100),
-                adaptive,
-            },
-            kappa: 16,
-            fingerprint,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -138,17 +141,21 @@ fn tcp_run(
         requests_per_conn: 96,
         pipeline: 8,
         seed: 3,
+        model: String::new(),
+        epoch: EPOCH_LATEST,
     };
     // warmup
     run_loadgen(&LoadgenConfig { requests_per_conn: 8, ..cfg.clone() }).unwrap();
     // snapshot so the reported batch size covers the measured run only
-    let batches0 = server.metrics().batches.get();
-    let items0 = server.metrics().batched_items.get();
+    // (batching stats live on the lane's metrics)
+    let lane = server.registry().resolve("bench", EPOCH_LATEST).unwrap();
+    let batches0 = lane.handle().metrics.batches.get();
+    let items0 = lane.handle().metrics.batched_items.get();
     let report = run_loadgen(&cfg).unwrap();
     assert_eq!(report.errors, 0, "loadgen errors under bench load");
     let (p50, _p95, p99) = report.latency.summary().unwrap_or((0, 0, 0));
-    let batches = server.metrics().batches.get() - batches0;
-    let items = server.metrics().batched_items.get() - items0;
+    let batches = lane.handle().metrics.batches.get() - batches0;
+    let items = lane.handle().metrics.batched_items.get() - items0;
     let mean_batch = if batches == 0 { 0.0 } else { items as f64 / batches as f64 };
     server.stop();
     (report.throughput_rps(), p50, p99, mean_batch)

@@ -92,6 +92,36 @@ impl RawConfig {
             ))),
         }
     }
+
+    /// Names of the sections nested under `prefix` (e.g. with sections
+    /// `[serving.models.alpha]` and `[serving.models.beta]`,
+    /// `section_names_under("serving.models")` yields
+    /// `["alpha", "beta"]`). Sorted (BTreeMap order), so derived
+    /// structures are deterministic.
+    pub fn section_names_under(&self, prefix: &str) -> Vec<String> {
+        let pat = format!("{prefix}.");
+        self.sections
+            .keys()
+            .filter_map(|k| k.strip_prefix(&pat))
+            .filter(|rest| !rest.is_empty())
+            .map(|rest| rest.to_string())
+            .collect()
+    }
+}
+
+/// One `[serving.models.NAME]` entry: a named serving model for the
+/// multi-tenant registry (`mole serve` builds its demo stack from it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Morphing scale factor κ for this model's keys.
+    pub kappa: usize,
+    /// Key-material seed (root epoch).
+    pub seed: u64,
+    /// How many consecutive key epochs to serve (>= 1). `epochs = 2`
+    /// registers the root bundle and one rotation — the mid-rollover
+    /// shape where epoch N and N+1 run side by side.
+    pub epochs: u32,
 }
 
 /// Full launcher configuration with defaults matching the repo layout.
@@ -129,6 +159,10 @@ pub struct MoleConfig {
     pub backend: String,
     /// Worker threads for parallel backends (0 = one per core).
     pub backend_threads: usize,
+    /// Models the serving registry hosts (`[serving.models.NAME]`
+    /// sections; defaults to one `demo_model` entry built from the
+    /// top-level κ/seed when none are configured).
+    pub models: Vec<ModelSpec>,
 }
 
 impl Default for MoleConfig {
@@ -151,6 +185,12 @@ impl Default for MoleConfig {
             test_per_class: 64,
             backend: "auto".to_string(),
             backend_threads: 0,
+            models: vec![ModelSpec {
+                name: "demo_model".to_string(),
+                kappa: 16,
+                seed: 20190506,
+                epochs: 1,
+            }],
         }
     }
 }
@@ -166,11 +206,30 @@ impl MoleConfig {
                 return Err(Error::Config(format!("unknown geometry {other:?}")))
             }
         };
+        let kappa = raw.get_usize("mole", "kappa", d.kappa)?;
+        let seed = raw.get_u64("mole", "seed", d.seed)?;
+        let mut models = Vec::new();
+        for name in raw.section_names_under("serving.models") {
+            let section = format!("serving.models.{name}");
+            let epochs = raw.get_u64(&section, "epochs", 1)? as u32;
+            if epochs == 0 {
+                return Err(Error::Config(format!("[{section}] epochs must be >= 1")));
+            }
+            models.push(ModelSpec {
+                name,
+                kappa: raw.get_usize(&section, "kappa", kappa)?,
+                seed: raw.get_u64(&section, "seed", seed)?,
+                epochs,
+            });
+        }
+        if models.is_empty() {
+            models.push(ModelSpec { name: "demo_model".to_string(), kappa, seed, epochs: 1 });
+        }
         Ok(Self {
             artifacts_dir: raw.get_or("mole", "artifacts_dir", &d.artifacts_dir).to_string(),
             geometry,
-            kappa: raw.get_usize("mole", "kappa", d.kappa)?,
-            seed: raw.get_u64("mole", "seed", d.seed)?,
+            kappa,
+            seed,
             addr: raw.get_or("net", "addr", &d.addr).to_string(),
             max_batch: raw.get_usize("serving", "max_batch", d.max_batch)?,
             batch_timeout_ms: raw.get_u64("serving", "batch_timeout_ms", d.batch_timeout_ms)?,
@@ -188,6 +247,7 @@ impl MoleConfig {
             test_per_class: raw.get_usize("data", "test_per_class", d.test_per_class)?,
             backend: raw.get_or("backend", "kind", &d.backend).to_string(),
             backend_threads: raw.get_usize("backend", "threads", d.backend_threads)?,
+            models,
         })
     }
 
@@ -293,6 +353,47 @@ lr = 0.1
         // unknown kinds surface as config errors on install
         let bad = MoleConfig { backend: "quantum".into(), ..MoleConfig::default() };
         assert!(bad.install_backend().is_err());
+    }
+
+    #[test]
+    fn serving_models_table() {
+        // no table ⇒ one demo_model entry from the top-level kappa/seed
+        let cfg = MoleConfig::from_raw(&RawConfig::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(
+            cfg.models,
+            vec![ModelSpec { name: "demo_model".into(), kappa: 3, seed: 99, epochs: 1 }]
+        );
+
+        let src = r#"
+[mole]
+kappa = 16
+seed = 5
+
+[serving.models.alpha]
+seed = 11
+
+[serving.models.beta]
+kappa = 48
+seed = 22
+epochs = 2
+"#;
+        let raw = RawConfig::parse(src).unwrap();
+        assert_eq!(raw.section_names_under("serving.models"), ["alpha", "beta"]);
+        assert!(raw.section_names_under("nope").is_empty());
+        let cfg = MoleConfig::from_raw(&raw).unwrap();
+        assert_eq!(
+            cfg.models,
+            vec![
+                // missing keys inherit the top-level [mole] values
+                ModelSpec { name: "alpha".into(), kappa: 16, seed: 11, epochs: 1 },
+                ModelSpec { name: "beta".into(), kappa: 48, seed: 22, epochs: 2 },
+            ]
+        );
+
+        // epochs = 0 is rejected
+        let raw =
+            RawConfig::parse("[serving.models.x]\nepochs = 0\n").unwrap();
+        assert!(MoleConfig::from_raw(&raw).is_err());
     }
 
     #[test]

@@ -149,6 +149,19 @@ impl ServingHandle {
         model: ServingModel,
         cfg: BatcherConfig,
     ) -> Result<Self> {
+        Self::start_lane(engine, model, cfg, "serving")
+    }
+
+    /// Spawn the worker as a named lane: identical to
+    /// [`ServingHandle::start_shared`] but the worker thread carries the
+    /// label (the registry names lanes `model@epoch` so thread dumps of a
+    /// multi-tenant server stay readable).
+    pub fn start_lane(
+        engine: SharedEngine,
+        model: ServingModel,
+        cfg: BatcherConfig,
+        label: &str,
+    ) -> Result<Self> {
         let manifest = engine.manifest();
         let g = manifest.geometry("small")?;
         let mut sizes = manifest.infer_batches.clone();
@@ -175,7 +188,7 @@ impl ServingHandle {
             }
         }
         std::thread::Builder::new()
-            .name("mole-serving".into())
+            .name(format!("mole-lane-{label}"))
             .spawn(move || worker_loop(engine, model, cfg, sizes, rx, worker_metrics, d_len))
             .map_err(Error::Io)?;
         Ok(Self { tx, metrics, d_len, num_classes })

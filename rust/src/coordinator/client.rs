@@ -1,0 +1,654 @@
+//! `MoleClient` — the typed client SDK for both halves of the wire
+//! protocol, plus the provider-side session endpoint. Everything that
+//! used to hand-roll `read_message`/`write_message` loops (loadgen, the
+//! provider/developer nodes, examples, e2e tests) talks through these
+//! types; raw [`Message`] construction stays inside `protocol.rs`,
+//! `client.rs` and `server.rs`.
+//!
+//! ## Serving flow (protocol v2: client speaks first)
+//!
+//! ```text
+//! client  Hello { version, model, epoch }          →  server
+//! client  ←  Hello { resolved model/epoch/geometry/κ/fingerprint }
+//! client  InferRequest*  →   …  ← InferResponse* / Fault (per request)
+//! client  EndOfData  →  server flushes  →  ← EndOfData
+//! ```
+//!
+//! [`MoleClient::connect`] performs the handshake; [`MoleClient::infer`]
+//! / [`MoleClient::infer_batch`] hide ids and pipelining;
+//! [`MoleClient::send_request`] / [`MoleClient::recv_response`] expose
+//! explicit pipelining for load drivers.
+//!
+//! ## Training flow (provider speaks first)
+//!
+//! [`MoleClient::connect_provider`] reads the provider's `Hello`,
+//! [`MoleClient::negotiate_aug_conv`] ships the first layer and receives
+//! C^ac, and [`MoleClient::stream_training`] drains the morphed-batch
+//! stream. The accepting side is [`ProviderSession`].
+//!
+//! Version negotiation: decoding a mismatched `Hello` yields
+//! [`Error::Version`]; both endpoints answer it with a best-effort
+//! `Fault` frame so the peer sees a typed rejection instead of a
+//! connection reset.
+
+use super::protocol::{
+    read_message, write_message, Message, EPOCH_LATEST, PROTOCOL_VERSION,
+};
+use super::SessionInfo;
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Byte-counting transport wrapper: `bytes_in`/`bytes_out` reflect real
+/// wire traffic (the §4.3 5.12%-overhead story is about these bytes).
+struct CountingStream<S> {
+    inner: S,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+impl<S> CountingStream<S> {
+    fn new(inner: S) -> Self {
+        Self { inner, bytes_in: 0, bytes_out: 0 }
+    }
+}
+
+impl<S: Read> Read for CountingStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.bytes_in += n as u64;
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for CountingStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.bytes_out += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// What to request in the serving handshake.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Model name ("" = the server's default model).
+    pub model: String,
+    /// Key epoch ([`EPOCH_LATEST`] = the newest the server runs).
+    pub epoch: u32,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self { model: String::new(), epoch: EPOCH_LATEST }
+    }
+}
+
+impl ClientConfig {
+    /// Pin a model by name at its latest epoch.
+    pub fn model(name: &str) -> Self {
+        Self { model: name.to_string(), epoch: EPOCH_LATEST }
+    }
+
+    /// Pin a model at an exact key epoch.
+    pub fn pinned(name: &str, epoch: u32) -> Self {
+        Self { model: name.to_string(), epoch }
+    }
+}
+
+/// What the server's `Hello` resolved the session to.
+#[derive(Debug, Clone)]
+pub struct ServerInfo {
+    pub version: u32,
+    /// Resolved model name (never empty).
+    pub model: String,
+    /// Resolved key epoch (never the sentinel).
+    pub epoch: u32,
+    pub geometry: Geometry,
+    pub kappa: usize,
+    pub fingerprint: String,
+    /// The lane's `max_batch` (how deep pipelining can coalesce).
+    pub max_batch: usize,
+}
+
+/// Which peer the client is attached to.
+enum Peer {
+    /// An inference server ([`super::server::Server`]).
+    Serving(ServerInfo),
+    /// A data provider streaming morphed training data.
+    Provider(SessionInfo),
+}
+
+/// The typed MoLe client. Generic over the transport so tests can run it
+/// over in-memory pipes; `S = TcpStream` in deployments.
+pub struct MoleClient<S: Read + Write = TcpStream> {
+    stream: CountingStream<S>,
+    peer: Peer,
+    next_id: u64,
+}
+
+impl MoleClient<TcpStream> {
+    /// Connect to a serving endpoint and handshake for its default model
+    /// at the latest epoch.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect to a serving endpoint requesting a specific model/epoch.
+    pub fn connect_with<A: ToSocketAddrs>(addr: A, cfg: ClientConfig) -> Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        Self::over(sock, cfg)
+    }
+
+    /// Connect to a data provider for a training session.
+    pub fn connect_provider<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        Self::training_over(sock)
+    }
+}
+
+impl<S: Read + Write> MoleClient<S> {
+    /// Serving handshake over an arbitrary transport: send our `Hello`
+    /// (version + requested model/epoch), read the server's resolution.
+    pub fn over(stream: S, cfg: ClientConfig) -> Result<Self> {
+        let mut stream = CountingStream::new(stream);
+        write_message(
+            &mut stream,
+            &Message::Hello {
+                version: PROTOCOL_VERSION,
+                model: cfg.model,
+                epoch: cfg.epoch,
+                geometry: Geometry::new(0, 0, 0, 0),
+                kappa: 0,
+                fingerprint: String::new(),
+                num_batches: 0,
+                batch_size: 0,
+            },
+        )?;
+        match read_message(&mut stream) {
+            Ok(Message::Hello {
+                version,
+                model,
+                epoch,
+                geometry,
+                kappa,
+                fingerprint,
+                batch_size,
+                ..
+            }) => {
+                if model.is_empty() {
+                    // a serving server always answers with the resolved
+                    // (non-empty) model name; an empty one is a training
+                    // provider's handshake — wrong endpoint, fail now
+                    // instead of on the first infer()
+                    return Err(Error::Protocol(
+                        "peer answered with a training Hello (no model name); \
+                         this address is a provider, not a serving endpoint"
+                            .into(),
+                    ));
+                }
+                Ok(Self {
+                    stream,
+                    peer: Peer::Serving(ServerInfo {
+                        version,
+                        model,
+                        epoch,
+                        geometry,
+                        kappa,
+                        fingerprint,
+                        max_batch: batch_size as usize,
+                    }),
+                    next_id: 0,
+                })
+            }
+            Ok(Message::Fault { msg }) => {
+                Err(Error::Protocol(format!("server rejected session: {msg}")))
+            }
+            Ok(other) => Err(Error::Protocol(format!("expected Hello, got {other:?}"))),
+            Err(e) => Err(Self::reject_version(&mut stream, e)),
+        }
+    }
+
+    /// Training handshake over an arbitrary transport: the provider
+    /// speaks first; its `Hello` carries geometry, κ, fingerprint, key
+    /// epoch and the stream plan.
+    pub fn training_over(stream: S) -> Result<Self> {
+        let mut stream = CountingStream::new(stream);
+        match read_message(&mut stream) {
+            Ok(Message::Hello {
+                epoch,
+                geometry,
+                kappa,
+                fingerprint,
+                num_batches,
+                batch_size,
+                ..
+            }) => Ok(Self {
+                stream,
+                peer: Peer::Provider(SessionInfo {
+                    geometry,
+                    kappa,
+                    fingerprint,
+                    epoch,
+                    num_batches: num_batches as usize,
+                    batch_size: batch_size as usize,
+                }),
+                next_id: 0,
+            }),
+            Ok(Message::Fault { msg }) => {
+                Err(Error::Protocol(format!("provider rejected session: {msg}")))
+            }
+            Ok(other) => Err(Error::Protocol(format!("expected Hello, got {other:?}"))),
+            Err(e) => Err(Self::reject_version(&mut stream, e)),
+        }
+    }
+
+    /// On a version mismatch, tell the peer (best-effort typed `Fault`)
+    /// before surfacing the error locally.
+    fn reject_version(stream: &mut CountingStream<S>, e: Error) -> Error {
+        if matches!(e, Error::Version { .. }) {
+            let _ = write_message(stream, &Message::Fault { msg: e.to_string() });
+        }
+        e
+    }
+
+    /// Serving-session parameters (None on a training connection).
+    pub fn server_info(&self) -> Option<&ServerInfo> {
+        match &self.peer {
+            Peer::Serving(i) => Some(i),
+            Peer::Provider(_) => None,
+        }
+    }
+
+    /// Training-session parameters (None on a serving connection).
+    pub fn session(&self) -> Option<&SessionInfo> {
+        match &self.peer {
+            Peer::Provider(i) => Some(i),
+            Peer::Serving(_) => None,
+        }
+    }
+
+    /// Row length the peer expects (α·m² of the advertised geometry).
+    pub fn d_len(&self) -> usize {
+        match &self.peer {
+            Peer::Serving(i) => i.geometry.d_len(),
+            Peer::Provider(i) => i.geometry.d_len(),
+        }
+    }
+
+    /// Bytes received / sent on this connection so far.
+    pub fn bytes_in(&self) -> u64 {
+        self.stream.bytes_in
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.stream.bytes_out
+    }
+
+    // -- serving ------------------------------------------------------------
+
+    /// Pipeline one request for the session's lane; returns frame bytes.
+    /// Responses arrive via [`MoleClient::recv_response`], possibly out
+    /// of order across ids.
+    pub fn send_request(&mut self, id: u64, row: &[f32]) -> Result<usize> {
+        self.send_request_to(id, "", EPOCH_LATEST, row)
+    }
+
+    /// Pipeline one request routed to an explicit model/epoch (`""` +
+    /// [`EPOCH_LATEST`] = the session lane) — one connection can mix
+    /// traffic for several registered models.
+    pub fn send_request_to(
+        &mut self,
+        id: u64,
+        model: &str,
+        epoch: u32,
+        row: &[f32],
+    ) -> Result<usize> {
+        write_message(
+            &mut self.stream,
+            &Message::InferRequest {
+                id,
+                model: model.to_string(),
+                epoch,
+                row: Tensor::new(&[row.len()], row.to_vec())?,
+            },
+        )
+    }
+
+    /// Next `InferResponse`; `Fault` frames surface as `Err`.
+    pub fn recv_response(&mut self) -> Result<(u64, Vec<f32>)> {
+        match read_message(&mut self.stream)? {
+            Message::InferResponse { id, logits } => Ok((id, logits)),
+            Message::Fault { msg } => Err(Error::Protocol(format!("server fault: {msg}"))),
+            other => Err(Error::Protocol(format!("expected InferResponse, got {other:?}"))),
+        }
+    }
+
+    /// Blocking single-row inference on the session lane.
+    pub fn infer(&mut self, row: &[f32]) -> Result<Vec<f32>> {
+        let want = self.next_id;
+        self.next_id += 1;
+        self.send_request(want, row)?;
+        let (id, logits) = self.recv_response()?;
+        if id != want {
+            return Err(Error::Protocol(format!("response id {id}, expected {want}")));
+        }
+        Ok(logits)
+    }
+
+    /// Pipeline a whole batch of rows and return the logits in input
+    /// order (the server may answer out of order; ids are matched here).
+    /// Deep pipelining is what lets the server's micro-batcher coalesce
+    /// one client's rows into single Aug-Conv GEMMs.
+    pub fn infer_batch(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let base = self.next_id;
+        self.next_id += rows.len() as u64;
+        for (i, row) in rows.iter().enumerate() {
+            self.send_request(base + i as u64, row)?;
+        }
+        let mut by_id: HashMap<u64, Vec<f32>> = HashMap::with_capacity(rows.len());
+        while by_id.len() < rows.len() {
+            let (id, logits) = self.recv_response()?;
+            if id < base || id >= base + rows.len() as u64 || by_id.contains_key(&id) {
+                return Err(Error::Protocol(format!("unexpected/duplicate response id {id}")));
+            }
+            by_id.insert(id, logits);
+        }
+        Ok((0..rows.len() as u64).map(|i| by_id.remove(&(base + i)).unwrap()).collect())
+    }
+
+    /// Graceful serving close: `EndOfData` out, drain stragglers until
+    /// the server's `EndOfData` (or EOF) comes back. Returns how many
+    /// late `InferResponse` frames were drained — the server flushes
+    /// every in-flight response before confirming the close.
+    pub fn finish(mut self) -> Result<usize> {
+        write_message(&mut self.stream, &Message::EndOfData)?;
+        let mut stragglers = 0;
+        loop {
+            match read_message(&mut self.stream) {
+                Ok(Message::EndOfData) => return Ok(stragglers),
+                Ok(Message::InferResponse { .. }) => stragglers += 1,
+                Ok(other) => {
+                    return Err(Error::Protocol(format!("at session end, got {other:?}")))
+                }
+                Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                    return Ok(stragglers)
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    // -- training -----------------------------------------------------------
+
+    /// Ship the pre-trained first layer and receive the provider's
+    /// Aug-Conv layer `(C^ac, bias)`.
+    pub fn negotiate_aug_conv(
+        &mut self,
+        w1: &Tensor,
+        b1: &[f32],
+    ) -> Result<(Tensor, Vec<f32>)> {
+        write_message(
+            &mut self.stream,
+            &Message::Conv1Weights { w1: w1.clone(), b1: b1.to_vec() },
+        )?;
+        match read_message(&mut self.stream)? {
+            Message::AugConv { matrix, bias } => Ok((matrix, bias)),
+            Message::Fault { msg } => Err(Error::Protocol(format!("provider fault: {msg}"))),
+            other => Err(Error::Protocol(format!("expected AugConv, got {other:?}"))),
+        }
+    }
+
+    /// Next morphed training batch, or `None` at `EndOfData`.
+    pub fn next_batch(&mut self) -> Result<Option<(u64, Tensor, Vec<i32>)>> {
+        match read_message(&mut self.stream)? {
+            Message::MorphedBatch { id, rows, labels } => Ok(Some((id, rows, labels))),
+            Message::EndOfData => Ok(None),
+            Message::Fault { msg } => Err(Error::Protocol(format!("provider fault: {msg}"))),
+            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Drain the whole morphed-batch stream into a callback; returns the
+    /// number of batches consumed. (`on_batch` typically feeds a
+    /// [`super::trainer::Trainer`] step.)
+    pub fn stream_training<F>(&mut self, mut on_batch: F) -> Result<usize>
+    where
+        F: FnMut(u64, &Tensor, &[i32]) -> Result<()>,
+    {
+        let mut batches = 0;
+        while let Some((id, rows, labels)) = self.next_batch()? {
+            on_batch(id, &rows, &labels)?;
+            batches += 1;
+        }
+        Ok(batches)
+    }
+}
+
+/// The provider's session endpoint (accept side of the training flow):
+/// sends `Hello`, receives the first layer, ships C^ac, streams morphed
+/// batches. Send methods return frame bytes so the provider's transfer
+/// counters stay exact.
+pub struct ProviderSession<S: Read + Write> {
+    stream: CountingStream<S>,
+}
+
+impl<S: Read + Write> ProviderSession<S> {
+    /// Open the session by sending the handshake `Hello` built from
+    /// `info` (version is ours; `model` is unused in the training flow).
+    pub fn accept(stream: S, info: &SessionInfo) -> Result<Self> {
+        let mut stream = CountingStream::new(stream);
+        write_message(
+            &mut stream,
+            &Message::Hello {
+                version: PROTOCOL_VERSION,
+                model: String::new(),
+                epoch: info.epoch,
+                geometry: info.geometry,
+                kappa: info.kappa,
+                fingerprint: info.fingerprint.clone(),
+                num_batches: info.num_batches as u32,
+                batch_size: info.batch_size as u32,
+            },
+        )?;
+        Ok(Self { stream })
+    }
+
+    /// The developer's pre-trained first layer.
+    pub fn recv_first_layer(&mut self) -> Result<(Tensor, Vec<f32>)> {
+        match read_message(&mut self.stream) {
+            Ok(Message::Conv1Weights { w1, b1 }) => Ok((w1, b1)),
+            Ok(Message::Fault { msg }) => {
+                Err(Error::Protocol(format!("developer fault: {msg}")))
+            }
+            Ok(other) => {
+                let fault = format!("expected Conv1Weights, got {other:?}");
+                let _ = write_message(&mut self.stream, &Message::Fault { msg: fault.clone() });
+                Err(Error::Protocol(fault))
+            }
+            Err(e) => {
+                if matches!(e, Error::Version { .. }) {
+                    let _ = write_message(
+                        &mut self.stream,
+                        &Message::Fault { msg: e.to_string() },
+                    );
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Ship the Aug-Conv layer; returns frame bytes.
+    pub fn send_aug_conv(&mut self, matrix: Tensor, bias: Vec<f32>) -> Result<usize> {
+        write_message(&mut self.stream, &Message::AugConv { matrix, bias })
+    }
+
+    /// Stream one morphed batch; returns frame bytes.
+    pub fn send_batch(&mut self, id: u64, rows: Tensor, labels: Vec<i32>) -> Result<usize> {
+        write_message(&mut self.stream, &Message::MorphedBatch { id, rows, labels })
+    }
+
+    /// Close the stream (`EndOfData`); returns total bytes sent over the
+    /// session.
+    pub fn finish(mut self) -> Result<u64> {
+        write_message(&mut self.stream, &Message::EndOfData)?;
+        Ok(self.stream.bytes_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testkit::net::{legacy_v1_hello_frame, pipe_pair};
+
+    fn info() -> SessionInfo {
+        SessionInfo {
+            geometry: Geometry::SMALL,
+            kappa: 16,
+            fingerprint: "f".repeat(64),
+            epoch: 2,
+            num_batches: 1,
+            batch_size: 8,
+        }
+    }
+
+    /// Training handshake + layer negotiation + batch stream, typed on
+    /// both ends, over an in-memory pipe.
+    #[test]
+    fn training_flow_over_pipe() {
+        let (provider_side, dev_side) = pipe_pair();
+        let provider = std::thread::spawn(move || -> Result<u64> {
+            let mut s = ProviderSession::accept(provider_side, &info())?;
+            let (w1, b1) = s.recv_first_layer()?;
+            assert_eq!(w1.shape(), &[16, 3, 3, 3]);
+            assert_eq!(b1.len(), 16);
+            s.send_aug_conv(Tensor::zeros(&[4, 4]), vec![0.0; 4])?;
+            let mut rng = Rng::new(1);
+            for id in 0..3u64 {
+                s.send_batch(
+                    id,
+                    Tensor::new(&[2, 5], rng.normal_vec(10, 1.0))?,
+                    vec![1, 2],
+                )?;
+            }
+            s.finish()
+        });
+
+        let mut client = MoleClient::training_over(dev_side).unwrap();
+        let session = client.session().unwrap().clone();
+        assert_eq!(session.epoch, 2);
+        assert_eq!(session.kappa, 16);
+        assert!(client.server_info().is_none());
+        let mut rng = Rng::new(2);
+        let w1 = Tensor::new(&[16, 3, 3, 3], rng.normal_vec(16 * 27, 0.1)).unwrap();
+        let (cac, bias) = client.negotiate_aug_conv(&w1, &[0.0; 16]).unwrap();
+        assert_eq!(cac.shape(), &[4, 4]);
+        assert_eq!(bias.len(), 4);
+        let mut ids = Vec::new();
+        let batches = client
+            .stream_training(|id, rows, labels| {
+                assert_eq!(rows.shape(), &[2, 5]);
+                assert_eq!(labels, &[1, 2]);
+                ids.push(id);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(batches, 3);
+        assert_eq!(ids, [0, 1, 2]);
+        let bytes = provider.join().unwrap().unwrap();
+        assert!(bytes > 0);
+        assert!(client.bytes_in() > 0 && client.bytes_out() > 0);
+    }
+
+    /// A v1-shaped provider `Hello` must surface as the typed version
+    /// error on the client, and the client must answer the peer with a
+    /// `Fault` frame rather than just dropping the connection.
+    #[test]
+    fn version_mismatch_rejected_with_fault() {
+        let (mut provider_side, dev_side) = pipe_pair();
+        // a pre-versioning peer's opening frame
+        provider_side.write_all(&legacy_v1_hello_frame()).unwrap();
+
+        let err = MoleClient::training_over(dev_side).unwrap_err();
+        assert!(matches!(err, Error::Version { got: 3, .. }), "{err}");
+        // the rejecting client told the peer why, as a typed Fault
+        match read_message(&mut provider_side).unwrap() {
+            Message::Fault { msg } => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("expected Fault, got {other:?}"),
+        }
+    }
+
+    /// The serving handshake resolves model/epoch through a scripted
+    /// server end (the real server path is covered in tests/serving_e2e).
+    #[test]
+    fn serving_handshake_over_pipe() {
+        let (server_side, client_side) = pipe_pair();
+        let server = std::thread::spawn(move || {
+            let mut s = CountingStream::new(server_side);
+            // expect the client's request Hello
+            match read_message(&mut s).unwrap() {
+                Message::Hello { version, model, epoch, .. } => {
+                    assert_eq!(version, PROTOCOL_VERSION);
+                    assert_eq!(model, "alpha");
+                    assert_eq!(epoch, 3);
+                }
+                other => panic!("expected Hello, got {other:?}"),
+            }
+            write_message(
+                &mut s,
+                &Message::Hello {
+                    version: PROTOCOL_VERSION,
+                    model: "alpha".into(),
+                    epoch: 3,
+                    geometry: Geometry::SMALL,
+                    kappa: 16,
+                    fingerprint: "fp".into(),
+                    num_batches: 0,
+                    batch_size: 32,
+                },
+            )
+            .unwrap();
+            // echo zeros for one pipelined request, out of order ids
+            match read_message(&mut s).unwrap() {
+                Message::InferRequest { id, model, epoch, row } => {
+                    assert_eq!(model, "");
+                    assert_eq!(epoch, EPOCH_LATEST);
+                    write_message(
+                        &mut s,
+                        &Message::InferResponse {
+                            id,
+                            logits: vec![row.data()[0]; 2],
+                        },
+                    )
+                    .unwrap();
+                }
+                other => panic!("expected InferRequest, got {other:?}"),
+            }
+            match read_message(&mut s).unwrap() {
+                Message::EndOfData => {
+                    write_message(&mut s, &Message::EndOfData).unwrap()
+                }
+                other => panic!("expected EndOfData, got {other:?}"),
+            }
+        });
+
+        let mut client =
+            MoleClient::over(client_side, ClientConfig::pinned("alpha", 3)).unwrap();
+        let srv = client.server_info().unwrap().clone();
+        assert_eq!((srv.model.as_str(), srv.epoch, srv.max_batch), ("alpha", 3, 32));
+        assert_eq!(client.d_len(), Geometry::SMALL.d_len());
+        let logits = client.infer(&[7.5, 1.0, 2.0]).unwrap();
+        assert_eq!(logits, vec![7.5, 7.5]);
+        client.finish().unwrap();
+        server.join().unwrap();
+    }
+}

@@ -1,11 +1,13 @@
 //! The developer node (paper Fig. 1, right side).
 //!
-//! Connects to a provider, sends its pre-trained first layer, receives the
-//! Aug-Conv matrix and the morphed training stream, and trains the trunk
-//! through the AOT artifacts — never seeing an original pixel. The same
-//! node exposes the trained model for serving ([`super::batcher`]).
+//! Connects to a provider through the typed [`MoleClient`] training
+//! flow: sends its pre-trained first layer, receives the Aug-Conv matrix
+//! and the morphed training stream, and trains the trunk through the AOT
+//! artifacts — never seeing an original pixel, and never touching a raw
+//! protocol frame. The same node exposes the trained model for serving
+//! (register the outcome with a [`super::registry::ModelRegistry`]).
 
-use super::protocol::{read_message, write_message, Message};
+use super::client::MoleClient;
 use super::trainer::Trainer;
 use super::SessionInfo;
 use crate::rng::Rng;
@@ -62,84 +64,51 @@ impl<'e> DeveloperNode<'e> {
 
     /// Run the client side of a delivery session: handshake, ship layer 1,
     /// receive C^ac, train on the morphed stream.
-    pub fn run_session<S: Read + Write>(&self, stream: &mut S, seed: u64) -> Result<TrainOutcome> {
-        let mut bytes = 0u64;
-
-        // 1. handshake
-        let (geometry, kappa, fingerprint, num_batches, batch_size) =
-            match read_message(stream)? {
-                Message::Hello { geometry, kappa, fingerprint, num_batches, batch_size } => {
-                    (geometry, kappa, fingerprint, num_batches, batch_size)
-                }
-                other => {
-                    return Err(Error::Protocol(format!("expected Hello, got {other:?}")))
-                }
-            };
+    pub fn run_session<S: Read + Write>(&self, stream: S, seed: u64) -> Result<TrainOutcome> {
+        // 1. handshake (version-checked by the SDK)
+        let mut client = MoleClient::training_over(stream)?;
+        let session = client
+            .session()
+            .cloned()
+            .expect("training_over always yields a provider session");
         let m = self.engine.manifest();
-        if batch_size as usize != m.train_batch {
+        if session.batch_size != m.train_batch {
             return Err(Error::Protocol(format!(
-                "provider batch size {batch_size} != artifact batch {}",
-                m.train_batch
+                "provider batch size {} != artifact batch {}",
+                session.batch_size, m.train_batch
             )));
         }
 
-        // 2. ship the pre-trained first layer
-        bytes += write_message(
-            stream,
-            &Message::Conv1Weights { w1: self.w1.clone(), b1: self.b1.clone() },
-        )? as u64;
-
-        // 3. receive the Aug-Conv layer
-        let (cac, bias) = match read_message(stream)? {
-            Message::AugConv { matrix, bias } => (matrix, bias),
-            other => {
-                return Err(Error::Protocol(format!("expected AugConv, got {other:?}")))
-            }
-        };
+        // 2./3. ship the first layer, receive the Aug-Conv layer
+        let (cac, bias) = client.negotiate_aug_conv(&self.w1, &self.b1)?;
 
         // 4. train on the morphed stream
         let mut trainer = Trainer::new_aug(self.engine, cac.clone(), bias.clone(), seed)?;
         let mut losses = Vec::new();
         let mut accs = Vec::new();
-        let mut steps = 0usize;
-        loop {
-            match read_message(stream)? {
-                Message::MorphedBatch { rows, labels, .. } => {
-                    let (l, a) = trainer.step(&rows, &labels, self.lr)?;
-                    losses.push(l);
-                    accs.push(a);
-                    steps += 1;
-                    if steps % 50 == 0 {
-                        crate::logging::info(&format!(
-                            "developer: step {steps} loss={l:.4} acc={a:.3}"
-                        ));
-                    }
-                }
-                Message::EndOfData => break,
-                Message::Fault { msg } => {
-                    return Err(Error::Protocol(format!("provider fault: {msg}")))
-                }
-                other => {
-                    return Err(Error::Protocol(format!("unexpected {other:?}")))
-                }
+        let lr = self.lr;
+        let steps = client.stream_training(|_, rows, labels| {
+            let (l, a) = trainer.step(rows, labels, lr)?;
+            losses.push(l);
+            accs.push(a);
+            if losses.len() % 50 == 0 {
+                crate::logging::info(&format!(
+                    "developer: step {} loss={l:.4} acc={a:.3}",
+                    losses.len()
+                ));
             }
-        }
+            Ok(())
+        })?;
 
         Ok(TrainOutcome {
-            session: SessionInfo {
-                geometry,
-                kappa,
-                fingerprint,
-                num_batches: num_batches as usize,
-                batch_size: batch_size as usize,
-            },
+            session,
             steps,
             losses,
             accs,
             params: trainer.params().to_vec(),
             cac,
             bias,
-            bytes_received: bytes,
+            bytes_received: client.bytes_in(),
         })
     }
 }
@@ -158,16 +127,16 @@ pub fn run_tcp_session(
     let addr = listener.local_addr()?;
     let prov = provider;
     let handle = std::thread::spawn(move || -> Result<()> {
-        let (mut sock, _) = listener.accept()?;
+        let (sock, _) = listener.accept()?;
         sock.set_nodelay(true).ok();
-        prov.run_session(&mut sock, plan, seed ^ 0xDA7A)?;
+        prov.run_session(sock, plan, seed ^ 0xDA7A)?;
         Ok(())
     });
 
     let dev = DeveloperNode::new(engine, seed, lr)?;
-    let mut sock = std::net::TcpStream::connect(addr)?;
+    let sock = std::net::TcpStream::connect(addr)?;
     sock.set_nodelay(true).ok();
-    let outcome = dev.run_session(&mut sock, seed);
+    let outcome = dev.run_session(sock, seed);
     handle
         .join()
         .map_err(|_| Error::Protocol("provider thread panicked".into()))??;
@@ -229,5 +198,8 @@ mod tests {
             &[Geometry::SMALL.d_len(), Geometry::SMALL.f_len()]
         );
         assert_eq!(outcome.session.kappa, 16);
+        assert_eq!(outcome.session.epoch, 0);
+        // bytes_received now reflects real wire input (C^ac dominates)
+        assert!(outcome.bytes_received as usize > outcome.cac.numel() * 4);
     }
 }

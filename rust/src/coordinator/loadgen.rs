@@ -1,9 +1,11 @@
 //! Multi-connection load generator for the serving layer (`mole
-//! loadgen`): N client connections, each pipelining `InferRequest`
-//! frames against a [`super::server::Server`], reporting throughput and
-//! latency percentiles through the [`crate::metrics`] machinery.
+//! loadgen`): N [`MoleClient`] connections, each pipelining requests
+//! against a [`super::server::Server`] (optionally pinned to one
+//! registered model / key epoch), reporting throughput and latency
+//! percentiles through the [`crate::metrics`] machinery.
 
-use super::server::ServingClient;
+use super::client::{ClientConfig, MoleClient};
+use super::protocol::EPOCH_LATEST;
 use crate::metrics::{Counter, Histogram};
 use crate::rng::Rng;
 use crate::{Error, Result};
@@ -27,6 +29,10 @@ pub struct LoadgenConfig {
     /// Seed for the synthetic morphed rows (per-connection streams are
     /// derived from it, so runs are reproducible).
     pub seed: u64,
+    /// Registered model to drive ("" = the server's default).
+    pub model: String,
+    /// Key epoch to pin ([`EPOCH_LATEST`] = the server's newest).
+    pub epoch: u32,
 }
 
 impl Default for LoadgenConfig {
@@ -37,6 +43,8 @@ impl Default for LoadgenConfig {
             requests_per_conn: 64,
             pipeline: 4,
             seed: 1,
+            model: String::new(),
+            epoch: EPOCH_LATEST,
         }
     }
 }
@@ -98,7 +106,10 @@ fn drive_connection(
     bytes_out: &Counter,
     ok: &mut u64,
 ) -> Result<()> {
-    let mut client = ServingClient::connect(&cfg.addr)?;
+    let mut client = MoleClient::connect_with(
+        &cfg.addr,
+        ClientConfig { model: cfg.model.clone(), epoch: cfg.epoch },
+    )?;
     let d_len = client.d_len();
     let total = cfg.requests_per_conn as u64;
     let depth = cfg.pipeline.max(1) as u64;
@@ -123,7 +134,8 @@ fn drive_connection(
         latency.record(sent.elapsed());
         *ok += 1;
     }
-    client.finish()
+    client.finish()?;
+    Ok(())
 }
 
 /// Run the full load shape; one thread per connection.

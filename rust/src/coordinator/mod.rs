@@ -8,41 +8,52 @@
 //! * **Developer** ([`developer`]): receives C^ac + morphed data, trains
 //!   and serves *without ever seeing original data*; all compute runs
 //!   through the AOT artifacts via the PJRT [`crate::runtime`].
-//! * **Serving** ([`batcher`], [`server`]): an adaptive micro-batcher +
-//!   artifact router for inference requests on morphed rows (queue /
-//!   padding / window metrics), fronted by a concurrent TCP server
-//!   (`mole serve`) that fans many client sessions into one shared
-//!   engine; [`loadgen`] (`mole loadgen`) is the matching
-//!   multi-connection driver.
+//! * **Serving** ([`registry`], [`batcher`], [`server`]): a
+//!   [`registry::ModelRegistry`] of named models × key epochs, each with
+//!   its own adaptive micro-batcher lane (queue / padding / window
+//!   metrics), fronted by a concurrent TCP server (`mole serve`) that
+//!   fans many client sessions into one shared engine; [`loadgen`]
+//!   (`mole loadgen`) is the matching multi-connection driver.
+//! * **Client SDK ([`client`])**: the typed [`client::MoleClient`]
+//!   (connect / handshake / `infer` / `infer_batch` / `stream_training`)
+//!   and the provider-side [`client::ProviderSession`] — the only
+//!   consumers of raw protocol frames outside `protocol.rs`/`server.rs`.
 //!
 //! Transport is a length-prefixed binary protocol over TCP
-//! ([`protocol`]); the same message enums also drive the in-process
-//! pipeline used by benches (no sockets, same state machine).
+//! ([`protocol`]) with explicit version negotiation and model/epoch
+//! routing; the same message enums also drive the in-process pipeline
+//! used by benches (no sockets, same state machine).
 
 pub mod batcher;
+pub mod client;
 pub mod developer;
 pub mod experiment;
 pub mod loadgen;
 pub mod protocol;
 pub mod provider;
+pub mod registry;
 pub mod server;
 pub mod trainer;
 
 pub use batcher::{AdaptiveWindow, BatcherConfig, ServingHandle};
+pub use client::{ClientConfig, MoleClient, ProviderSession, ServerInfo};
 pub use developer::{DeveloperNode, TrainOutcome};
 pub use loadgen::{LoadReport, LoadgenConfig};
-pub use protocol::Message;
+pub use protocol::{Message, EPOCH_LATEST, PROTOCOL_VERSION};
 pub use provider::ProviderNode;
-pub use server::{ServeConfig, Server, ServingClient};
+pub use registry::{ModelLane, ModelRegistry, RegisteredModel};
+pub use server::{ServeConfig, Server};
 pub use trainer::{TrainReport, Trainer, Variant};
 
-/// Session parameters negotiated in the handshake.
+/// Session parameters negotiated in the training handshake.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SessionInfo {
     pub geometry: crate::Geometry,
     pub kappa: usize,
     /// Key fingerprint (identifies the key material without revealing it).
     pub fingerprint: String,
+    /// Key epoch of the provider's bundle (rotation generation).
+    pub epoch: u32,
     /// Batches the provider will stream.
     pub num_batches: usize,
     pub batch_size: usize,

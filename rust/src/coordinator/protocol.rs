@@ -5,6 +5,18 @@
 //! carries **only** the HBC-visible surface (§4.1): morphed rows T^r, the
 //! Aug-Conv matrix C^ac, first-layer weights (public direction:
 //! developer → provider), and inference traffic. Keys never appear here.
+//!
+//! ## Versioning and multi-tenant routing (v2)
+//!
+//! `Hello` opens with an explicit `version` field and both `Hello` and
+//! `InferRequest` carry `model` + `epoch` so one server can host many
+//! named models across concurrent key epochs ([`super::registry`]).
+//! Decoding a `Hello` whose version differs from [`PROTOCOL_VERSION`]
+//! yields the typed [`Error::Version`]; sessions answer it with a
+//! `Fault` frame instead of dying on a shape-dependent decode error.
+//! (v1 `Hello` frames started with the geometry's α, which is 3 for
+//! every shipped geometry, so legacy peers deterministically surface as
+//! "peer speaks v3".)
 
 use crate::tensor::Tensor;
 use crate::{Error, Geometry, Result};
@@ -15,11 +27,26 @@ const FRAME_MAGIC: [u8; 2] = *b"ML";
 /// ~805 MB; cap frames at 1 GiB).
 const MAX_PAYLOAD: usize = 1 << 30;
 
+/// Wire protocol version carried in `Hello`. v2 added the version field
+/// itself plus `model`/`epoch` routing on `Hello` and `InferRequest`.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// `epoch` sentinel meaning "the newest epoch the peer serves".
+pub const EPOCH_LATEST: u32 = u32::MAX;
+
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// Session handshake (provider → developer).
+    /// Session handshake. Serving: client → server (requesting `model` /
+    /// `epoch`, geometry fields zeroed), then server → client (resolved
+    /// serving parameters). Training: provider → developer.
     Hello {
+        /// Must equal [`PROTOCOL_VERSION`]; decode rejects anything else.
+        version: u32,
+        /// Model name ("" = the peer's default model).
+        model: String,
+        /// Key epoch ([`EPOCH_LATEST`] = newest).
+        epoch: u32,
         geometry: Geometry,
         kappa: usize,
         fingerprint: String,
@@ -34,8 +61,10 @@ pub enum Message {
     MorphedBatch { id: u64, rows: Tensor, labels: Vec<i32> },
     /// End of training-data stream.
     EndOfData,
-    /// Serving: one morphed row in (client → developer).
-    InferRequest { id: u64, row: Tensor },
+    /// Serving: one morphed row in (client → developer). `model`/`epoch`
+    /// override the session default negotiated in `Hello` ("" +
+    /// [`EPOCH_LATEST`] = keep the session lane).
+    InferRequest { id: u64, model: String, epoch: u32, row: Tensor },
     /// Serving: logits out.
     InferResponse { id: u64, logits: Vec<f32> },
     /// Generic acknowledgement.
@@ -207,7 +236,19 @@ impl<'a> Cursor<'a> {
 pub fn encode(msg: &Message) -> Vec<u8> {
     let mut out = Vec::new();
     match msg {
-        Message::Hello { geometry, kappa, fingerprint, num_batches, batch_size } => {
+        Message::Hello {
+            version,
+            model,
+            epoch,
+            geometry,
+            kappa,
+            fingerprint,
+            num_batches,
+            batch_size,
+        } => {
+            put_u32(&mut out, *version);
+            put_str(&mut out, model);
+            put_u32(&mut out, *epoch);
             put_u32(&mut out, geometry.alpha as u32);
             put_u32(&mut out, geometry.m as u32);
             put_u32(&mut out, geometry.beta as u32);
@@ -231,8 +272,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_i32s(&mut out, labels);
         }
         Message::EndOfData => {}
-        Message::InferRequest { id, row } => {
+        Message::InferRequest { id, model, epoch, row } => {
             put_u64(&mut out, *id);
+            put_str(&mut out, model);
+            put_u32(&mut out, *epoch);
             put_tensor(&mut out, row);
         }
         Message::InferResponse { id, logits } => {
@@ -250,11 +293,22 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
     let mut c = Cursor { b: payload, i: 0 };
     let msg = match tag {
         1 => {
+            let version = c.u32()?;
+            if version != PROTOCOL_VERSION {
+                // The rest of the payload has an unknown layout; surface
+                // the typed mismatch so sessions can reply with a Fault.
+                return Err(Error::Version { got: version, want: PROTOCOL_VERSION });
+            }
+            let model = c.str()?;
+            let epoch = c.u32()?;
             let alpha = c.u32()? as usize;
             let m = c.u32()? as usize;
             let beta = c.u32()? as usize;
             let p = c.u32()? as usize;
             Message::Hello {
+                version,
+                model,
+                epoch,
                 geometry: Geometry::new(alpha, m, beta, p),
                 kappa: c.u32()? as usize,
                 fingerprint: c.str()?,
@@ -266,7 +320,12 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
         3 => Message::AugConv { matrix: c.tensor()?, bias: c.f32s()? },
         4 => Message::MorphedBatch { id: c.u64()?, rows: c.tensor()?, labels: c.i32s()? },
         5 => Message::EndOfData,
-        6 => Message::InferRequest { id: c.u64()?, row: c.tensor()? },
+        6 => Message::InferRequest {
+            id: c.u64()?,
+            model: c.str()?,
+            epoch: c.u32()?,
+            row: c.tensor()?,
+        },
         7 => Message::InferResponse { id: c.u64()?, logits: c.f32s()? },
         8 => Message::Ack { of: c.u64()? },
         9 => Message::Fault { msg: c.str()? },
@@ -334,35 +393,52 @@ mod tests {
 
     #[test]
     fn roundtrip_all_variants() {
-        let mut rng = Rng::new(0);
+        for msg in all_variants() {
+            roundtrip(msg);
+        }
+        // routing fields survive the trip
         roundtrip(Message::Hello {
+            version: PROTOCOL_VERSION,
+            model: "resnet-morph".into(),
+            epoch: 3,
             geometry: Geometry::SMALL,
             kappa: 16,
             fingerprint: "abc123".into(),
             num_batches: 10,
             batch_size: 64,
         });
-        roundtrip(Message::Conv1Weights {
-            w1: Tensor::new(&[2, 3, 3, 3], rng.normal_vec(54, 1.0)).unwrap(),
-            b1: vec![0.5, -0.5],
-        });
-        roundtrip(Message::AugConv {
-            matrix: Tensor::new(&[4, 8], rng.normal_vec(32, 1.0)).unwrap(),
-            bias: vec![1.0; 8],
-        });
-        roundtrip(Message::MorphedBatch {
-            id: 7,
-            rows: Tensor::new(&[2, 5], rng.normal_vec(10, 1.0)).unwrap(),
-            labels: vec![3, 9],
-        });
-        roundtrip(Message::EndOfData);
         roundtrip(Message::InferRequest {
             id: 99,
+            model: "resnet-morph".into(),
+            epoch: EPOCH_LATEST,
             row: Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
         });
-        roundtrip(Message::InferResponse { id: 99, logits: vec![0.1, 0.9] });
-        roundtrip(Message::Ack { of: 42 });
-        roundtrip(Message::Fault { msg: "boom".into() });
+    }
+
+    /// A `Hello` whose leading version field differs from ours must come
+    /// back as the typed [`Error::Version`], not a shape-dependent decode
+    /// error — sessions turn this into a `Fault` for the peer.
+    #[test]
+    fn version_mismatch_is_typed() {
+        // a v1-shaped Hello: no version field, payload starts with the
+        // geometry (α = 3 for every shipped geometry)
+        let frame = crate::testkit::net::legacy_v1_hello_frame();
+        match read_message(&mut frame.as_slice()) {
+            Err(Error::Version { got: 3, want }) => assert_eq!(want, PROTOCOL_VERSION),
+            other => panic!("expected version mismatch, got {other:?}"),
+        }
+        // a made-up future version is rejected the same way
+        let mut future = Vec::new();
+        put_u32(&mut future, PROTOCOL_VERSION + 7);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"ML");
+        frame.push(1);
+        frame.extend_from_slice(&(future.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&future);
+        assert!(matches!(
+            read_message(&mut frame.as_slice()),
+            Err(Error::Version { got, .. }) if got == PROTOCOL_VERSION + 7
+        ));
     }
 
     #[test]
@@ -426,6 +502,9 @@ mod tests {
         let mut rng = Rng::new(0);
         vec![
             Message::Hello {
+                version: PROTOCOL_VERSION,
+                model: "demo_model".into(),
+                epoch: 1,
                 geometry: Geometry::SMALL,
                 kappa: 16,
                 fingerprint: "abc123".into(),
@@ -448,6 +527,8 @@ mod tests {
             Message::EndOfData,
             Message::InferRequest {
                 id: 99,
+                model: String::new(),
+                epoch: EPOCH_LATEST,
                 row: Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
             },
             Message::InferResponse { id: 99, logits: vec![0.1, 0.9] },
@@ -510,6 +591,8 @@ mod tests {
     fn tensor_dim_overflow_rejected() {
         let mut payload = Vec::new();
         put_u64(&mut payload, 1); // request id
+        put_str(&mut payload, ""); // model (session default)
+        put_u32(&mut payload, EPOCH_LATEST); // epoch
         payload.push(8); // ndim = 8
         for _ in 0..8 {
             put_u32(&mut payload, u32::MAX); // 2^256 elements total

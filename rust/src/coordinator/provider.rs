@@ -1,16 +1,21 @@
 //! The data-provider node (paper Fig. 1, left side).
 //!
-//! Owns the sensitive dataset and the key vault. Per session:
-//! 1. send `Hello` (geometry, κ, key fingerprint, stream plan);
-//! 2. receive the developer's pre-trained first layer (`Conv1Weights`);
-//! 3. build **C**^ac = **M**⁻¹·**C** + channel shuffle, send `AugConv`;
-//! 4. stream morphed training batches (`MorphedBatch`), then `EndOfData`.
+//! Owns the sensitive dataset and the key vault. Per session (all
+//! framing via the typed [`ProviderSession`] endpoint):
+//! 1. send `Hello` (protocol version, geometry, κ, key fingerprint +
+//!    epoch, stream plan);
+//! 2. receive the developer's pre-trained first layer;
+//! 3. build **C**^ac = **M**⁻¹·**C** + channel shuffle, ship it;
+//! 4. stream morphed training batches, then `EndOfData`.
 //!
 //! The provider's compute is exactly what the paper allows a "regular
 //! desktop PC": the block-diagonal morph (eq. 16) plus the one-off C^ac
 //! construction. Original pixels and key material never leave this node.
+//! Key rotation ([`KeyBundle::rotate`]) happens here too: a provider
+//! re-keys, re-morphs, and runs new sessions at the next epoch while old
+//! serving lanes drain.
 
-use super::protocol::{read_message, write_message, Message};
+use super::client::ProviderSession;
 use super::SessionInfo;
 use crate::augconv::{build_aug_conv, AugConvLayer};
 use crate::data::Dataset;
@@ -19,7 +24,7 @@ use crate::metrics::Counter;
 use crate::morph::MorphKey;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
-use crate::{d2r, Error, Result};
+use crate::{d2r, Result};
 use std::io::{Read, Write};
 
 /// Streaming plan for one session.
@@ -55,9 +60,26 @@ impl ProviderNode {
             geometry: self.keys.geometry,
             kappa: self.keys.kappa,
             fingerprint: self.keys.fingerprint(),
+            epoch: self.keys.epoch,
             num_batches: plan.num_batches,
             batch_size: plan.batch_size,
         }
+    }
+
+    /// The key bundle's current epoch.
+    pub fn epoch(&self) -> u32 {
+        self.keys.epoch
+    }
+
+    /// Rotate this node's key material to the next epoch (fresh morph
+    /// seed + channel permutation, lineage recorded). Subsequent
+    /// sessions morph under the new key; the caller re-registers serving
+    /// entries for the new epoch.
+    pub fn rotate_keys(&mut self, new_seed: u64) -> Result<()> {
+        let rotated = self.keys.rotate(new_seed)?;
+        self.morph_key = rotated.morph_key()?;
+        self.keys = rotated;
+        Ok(())
     }
 
     /// Morph a raw image batch into d2r rows (the provider hot path).
@@ -85,32 +107,15 @@ impl ProviderNode {
     /// Run one full delivery session over a bidirectional stream.
     pub fn run_session<S: Read + Write>(
         &self,
-        stream: &mut S,
+        stream: S,
         plan: StreamPlan,
         data_rng_seed: u64,
     ) -> Result<()> {
         // 1. handshake
-        let info = self.session_info(plan);
-        self.send(
-            stream,
-            &Message::Hello {
-                geometry: info.geometry,
-                kappa: info.kappa,
-                fingerprint: info.fingerprint.clone(),
-                num_batches: plan.num_batches as u32,
-                batch_size: plan.batch_size as u32,
-            },
-        )?;
+        let mut session = ProviderSession::accept(stream, &self.session_info(plan))?;
 
         // 2. developer's first layer
-        let (w1, b1) = match read_message(stream)? {
-            Message::Conv1Weights { w1, b1 } => (w1, b1),
-            other => {
-                return Err(Error::Protocol(format!(
-                    "expected Conv1Weights, got {other:?}"
-                )))
-            }
-        };
+        let (w1, b1) = session.recv_first_layer()?;
 
         // 3. build + ship the Aug-Conv layer
         let t0 = std::time::Instant::now();
@@ -121,13 +126,7 @@ impl ProviderNode {
             layer.matrix().shape()[1],
             t0.elapsed().as_secs_f64() * 1e3
         ));
-        self.send(
-            stream,
-            &Message::AugConv {
-                matrix: layer.matrix().clone(),
-                bias: layer.bias().to_vec(),
-            },
-        )?;
+        session.send_aug_conv(layer.matrix().clone(), layer.bias().to_vec())?;
 
         // 4. stream morphed batches
         let mut rng = Rng::new(data_rng_seed);
@@ -135,10 +134,12 @@ impl ProviderNode {
         for id in 0..plan.num_batches as u64 {
             let batch = iter.next_batch(&mut rng);
             let rows = self.morph_images(batch.images)?;
-            self.send(stream, &Message::MorphedBatch { id, rows, labels: batch.labels })?;
+            session.send_batch(id, rows, batch.labels)?;
             self.batches_sent.inc();
         }
-        self.send(stream, &Message::EndOfData)?;
+        // the typed session counted every frame, handshake included
+        let total = session.finish()?;
+        self.bytes_sent.add(total);
         crate::logging::info(&format!(
             "provider: session done, {} batches / {} bytes",
             self.batches_sent.get(),
@@ -146,17 +147,12 @@ impl ProviderNode {
         ));
         Ok(())
     }
-
-    fn send<S: Write>(&self, stream: &mut S, msg: &Message) -> Result<()> {
-        let n = write_message(stream, msg)?;
-        self.bytes_sent.add(n as u64);
-        Ok(())
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::MoleClient;
     use crate::data::synth::{generate, SynthSpec};
     use crate::Geometry;
 
@@ -190,59 +186,44 @@ mod tests {
     }
 
     #[test]
-    fn session_info_carries_fingerprint() {
+    fn session_info_carries_fingerprint_and_epoch() {
         let p = tiny_provider();
         let info = p.session_info(StreamPlan { num_batches: 3, batch_size: 8 });
         assert_eq!(info.kappa, 16);
         assert_eq!(info.fingerprint.len(), 64);
+        assert_eq!(info.epoch, 0);
     }
 
-    /// Full in-memory session against a scripted developer side.
+    #[test]
+    fn rotation_re_keys_the_node() {
+        let mut p = tiny_provider();
+        let fp0 = p.session_info(StreamPlan { num_batches: 1, batch_size: 8 }).fingerprint;
+        let imgs = Tensor::new(
+            &[1, 3, 16, 16],
+            p.dataset().train.images.data()[..768].to_vec(),
+        )
+        .unwrap();
+        let before = p.morph_images(imgs.clone()).unwrap();
+        p.rotate_keys(78).unwrap();
+        assert_eq!(p.epoch(), 1);
+        let info = p.session_info(StreamPlan { num_batches: 1, batch_size: 8 });
+        assert_eq!(info.epoch, 1);
+        assert_ne!(info.fingerprint, fp0);
+        // the live morph key switched with the bundle
+        let after = p.morph_images(imgs).unwrap();
+        assert!(before.rms_diff(&after).unwrap() > 0.1);
+    }
+
+    /// Full in-memory session: the provider node on one end of a duplex
+    /// pipe, the typed `MoleClient` training flow on the other.
     #[test]
     fn session_over_pipe() {
-        use std::collections::VecDeque;
-
-        // duplex pipe built from two byte queues
-        struct Pipe {
-            rx: std::sync::mpsc::Receiver<Vec<u8>>,
-            tx: std::sync::mpsc::Sender<Vec<u8>>,
-            buf: VecDeque<u8>,
-        }
-        impl Read for Pipe {
-            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
-                while self.buf.len() < out.len() {
-                    match self.rx.recv() {
-                        Ok(chunk) => self.buf.extend(chunk),
-                        Err(_) => break,
-                    }
-                }
-                let n = out.len().min(self.buf.len());
-                for b in out.iter_mut().take(n) {
-                    *b = self.buf.pop_front().unwrap();
-                }
-                Ok(n)
-            }
-        }
-        impl Write for Pipe {
-            fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
-                self.tx.send(data.to_vec()).ok();
-                Ok(data.len())
-            }
-            fn flush(&mut self) -> std::io::Result<()> {
-                Ok(())
-            }
-        }
-
-        let (a2b_tx, a2b_rx) = std::sync::mpsc::channel();
-        let (b2a_tx, b2a_rx) = std::sync::mpsc::channel();
-        let mut provider_side =
-            Pipe { rx: b2a_rx, tx: a2b_tx, buf: VecDeque::new() };
-        let mut dev_side = Pipe { rx: a2b_rx, tx: b2a_tx, buf: VecDeque::new() };
+        let (provider_side, dev_side) = crate::testkit::net::pipe_pair();
 
         let handle = std::thread::spawn(move || {
             let p = tiny_provider();
             p.run_session(
-                &mut provider_side,
+                provider_side,
                 StreamPlan { num_batches: 2, batch_size: 8 },
                 1,
             )
@@ -250,41 +231,28 @@ mod tests {
             (p.batches_sent.get(), p.bytes_sent.get())
         });
 
-        // scripted developer
+        // typed developer end
         let g = Geometry::SMALL;
-        let hello = read_message(&mut dev_side).unwrap();
-        assert!(matches!(hello, Message::Hello { kappa: 16, .. }));
+        let mut client = MoleClient::training_over(dev_side).unwrap();
+        let session = client.session().unwrap().clone();
+        assert_eq!(session.kappa, 16);
+        assert_eq!(session.epoch, 0);
         let mut rng = Rng::new(9);
         let w1 = Tensor::new(
             &[g.beta, g.alpha, 3, 3],
             rng.normal_vec(g.beta * g.alpha * 9, 0.3),
         )
         .unwrap();
-        write_message(
-            &mut dev_side,
-            &Message::Conv1Weights { w1, b1: vec![0.0; g.beta] },
-        )
-        .unwrap();
-        let aug = read_message(&mut dev_side).unwrap();
-        match aug {
-            Message::AugConv { matrix, bias } => {
-                assert_eq!(matrix.shape(), &[g.d_len(), g.f_len()]);
-                assert_eq!(bias.len(), g.beta);
-            }
-            other => panic!("expected AugConv, got {other:?}"),
-        }
-        let mut batches = 0;
-        loop {
-            match read_message(&mut dev_side).unwrap() {
-                Message::MorphedBatch { rows, labels, .. } => {
-                    assert_eq!(rows.shape(), &[8, g.d_len()]);
-                    assert_eq!(labels.len(), 8);
-                    batches += 1;
-                }
-                Message::EndOfData => break,
-                other => panic!("unexpected {other:?}"),
-            }
-        }
+        let (cac, bias) = client.negotiate_aug_conv(&w1, &vec![0.0; g.beta]).unwrap();
+        assert_eq!(cac.shape(), &[g.d_len(), g.f_len()]);
+        assert_eq!(bias.len(), g.beta);
+        let batches = client
+            .stream_training(|_, rows, labels| {
+                assert_eq!(rows.shape(), &[8, g.d_len()]);
+                assert_eq!(labels.len(), 8);
+                Ok(())
+            })
+            .unwrap();
         assert_eq!(batches, 2);
         let (sent, bytes) = handle.join().unwrap();
         assert_eq!(sent, 2);

@@ -1,0 +1,383 @@
+//! Multi-tenant model registry: the serving side of "many users, many
+//! scenarios" (ROADMAP north star).
+//!
+//! A [`ModelRegistry`] maps `(model name, key epoch)` to a **lane**: one
+//! [`AugConvLayer`] + trunk, its geometry and κ, the key fingerprint the
+//! server advertises, and a dedicated adaptive micro-batcher
+//! ([`ServingHandle`]) over the process-wide [`SharedEngine`]. Lanes
+//! batch independently — requests for `alpha@0` never pad batches of
+//! `beta@1` — while all GEMMs still execute on the one shared engine.
+//!
+//! Epochs make key rotation a serving-layer concept: a provider that
+//! re-morphs under [`crate::keys::KeyBundle::rotate`] registers the new
+//! epoch next to the old one, traffic drains across at its own pace
+//! (clients pin an epoch in `Hello` or per `InferRequest`), and the old
+//! lane is dropped when rollover completes. Resolution rules:
+//!
+//! * model `""` → the registry's default model (first registered);
+//! * epoch [`EPOCH_LATEST`] → the newest registered epoch of that model;
+//! * anything else must match exactly, or resolution fails (servers turn
+//!   that into a per-session or per-request `Fault`).
+
+use super::batcher::{BatcherConfig, ServingHandle, ServingModel};
+use super::protocol::EPOCH_LATEST;
+use crate::augconv::AugConvLayer;
+use crate::keys::KeyBundle;
+use crate::manifest::Manifest;
+use crate::rng::Rng;
+use crate::runtime::SharedEngine;
+use crate::tensor::Tensor;
+use crate::{Error, Geometry, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A serving entry before registration: everything a lane needs, minus
+/// the running batcher.
+pub struct RegisteredModel {
+    /// Registry name (must be non-empty; `Hello.model` routes on it).
+    pub name: String,
+    /// Key epoch this entry serves (the [`crate::keys::KeyBundle`]
+    /// rotation generation).
+    pub epoch: u32,
+    /// The Aug-Conv layer (C^ac + bias) built for this key epoch.
+    pub layer: AugConvLayer,
+    /// Trained trunk parameters (aug layout: conv2..fc2).
+    pub params: Vec<Tensor>,
+    /// κ the key material was generated with (advertised in `Hello`).
+    pub kappa: usize,
+    /// Key fingerprint (identifies the epoch's material without
+    /// revealing it).
+    pub fingerprint: String,
+}
+
+impl RegisteredModel {
+    /// Bundle a trained model under a name + key bundle (the common case:
+    /// the developer's [`super::TrainOutcome`] plus the provider's vault
+    /// metadata).
+    pub fn new(
+        name: &str,
+        keys: &KeyBundle,
+        layer: AugConvLayer,
+        params: Vec<Tensor>,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            epoch: keys.epoch,
+            layer,
+            params,
+            kappa: keys.kappa,
+            fingerprint: keys.fingerprint(),
+        }
+    }
+}
+
+/// One running serving lane: a registered model with its own batcher
+/// worker over the shared engine.
+pub struct ModelLane {
+    name: String,
+    epoch: u32,
+    geometry: Geometry,
+    kappa: usize,
+    fingerprint: String,
+    handle: ServingHandle,
+}
+
+impl ModelLane {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// The lane's batcher handle (blocking `infer`, async `submit_with`,
+    /// per-lane metrics).
+    pub fn handle(&self) -> &ServingHandle {
+        &self.handle
+    }
+
+    /// Row length this lane serves (α·m² of its geometry).
+    pub fn d_len(&self) -> usize {
+        self.handle.d_len()
+    }
+}
+
+/// The registry: named models × key epochs → running lanes.
+pub struct ModelRegistry {
+    engine: SharedEngine,
+    batcher: BatcherConfig,
+    lanes: BTreeMap<String, BTreeMap<u32, Arc<ModelLane>>>,
+    /// First-registered model name; `Hello { model: "" }` resolves here.
+    default_model: Option<String>,
+}
+
+impl ModelRegistry {
+    /// An empty registry over a shared engine; every registered lane gets
+    /// its own batcher with this policy.
+    pub fn new(engine: SharedEngine, batcher: BatcherConfig) -> Self {
+        Self { engine, batcher, lanes: BTreeMap::new(), default_model: None }
+    }
+
+    pub fn engine(&self) -> &SharedEngine {
+        &self.engine
+    }
+
+    /// The batcher policy every lane runs with (servers advertise its
+    /// `max_batch` in `Hello`).
+    pub fn batcher(&self) -> &BatcherConfig {
+        &self.batcher
+    }
+
+    /// Register an entry and start its lane. Fails on an empty name, a
+    /// duplicate `(name, epoch)`, or a geometry the engine's artifacts
+    /// cannot serve.
+    pub fn register(&mut self, entry: RegisteredModel) -> Result<()> {
+        if entry.name.is_empty() {
+            return Err(Error::Config("model name must be non-empty".into()));
+        }
+        if entry.epoch == EPOCH_LATEST {
+            return Err(Error::Config(format!(
+                "epoch {EPOCH_LATEST} is reserved as the latest-epoch sentinel"
+            )));
+        }
+        if let Some(epochs) = self.lanes.get(&entry.name) {
+            if epochs.contains_key(&entry.epoch) {
+                return Err(Error::Config(format!(
+                    "model {:?} epoch {} is already registered",
+                    entry.name, entry.epoch
+                )));
+            }
+        }
+        let served = self.engine.manifest().geometry("small")?;
+        let geometry = *entry.layer.geometry();
+        if geometry != served {
+            return Err(Error::Config(format!(
+                "model {:?} geometry {geometry:?} != served geometry {served:?}",
+                entry.name
+            )));
+        }
+        let label = format!("{}@{}", entry.name, entry.epoch);
+        let handle = ServingHandle::start_lane(
+            self.engine.clone(),
+            ServingModel {
+                cac: entry.layer.matrix().clone(),
+                bias: entry.layer.bias().to_vec(),
+                params: entry.params,
+            },
+            self.batcher.clone(),
+            &label,
+        )?;
+        let lane = Arc::new(ModelLane {
+            name: entry.name.clone(),
+            epoch: entry.epoch,
+            geometry,
+            kappa: entry.kappa,
+            fingerprint: entry.fingerprint,
+            handle,
+        });
+        self.default_model.get_or_insert_with(|| entry.name.clone());
+        self.lanes.entry(entry.name).or_default().insert(entry.epoch, lane);
+        Ok(())
+    }
+
+    /// Resolve a `(model, epoch)` pair from the wire to a lane (see the
+    /// module docs for the `""` / [`EPOCH_LATEST`] rules).
+    pub fn resolve(&self, model: &str, epoch: u32) -> Result<Arc<ModelLane>> {
+        let name = if model.is_empty() {
+            self.default_model
+                .as_deref()
+                .ok_or_else(|| Error::Protocol("registry serves no models".into()))?
+        } else {
+            model
+        };
+        let epochs = self
+            .lanes
+            .get(name)
+            .ok_or_else(|| Error::Protocol(format!("unknown model {name:?}")))?;
+        let lane = if epoch == EPOCH_LATEST {
+            epochs.iter().next_back().map(|(_, l)| l)
+        } else {
+            epochs.get(&epoch)
+        };
+        lane.cloned().ok_or_else(|| {
+            Error::Protocol(format!(
+                "model {name:?} has no epoch {epoch} (serving: {:?})",
+                epochs.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Every running lane, ordered by `(name, epoch)`.
+    pub fn lanes(&self) -> impl Iterator<Item = &Arc<ModelLane>> {
+        self.lanes.values().flat_map(|epochs| epochs.values())
+    }
+
+    /// Number of running lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.values().map(|e| e.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// `name@epoch` labels of every lane (for startup banners and CI
+    /// smoke assertions).
+    pub fn labels(&self) -> Vec<String> {
+        self.lanes().map(|l| format!("{}@{}", l.name(), l.epoch())).collect()
+    }
+
+    /// Total successfully served responses across all lanes (in-process
+    /// `infer` and TCP traffic alike).
+    pub fn responses_total(&self) -> u64 {
+        self.lanes().map(|l| l.handle().metrics.responses.get()).sum()
+    }
+}
+
+/// Build the deterministic demo entry for a key bundle: a He-initialized
+/// first layer pushed through the provider's C^ac construction and a
+/// He-initialized trunk. Same `(keys, trunk_seed)` ⇒ bitwise-identical
+/// entry on every call, so tests and benches can reconstruct a server's
+/// model exactly. `trunk_seed` is deliberately independent of the key
+/// epoch: rotating keys re-morphs the first layer but keeps the trunk,
+/// exactly like a real rollover.
+pub fn demo_entry_from_keys(
+    manifest: &Manifest,
+    name: &str,
+    keys: &KeyBundle,
+    trunk_seed: u64,
+) -> Result<RegisteredModel> {
+    let g = keys.geometry;
+    let morph_key = keys.morph_key()?;
+    let mut rng = Rng::new(trunk_seed ^ 0x5E57E);
+    let std = (2.0 / (g.alpha * g.p * g.p) as f64).sqrt() as f32;
+    let w1 = Tensor::new(
+        &[g.beta, g.alpha, g.p, g.p],
+        rng.normal_vec(g.beta * g.alpha * g.p * g.p, std),
+    )?;
+    let b1 = vec![0.0f32; g.beta];
+    let layer = crate::augconv::build_aug_conv(&w1, &b1, &morph_key, &keys.perm)?;
+    let params = crate::coordinator::trainer::init_params(&manifest.aug_params, &mut rng);
+    Ok(RegisteredModel::new(name, keys, layer, params))
+}
+
+/// The `demo_model` serving entry (root epoch): fresh keys from
+/// `(kappa, seed)` + [`demo_entry_from_keys`]. This is what `mole serve`
+/// registers for each `[serving.models.*]` config entry.
+pub fn demo_entry(
+    manifest: &Manifest,
+    name: &str,
+    kappa: usize,
+    seed: u64,
+) -> Result<RegisteredModel> {
+    let g = manifest.geometry("small")?;
+    let keys = KeyBundle::generate(g, kappa, seed)?;
+    demo_entry_from_keys(manifest, name, &keys, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn manifest() -> Manifest {
+        Manifest::load(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap()
+    }
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::new(
+            SharedEngine::new(manifest()),
+            BatcherConfig {
+                max_batch: 8,
+                timeout: Duration::from_millis(1),
+                ..BatcherConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn register_and_resolve_names_and_epochs() {
+        let m = manifest();
+        let mut reg = registry();
+        let root = KeyBundle::generate(Geometry::SMALL, 16, 100).unwrap();
+        let next = root.rotate(200).unwrap();
+        reg.register(demo_entry_from_keys(&m, "alpha", &root, 100).unwrap()).unwrap();
+        reg.register(demo_entry_from_keys(&m, "alpha", &next, 100).unwrap()).unwrap();
+        reg.register(demo_entry(&m, "beta", 16, 300).unwrap()).unwrap();
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.labels(), ["alpha@0", "alpha@1", "beta@0"]);
+
+        // default model = first registered; latest epoch wins
+        let lane = reg.resolve("", EPOCH_LATEST).unwrap();
+        assert_eq!((lane.name(), lane.epoch()), ("alpha", 1));
+        assert_eq!(lane.fingerprint(), next.fingerprint());
+        // exact pins
+        let lane = reg.resolve("alpha", 0).unwrap();
+        assert_eq!(lane.fingerprint(), root.fingerprint());
+        let lane = reg.resolve("beta", EPOCH_LATEST).unwrap();
+        assert_eq!((lane.name(), lane.epoch()), ("beta", 0));
+        assert_eq!(lane.kappa(), 16);
+        assert_eq!(lane.geometry(), Geometry::SMALL);
+
+        // misses are typed protocol errors (servers answer with Fault)
+        assert!(reg.resolve("gamma", EPOCH_LATEST).is_err());
+        assert!(reg.resolve("alpha", 7).is_err());
+    }
+
+    #[test]
+    fn duplicate_and_invalid_registrations_rejected() {
+        let m = manifest();
+        let mut reg = registry();
+        reg.register(demo_entry(&m, "alpha", 16, 1).unwrap()).unwrap();
+        // duplicate (name, epoch)
+        assert!(reg.register(demo_entry(&m, "alpha", 16, 2).unwrap()).is_err());
+        // empty name
+        let mut bad = demo_entry(&m, "x", 16, 3).unwrap();
+        bad.name = String::new();
+        assert!(reg.register(bad).is_err());
+        // reserved sentinel epoch
+        let mut bad = demo_entry(&m, "y", 16, 4).unwrap();
+        bad.epoch = EPOCH_LATEST;
+        assert!(reg.register(bad).is_err());
+        // empty registry resolves nothing
+        let empty = registry();
+        assert!(empty.is_empty());
+        assert!(empty.resolve("", EPOCH_LATEST).is_err());
+    }
+
+    #[test]
+    fn lanes_batch_independently_over_one_engine() {
+        let m = manifest();
+        let mut reg = registry();
+        reg.register(demo_entry(&m, "alpha", 16, 10).unwrap()).unwrap();
+        reg.register(demo_entry(&m, "beta", 16, 20).unwrap()).unwrap();
+        let a = reg.resolve("alpha", EPOCH_LATEST).unwrap();
+        let b = reg.resolve("beta", EPOCH_LATEST).unwrap();
+        let mut rng = Rng::new(5);
+        let row = rng.normal_vec(a.d_len(), 0.5);
+        let la = a.handle().infer(&row).unwrap();
+        let lb = b.handle().infer(&row).unwrap();
+        // different keys ⇒ different C^ac ⇒ different logits on one row
+        assert_ne!(la, lb, "two independently keyed models agreed bitwise");
+        // per-lane metrics: each lane saw exactly its own request
+        assert_eq!(a.handle().metrics.responses.get(), 1);
+        assert_eq!(b.handle().metrics.responses.get(), 1);
+        assert_eq!(reg.responses_total(), 2);
+        // same lane, same row ⇒ deterministic
+        assert_eq!(la, a.handle().infer(&row).unwrap());
+    }
+}

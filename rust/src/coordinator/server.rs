@@ -1,36 +1,38 @@
-//! The concurrent TCP serving layer (`mole serve`).
+//! The concurrent multi-tenant TCP serving layer (`mole serve`).
 //!
-//! A [`Server`] binds a `std::net::TcpListener` and accepts many
-//! concurrent client sessions on a fixed thread pool. Each session runs
-//! the serving half of the wire protocol ([`super::protocol`]):
+//! A [`Server`] binds a `std::net::TcpListener`, accepts many concurrent
+//! client sessions on a fixed thread pool, and routes every request to a
+//! lane of its [`ModelRegistry`]. Each session runs the serving half of
+//! the wire protocol ([`super::protocol`], v2 — client speaks first):
 //!
-//! 1. the server opens with `Hello` (geometry, κ, key fingerprint, and
-//!    the batcher's `max_batch` in the `batch_size` slot) so clients can
-//!    size their morphed rows and verify they hold matching keys;
-//! 2. the client streams `InferRequest { id, row }` frames — any number,
-//!    pipelined as deep as it likes;
-//! 3. the server routes every row into the shared adaptive micro-batcher
-//!    ([`super::batcher`]), which coalesces rows from *all* sessions into
-//!    single Aug-Conv GEMMs, and fans `InferResponse { id, logits }`
-//!    frames back on the originating connection — possibly out of order
-//!    across ids (clients match on `id`);
+//! 1. the client opens with `Hello` (protocol version + requested
+//!    model/epoch); the server resolves it against the registry and
+//!    answers with its own `Hello` (resolved model, epoch, geometry, κ,
+//!    key fingerprint, and the lane's `max_batch` in the `batch_size`
+//!    slot) — or a typed `Fault` for version mismatches and unknown
+//!    models;
+//! 2. the client streams `InferRequest { id, model, epoch, row }` frames
+//!    — any number, pipelined as deep as it likes; empty `model` +
+//!    latest-epoch sentinel route to the session lane, anything else is
+//!    resolved per request, so one connection can mix models;
+//! 3. each lane's adaptive micro-batcher ([`super::batcher`]) coalesces
+//!    rows from *all* sessions into single Aug-Conv GEMMs and fans
+//!    `InferResponse { id, logits }` frames back on the originating
+//!    connection — possibly out of order across ids (clients match on
+//!    `id`);
 //! 4. the client closes with `EndOfData`; the server flushes every
 //!    in-flight response, answers `EndOfData`, and ends the session.
 //!
-//! Per-request failures (bad row length, engine faults) come back as
-//! `Fault` frames; framing violations fault the session but never the
-//! server. All sessions execute against one `Send + Sync`
-//! [`SharedEngine`] — no per-connection engine or model state.
+//! Per-request failures (bad row length, unknown model/epoch, engine
+//! faults) come back as `Fault` frames; framing violations fault the
+//! session but never the server. All lanes execute against one
+//! `Send + Sync` [`SharedEngine`](crate::runtime::SharedEngine) — no
+//! per-connection engine or model state.
 
-use super::batcher::{BatcherConfig, ServingHandle, ServingModel};
-use super::protocol::{read_message, write_message, Message};
-use crate::coordinator::trainer::init_params;
-use crate::manifest::Manifest;
+use super::protocol::{read_message, write_message, Message, EPOCH_LATEST, PROTOCOL_VERSION};
+use super::registry::{ModelLane, ModelRegistry};
 use crate::metrics::ServingMetrics;
-use crate::rng::Rng;
-use crate::runtime::SharedEngine;
-use crate::tensor::Tensor;
-use crate::{Error, Geometry, Result};
+use crate::{Error, Result};
 use std::io::Read;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -46,12 +48,15 @@ pub struct ServeConfig {
     /// Session worker threads == max concurrently served connections
     /// (excess connections queue in the accept channel).
     pub session_workers: usize,
-    /// Micro-batcher policy shared by all sessions.
-    pub batcher: BatcherConfig,
-    /// Advertised in `Hello` so clients can check key compatibility.
-    pub kappa: usize,
-    /// Key fingerprint advertised in `Hello`.
-    pub fingerprint: String,
+    /// How long a freshly accepted connection may stay silent before its
+    /// handshake is abandoned (bounds slow/loris peers and pre-v2
+    /// clients that wait for the server to speak first).
+    pub handshake_timeout: Duration,
+    /// How long an established session may sit idle (no frame at all)
+    /// before it is closed. Session workers are a fixed pool, so an
+    /// abandoned-but-open connection would otherwise hold a worker
+    /// forever.
+    pub idle_timeout: Duration,
 }
 
 impl Default for ServeConfig {
@@ -59,37 +64,34 @@ impl Default for ServeConfig {
         Self {
             addr: "127.0.0.1:7433".to_string(),
             session_workers: 8,
-            batcher: BatcherConfig::default(),
-            kappa: 0,
-            fingerprint: String::new(),
+            handshake_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(300),
         }
     }
 }
 
-/// A running serving instance: acceptor thread + session pool + batcher.
+/// A running serving instance: acceptor thread + session pool + one
+/// batcher lane per registered `(model, epoch)`.
 pub struct Server {
     local_addr: SocketAddr,
-    handle: ServingHandle,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<ServingMetrics>,
     shutdown: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
     sessions: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind the listener and start serving `model` through `engine`.
-    pub fn bind(engine: SharedEngine, model: ServingModel, cfg: ServeConfig) -> Result<Self> {
-        let geometry = engine.manifest().geometry("small")?;
-        let handle = ServingHandle::start_shared(engine, model, cfg.batcher.clone())?;
+    /// Bind the listener and start serving every lane in `registry`.
+    pub fn bind(registry: ModelRegistry, cfg: ServeConfig) -> Result<Self> {
+        if registry.is_empty() {
+            return Err(Error::Config("cannot serve an empty model registry".into()));
+        }
+        let registry = Arc::new(registry);
+        let metrics = Arc::new(ServingMetrics::default());
         let listener = TcpListener::bind(&cfg.addr)?;
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let hello = Message::Hello {
-            geometry,
-            kappa: cfg.kappa,
-            fingerprint: cfg.fingerprint.clone(),
-            num_batches: 0,
-            batch_size: cfg.batcher.max_batch as u32,
-        };
 
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
@@ -97,8 +99,9 @@ impl Server {
         let mut sessions = Vec::with_capacity(workers);
         for w in 0..workers {
             let conn_rx = conn_rx.clone();
-            let handle = handle.clone();
-            let hello = hello.clone();
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
             sessions.push(
                 std::thread::Builder::new()
                     .name(format!("mole-session-{w}"))
@@ -107,7 +110,7 @@ impl Server {
                             Ok(s) => s,
                             Err(_) => return, // acceptor gone: drain done
                         };
-                        if let Err(e) = run_session(sock, &handle, &hello) {
+                        if let Err(e) = run_session(sock, &registry, &metrics, &cfg) {
                             crate::logging::warn(&format!("session ended with error: {e}"));
                         }
                     })
@@ -117,7 +120,7 @@ impl Server {
 
         let acceptor = {
             let shutdown = shutdown.clone();
-            let metrics = handle.metrics.clone();
+            let metrics = metrics.clone();
             std::thread::Builder::new()
                 .name("mole-accept".into())
                 .spawn(move || {
@@ -142,29 +145,41 @@ impl Server {
                 .map_err(Error::Io)?
         };
 
-        Ok(Self { local_addr, handle, shutdown, acceptor: Some(acceptor), sessions })
+        Ok(Self {
+            local_addr,
+            registry,
+            metrics,
+            shutdown,
+            acceptor: Some(acceptor),
+            sessions,
+        })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
     }
 
+    /// Server-level metrics: connections, wire bytes, TCP-answered
+    /// responses and faults. Per-lane batching/latency metrics live on
+    /// each lane's [`super::batcher::ServingHandle`] (via
+    /// [`Server::registry`]).
     pub fn metrics(&self) -> &Arc<ServingMetrics> {
-        &self.handle.metrics
+        &self.metrics
     }
 
-    /// The in-process handle (tests/benches can mix direct `infer` calls
-    /// with TCP traffic; both share the batcher and the engine).
-    pub fn handle(&self) -> &ServingHandle {
-        &self.handle
+    /// The registry of running lanes (tests/benches can mix direct
+    /// in-process `infer` calls with TCP traffic; both share the lanes
+    /// and the engine).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
-    /// Block until `n` responses have been served or `timeout` elapses;
-    /// true iff the target was reached. Drives `mole serve
-    /// --max-requests` (CI smoke) without signal handling.
+    /// Block until `n` responses have been answered over TCP or
+    /// `timeout` elapses; true iff the target was reached. Drives `mole
+    /// serve --max-requests` (CI smoke) without signal handling.
     pub fn wait_for_responses(&self, n: u64, timeout: Duration) -> bool {
         let t0 = Instant::now();
-        while self.handle.metrics.responses.get() < n {
+        while self.metrics.responses.get() < n {
             if t0.elapsed() > timeout {
                 return false;
             }
@@ -202,14 +217,104 @@ impl<R: Read> Read for CountingReader<R> {
     }
 }
 
-/// One client session: reader (this thread) + writer thread, linked by a
-/// message queue. In-flight batcher completions hold queue senders, so
-/// the writer drains every pending response before `EndOfData`.
-fn run_session(sock: TcpStream, handle: &ServingHandle, hello: &Message) -> Result<()> {
-    let metrics = handle.metrics.clone();
+/// Best-effort typed rejection during the handshake (before the writer
+/// thread exists).
+fn handshake_fault(sock: &mut TcpStream, metrics: &Arc<ServingMetrics>, msg: String) {
+    metrics.faults.inc();
+    if let Ok(n) = write_message(sock, &Message::Fault { msg }) {
+        metrics.bytes_out.add(n as u64);
+    }
+    let _ = sock.shutdown(Shutdown::Both);
+}
+
+/// Resolve the client's opening `Hello` to a session lane, answering
+/// version mismatches, non-`Hello` openings and unknown models with a
+/// typed `Fault`. `Ok(None)` means the peer went away silently (port
+/// probes, health checks) — not an error.
+fn handshake(
+    sock: &mut TcpStream,
+    registry: &Arc<ModelRegistry>,
+    metrics: &Arc<ServingMetrics>,
+    timeout: Duration,
+) -> Result<Option<Arc<ModelLane>>> {
+    sock.set_read_timeout(Some(timeout)).ok();
+    let opening = {
+        let mut reader =
+            CountingReader { inner: &mut *sock, metrics: metrics.clone() };
+        read_message(&mut reader)
+    };
+    let lane = match opening {
+        Ok(Message::Hello { model, epoch, .. }) => {
+            match registry.resolve(&model, epoch) {
+                Ok(lane) => lane,
+                Err(e) => {
+                    let msg = e.to_string();
+                    handshake_fault(sock, metrics, msg.clone());
+                    return Err(Error::Protocol(msg));
+                }
+            }
+        }
+        Ok(other) => {
+            let msg = format!("serving sessions open with Hello, got {other:?}");
+            handshake_fault(sock, metrics, msg.clone());
+            return Err(Error::Protocol(msg));
+        }
+        // silent close before any frame: a probe, not a protocol error
+        Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(None)
+        }
+        Err(Error::Io(e))
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            let msg = format!(
+                "handshake timed out after {timeout:?} (v{PROTOCOL_VERSION} clients \
+                 send Hello first)"
+            );
+            handshake_fault(sock, metrics, msg.clone());
+            return Err(Error::Protocol(msg));
+        }
+        Err(e) => {
+            // includes Error::Version: tell the peer why, typed
+            handshake_fault(sock, metrics, e.to_string());
+            return Err(e);
+        }
+    };
+    let hello = Message::Hello {
+        version: PROTOCOL_VERSION,
+        model: lane.name().to_string(),
+        epoch: lane.epoch(),
+        geometry: lane.geometry(),
+        kappa: lane.kappa(),
+        fingerprint: lane.fingerprint().to_string(),
+        num_batches: 0,
+        batch_size: registry.batcher().max_batch as u32,
+    };
+    let n = write_message(sock, &hello)?;
+    metrics.bytes_out.add(n as u64);
+    Ok(Some(lane))
+}
+
+/// One client session: handshake, then reader (this thread) + writer
+/// thread linked by a message queue. In-flight batcher completions hold
+/// queue senders, so the writer drains every pending response before
+/// `EndOfData`.
+fn run_session(
+    mut sock: TcpStream,
+    registry: &Arc<ModelRegistry>,
+    metrics: &Arc<ServingMetrics>,
+    cfg: &ServeConfig,
+) -> Result<()> {
+    let session_lane = match handshake(&mut sock, registry, metrics, cfg.handshake_timeout)? {
+        Some(lane) => lane,
+        None => return Ok(()),
+    };
+    // the fixed worker pool must not be held hostage by an abandoned
+    // connection: an idle session (no frame at all) is eventually shed
+    sock.set_read_timeout(Some(cfg.idle_timeout)).ok();
+
     let mut writer_sock = sock.try_clone()?;
     let (out_tx, out_rx) = mpsc::channel::<Message>();
-
     let writer_metrics = metrics.clone();
     let writer = std::thread::Builder::new()
         .name("mole-session-writer".into())
@@ -226,34 +331,44 @@ fn run_session(sock: TcpStream, handle: &ServingHandle, hello: &Message) -> Resu
         })
         .map_err(Error::Io)?;
 
-    // greet before reading: clients size their rows from this
-    out_tx
-        .send(hello.clone())
-        .map_err(|_| Error::Protocol("session writer died at handshake".into()))?;
-
     let mut reader = CountingReader { inner: sock, metrics: metrics.clone() };
     let result = loop {
         match read_message(&mut reader) {
-            Ok(Message::InferRequest { id, row }) => {
+            Ok(Message::InferRequest { id, model, epoch, row }) => {
+                metrics.requests.inc();
+                // "" + latest ⇒ the lane negotiated at handshake (stable
+                // for the whole session even if newer epochs register);
+                // anything else re-resolves per request. Resolve + submit
+                // fold into one Result: any Err faults this request only,
+                // never the session (row-length validation happens inside
+                // the lane's batcher `enqueue`).
                 let tx = out_tx.clone();
                 let m = metrics.clone();
-                // row-length validation happens inside the batcher
-                // (`enqueue`); a synchronous Err here faults this request
-                // only, not the session
-                let outcome = handle.submit_with(row.data(), move |result| {
-                    let msg = match result {
-                        Ok(logits) => Message::InferResponse { id, logits },
-                        Err(e) => {
-                            m.faults.inc();
-                            Message::Fault { msg: format!("request {id}: {e}") }
-                        }
-                    };
-                    let _ = tx.send(msg);
+                let outcome = if model.is_empty() && epoch == EPOCH_LATEST {
+                    Ok(session_lane.clone())
+                } else if model.is_empty() {
+                    registry.resolve(session_lane.name(), epoch)
+                } else {
+                    registry.resolve(&model, epoch)
+                }
+                .and_then(|lane| {
+                    lane.handle().submit_with(row.data(), move |result| {
+                        let msg = match result {
+                            Ok(logits) => {
+                                m.responses.inc();
+                                Message::InferResponse { id, logits }
+                            }
+                            Err(e) => {
+                                m.faults.inc();
+                                Message::Fault { msg: format!("request {id}: {e}") }
+                            }
+                        };
+                        let _ = tx.send(msg);
+                    })
                 });
                 if let Err(e) = outcome {
                     metrics.faults.inc();
-                    let _ =
-                        out_tx.send(Message::Fault { msg: format!("request {id}: {e}") });
+                    let _ = out_tx.send(Message::Fault { msg: format!("request {id}: {e}") });
                 }
             }
             Ok(Message::EndOfData) => break Ok(()),
@@ -268,6 +383,16 @@ fn run_session(sock: TcpStream, handle: &ServingHandle, hello: &Message) -> Resu
             }
             // peer hung up without EndOfData: close quietly
             Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => break Ok(()),
+            // idle timeout: flush what's in flight and shed the session
+            Err(Error::Io(e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                let _ = out_tx.send(Message::Fault {
+                    msg: format!("session idle for {:?}, closing", cfg.idle_timeout),
+                });
+                break Err(Error::Protocol("session idle timeout".into()));
+            }
             Err(e) => {
                 metrics.faults.inc();
                 let _ = out_tx.send(Message::Fault { msg: e.to_string() });
@@ -281,117 +406,4 @@ fn run_session(sock: TcpStream, handle: &ServingHandle, hello: &Message) -> Resu
     drop(out_tx);
     let _ = writer.join();
     result
-}
-
-/// Deterministic demo serving stack for `mole serve`, benches and tests:
-/// real keys + a He-initialized first layer pushed through the provider's
-/// `C^ac` construction, He-initialized trunk. Same `(kappa, seed)` ⇒
-/// bitwise-identical model on every call.
-pub fn demo_model(
-    manifest: &Manifest,
-    kappa: usize,
-    seed: u64,
-) -> Result<(ServingModel, String)> {
-    let g = manifest.geometry("small")?;
-    let keys = crate::keys::KeyBundle::generate(g, kappa, seed)?;
-    let morph_key = keys.morph_key()?;
-    let mut rng = Rng::new(seed ^ 0x5E57E);
-    let std = (2.0 / (g.alpha * g.p * g.p) as f64).sqrt() as f32;
-    let w1 = Tensor::new(
-        &[g.beta, g.alpha, g.p, g.p],
-        rng.normal_vec(g.beta * g.alpha * g.p * g.p, std),
-    )?;
-    let b1 = vec![0.0f32; g.beta];
-    let layer = crate::augconv::build_aug_conv(&w1, &b1, &morph_key, &keys.perm)?;
-    let model = ServingModel {
-        cac: layer.matrix().clone(),
-        bias: layer.bias().to_vec(),
-        params: init_params(&manifest.aug_params, &mut rng),
-    };
-    Ok((model, keys.fingerprint()))
-}
-
-/// What a serving session's `Hello` told the client.
-#[derive(Debug, Clone)]
-pub struct ServingHello {
-    pub geometry: Geometry,
-    pub kappa: usize,
-    pub fingerprint: String,
-    pub max_batch: usize,
-}
-
-/// Thin client for one serving session (used by `mole loadgen`, tests
-/// and benches). Requests pipeline freely; responses arrive tagged by id.
-pub struct ServingClient {
-    sock: TcpStream,
-    pub hello: ServingHello,
-}
-
-impl ServingClient {
-    pub fn connect<A: std::net::ToSocketAddrs>(addr: A) -> Result<Self> {
-        let sock = TcpStream::connect(addr)?;
-        sock.set_nodelay(true).ok();
-        let mut me = Self {
-            sock,
-            hello: ServingHello {
-                geometry: Geometry::SMALL,
-                kappa: 0,
-                fingerprint: String::new(),
-                max_batch: 0,
-            },
-        };
-        match read_message(&mut me.sock)? {
-            Message::Hello { geometry, kappa, fingerprint, batch_size, .. } => {
-                me.hello = ServingHello {
-                    geometry,
-                    kappa,
-                    fingerprint,
-                    max_batch: batch_size as usize,
-                };
-                Ok(me)
-            }
-            other => Err(Error::Protocol(format!("expected Hello, got {other:?}"))),
-        }
-    }
-
-    /// Row length the server expects (α·m² of the advertised geometry).
-    pub fn d_len(&self) -> usize {
-        self.hello.geometry.d_len()
-    }
-
-    pub fn send_request(&mut self, id: u64, row: &[f32]) -> Result<usize> {
-        let msg = Message::InferRequest {
-            id,
-            row: Tensor::new(&[row.len()], row.to_vec())?,
-        };
-        write_message(&mut self.sock, &msg)
-    }
-
-    /// Next `InferResponse`; `Fault` frames surface as `Err`.
-    pub fn recv_response(&mut self) -> Result<(u64, Vec<f32>)> {
-        match read_message(&mut self.sock)? {
-            Message::InferResponse { id, logits } => Ok((id, logits)),
-            Message::Fault { msg } => Err(Error::Protocol(format!("server fault: {msg}"))),
-            other => Err(Error::Protocol(format!("expected InferResponse, got {other:?}"))),
-        }
-    }
-
-    /// Graceful close: `EndOfData` out, drain stragglers until the
-    /// server's `EndOfData` (or EOF) comes back.
-    pub fn finish(mut self) -> Result<()> {
-        write_message(&mut self.sock, &Message::EndOfData)?;
-        loop {
-            match read_message(&mut self.sock) {
-                Ok(Message::EndOfData) => return Ok(()),
-                Ok(Message::InferResponse { .. }) => continue, // late straggler
-                Ok(other) => {
-                    return Err(Error::Protocol(format!("at session end, got {other:?}")))
-                }
-                Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-                    return Ok(())
-                }
-                Err(e) => return Err(e),
-            }
-        }
-    }
 }

@@ -19,6 +19,11 @@ pub enum Error {
     /// Delivery-protocol framing or state-machine violations.
     Protocol(String),
 
+    /// Peer speaks a different protocol version (negotiated in `Hello`).
+    /// Kept distinct from [`Error::Protocol`] so sessions can answer with
+    /// a typed `Fault` instead of a generic decode error.
+    Version { got: u32, want: u32 },
+
     /// Artifact manifest problems (missing artifact, bad signature).
     Manifest(String),
 
@@ -46,6 +51,10 @@ impl std::fmt::Display for Error {
             Error::Singular(m) => write!(f, "singular matrix: {m}"),
             Error::Key(m) => write!(f, "key error: {m}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Version { got, want } => write!(
+                f,
+                "protocol version mismatch: peer speaks v{got}, this build speaks v{want}"
+            ),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
@@ -91,6 +100,13 @@ mod tests {
         assert!(e.to_string().contains("[2,3]"));
         let e = Error::Json { offset: 12, msg: "bad token".into() };
         assert!(e.to_string().contains("12"));
+    }
+
+    #[test]
+    fn version_mismatch_display() {
+        let e = Error::Version { got: 1, want: 2 };
+        assert!(e.to_string().contains("v1"));
+        assert!(e.to_string().contains("v2"));
     }
 
     #[test]

@@ -4,10 +4,21 @@
 //!
 //! Stored material: the morph seed + κ (the core is regenerated
 //! deterministically — see [`crate::morph::MorphKey::from_seed`]), the
-//! channel permutation, the geometry, and a SHA-256 fingerprint binding
-//! them together. The binary format is versioned and integrity-checked;
-//! the vault file is chmod 0600 on unix. Keys never cross the delivery
-//! protocol — only `T^r` and `C^ac` do (§4.1 HBC surface).
+//! channel permutation, the geometry, the key **epoch** with its
+//! rotation lineage, and a SHA-256 fingerprint binding them together.
+//! The binary format is versioned and integrity-checked; the vault file
+//! is chmod 0600 on unix. Keys never cross the delivery protocol — only
+//! `T^r` and `C^ac` do (§4.1 HBC surface).
+//!
+//! ## Epochs and rotation
+//!
+//! A provider re-morphs its corpus under fresh key material by calling
+//! [`KeyBundle::rotate`]: the rotated bundle keeps the geometry and κ,
+//! draws a new morph seed + channel permutation, increments the epoch,
+//! and records the parent's fingerprint. The lineage lets a serving
+//! registry host epoch N and N+1 side by side during rollover and lets
+//! auditors walk a vault chain back to its root (the parent
+//! fingerprint is empty only at epoch 0).
 
 use crate::augconv::ChannelPerm;
 use crate::hash::{to_hex, Sha256};
@@ -16,7 +27,10 @@ use crate::{Error, Geometry, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"MOLEKEY1";
+/// Legacy (pre-epoch) vault magic; still loadable, never written.
+const MAGIC_V1: &[u8; 8] = b"MOLEKEY1";
+/// Current vault magic: adds epoch + parent-fingerprint lineage.
+const MAGIC_V2: &[u8; 8] = b"MOLEKEY2";
 
 /// The provider's secret bundle for one delivery session.
 #[derive(Debug, Clone)]
@@ -25,15 +39,53 @@ pub struct KeyBundle {
     pub kappa: usize,
     pub morph_seed: u64,
     pub perm: ChannelPerm,
+    /// Rotation generation: 0 for freshly generated bundles, +1 per
+    /// [`KeyBundle::rotate`].
+    pub epoch: u32,
+    /// Fingerprint of the bundle this one was rotated from ("" at the
+    /// root epoch). Binds the rotation chain into every fingerprint.
+    pub parent_fingerprint: String,
 }
 
 impl KeyBundle {
-    /// Generate a fresh bundle (morph key material + channel permutation).
+    /// Generate a fresh root bundle (epoch 0, no lineage).
     pub fn generate(geometry: Geometry, kappa: usize, seed: u64) -> Result<Self> {
         // validate kappa against the geometry before accepting it
         geometry.q_for_kappa(kappa)?;
         let perm = ChannelPerm::generate(geometry.beta, seed);
-        Ok(Self { geometry, kappa, morph_seed: seed, perm })
+        Ok(Self {
+            geometry,
+            kappa,
+            morph_seed: seed,
+            perm,
+            epoch: 0,
+            parent_fingerprint: String::new(),
+        })
+    }
+
+    /// Rotate to the next key epoch: same geometry and κ, fresh morph
+    /// seed and channel permutation, `epoch + 1`, and this bundle's
+    /// fingerprint recorded as the parent. The rotated bundle morphs
+    /// differently (new M and rand order), so a provider re-morphs its
+    /// corpus under it while servers keep serving the old epoch until
+    /// rollover completes.
+    pub fn rotate(&self, new_seed: u64) -> Result<Self> {
+        if new_seed == self.morph_seed {
+            return Err(Error::Key(
+                "rotation must use fresh seed material (got the current seed)".into(),
+            ));
+        }
+        let epoch = self.epoch.checked_add(1).ok_or_else(|| {
+            Error::Key("key epoch counter exhausted (u32::MAX rotations)".into())
+        })?;
+        Ok(Self {
+            geometry: self.geometry,
+            kappa: self.kappa,
+            morph_seed: new_seed,
+            perm: ChannelPerm::generate(self.geometry.beta, new_seed),
+            epoch,
+            parent_fingerprint: self.fingerprint(),
+        })
     }
 
     /// Materialize the morph key (regenerates the core from the seed; the
@@ -42,11 +94,13 @@ impl KeyBundle {
         MorphKey::from_seed(self.geometry, self.kappa, self.morph_seed)
     }
 
-    /// SHA-256 fingerprint over all key material (hex). Used to detect
-    /// tampering and to name sessions without revealing secrets.
+    /// SHA-256 fingerprint over all key material including the epoch and
+    /// rotation lineage (hex). Used to detect tampering and to name
+    /// sessions without revealing secrets; two epochs of the same root
+    /// never share a fingerprint.
     pub fn fingerprint(&self) -> String {
         let mut h = Sha256::new();
-        h.update(MAGIC);
+        h.update(MAGIC_V2);
         h.update(self.encode_body());
         to_hex(&h.finalize())
     }
@@ -60,10 +114,13 @@ impl KeyBundle {
             self.geometry.p as u64,
             self.kappa as u64,
             self.morph_seed,
+            self.epoch as u64,
             self.perm.beta() as u64,
         ] {
             out.extend_from_slice(&v.to_le_bytes());
         }
+        out.extend_from_slice(&(self.parent_fingerprint.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.parent_fingerprint.as_bytes());
         for &p in self.perm.as_slice() {
             out.extend_from_slice(&(p as u32).to_le_bytes());
         }
@@ -74,20 +131,27 @@ impl KeyBundle {
     pub fn to_bytes(&self) -> Vec<u8> {
         let body = self.encode_body();
         let mut out = Vec::with_capacity(8 + body.len() + 32);
-        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(MAGIC_V2);
         out.extend_from_slice(&body);
         let mut h = Sha256::new();
-        h.update(MAGIC);
+        h.update(MAGIC_V2);
         h.update(&body);
         out.extend_from_slice(&h.finalize());
         out
     }
 
-    /// Deserialize + integrity-check.
+    /// Deserialize + integrity-check. Reads the current `MOLEKEY2` format
+    /// and the legacy `MOLEKEY1` layout (which maps to epoch 0 with no
+    /// lineage).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
-        if bytes.len() < 8 + 7 * 8 + 32 || &bytes[..8] != MAGIC {
+        if bytes.len() < 8 + 32 {
             return Err(Error::Key("bad vault magic or truncated file".into()));
         }
+        let legacy = match &bytes[..8] {
+            m if m == MAGIC_V2 => false,
+            m if m == MAGIC_V1 => true,
+            _ => return Err(Error::Key("bad vault magic or truncated file".into())),
+        };
         let (payload, digest) = bytes.split_at(bytes.len() - 32);
         let mut h = Sha256::new();
         h.update(payload);
@@ -95,27 +159,68 @@ impl KeyBundle {
             return Err(Error::Key("vault integrity check failed".into()));
         }
         let body = &payload[8..];
+        if legacy {
+            Self::decode_body_v1(body)
+        } else {
+            Self::decode_body_v2(body)
+        }
+    }
+
+    fn decode_body_v2(body: &[u8]) -> Result<Self> {
+        let fixed = 8 * 8;
+        if body.len() < fixed + 4 {
+            return Err(Error::Key("vault body truncated".into()));
+        }
         let u = |i: usize| -> u64 {
             u64::from_le_bytes(body[i * 8..(i + 1) * 8].try_into().unwrap())
         };
         let geometry = Geometry::new(u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize);
         let kappa = u(4) as usize;
         let morph_seed = u(5);
-        let beta = u(6) as usize;
-        let perm_bytes = &body[7 * 8..];
-        if perm_bytes.len() != beta * 4 {
-            return Err(Error::Key("vault permutation length mismatch".into()));
+        let epoch = u(6) as u32;
+        let beta = u(7) as usize;
+        let fp_len =
+            u32::from_le_bytes(body[fixed..fixed + 4].try_into().unwrap()) as usize;
+        let fp_end = fixed + 4 + fp_len;
+        if body.len() < fp_end {
+            return Err(Error::Key("vault lineage field truncated".into()));
         }
-        let perm: Vec<usize> = perm_bytes
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
-            .collect();
+        let parent_fingerprint = String::from_utf8(body[fixed + 4..fp_end].to_vec())
+            .map_err(|_| Error::Key("vault lineage field is not utf-8".into()))?;
+        let perm = Self::decode_perm(&body[fp_end..], beta)?;
+        Ok(Self { geometry, kappa, morph_seed, perm, epoch, parent_fingerprint })
+    }
+
+    fn decode_body_v1(body: &[u8]) -> Result<Self> {
+        let fixed = 7 * 8;
+        if body.len() < fixed {
+            return Err(Error::Key("vault body truncated".into()));
+        }
+        let u = |i: usize| -> u64 {
+            u64::from_le_bytes(body[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        let geometry = Geometry::new(u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize);
+        let perm = Self::decode_perm(&body[fixed..], u(6) as usize)?;
         Ok(Self {
             geometry,
-            kappa,
-            morph_seed,
-            perm: ChannelPerm::from_vec(perm)?,
+            kappa: u(4) as usize,
+            morph_seed: u(5),
+            perm,
+            epoch: 0,
+            parent_fingerprint: String::new(),
         })
+    }
+
+    fn decode_perm(perm_bytes: &[u8], beta: usize) -> Result<ChannelPerm> {
+        if perm_bytes.len() != beta.checked_mul(4).unwrap_or(usize::MAX) {
+            return Err(Error::Key("vault permutation length mismatch".into()));
+        }
+        ChannelPerm::from_vec(
+            perm_bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+                .collect(),
+        )
     }
 
     /// Save to a vault file (0600 on unix).
@@ -146,6 +251,33 @@ mod tests {
         KeyBundle::generate(Geometry::SMALL, 16, 1234).unwrap()
     }
 
+    /// Hand-encode the legacy MOLEKEY1 layout for back-compat coverage.
+    fn v1_bytes(b: &KeyBundle) -> Vec<u8> {
+        let mut body = Vec::new();
+        for v in [
+            b.geometry.alpha as u64,
+            b.geometry.m as u64,
+            b.geometry.beta as u64,
+            b.geometry.p as u64,
+            b.kappa as u64,
+            b.morph_seed,
+            b.perm.beta() as u64,
+        ] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        for &p in b.perm.as_slice() {
+            body.extend_from_slice(&(p as u32).to_le_bytes());
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V1);
+        out.extend_from_slice(&body);
+        let mut h = Sha256::new();
+        h.update(MAGIC_V1);
+        h.update(&body);
+        out.extend_from_slice(&h.finalize());
+        out
+    }
+
     #[test]
     fn roundtrip_bytes() {
         let b = bundle();
@@ -154,17 +286,84 @@ mod tests {
         assert_eq!(parsed.kappa, b.kappa);
         assert_eq!(parsed.morph_seed, b.morph_seed);
         assert_eq!(parsed.perm, b.perm);
+        assert_eq!(parsed.epoch, 0);
+        assert_eq!(parsed.parent_fingerprint, "");
+    }
+
+    #[test]
+    fn legacy_v1_vault_still_loads() {
+        let b = bundle();
+        let loaded = KeyBundle::from_bytes(&v1_bytes(&b)).unwrap();
+        assert_eq!(loaded.geometry, b.geometry);
+        assert_eq!(loaded.kappa, b.kappa);
+        assert_eq!(loaded.morph_seed, b.morph_seed);
+        assert_eq!(loaded.perm, b.perm);
+        assert_eq!(loaded.epoch, 0);
+        assert_eq!(loaded.parent_fingerprint, "");
+        // re-saving upgrades to the current format without changing the
+        // material (fingerprints agree because epoch 0 + empty lineage)
+        assert_eq!(loaded.fingerprint(), b.fingerprint());
+        assert_eq!(&loaded.to_bytes()[..8], MAGIC_V2);
+        // tampered legacy bytes are still caught
+        let mut bad = v1_bytes(&b);
+        bad[8 + 5 * 8] ^= 1;
+        assert!(matches!(KeyBundle::from_bytes(&bad), Err(Error::Key(_))));
+    }
+
+    #[test]
+    fn rotation_advances_epoch_and_lineage() {
+        let root = bundle();
+        let r1 = root.rotate(5678).unwrap();
+        assert_eq!(r1.epoch, 1);
+        assert_eq!(r1.parent_fingerprint, root.fingerprint());
+        assert_eq!(r1.geometry, root.geometry);
+        assert_eq!(r1.kappa, root.kappa);
+        assert_ne!(r1.morph_seed, root.morph_seed);
+        assert_ne!(r1.fingerprint(), root.fingerprint());
+        // rotation actually changes the morph: same rows, different T^r
+        let mut rng = crate::rng::Rng::new(9);
+        let rows = crate::tensor::Tensor::new(&[2, 768], rng.normal_vec(2 * 768, 1.0)).unwrap();
+        let t0 = root.morph_key().unwrap().morph(&rows).unwrap();
+        let t1 = r1.morph_key().unwrap().morph(&rows).unwrap();
+        assert!(t0.rms_diff(&t1).unwrap() > 0.1, "rotation left the morph unchanged");
+        // chain: epoch 2 points at epoch 1, not the root
+        let r2 = r1.rotate(9999).unwrap();
+        assert_eq!(r2.epoch, 2);
+        assert_eq!(r2.parent_fingerprint, r1.fingerprint());
+        assert_ne!(r2.parent_fingerprint, root.fingerprint());
+        // reusing the current seed is rejected
+        assert!(matches!(r1.rotate(r1.morph_seed), Err(Error::Key(_))));
+    }
+
+    #[test]
+    fn rotated_bundle_roundtrips_with_lineage() {
+        let root = bundle();
+        let r1 = root.rotate(31337).unwrap();
+        let parsed = KeyBundle::from_bytes(&r1.to_bytes()).unwrap();
+        assert_eq!(parsed.epoch, 1);
+        assert_eq!(parsed.parent_fingerprint, root.fingerprint());
+        assert_eq!(parsed.fingerprint(), r1.fingerprint());
+        assert_eq!(parsed.morph_seed, r1.morph_seed);
+        assert_eq!(parsed.perm, r1.perm);
     }
 
     #[test]
     fn tamper_detected() {
-        let b = bundle();
+        let b = bundle().rotate(77).unwrap();
         let mut bytes = b.to_bytes();
         // flip a bit in the seed field
         bytes[8 + 5 * 8] ^= 1;
         assert!(matches!(KeyBundle::from_bytes(&bytes), Err(Error::Key(_))));
+        // flip a bit in the epoch field: lineage is integrity-protected too
+        let mut bytes = b.to_bytes();
+        bytes[8 + 6 * 8] ^= 1;
+        assert!(matches!(KeyBundle::from_bytes(&bytes), Err(Error::Key(_))));
+        // flip a bit inside the parent fingerprint
+        let mut bytes = b.to_bytes();
+        bytes[8 + 8 * 8 + 4] ^= 1;
+        assert!(matches!(KeyBundle::from_bytes(&bytes), Err(Error::Key(_))));
         // truncation
-        assert!(KeyBundle::from_bytes(&bytes[..10]).is_err());
+        assert!(KeyBundle::from_bytes(&b.to_bytes()[..10]).is_err());
         // bad magic
         let mut bytes = b.to_bytes();
         bytes[0] = b'X';
@@ -180,11 +379,16 @@ mod tests {
         // same material, same fingerprint
         let a2 = KeyBundle::from_bytes(&a.to_bytes()).unwrap();
         assert_eq!(a.fingerprint(), a2.fingerprint());
+        // epoch participates in the fingerprint: identical seed/perm at a
+        // different epoch must not collide
+        let mut forged = a.clone();
+        forged.epoch = 1;
+        assert_ne!(forged.fingerprint(), a.fingerprint());
     }
 
     #[test]
     fn save_load_file() {
-        let b = bundle();
+        let b = bundle().rotate(4321).unwrap();
         let path = std::env::temp_dir().join("mole_vault_test.key");
         b.save(&path).unwrap();
         #[cfg(unix)]
@@ -195,6 +399,7 @@ mod tests {
         }
         let loaded = KeyBundle::load(&path).unwrap();
         assert_eq!(loaded.fingerprint(), b.fingerprint());
+        assert_eq!(loaded.epoch, 1);
         std::fs::remove_file(&path).ok();
     }
 

@@ -22,11 +22,22 @@
 //!   artifacts`). The manifest falls back to a built-in contract when no
 //!   `artifacts/` directory exists, so the default build is
 //!   self-contained.
+//! * **Key vault ([`keys`])** — the provider's secret bundle (morph seed,
+//!   κ, channel permutation) with **key epochs**: `KeyBundle::rotate`
+//!   advances to fresh material while recording fingerprint lineage, so
+//!   epoch N and N+1 can serve side by side during rollover.
 //! * **Delivery system ([`coordinator`])** — the Fig.-1 protocol between
-//!   data provider and developer, training on morphed streams, and the
-//!   serving path: a concurrent TCP server (`mole serve`) feeding an
-//!   adaptive micro-batcher over a shared `Send + Sync` engine, plus the
-//!   matching multi-connection load driver (`mole loadgen`).
+//!   data provider and developer (versioned wire frames with model/epoch
+//!   routing), training on morphed streams, and the multi-tenant serving
+//!   path: a [`coordinator::ModelRegistry`] of named models × key epochs,
+//!   each with its own adaptive micro-batcher lane over a shared
+//!   `Send + Sync` engine, fronted by a concurrent TCP server (`mole
+//!   serve`) plus the matching multi-connection load driver (`mole
+//!   loadgen`).
+//! * **Client SDK ([`coordinator::client`])** — the typed
+//!   [`coordinator::MoleClient`] (connect / `infer` / `infer_batch` /
+//!   `stream_training`) and provider-side session endpoint; no consumer
+//!   outside the coordinator touches raw protocol frames.
 //!
 //! Quick orientation:
 //! * [`morph`] — morphing matrix **M** (block-diagonal, core **M′**) and

@@ -6,13 +6,21 @@
 //! * `morph --out DIR [--kappa K]` — morph a demo image, dump PPMs + SSIM
 //! * `provider --listen ADDR [--batches N]` — run a data-provider node
 //! * `developer --connect ADDR` — run a developer node (train on stream)
-//! * `serve [--listen ADDR] [--max-batch N] [--timeout-ms T] [--workers W]
-//!   [--fixed-window] [--max-requests N]` — concurrent TCP inference
-//!   server over the adaptive micro-batcher (`--max-requests` exits after
-//!   N answered requests; for smoke tests)
+//! * `serve [--listen ADDR] [--model NAME,NAME…] [--max-batch N]
+//!   [--timeout-ms T] [--workers W] [--fixed-window] [--max-requests N]`
+//!   — concurrent multi-tenant TCP inference server: every
+//!   `[serving.models.*]` config entry (or the `--model` subset) becomes
+//!   a registry lane over the adaptive micro-batcher (`--max-requests`
+//!   exits after N answered requests; for smoke tests)
 //! * `loadgen [--connect ADDR] [--connections C] [--requests R]
-//!   [--pipeline P]` — multi-connection serving load driver; prints
-//!   throughput + latency percentiles, exits nonzero on any error
+//!   [--pipeline P] [--model NAME] [--epoch E]` — multi-connection
+//!   serving load driver; prints throughput + latency percentiles, exits
+//!   nonzero on any error
+//! * `keygen --vault FILE [--kappa K] [--seed S]` — generate a root key
+//!   bundle and store it in a vault file
+//! * `rotate-key --vault FILE [--seed S] [--out FILE]` — rotate a vault
+//!   to the next key epoch (fresh morph seed + permutation, lineage
+//!   recorded)
 //! * `e2e [--steps N]` — in-process §4.4 three-group experiment (short)
 //! * `attack [--kappa K]` — run the three §4.2 attacks at small scale
 //!
@@ -58,11 +66,13 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("developer") => developer(&args, &cfg),
         Some("serve") => serve(&args, &cfg),
         Some("loadgen") => loadgen(&args, &cfg),
+        Some("keygen") => keygen(&args, &cfg),
+        Some("rotate-key") => rotate_key(&args),
         Some("e2e") => e2e(&args, &cfg),
         Some("attack") => attack(&args, &cfg),
         _ => {
             eprintln!(
-                "usage: mole <security-report|overhead|morph|provider|developer|serve|loadgen|e2e|attack> [options]"
+                "usage: mole <security-report|overhead|morph|provider|developer|serve|loadgen|keygen|rotate-key|e2e|attack> [options]"
             );
             Ok(())
         }
@@ -181,7 +191,9 @@ fn developer(args: &Args, cfg: &MoleConfig) -> Result<()> {
 }
 
 fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
-    use mole::coordinator::server::{demo_model, ServeConfig, Server};
+    use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry};
+    use mole::coordinator::server::{ServeConfig, Server};
+    use mole::keys::KeyBundle;
     use mole::runtime::SharedEngine;
 
     let addr = args.get_or("listen", &cfg.addr);
@@ -194,35 +206,66 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
     }
     let workers = args.get_usize("workers", cfg.serve_workers)?;
     let max_requests = args.get_u64("max-requests", 0)?;
+    // --model alpha,beta restricts the registry to a subset of the
+    // configured [serving.models.*] entries
+    let selected: Option<Vec<&str>> = args.get("model").map(|s| s.split(',').collect());
 
     let manifest = mole::manifest::Manifest::load(Path::new(&cfg.artifacts_dir))?;
-    let (model, fingerprint) = demo_model(&manifest, cfg.kappa, cfg.seed)?;
-    let engine = SharedEngine::new(manifest);
+    let engine = SharedEngine::new(manifest.clone());
+    let mut registry = ModelRegistry::new(engine, batcher.clone());
+    for spec in &cfg.models {
+        if let Some(sel) = &selected {
+            if !sel.contains(&spec.name.as_str()) {
+                continue;
+            }
+        }
+        let mut keys = KeyBundle::generate(cfg.geometry, spec.kappa, spec.seed)?;
+        for e in 0..spec.epochs {
+            registry.register(demo_entry_from_keys(&manifest, &spec.name, &keys, spec.seed)?)?;
+            if e + 1 < spec.epochs {
+                keys = keys.rotate(spec.seed.wrapping_add((e + 1) as u64))?;
+            }
+        }
+    }
+    if let Some(sel) = &selected {
+        if registry.is_empty() {
+            return Err(mole::Error::Config(format!(
+                "--model {sel:?} matches no configured [serving.models.*] entry"
+            )));
+        }
+    }
+    let labels = registry.labels();
     let server = Server::bind(
-        engine,
-        model,
+        registry,
         ServeConfig {
             addr: addr.clone(),
             session_workers: workers,
-            batcher: batcher.clone(),
-            kappa: cfg.kappa,
-            fingerprint,
+            ..ServeConfig::default()
         },
     )?;
     println!(
-        "serving on {} (workers={workers}, max_batch={}, window={}..{}us{})",
+        "serving {} on {} (workers={workers}, max_batch={}, window={}..{}us{})",
+        labels.join(", "),
         server.local_addr(),
         batcher.max_batch,
         batcher.min_timeout.as_micros(),
         batcher.timeout.as_micros(),
         if batcher.adaptive { ", adaptive" } else { ", fixed" },
     );
+    // wire-level counters live on the server; batching/latency live on
+    // each lane — print both so the status lines actually show coalescing
+    let print_status = |server: &Server| {
+        println!("server: {}", server.metrics().report());
+        for lane in server.registry().lanes() {
+            println!("{}@{}: {}", lane.name(), lane.epoch(), lane.handle().metrics.report());
+        }
+    };
     if max_requests > 0 {
         // smoke mode: exit once N requests were answered (or give up
         // after 10 minutes so CI never hangs)
         let reached =
             server.wait_for_responses(max_requests, std::time::Duration::from_secs(600));
-        println!("{}", server.metrics().report());
+        print_status(&server);
         server.stop();
         if !reached {
             return Err(mole::Error::Protocol(format!(
@@ -231,13 +274,13 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
         }
         return Ok(());
     }
-    // serve forever, logging a metrics line every 10s of activity
+    // serve forever, logging metrics every 10s of activity
     let mut last = 0u64;
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         let served = server.metrics().responses.get();
         if served != last {
-            println!("{}", server.metrics().report());
+            print_status(&server);
             last = served;
         }
     }
@@ -245,6 +288,7 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
 
 fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
     use mole::coordinator::loadgen::{run, LoadgenConfig};
+    use mole::coordinator::EPOCH_LATEST;
 
     let lg = LoadgenConfig {
         addr: args.get_or("connect", &cfg.addr),
@@ -252,10 +296,26 @@ fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
         requests_per_conn: args.get_usize("requests", 64)?,
         pipeline: args.get_usize("pipeline", 4)?,
         seed: args.get_u64("seed", cfg.data_seed)?,
+        model: args.get_or("model", ""),
+        epoch: match args.get("epoch") {
+            None => EPOCH_LATEST,
+            Some(v) => v
+                .parse()
+                .map_err(|_| mole::Error::Config(format!("--epoch {v:?}: not an integer")))?,
+        },
     };
     println!(
-        "loadgen: {} connections x {} requests (pipeline {}) -> {}",
-        lg.connections, lg.requests_per_conn, lg.pipeline, lg.addr
+        "loadgen: {} connections x {} requests (pipeline {}) -> {} (model {:?}{})",
+        lg.connections,
+        lg.requests_per_conn,
+        lg.pipeline,
+        lg.addr,
+        if lg.model.is_empty() { "<default>" } else { lg.model.as_str() },
+        if lg.epoch == EPOCH_LATEST {
+            ", latest epoch".to_string()
+        } else {
+            format!(", epoch {}", lg.epoch)
+        },
     );
     let report = run(&lg)?;
     println!("{}", report.report());
@@ -266,6 +326,41 @@ fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
             report.errors + report.ok
         )));
     }
+    Ok(())
+}
+
+fn keygen(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    let vault = args
+        .get("vault")
+        .ok_or_else(|| mole::Error::Config("keygen requires --vault FILE".into()))?;
+    let kappa = args.get_usize("kappa", cfg.kappa)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let keys = mole::keys::KeyBundle::generate(cfg.geometry, kappa, seed)?;
+    keys.save(Path::new(vault))?;
+    println!(
+        "wrote {vault}: epoch 0, kappa={kappa}, fingerprint {}",
+        keys.fingerprint()
+    );
+    Ok(())
+}
+
+fn rotate_key(args: &Args) -> Result<()> {
+    let vault = args
+        .get("vault")
+        .ok_or_else(|| mole::Error::Config("rotate-key requires --vault FILE".into()))?;
+    let keys = mole::keys::KeyBundle::load(Path::new(vault))?;
+    let new_seed = args.get_u64("seed", keys.morph_seed.wrapping_add(1))?;
+    let rotated = keys.rotate(new_seed)?;
+    let out = args.get_or("out", vault);
+    rotated.save(Path::new(&out))?;
+    println!(
+        "rotated {vault} -> {out}: epoch {} -> {}",
+        keys.epoch, rotated.epoch
+    );
+    println!("  parent fingerprint {}", rotated.parent_fingerprint);
+    println!("  new fingerprint    {}", rotated.fingerprint());
+    println!("re-morph the corpus under the new epoch, register it for serving,");
+    println!("and drain the old lane to complete the rollover.");
     Ok(())
 }
 

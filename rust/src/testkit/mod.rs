@@ -32,6 +32,82 @@ pub fn forall<T: std::fmt::Debug>(
     }
 }
 
+/// In-memory network doubles shared by the coordinator's protocol-level
+/// tests (unit tests in `coordinator/` and the integration suites).
+pub mod net {
+    use std::collections::VecDeque;
+    use std::io::{Read, Write};
+
+    /// One end of an in-memory duplex byte stream: `Read + Write`, so
+    /// handshakes and framed sessions run without sockets. Reads block
+    /// until the peer writes or hangs up (mpsc under the hood).
+    pub struct Pipe {
+        rx: std::sync::mpsc::Receiver<Vec<u8>>,
+        tx: std::sync::mpsc::Sender<Vec<u8>>,
+        buf: VecDeque<u8>,
+    }
+
+    /// A connected pair of [`Pipe`] ends.
+    pub fn pipe_pair() -> (Pipe, Pipe) {
+        let (a2b_tx, a2b_rx) = std::sync::mpsc::channel();
+        let (b2a_tx, b2a_rx) = std::sync::mpsc::channel();
+        (
+            Pipe { rx: b2a_rx, tx: a2b_tx, buf: VecDeque::new() },
+            Pipe { rx: a2b_rx, tx: b2a_tx, buf: VecDeque::new() },
+        )
+    }
+
+    impl Read for Pipe {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            while self.buf.len() < out.len() {
+                match self.rx.recv() {
+                    Ok(chunk) => self.buf.extend(chunk),
+                    Err(_) => break,
+                }
+            }
+            let n = out.len().min(self.buf.len());
+            for b in out.iter_mut().take(n) {
+                *b = self.buf.pop_front().unwrap();
+            }
+            Ok(n)
+        }
+    }
+
+    impl Write for Pipe {
+        fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+            self.tx.send(data.to_vec()).ok();
+            Ok(data.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Hand-encode a **legacy v1** `Hello` frame (no version field; the
+    /// payload opens with the geometry's α). The single source of truth
+    /// for what a pre-versioning peer puts on the wire — back-compat
+    /// tests in `protocol.rs`, `client.rs` and `tests/serving_e2e.rs`
+    /// all feed this to a v2 endpoint and expect the typed
+    /// version-mismatch `Fault`.
+    pub fn legacy_v1_hello_frame() -> Vec<u8> {
+        let mut payload = Vec::new();
+        for v in [3u32, 16, 16, 3, 16] {
+            payload.extend_from_slice(&v.to_le_bytes()); // α, m, β, p, κ
+        }
+        let fingerprint = b"deadbeef";
+        payload.extend_from_slice(&(fingerprint.len() as u32).to_le_bytes());
+        payload.extend_from_slice(fingerprint);
+        payload.extend_from_slice(&10u32.to_le_bytes()); // num_batches
+        payload.extend_from_slice(&64u32.to_le_bytes()); // batch_size
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"ML");
+        frame.push(1); // Hello tag
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame
+    }
+}
+
 /// Generator helpers.
 pub mod gen {
     use crate::rng::Rng;

@@ -4,7 +4,7 @@
 use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
 use mole::coordinator::developer::run_tcp_session;
 use mole::coordinator::provider::{ProviderNode, StreamPlan};
-use mole::coordinator::protocol::{read_message, write_message, Message};
+use mole::coordinator::MoleClient;
 use mole::data::synth::{generate, SynthSpec};
 use mole::keys::KeyBundle;
 use mole::manifest::Manifest;
@@ -97,8 +97,10 @@ fn deliver_train_serve_roundtrip() {
     assert!(acc > 0.5, "served accuracy {acc} (chance 0.25)");
 }
 
-/// Protocol failure injection: a developer that speaks out of order gets a
-/// protocol error; a truncated stream errors rather than hangs/panics.
+/// Protocol failure injection: a client that speaks the serving flow at
+/// a training provider (its first frame after the handshake is a `Hello`
+/// / `InferRequest`, never the expected `Conv1Weights`) gets rejected
+/// with a typed error — the provider neither hangs nor panics.
 #[test]
 fn protocol_violations_are_rejected() {
     let dataset = small_dataset(5);
@@ -109,17 +111,19 @@ fn protocol_violations_are_rejected() {
     let addr = listener.local_addr().unwrap();
     let p = provider.clone();
     let h = std::thread::spawn(move || {
-        let (mut sock, _) = listener.accept().unwrap();
-        p.run_session(&mut sock, StreamPlan { num_batches: 1, batch_size: 64 }, 1)
+        let (sock, _) = listener.accept().unwrap();
+        p.run_session(sock, StreamPlan { num_batches: 1, batch_size: 64 }, 1)
     });
 
-    let mut sock = std::net::TcpStream::connect(addr).unwrap();
-    // read Hello, then send the WRONG message type (an Ack)
-    let hello = read_message(&mut sock).unwrap();
-    assert!(matches!(hello, Message::Hello { .. }));
-    write_message(&mut sock, &Message::Ack { of: 0 }).unwrap();
+    // a serving-mode client: sends its own Hello where the provider
+    // expects Conv1Weights (out-of-order message type on the wire)
+    let result = MoleClient::connect(addr);
     let res = h.join().unwrap();
     assert!(res.is_err(), "provider accepted an out-of-order message");
+    // and the client recognizes the peer as a training provider (its
+    // Hello carries no model name) instead of limping into infer()
+    let err = result.err().expect("serving handshake against a provider must fail");
+    assert!(err.to_string().contains("provider"), "{err}");
 }
 
 /// Key isolation: two providers with different seeds produce different

@@ -1,45 +1,70 @@
-//! Loopback end-to-end tests for the concurrent TCP serving layer:
-//! a real `TcpListener` on port 0, many concurrent pipelined client
-//! sessions, and the hard invariant that micro-batched serving is
-//! **bitwise identical** to one-at-a-time inference.
+//! Loopback end-to-end tests for the multi-tenant TCP serving layer:
+//! a real `TcpListener` on port 0, a registry serving two models across
+//! key epochs, many concurrent pipelined `MoleClient` sessions, and the
+//! hard invariant that per-model micro-batched serving is **bitwise
+//! identical** to one-at-a-time inference on the same lane.
 
 use mole::coordinator::batcher::BatcherConfig;
+use mole::coordinator::client::{ClientConfig, MoleClient};
 use mole::coordinator::loadgen::{run, LoadgenConfig};
-use mole::coordinator::protocol::{read_message, write_message, Message};
-use mole::coordinator::server::{demo_model, ServeConfig, Server, ServingClient};
+use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry, RegisteredModel};
+use mole::coordinator::server::{ServeConfig, Server};
+use mole::coordinator::EPOCH_LATEST;
+use mole::keys::KeyBundle;
 use mole::manifest::Manifest;
 use mole::rng::Rng;
 use mole::runtime::{Arg, SharedEngine};
 use mole::tensor::Tensor;
-use std::collections::HashMap;
+use mole::Geometry;
+use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::time::Duration;
 
 const KAPPA: usize = 16;
-const SEED: u64 = 4242;
+const ALPHA_SEED: u64 = 4242;
+const BETA_SEED: u64 = 777;
 
 fn manifest() -> Manifest {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     Manifest::load(&dir).unwrap()
 }
 
+/// The three lanes every test serves: `alpha` mid-rollover (epochs 0 and
+/// 1 side by side) and `beta` already rotated to epoch 1.
+fn entries(m: &Manifest) -> Vec<RegisteredModel> {
+    let alpha_root = KeyBundle::generate(Geometry::SMALL, KAPPA, ALPHA_SEED).unwrap();
+    let alpha_next = alpha_root.rotate(ALPHA_SEED + 1).unwrap();
+    let beta = KeyBundle::generate(Geometry::SMALL, KAPPA, BETA_SEED)
+        .unwrap()
+        .rotate(BETA_SEED + 1)
+        .unwrap();
+    vec![
+        demo_entry_from_keys(m, "alpha", &alpha_root, ALPHA_SEED).unwrap(),
+        demo_entry_from_keys(m, "alpha", &alpha_next, ALPHA_SEED).unwrap(),
+        demo_entry_from_keys(m, "beta", &beta, BETA_SEED).unwrap(),
+    ]
+}
+
 fn start_server(max_batch: usize, timeout_ms: u64) -> (Server, SharedEngine) {
     let m = manifest();
     let engine = SharedEngine::new(m.clone());
-    let (model, fingerprint) = demo_model(&m, KAPPA, SEED).unwrap();
-    let server = Server::bind(
+    let mut registry = ModelRegistry::new(
         engine.clone(),
-        model,
+        BatcherConfig {
+            max_batch,
+            timeout: Duration::from_millis(timeout_ms),
+            ..BatcherConfig::default()
+        },
+    );
+    for e in entries(&m) {
+        registry.register(e).unwrap();
+    }
+    let server = Server::bind(
+        registry,
         ServeConfig {
             addr: "127.0.0.1:0".to_string(),
             session_workers: 8,
-            batcher: BatcherConfig {
-                max_batch,
-                timeout: Duration::from_millis(timeout_ms),
-                ..BatcherConfig::default()
-            },
-            kappa: KAPPA,
-            fingerprint,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -47,19 +72,15 @@ fn start_server(max_batch: usize, timeout_ms: u64) -> (Server, SharedEngine) {
 }
 
 /// Reference: run one row through the batch-1 artifact directly on the
-/// shared engine — the "one-at-a-time inference" the batcher must match.
-/// (`model` is a fresh `demo_model(KAPPA, SEED)` — bitwise identical to
-/// the one the server is holding.)
-fn single_row_logits(
-    engine: &SharedEngine,
-    model: &mole::coordinator::batcher::ServingModel,
-    row: &[f32],
-) -> Vec<f32> {
+/// shared engine — the "one-at-a-time inference" each lane must match.
+/// (`entry` is rebuilt from the same keys — bitwise identical to the one
+/// the server registered.)
+fn single_row_logits(engine: &SharedEngine, entry: &RegisteredModel, row: &[f32]) -> Vec<f32> {
     let mut args: Vec<Arg> = vec![
-        Arg::T(model.cac.clone()),
-        Arg::T(Tensor::new(&[model.bias.len()], model.bias.clone()).unwrap()),
+        Arg::T(entry.layer.matrix().clone()),
+        Arg::T(Tensor::new(&[entry.layer.bias().len()], entry.layer.bias().to_vec()).unwrap()),
     ];
-    for p in &model.params {
+    for p in &entry.params {
         args.push(Arg::T(p.clone()));
     }
     args.push(Arg::T(Tensor::new(&[1, row.len()], row.to_vec()).unwrap()));
@@ -72,67 +93,161 @@ fn client_rows(client_id: u64, n: usize, d_len: usize) -> Vec<Vec<f32>> {
     (0..n).map(|_| rng.normal_vec(d_len, 0.5)).collect()
 }
 
-/// N concurrent pipelined TCP clients; every batched response must be
-/// bitwise identical to the same row pushed through the batch-1 artifact
-/// alone. Exercises cross-connection coalescing, out-of-order completion
-/// and the id → logits pairing end to end.
+/// Six concurrent pipelined clients spread over three lanes (two models,
+/// different key epochs, served by one `Server`); every batched response
+/// must be bitwise identical to the same row pushed through the batch-1
+/// artifact with that lane's model. Exercises per-lane coalescing,
+/// epoch pinning, out-of-order completion and the id → logits pairing
+/// end to end.
 #[test]
-fn batched_tcp_serving_is_bitwise_identical_to_single() {
-    const CLIENTS: u64 = 6;
+fn multi_model_batched_serving_is_bitwise_identical_to_single() {
     const PER_CLIENT: usize = 4;
+    // (requested model, epoch) per client, two clients per lane
+    const LANES: [(&str, u32); 6] =
+        [("alpha", 0), ("alpha", 1), ("beta", 1), ("alpha", 0), ("alpha", 1), ("beta", 1)];
     let (server, engine) = start_server(8, 20);
     let addr = server.local_addr();
 
     let mut threads = Vec::new();
-    for c in 0..CLIENTS {
+    for (c, (model, epoch)) in LANES.iter().enumerate() {
+        let (model, epoch) = (*model, *epoch); // own the lane pin ('static)
         threads.push(std::thread::spawn(move || {
-            let mut client = ServingClient::connect(addr).unwrap();
-            assert_eq!(client.hello.kappa, KAPPA);
-            assert!(!client.hello.fingerprint.is_empty());
-            let rows = client_rows(c, PER_CLIENT, client.d_len());
-            // pipeline everything before reading: the server sees a burst
-            for (i, row) in rows.iter().enumerate() {
-                client.send_request(i as u64, row).unwrap();
-            }
-            let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
-            for _ in 0..PER_CLIENT {
-                let (id, logits) = client.recv_response().unwrap();
-                assert!(got.insert(id, logits).is_none(), "duplicate id {id}");
-            }
+            let mut client =
+                MoleClient::connect_with(addr, ClientConfig::pinned(model, epoch)).unwrap();
+            let info = client.server_info().unwrap().clone();
+            assert_eq!(info.model, model);
+            assert_eq!(info.epoch, epoch);
+            assert_eq!(info.kappa, KAPPA);
+            assert!(!info.fingerprint.is_empty());
+            let rows = client_rows(c as u64, PER_CLIENT, client.d_len());
+            // pipeline the whole batch: the server sees a burst
+            let logits = client.infer_batch(&rows).unwrap();
             client.finish().unwrap();
-            got
+            logits
         }));
     }
-    let per_client: Vec<HashMap<u64, Vec<f32>>> =
+    let per_client: Vec<Vec<Vec<f32>>> =
         threads.into_iter().map(|t| t.join().unwrap()).collect();
 
-    let d_len = engine.manifest().geometry("small").unwrap().d_len();
-    let (reference_model, _) = demo_model(engine.manifest(), KAPPA, SEED).unwrap();
+    // rebuild each lane's entry and compare bitwise
+    let m = manifest();
+    let d_len = m.geometry("small").unwrap().d_len();
+    let reference = entries(&m);
+    let lane_entry = |model: &str, epoch: u32| {
+        reference.iter().find(|e| e.name == model && e.epoch == epoch).unwrap()
+    };
     for (c, got) in per_client.iter().enumerate() {
+        let (model, epoch) = LANES[c];
+        let entry = lane_entry(model, epoch);
         let rows = client_rows(c as u64, PER_CLIENT, d_len);
         for (i, row) in rows.iter().enumerate() {
-            let want = single_row_logits(&engine, &reference_model, row);
-            let have = &got[&(i as u64)];
+            let want = single_row_logits(&engine, entry, row);
             let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
-            let have_bits: Vec<u32> = have.iter().map(|v| v.to_bits()).collect();
+            let have_bits: Vec<u32> = got[i].iter().map(|v| v.to_bits()).collect();
             assert_eq!(
                 want_bits, have_bits,
-                "client {c} row {i}: batched logits differ from single-row inference"
+                "client {c} ({model}@{epoch}) row {i}: batched logits differ from \
+                 single-row inference"
             );
         }
     }
 
-    let m = server.metrics();
-    let total = (CLIENTS as usize * PER_CLIENT) as u64;
-    assert_eq!(m.responses.get(), total);
-    assert_eq!(m.connections.get(), CLIENTS);
-    assert_eq!(m.faults.get(), 0);
-    assert!(m.bytes_in.get() > 0 && m.bytes_out.get() > 0);
-    assert!(
-        m.batches.get() < total,
-        "pipelined burst produced no coalescing at all (batches={})",
-        m.batches.get()
+    // different lanes genuinely differ (different key epochs ⇒ different
+    // C^ac): a row answered by alpha@0 and alpha@1 must not agree
+    let row = &client_rows(0, 1, d_len)[0];
+    assert_ne!(
+        single_row_logits(&engine, lane_entry("alpha", 0), row),
+        single_row_logits(&engine, lane_entry("alpha", 1), row),
+        "epoch rotation did not change the served model"
     );
+
+    let sm = server.metrics();
+    let total = (LANES.len() * PER_CLIENT) as u64;
+    assert_eq!(sm.responses.get(), total);
+    assert_eq!(sm.connections.get(), LANES.len() as u64);
+    assert_eq!(sm.faults.get(), 0);
+    assert!(sm.bytes_in.get() > 0 && sm.bytes_out.get() > 0);
+    // per-lane traffic accounting + per-lane coalescing: each lane saw
+    // its 8 rows in fewer than 8 batches
+    for lane in server.registry().lanes() {
+        let lm = &lane.handle().metrics;
+        assert_eq!(lm.responses.get(), 2 * PER_CLIENT as u64, "{}", lane.name());
+        assert!(
+            lm.batches.get() < 2 * PER_CLIENT as u64,
+            "lane {}@{} produced no coalescing at all (batches={})",
+            lane.name(),
+            lane.epoch(),
+            lm.batches.get()
+        );
+    }
+    server.stop();
+}
+
+/// One connection can mix traffic for several lanes: explicit
+/// `send_request_to` routing answers from the addressed model/epoch.
+#[test]
+fn per_request_routing_crosses_lanes() {
+    let (server, engine) = start_server(8, 2);
+    let mut client = MoleClient::connect(server.local_addr()).unwrap();
+    // default session lane = first registered model at latest epoch
+    let info = client.server_info().unwrap().clone();
+    assert_eq!((info.model.as_str(), info.epoch), ("alpha", 1));
+
+    let m = manifest();
+    let reference = entries(&m);
+    let row = client_rows(7, 1, client.d_len()).remove(0);
+    client.send_request_to(1, "alpha", 0, &row).unwrap();
+    client.send_request_to(2, "beta", EPOCH_LATEST, &row).unwrap();
+    client.send_request(3, &row).unwrap(); // session lane: alpha@1
+    let mut got = std::collections::HashMap::new();
+    for _ in 0..3 {
+        let (id, logits) = client.recv_response().unwrap();
+        got.insert(id, logits);
+    }
+    client.finish().unwrap();
+
+    let expect = |name: &str, epoch: u32| {
+        let e = reference.iter().find(|e| e.name == name && e.epoch == epoch).unwrap();
+        single_row_logits(&engine, e, &row)
+    };
+    assert_eq!(got[&1], expect("alpha", 0));
+    assert_eq!(got[&2], expect("beta", 1));
+    assert_eq!(got[&3], expect("alpha", 1));
+    server.stop();
+}
+
+/// Unknown models/epochs fault the handshake (typed, not a hang or a
+/// decode error), and a v1-style `Hello` gets the version-mismatch
+/// `Fault` required by the negotiation contract.
+#[test]
+fn unknown_models_and_old_peers_get_typed_faults() {
+    let (server, _engine) = start_server(8, 2);
+    let addr = server.local_addr();
+
+    // unknown model name
+    let err = MoleClient::connect_with(addr, ClientConfig::model("nope")).unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+    // known model, unknown epoch
+    let err = MoleClient::connect_with(addr, ClientConfig::pinned("alpha", 9)).unwrap_err();
+    assert!(err.to_string().contains("no epoch 9"), "{err}");
+
+    // legacy v1 Hello (starts with α=3 where the version belongs): the
+    // server must answer with a Fault naming the mismatch
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    sock.write_all(&mole::testkit::net::legacy_v1_hello_frame()).unwrap();
+    sock.flush().unwrap();
+    // the reply is a Fault frame: magic "ML", tag 9, then the message
+    let mut head = [0u8; 7];
+    sock.read_exact(&mut head).unwrap();
+    assert_eq!(&head[0..2], b"ML");
+    assert_eq!(head[2], 9, "expected a Fault frame");
+    let len = u32::from_le_bytes(head[3..7].try_into().unwrap()) as usize;
+    let mut body = vec![0u8; len];
+    sock.read_exact(&mut body).unwrap();
+    let msg = String::from_utf8_lossy(&body[4..]); // skip the str length
+    assert!(msg.contains("version mismatch"), "{msg}");
+    assert!(msg.contains("v3") && msg.contains("v2"), "{msg}");
+
     server.stop();
 }
 
@@ -144,45 +259,50 @@ fn bad_frames_fault_the_session_not_the_server() {
     let (server, _engine) = start_server(8, 2);
     let addr = server.local_addr();
 
-    // session 1: garbage after the handshake
+    // session 1: garbage instead of a Hello
     {
         let mut sock = std::net::TcpStream::connect(addr).unwrap();
-        match read_message(&mut sock).unwrap() {
-            Message::Hello { .. } => {}
-            other => panic!("expected Hello, got {other:?}"),
-        }
-        use std::io::Write;
         sock.write_all(b"XXXXXXXXXXXX").unwrap();
         sock.flush().unwrap();
-        // server answers Fault (then EndOfData) and ends the session
-        match read_message(&mut sock).unwrap() {
-            Message::Fault { msg } => assert!(msg.contains("magic"), "{msg}"),
-            other => panic!("expected Fault, got {other:?}"),
-        }
+        // server answers Fault and ends the session; read the raw frame
+        let mut head = [0u8; 7];
+        sock.read_exact(&mut head).unwrap();
+        assert_eq!(&head[0..2], b"ML");
+        assert_eq!(head[2], 9, "expected a Fault frame");
+        let len = u32::from_le_bytes(head[3..7].try_into().unwrap()) as usize;
+        let mut body = vec![0u8; len];
+        sock.read_exact(&mut body).unwrap();
+        assert!(String::from_utf8_lossy(&body).contains("magic"));
     }
 
-    // session 2: wrong row length faults the request, not the session
+    // session 2: wrong row length faults the request, not the session;
+    // a bad per-request model faults that request only
     {
-        let mut client = ServingClient::connect(addr).unwrap();
+        let mut client = MoleClient::connect(addr).unwrap();
         let d = client.d_len();
         client.send_request(1, &[0.0; 3]).unwrap();
         let err = client.recv_response().unwrap_err();
         assert!(err.to_string().contains("request 1"), "{err}");
         assert!(err.to_string().contains("infer row len 3"), "{err}");
+        client.send_request_to(2, "ghost", EPOCH_LATEST, &vec![0.1; d]).unwrap();
+        let err = client.recv_response().unwrap_err();
+        assert!(err.to_string().contains("request 2"), "{err}");
+        assert!(err.to_string().contains("unknown model"), "{err}");
         // same session still serves a correct request
-        client.send_request(2, &vec![0.1; d]).unwrap();
+        client.send_request(3, &vec![0.1; d]).unwrap();
         let (id, logits) = client.recv_response().unwrap();
-        assert_eq!(id, 2);
+        assert_eq!(id, 3);
         assert!(!logits.is_empty());
         client.finish().unwrap();
     }
 
-    assert!(server.metrics().faults.get() >= 2);
+    assert!(server.metrics().faults.get() >= 3);
     server.stop();
 }
 
-/// The loadgen driver against a live server: all requests answered, no
-/// errors, latency recorded per request, clean shutdown counts intact.
+/// The loadgen driver against a live multi-model server: all requests
+/// answered from the pinned lane, no errors, latency recorded per
+/// request, clean shutdown counts intact.
 #[test]
 fn loadgen_drives_the_server_cleanly() {
     let (server, _engine) = start_server(32, 4);
@@ -192,6 +312,8 @@ fn loadgen_drives_the_server_cleanly() {
         requests_per_conn: 16,
         pipeline: 4,
         seed: 9,
+        model: "beta".to_string(),
+        epoch: 1,
     })
     .unwrap();
     assert_eq!(report.ok, 64);
@@ -202,6 +324,24 @@ fn loadgen_drives_the_server_cleanly() {
     let line = report.report();
     assert!(line.contains("ok=64") && line.contains("errors=0"), "{line}");
     assert_eq!(server.metrics().responses.get(), 64);
+    // all traffic landed on the pinned lane
+    let beta = server.registry().resolve("beta", 1).unwrap();
+    assert_eq!(beta.handle().metrics.responses.get(), 64);
+    let alpha = server.registry().resolve("alpha", EPOCH_LATEST).unwrap();
+    assert_eq!(alpha.handle().metrics.responses.get(), 0);
+    // pinning an epoch the registry does not serve fails every request
+    let report = run(&LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 1,
+        requests_per_conn: 4,
+        pipeline: 1,
+        seed: 9,
+        model: "beta".to_string(),
+        epoch: 0,
+    })
+    .unwrap();
+    assert_eq!(report.ok, 0);
+    assert!(report.errors > 0);
     server.stop();
 }
 
@@ -211,27 +351,14 @@ fn loadgen_drives_the_server_cleanly() {
 #[test]
 fn end_of_data_flushes_in_flight_responses() {
     let (server, _engine) = start_server(8, 10);
-    let mut sock = std::net::TcpStream::connect(server.local_addr()).unwrap();
-    let hello = read_message(&mut sock).unwrap();
-    let d = match hello {
-        Message::Hello { geometry, .. } => geometry.d_len(),
-        other => panic!("expected Hello, got {other:?}"),
-    };
+    let mut client = MoleClient::connect(server.local_addr()).unwrap();
+    let d = client.d_len();
     let mut rng = Rng::new(77);
     for id in 0..5u64 {
-        let row = Tensor::new(&[d], rng.normal_vec(d, 0.5)).unwrap();
-        write_message(&mut sock, &Message::InferRequest { id, row }).unwrap();
+        client.send_request(id, &rng.normal_vec(d, 0.5)).unwrap();
     }
     // close immediately — responses are still pending server-side
-    write_message(&mut sock, &Message::EndOfData).unwrap();
-    let mut seen = 0;
-    loop {
-        match read_message(&mut sock).unwrap() {
-            Message::InferResponse { .. } => seen += 1,
-            Message::EndOfData => break,
-            other => panic!("unexpected {other:?}"),
-        }
-    }
-    assert_eq!(seen, 5, "EndOfData must not race ahead of in-flight responses");
+    let drained = client.finish().unwrap();
+    assert_eq!(drained, 5, "EndOfData must not race ahead of in-flight responses");
     server.stop();
 }
