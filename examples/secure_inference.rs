@@ -54,7 +54,7 @@ fn main() -> mole::Result<()> {
     }
 
     // --- register the trained model and bind the TCP server ---------------
-    let mut registry = ModelRegistry::new(
+    let registry = ModelRegistry::new(
         SharedEngine::new(manifest),
         BatcherConfig {
             max_batch: 32,

@@ -116,7 +116,7 @@ fn tcp_run(
 ) -> (f64, u64, u64, f64) {
     let manifest = Manifest::load(Path::new("artifacts")).unwrap();
     let engine = SharedEngine::new(manifest.clone());
-    let mut registry = ModelRegistry::new(
+    let registry = ModelRegistry::new(
         engine,
         BatcherConfig {
             max_batch,

@@ -147,6 +147,9 @@ pub struct MoleConfig {
     pub adaptive_batching: bool,
     /// Serving: session worker threads (max concurrent TCP sessions).
     pub serve_workers: usize,
+    /// Serving: accept loopback `Admin*` frames (live register / drain /
+    /// retire / status). Off, the registry is fixed at startup.
+    pub admin_enabled: bool,
     /// Training: steps / learning rate.
     pub train_steps: usize,
     pub lr: f64,
@@ -178,6 +181,7 @@ impl Default for MoleConfig {
             min_batch_timeout_us: 200,
             adaptive_batching: true,
             serve_workers: 8,
+            admin_enabled: true,
             train_steps: 300,
             lr: 0.05,
             data_seed: 7,
@@ -240,6 +244,7 @@ impl MoleConfig {
             )?,
             adaptive_batching: raw.get_bool("serving", "adaptive", d.adaptive_batching)?,
             serve_workers: raw.get_usize("serving", "workers", d.serve_workers)?,
+            admin_enabled: raw.get_bool("serving", "admin", d.admin_enabled)?,
             train_steps: raw.get_usize("train", "steps", d.train_steps)?,
             lr: raw.get_f64("train", "lr", d.lr)?,
             data_seed: raw.get_u64("data", "seed", d.data_seed)?,
@@ -294,6 +299,7 @@ batch_timeout_ms = 5
 min_timeout_us = 150
 adaptive = false
 workers = 4
+admin = false
 
 [train]
 steps = 10
@@ -320,6 +326,9 @@ lr = 0.1
         assert_eq!(cfg.min_batch_timeout_us, 150);
         assert!(!cfg.adaptive_batching);
         assert_eq!(cfg.serve_workers, 4);
+        assert!(!cfg.admin_enabled);
+        // admin defaults on when the key is absent
+        assert!(MoleConfig::default().admin_enabled);
         // default kept where unspecified
         assert_eq!(cfg.addr, "127.0.0.1:7433");
         assert_eq!(cfg.geometry, Geometry::SMALL);

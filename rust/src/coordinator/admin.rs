@@ -1,0 +1,295 @@
+//! The live-registry admin surface (`mole admin`): runtime lane
+//! registration, epoch drain, retire, and status over the same wire
+//! protocol as serving traffic.
+//!
+//! An admin session opens with an `Admin*` frame instead of `Hello`; the
+//! server accepts it **only from loopback peers** (and only when
+//! [`super::server::ServeConfig::admin_enabled`] is set), so the control
+//! plane rides the existing listener without exposing lifecycle verbs to
+//! remote clients. Key material never crosses the connection:
+//! `AdminRegister` names a vault file on the **server's** filesystem
+//! (the `mole keygen` / `mole rotate-key` output), which the server
+//! loads itself — completing the vault → live rotate → register path.
+//!
+//! The rollover runbook this module exists for:
+//!
+//! 1. `mole rotate-key --vault provider.key --out provider.v1.key`
+//! 2. `mole admin register --model alpha --vault provider.v1.key`
+//!    (new epoch serves next to the old one)
+//! 3. `mole admin drain --model alpha --epoch 0` — new traffic is
+//!    refused with the typed `Fault::Draining` naming the successor;
+//!    [`super::MoleClient`] re-resolves transparently
+//! 4. `mole admin retire --model alpha --epoch 0` — refused until the
+//!    old lane's batcher is empty, then the lane worker is torn down
+
+use super::protocol::{
+    read_message, write_message, Fault, Message, FAULT_SESSION,
+};
+use super::registry::ModelRegistry;
+use crate::keys::KeyBundle;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Execute one admin request against the registry, returning the
+/// operator-readable success detail.
+fn apply(registry: &Arc<ModelRegistry>, msg: &Message) -> Result<String> {
+    match msg {
+        Message::AdminRegister { model, vault_path, kappa, seed, trunk_seed } => {
+            let manifest = registry.engine().manifest().clone();
+            let keys = if vault_path.is_empty() {
+                let g = manifest.geometry("small")?;
+                KeyBundle::generate(g, *kappa as usize, *seed)?
+            } else {
+                // one uniform failure message on the wire: the reply must
+                // not let a caller distinguish missing vs malformed server
+                // files (the loopback gate is access control, not an
+                // oracle) — but the real cause goes to the server log so
+                // the operator can diagnose a failed register
+                KeyBundle::load(Path::new(vault_path)).map_err(|e| {
+                    crate::logging::warn(&format!(
+                        "admin register: vault {vault_path:?} load failed: {e}"
+                    ));
+                    Error::Config(format!(
+                        "vault {vault_path:?} could not be loaded on the server"
+                    ))
+                })?
+            };
+            let entry = super::registry::demo_entry_from_keys(
+                &manifest, model, &keys, *trunk_seed,
+            )?;
+            let label = format!("{}@{}", entry.name, entry.epoch);
+            registry.register(entry)?;
+            Ok(format!("registered {label} (fingerprint {})", keys.fingerprint()))
+        }
+        Message::AdminDrain { model, epoch } => {
+            let successor = registry.drain(model, *epoch)?;
+            Ok(format!(
+                "draining {model}@{epoch}; successor {}",
+                if successor == super::protocol::EPOCH_LATEST {
+                    "latest".to_string()
+                } else {
+                    successor.to_string()
+                }
+            ))
+        }
+        Message::AdminRetire { model, epoch } => {
+            registry.retire(model, *epoch)?;
+            Ok(format!("retired {model}@{epoch}"))
+        }
+        Message::AdminStatus => Ok(registry.status_report()),
+        other => Err(Error::Protocol(format!(
+            "admin session got non-admin frame {other:?}"
+        ))),
+    }
+}
+
+/// Server side of an admin session. `first` is the frame that identified
+/// the session as admin (already read by the serving handshake); further
+/// admin frames are processed until `EndOfData` (answered in kind) or
+/// EOF. Failures answer a typed `Fault` but keep the session alive, so
+/// one connection can issue several verbs.
+pub(crate) fn run_admin_session<S: Read + Write>(
+    mut stream: S,
+    first: Message,
+    registry: &Arc<ModelRegistry>,
+) -> Result<()> {
+    let mut pending = Some(first);
+    loop {
+        let msg = match pending.take() {
+            Some(m) => m,
+            None => match read_message(&mut stream) {
+                Ok(Message::EndOfData) => {
+                    let _ = write_message(&mut stream, &Message::EndOfData);
+                    return Ok(());
+                }
+                Ok(m) => m,
+                Err(Error::Io(e))
+                    if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+                {
+                    return Ok(())
+                }
+                Err(e) => return Err(e),
+            },
+        };
+        let reply = match apply(registry, &msg) {
+            Ok(detail) => {
+                crate::logging::info(&format!("admin: {}", detail.lines().next().unwrap_or("")));
+                Message::AdminOk { detail }
+            }
+            Err(e) => Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
+        };
+        write_message(&mut stream, &reply)?;
+    }
+}
+
+/// Typed client for the admin surface — what `mole admin` and the
+/// lifecycle tests drive. Generic over the transport like
+/// [`super::MoleClient`].
+pub struct AdminClient<S: Read + Write = TcpStream> {
+    stream: S,
+}
+
+impl AdminClient<TcpStream> {
+    /// Connect to a serving endpoint's admin surface (must be loopback —
+    /// the server refuses admin frames from anywhere else).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        Ok(Self { stream: sock })
+    }
+}
+
+impl<S: Read + Write> AdminClient<S> {
+    /// Run the admin protocol over an arbitrary transport.
+    pub fn over(stream: S) -> Self {
+        Self { stream }
+    }
+
+    fn call(&mut self, msg: &Message) -> Result<String> {
+        write_message(&mut self.stream, msg)?;
+        match read_message(&mut self.stream)? {
+            Message::AdminOk { detail } => Ok(detail),
+            Message::Fault { fault, .. } => Err(fault.into_error()),
+            other => Err(Error::Protocol(format!(
+                "expected AdminOk or Fault, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Register `(model, epoch)` live. With a non-empty `vault_path` the
+    /// server loads that vault from **its own** filesystem (the epoch
+    /// comes from the vault); otherwise it generates a root bundle from
+    /// `(kappa, seed)`. `trunk_seed` must match the model's other epochs
+    /// so only the first layer re-morphs.
+    pub fn register(
+        &mut self,
+        model: &str,
+        vault_path: &str,
+        kappa: usize,
+        seed: u64,
+        trunk_seed: u64,
+    ) -> Result<String> {
+        self.call(&Message::AdminRegister {
+            model: model.to_string(),
+            vault_path: vault_path.to_string(),
+            kappa: kappa as u32,
+            seed,
+            trunk_seed,
+        })
+    }
+
+    /// Drain `(model, epoch)`: stop new work, flush in-flight rows.
+    pub fn drain(&mut self, model: &str, epoch: u32) -> Result<String> {
+        self.call(&Message::AdminDrain { model: model.to_string(), epoch })
+    }
+
+    /// Retire a drained `(model, epoch)` lane (refused while non-empty).
+    pub fn retire(&mut self, model: &str, epoch: u32) -> Result<String> {
+        self.call(&Message::AdminRetire { model: model.to_string(), epoch })
+    }
+
+    /// Lane-per-line status report.
+    pub fn status(&mut self) -> Result<String> {
+        self.call(&Message::AdminStatus)
+    }
+
+    /// Graceful close (`EndOfData` both ways; EOF tolerated).
+    pub fn finish(mut self) -> Result<()> {
+        write_message(&mut self.stream, &Message::EndOfData)?;
+        match read_message(&mut self.stream) {
+            Ok(Message::EndOfData) => Ok(()),
+            Ok(other) => {
+                Err(Error::Protocol(format!("at admin session end, got {other:?}")))
+            }
+            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batcher::BatcherConfig;
+    use super::super::protocol::EPOCH_LATEST;
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::runtime::SharedEngine;
+    use crate::testkit::net::pipe_pair;
+    use crate::Geometry;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn registry() -> Arc<ModelRegistry> {
+        let manifest =
+            Manifest::load(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+                .unwrap();
+        Arc::new(ModelRegistry::new(
+            SharedEngine::new(manifest),
+            BatcherConfig {
+                max_batch: 8,
+                timeout: Duration::from_millis(1),
+                ..BatcherConfig::default()
+            },
+        ))
+    }
+
+    /// The full verb set over an in-memory pipe: register (generated and
+    /// vault-loaded), status, drain, retire — with typed faults for the
+    /// invalid transitions in between.
+    #[test]
+    fn admin_session_full_lifecycle_over_pipe() {
+        let reg = registry();
+        let (server_side, client_side) = pipe_pair();
+        let server_reg = reg.clone();
+        let server = std::thread::spawn(move || {
+            // the handshake normally reads the first frame; emulate it
+            let mut stream = server_side;
+            let first = read_message(&mut stream).unwrap();
+            run_admin_session(stream, first, &server_reg)
+        });
+
+        let mut admin = AdminClient::over(client_side);
+        // root epoch from (kappa, seed)
+        let detail = admin.register("alpha", "", 16, 11, 11).unwrap();
+        assert!(detail.contains("registered alpha@0"), "{detail}");
+        // rotated epoch from a vault file on the "server" filesystem
+        let vault = std::env::temp_dir().join("mole_admin_test_vault.key");
+        let rotated = crate::keys::KeyBundle::generate(Geometry::SMALL, 16, 11)
+            .unwrap()
+            .rotate(12)
+            .unwrap();
+        rotated.save(&vault).unwrap();
+        let detail =
+            admin.register("alpha", vault.to_str().unwrap(), 16, 11, 11).unwrap();
+        assert!(detail.contains("registered alpha@1"), "{detail}");
+        assert!(detail.contains(&rotated.fingerprint()), "{detail}");
+        std::fs::remove_file(&vault).ok();
+        // duplicate registration faults typed but keeps the session alive
+        let err = admin.register("alpha", "", 16, 11, 11).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+        // retire before drain refused
+        let err = admin.retire("alpha", 0).unwrap_err();
+        assert!(err.to_string().contains("drain"), "{err}");
+        // drain names the successor
+        let detail = admin.drain("alpha", 0).unwrap();
+        assert!(detail.contains("successor 1"), "{detail}");
+        // draining surfaces in status; retire tombstones the lane
+        let status = admin.status().unwrap();
+        assert!(status.contains("alpha@0 state=draining successor=1"), "{status}");
+        assert!(status.contains("alpha@1 state=active"), "{status}");
+        let detail = admin.retire("alpha", 0).unwrap();
+        assert!(detail.contains("retired alpha@0"), "{detail}");
+        admin.finish().unwrap();
+        server.join().unwrap().unwrap();
+
+        // the registry saw it all: epoch 1 serves, epoch 0 is typed-gone
+        assert_eq!(reg.resolve("alpha", EPOCH_LATEST).unwrap().epoch(), 1);
+        assert!(matches!(
+            reg.resolve("alpha", 0),
+            Err(Error::Retired { successor: 1, .. })
+        ));
+    }
+}

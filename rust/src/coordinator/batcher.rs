@@ -32,8 +32,10 @@ use crate::metrics::ServingMetrics;
 use crate::runtime::{Arg, SharedEngine};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Batcher tuning.
@@ -119,19 +121,78 @@ pub struct Completion {
     pub result: Result<Vec<f32>>,
 }
 
-type Reply = Box<dyn FnOnce(Result<Vec<f32>>) + Send>;
+type ReplyFn = Box<dyn FnOnce(Result<Vec<f32>>) + Send>;
+
+/// A reply that ALWAYS fires: invoked normally by the worker, or — if
+/// the request is destroyed unserved (a racer's enqueue landing as the
+/// shutdown teardown drops the channel) — from `Drop` with a typed
+/// error. An accepted request therefore never goes silent: the client
+/// gets logits or a `Fault`, never a hang.
+struct Reply(Option<ReplyFn>);
+
+impl Reply {
+    fn call(mut self, r: Result<Vec<f32>>) {
+        if let Some(f) = self.0.take() {
+            f(r);
+        }
+    }
+
+    /// Disarm without firing — for paths where the caller reports the
+    /// failure itself (a failed send already returns `Err`; firing the
+    /// dropped reply too would answer the same request twice).
+    fn defuse(mut self) {
+        self.0.take();
+    }
+}
+
+impl Drop for Reply {
+    fn drop(&mut self) {
+        if let Some(f) = self.0.take() {
+            f(Err(Error::Protocol(
+                "serving lane shut down before this request was scheduled".into(),
+            )));
+        }
+    }
+}
+
+/// RAII in-flight marker: decrements the handle's counter when its
+/// request is consumed — whether the reply ran (success or error) or the
+/// request was dropped unserved (worker gone). Retire-time emptiness
+/// checks depend on this never leaking.
+struct InFlightGuard(Arc<AtomicU64>);
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 struct Request {
     row: Vec<f32>,
     enqueued: Instant,
     reply: Reply,
+    _guard: InFlightGuard,
+}
+
+/// What travels to the worker: a request, or the shutdown marker sent by
+/// [`ServingHandle::shutdown`]. Channel FIFO guarantees every request
+/// enqueued before the marker is executed before the worker exits — the
+/// tail is flushed, never dropped.
+enum Job {
+    Req(Request),
+    Shutdown,
 }
 
 /// Client handle to a running serving worker.
 #[derive(Clone)]
 pub struct ServingHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<Job>,
     pub metrics: Arc<ServingMetrics>,
+    /// Set by [`ServingHandle::shutdown`]; refuses new enqueues.
+    closed: Arc<AtomicBool>,
+    /// Requests enqueued whose replies have not yet been delivered.
+    in_flight: Arc<AtomicU64>,
+    worker: Arc<Mutex<Option<JoinHandle<()>>>>,
     d_len: usize,
     num_classes: usize,
 }
@@ -178,7 +239,7 @@ impl ServingHandle {
         }
         let num_classes = manifest.num_classes;
         let metrics = Arc::new(ServingMetrics::default());
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::channel::<Job>();
         let worker_metrics = metrics.clone();
         let d_len = g.d_len();
         // Precompile / validate all bucket executables off the request path.
@@ -187,11 +248,44 @@ impl ServingHandle {
                 engine.prepare(&format!("infer_aug_small_b{b}"))?;
             }
         }
-        std::thread::Builder::new()
+        let worker = std::thread::Builder::new()
             .name(format!("mole-lane-{label}"))
             .spawn(move || worker_loop(engine, model, cfg, sizes, rx, worker_metrics, d_len))
             .map_err(Error::Io)?;
-        Ok(Self { tx, metrics, d_len, num_classes })
+        Ok(Self {
+            tx,
+            metrics,
+            closed: Arc::new(AtomicBool::new(false)),
+            in_flight: Arc::new(AtomicU64::new(0)),
+            worker: Arc::new(Mutex::new(Some(worker))),
+            d_len,
+            num_classes,
+        })
+    }
+
+    /// Requests accepted but not yet answered (queued or mid-batch).
+    /// Zero is the registry's retire precondition: a lane may only be
+    /// torn down once its batcher queue is empty.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// True once [`ServingHandle::shutdown`] has run; enqueues are
+    /// refused from that point on.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Graceful lane teardown: stop accepting new requests, let the
+    /// worker flush everything already enqueued (channel FIFO — the
+    /// shutdown marker sorts after the tail), and join it. Idempotent;
+    /// replies for the flushed tail are delivered normally.
+    pub fn shutdown(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
     }
 
     /// Blocking inference on one morphed row. Thread-safe; clones of the
@@ -244,7 +338,7 @@ impl ServingHandle {
         )
     }
 
-    fn enqueue(&self, row: &[f32], enqueued: Instant, reply: Reply) -> Result<()> {
+    fn enqueue(&self, row: &[f32], enqueued: Instant, reply: ReplyFn) -> Result<()> {
         if row.len() != self.d_len {
             return Err(Error::Shape(format!(
                 "infer row len {} != {}",
@@ -252,10 +346,30 @@ impl ServingHandle {
                 self.d_len
             )));
         }
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(Error::Protocol("serving lane is shut down".into()));
+        }
         self.metrics.requests.inc();
-        self.tx
-            .send(Request { row: row.to_vec(), enqueued, reply })
-            .map_err(|_| Error::Protocol("serving worker gone".into()))
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let guard = InFlightGuard(self.in_flight.clone());
+        let job = Job::Req(Request {
+            row: row.to_vec(),
+            enqueued,
+            reply: Reply(Some(reply)),
+            _guard: guard,
+        });
+        match self.tx.send(job) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(job)) => {
+                // this Err return IS the answer; defuse the reply so the
+                // request is not also answered from Drop (double fault),
+                // while the guard still un-counts it
+                if let Job::Req(req) = job {
+                    req.reply.defuse();
+                }
+                Err(Error::Protocol("serving worker gone".into()))
+            }
+        }
     }
 
     pub fn num_classes(&self) -> usize {
@@ -273,7 +387,7 @@ fn worker_loop(
     model: ServingModel,
     cfg: BatcherConfig,
     sizes: Vec<usize>,
-    rx: mpsc::Receiver<Request>,
+    rx: mpsc::Receiver<Job>,
     metrics: Arc<ServingMetrics>,
     d_len: usize,
 ) {
@@ -289,23 +403,51 @@ fn worker_loop(
         args.push(Arg::T(p.clone()));
     }
     args.push(Arg::T(Tensor::zeros(&[0]))); // rows slot, replaced per batch
+    // Once the shutdown marker is seen, keep flushing whatever is still
+    // queued (without holding new batches open for the window) and exit
+    // when the queue is empty — the tail is served, never dropped.
+    let mut shutting_down = false;
     loop {
         // block for the first request of the batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all handles dropped
+        let first = if shutting_down {
+            match rx.try_recv() {
+                Ok(Job::Req(r)) => r,
+                Ok(Job::Shutdown) => continue,
+                Err(_) => return, // tail flushed
+            }
+        } else {
+            match rx.recv() {
+                Ok(Job::Req(r)) => r,
+                Ok(Job::Shutdown) => {
+                    shutting_down = true;
+                    continue;
+                }
+                Err(_) => return, // all handles dropped
+            }
         };
         let window = if cfg.adaptive { adaptive.window() } else { cfg.timeout };
         metrics.window_us.set(window.as_micros() as u64);
         let deadline = Instant::now() + window;
         let mut pending = vec![first];
         while pending.len() < cfg.max_batch {
+            if shutting_down {
+                // drain without waiting: the lane is closing
+                match rx.try_recv() {
+                    Ok(Job::Req(r)) => pending.push(r),
+                    Ok(Job::Shutdown) | Err(_) => break,
+                }
+                continue;
+            }
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
+                Ok(Job::Req(r)) => pending.push(r),
+                Ok(Job::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -340,13 +482,13 @@ fn worker_loop(
                 for (i, r) in pending.into_iter().enumerate() {
                     let v = logits.data()[i * nc..(i + 1) * nc].to_vec();
                     metrics.total_latency.record(r.enqueued.elapsed());
-                    (r.reply)(Ok(v));
+                    r.reply.call(Ok(v));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
                 for r in pending {
-                    (r.reply)(Err(Error::Runtime(msg.clone())));
+                    r.reply.call(Err(Error::Runtime(msg.clone())));
                 }
             }
         }
@@ -523,6 +665,111 @@ mod tests {
             w.on_batch(1, 2);
         }
         assert_eq!(w.window(), Duration::from_micros(250));
+    }
+
+    /// Satellite: window boundaries. The window must clamp exactly at
+    /// `min_timeout` and `timeout`, and no halve/double sequence —
+    /// including adversarial alternation — may push it outside
+    /// `[min_timeout, timeout]` or strand it where it cannot recover.
+    #[test]
+    fn adaptive_window_boundary_clamps() {
+        let cfg = BatcherConfig {
+            max_batch: 32,
+            timeout: Duration::from_millis(3),
+            min_timeout: Duration::from_micros(300),
+            adaptive: true,
+        };
+        // already at the ceiling: size flushes hold it there exactly
+        let mut w = AdaptiveWindow::new(&cfg);
+        for _ in 0..100 {
+            w.on_batch(32, 32);
+            assert_eq!(w.window(), Duration::from_millis(3));
+        }
+        // decay to the floor, then keep hammering: clamps exactly at min
+        for _ in 0..100 {
+            w.on_batch(1, 32);
+            assert!(w.window() >= Duration::from_micros(300));
+        }
+        assert_eq!(w.window(), Duration::from_micros(300));
+        // one doubling from the floor recovers (not stranded below a
+        // power-of-two boundary)
+        w.on_batch(32, 32);
+        assert_eq!(w.window(), Duration::from_micros(600));
+
+        // adversarial alternation cannot oscillate out of range
+        let mut w = AdaptiveWindow::new(&cfg);
+        for i in 0..1000 {
+            w.on_batch(if i % 2 == 0 { 32 } else { 1 }, 32);
+            assert!(
+                w.window() >= Duration::from_micros(300)
+                    && w.window() <= Duration::from_millis(3),
+                "window {:?} escaped [min, max] at step {i}",
+                w.window()
+            );
+        }
+
+        // property: any seeded fill sequence stays in range
+        crate::testkit::forall(
+            0xADA,
+            32,
+            |rng| (0..64).map(|_| rng.below(33)).collect::<Vec<_>>(),
+            |fills| {
+                let mut w = AdaptiveWindow::new(&cfg);
+                for &f in fills {
+                    w.on_batch(f, 32);
+                    if w.window() < cfg.min_timeout.min(cfg.timeout)
+                        || w.window() > cfg.timeout
+                    {
+                        return Err(format!("window {:?} out of range", w.window()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Graceful shutdown flushes the tail: requests enqueued before
+    /// `shutdown()` are all answered (channel FIFO sorts them before the
+    /// marker), the in-flight gauge returns to zero, and later enqueues
+    /// are refused typed.
+    #[test]
+    fn shutdown_flushes_tail_then_refuses() {
+        // a long hold window would park the tail; shutdown must override
+        // it and flush immediately. `handle()` rebuilds the same seeded
+        // model every call, so a fast twin supplies reference logits.
+        let h = handle(8, 2_000);
+        let reference = handle(8, 1);
+        let mut rng = Rng::new(13);
+        let rows: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(768, 1.0)).collect();
+        let expect: Vec<Vec<f32>> =
+            rows.iter().map(|r| reference.infer(r).unwrap()).collect();
+        let (done_tx, done_rx) = mpsc::channel();
+        for (i, row) in rows.iter().enumerate() {
+            h.submit(i as u64, row, done_tx.clone()).unwrap();
+        }
+        drop(done_tx);
+        assert!(h.in_flight() > 0, "tail not registered as in flight");
+        let t0 = Instant::now();
+        h.shutdown();
+        // every pre-shutdown request answered, correctly paired, fast
+        let mut got = vec![None; rows.len()];
+        for c in done_rx {
+            got[c.id as usize] = Some(c.result.unwrap());
+        }
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(g.as_deref(), Some(expect[i].as_slice()), "id {i} lost or wrong");
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(1_500),
+            "shutdown waited out the hold window instead of flushing"
+        );
+        assert_eq!(h.in_flight(), 0);
+        assert!(h.is_closed());
+        // post-shutdown traffic is refused without panicking
+        let err = h.infer(&rows[0]).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        // idempotent
+        h.shutdown();
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! types; raw [`Message`] construction stays inside `protocol.rs`,
 //! `client.rs` and `server.rs`.
 //!
-//! ## Serving flow (protocol v2: client speaks first)
+//! ## Serving flow (protocol v4: client speaks first)
 //!
 //! ```text
 //! client  Hello { version, model, epoch }          →  server
@@ -32,7 +32,8 @@
 //! connection reset.
 
 use super::protocol::{
-    read_message, write_message, Message, EPOCH_LATEST, PROTOCOL_VERSION,
+    read_message, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
+    PROTOCOL_VERSION,
 };
 use super::SessionInfo;
 use crate::tensor::Tensor;
@@ -125,12 +126,33 @@ enum Peer {
     Provider(SessionInfo),
 }
 
+/// How many drain/retire redirects a request (or handshake) follows
+/// before giving up — bounds pathological rotate-chasing, not normal
+/// rollover (which needs exactly one hop).
+const MAX_DRAIN_HOPS: u32 = 4;
+
+/// One served outcome off the wire: logits, or the typed fault the
+/// server answered instead.
+type Served = std::result::Result<Vec<f32>, Fault>;
+
 /// The typed MoLe client. Generic over the transport so tests can run it
 /// over in-memory pipes; `S = TcpStream` in deployments.
+///
+/// **Epoch re-resolution is transparent**: when the server answers a
+/// request with the typed `Fault::Draining` / `Fault::Retired` (key
+/// rollover in progress), [`MoleClient::infer`] and
+/// [`MoleClient::infer_batch`] re-send the row pinned to the successor
+/// epoch, and the client remembers the redirect so later
+/// session-default requests route straight to the new lane.
+/// [`MoleClient::drain_redirects`] counts the hops.
 pub struct MoleClient<S: Read + Write = TcpStream> {
     stream: CountingStream<S>,
     peer: Peer,
     next_id: u64,
+    /// Sticky `(model, epoch)` pin recorded from the last lifecycle
+    /// fault; session-default requests route here once set.
+    redirect: Option<(String, u32)>,
+    drain_redirects: u64,
 }
 
 impl MoleClient<TcpStream> {
@@ -141,10 +163,30 @@ impl MoleClient<TcpStream> {
     }
 
     /// Connect to a serving endpoint requesting a specific model/epoch.
+    /// A handshake refused with the typed draining/retired fault is
+    /// retried transparently against the successor epoch (bounded, so a
+    /// registry stuck mid-rollover still fails typed).
     pub fn connect_with<A: ToSocketAddrs>(addr: A, cfg: ClientConfig) -> Result<Self> {
-        let sock = TcpStream::connect(addr)?;
-        sock.set_nodelay(true).ok();
-        Self::over(sock, cfg)
+        let mut cfg = cfg;
+        let mut redirects = 0u64;
+        loop {
+            let sock = TcpStream::connect(&addr)?;
+            sock.set_nodelay(true).ok();
+            match Self::over(sock, cfg.clone()) {
+                Err(
+                    Error::Draining { model, successor, .. }
+                    | Error::Retired { model, successor, .. },
+                ) if redirects < MAX_DRAIN_HOPS as u64 => {
+                    redirects += 1;
+                    cfg = ClientConfig { model, epoch: successor };
+                }
+                Ok(mut client) => {
+                    client.drain_redirects += redirects;
+                    return Ok(client);
+                }
+                other => return other,
+            }
+        }
     }
 
     /// Connect to a data provider for a training session.
@@ -207,11 +249,16 @@ impl<S: Read + Write> MoleClient<S> {
                         max_batch: batch_size as usize,
                     }),
                     next_id: 0,
+                    redirect: None,
+                    drain_redirects: 0,
                 })
             }
-            Ok(Message::Fault { msg }) => {
+            Ok(Message::Fault { fault: Fault::Generic { msg }, .. }) => {
                 Err(Error::Protocol(format!("server rejected session: {msg}")))
             }
+            // draining/retired: surface typed so connect_with can follow
+            // the successor epoch
+            Ok(Message::Fault { fault, .. }) => Err(fault.into_error()),
             Ok(other) => Err(Error::Protocol(format!("expected Hello, got {other:?}"))),
             Err(e) => Err(Self::reject_version(&mut stream, e)),
         }
@@ -242,9 +289,11 @@ impl<S: Read + Write> MoleClient<S> {
                     batch_size: batch_size as usize,
                 }),
                 next_id: 0,
+                redirect: None,
+                drain_redirects: 0,
             }),
-            Ok(Message::Fault { msg }) => {
-                Err(Error::Protocol(format!("provider rejected session: {msg}")))
+            Ok(Message::Fault { fault, .. }) => {
+                Err(Error::Protocol(format!("provider rejected session: {fault}")))
             }
             Ok(other) => Err(Error::Protocol(format!("expected Hello, got {other:?}"))),
             Err(e) => Err(Self::reject_version(&mut stream, e)),
@@ -255,7 +304,13 @@ impl<S: Read + Write> MoleClient<S> {
     /// before surfacing the error locally.
     fn reject_version(stream: &mut CountingStream<S>, e: Error) -> Error {
         if matches!(e, Error::Version { .. }) {
-            let _ = write_message(stream, &Message::Fault { msg: e.to_string() });
+            let _ = write_message(
+                stream,
+                &Message::Fault {
+                    of: FAULT_SESSION,
+                    fault: Fault::Generic { msg: e.to_string() },
+                },
+            );
         }
         e
     }
@@ -295,11 +350,21 @@ impl<S: Read + Write> MoleClient<S> {
 
     // -- serving ------------------------------------------------------------
 
+    /// Lifecycle redirects followed so far (handshake + per-request). A
+    /// clean single rollover costs each client exactly one.
+    pub fn drain_redirects(&self) -> u64 {
+        self.drain_redirects
+    }
+
     /// Pipeline one request for the session's lane; returns frame bytes.
     /// Responses arrive via [`MoleClient::recv_response`], possibly out
-    /// of order across ids.
+    /// of order across ids. Once a lifecycle fault has recorded a
+    /// redirect, session-default requests route to the successor lane.
     pub fn send_request(&mut self, id: u64, row: &[f32]) -> Result<usize> {
-        self.send_request_to(id, "", EPOCH_LATEST, row)
+        match self.redirect.clone() {
+            Some((model, epoch)) => self.send_request_to(id, &model, epoch, row),
+            None => self.send_request_to(id, "", EPOCH_LATEST, row),
+        }
     }
 
     /// Pipeline one request routed to an explicit model/epoch (`""` +
@@ -323,46 +388,137 @@ impl<S: Read + Write> MoleClient<S> {
         )
     }
 
-    /// Next `InferResponse`; `Fault` frames surface as `Err`.
-    pub fn recv_response(&mut self) -> Result<(u64, Vec<f32>)> {
+    /// Next `InferResponse` or per-request `Fault`, keyed by request id.
+    /// Lifecycle faults **for the session's own lane** record the sticky
+    /// redirect as a side effect, so every receive path learns the
+    /// successor the moment the server names it. Faults for requests
+    /// explicitly pinned to a *different* model (via
+    /// [`MoleClient::send_request_to`]) still surface typed but must not
+    /// hijack session-default routing onto that model.
+    fn recv_incoming(&mut self) -> Result<(u64, Served)> {
         match read_message(&mut self.stream)? {
-            Message::InferResponse { id, logits } => Ok((id, logits)),
-            Message::Fault { msg } => Err(Error::Protocol(format!("server fault: {msg}"))),
+            Message::InferResponse { id, logits } => Ok((id, Ok(logits))),
+            Message::Fault { of, fault } => {
+                if let Fault::Draining { model, successor, .. }
+                | Fault::Retired { model, successor, .. } = &fault
+                {
+                    let session_model = match (&self.redirect, &self.peer) {
+                        (Some((m, _)), _) => Some(m.as_str()),
+                        (None, Peer::Serving(info)) => Some(info.model.as_str()),
+                        (None, Peer::Provider(_)) => None,
+                    };
+                    if session_model == Some(model.as_str()) {
+                        self.drain_redirects += 1;
+                        self.redirect = Some((model.clone(), *successor));
+                    }
+                }
+                Ok((of, Err(fault)))
+            }
             other => Err(Error::Protocol(format!("expected InferResponse, got {other:?}"))),
         }
     }
 
-    /// Blocking single-row inference on the session lane.
-    pub fn infer(&mut self, row: &[f32]) -> Result<Vec<f32>> {
-        let want = self.next_id;
-        self.next_id += 1;
-        self.send_request(want, row)?;
-        let (id, logits) = self.recv_response()?;
-        if id != want {
-            return Err(Error::Protocol(format!("response id {id}, expected {want}")));
+    /// Next `InferResponse`; `Fault` frames surface as `Err` (lifecycle
+    /// faults as their typed [`Error::Draining`] / [`Error::Retired`],
+    /// everything else as a protocol error).
+    pub fn recv_response(&mut self) -> Result<(u64, Vec<f32>)> {
+        match self.recv_incoming()? {
+            (id, Ok(logits)) => Ok((id, logits)),
+            (_, Err(Fault::Generic { msg })) => {
+                Err(Error::Protocol(format!("server fault: {msg}")))
+            }
+            (_, Err(fault)) => Err(fault.into_error()),
         }
-        Ok(logits)
+    }
+
+    /// Blocking single-row inference on the session lane. Drain/retire
+    /// faults re-send the row to the successor epoch transparently.
+    pub fn infer(&mut self, row: &[f32]) -> Result<Vec<f32>> {
+        for _ in 0..=MAX_DRAIN_HOPS {
+            let want = self.next_id;
+            self.next_id += 1;
+            self.send_request(want, row)?;
+            match self.recv_incoming()? {
+                (id, Ok(logits)) => {
+                    if id != want {
+                        return Err(Error::Protocol(format!(
+                            "response id {id}, expected {want}"
+                        )));
+                    }
+                    return Ok(logits);
+                }
+                (id, Err(Fault::Draining { .. } | Fault::Retired { .. })) if id == want => {
+                    // redirect recorded by recv_incoming; go again
+                }
+                (_, Err(Fault::Generic { msg })) => {
+                    return Err(Error::Protocol(format!("server fault: {msg}")))
+                }
+                (_, Err(fault)) => return Err(fault.into_error()),
+            }
+        }
+        Err(Error::Protocol(format!(
+            "request still refused after {MAX_DRAIN_HOPS} drain redirects"
+        )))
     }
 
     /// Pipeline a whole batch of rows and return the logits in input
     /// order (the server may answer out of order; ids are matched here).
     /// Deep pipelining is what lets the server's micro-batcher coalesce
-    /// one client's rows into single Aug-Conv GEMMs.
+    /// one client's rows into single Aug-Conv GEMMs. Rows refused with a
+    /// lifecycle fault are re-sent to the successor epoch (bounded per
+    /// row), so a rotation mid-batch loses nothing.
     pub fn infer_batch(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let base = self.next_id;
-        self.next_id += rows.len() as u64;
+        let mut outstanding: HashMap<u64, usize> = HashMap::with_capacity(rows.len());
+        let mut hops = vec![0u32; rows.len()];
         for (i, row) in rows.iter().enumerate() {
-            self.send_request(base + i as u64, row)?;
+            let id = self.next_id;
+            self.next_id += 1;
+            self.send_request(id, row)?;
+            outstanding.insert(id, i);
         }
-        let mut by_id: HashMap<u64, Vec<f32>> = HashMap::with_capacity(rows.len());
-        while by_id.len() < rows.len() {
-            let (id, logits) = self.recv_response()?;
-            if id < base || id >= base + rows.len() as u64 || by_id.contains_key(&id) {
-                return Err(Error::Protocol(format!("unexpected/duplicate response id {id}")));
+        let mut got: Vec<Option<Vec<f32>>> = vec![None; rows.len()];
+        let mut remaining = rows.len();
+        while remaining > 0 {
+            let (id, result) = self.recv_incoming()?;
+            // a session-scoped fault aborts the whole batch with the
+            // server's message, not a bogus "unexpected id" error
+            if id == FAULT_SESSION {
+                return Err(match result {
+                    Err(Fault::Generic { msg }) => {
+                        Error::Protocol(format!("server fault: {msg}"))
+                    }
+                    Err(fault) => fault.into_error(),
+                    Ok(_) => Error::Protocol(
+                        "response carried the session-fault sentinel id".into(),
+                    ),
+                });
             }
-            by_id.insert(id, logits);
+            let idx = outstanding.remove(&id).ok_or_else(|| {
+                Error::Protocol(format!("unexpected/duplicate response id {id}"))
+            })?;
+            match result {
+                Ok(logits) => {
+                    got[idx] = Some(logits);
+                    remaining -= 1;
+                }
+                Err(fault @ (Fault::Draining { .. } | Fault::Retired { .. })) => {
+                    hops[idx] += 1;
+                    if hops[idx] > MAX_DRAIN_HOPS {
+                        return Err(fault.into_error());
+                    }
+                    // redirect recorded by recv_incoming: re-send this
+                    // row pinned to the successor under a fresh id
+                    let nid = self.next_id;
+                    self.next_id += 1;
+                    self.send_request(nid, &rows[idx])?;
+                    outstanding.insert(nid, idx);
+                }
+                Err(Fault::Generic { msg }) => {
+                    return Err(Error::Protocol(format!("server fault: {msg}")))
+                }
+            }
         }
-        Ok((0..rows.len() as u64).map(|i| by_id.remove(&(base + i)).unwrap()).collect())
+        Ok(got.into_iter().map(|g| g.unwrap()).collect())
     }
 
     /// Graceful serving close: `EndOfData` out, drain stragglers until
@@ -376,6 +532,9 @@ impl<S: Read + Write> MoleClient<S> {
             match read_message(&mut self.stream) {
                 Ok(Message::EndOfData) => return Ok(stragglers),
                 Ok(Message::InferResponse { .. }) => stragglers += 1,
+                // per-request faults for abandoned in-flight requests
+                // (e.g. a drain landing mid-close) drain like responses
+                Ok(Message::Fault { of, .. }) if of != FAULT_SESSION => stragglers += 1,
                 Ok(other) => {
                     return Err(Error::Protocol(format!("at session end, got {other:?}")))
                 }
@@ -402,7 +561,9 @@ impl<S: Read + Write> MoleClient<S> {
         )?;
         match read_message(&mut self.stream)? {
             Message::AugConv { matrix, bias } => Ok((matrix, bias)),
-            Message::Fault { msg } => Err(Error::Protocol(format!("provider fault: {msg}"))),
+            Message::Fault { fault, .. } => {
+                Err(Error::Protocol(format!("provider fault: {fault}")))
+            }
             other => Err(Error::Protocol(format!("expected AugConv, got {other:?}"))),
         }
     }
@@ -412,7 +573,9 @@ impl<S: Read + Write> MoleClient<S> {
         match read_message(&mut self.stream)? {
             Message::MorphedBatch { id, rows, labels } => Ok(Some((id, rows, labels))),
             Message::EndOfData => Ok(None),
-            Message::Fault { msg } => Err(Error::Protocol(format!("provider fault: {msg}"))),
+            Message::Fault { fault, .. } => {
+                Err(Error::Protocol(format!("provider fault: {fault}")))
+            }
             other => Err(Error::Protocol(format!("unexpected {other:?}"))),
         }
     }
@@ -466,19 +629,28 @@ impl<S: Read + Write> ProviderSession<S> {
     pub fn recv_first_layer(&mut self) -> Result<(Tensor, Vec<f32>)> {
         match read_message(&mut self.stream) {
             Ok(Message::Conv1Weights { w1, b1 }) => Ok((w1, b1)),
-            Ok(Message::Fault { msg }) => {
-                Err(Error::Protocol(format!("developer fault: {msg}")))
+            Ok(Message::Fault { fault, .. }) => {
+                Err(Error::Protocol(format!("developer fault: {fault}")))
             }
             Ok(other) => {
-                let fault = format!("expected Conv1Weights, got {other:?}");
-                let _ = write_message(&mut self.stream, &Message::Fault { msg: fault.clone() });
-                Err(Error::Protocol(fault))
+                let msg = format!("expected Conv1Weights, got {other:?}");
+                let _ = write_message(
+                    &mut self.stream,
+                    &Message::Fault {
+                        of: FAULT_SESSION,
+                        fault: Fault::Generic { msg: msg.clone() },
+                    },
+                );
+                Err(Error::Protocol(msg))
             }
             Err(e) => {
                 if matches!(e, Error::Version { .. }) {
                     let _ = write_message(
                         &mut self.stream,
-                        &Message::Fault { msg: e.to_string() },
+                        &Message::Fault {
+                            of: FAULT_SESSION,
+                            fault: Fault::Generic { msg: e.to_string() },
+                        },
                     );
                 }
                 Err(e)
@@ -582,7 +754,9 @@ mod tests {
         assert!(matches!(err, Error::Version { got: 3, .. }), "{err}");
         // the rejecting client told the peer why, as a typed Fault
         match read_message(&mut provider_side).unwrap() {
-            Message::Fault { msg } => assert!(msg.contains("version"), "{msg}"),
+            Message::Fault { fault: Fault::Generic { msg }, .. } => {
+                assert!(msg.contains("version"), "{msg}")
+            }
             other => panic!("expected Fault, got {other:?}"),
         }
     }
@@ -648,6 +822,90 @@ mod tests {
         assert_eq!(client.d_len(), Geometry::SMALL.d_len());
         let logits = client.infer(&[7.5, 1.0, 2.0]).unwrap();
         assert_eq!(logits, vec![7.5, 7.5]);
+        client.finish().unwrap();
+        server.join().unwrap();
+    }
+
+    /// A request refused with the typed `Draining` fault is re-sent to
+    /// the successor epoch transparently, and the redirect sticks:
+    /// later session-default requests route straight to the new lane.
+    #[test]
+    fn drain_fault_redirects_transparently() {
+        let (server_side, client_side) = pipe_pair();
+        let server = std::thread::spawn(move || {
+            let mut s = CountingStream::new(server_side);
+            match read_message(&mut s).unwrap() {
+                Message::Hello { .. } => {}
+                other => panic!("expected Hello, got {other:?}"),
+            }
+            write_message(
+                &mut s,
+                &Message::Hello {
+                    version: PROTOCOL_VERSION,
+                    model: "alpha".into(),
+                    epoch: 0,
+                    geometry: Geometry::SMALL,
+                    kappa: 16,
+                    fingerprint: "fp".into(),
+                    num_batches: 0,
+                    batch_size: 8,
+                },
+            )
+            .unwrap();
+            // first request (session default): refuse — alpha@0 drains
+            match read_message(&mut s).unwrap() {
+                Message::InferRequest { id, model, epoch, .. } => {
+                    assert_eq!((model.as_str(), epoch), ("", EPOCH_LATEST));
+                    write_message(
+                        &mut s,
+                        &Message::Fault {
+                            of: id,
+                            fault: Fault::Draining {
+                                model: "alpha".into(),
+                                epoch: 0,
+                                successor: 1,
+                            },
+                        },
+                    )
+                    .unwrap();
+                }
+                other => panic!("expected InferRequest, got {other:?}"),
+            }
+            // the retry must arrive pinned to the successor epoch
+            match read_message(&mut s).unwrap() {
+                Message::InferRequest { id, model, epoch, row } => {
+                    assert_eq!((model.as_str(), epoch), ("alpha", 1));
+                    write_message(
+                        &mut s,
+                        &Message::InferResponse { id, logits: vec![row.data()[0]] },
+                    )
+                    .unwrap();
+                }
+                other => panic!("expected retried InferRequest, got {other:?}"),
+            }
+            // ...and so must any later session-default request
+            match read_message(&mut s).unwrap() {
+                Message::InferRequest { id, model, epoch, .. } => {
+                    assert_eq!((model.as_str(), epoch), ("alpha", 1));
+                    write_message(&mut s, &Message::InferResponse { id, logits: vec![2.0] })
+                        .unwrap();
+                }
+                other => panic!("expected InferRequest, got {other:?}"),
+            }
+            match read_message(&mut s).unwrap() {
+                Message::EndOfData => {
+                    write_message(&mut s, &Message::EndOfData).unwrap()
+                }
+                other => panic!("expected EndOfData, got {other:?}"),
+            };
+        });
+
+        let mut client = MoleClient::over(client_side, ClientConfig::default()).unwrap();
+        let logits = client.infer(&[5.0, 1.0, 2.0]).unwrap();
+        assert_eq!(logits, vec![5.0], "redirected request lost its row");
+        assert_eq!(client.drain_redirects(), 1);
+        assert_eq!(client.infer(&[9.0, 0.0, 0.0]).unwrap(), vec![2.0]);
+        assert_eq!(client.drain_redirects(), 1, "sticky redirect must not re-fault");
         client.finish().unwrap();
         server.join().unwrap();
     }

@@ -8,12 +8,18 @@
 //! * **Developer** ([`developer`]): receives C^ac + morphed data, trains
 //!   and serves *without ever seeing original data*; all compute runs
 //!   through the AOT artifacts via the PJRT [`crate::runtime`].
-//! * **Serving** ([`registry`], [`batcher`], [`server`]): a
+//! * **Serving** ([`registry`], [`batcher`], [`server`]): a **live**
 //!   [`registry::ModelRegistry`] of named models × key epochs, each with
 //!   its own adaptive micro-batcher lane (queue / padding / window
-//!   metrics), fronted by a concurrent TCP server (`mole serve`) that
-//!   fans many client sessions into one shared engine; [`loadgen`]
+//!   metrics) moving through the Active → Draining → Retired lifecycle,
+//!   fronted by a concurrent TCP server (`mole serve`) that fans many
+//!   client sessions into one shared engine; [`loadgen`]
 //!   (`mole loadgen`) is the matching multi-connection driver.
+//! * **Admin surface** ([`admin`]): loopback-only `Admin*` frames on the
+//!   same listener (`mole admin register|drain|retire|status`) mutate
+//!   the registry at runtime — the live half of key rotation: register
+//!   the rotated epoch, drain the old one (typed `Fault::Draining`
+//!   carrying the successor epoch), retire it once its batcher is empty.
 //! * **Client SDK ([`client`])**: the typed [`client::MoleClient`]
 //!   (connect / handshake / `infer` / `infer_batch` / `stream_training`)
 //!   and the provider-side [`client::ProviderSession`] — the only
@@ -24,6 +30,7 @@
 //! routing; the same message enums also drive the in-process pipeline
 //! used by benches (no sockets, same state machine).
 
+pub mod admin;
 pub mod batcher;
 pub mod client;
 pub mod developer;
@@ -35,13 +42,14 @@ pub mod registry;
 pub mod server;
 pub mod trainer;
 
+pub use admin::AdminClient;
 pub use batcher::{AdaptiveWindow, BatcherConfig, ServingHandle};
 pub use client::{ClientConfig, MoleClient, ProviderSession, ServerInfo};
 pub use developer::{DeveloperNode, TrainOutcome};
 pub use loadgen::{LoadReport, LoadgenConfig};
-pub use protocol::{Message, EPOCH_LATEST, PROTOCOL_VERSION};
+pub use protocol::{Fault, Message, EPOCH_LATEST, FAULT_SESSION, PROTOCOL_VERSION};
 pub use provider::ProviderNode;
-pub use registry::{ModelLane, ModelRegistry, RegisteredModel};
+pub use registry::{LaneState, LaneStatus, ModelLane, ModelRegistry, RegisteredModel};
 pub use server::{ServeConfig, Server};
 pub use trainer::{TrainReport, Trainer, Variant};
 

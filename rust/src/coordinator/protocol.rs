@@ -6,7 +6,7 @@
 //! Aug-Conv matrix C^ac, first-layer weights (public direction:
 //! developer → provider), and inference traffic. Keys never appear here.
 //!
-//! ## Versioning and multi-tenant routing (v2)
+//! ## Versioning and multi-tenant routing (v2+)
 //!
 //! `Hello` opens with an explicit `version` field and both `Hello` and
 //! `InferRequest` carry `model` + `epoch` so one server can host many
@@ -17,6 +17,26 @@
 //! (v1 `Hello` frames started with the geometry's α, which is 3 for
 //! every shipped geometry, so legacy peers deterministically surface as
 //! "peer speaks v3".)
+//!
+//! ## Lifecycle and admin frames (v4)
+//!
+//! `Fault` (tag 9) is typed: it names the request it answers (`of`,
+//! [`FAULT_SESSION`] for session-scoped faults) and carries a [`Fault`]
+//! detail. [`Fault::Draining`] / [`Fault::Retired`] tell a client which
+//! **successor epoch** to re-resolve to when a serving lane stops
+//! accepting work mid-rollover ([`super::registry`] lifecycle), so
+//! rotation never surfaces as an opaque string error.
+//!
+//! The `Admin*` frames (tags 10–14) are the live-registry control
+//! surface: register a `(model, epoch)` lane at runtime, drain an
+//! epoch, retire it once its batcher is empty, and query status. They
+//! are accepted only from loopback peers (and only when the server
+//! enables them) — and, like every other frame, they never carry key
+//! material: `AdminRegister` names a **vault path local to the server**,
+//! which the server reads itself. The tag-9 re-layout is why this is
+//! **v4**, not a silent v2 extension: a v2 peer would mis-parse the
+//! typed fault payload, so the handshake rejects it typed instead (see
+//! [`PROTOCOL_VERSION`] for why v3 is skipped).
 
 use crate::tensor::Tensor;
 use crate::{Error, Geometry, Result};
@@ -28,11 +48,82 @@ const FRAME_MAGIC: [u8; 2] = *b"ML";
 const MAX_PAYLOAD: usize = 1 << 30;
 
 /// Wire protocol version carried in `Hello`. v2 added the version field
-/// itself plus `model`/`epoch` routing on `Hello` and `InferRequest`.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// itself plus `model`/`epoch` routing on `Hello` and `InferRequest`;
+/// v4 re-laid-out `Fault` (tag 9: `of` + typed fault kind) and added
+/// the Admin frames (tags 10–14). **v3 is deliberately skipped**:
+/// pre-versioning (v1) `Hello` frames began with the geometry's α = 3,
+/// which decodes as "version 3" — a build claiming v3 could not tell a
+/// legacy peer from a current one.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// `epoch` sentinel meaning "the newest epoch the peer serves".
 pub const EPOCH_LATEST: u32 = u32::MAX;
+
+/// `Fault.of` sentinel: the fault concerns the whole session (handshake
+/// rejection, framing violation), not one pipelined request id.
+pub const FAULT_SESSION: u64 = u64::MAX;
+
+/// Typed fault detail carried by `Message::Fault` (tag 9).
+///
+/// [`Fault::Draining`] and [`Fault::Retired`] are the serving-lifecycle
+/// faults: the addressed `(model, epoch)` lane no longer accepts new
+/// work, and `successor` is the epoch the client should re-resolve to
+/// ([`EPOCH_LATEST`] when no concrete successor is active yet — ask for
+/// the newest). [`crate::coordinator::MoleClient`] retries these
+/// transparently.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Catch-all failure; `msg` is human-readable.
+    Generic { msg: String },
+    /// The lane's key epoch is draining (rollover in progress).
+    Draining { model: String, epoch: u32, successor: u32 },
+    /// The lane's key epoch was retired (rollover complete).
+    Retired { model: String, epoch: u32, successor: u32 },
+}
+
+impl Fault {
+    /// Build the wire fault for an error (lifecycle errors map to their
+    /// typed variants, everything else to [`Fault::Generic`]).
+    pub fn from_error(e: &Error) -> Self {
+        match e {
+            Error::Draining { model, epoch, successor } => Fault::Draining {
+                model: model.clone(),
+                epoch: *epoch,
+                successor: *successor,
+            },
+            Error::Retired { model, epoch, successor } => Fault::Retired {
+                model: model.clone(),
+                epoch: *epoch,
+                successor: *successor,
+            },
+            other => Fault::Generic { msg: other.to_string() },
+        }
+    }
+
+    /// The typed error a received fault surfaces as (inverse of
+    /// [`Fault::from_error`] for the lifecycle variants; `Generic`
+    /// becomes a protocol error carrying the peer's message).
+    pub fn into_error(self) -> Error {
+        match self {
+            Fault::Generic { msg } => Error::Protocol(format!("peer fault: {msg}")),
+            Fault::Draining { model, epoch, successor } => {
+                Error::Draining { model, epoch, successor }
+            }
+            Fault::Retired { model, epoch, successor } => {
+                Error::Retired { model, epoch, successor }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::Generic { msg } => write!(f, "{msg}"),
+            other => write!(f, "{}", other.clone().into_error()),
+        }
+    }
+}
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -69,8 +160,32 @@ pub enum Message {
     InferResponse { id: u64, logits: Vec<f32> },
     /// Generic acknowledgement.
     Ack { of: u64 },
-    /// Fatal error notification.
-    Fault { msg: String },
+    /// Error notification for request `of` ([`FAULT_SESSION`] = the
+    /// whole session) with a typed [`Fault`] detail.
+    Fault { of: u64, fault: Fault },
+    /// Admin (loopback-only): register a `(model, epoch)` lane at
+    /// runtime. `vault_path` names a key vault **on the server's own
+    /// filesystem** (key material never crosses the wire); when empty,
+    /// the server generates a root bundle from `(kappa, seed)`.
+    /// `trunk_seed` must match the model's other epochs so rotation
+    /// re-morphs the first layer without retraining the trunk.
+    AdminRegister {
+        model: String,
+        vault_path: String,
+        kappa: u32,
+        seed: u64,
+        trunk_seed: u64,
+    },
+    /// Admin: stop accepting new sessions/requests on `(model, epoch)`;
+    /// subsequent traffic gets [`Fault::Draining`] with the successor.
+    AdminDrain { model: String, epoch: u32 },
+    /// Admin: retire a drained `(model, epoch)` lane. Refused while the
+    /// lane's batcher still holds in-flight requests.
+    AdminRetire { model: String, epoch: u32 },
+    /// Admin: request a lane-per-line status report.
+    AdminStatus,
+    /// Admin success reply; `detail` is operator-readable.
+    AdminOk { detail: String },
 }
 
 impl Message {
@@ -85,6 +200,11 @@ impl Message {
             Message::InferResponse { .. } => 7,
             Message::Ack { .. } => 8,
             Message::Fault { .. } => 9,
+            Message::AdminRegister { .. } => 10,
+            Message::AdminDrain { .. } => 11,
+            Message::AdminRetire { .. } => 12,
+            Message::AdminStatus => 13,
+            Message::AdminOk { .. } => 14,
         }
     }
 }
@@ -283,7 +403,40 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_f32s(&mut out, logits);
         }
         Message::Ack { of } => put_u64(&mut out, *of),
-        Message::Fault { msg } => put_str(&mut out, msg),
+        Message::Fault { of, fault } => {
+            put_u64(&mut out, *of);
+            match fault {
+                Fault::Generic { msg } => {
+                    out.push(0);
+                    put_str(&mut out, msg);
+                }
+                Fault::Draining { model, epoch, successor } => {
+                    out.push(1);
+                    put_str(&mut out, model);
+                    put_u32(&mut out, *epoch);
+                    put_u32(&mut out, *successor);
+                }
+                Fault::Retired { model, epoch, successor } => {
+                    out.push(2);
+                    put_str(&mut out, model);
+                    put_u32(&mut out, *epoch);
+                    put_u32(&mut out, *successor);
+                }
+            }
+        }
+        Message::AdminRegister { model, vault_path, kappa, seed, trunk_seed } => {
+            put_str(&mut out, model);
+            put_str(&mut out, vault_path);
+            put_u32(&mut out, *kappa);
+            put_u64(&mut out, *seed);
+            put_u64(&mut out, *trunk_seed);
+        }
+        Message::AdminDrain { model, epoch } | Message::AdminRetire { model, epoch } => {
+            put_str(&mut out, model);
+            put_u32(&mut out, *epoch);
+        }
+        Message::AdminStatus => {}
+        Message::AdminOk { detail } => put_str(&mut out, detail),
     }
     out
 }
@@ -328,7 +481,35 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
         },
         7 => Message::InferResponse { id: c.u64()?, logits: c.f32s()? },
         8 => Message::Ack { of: c.u64()? },
-        9 => Message::Fault { msg: c.str()? },
+        9 => {
+            let of = c.u64()?;
+            let fault = match c.u8()? {
+                0 => Fault::Generic { msg: c.str()? },
+                1 => Fault::Draining {
+                    model: c.str()?,
+                    epoch: c.u32()?,
+                    successor: c.u32()?,
+                },
+                2 => Fault::Retired {
+                    model: c.str()?,
+                    epoch: c.u32()?,
+                    successor: c.u32()?,
+                },
+                k => return Err(Error::Protocol(format!("unknown fault kind {k}"))),
+            };
+            Message::Fault { of, fault }
+        }
+        10 => Message::AdminRegister {
+            model: c.str()?,
+            vault_path: c.str()?,
+            kappa: c.u32()?,
+            seed: c.u64()?,
+            trunk_seed: c.u64()?,
+        },
+        11 => Message::AdminDrain { model: c.str()?, epoch: c.u32()? },
+        12 => Message::AdminRetire { model: c.str()?, epoch: c.u32()? },
+        13 => Message::AdminStatus,
+        14 => Message::AdminOk { detail: c.str()? },
         t => return Err(Error::Protocol(format!("unknown message tag {t}"))),
     };
     c.done()?;
@@ -533,7 +714,33 @@ mod tests {
             },
             Message::InferResponse { id: 99, logits: vec![0.1, 0.9] },
             Message::Ack { of: 42 },
-            Message::Fault { msg: "boom".into() },
+            Message::Fault {
+                of: FAULT_SESSION,
+                fault: Fault::Generic { msg: "boom".into() },
+            },
+            Message::Fault {
+                of: 7,
+                fault: Fault::Draining { model: "alpha".into(), epoch: 0, successor: 1 },
+            },
+            Message::Fault {
+                of: 8,
+                fault: Fault::Retired {
+                    model: "alpha".into(),
+                    epoch: 0,
+                    successor: EPOCH_LATEST,
+                },
+            },
+            Message::AdminRegister {
+                model: "alpha".into(),
+                vault_path: "/tmp/alpha.v1.key".into(),
+                kappa: 16,
+                seed: 11,
+                trunk_seed: 11,
+            },
+            Message::AdminDrain { model: "alpha".into(), epoch: 0 },
+            Message::AdminRetire { model: "alpha".into(), epoch: 0 },
+            Message::AdminStatus,
+            Message::AdminOk { detail: "registered alpha@1".into() },
         ]
     }
 
@@ -608,6 +815,85 @@ mod tests {
             }
             other => panic!("expected protocol error, got {other:?}"),
         }
+    }
+
+    /// Lifecycle faults map losslessly between the wire [`Fault`] and the
+    /// crate [`Error`] (the client's retry loop depends on `successor`
+    /// surviving the trip); everything else folds into `Generic`.
+    #[test]
+    fn fault_error_mapping_roundtrips() {
+        let e = Error::Draining { model: "alpha".into(), epoch: 0, successor: 1 };
+        let f = Fault::from_error(&e);
+        assert_eq!(
+            f,
+            Fault::Draining { model: "alpha".into(), epoch: 0, successor: 1 }
+        );
+        assert!(matches!(
+            f.into_error(),
+            Error::Draining { model, epoch: 0, successor: 1 } if model == "alpha"
+        ));
+        let e = Error::Retired { model: "beta".into(), epoch: 3, successor: EPOCH_LATEST };
+        assert!(matches!(
+            Fault::from_error(&e).into_error(),
+            Error::Retired { epoch: 3, successor: EPOCH_LATEST, .. }
+        ));
+        let f = Fault::from_error(&Error::Protocol("boom".into()));
+        assert!(matches!(&f, Fault::Generic { msg } if msg.contains("boom")));
+        assert!(f.to_string().contains("boom"));
+        // typed faults display the successor so raw logs stay readable
+        let f = Fault::Draining { model: "alpha".into(), epoch: 0, successor: 1 };
+        assert!(f.to_string().contains("draining"), "{f}");
+        assert!(f.to_string().contains("epoch 1"), "{f}");
+    }
+
+    /// Satellite: property-style decoder fuzz. Seeded-random frames from
+    /// every v4 + Admin variant are mutated — truncated anywhere,
+    /// bit-flipped, replaced with pure garbage, or given a lying length
+    /// header — and fed to `read_message`, which must always return a
+    /// typed result: never panic, and never allocate/stall past the
+    /// bytes that actually arrived (the grow-with-arrival property).
+    #[test]
+    fn fuzz_decode_never_panics() {
+        let variants = all_variants();
+        let t0 = std::time::Instant::now();
+        crate::testkit::forall(
+            0xF022,
+            256,
+            |rng| {
+                let mut frame = Vec::new();
+                write_message(&mut frame, &variants[rng.below(variants.len())]).unwrap();
+                match rng.below(4) {
+                    // cut anywhere: mid-magic, mid-header, mid-payload
+                    0 => frame.truncate(rng.below(frame.len() + 1)),
+                    // flip 1–4 bits anywhere in the frame
+                    1 => {
+                        for _ in 0..=rng.below(4) {
+                            let i = rng.below(frame.len());
+                            frame[i] ^= 1 << rng.below(8);
+                        }
+                    }
+                    // replace with seeded garbage (any magic/tag/length)
+                    2 => {
+                        let n = rng.below(64);
+                        frame = (0..n).map(|_| rng.below(256) as u8).collect();
+                    }
+                    // keep a valid frame but lie in the length field
+                    _ => {
+                        let lie = (rng.next_u64() as u32).to_le_bytes();
+                        frame[3..7].copy_from_slice(&lie);
+                    }
+                }
+                frame
+            },
+            |frame| {
+                let _ = read_message(&mut frame.as_slice());
+                Ok(())
+            },
+        );
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "hostile frames must fail fast, not by timeout"
+        );
     }
 
     /// An element count that does not overflow but exceeds the actual

@@ -10,14 +10,28 @@
 //!
 //! Epochs make key rotation a serving-layer concept: a provider that
 //! re-morphs under [`crate::keys::KeyBundle::rotate`] registers the new
-//! epoch next to the old one, traffic drains across at its own pace
-//! (clients pin an epoch in `Hello` or per `InferRequest`), and the old
-//! lane is dropped when rollover completes. Resolution rules:
+//! epoch next to the old one (at runtime, via the admin surface —
+//! [`super::admin`]), traffic drains across at its own pace (clients pin
+//! an epoch in `Hello` or per `InferRequest`), and the old lane is
+//! retired when rollover completes.
+//!
+//! ## Lane lifecycle
+//!
+//! The registry is a **live control plane**: lanes move through
+//! [`LaneState::Active`] → [`LaneState::Draining`] ([`ModelRegistry::drain`]:
+//! new sessions/requests refused with the typed [`Error::Draining`]
+//! naming the successor epoch; already-enqueued rows still flush) →
+//! [`LaneState::Retired`] ([`ModelRegistry::retire`]: allowed only once
+//! the lane's batcher is empty; the worker is joined and the entry
+//! remains as a tombstone so resolution answers "retired", not
+//! "never existed"). Resolution rules:
 //!
 //! * model `""` → the registry's default model (first registered);
-//! * epoch [`EPOCH_LATEST`] → the newest registered epoch of that model;
-//! * anything else must match exactly, or resolution fails (servers turn
-//!   that into a per-session or per-request `Fault`).
+//! * epoch [`EPOCH_LATEST`] → the newest **Active** epoch of that model;
+//! * anything else must match an exact epoch: Active lanes resolve,
+//!   Draining/Retired lanes fail with their typed lifecycle error, and
+//!   unknown pairs fail with [`Error::Protocol`] (servers turn every
+//!   miss into a per-session or per-request `Fault`).
 
 use super::batcher::{BatcherConfig, ServingHandle, ServingModel};
 use super::protocol::EPOCH_LATEST;
@@ -29,7 +43,39 @@ use crate::runtime::SharedEngine;
 use crate::tensor::Tensor;
 use crate::{Error, Geometry, Result};
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Lifecycle state of a serving lane (the rollover state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneState {
+    /// Serving traffic normally.
+    Active,
+    /// No new sessions/requests; enqueued rows still flush.
+    Draining,
+    /// Batcher shut down; kept as a tombstone for typed resolution.
+    Retired,
+}
+
+impl LaneState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => LaneState::Active,
+            1 => LaneState::Draining,
+            _ => LaneState::Retired,
+        }
+    }
+}
+
+impl std::fmt::Display for LaneState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LaneState::Active => "active",
+            LaneState::Draining => "draining",
+            LaneState::Retired => "retired",
+        })
+    }
+}
 
 /// A serving entry before registration: everything a lane needs, minus
 /// the running batcher.
@@ -72,17 +118,98 @@ impl RegisteredModel {
 }
 
 /// One running serving lane: a registered model with its own batcher
-/// worker over the shared engine.
+/// worker over the shared engine, plus its lifecycle state.
 pub struct ModelLane {
     name: String,
     epoch: u32,
     geometry: Geometry,
     kappa: usize,
     fingerprint: String,
+    /// SHA-256 over the trunk parameters: every epoch of a model must
+    /// share it, because rotation re-morphs only the first layer. The
+    /// registry enforces this at register time so a live `mole admin
+    /// register` with the wrong trunk seed fails typed instead of
+    /// silently redirecting clients onto a different model.
+    trunk_fingerprint: String,
     handle: ServingHandle,
+    /// [`LaneState`] as a u8 (lock-free hot-path reads).
+    state: AtomicU8,
+    /// Epoch to re-resolve to once this lane stops accepting work;
+    /// [`EPOCH_LATEST`] until a drain computes a concrete successor.
+    successor: AtomicU32,
+}
+
+/// Content hash of a trunk parameter set (shapes + f32 payloads).
+fn trunk_fingerprint(params: &[Tensor]) -> String {
+    let mut h = crate::hash::Sha256::new();
+    for p in params {
+        h.update((p.ndim() as u64).to_le_bytes());
+        for &d in p.shape() {
+            h.update((d as u64).to_le_bytes());
+        }
+        for &v in p.data() {
+            h.update(v.to_le_bytes());
+        }
+    }
+    crate::hash::to_hex(&h.finalize())
 }
 
 impl ModelLane {
+    /// Current lifecycle state.
+    pub fn state(&self) -> LaneState {
+        LaneState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    /// The epoch clients should re-resolve to when this lane refuses
+    /// work ([`EPOCH_LATEST`] = "ask for the newest"). Maintained by the
+    /// registry on every register/drain/retire of the model.
+    pub fn successor(&self) -> u32 {
+        self.successor.load(Ordering::SeqCst)
+    }
+
+    fn set_state(&self, s: LaneState) {
+        self.state.store(s as u8, Ordering::SeqCst);
+    }
+
+    fn set_successor(&self, epoch: u32) {
+        self.successor.store(epoch, Ordering::SeqCst);
+    }
+
+    /// The typed error new work on this lane is refused with (callers
+    /// check the state first; an Active lane refuses nothing).
+    pub fn refusal(&self) -> Error {
+        let (model, epoch, successor) =
+            (self.name.clone(), self.epoch, self.successor());
+        match self.state() {
+            LaneState::Active => {
+                Error::Protocol(format!("model {model:?} epoch {epoch} is active"))
+            }
+            LaneState::Draining => Error::Draining { model, epoch, successor },
+            LaneState::Retired => Error::Retired { model, epoch, successor },
+        }
+    }
+
+    /// State-checked asynchronous submit — the server's per-request
+    /// entry point. A non-Active lane refuses with its typed lifecycle
+    /// error even if a session resolved the lane before the transition,
+    /// so the drain point is authoritative, not advisory.
+    pub fn submit_with<F>(&self, row: &[f32], reply: F) -> Result<()>
+    where
+        F: FnOnce(Result<Vec<f32>>) + Send + 'static,
+    {
+        if self.state() != LaneState::Active {
+            return Err(self.refusal());
+        }
+        self.handle.submit_with(row, reply)
+    }
+
+    /// State-checked blocking inference (in-process callers).
+    pub fn infer(&self, row: &[f32]) -> Result<Vec<f32>> {
+        if self.state() != LaneState::Active {
+            return Err(self.refusal());
+        }
+        self.handle.infer(row)
+    }
     pub fn name(&self) -> &str {
         &self.name
     }
@@ -115,20 +242,66 @@ impl ModelLane {
     }
 }
 
-/// The registry: named models × key epochs → running lanes.
-pub struct ModelRegistry {
-    engine: SharedEngine,
-    batcher: BatcherConfig,
+/// Operator-facing snapshot of one lane (`mole admin status`, serve
+/// banners, CI smoke assertions).
+#[derive(Debug, Clone)]
+pub struct LaneStatus {
+    pub model: String,
+    pub epoch: u32,
+    pub state: LaneState,
+    pub successor: u32,
+    pub in_flight: u64,
+    pub requests: u64,
+    pub responses: u64,
+}
+
+impl std::fmt::Display for LaneStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}@{} state={} successor=",
+            self.model, self.epoch, self.state
+        )?;
+        match (self.state, self.successor) {
+            (LaneState::Active, _) => write!(f, "-")?,
+            (_, EPOCH_LATEST) => write!(f, "latest")?,
+            (_, s) => write!(f, "{s}")?,
+        }
+        write!(
+            f,
+            " in_flight={} requests={} responses={}",
+            self.in_flight, self.requests, self.responses
+        )
+    }
+}
+
+/// The mutable half of the registry, behind one `RwLock`: hot-path
+/// resolution takes brief read locks; register/drain/retire take the
+/// write lock (control-plane rate, so contention is a non-issue).
+struct Inner {
     lanes: BTreeMap<String, BTreeMap<u32, Arc<ModelLane>>>,
     /// First-registered model name; `Hello { model: "" }` resolves here.
     default_model: Option<String>,
+}
+
+/// The registry: named models × key epochs → running lanes, mutable at
+/// runtime (interior mutability, so a server's `Arc<ModelRegistry>` can
+/// be driven by the admin surface while sessions resolve against it).
+pub struct ModelRegistry {
+    engine: SharedEngine,
+    batcher: BatcherConfig,
+    inner: RwLock<Inner>,
 }
 
 impl ModelRegistry {
     /// An empty registry over a shared engine; every registered lane gets
     /// its own batcher with this policy.
     pub fn new(engine: SharedEngine, batcher: BatcherConfig) -> Self {
-        Self { engine, batcher, lanes: BTreeMap::new(), default_model: None }
+        Self {
+            engine,
+            batcher,
+            inner: RwLock::new(Inner { lanes: BTreeMap::new(), default_model: None }),
+        }
     }
 
     pub fn engine(&self) -> &SharedEngine {
@@ -141,109 +314,331 @@ impl ModelRegistry {
         &self.batcher
     }
 
-    /// Register an entry and start its lane. Fails on an empty name, a
-    /// duplicate `(name, epoch)`, or a geometry the engine's artifacts
-    /// cannot serve.
-    pub fn register(&mut self, entry: RegisteredModel) -> Result<()> {
-        if entry.name.is_empty() {
+    /// Register an entry and start its lane — at construction time or
+    /// live, against a running server. Fails on an empty name, a
+    /// duplicate `(name, epoch)` (retired epochs count: an epoch number
+    /// is never reused), or a geometry the engine's artifacts cannot
+    /// serve. Registering a new epoch refreshes the successor hint of
+    /// the model's draining/retired lanes.
+    pub fn register(&self, entry: RegisteredModel) -> Result<()> {
+        let RegisteredModel { name, epoch, layer, params, kappa, fingerprint } = entry;
+        if name.is_empty() {
             return Err(Error::Config("model name must be non-empty".into()));
         }
-        if entry.epoch == EPOCH_LATEST {
+        if epoch == EPOCH_LATEST {
             return Err(Error::Config(format!(
                 "epoch {EPOCH_LATEST} is reserved as the latest-epoch sentinel"
             )));
         }
-        if let Some(epochs) = self.lanes.get(&entry.name) {
-            if epochs.contains_key(&entry.epoch) {
-                return Err(Error::Config(format!(
-                    "model {:?} epoch {} is already registered",
-                    entry.name, entry.epoch
-                )));
-            }
-        }
         let served = self.engine.manifest().geometry("small")?;
-        let geometry = *entry.layer.geometry();
+        let geometry = *layer.geometry();
         if geometry != served {
             return Err(Error::Config(format!(
-                "model {:?} geometry {geometry:?} != served geometry {served:?}",
-                entry.name
+                "model {name:?} geometry {geometry:?} != served geometry {served:?}"
             )));
         }
-        let label = format!("{}@{}", entry.name, entry.epoch);
+        let trunk_fp = trunk_fingerprint(&params);
+        let duplicate = |state: LaneState| {
+            Error::Config(format!(
+                "model {name:?} epoch {epoch} is already registered ({state})"
+            ))
+        };
+        // cheap duplicate/trunk pre-check under a read lock; the
+        // authoritative re-check happens under the write lock below
+        {
+            let inner = self.inner.read().unwrap();
+            if let Some(epochs) = inner.lanes.get(&name) {
+                if let Some(l) = epochs.get(&epoch) {
+                    return Err(duplicate(l.state()));
+                }
+                Self::check_trunk(&name, epochs, &trunk_fp)?;
+            }
+        }
+        // build the lane OFF the registry lock: start_lane precompiles
+        // every batch bucket, and a live `mole admin register` must not
+        // stall hot-path resolution on other lanes for that long
+        let label = format!("{name}@{epoch}");
         let handle = ServingHandle::start_lane(
             self.engine.clone(),
             ServingModel {
-                cac: entry.layer.matrix().clone(),
-                bias: entry.layer.bias().to_vec(),
-                params: entry.params,
+                cac: layer.matrix().clone(),
+                bias: layer.bias().to_vec(),
+                params,
             },
             self.batcher.clone(),
             &label,
         )?;
         let lane = Arc::new(ModelLane {
-            name: entry.name.clone(),
-            epoch: entry.epoch,
+            name: name.clone(),
+            epoch,
             geometry,
-            kappa: entry.kappa,
-            fingerprint: entry.fingerprint,
+            kappa,
+            fingerprint,
+            trunk_fingerprint: trunk_fp.clone(),
             handle,
+            state: AtomicU8::new(LaneState::Active as u8),
+            successor: AtomicU32::new(EPOCH_LATEST),
         });
-        self.default_model.get_or_insert_with(|| entry.name.clone());
-        self.lanes.entry(entry.name).or_default().insert(entry.epoch, lane);
+        let mut inner = self.inner.write().unwrap();
+        // re-check under the write lock: a racer may have registered the
+        // same (model, epoch) or changed the model while the lane built
+        let conflict = match inner.lanes.get(&name) {
+            Some(epochs) => match epochs.get(&epoch) {
+                Some(l) => Some(duplicate(l.state())),
+                None => Self::check_trunk(&name, epochs, &trunk_fp).err(),
+            },
+            None => None,
+        };
+        if let Some(e) = conflict {
+            // tear the orphan worker down before reporting
+            drop(inner);
+            lane.handle().shutdown();
+            return Err(e);
+        }
+        if inner.default_model.is_none() {
+            inner.default_model = Some(name.clone());
+        }
+        let epochs = inner.lanes.entry(name).or_default();
+        epochs.insert(epoch, lane);
+        Self::refresh_successors(epochs);
         Ok(())
     }
 
-    /// Resolve a `(model, epoch)` pair from the wire to a lane (see the
-    /// module docs for the `""` / [`EPOCH_LATEST`] rules).
+    /// Begin draining `(model, epoch)`: the lane stops accepting new
+    /// sessions and requests (refused with the typed [`Error::Draining`]
+    /// carrying the successor epoch) while already-enqueued rows flush.
+    /// Idempotent on an already-draining lane. Returns the successor
+    /// epoch recorded on the lane ([`EPOCH_LATEST`] when the model has
+    /// no active epoch left).
+    pub fn drain(&self, model: &str, epoch: u32) -> Result<u32> {
+        if epoch == EPOCH_LATEST {
+            return Err(Error::Config(
+                "drain requires an exact epoch, not the latest-epoch sentinel".into(),
+            ));
+        }
+        let mut inner = self.inner.write().unwrap();
+        let name = Self::model_name(&inner, model)?;
+        let epochs = inner.lanes.get_mut(&name).unwrap();
+        let lane = epochs.get(&epoch).ok_or_else(|| {
+            Error::Protocol(format!("model {name:?} has no epoch {epoch}"))
+        })?;
+        match lane.state() {
+            LaneState::Active => lane.set_state(LaneState::Draining),
+            LaneState::Draining => {} // idempotent: re-draining is a no-op
+            LaneState::Retired => {
+                return Err(Error::Protocol(format!(
+                    "model {name:?} epoch {epoch} is already retired"
+                )))
+            }
+        }
+        let lane = lane.clone();
+        Self::refresh_successors(epochs);
+        Ok(lane.successor())
+    }
+
+    /// Retire a drained `(model, epoch)` lane: verify its batcher is
+    /// empty, shut the worker down (flushing is already done — the
+    /// in-flight check guarantees it), and tombstone the entry. Refused
+    /// while any request is still in flight, and on lanes that were
+    /// never drained — the Active → Draining → Retired order is
+    /// enforced, not advisory.
+    pub fn retire(&self, model: &str, epoch: u32) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        let name = Self::model_name(&inner, model)?;
+        let epochs = inner.lanes.get_mut(&name).unwrap();
+        let lane = epochs.get(&epoch).ok_or_else(|| {
+            Error::Protocol(format!("model {name:?} has no epoch {epoch}"))
+        })?;
+        match lane.state() {
+            LaneState::Active => {
+                return Err(Error::Protocol(format!(
+                    "model {name:?} epoch {epoch} is active; drain it before retiring"
+                )))
+            }
+            LaneState::Retired => {
+                return Err(Error::Protocol(format!(
+                    "model {name:?} epoch {epoch} is already retired"
+                )))
+            }
+            LaneState::Draining => {}
+        }
+        let in_flight = lane.handle().in_flight();
+        if in_flight > 0 {
+            return Err(Error::Protocol(format!(
+                "model {name:?} epoch {epoch} still has {in_flight} request(s) in \
+                 flight; retire once the batcher drains"
+            )));
+        }
+        // queue empty + draining ⇒ nothing new can arrive; the join is
+        // immediate. A request racing the state check either sorts before
+        // the shutdown marker (flushed by the worker) or is answered with
+        // a typed error by the batcher's reply-on-drop guarantee — it is
+        // never silently lost.
+        lane.handle().shutdown();
+        lane.set_state(LaneState::Retired);
+        Self::refresh_successors(epochs);
+        Ok(())
+    }
+
+    /// Every epoch of a model must carry the same trunk: rotation
+    /// re-morphs only the first layer. Comparing against any existing
+    /// lane (tombstones included) catches a wrong `trunk_seed` at the
+    /// one place an operator can get it wrong.
+    fn check_trunk(
+        name: &str,
+        epochs: &BTreeMap<u32, Arc<ModelLane>>,
+        fp: &str,
+    ) -> Result<()> {
+        match epochs.values().next() {
+            Some(l) if l.trunk_fingerprint != fp => Err(Error::Config(format!(
+                "model {name:?}: trunk parameters differ from its other epochs — \
+                 rotation re-morphs only the first layer, so register the new \
+                 epoch with the model's original trunk (same --trunk-seed)"
+            ))),
+            _ => Ok(()),
+        }
+    }
+
+    /// Resolve a model selector to the owned registry name (`""` = the
+    /// default model). The returned name is guaranteed to be a key of
+    /// `inner.lanes`.
+    fn model_name(inner: &Inner, model: &str) -> Result<String> {
+        if model.is_empty() {
+            inner
+                .default_model
+                .clone()
+                .ok_or_else(|| Error::Protocol("registry serves no models".into()))
+        } else if inner.lanes.contains_key(model) {
+            Ok(model.to_string())
+        } else {
+            Err(Error::Protocol(format!("unknown model {model:?}")))
+        }
+    }
+
+    /// Recompute the successor hint (newest Active epoch, else the
+    /// latest-epoch sentinel) for every non-active lane of a model.
+    fn refresh_successors(epochs: &BTreeMap<u32, Arc<ModelLane>>) {
+        let successor = epochs
+            .values()
+            .rev()
+            .find(|l| l.state() == LaneState::Active)
+            .map(|l| l.epoch())
+            .unwrap_or(EPOCH_LATEST);
+        for lane in epochs.values() {
+            if lane.state() != LaneState::Active {
+                lane.set_successor(successor);
+            }
+        }
+    }
+
+    /// Resolve a `(model, epoch)` pair from the wire to a lane for **new
+    /// work** (see the module docs for the `""` / [`EPOCH_LATEST`] /
+    /// lifecycle rules).
     pub fn resolve(&self, model: &str, epoch: u32) -> Result<Arc<ModelLane>> {
+        let inner = self.inner.read().unwrap();
         let name = if model.is_empty() {
-            self.default_model
+            inner
+                .default_model
                 .as_deref()
                 .ok_or_else(|| Error::Protocol("registry serves no models".into()))?
         } else {
             model
         };
-        let epochs = self
+        let epochs = inner
             .lanes
             .get(name)
             .ok_or_else(|| Error::Protocol(format!("unknown model {name:?}")))?;
-        let lane = if epoch == EPOCH_LATEST {
-            epochs.iter().next_back().map(|(_, l)| l)
-        } else {
-            epochs.get(&epoch)
-        };
-        lane.cloned().ok_or_else(|| {
-            Error::Protocol(format!(
+        if epoch == EPOCH_LATEST {
+            if let Some(lane) =
+                epochs.values().rev().find(|l| l.state() == LaneState::Active)
+            {
+                return Ok(lane.clone());
+            }
+            // nothing active: surface the newest lane's lifecycle state,
+            // typed, so the client knows this is rollover, not a typo
+            return match epochs.values().next_back() {
+                Some(lane) => Err(lane.refusal()),
+                None => Err(Error::Protocol(format!("unknown model {name:?}"))),
+            };
+        }
+        match epochs.get(&epoch) {
+            Some(lane) if lane.state() == LaneState::Active => Ok(lane.clone()),
+            Some(lane) => Err(lane.refusal()),
+            None => Err(Error::Protocol(format!(
                 "model {name:?} has no epoch {epoch} (serving: {:?})",
-                epochs.keys().collect::<Vec<_>>()
-            ))
-        })
+                epochs
+                    .values()
+                    .filter(|l| l.state() != LaneState::Retired)
+                    .map(|l| l.epoch())
+                    .collect::<Vec<_>>()
+            ))),
+        }
     }
 
-    /// Every running lane, ordered by `(name, epoch)`.
-    pub fn lanes(&self) -> impl Iterator<Item = &Arc<ModelLane>> {
-        self.lanes.values().flat_map(|epochs| epochs.values())
+    /// Run `f` over every lane (ordered by `(name, epoch)`, tombstones
+    /// included) under one read lock, without cloning handles.
+    fn fold_lanes<T>(&self, f: impl FnMut(&Arc<ModelLane>) -> T) -> Vec<T> {
+        let inner = self.inner.read().unwrap();
+        inner.lanes.values().flat_map(|epochs| epochs.values()).map(f).collect()
     }
 
-    /// Number of running lanes.
+    /// Every lane, ordered by `(name, epoch)`, including retired
+    /// tombstones (check [`ModelLane::state`] to filter).
+    pub fn lanes(&self) -> Vec<Arc<ModelLane>> {
+        self.fold_lanes(|l| l.clone())
+    }
+
+    /// Number of serving (non-retired) lanes.
     pub fn len(&self) -> usize {
-        self.lanes.values().map(|e| e.len()).sum()
+        let inner = self.inner.read().unwrap();
+        inner
+            .lanes
+            .values()
+            .flat_map(|epochs| epochs.values())
+            .filter(|l| l.state() != LaneState::Retired)
+            .count()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.lanes.is_empty()
+        self.len() == 0
     }
 
-    /// `name@epoch` labels of every lane (for startup banners and CI
-    /// smoke assertions).
+    /// `name@epoch` labels of every serving (non-retired) lane (for
+    /// startup banners and CI smoke assertions).
     pub fn labels(&self) -> Vec<String> {
-        self.lanes().map(|l| format!("{}@{}", l.name(), l.epoch())).collect()
+        self.fold_lanes(|l| {
+            (l.state() != LaneState::Retired).then(|| format!("{}@{}", l.name(), l.epoch()))
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Operator snapshot of every lane (including tombstones).
+    pub fn status(&self) -> Vec<LaneStatus> {
+        self.fold_lanes(|l| LaneStatus {
+            model: l.name().to_string(),
+            epoch: l.epoch(),
+            state: l.state(),
+            successor: l.successor(),
+            in_flight: l.handle().in_flight(),
+            requests: l.handle().metrics.requests.get(),
+            responses: l.handle().metrics.responses.get(),
+        })
+    }
+
+    /// The status snapshot as a lane-per-line report (`mole admin
+    /// status`).
+    pub fn status_report(&self) -> String {
+        let lines: Vec<String> =
+            self.status().iter().map(|s| s.to_string()).collect();
+        lines.join("\n")
     }
 
     /// Total successfully served responses across all lanes (in-process
-    /// `infer` and TCP traffic alike).
+    /// `infer` and TCP traffic alike; retired lanes keep their counts).
     pub fn responses_total(&self) -> u64 {
-        self.lanes().map(|l| l.handle().metrics.responses.get()).sum()
+        self.fold_lanes(|l| l.handle().metrics.responses.get()).into_iter().sum()
     }
 }
 
@@ -312,7 +707,7 @@ mod tests {
     #[test]
     fn register_and_resolve_names_and_epochs() {
         let m = manifest();
-        let mut reg = registry();
+        let reg = registry();
         let root = KeyBundle::generate(Geometry::SMALL, 16, 100).unwrap();
         let next = root.rotate(200).unwrap();
         reg.register(demo_entry_from_keys(&m, "alpha", &root, 100).unwrap()).unwrap();
@@ -341,7 +736,7 @@ mod tests {
     #[test]
     fn duplicate_and_invalid_registrations_rejected() {
         let m = manifest();
-        let mut reg = registry();
+        let reg = registry();
         reg.register(demo_entry(&m, "alpha", 16, 1).unwrap()).unwrap();
         // duplicate (name, epoch)
         assert!(reg.register(demo_entry(&m, "alpha", 16, 2).unwrap()).is_err());
@@ -362,7 +757,7 @@ mod tests {
     #[test]
     fn lanes_batch_independently_over_one_engine() {
         let m = manifest();
-        let mut reg = registry();
+        let reg = registry();
         reg.register(demo_entry(&m, "alpha", 16, 10).unwrap()).unwrap();
         reg.register(demo_entry(&m, "beta", 16, 20).unwrap()).unwrap();
         let a = reg.resolve("alpha", EPOCH_LATEST).unwrap();
@@ -379,5 +774,164 @@ mod tests {
         assert_eq!(reg.responses_total(), 2);
         // same lane, same row ⇒ deterministic
         assert_eq!(la, a.handle().infer(&row).unwrap());
+    }
+
+    /// Satellite: table-driven resolution × lane state. Every (selector,
+    /// state) cell pins its exact `Error` variant — these are the faults
+    /// clients key their retry logic on, so they must not drift.
+    #[test]
+    fn resolution_table_across_lane_states() {
+        let m = manifest();
+        let reg = registry();
+        // alpha: epoch 0 retired, epoch 1 draining, epoch 2 active
+        let root = KeyBundle::generate(Geometry::SMALL, 16, 500).unwrap();
+        let e1 = root.rotate(501).unwrap();
+        let e2 = e1.rotate(502).unwrap();
+        reg.register(demo_entry_from_keys(&m, "alpha", &root, 500).unwrap()).unwrap();
+        reg.register(demo_entry_from_keys(&m, "alpha", &e1, 500).unwrap()).unwrap();
+        reg.register(demo_entry_from_keys(&m, "alpha", &e2, 500).unwrap()).unwrap();
+        assert_eq!(reg.drain("alpha", 0).unwrap(), 2);
+        reg.retire("alpha", 0).unwrap();
+        assert_eq!(reg.drain("alpha", 1).unwrap(), 2);
+
+        enum Want {
+            Lane(u32),
+            Draining(u32),
+            Retired(u32),
+            Unknown,
+        }
+        let table: [(&str, u32, Want); 10] = [
+            // default model × latest → newest ACTIVE epoch
+            ("", EPOCH_LATEST, Want::Lane(2)),
+            ("alpha", EPOCH_LATEST, Want::Lane(2)),
+            // pinned × Active
+            ("alpha", 2, Want::Lane(2)),
+            ("", 2, Want::Lane(2)),
+            // pinned × Draining → typed, successor = newest active
+            ("alpha", 1, Want::Draining(2)),
+            ("", 1, Want::Draining(2)),
+            // pinned × Retired → typed, successor = newest active
+            ("alpha", 0, Want::Retired(2)),
+            // unknown epoch / unknown model → protocol errors
+            ("alpha", 9, Want::Unknown),
+            ("gamma", EPOCH_LATEST, Want::Unknown),
+            ("gamma", 0, Want::Unknown),
+        ];
+        for (model, epoch, want) in table {
+            let got = reg.resolve(model, epoch);
+            match want {
+                Want::Lane(e) => {
+                    assert_eq!(got.unwrap().epoch(), e, "cell ({model:?}, {epoch})")
+                }
+                Want::Draining(s) => assert!(
+                    matches!(
+                        got.as_ref().err(),
+                        Some(Error::Draining { successor, .. }) if *successor == s
+                    ),
+                    "cell ({model:?}, {epoch}): {:?}",
+                    got.err()
+                ),
+                Want::Retired(s) => assert!(
+                    matches!(
+                        got.as_ref().err(),
+                        Some(Error::Retired { successor, .. }) if *successor == s
+                    ),
+                    "cell ({model:?}, {epoch}): {:?}",
+                    got.err()
+                ),
+                Want::Unknown => assert!(
+                    matches!(got.as_ref().err(), Some(Error::Protocol(_))),
+                    "cell ({model:?}, {epoch}): {:?}",
+                    got.err()
+                ),
+            }
+        }
+
+        // once no epoch is active, "latest" surfaces the newest lane's
+        // state typed, successor = the latest-epoch sentinel
+        assert_eq!(reg.drain("alpha", 2).unwrap(), EPOCH_LATEST);
+        assert!(matches!(
+            reg.resolve("alpha", EPOCH_LATEST),
+            Err(Error::Draining { epoch: 2, successor: EPOCH_LATEST, .. })
+        ));
+        // empty registry stays a protocol error
+        let empty = registry();
+        assert!(matches!(empty.resolve("", EPOCH_LATEST), Err(Error::Protocol(_))));
+    }
+
+    /// Rotation re-morphs only the first layer: registering a second
+    /// epoch whose trunk differs from the model's existing lanes is a
+    /// typed config error (the one mistake a live `mole admin register`
+    /// with the wrong --trunk-seed would otherwise serve silently).
+    #[test]
+    fn mismatched_trunk_rejected_across_epochs() {
+        let m = manifest();
+        let reg = registry();
+        let root = KeyBundle::generate(Geometry::SMALL, 16, 40).unwrap();
+        let next = root.rotate(41).unwrap();
+        reg.register(demo_entry_from_keys(&m, "alpha", &root, 40).unwrap()).unwrap();
+        // wrong trunk seed ⇒ different trunk params ⇒ refused typed
+        let err = reg
+            .register(demo_entry_from_keys(&m, "alpha", &next, 999).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("trunk"), "{err}");
+        assert!(reg.resolve("alpha", 1).is_err(), "mismatched lane must not serve");
+        // the same trunk registers cleanly
+        reg.register(demo_entry_from_keys(&m, "alpha", &next, 40).unwrap()).unwrap();
+        assert_eq!(reg.resolve("alpha", EPOCH_LATEST).unwrap().epoch(), 1);
+        // a different model is free to use a different trunk
+        reg.register(demo_entry(&m, "beta", 16, 999).unwrap()).unwrap();
+    }
+
+    /// The Active → Draining → Retired order is enforced, invalid
+    /// transitions are typed errors, tombstones block epoch reuse, and
+    /// registering a fresh epoch refreshes the successor hints.
+    #[test]
+    fn lifecycle_transitions_enforced() {
+        let m = manifest();
+        let reg = registry();
+        reg.register(demo_entry(&m, "alpha", 16, 1).unwrap()).unwrap();
+        // retire before drain refused
+        let err = reg.retire("alpha", 0).unwrap_err();
+        assert!(err.to_string().contains("drain"), "{err}");
+        // drain of unknown epoch/model, or the sentinel, refused
+        assert!(reg.drain("alpha", 5).is_err());
+        assert!(reg.drain("ghost", 0).is_err());
+        assert!(reg.drain("alpha", EPOCH_LATEST).is_err());
+        // drain, idempotently; with no active epoch left the successor
+        // is the latest-epoch sentinel
+        assert_eq!(reg.drain("alpha", 0).unwrap(), EPOCH_LATEST);
+        assert_eq!(reg.drain("alpha", 0).unwrap(), EPOCH_LATEST);
+        // the lane itself refuses new work, typed
+        let lane = reg.lanes().remove(0);
+        assert_eq!(lane.state(), LaneState::Draining);
+        let row = vec![0.0f32; lane.d_len()];
+        assert!(matches!(lane.infer(&row), Err(Error::Draining { .. })));
+        let refused = lane.submit_with(&row, |_| panic!("refused submit must not reply"));
+        assert!(matches!(refused, Err(Error::Draining { .. })));
+        // retire: ok once, then typed refusals for every later verb
+        reg.retire("alpha", 0).unwrap();
+        assert!(reg.retire("alpha", 0).is_err());
+        assert!(reg.drain("alpha", 0).is_err());
+        // tombstone: not serving, but remembered
+        assert_eq!(reg.len(), 0);
+        assert!(reg.is_empty());
+        assert!(reg.labels().is_empty());
+        assert!(matches!(reg.resolve("alpha", 0), Err(Error::Retired { .. })));
+        // epoch numbers are never reused
+        let err = reg.register(demo_entry(&m, "alpha", 16, 2).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+        // a fresh epoch registers live and becomes everyone's successor
+        let next = KeyBundle::generate(Geometry::SMALL, 16, 1).unwrap().rotate(77).unwrap();
+        reg.register(demo_entry_from_keys(&m, "alpha", &next, 1).unwrap()).unwrap();
+        assert_eq!(reg.resolve("alpha", EPOCH_LATEST).unwrap().epoch(), 1);
+        assert!(matches!(
+            reg.resolve("alpha", 0),
+            Err(Error::Retired { successor: 1, .. })
+        ));
+        // status report covers tombstones and live lanes alike
+        let report = reg.status_report();
+        assert!(report.contains("alpha@0 state=retired successor=1"), "{report}");
+        assert!(report.contains("alpha@1 state=active successor=-"), "{report}");
     }
 }

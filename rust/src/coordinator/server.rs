@@ -3,7 +3,7 @@
 //! A [`Server`] binds a `std::net::TcpListener`, accepts many concurrent
 //! client sessions on a fixed thread pool, and routes every request to a
 //! lane of its [`ModelRegistry`]. Each session runs the serving half of
-//! the wire protocol ([`super::protocol`], v2 — client speaks first):
+//! the wire protocol ([`super::protocol`], v4 — client speaks first):
 //!
 //! 1. the client opens with `Hello` (protocol version + requested
 //!    model/epoch); the server resolves it against the registry and
@@ -28,8 +28,20 @@
 //! session but never the server. All lanes execute against one
 //! `Send + Sync` [`SharedEngine`](crate::runtime::SharedEngine) — no
 //! per-connection engine or model state.
+//!
+//! The registry is **live**: a connection that opens with an `Admin*`
+//! frame instead of `Hello` becomes an admin session ([`super::admin`];
+//! loopback peers only, gated by [`ServeConfig::admin_enabled`]) that
+//! can register, drain and retire lanes while traffic is flowing.
+//! Lifecycle refusals — a draining or retired lane, at handshake or on
+//! any later request (the session lane is revalidated per request) —
+//! answer with the typed `Fault::Draining`/`Fault::Retired` carrying
+//! the successor epoch so clients re-resolve instead of failing.
 
-use super::protocol::{read_message, write_message, Message, EPOCH_LATEST, PROTOCOL_VERSION};
+use super::protocol::{
+    read_message, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
+    PROTOCOL_VERSION,
+};
 use super::registry::{ModelLane, ModelRegistry};
 use crate::metrics::ServingMetrics;
 use crate::{Error, Result};
@@ -49,7 +61,7 @@ pub struct ServeConfig {
     /// (excess connections queue in the accept channel).
     pub session_workers: usize,
     /// How long a freshly accepted connection may stay silent before its
-    /// handshake is abandoned (bounds slow/loris peers and pre-v2
+    /// handshake is abandoned (bounds slow/loris peers and pre-v2/v4
     /// clients that wait for the server to speak first).
     pub handshake_timeout: Duration,
     /// How long an established session may sit idle (no frame at all)
@@ -57,6 +69,14 @@ pub struct ServeConfig {
     /// abandoned-but-open connection would otherwise hold a worker
     /// forever.
     pub idle_timeout: Duration,
+    /// Accept `Admin*` frames (register/drain/retire/status) from
+    /// loopback peers. Off, the registry is fixed at bind time like a
+    /// pre-lifecycle server. Defaults on — a deliberate tradeoff for the
+    /// single-operator demo deployment: the loopback gate is the only
+    /// access control, so on multi-user hosts run with
+    /// `[serving] admin = false` / `--no-admin` (authenticated admin
+    /// credentials are a tracked ROADMAP item).
+    pub admin_enabled: bool,
 }
 
 impl Default for ServeConfig {
@@ -66,6 +86,7 @@ impl Default for ServeConfig {
             session_workers: 8,
             handshake_timeout: Duration::from_secs(10),
             idle_timeout: Duration::from_secs(300),
+            admin_enabled: true,
         }
     }
 }
@@ -219,24 +240,35 @@ impl<R: Read> Read for CountingReader<R> {
 
 /// Best-effort typed rejection during the handshake (before the writer
 /// thread exists).
-fn handshake_fault(sock: &mut TcpStream, metrics: &Arc<ServingMetrics>, msg: String) {
+fn handshake_fault(sock: &mut TcpStream, metrics: &Arc<ServingMetrics>, fault: Fault) {
     metrics.faults.inc();
-    if let Ok(n) = write_message(sock, &Message::Fault { msg }) {
+    if let Ok(n) = write_message(sock, &Message::Fault { of: FAULT_SESSION, fault }) {
         metrics.bytes_out.add(n as u64);
     }
     let _ = sock.shutdown(Shutdown::Both);
 }
 
-/// Resolve the client's opening `Hello` to a session lane, answering
-/// version mismatches, non-`Hello` openings and unknown models with a
-/// typed `Fault`. `Ok(None)` means the peer went away silently (port
-/// probes, health checks) — not an error.
+/// What the opening frame turned a fresh connection into.
+enum Opening {
+    /// A serving session bound to a resolved lane.
+    Lane(Arc<ModelLane>),
+    /// An admin session; the already-read first admin frame rides along.
+    Admin(Message),
+    /// The peer went away silently (port probes, health checks).
+    Probe,
+}
+
+/// Classify and answer the client's opening frame: a `Hello` resolves to
+/// a session lane (version mismatches, unknown models and draining /
+/// retired lanes answered with their typed `Fault`), an `Admin*` frame
+/// from a loopback peer opens an admin session, anything else faults.
 fn handshake(
     sock: &mut TcpStream,
     registry: &Arc<ModelRegistry>,
     metrics: &Arc<ServingMetrics>,
-    timeout: Duration,
-) -> Result<Option<Arc<ModelLane>>> {
+    cfg: &ServeConfig,
+) -> Result<Opening> {
+    let timeout = cfg.handshake_timeout;
     sock.set_read_timeout(Some(timeout)).ok();
     let opening = {
         let mut reader =
@@ -248,20 +280,39 @@ fn handshake(
             match registry.resolve(&model, epoch) {
                 Ok(lane) => lane,
                 Err(e) => {
-                    let msg = e.to_string();
-                    handshake_fault(sock, metrics, msg.clone());
-                    return Err(Error::Protocol(msg));
+                    handshake_fault(sock, metrics, Fault::from_error(&e));
+                    return Err(e);
                 }
             }
         }
+        Ok(
+            msg @ (Message::AdminRegister { .. }
+            | Message::AdminDrain { .. }
+            | Message::AdminRetire { .. }
+            | Message::AdminStatus),
+        ) => {
+            if !cfg.admin_enabled {
+                let msg = "admin surface is disabled on this server".to_string();
+                handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
+                return Err(Error::Protocol(msg));
+            }
+            let loopback =
+                sock.peer_addr().map(|a| a.ip().is_loopback()).unwrap_or(false);
+            if !loopback {
+                let msg = "admin frames are accepted from loopback peers only".to_string();
+                handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
+                return Err(Error::Protocol(msg));
+            }
+            return Ok(Opening::Admin(msg));
+        }
         Ok(other) => {
             let msg = format!("serving sessions open with Hello, got {other:?}");
-            handshake_fault(sock, metrics, msg.clone());
+            handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
             return Err(Error::Protocol(msg));
         }
         // silent close before any frame: a probe, not a protocol error
         Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-            return Ok(None)
+            return Ok(Opening::Probe)
         }
         Err(Error::Io(e))
             if e.kind() == std::io::ErrorKind::WouldBlock
@@ -271,12 +322,12 @@ fn handshake(
                 "handshake timed out after {timeout:?} (v{PROTOCOL_VERSION} clients \
                  send Hello first)"
             );
-            handshake_fault(sock, metrics, msg.clone());
+            handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
             return Err(Error::Protocol(msg));
         }
         Err(e) => {
             // includes Error::Version: tell the peer why, typed
-            handshake_fault(sock, metrics, e.to_string());
+            handshake_fault(sock, metrics, Fault::Generic { msg: e.to_string() });
             return Err(e);
         }
     };
@@ -292,7 +343,7 @@ fn handshake(
     };
     let n = write_message(sock, &hello)?;
     metrics.bytes_out.add(n as u64);
-    Ok(Some(lane))
+    Ok(Opening::Lane(lane))
 }
 
 /// One client session: handshake, then reader (this thread) + writer
@@ -305,9 +356,13 @@ fn run_session(
     metrics: &Arc<ServingMetrics>,
     cfg: &ServeConfig,
 ) -> Result<()> {
-    let session_lane = match handshake(&mut sock, registry, metrics, cfg.handshake_timeout)? {
-        Some(lane) => lane,
-        None => return Ok(()),
+    let session_lane = match handshake(&mut sock, registry, metrics, cfg)? {
+        Opening::Lane(lane) => lane,
+        Opening::Admin(first) => {
+            sock.set_read_timeout(Some(cfg.idle_timeout)).ok();
+            return super::admin::run_admin_session(sock, first, registry);
+        }
+        Opening::Probe => return Ok(()),
     };
     // the fixed worker pool must not be held hostage by an abandoned
     // connection: an idle session (no frame at all) is eventually shed
@@ -336,12 +391,16 @@ fn run_session(
         match read_message(&mut reader) {
             Ok(Message::InferRequest { id, model, epoch, row }) => {
                 metrics.requests.inc();
-                // "" + latest ⇒ the lane negotiated at handshake (stable
-                // for the whole session even if newer epochs register);
-                // anything else re-resolves per request. Resolve + submit
+                // "" + latest ⇒ the lane negotiated at handshake —
+                // **revalidated per request**: a drained/retired session
+                // lane answers its typed lifecycle fault (with the
+                // successor epoch) instead of serving, so rollover is
+                // visible to pipelined sessions, not just new ones.
+                // Anything else re-resolves per request. Resolve + submit
                 // fold into one Result: any Err faults this request only,
                 // never the session (row-length validation happens inside
-                // the lane's batcher `enqueue`).
+                // the lane's batcher `enqueue`, the lifecycle check
+                // inside the lane's state-checked `submit_with`).
                 let tx = out_tx.clone();
                 let m = metrics.clone();
                 let outcome = if model.is_empty() && epoch == EPOCH_LATEST {
@@ -352,7 +411,7 @@ fn run_session(
                     registry.resolve(&model, epoch)
                 }
                 .and_then(|lane| {
-                    lane.handle().submit_with(row.data(), move |result| {
+                    lane.submit_with(row.data(), move |result| {
                         let msg = match result {
                             Ok(logits) => {
                                 m.responses.inc();
@@ -360,7 +419,12 @@ fn run_session(
                             }
                             Err(e) => {
                                 m.faults.inc();
-                                Message::Fault { msg: format!("request {id}: {e}") }
+                                Message::Fault {
+                                    of: id,
+                                    fault: Fault::Generic {
+                                        msg: format!("request {id}: {e}"),
+                                    },
+                                }
                             }
                         };
                         let _ = tx.send(msg);
@@ -368,14 +432,24 @@ fn run_session(
                 });
                 if let Err(e) = outcome {
                     metrics.faults.inc();
-                    let _ = out_tx.send(Message::Fault { msg: format!("request {id}: {e}") });
+                    let fault = match e {
+                        // lifecycle refusals keep their successor info
+                        Error::Draining { .. } | Error::Retired { .. } => {
+                            Fault::from_error(&e)
+                        }
+                        other => Fault::Generic { msg: format!("request {id}: {other}") },
+                    };
+                    let _ = out_tx.send(Message::Fault { of: id, fault });
                 }
             }
             Ok(Message::EndOfData) => break Ok(()),
             Ok(other) => {
                 metrics.faults.inc();
                 let _ = out_tx.send(Message::Fault {
-                    msg: format!("serving session got unexpected {other:?}"),
+                    of: FAULT_SESSION,
+                    fault: Fault::Generic {
+                        msg: format!("serving session got unexpected {other:?}"),
+                    },
                 });
                 break Err(Error::Protocol(format!(
                     "unexpected message in serving session: {other:?}"
@@ -389,13 +463,19 @@ fn run_session(
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
                 let _ = out_tx.send(Message::Fault {
-                    msg: format!("session idle for {:?}, closing", cfg.idle_timeout),
+                    of: FAULT_SESSION,
+                    fault: Fault::Generic {
+                        msg: format!("session idle for {:?}, closing", cfg.idle_timeout),
+                    },
                 });
                 break Err(Error::Protocol("session idle timeout".into()));
             }
             Err(e) => {
                 metrics.faults.inc();
-                let _ = out_tx.send(Message::Fault { msg: e.to_string() });
+                let _ = out_tx.send(Message::Fault {
+                    of: FAULT_SESSION,
+                    fault: Fault::Generic { msg: e.to_string() },
+                });
                 break Err(e);
             }
         }

@@ -24,6 +24,18 @@ pub enum Error {
     /// a typed `Fault` instead of a generic decode error.
     Version { got: u32, want: u32 },
 
+    /// A serving lane refused new work: its key epoch is draining
+    /// (rollover in progress). `successor` is the epoch to re-resolve
+    /// to; `u32::MAX` (the latest-epoch sentinel) means "ask for the
+    /// newest". Servers answer this with a typed `Fault::Draining` so
+    /// clients can retry transparently instead of failing on a string.
+    Draining { model: String, epoch: u32, successor: u32 },
+
+    /// A serving lane is gone for good: its key epoch was retired after
+    /// rollover completed. Same `successor` semantics as
+    /// [`Error::Draining`].
+    Retired { model: String, epoch: u32, successor: u32 },
+
     /// Artifact manifest problems (missing artifact, bad signature).
     Manifest(String),
 
@@ -55,6 +67,14 @@ impl std::fmt::Display for Error {
                 f,
                 "protocol version mismatch: peer speaks v{got}, this build speaks v{want}"
             ),
+            Error::Draining { model, epoch, successor } => {
+                write!(f, "model {model:?} epoch {epoch} is draining; ")?;
+                successor_hint(f, *successor)
+            }
+            Error::Retired { model, epoch, successor } => {
+                write!(f, "model {model:?} epoch {epoch} is retired; ")?;
+                successor_hint(f, *successor)
+            }
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
@@ -62,6 +82,17 @@ impl std::fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
         }
+    }
+}
+
+/// Shared tail for the lifecycle errors (`u32::MAX` is the wire's
+/// latest-epoch sentinel; error.rs stays independent of the coordinator,
+/// so the constant is not imported here).
+fn successor_hint(f: &mut std::fmt::Formatter<'_>, successor: u32) -> std::fmt::Result {
+    if successor == u32::MAX {
+        write!(f, "re-resolve to the latest epoch")
+    } else {
+        write!(f, "re-resolve to epoch {successor}")
     }
 }
 
@@ -107,6 +138,16 @@ mod tests {
         let e = Error::Version { got: 1, want: 2 };
         assert!(e.to_string().contains("v1"));
         assert!(e.to_string().contains("v2"));
+    }
+
+    #[test]
+    fn lifecycle_display_names_the_successor() {
+        let e = Error::Draining { model: "alpha".into(), epoch: 0, successor: 1 };
+        assert!(e.to_string().contains("draining"), "{e}");
+        assert!(e.to_string().contains("epoch 1"), "{e}");
+        let e = Error::Retired { model: "alpha".into(), epoch: 2, successor: u32::MAX };
+        assert!(e.to_string().contains("retired"), "{e}");
+        assert!(e.to_string().contains("latest epoch"), "{e}");
     }
 
     #[test]

@@ -23,17 +23,21 @@
 //!   `artifacts/` directory exists, so the default build is
 //!   self-contained.
 //! * **Key vault ([`keys`])** — the provider's secret bundle (morph seed,
-//!   κ, channel permutation) with **key epochs**: `KeyBundle::rotate`
-//!   advances to fresh material while recording fingerprint lineage, so
-//!   epoch N and N+1 can serve side by side during rollover.
+//!   κ, channel permutation) with **key epochs**: `KeyBundle::rotate` /
+//!   [`keys::rotate_file`] advance to fresh material while recording
+//!   fingerprint lineage, so epoch N and N+1 can serve side by side
+//!   during rollover.
 //! * **Delivery system ([`coordinator`])** — the Fig.-1 protocol between
 //!   data provider and developer (versioned wire frames with model/epoch
-//!   routing), training on morphed streams, and the multi-tenant serving
-//!   path: a [`coordinator::ModelRegistry`] of named models × key epochs,
-//!   each with its own adaptive micro-batcher lane over a shared
-//!   `Send + Sync` engine, fronted by a concurrent TCP server (`mole
-//!   serve`) plus the matching multi-connection load driver (`mole
-//!   loadgen`).
+//!   routing and typed lifecycle faults), training on morphed streams,
+//!   and the multi-tenant serving path: a **live**
+//!   [`coordinator::ModelRegistry`] of named models × key epochs — each
+//!   an adaptive micro-batcher lane over a shared `Send + Sync` engine,
+//!   moving through the Active → Draining → Retired rollover lifecycle —
+//!   fronted by a concurrent TCP server (`mole serve`) with a
+//!   loopback-only admin surface ([`coordinator::admin`], `mole admin`)
+//!   for runtime register/drain/retire, plus the matching
+//!   multi-connection load driver (`mole loadgen`).
 //! * **Client SDK ([`coordinator::client`])** — the typed
 //!   [`coordinator::MoleClient`] (connect / `infer` / `infer_batch` /
 //!   `stream_training`) and provider-side session endpoint; no consumer

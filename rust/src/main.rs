@@ -21,6 +21,14 @@
 //! * `rotate-key --vault FILE [--seed S] [--out FILE]` — rotate a vault
 //!   to the next key epoch (fresh morph seed + permutation, lineage
 //!   recorded)
+//! * `admin <register|drain|retire|status> [--connect ADDR]` — drive a
+//!   running server's live registry (loopback only):
+//!   `register --model NAME [--vault FILE | --kappa K --seed S]
+//!   [--trunk-seed T]` starts a new lane (the vault path is read by the
+//!   **server**); `drain --model NAME --epoch E` stops new traffic on an
+//!   epoch (clients re-resolve via the typed draining fault);
+//!   `retire --model NAME --epoch E` tears the drained lane down once
+//!   its batcher is empty; `status` prints one line per lane
 //! * `e2e [--steps N]` — in-process §4.4 three-group experiment (short)
 //! * `attack [--kappa K]` — run the three §4.2 attacks at small scale
 //!
@@ -68,11 +76,12 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("loadgen") => loadgen(&args, &cfg),
         Some("keygen") => keygen(&args, &cfg),
         Some("rotate-key") => rotate_key(&args),
+        Some("admin") => admin(&args, &cfg),
         Some("e2e") => e2e(&args, &cfg),
         Some("attack") => attack(&args, &cfg),
         _ => {
             eprintln!(
-                "usage: mole <security-report|overhead|morph|provider|developer|serve|loadgen|keygen|rotate-key|e2e|attack> [options]"
+                "usage: mole <security-report|overhead|morph|provider|developer|serve|loadgen|keygen|rotate-key|admin|e2e|attack> [options]"
             );
             Ok(())
         }
@@ -212,7 +221,7 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
 
     let manifest = mole::manifest::Manifest::load(Path::new(&cfg.artifacts_dir))?;
     let engine = SharedEngine::new(manifest.clone());
-    let mut registry = ModelRegistry::new(engine, batcher.clone());
+    let registry = ModelRegistry::new(engine, batcher.clone());
     for spec in &cfg.models {
         if let Some(sel) = &selected {
             if !sel.contains(&spec.name.as_str()) {
@@ -234,30 +243,39 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
             )));
         }
     }
+    let admin_enabled = cfg.admin_enabled && !args.flag("no-admin");
     let labels = registry.labels();
     let server = Server::bind(
         registry,
         ServeConfig {
             addr: addr.clone(),
             session_workers: workers,
+            admin_enabled,
             ..ServeConfig::default()
         },
     )?;
     println!(
-        "serving {} on {} (workers={workers}, max_batch={}, window={}..{}us{})",
+        "serving {} on {} (workers={workers}, max_batch={}, window={}..{}us{}, admin {})",
         labels.join(", "),
         server.local_addr(),
         batcher.max_batch,
         batcher.min_timeout.as_micros(),
         batcher.timeout.as_micros(),
         if batcher.adaptive { ", adaptive" } else { ", fixed" },
+        if admin_enabled { "on (loopback)" } else { "off" },
     );
     // wire-level counters live on the server; batching/latency live on
     // each lane — print both so the status lines actually show coalescing
     let print_status = |server: &Server| {
         println!("server: {}", server.metrics().report());
         for lane in server.registry().lanes() {
-            println!("{}@{}: {}", lane.name(), lane.epoch(), lane.handle().metrics.report());
+            println!(
+                "{}@{} [{}]: {}",
+                lane.name(),
+                lane.epoch(),
+                lane.state(),
+                lane.handle().metrics.report()
+            );
         }
     };
     if max_requests > 0 {
@@ -348,20 +366,58 @@ fn rotate_key(args: &Args) -> Result<()> {
     let vault = args
         .get("vault")
         .ok_or_else(|| mole::Error::Config("rotate-key requires --vault FILE".into()))?;
-    let keys = mole::keys::KeyBundle::load(Path::new(vault))?;
-    let new_seed = args.get_u64("seed", keys.morph_seed.wrapping_add(1))?;
-    let rotated = keys.rotate(new_seed)?;
+    let new_seed = args.get("seed").map(|_| args.get_u64("seed", 0)).transpose()?;
     let out = args.get_or("out", vault);
-    rotated.save(Path::new(&out))?;
-    println!(
-        "rotated {vault} -> {out}: epoch {} -> {}",
-        keys.epoch, rotated.epoch
-    );
+    let (old, rotated) = mole::keys::rotate_file(Path::new(vault), new_seed, Path::new(&out))?;
+    println!("rotated {vault} -> {out}: epoch {} -> {}", old.epoch, rotated.epoch);
     println!("  parent fingerprint {}", rotated.parent_fingerprint);
     println!("  new fingerprint    {}", rotated.fingerprint());
-    println!("re-morph the corpus under the new epoch, register it for serving,");
-    println!("and drain the old lane to complete the rollover.");
+    println!("re-morph the corpus under the new epoch, then complete the live rollover:");
+    println!("  mole admin register --model NAME --vault {out}");
+    println!("  mole admin drain --model NAME --epoch {}", old.epoch);
+    println!("  mole admin retire --model NAME --epoch {}", old.epoch);
     Ok(())
+}
+
+fn admin(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::coordinator::AdminClient;
+
+    let addr = args.get_or("connect", &cfg.addr);
+    let verb = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        mole::Error::Config("usage: mole admin <register|drain|retire|status> [options]".into())
+    })?;
+    let model_arg = || {
+        args.get("model")
+            .map(|s| s.to_string())
+            .ok_or_else(|| mole::Error::Config(format!("admin {verb} requires --model NAME")))
+    };
+    let epoch_arg = || {
+        args.get("epoch")
+            .ok_or_else(|| mole::Error::Config(format!("admin {verb} requires --epoch E")))?
+            .parse::<u32>()
+            .map_err(|_| mole::Error::Config("--epoch must be an integer".into()))
+    };
+    let mut client = AdminClient::connect(&addr)?;
+    let detail = match verb {
+        "register" => {
+            let model = model_arg()?;
+            let vault = args.get_or("vault", "");
+            let kappa = args.get_usize("kappa", cfg.kappa)?;
+            let seed = args.get_u64("seed", cfg.seed)?;
+            let trunk_seed = args.get_u64("trunk-seed", seed)?;
+            client.register(&model, &vault, kappa, seed, trunk_seed)?
+        }
+        "drain" => client.drain(&model_arg()?, epoch_arg()?)?,
+        "retire" => client.retire(&model_arg()?, epoch_arg()?)?,
+        "status" => client.status()?,
+        other => {
+            return Err(mole::Error::Config(format!(
+                "unknown admin verb {other:?} (register|drain|retire|status)"
+            )))
+        }
+    };
+    println!("{detail}");
+    client.finish()
 }
 
 fn e2e(args: &Args, cfg: &MoleConfig) -> Result<()> {

@@ -87,7 +87,7 @@ pub mod net {
     /// payload opens with the geometry's α). The single source of truth
     /// for what a pre-versioning peer puts on the wire — back-compat
     /// tests in `protocol.rs`, `client.rs` and `tests/serving_e2e.rs`
-    /// all feed this to a v2 endpoint and expect the typed
+    /// all feed this to a current-version endpoint and expect the typed
     /// version-mismatch `Fault`.
     pub fn legacy_v1_hello_frame() -> Vec<u8> {
         let mut payload = Vec::new();

@@ -1,0 +1,355 @@
+//! Lifecycle end-to-end tests: the live registry under real traffic.
+//!
+//! The rotate-under-load scenario is the race the fixed-at-startup
+//! design never had to face: pipelined clients on `alpha@0` while the
+//! admin surface registers `alpha@1` and drains `alpha@0` mid-run. The
+//! harness makes it deterministic with barriers (phase 1 strictly
+//! before the rotation, phase 2 strictly after), so every assertion is
+//! exact: zero lost or duplicated responses, every response bitwise
+//! equal to single-row inference on whichever epoch served it, the
+//! drained lane's batcher flushed before retire, and retire refused
+//! while the queue is non-empty.
+
+use mole::coordinator::batcher::BatcherConfig;
+use mole::coordinator::client::{ClientConfig, MoleClient};
+use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry, RegisteredModel};
+use mole::coordinator::server::{ServeConfig, Server};
+use mole::coordinator::{AdminClient, LaneState, EPOCH_LATEST};
+use mole::keys::KeyBundle;
+use mole::manifest::Manifest;
+use mole::rng::Rng;
+use mole::runtime::{Arg, SharedEngine};
+use mole::tensor::Tensor;
+use mole::{Error, Geometry};
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+const KAPPA: usize = 16;
+const SEED: u64 = 9090;
+
+fn manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).unwrap()
+}
+
+/// The two epochs of the rollover, reconstructible bitwise: the server
+/// builds its lanes from the same `(keys, trunk_seed)` pair.
+fn epoch_keys() -> (KeyBundle, KeyBundle) {
+    let root = KeyBundle::generate(Geometry::SMALL, KAPPA, SEED).unwrap();
+    let rotated = root.rotate(SEED + 1).unwrap();
+    (root, rotated)
+}
+
+fn entry(m: &Manifest, keys: &KeyBundle) -> RegisteredModel {
+    demo_entry_from_keys(m, "alpha", keys, SEED).unwrap()
+}
+
+/// Reference: one row through the batch-1 artifact — what every served
+/// response must match bitwise, per epoch.
+fn single_row_logits(engine: &SharedEngine, e: &RegisteredModel, row: &[f32]) -> Vec<f32> {
+    let mut args: Vec<Arg> = vec![
+        Arg::T(e.layer.matrix().clone()),
+        Arg::T(Tensor::new(&[e.layer.bias().len()], e.layer.bias().to_vec()).unwrap()),
+    ];
+    for p in &e.params {
+        args.push(Arg::T(p.clone()));
+    }
+    args.push(Arg::T(Tensor::new(&[1, row.len()], row.to_vec()).unwrap()));
+    engine.exec("infer_aug_small_b1", &args).unwrap()[0].data().to_vec()
+}
+
+fn client_rows(client_id: u64, phase: u64, n: usize, d_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0x11FE ^ (client_id * 7919) ^ (phase * 104729));
+    (0..n).map(|_| rng.normal_vec(d_len, 0.5)).collect()
+}
+
+/// Bit-exact view of logits (f32 `==` would let ±0.0 slip through).
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Satellite 1: rotate under load. N pipelined clients on `alpha@0`
+/// while the admin surface registers `alpha@1` (from a rotated vault
+/// file) and drains `alpha@0`; drained-epoch clients re-resolve through
+/// the typed draining fault; nothing is lost, duplicated, or wrong.
+#[test]
+fn rotate_under_load_loses_nothing() {
+    const CLIENTS: usize = 4;
+    const PER_PHASE: usize = 4;
+
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let (root, rotated) = epoch_keys();
+    let registry = ModelRegistry::new(
+        engine.clone(),
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(5),
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(&m, &root)).unwrap();
+    let server = Server::bind(
+        registry,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 8,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // the rotated epoch's vault, written where the server can read it
+    let vault = std::env::temp_dir().join(format!("mole_lifecycle_vault_{SEED}.key"));
+    rotated.save(&vault).unwrap();
+
+    // phase barriers: everyone finishes phase 1 → admin rotates →
+    // everyone runs phase 2. Deterministic by construction.
+    let rotate_start = Arc::new(Barrier::new(CLIENTS + 1));
+    let rotate_done = Arc::new(Barrier::new(CLIENTS + 1));
+
+    let mut threads = Vec::new();
+    for c in 0..CLIENTS as u64 {
+        let (b1, b2) = (rotate_start.clone(), rotate_done.clone());
+        threads.push(std::thread::spawn(move || {
+            let mut client =
+                MoleClient::connect_with(addr, ClientConfig::pinned("alpha", 0)).unwrap();
+            assert_eq!(client.server_info().unwrap().epoch, 0);
+            let d = client.d_len();
+            // phase 1: strictly before the rotation — epoch 0 serves
+            let rows1 = client_rows(c, 1, PER_PHASE, d);
+            let got1 = client.infer_batch(&rows1).unwrap();
+            assert_eq!(client.drain_redirects(), 0);
+            b1.wait();
+            b2.wait();
+            // phase 2: strictly after the drain — every request is
+            // refused typed and transparently re-sent to epoch 1
+            let rows2 = client_rows(c, 2, PER_PHASE, d);
+            let got2 = client.infer_batch(&rows2).unwrap();
+            let redirects = client.drain_redirects();
+            client.finish().unwrap();
+            (got1, got2, redirects)
+        }));
+    }
+
+    rotate_start.wait();
+    // live rollover via the admin surface, against the running server
+    let mut admin = AdminClient::connect(addr).unwrap();
+    let detail = admin
+        .register("alpha", vault.to_str().unwrap(), KAPPA, SEED, SEED)
+        .unwrap();
+    assert!(detail.contains("registered alpha@1"), "{detail}");
+    let detail = admin.drain("alpha", 0).unwrap();
+    assert!(detail.contains("successor 1"), "{detail}");
+    rotate_done.wait();
+
+    let results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    std::fs::remove_file(&vault).ok();
+
+    // bitwise ground truth per epoch, rebuilt from the same keys
+    let (e0, e1) = (entry(&m, &root), entry(&m, &rotated));
+    let d_len = m.geometry("small").unwrap().d_len();
+    // sanity: the two epochs really serve different models
+    let probe = &client_rows(0, 1, 1, d_len)[0];
+    assert_ne!(
+        single_row_logits(&engine, &e0, probe),
+        single_row_logits(&engine, &e1, probe),
+        "rotation did not change the served model"
+    );
+    for (c, (got1, got2, redirects)) in results.iter().enumerate() {
+        // zero lost/duplicated: infer_batch yields exactly one response
+        // per row, id-matched
+        assert_eq!(got1.len(), PER_PHASE);
+        assert_eq!(got2.len(), PER_PHASE);
+        // phase 1 rows answered by epoch 0, bitwise
+        for (i, row) in client_rows(c as u64, 1, PER_PHASE, d_len).iter().enumerate() {
+            assert_eq!(
+                bits(&got1[i]),
+                bits(&single_row_logits(&engine, &e0, row)),
+                "client {c} phase-1 row {i} not bitwise-equal on epoch 0"
+            );
+        }
+        // phase 2 rows re-resolved to epoch 1, bitwise
+        for (i, row) in client_rows(c as u64, 2, PER_PHASE, d_len).iter().enumerate() {
+            assert_eq!(
+                bits(&got2[i]),
+                bits(&single_row_logits(&engine, &e1, row)),
+                "client {c} phase-2 row {i} not bitwise-equal on epoch 1"
+            );
+        }
+        // every phase-2 request was pipelined before the first fault
+        // came back, so each one took exactly one typed redirect
+        assert_eq!(*redirects, PER_PHASE as u64, "client {c}");
+    }
+
+    // per-lane accounting: epoch 0 answered exactly the phase-1 rows
+    // (its tail flushed — nothing abandoned), epoch 1 the phase-2 rows
+    let lane0 = server
+        .registry()
+        .lanes()
+        .into_iter()
+        .find(|l| l.epoch() == 0)
+        .unwrap();
+    let lane1 = server.registry().resolve("alpha", 1).unwrap();
+    assert_eq!(lane0.state(), LaneState::Draining);
+    assert_eq!(lane0.handle().metrics.responses.get(), (CLIENTS * PER_PHASE) as u64);
+    assert_eq!(lane1.handle().metrics.responses.get(), (CLIENTS * PER_PHASE) as u64);
+    assert_eq!(lane0.handle().in_flight(), 0, "drained lane still holds requests");
+    assert_eq!(
+        server.metrics().responses.get(),
+        (2 * CLIENTS * PER_PHASE) as u64,
+        "a response was lost or duplicated on the wire"
+    );
+    // the refusals were real: one typed fault per phase-2 request
+    assert_eq!(server.metrics().faults.get(), (CLIENTS * PER_PHASE) as u64);
+
+    // rollover completes: retire the flushed lane, live
+    let detail = admin.retire("alpha", 0).unwrap();
+    assert!(detail.contains("retired alpha@0"), "{detail}");
+    let status = admin.status().unwrap();
+    assert!(status.contains("alpha@0 state=retired successor=1"), "{status}");
+    assert!(status.contains("alpha@1 state=active"), "{status}");
+    admin.finish().unwrap();
+
+    // a late client pinned to the retired epoch re-resolves at the
+    // handshake (typed retired fault → successor) and still gets
+    // bitwise-correct service from epoch 1
+    let mut late =
+        MoleClient::connect_with(addr, ClientConfig::pinned("alpha", 0)).unwrap();
+    assert_eq!(late.server_info().unwrap().epoch, 1);
+    assert_eq!(late.drain_redirects(), 1);
+    let row = client_rows(99, 3, 1, d_len).remove(0);
+    assert_eq!(
+        bits(&late.infer(&row).unwrap()),
+        bits(&single_row_logits(&engine, &e1, &row))
+    );
+    late.finish().unwrap();
+
+    server.stop();
+}
+
+/// Acceptance: no lane can be retired while its batcher queue is
+/// non-empty — and the tail it holds is flushed, bitwise-correct,
+/// before a retire is allowed through. Deterministic: a long fixed hold
+/// window parks the submitted rows, so the in-flight window is seconds
+/// wide while the lifecycle verbs run in microseconds.
+#[test]
+fn retire_refused_until_batcher_tail_flushes() {
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let (root, rotated) = epoch_keys();
+    let registry = ModelRegistry::new(
+        engine.clone(),
+        BatcherConfig {
+            max_batch: 32,
+            timeout: Duration::from_millis(600),
+            adaptive: false,
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(&m, &root)).unwrap();
+    registry.register(entry(&m, &rotated)).unwrap();
+    let e0 = entry(&m, &root);
+    let d_len = m.geometry("small").unwrap().d_len();
+
+    // park three rows in epoch 0's hold window
+    let lane0 = registry.resolve("alpha", 0).unwrap();
+    let rows = client_rows(7, 1, 3, d_len);
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    for (i, row) in rows.iter().enumerate() {
+        let tx = done_tx.clone();
+        lane0.submit_with(row, move |r| tx.send((i, r)).unwrap()).unwrap();
+    }
+    drop(done_tx);
+    assert_eq!(lane0.handle().in_flight(), 3);
+
+    // drain: new work refused typed, parked work untouched
+    assert_eq!(registry.drain("alpha", 0).unwrap(), 1);
+    assert!(matches!(
+        registry.resolve("alpha", 0),
+        Err(Error::Draining { successor: 1, .. })
+    ));
+    assert!(matches!(
+        lane0.submit_with(&rows[0], |_| {}),
+        Err(Error::Draining { successor: 1, .. })
+    ));
+
+    // the acceptance gate: retire must refuse while the queue holds rows
+    let err = registry.retire("alpha", 0).unwrap_err();
+    assert!(err.to_string().contains("in flight"), "{err}");
+    assert!(err.to_string().contains("3"), "{err}");
+
+    // the tail flushes at the window deadline — every parked row
+    // answered, bitwise-equal to single-row inference on epoch 0
+    let mut flushed = 0;
+    for (i, result) in done_rx {
+        assert_eq!(
+            bits(&result.unwrap()),
+            bits(&single_row_logits(&engine, &e0, &rows[i])),
+            "parked row {i} lost or wrong at flush"
+        );
+        flushed += 1;
+    }
+    assert_eq!(flushed, 3, "drained lane dropped part of its tail");
+
+    // in-flight hits zero (reply guards drop just after delivery)
+    let t0 = Instant::now();
+    while lane0.handle().in_flight() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(2), "in-flight never drained");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // now — and only now — retire goes through
+    registry.retire("alpha", 0).unwrap();
+    assert_eq!(lane0.state(), LaneState::Retired);
+    assert!(lane0.handle().is_closed());
+    assert!(matches!(
+        lane0.submit_with(&rows[0], |_| {}),
+        Err(Error::Retired { successor: 1, .. })
+    ));
+    assert!(matches!(
+        registry.resolve("alpha", 0),
+        Err(Error::Retired { successor: 1, .. })
+    ));
+    // epoch 1 is untouched by its sibling's teardown
+    let lane1 = registry.resolve("alpha", EPOCH_LATEST).unwrap();
+    assert_eq!(lane1.epoch(), 1);
+    let row = &client_rows(8, 1, 1, d_len)[0];
+    assert_eq!(lane1.infer(row).unwrap().len(), 10);
+}
+
+/// The admin surface can be disabled: a server bound with
+/// `admin_enabled: false` refuses admin frames with a typed fault.
+#[test]
+fn disabled_admin_surface_refuses_typed() {
+    let m = manifest();
+    let registry = ModelRegistry::new(
+        SharedEngine::new(m.clone()),
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(&m, &epoch_keys().0)).unwrap();
+    let server = Server::bind(
+        registry,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 2,
+            admin_enabled: false,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut admin = AdminClient::connect(server.local_addr()).unwrap();
+    let err = admin.status().unwrap_err();
+    assert!(err.to_string().contains("disabled"), "{err}");
+    // serving traffic is unaffected
+    let mut client = MoleClient::connect(server.local_addr()).unwrap();
+    let d = client.d_len();
+    assert_eq!(client.infer(&vec![0.1; d]).unwrap().len(), 10);
+    client.finish().unwrap();
+    server.stop();
+}

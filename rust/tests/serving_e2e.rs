@@ -7,16 +7,17 @@
 use mole::coordinator::batcher::BatcherConfig;
 use mole::coordinator::client::{ClientConfig, MoleClient};
 use mole::coordinator::loadgen::{run, LoadgenConfig};
+use mole::coordinator::protocol::read_message;
 use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry, RegisteredModel};
 use mole::coordinator::server::{ServeConfig, Server};
-use mole::coordinator::EPOCH_LATEST;
+use mole::coordinator::{Fault, Message, EPOCH_LATEST};
 use mole::keys::KeyBundle;
 use mole::manifest::Manifest;
 use mole::rng::Rng;
 use mole::runtime::{Arg, SharedEngine};
 use mole::tensor::Tensor;
 use mole::Geometry;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -48,7 +49,7 @@ fn entries(m: &Manifest) -> Vec<RegisteredModel> {
 fn start_server(max_batch: usize, timeout_ms: u64) -> (Server, SharedEngine) {
     let m = manifest();
     let engine = SharedEngine::new(m.clone());
-    let mut registry = ModelRegistry::new(
+    let registry = ModelRegistry::new(
         engine.clone(),
         BatcherConfig {
             max_batch,
@@ -236,17 +237,13 @@ fn unknown_models_and_old_peers_get_typed_faults() {
     let mut sock = std::net::TcpStream::connect(addr).unwrap();
     sock.write_all(&mole::testkit::net::legacy_v1_hello_frame()).unwrap();
     sock.flush().unwrap();
-    // the reply is a Fault frame: magic "ML", tag 9, then the message
-    let mut head = [0u8; 7];
-    sock.read_exact(&mut head).unwrap();
-    assert_eq!(&head[0..2], b"ML");
-    assert_eq!(head[2], 9, "expected a Fault frame");
-    let len = u32::from_le_bytes(head[3..7].try_into().unwrap()) as usize;
-    let mut body = vec![0u8; len];
-    sock.read_exact(&mut body).unwrap();
-    let msg = String::from_utf8_lossy(&body[4..]); // skip the str length
-    assert!(msg.contains("version mismatch"), "{msg}");
-    assert!(msg.contains("v3") && msg.contains("v2"), "{msg}");
+    match read_message(&mut sock).unwrap() {
+        Message::Fault { fault: Fault::Generic { msg }, .. } => {
+            assert!(msg.contains("version mismatch"), "{msg}");
+            assert!(msg.contains("v3") && msg.contains("v4"), "{msg}");
+        }
+        other => panic!("expected a generic Fault frame, got {other:?}"),
+    }
 
     server.stop();
 }
@@ -264,15 +261,13 @@ fn bad_frames_fault_the_session_not_the_server() {
         let mut sock = std::net::TcpStream::connect(addr).unwrap();
         sock.write_all(b"XXXXXXXXXXXX").unwrap();
         sock.flush().unwrap();
-        // server answers Fault and ends the session; read the raw frame
-        let mut head = [0u8; 7];
-        sock.read_exact(&mut head).unwrap();
-        assert_eq!(&head[0..2], b"ML");
-        assert_eq!(head[2], 9, "expected a Fault frame");
-        let len = u32::from_le_bytes(head[3..7].try_into().unwrap()) as usize;
-        let mut body = vec![0u8; len];
-        sock.read_exact(&mut body).unwrap();
-        assert!(String::from_utf8_lossy(&body).contains("magic"));
+        // server answers a typed Fault and ends the session
+        match read_message(&mut sock).unwrap() {
+            Message::Fault { fault, .. } => {
+                assert!(fault.to_string().contains("magic"), "{fault}")
+            }
+            other => panic!("expected a Fault frame, got {other:?}"),
+        }
     }
 
     // session 2: wrong row length faults the request, not the session;
