@@ -147,9 +147,15 @@ pub struct MoleConfig {
     pub adaptive_batching: bool,
     /// Serving: session worker threads (max concurrent TCP sessions).
     pub serve_workers: usize,
-    /// Serving: accept loopback `Admin*` frames (live register / drain /
-    /// retire / status). Off, the registry is fixed at startup.
+    /// Serving: accept `Admin*` frames (live register / drain / retire /
+    /// status). Off, the registry is fixed at startup.
     pub admin_enabled: bool,
+    /// Serving: path to an admin-credential file (64 hex chars, the
+    /// `mole keygen --credential-out` output). Empty = no credential:
+    /// the admin plane keeps the legacy loopback-only gate. Non-empty =
+    /// every admin frame must be MAC-authenticated against the loaded
+    /// credential, and non-loopback admin peers become legal.
+    pub admin_credential_file: String,
     /// Training: steps / learning rate.
     pub train_steps: usize,
     pub lr: f64,
@@ -182,6 +188,7 @@ impl Default for MoleConfig {
             adaptive_batching: true,
             serve_workers: 8,
             admin_enabled: true,
+            admin_credential_file: String::new(),
             train_steps: 300,
             lr: 0.05,
             data_seed: 7,
@@ -245,6 +252,9 @@ impl MoleConfig {
             adaptive_batching: raw.get_bool("serving", "adaptive", d.adaptive_batching)?,
             serve_workers: raw.get_usize("serving", "workers", d.serve_workers)?,
             admin_enabled: raw.get_bool("serving", "admin", d.admin_enabled)?,
+            admin_credential_file: raw
+                .get_or("serving", "admin_credential_file", &d.admin_credential_file)
+                .to_string(),
             train_steps: raw.get_usize("train", "steps", d.train_steps)?,
             lr: raw.get_f64("train", "lr", d.lr)?,
             data_seed: raw.get_u64("data", "seed", d.data_seed)?,
@@ -327,8 +337,17 @@ lr = 0.1
         assert!(!cfg.adaptive_batching);
         assert_eq!(cfg.serve_workers, 4);
         assert!(!cfg.admin_enabled);
-        // admin defaults on when the key is absent
+        // admin defaults on when the key is absent, with no credential
         assert!(MoleConfig::default().admin_enabled);
+        assert!(MoleConfig::default().admin_credential_file.is_empty());
+        assert!(cfg.admin_credential_file.is_empty());
+        // a configured credential file parses through
+        let raw = RawConfig::parse(
+            "[serving]\nadmin_credential_file = \"ops/admin.cred\"\n",
+        )
+        .unwrap();
+        let with_cred = MoleConfig::from_raw(&raw).unwrap();
+        assert_eq!(with_cred.admin_credential_file, "ops/admin.cred");
         // default kept where unspecified
         assert_eq!(cfg.addr, "127.0.0.1:7433");
         assert_eq!(cfg.geometry, Geometry::SMALL);

@@ -2,14 +2,29 @@
 //! registration, epoch drain, retire, and status over the same wire
 //! protocol as serving traffic.
 //!
-//! An admin session opens with an `Admin*` frame instead of `Hello`; the
-//! server accepts it **only from loopback peers** (and only when
-//! [`super::server::ServeConfig::admin_enabled`] is set), so the control
-//! plane rides the existing listener without exposing lifecycle verbs to
-//! remote clients. Key material never crosses the connection:
-//! `AdminRegister` names a vault file on the **server's** filesystem
-//! (the `mole keygen` / `mole rotate-key` output), which the server
-//! loads itself — completing the vault → live rotate → register path.
+//! An admin session opens with an `Admin*` frame instead of `Hello`
+//! (and only when [`super::server::ServeConfig::admin_enabled`] is
+//! set). Access control comes in two modes:
+//!
+//! * **No credential configured** — legacy gate: bare admin verbs are
+//!   accepted **only from loopback peers**, exactly as before v5.
+//! * **Credential configured** ([`ServeConfig::admin_credential`],
+//!   the vault-derived [`crate::keys::KeyBundle::admin_credential`]) —
+//!   every admin verb must ride the authenticated envelope: the session
+//!   opens with `AdminHello`, the server answers `AdminChallenge` with
+//!   a fresh nonce, and each verb arrives as `AdminAuthed` (monotonic
+//!   frame counter + HMAC over tag/counter/payload, verified in
+//!   constant time **before** dispatch — see
+//!   [`super::protocol::open_admin`]). With the MAC in force, admin
+//!   peers no longer need to be loopback — this is what makes a remote
+//!   `mole admin --credential` deployment legal. A bare (downgraded)
+//!   admin verb on a credential-gated server is refused typed, as is an
+//!   `AdminHello` against a server with no credential.
+//!
+//! Key material never crosses the connection: `AdminRegister` names a
+//! vault file on the **server's** filesystem (the `mole keygen` /
+//! `mole rotate-key` output), which the server loads itself —
+//! completing the vault → live rotate → register path.
 //!
 //! The rollover runbook this module exists for:
 //!
@@ -21,11 +36,14 @@
 //!    [`super::MoleClient`] re-resolves transparently
 //! 4. `mole admin retire --model alpha --epoch 0` — refused until the
 //!    old lane's batcher is empty, then the lane worker is torn down
+//!
+//! [`ServeConfig::admin_credential`]: super::server::ServeConfig::admin_credential
 
 use super::protocol::{
-    read_message, write_message, Fault, Message, FAULT_SESSION,
+    open_admin, read_message, seal_admin, write_message, Fault, Message, FAULT_SESSION,
 };
 use super::registry::ModelRegistry;
+use crate::hash::Sha256;
 use crate::keys::KeyBundle;
 use crate::{Error, Result};
 use std::io::{Read, Write};
@@ -86,6 +104,100 @@ fn apply(registry: &Arc<ModelRegistry>, msg: &Message) -> Result<String> {
     }
 }
 
+/// A fresh 32-byte challenge nonce. There is no OS RNG in the
+/// dependency-free build, so uniqueness (the property anti-replay
+/// actually needs — nonces are not secrets, they cross the wire in
+/// `AdminChallenge`) comes from hashing a process-global counter with
+/// the wall clock, the pid, and an ASLR-shifted heap address. Two
+/// sessions can never see the same nonce within one process (the
+/// counter alone guarantees that), and restarts are separated by
+/// time/pid/ASLR entropy.
+fn fresh_nonce() -> [u8; 32] {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let mut h = Sha256::new();
+    h.update(b"mole-admin-nonce-v1");
+    h.update(COUNTER.fetch_add(1, Ordering::Relaxed).to_le_bytes());
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    h.update(now.as_nanos().to_le_bytes());
+    h.update(std::process::id().to_le_bytes());
+    let probe = Box::new(0u8);
+    h.update((&*probe as *const u8 as usize).to_le_bytes());
+    h.finalize()
+}
+
+/// Server side of an **authenticated** admin session: issue the
+/// challenge nonce, then require every verb to arrive sealed
+/// ([`Message::AdminAuthed`]) with a valid constant-time-verified MAC
+/// and a strictly-increasing frame counter. Verb-level failures (vault
+/// load, duplicate register, retire-while-busy …) answer a typed
+/// `Fault` and keep the session alive, like the unauthenticated plane —
+/// but **authentication** failures (forged MAC, replay, a bare admin
+/// verb slipped in as a downgrade) answer their typed
+/// `Fault::AdminAuth` and then terminate the session: a peer that fails
+/// the MAC once is not an operator having a bad day, and it gets no
+/// second frame to probe with.
+pub(crate) fn run_authed_admin_session<S: Read + Write>(
+    mut stream: S,
+    registry: &Arc<ModelRegistry>,
+    credential: &[u8; 32],
+) -> Result<()> {
+    let nonce = fresh_nonce();
+    write_message(&mut stream, &Message::AdminChallenge { nonce })?;
+    let mut last_counter = 0u64;
+    loop {
+        let frame = match read_message(&mut stream) {
+            Ok(Message::EndOfData) => {
+                let _ = write_message(&mut stream, &Message::EndOfData);
+                return Ok(());
+            }
+            Ok(m) => m,
+            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Ok(())
+            }
+            Err(e) => return Err(e),
+        };
+        if !matches!(frame, Message::AdminAuthed { .. }) {
+            // downgrade attempt: a bare admin verb (or anything else)
+            // on the authenticated plane is never dispatched
+            let e = Error::AdminAuth(
+                "admin frames must be authenticated on this server".into(),
+            );
+            let _ = write_message(
+                &mut stream,
+                &Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
+            );
+            return Err(e);
+        }
+        let inner = match open_admin(credential, &nonce, last_counter, &frame) {
+            Ok((counter, inner)) => {
+                last_counter = counter;
+                inner
+            }
+            Err(e) => {
+                let _ = write_message(
+                    &mut stream,
+                    &Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
+                );
+                return Err(e);
+            }
+        };
+        let reply = match apply(registry, &inner) {
+            Ok(detail) => {
+                crate::logging::info(&format!(
+                    "admin(authed): {}",
+                    detail.lines().next().unwrap_or("")
+                ));
+                Message::AdminOk { detail }
+            }
+            Err(e) => Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
+        };
+        write_message(&mut stream, &reply)?;
+    }
+}
+
 /// Server side of an admin session. `first` is the frame that identified
 /// the session as admin (already read by the serving handshake); further
 /// admin frames are processed until `EndOfData` (answered in kind) or
@@ -125,31 +237,86 @@ pub(crate) fn run_admin_session<S: Read + Write>(
     }
 }
 
+/// Client-side authentication state: the configured credential plus the
+/// session nonce and frame counter once the challenge handshake ran.
+struct AuthState {
+    credential: [u8; 32],
+    nonce: [u8; 32],
+    counter: u64,
+}
+
 /// Typed client for the admin surface — what `mole admin` and the
 /// lifecycle tests drive. Generic over the transport like
-/// [`super::MoleClient`].
+/// [`super::MoleClient`]. Plain connections speak the legacy
+/// loopback-gated plane; [`AdminClient::connect_with_credential`] /
+/// [`AdminClient::authenticate`] switch to the authenticated plane
+/// (challenge handshake, then every verb sealed with a MAC and a
+/// monotonic frame counter).
 pub struct AdminClient<S: Read + Write = TcpStream> {
     stream: S,
+    auth: Option<AuthState>,
 }
 
 impl AdminClient<TcpStream> {
-    /// Connect to a serving endpoint's admin surface (must be loopback —
-    /// the server refuses admin frames from anywhere else).
+    /// Connect to a serving endpoint's **unauthenticated** admin surface
+    /// (must be loopback — a server without a credential refuses admin
+    /// frames from anywhere else, and a credential-gated server refuses
+    /// them from everywhere).
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
         let sock = TcpStream::connect(addr)?;
         sock.set_nodelay(true).ok();
-        Ok(Self { stream: sock })
+        Ok(Self { stream: sock, auth: None })
+    }
+
+    /// Connect and run the authenticated handshake: `AdminHello` out,
+    /// challenge nonce back, every subsequent verb sealed under
+    /// `credential`. This is the remote-legal path — the server drops
+    /// its loopback requirement exactly when the credential gate is on.
+    pub fn connect_with_credential<A: ToSocketAddrs>(
+        addr: A,
+        credential: [u8; 32],
+    ) -> Result<Self> {
+        let mut client = Self::connect(addr)?;
+        client.authenticate(credential)?;
+        Ok(client)
     }
 }
 
 impl<S: Read + Write> AdminClient<S> {
     /// Run the admin protocol over an arbitrary transport.
     pub fn over(stream: S) -> Self {
-        Self { stream }
+        Self { stream, auth: None }
+    }
+
+    /// Perform the challenge handshake on an already-open transport. The
+    /// server's refusals (credential not configured, admin disabled)
+    /// surface as their typed errors.
+    pub fn authenticate(&mut self, credential: [u8; 32]) -> Result<()> {
+        write_message(&mut self.stream, &Message::AdminHello)?;
+        match read_message(&mut self.stream)? {
+            Message::AdminChallenge { nonce } => {
+                self.auth = Some(AuthState { credential, nonce, counter: 0 });
+                Ok(())
+            }
+            Message::Fault { fault, .. } => Err(fault.into_error()),
+            other => Err(Error::Protocol(format!(
+                "expected AdminChallenge or Fault, got {other:?}"
+            ))),
+        }
     }
 
     fn call(&mut self, msg: &Message) -> Result<String> {
-        write_message(&mut self.stream, msg)?;
+        match &mut self.auth {
+            Some(auth) => {
+                auth.counter += 1;
+                let sealed =
+                    seal_admin(&auth.credential, &auth.nonce, auth.counter, msg);
+                write_message(&mut self.stream, &sealed)?;
+            }
+            None => {
+                write_message(&mut self.stream, msg)?;
+            }
+        }
         match read_message(&mut self.stream)? {
             Message::AdminOk { detail } => Ok(detail),
             Message::Fault { fault, .. } => Err(fault.into_error()),
@@ -291,5 +458,71 @@ mod tests {
             reg.resolve("alpha", 0),
             Err(Error::Retired { successor: 1, .. })
         ));
+    }
+
+    /// The authenticated plane over a pipe: challenge handshake, sealed
+    /// verbs dispatch, verb-level errors keep the session alive, and a
+    /// wrong credential is refused typed without touching the registry.
+    #[test]
+    fn authed_admin_session_over_pipe() {
+        let keys = crate::keys::KeyBundle::generate(Geometry::SMALL, 16, 77).unwrap();
+        let cred = keys.admin_credential();
+        let reg = registry();
+
+        let run_server = |reg: Arc<ModelRegistry>, server_side| {
+            std::thread::spawn(move || {
+                // the real handshake consumes the AdminHello, then hands
+                // the stream to the authed session loop; emulate that
+                let mut stream = server_side;
+                assert!(matches!(
+                    read_message(&mut stream).unwrap(),
+                    Message::AdminHello
+                ));
+                run_authed_admin_session(stream, &reg, &cred)
+            })
+        };
+
+        let (server_side, client_side) = pipe_pair();
+        let server = run_server(reg.clone(), server_side);
+        let mut admin = AdminClient::over(client_side);
+        admin.authenticate(cred).unwrap();
+        let detail = admin.register("alpha", "", 16, 11, 11).unwrap();
+        assert!(detail.contains("registered alpha@0"), "{detail}");
+        // a verb-level failure (duplicate register) answers typed but
+        // keeps the authenticated session alive for the next verb
+        let err = admin.register("alpha", "", 16, 11, 11).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+        let status = admin.status().unwrap();
+        assert!(status.contains("alpha@0 state=active"), "{status}");
+        admin.finish().unwrap();
+        server.join().unwrap().unwrap();
+
+        // wrong credential: the challenge always comes back (nonces are
+        // not secrets), but the first sealed verb dies typed and the
+        // registry is untouched
+        let (server_side, client_side) = pipe_pair();
+        let server = run_server(reg.clone(), server_side);
+        let mut admin = AdminClient::over(client_side);
+        admin.authenticate([0x99; 32]).unwrap();
+        let err = admin.drain("alpha", 0).unwrap_err();
+        assert!(
+            matches!(&err, Error::AdminAuth(m) if m.contains("MAC")),
+            "{err}"
+        );
+        // the forged session is terminated server-side with the same
+        // typed error
+        let server_err = server.join().unwrap().unwrap_err();
+        assert!(matches!(server_err, Error::AdminAuth(_)), "{server_err}");
+        assert_eq!(reg.resolve("alpha", 0).unwrap().epoch(), 0, "forged drain ran");
+    }
+
+    /// Challenge nonces never repeat within a process — the property the
+    /// cross-session anti-replay rests on.
+    #[test]
+    fn nonces_are_unique_per_session() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..256 {
+            assert!(seen.insert(fresh_nonce()), "nonce repeated");
+        }
     }
 }

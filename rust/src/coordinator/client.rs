@@ -5,7 +5,7 @@
 //! types; raw [`Message`] construction stays inside `protocol.rs`,
 //! `client.rs` and `server.rs`.
 //!
-//! ## Serving flow (protocol v4: client speaks first)
+//! ## Serving flow (protocol v5: client speaks first)
 //!
 //! ```text
 //! client  Hello { version, model, epoch }          →  server
@@ -516,6 +516,7 @@ impl<S: Read + Write> MoleClient<S> {
                 Err(Fault::Generic { msg }) => {
                     return Err(Error::Protocol(format!("server fault: {msg}")))
                 }
+                Err(fault) => return Err(fault.into_error()),
             }
         }
         Ok(got.into_iter().map(|g| g.unwrap()).collect())

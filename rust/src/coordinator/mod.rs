@@ -15,11 +15,15 @@
 //!   fronted by a concurrent TCP server (`mole serve`) that fans many
 //!   client sessions into one shared engine; [`loadgen`]
 //!   (`mole loadgen`) is the matching multi-connection driver.
-//! * **Admin surface** ([`admin`]): loopback-only `Admin*` frames on the
-//!   same listener (`mole admin register|drain|retire|status`) mutate
-//!   the registry at runtime — the live half of key rotation: register
-//!   the rotated epoch, drain the old one (typed `Fault::Draining`
-//!   carrying the successor epoch), retire it once its batcher is empty.
+//! * **Admin surface** ([`admin`]): `Admin*` frames on the same
+//!   listener (`mole admin register|drain|retire|status`) mutate the
+//!   registry at runtime — the live half of key rotation: register the
+//!   rotated epoch, drain the old one (typed `Fault::Draining` carrying
+//!   the successor epoch), retire it once its batcher is empty. Access
+//!   control is either the legacy loopback-only gate or — with a
+//!   vault-derived credential installed — a challenge–response MAC
+//!   handshake (per-frame HMAC + monotonic counter, protocol v5) that
+//!   makes remote admin legal and forged/replayed frames die typed.
 //! * **Client SDK ([`client`])**: the typed [`client::MoleClient`]
 //!   (connect / handshake / `infer` / `infer_batch` / `stream_training`)
 //!   and the provider-side [`client::ProviderSession`] — the only
@@ -47,7 +51,10 @@ pub use batcher::{AdaptiveWindow, BatcherConfig, ServingHandle};
 pub use client::{ClientConfig, MoleClient, ProviderSession, ServerInfo};
 pub use developer::{DeveloperNode, TrainOutcome};
 pub use loadgen::{LoadReport, LoadgenConfig};
-pub use protocol::{Fault, Message, EPOCH_LATEST, FAULT_SESSION, PROTOCOL_VERSION};
+pub use protocol::{
+    admin_mac, open_admin, seal_admin, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
+    PROTOCOL_VERSION,
+};
 pub use provider::ProviderNode;
 pub use registry::{LaneState, LaneStatus, ModelLane, ModelRegistry, RegisteredModel};
 pub use server::{ServeConfig, Server};

@@ -29,15 +29,34 @@
 //!
 //! The `Admin*` frames (tags 10–14) are the live-registry control
 //! surface: register a `(model, epoch)` lane at runtime, drain an
-//! epoch, retire it once its batcher is empty, and query status. They
-//! are accepted only from loopback peers (and only when the server
-//! enables them) — and, like every other frame, they never carry key
-//! material: `AdminRegister` names a **vault path local to the server**,
-//! which the server reads itself. The tag-9 re-layout is why this is
-//! **v4**, not a silent v2 extension: a v2 peer would mis-parse the
-//! typed fault payload, so the handshake rejects it typed instead (see
-//! [`PROTOCOL_VERSION`] for why v3 is skipped).
+//! epoch, retire it once its batcher is empty, and query status. Like
+//! every other frame, they never carry key material: `AdminRegister`
+//! names a **vault path local to the server**, which the server reads
+//! itself. The tag-9 re-layout is why v4 was not a silent v2 extension:
+//! a v2 peer would mis-parse the typed fault payload, so the handshake
+//! rejects it typed instead (see [`PROTOCOL_VERSION`] for why v3 is
+//! skipped).
+//!
+//! ## Authenticated admin plane (v5)
+//!
+//! v5 adds the credential-gated admin handshake (tags 15–17) and the
+//! typed [`Fault::AdminAuth`] (fault kind 3). An authenticated admin
+//! session opens with `AdminHello`; the server answers with an
+//! `AdminChallenge` carrying a fresh 32-byte session **nonce**. Every
+//! subsequent admin verb rides inside an `AdminAuthed` envelope: the
+//! encoded inner frame (tag + payload), a strictly-increasing frame
+//! **counter**, and an HMAC-SHA256 **MAC** keyed by the vault-derived
+//! admin credential ([`crate::keys::KeyBundle::admin_credential`]) over
+//! `label ‖ nonce ‖ counter ‖ inner-tag ‖ inner-payload`
+//! ([`admin_mac`]). The nonce binds frames to one session (a frame
+//! captured from another session never verifies) and the counter makes
+//! byte-identical replays and reorders within a session die typed —
+//! verified in constant time ([`crate::hash::ct_eq`]) **before** the
+//! inner frame is even decoded ([`open_admin`]). The MAC authenticates
+//! and freshens admin *commands* only: it provides no confidentiality,
+//! no wire encryption, and does not cover server replies.
 
+use crate::hash::{ct_eq, hmac_sha256};
 use crate::tensor::Tensor;
 use crate::{Error, Geometry, Result};
 use std::io::{Read, Write};
@@ -50,11 +69,13 @@ const MAX_PAYLOAD: usize = 1 << 30;
 /// Wire protocol version carried in `Hello`. v2 added the version field
 /// itself plus `model`/`epoch` routing on `Hello` and `InferRequest`;
 /// v4 re-laid-out `Fault` (tag 9: `of` + typed fault kind) and added
-/// the Admin frames (tags 10–14). **v3 is deliberately skipped**:
+/// the Admin frames (tags 10–14); v5 added the authenticated admin
+/// handshake (tags 15–17: `AdminHello`/`AdminChallenge`/`AdminAuthed`)
+/// and fault kind 3 (`AdminAuth`). **v3 is deliberately skipped**:
 /// pre-versioning (v1) `Hello` frames began with the geometry's α = 3,
 /// which decodes as "version 3" — a build claiming v3 could not tell a
 /// legacy peer from a current one.
-pub const PROTOCOL_VERSION: u32 = 4;
+pub const PROTOCOL_VERSION: u32 = 5;
 
 /// `epoch` sentinel meaning "the newest epoch the peer serves".
 pub const EPOCH_LATEST: u32 = u32::MAX;
@@ -79,6 +100,9 @@ pub enum Fault {
     Draining { model: String, epoch: u32, successor: u32 },
     /// The lane's key epoch was retired (rollover complete).
     Retired { model: String, epoch: u32, successor: u32 },
+    /// Admin-plane authentication refusal (forged/missing MAC, replayed
+    /// counter, unauthenticated frame on a credential-gated server, …).
+    AdminAuth { msg: String },
 }
 
 impl Fault {
@@ -96,6 +120,7 @@ impl Fault {
                 epoch: *epoch,
                 successor: *successor,
             },
+            Error::AdminAuth(msg) => Fault::AdminAuth { msg: msg.clone() },
             other => Fault::Generic { msg: other.to_string() },
         }
     }
@@ -112,6 +137,7 @@ impl Fault {
             Fault::Retired { model, epoch, successor } => {
                 Error::Retired { model, epoch, successor }
             }
+            Fault::AdminAuth { msg } => Error::AdminAuth(msg),
         }
     }
 }
@@ -186,6 +212,26 @@ pub enum Message {
     AdminStatus,
     /// Admin success reply; `detail` is operator-readable.
     AdminOk { detail: String },
+    /// Authenticated-admin handshake opener (client → server): request
+    /// a session nonce. Only meaningful on a server with an admin
+    /// credential configured; carries nothing.
+    AdminHello,
+    /// Authenticated-admin challenge (server → client): the fresh
+    /// session nonce every subsequent [`Message::AdminAuthed`] MAC must
+    /// cover.
+    AdminChallenge { nonce: [u8; 32] },
+    /// An admin verb sealed for the authenticated plane: the encoded
+    /// inner frame plus a strictly-increasing per-session `counter` and
+    /// an HMAC-SHA256 `mac` over `label ‖ nonce ‖ counter ‖ inner_tag ‖
+    /// inner` ([`admin_mac`]). The inner bytes stay opaque until the MAC
+    /// verifies ([`open_admin`]) — a forged or tampered envelope is
+    /// refused before any decoding of its contents.
+    AdminAuthed {
+        counter: u64,
+        mac: [u8; 32],
+        inner_tag: u8,
+        inner: Vec<u8>,
+    },
 }
 
 impl Message {
@@ -205,8 +251,100 @@ impl Message {
             Message::AdminRetire { .. } => 12,
             Message::AdminStatus => 13,
             Message::AdminOk { .. } => 14,
+            Message::AdminHello => 15,
+            Message::AdminChallenge { .. } => 16,
+            Message::AdminAuthed { .. } => 17,
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// admin-plane MAC (v5)
+// ---------------------------------------------------------------------------
+
+/// Domain-separation label for admin-frame MACs.
+const ADMIN_MAC_LABEL: &[u8] = b"mole-admin-frame-v1";
+
+/// MAC for one authenticated admin frame: HMAC-SHA256 keyed by the
+/// vault-derived credential over `label ‖ nonce ‖ counter ‖ inner_tag ‖
+/// inner`. Covering the tag and counter (not just the payload) means a
+/// verb cannot be transplanted onto another verb's payload and a frame
+/// cannot be replayed under a recycled counter.
+pub fn admin_mac(
+    credential: &[u8; 32],
+    nonce: &[u8; 32],
+    counter: u64,
+    inner_tag: u8,
+    inner: &[u8],
+) -> [u8; 32] {
+    let mut msg = Vec::with_capacity(ADMIN_MAC_LABEL.len() + 32 + 8 + 1 + inner.len());
+    msg.extend_from_slice(ADMIN_MAC_LABEL);
+    msg.extend_from_slice(nonce);
+    msg.extend_from_slice(&counter.to_le_bytes());
+    msg.push(inner_tag);
+    msg.extend_from_slice(inner);
+    hmac_sha256(credential, &msg)
+}
+
+/// Seal an admin verb for the authenticated plane: encode it, stamp the
+/// caller's frame counter, and MAC the envelope under `credential` and
+/// the session `nonce`.
+pub fn seal_admin(
+    credential: &[u8; 32],
+    nonce: &[u8; 32],
+    counter: u64,
+    msg: &Message,
+) -> Message {
+    let inner_tag = msg.tag();
+    let inner = encode(msg);
+    let mac = admin_mac(credential, nonce, counter, inner_tag, &inner);
+    Message::AdminAuthed { counter, mac, inner_tag, inner }
+}
+
+/// Server-side verification of one [`Message::AdminAuthed`] envelope.
+/// Order matters for both security and the typed errors the
+/// conformance suite pins:
+///
+/// 1. the MAC is recomputed and compared **constant-time** — a forged
+///    credential, bit-flipped payload, transplanted tag, or lying
+///    counter all die here, before the inner bytes are decoded;
+/// 2. the counter must be strictly greater than `last_counter` — a
+///    byte-identical replay carries a *valid* MAC and dies here,
+///    typed as a replay rather than a forgery;
+/// 3. only then is the inner frame decoded (decode errors at this point
+///    come from a correctly-authenticated peer and surface as their own
+///    typed protocol errors).
+///
+/// Returns the verified counter (the caller's new high-water mark) and
+/// the decoded inner message. Steps 1–2 fail as [`Error::AdminAuth`];
+/// step 3 as whatever typed error the decoder reports.
+pub fn open_admin(
+    credential: &[u8; 32],
+    nonce: &[u8; 32],
+    last_counter: u64,
+    frame: &Message,
+) -> Result<(u64, Message)> {
+    let (counter, mac, inner_tag, inner) = match frame {
+        Message::AdminAuthed { counter, mac, inner_tag, inner } => {
+            (*counter, mac, *inner_tag, inner.as_slice())
+        }
+        other => {
+            return Err(Error::AdminAuth(format!(
+                "expected an authenticated admin frame, got {other:?}"
+            )))
+        }
+    };
+    let want = admin_mac(credential, nonce, counter, inner_tag, inner);
+    if !ct_eq(&want, mac) {
+        return Err(Error::AdminAuth("admin frame MAC verification failed".into()));
+    }
+    if counter <= last_counter {
+        return Err(Error::AdminAuth(format!(
+            "anti-replay: frame counter {counter} is not above {last_counter} \
+             (replayed or reordered admin frame)"
+        )));
+    }
+    Ok((counter, decode(inner_tag, inner)?))
 }
 
 // ---------------------------------------------------------------------------
@@ -279,6 +417,11 @@ impl<'a> Cursor<'a> {
 
     fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Fixed 32-byte field (nonces, MACs).
+    fn bytes32(&mut self) -> Result<[u8; 32]> {
+        Ok(self.take(32)?.try_into().unwrap())
     }
 
     fn str(&mut self) -> Result<String> {
@@ -422,6 +565,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
                     put_u32(&mut out, *epoch);
                     put_u32(&mut out, *successor);
                 }
+                Fault::AdminAuth { msg } => {
+                    out.push(3);
+                    put_str(&mut out, msg);
+                }
             }
         }
         Message::AdminRegister { model, vault_path, kappa, seed, trunk_seed } => {
@@ -437,6 +584,15 @@ pub fn encode(msg: &Message) -> Vec<u8> {
         }
         Message::AdminStatus => {}
         Message::AdminOk { detail } => put_str(&mut out, detail),
+        Message::AdminHello => {}
+        Message::AdminChallenge { nonce } => out.extend_from_slice(nonce),
+        Message::AdminAuthed { counter, mac, inner_tag, inner } => {
+            put_u64(&mut out, *counter);
+            out.extend_from_slice(mac);
+            out.push(*inner_tag);
+            put_u32(&mut out, inner.len() as u32);
+            out.extend_from_slice(inner);
+        }
     }
     out
 }
@@ -495,6 +651,7 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
                     epoch: c.u32()?,
                     successor: c.u32()?,
                 },
+                3 => Fault::AdminAuth { msg: c.str()? },
                 k => return Err(Error::Protocol(format!("unknown fault kind {k}"))),
             };
             Message::Fault { of, fault }
@@ -510,6 +667,16 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
         12 => Message::AdminRetire { model: c.str()?, epoch: c.u32()? },
         13 => Message::AdminStatus,
         14 => Message::AdminOk { detail: c.str()? },
+        15 => Message::AdminHello,
+        16 => Message::AdminChallenge { nonce: c.bytes32()? },
+        17 => {
+            let counter = c.u64()?;
+            let mac = c.bytes32()?;
+            let inner_tag = c.u8()?;
+            let n = c.u32()? as usize;
+            let inner = c.take(n)?.to_vec();
+            Message::AdminAuthed { counter, mac, inner_tag, inner }
+        }
         t => return Err(Error::Protocol(format!("unknown message tag {t}"))),
     };
     c.done()?;
@@ -741,6 +908,18 @@ mod tests {
             Message::AdminRetire { model: "alpha".into(), epoch: 0 },
             Message::AdminStatus,
             Message::AdminOk { detail: "registered alpha@1".into() },
+            Message::Fault {
+                of: FAULT_SESSION,
+                fault: Fault::AdminAuth { msg: "MAC verification failed".into() },
+            },
+            Message::AdminHello,
+            Message::AdminChallenge { nonce: [7u8; 32] },
+            seal_admin(
+                &[1u8; 32],
+                &[2u8; 32],
+                1,
+                &Message::AdminDrain { model: "alpha".into(), epoch: 0 },
+            ),
         ]
     }
 
@@ -840,6 +1019,14 @@ mod tests {
         let f = Fault::from_error(&Error::Protocol("boom".into()));
         assert!(matches!(&f, Fault::Generic { msg } if msg.contains("boom")));
         assert!(f.to_string().contains("boom"));
+        // admin-auth refusals stay typed across the wire mapping
+        let f = Fault::from_error(&Error::AdminAuth("bad MAC".into()));
+        assert!(matches!(&f, Fault::AdminAuth { msg } if msg == "bad MAC"));
+        assert!(matches!(
+            f.clone().into_error(),
+            Error::AdminAuth(msg) if msg == "bad MAC"
+        ));
+        assert!(f.to_string().contains("admin auth"), "{f}");
         // typed faults display the successor so raw logs stay readable
         let f = Fault::Draining { model: "alpha".into(), epoch: 0, successor: 1 };
         assert!(f.to_string().contains("draining"), "{f}");
@@ -847,7 +1034,7 @@ mod tests {
     }
 
     /// Satellite: property-style decoder fuzz. Seeded-random frames from
-    /// every v4 + Admin variant are mutated — truncated anywhere,
+    /// every v5 + Admin variant are mutated — truncated anywhere,
     /// bit-flipped, replaced with pure garbage, or given a lying length
     /// header — and fed to `read_message`, which must always return a
     /// typed result: never panic, and never allocate/stall past the
@@ -893,6 +1080,188 @@ mod tests {
         assert!(
             t0.elapsed() < std::time::Duration::from_secs(10),
             "hostile frames must fail fast, not by timeout"
+        );
+    }
+
+    /// The seal/open pair: a sealed verb round-trips the wire and opens
+    /// against the same credential/nonce with an advancing counter; each
+    /// forgery axis (credential, nonce, counter lie, payload tamper, tag
+    /// transplant, byte-identical replay) dies with the pinned typed
+    /// error, MAC check strictly before the replay check.
+    #[test]
+    fn seal_open_roundtrip_and_forgeries() {
+        let cred = [0x41u8; 32];
+        let nonce = [0x42u8; 32];
+        let verb = Message::AdminDrain { model: "alpha".into(), epoch: 0 };
+        let sealed = seal_admin(&cred, &nonce, 1, &verb);
+        // wire round-trip preserves the envelope bit-for-bit
+        let mut buf = Vec::new();
+        write_message(&mut buf, &sealed).unwrap();
+        let got = read_message(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, sealed);
+        // opens cleanly; counter advances
+        let (counter, inner) = open_admin(&cred, &nonce, 0, &got).unwrap();
+        assert_eq!(counter, 1);
+        assert_eq!(inner, verb);
+        // wrong credential → MAC failure
+        let err = open_admin(&[0x99; 32], &nonce, 0, &sealed).unwrap_err();
+        assert!(matches!(&err, Error::AdminAuth(m) if m.contains("MAC")), "{err}");
+        // wrong session nonce (frame captured from another session)
+        let err = open_admin(&cred, &[0x99; 32], 0, &sealed).unwrap_err();
+        assert!(matches!(&err, Error::AdminAuth(m) if m.contains("MAC")), "{err}");
+        // byte-identical replay: MAC valid, counter stale → typed replay
+        let err = open_admin(&cred, &nonce, 1, &sealed).unwrap_err();
+        assert!(matches!(&err, Error::AdminAuth(m) if m.contains("anti-replay")), "{err}");
+        // reordered (lower) counter, freshly MACed → still the replay arm
+        let old = seal_admin(&cred, &nonce, 3, &verb);
+        let (c, _) = open_admin(&cred, &nonce, 0, &old).unwrap();
+        assert_eq!(c, 3);
+        let late = seal_admin(&cred, &nonce, 2, &verb);
+        let err = open_admin(&cred, &nonce, 3, &late).unwrap_err();
+        assert!(matches!(&err, Error::AdminAuth(m) if m.contains("anti-replay")), "{err}");
+        // tampered payload: flip one bit in the inner bytes
+        if let Message::AdminAuthed { counter, mac, inner_tag, mut inner } = sealed.clone()
+        {
+            inner[0] ^= 1;
+            let bad = Message::AdminAuthed { counter, mac, inner_tag, inner };
+            let err = open_admin(&cred, &nonce, 0, &bad).unwrap_err();
+            assert!(matches!(&err, Error::AdminAuth(m) if m.contains("MAC")), "{err}");
+        } else {
+            unreachable!()
+        }
+        // tag transplant: same payload claimed as a different verb
+        if let Message::AdminAuthed { counter, mac, inner, .. } = sealed.clone() {
+            let bad = Message::AdminAuthed { counter, mac, inner_tag: 12, inner };
+            let err = open_admin(&cred, &nonce, 0, &bad).unwrap_err();
+            assert!(matches!(&err, Error::AdminAuth(m) if m.contains("MAC")), "{err}");
+        } else {
+            unreachable!()
+        }
+        // lying counter: the counter is MAC-covered, so bumping it is a
+        // forgery (MAC arm), not a fresh frame
+        if let Message::AdminAuthed { mac, inner_tag, inner, .. } = sealed.clone() {
+            let bad = Message::AdminAuthed { counter: 9, mac, inner_tag, inner };
+            let err = open_admin(&cred, &nonce, 0, &bad).unwrap_err();
+            assert!(matches!(&err, Error::AdminAuth(m) if m.contains("MAC")), "{err}");
+        } else {
+            unreachable!()
+        }
+        // a non-envelope frame fed to open_admin is refused typed
+        let err = open_admin(&cred, &nonce, 0, &Message::AdminStatus).unwrap_err();
+        assert!(matches!(err, Error::AdminAuth(_)));
+    }
+
+    /// Valid MAC over garbage inner bytes: authentication succeeds, the
+    /// inner decode then fails with its own typed error (never a panic).
+    #[test]
+    fn authenticated_garbage_inner_fails_typed() {
+        let cred = [1u8; 32];
+        let nonce = [2u8; 32];
+        // garbage after the MAC, but *covered* by it: tag 11 with junk
+        let inner = vec![0xFFu8; 9];
+        let mac = admin_mac(&cred, &nonce, 1, 11, &inner);
+        let frame = Message::AdminAuthed { counter: 1, mac, inner_tag: 11, inner };
+        match open_admin(&cred, &nonce, 0, &frame) {
+            Err(Error::Protocol(_) | Error::Io(_)) => {}
+            other => panic!("expected a typed decode error, got {other:?}"),
+        }
+        // unknown inner tag, correctly MACed
+        let mac = admin_mac(&cred, &nonce, 1, 200, b"");
+        let frame =
+            Message::AdminAuthed { counter: 1, mac, inner_tag: 200, inner: Vec::new() };
+        match open_admin(&cred, &nonce, 0, &frame) {
+            Err(Error::Protocol(m)) => assert!(m.contains("unknown message tag"), "{m}"),
+            other => panic!("expected unknown-tag error, got {other:?}"),
+        }
+    }
+
+    /// Satellite: seeded fuzz over the *authenticated* admin plane.
+    /// Sealed frames from every admin verb are mutated — truncated,
+    /// MAC-bit-flipped, given lying counters, or fed trailing garbage
+    /// after the MAC field — then pushed through `read_message` +
+    /// `open_admin`. The pipeline must never panic, and any mutated
+    /// frame that still decodes must be refused typed by `open_admin`
+    /// (only byte-identical frames may authenticate).
+    #[test]
+    fn fuzz_authed_admin_frames_fail_typed() {
+        let cred = [0xA5u8; 32];
+        let nonce = [0x5Au8; 32];
+        let verbs = [
+            Message::AdminRegister {
+                model: "alpha".into(),
+                vault_path: "/tmp/alpha.key".into(),
+                kappa: 16,
+                seed: 11,
+                trunk_seed: 11,
+            },
+            Message::AdminDrain { model: "alpha".into(), epoch: 0 },
+            Message::AdminRetire { model: "alpha".into(), epoch: 0 },
+            Message::AdminStatus,
+        ];
+        crate::testkit::forall(
+            0xAD71,
+            256,
+            |rng| {
+                let counter = 1 + rng.below(1000) as u64;
+                let sealed =
+                    seal_admin(&cred, &nonce, counter, &verbs[rng.below(verbs.len())]);
+                let mut frame = Vec::new();
+                write_message(&mut frame, &sealed).unwrap();
+                let mutated = rng.below(4) != 0; // 1/4 pass through intact
+                if mutated {
+                    match rng.below(4) {
+                        // truncate anywhere (header, envelope, inner)
+                        0 => frame.truncate(rng.below(frame.len())),
+                        // flip a bit anywhere: MAC bytes, counter,
+                        // inner-tag, inner payload, length fields
+                        1 => {
+                            let i = rng.below(frame.len());
+                            frame[i] ^= 1 << rng.below(8);
+                        }
+                        // lie about the counter (MAC-covered, so forged)
+                        2 => {
+                            let lie = rng.next_u64().to_le_bytes();
+                            frame[7..15].copy_from_slice(&lie);
+                        }
+                        // garbage appended after the MAC'd envelope
+                        _ => {
+                            let extra = 1 + rng.below(16);
+                            let new_len =
+                                (frame.len() - 7 + extra) as u32;
+                            frame[3..7].copy_from_slice(&new_len.to_le_bytes());
+                            for _ in 0..extra {
+                                frame.push(rng.below(256) as u8);
+                            }
+                        }
+                    }
+                }
+                (frame, mutated, counter)
+            },
+            |(frame, mutated, counter)| {
+                match read_message(&mut frame.as_slice()) {
+                    Err(_) => Ok(()), // typed decode refusal is fine
+                    Ok(msg) => match open_admin(&cred, &nonce, 0, &msg) {
+                        Ok((c, _)) => {
+                            // every envelope byte is either framing
+                            // (decode-checked) or MAC-covered, so only
+                            // untouched frames may authenticate
+                            if *mutated {
+                                Err(format!(
+                                    "mutated frame authenticated (counter {c})"
+                                ))
+                            } else if c != *counter {
+                                Err(format!("counter {c}, sealed {counter}"))
+                            } else {
+                                Ok(())
+                            }
+                        }
+                        Err(Error::AdminAuth(_) | Error::Protocol(_) | Error::Io(_)) => {
+                            Ok(())
+                        }
+                        Err(e) => Err(format!("unexpected error type: {e}")),
+                    },
+                }
+            },
         );
     }
 

@@ -3,7 +3,7 @@
 //! A [`Server`] binds a `std::net::TcpListener`, accepts many concurrent
 //! client sessions on a fixed thread pool, and routes every request to a
 //! lane of its [`ModelRegistry`]. Each session runs the serving half of
-//! the wire protocol ([`super::protocol`], v4 — client speaks first):
+//! the wire protocol ([`super::protocol`], v5 — client speaks first):
 //!
 //! 1. the client opens with `Hello` (protocol version + requested
 //!    model/epoch); the server resolves it against the registry and
@@ -29,10 +29,12 @@
 //! `Send + Sync` [`SharedEngine`](crate::runtime::SharedEngine) — no
 //! per-connection engine or model state.
 //!
-//! The registry is **live**: a connection that opens with an `Admin*`
+//! The registry is **live**: a connection that opens with an admin
 //! frame instead of `Hello` becomes an admin session ([`super::admin`];
-//! loopback peers only, gated by [`ServeConfig::admin_enabled`]) that
-//! can register, drain and retire lanes while traffic is flowing.
+//! gated by [`ServeConfig::admin_enabled`] and either the loopback
+//! check or — when [`ServeConfig::admin_credential`] is set — the
+//! challenge–response MAC handshake) that can register, drain and
+//! retire lanes while traffic is flowing.
 //! Lifecycle refusals — a draining or retired lane, at handshake or on
 //! any later request (the session lane is revalidated per request) —
 //! answer with the typed `Fault::Draining`/`Fault::Retired` carrying
@@ -69,14 +71,24 @@ pub struct ServeConfig {
     /// abandoned-but-open connection would otherwise hold a worker
     /// forever.
     pub idle_timeout: Duration,
-    /// Accept `Admin*` frames (register/drain/retire/status) from
-    /// loopback peers. Off, the registry is fixed at bind time like a
-    /// pre-lifecycle server. Defaults on — a deliberate tradeoff for the
-    /// single-operator demo deployment: the loopback gate is the only
-    /// access control, so on multi-user hosts run with
-    /// `[serving] admin = false` / `--no-admin` (authenticated admin
-    /// credentials are a tracked ROADMAP item).
+    /// Accept `Admin*` frames (register/drain/retire/status). Off, the
+    /// registry is fixed at bind time like a pre-lifecycle server.
+    /// Defaults on — a deliberate tradeoff for the single-operator demo
+    /// deployment. Access control depends on
+    /// [`ServeConfig::admin_credential`]: with no credential, only
+    /// loopback peers may speak bare admin verbs; with one, every admin
+    /// frame must be MAC-authenticated (and remote admin becomes legal).
     pub admin_enabled: bool,
+    /// Vault-derived admin credential
+    /// ([`crate::keys::KeyBundle::admin_credential`], distributed via
+    /// `mole keygen --credential-out` / `[serving]
+    /// admin_credential_file`). `Some` switches the admin plane to
+    /// challenge–response MAC authentication: bare admin verbs are
+    /// refused typed from **any** peer (loopback included — the
+    /// credential gate supersedes, never weakens, the loopback gate)
+    /// and authenticated peers may be non-loopback. `None` keeps the
+    /// legacy loopback-only gate.
+    pub admin_credential: Option<[u8; 32]>,
 }
 
 impl Default for ServeConfig {
@@ -87,6 +99,7 @@ impl Default for ServeConfig {
             handshake_timeout: Duration::from_secs(10),
             idle_timeout: Duration::from_secs(300),
             admin_enabled: true,
+            admin_credential: None,
         }
     }
 }
@@ -252,16 +265,24 @@ fn handshake_fault(sock: &mut TcpStream, metrics: &Arc<ServingMetrics>, fault: F
 enum Opening {
     /// A serving session bound to a resolved lane.
     Lane(Arc<ModelLane>),
-    /// An admin session; the already-read first admin frame rides along.
+    /// An unauthenticated (loopback-gated) admin session; the
+    /// already-read first admin frame rides along.
     Admin(Message),
+    /// An authenticated admin session (opened with `AdminHello` on a
+    /// credential-gated server); the credential to verify against rides
+    /// along. The challenge is issued by the session loop itself.
+    AdminAuthed([u8; 32]),
     /// The peer went away silently (port probes, health checks).
     Probe,
 }
 
 /// Classify and answer the client's opening frame: a `Hello` resolves to
 /// a session lane (version mismatches, unknown models and draining /
-/// retired lanes answered with their typed `Fault`), an `Admin*` frame
-/// from a loopback peer opens an admin session, anything else faults.
+/// retired lanes answered with their typed `Fault`); an `AdminHello` on
+/// a credential-gated server opens an authenticated admin session (any
+/// peer address); a bare `Admin*` frame opens a legacy admin session
+/// when no credential is configured (loopback peers only) and is
+/// refused typed when one is; anything else faults.
 fn handshake(
     sock: &mut TcpStream,
     registry: &Arc<ModelRegistry>,
@@ -285,6 +306,27 @@ fn handshake(
                 }
             }
         }
+        Ok(Message::AdminHello) => {
+            if !cfg.admin_enabled {
+                let msg = "admin surface is disabled on this server".to_string();
+                handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
+                return Err(Error::Protocol(msg));
+            }
+            match cfg.admin_credential {
+                // credential gate on: any peer address may try; the MAC
+                // decides, not the routing table
+                Some(cred) => return Ok(Opening::AdminAuthed(cred)),
+                None => {
+                    let e = Error::AdminAuth(
+                        "admin authentication is not configured on this server \
+                         (no admin credential installed)"
+                            .into(),
+                    );
+                    handshake_fault(sock, metrics, Fault::from_error(&e));
+                    return Err(e);
+                }
+            }
+        }
         Ok(
             msg @ (Message::AdminRegister { .. }
             | Message::AdminDrain { .. }
@@ -296,6 +338,17 @@ fn handshake(
                 handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
                 return Err(Error::Protocol(msg));
             }
+            if cfg.admin_credential.is_some() {
+                // downgrade attempt: with a credential installed, a bare
+                // admin verb is never dispatched — loopback included
+                let e = Error::AdminAuth(
+                    "admin frames must be authenticated on this server \
+                     (open with AdminHello and a credential)"
+                        .into(),
+                );
+                handshake_fault(sock, metrics, Fault::from_error(&e));
+                return Err(e);
+            }
             let loopback =
                 sock.peer_addr().map(|a| a.ip().is_loopback()).unwrap_or(false);
             if !loopback {
@@ -304,6 +357,16 @@ fn handshake(
                 return Err(Error::Protocol(msg));
             }
             return Ok(Opening::Admin(msg));
+        }
+        Ok(Message::AdminAuthed { .. }) => {
+            // sealed frame before any AdminHello: there is no session
+            // nonce to verify against, so this cannot be dispatched
+            let e = Error::AdminAuth(
+                "authenticated admin frame before AdminHello (no challenge issued)"
+                    .into(),
+            );
+            handshake_fault(sock, metrics, Fault::from_error(&e));
+            return Err(e);
         }
         Ok(other) => {
             let msg = format!("serving sessions open with Hello, got {other:?}");
@@ -361,6 +424,10 @@ fn run_session(
         Opening::Admin(first) => {
             sock.set_read_timeout(Some(cfg.idle_timeout)).ok();
             return super::admin::run_admin_session(sock, first, registry);
+        }
+        Opening::AdminAuthed(cred) => {
+            sock.set_read_timeout(Some(cfg.idle_timeout)).ok();
+            return super::admin::run_authed_admin_session(sock, registry, &cred);
         }
         Opening::Probe => return Ok(()),
     };

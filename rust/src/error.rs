@@ -36,6 +36,14 @@ pub enum Error {
     /// [`Error::Draining`].
     Retired { model: String, epoch: u32, successor: u32 },
 
+    /// Admin-plane authentication failure: forged/absent MAC, replayed
+    /// or reordered frame counter, unauthenticated admin frame on a
+    /// credential-gated server, or an authenticated handshake against a
+    /// server with no credential configured. Kept distinct from
+    /// [`Error::Protocol`] so the wire can answer with the typed
+    /// `Fault::AdminAuth` and tests can pin the exact refusal.
+    AdminAuth(String),
+
     /// Artifact manifest problems (missing artifact, bad signature).
     Manifest(String),
 
@@ -75,6 +83,7 @@ impl std::fmt::Display for Error {
                 write!(f, "model {model:?} epoch {epoch} is retired; ")?;
                 successor_hint(f, *successor)
             }
+            Error::AdminAuth(m) => write!(f, "admin auth error: {m}"),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
@@ -148,6 +157,13 @@ mod tests {
         let e = Error::Retired { model: "alpha".into(), epoch: 2, successor: u32::MAX };
         assert!(e.to_string().contains("retired"), "{e}");
         assert!(e.to_string().contains("latest epoch"), "{e}");
+    }
+
+    #[test]
+    fn admin_auth_display() {
+        let e = Error::AdminAuth("MAC verification failed".into());
+        assert!(e.to_string().contains("admin auth"), "{e}");
+        assert!(e.to_string().contains("MAC"), "{e}");
     }
 
     #[test]

@@ -1,10 +1,13 @@
-//! SHA-256 (FIPS 180-4) — in-tree so the default build has no external
-//! dependencies.
+//! SHA-256 (FIPS 180-4) and HMAC-SHA256 (RFC 2104) — in-tree so the
+//! default build has no external dependencies.
 //!
-//! Used for key-vault fingerprints/integrity ([`crate::keys`]) and the
-//! cross-language C-matrix checksum test. Not a general crypto library:
-//! only the one digest the repo needs, with a streaming [`Sha256`] API
-//! mirroring the subset of the `sha2` crate the code previously used.
+//! Used for key-vault fingerprints/integrity ([`crate::keys`]), the
+//! vault-derived admin credential and its per-frame MACs
+//! ([`crate::coordinator::admin`]), and the cross-language C-matrix
+//! checksum test. Not a general crypto library: only the primitives the
+//! repo needs, with a streaming [`Sha256`] API mirroring the subset of
+//! the `sha2` crate the code previously used, plus [`hmac_sha256`] and
+//! the constant-time tag comparison [`ct_eq`].
 
 /// Round constants: fractional parts of the cube roots of the first 64
 /// primes.
@@ -162,6 +165,62 @@ pub fn to_hex(bytes: &[u8]) -> String {
     s
 }
 
+/// Parse hex (upper or lower case, even length) back into bytes.
+pub fn from_hex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let digit = |c: u8| -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    };
+    s.as_bytes()
+        .chunks_exact(2)
+        .map(|p| Some(digit(p[0])? << 4 | digit(p[1])?))
+        .collect()
+}
+
+/// HMAC-SHA256 block size (RFC 2104: the hash's input block, not its
+/// output).
+const HMAC_BLOCK: usize = 64;
+
+/// One-shot HMAC-SHA256 (RFC 2104): keys longer than one block are
+/// hashed first, shorter ones zero-padded.
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; HMAC_BLOCK];
+    if key.len() > HMAC_BLOCK {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut inner = Sha256::new();
+    inner.update(k.map(|b| b ^ 0x36));
+    inner.update(msg);
+    let mut outer = Sha256::new();
+    outer.update(k.map(|b| b ^ 0x5c));
+    outer.update(inner.finalize());
+    outer.finalize()
+}
+
+/// Constant-time equality for MAC/tag comparison: every byte pair is
+/// XOR-folded into one accumulator, so the running time does not depend
+/// on *where* two equal-length inputs first differ (lengths are public;
+/// a length mismatch returns early).
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut acc = 0u8;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc |= x ^ y;
+    }
+    acc == 0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +257,56 @@ mod tests {
             sha256_hex(&[b'a'; 64]),
             "ffe054fe7ae0cb6dc65c3af9b61d5209f439851db43d0ba5997337df154668eb"
         );
+    }
+
+    // RFC 4231 test cases 1, 2 and 6 (short key, ASCII key, key longer
+    // than the block size).
+    #[test]
+    fn hmac_rfc4231_vectors() {
+        assert_eq!(
+            to_hex(&hmac_sha256(&[0x0b; 20], b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        assert_eq!(
+            to_hex(&hmac_sha256(b"Jefe", b"what do ya want for nothing?")),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        assert_eq!(
+            to_hex(&hmac_sha256(
+                &[0xaa; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            )),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn hmac_key_sensitivity() {
+        // exactly one block, one under, one over: the padding boundaries
+        for n in [63usize, 64, 65] {
+            let a = hmac_sha256(&vec![1u8; n], b"msg");
+            let b = hmac_sha256(&vec![2u8; n], b"msg");
+            assert_ne!(a, b, "key length {n}");
+            assert_eq!(a, hmac_sha256(&vec![1u8; n], b"msg"));
+        }
+        assert_ne!(hmac_sha256(b"k", b"a"), hmac_sha256(b"k", b"b"));
+    }
+
+    #[test]
+    fn ct_eq_semantics() {
+        assert!(ct_eq(b"same bytes", b"same bytes"));
+        assert!(!ct_eq(b"same bytes", b"same bytez"));
+        assert!(!ct_eq(b"short", b"longer than"));
+        assert!(ct_eq(b"", b""));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let bytes = sha256(b"roundtrip");
+        assert_eq!(from_hex(&to_hex(&bytes)).unwrap(), bytes.to_vec());
+        assert_eq!(from_hex("00ffAB"), Some(vec![0x00, 0xff, 0xab]));
+        assert_eq!(from_hex("abc"), None); // odd length
+        assert_eq!(from_hex("zz"), None); // non-hex
     }
 
     #[test]

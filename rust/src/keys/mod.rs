@@ -19,9 +19,23 @@
 //! registry host epoch N and N+1 side by side during rollover and lets
 //! auditors walk a vault chain back to its root (the parent
 //! fingerprint is empty only at epoch 0).
+//!
+//! ## The admin credential
+//!
+//! The vault also anchors the **admin-plane credential**
+//! ([`KeyBundle::admin_credential`]): a labeled HMAC-SHA256 derivation
+//! over the bundle's secret material (morph seed, credential seed,
+//! permutation, epoch). It is what `mole serve` checks admin-frame MACs
+//! against and what `mole keygen` prints for distribution. Because the
+//! derivation runs over the *secrets* — not the public SHA-256
+//! fingerprint that crosses the wire in `Hello` — knowing a lane's
+//! fingerprint yields nothing about its credential, and rotating the
+//! vault re-derives the credential along with everything else. The v3
+//! vault format records the credential seed explicitly so the
+//! derivation is pinned byte-for-byte by the stored material.
 
 use crate::augconv::ChannelPerm;
-use crate::hash::{to_hex, Sha256};
+use crate::hash::{from_hex, hmac_sha256, to_hex, Sha256};
 use crate::morph::MorphKey;
 use crate::{Error, Geometry, Result};
 use std::io::{Read, Write};
@@ -29,8 +43,18 @@ use std::path::Path;
 
 /// Legacy (pre-epoch) vault magic; still loadable, never written.
 const MAGIC_V1: &[u8; 8] = b"MOLEKEY1";
-/// Current vault magic: adds epoch + parent-fingerprint lineage.
+/// Legacy epoch/lineage magic (pre-credential); still loadable, never
+/// written.
 const MAGIC_V2: &[u8; 8] = b"MOLEKEY2";
+/// Current vault magic: adds the admin-credential seed.
+const MAGIC_V3: &[u8; 8] = b"MOLEKEY3";
+
+/// Domain-separation label for deriving the credential seed from the
+/// morph seed (legacy vaults carry no explicit seed; this keeps the
+/// derivation deterministic across formats).
+const CRED_SEED_LABEL: &[u8] = b"mole-admin-cred-seed-v1";
+/// Domain-separation label for the admin credential itself.
+const CRED_LABEL: &[u8] = b"mole-admin-credential-v1";
 
 /// The provider's secret bundle for one delivery session.
 #[derive(Debug, Clone)]
@@ -45,6 +69,20 @@ pub struct KeyBundle {
     /// Fingerprint of the bundle this one was rotated from ("" at the
     /// root epoch). Binds the rotation chain into every fingerprint.
     pub parent_fingerprint: String,
+    /// Seed of the admin-credential derivation (vault v3 field). Drawn
+    /// deterministically from the morph seed on generate/rotate — and
+    /// re-drawn on every rotation, so a rotated vault's credential never
+    /// matches its parent's.
+    pub cred_seed: u64,
+}
+
+/// Deterministic credential seed for a given morph seed (labeled, so it
+/// shares no structure with the morph material it accompanies).
+fn derive_cred_seed(morph_seed: u64) -> u64 {
+    let mut h = Sha256::new();
+    h.update(CRED_SEED_LABEL);
+    h.update(morph_seed.to_le_bytes());
+    u64::from_le_bytes(h.finalize()[..8].try_into().unwrap())
 }
 
 impl KeyBundle {
@@ -60,6 +98,7 @@ impl KeyBundle {
             perm,
             epoch: 0,
             parent_fingerprint: String::new(),
+            cred_seed: derive_cred_seed(seed),
         })
     }
 
@@ -85,6 +124,7 @@ impl KeyBundle {
             perm: ChannelPerm::generate(self.geometry.beta, new_seed),
             epoch,
             parent_fingerprint: self.fingerprint(),
+            cred_seed: derive_cred_seed(new_seed),
         })
     }
 
@@ -97,12 +137,39 @@ impl KeyBundle {
     /// SHA-256 fingerprint over all key material including the epoch and
     /// rotation lineage (hex). Used to detect tampering and to name
     /// sessions without revealing secrets; two epochs of the same root
-    /// never share a fingerprint.
+    /// never share a fingerprint. Public: it crosses the wire in `Hello`
+    /// frames — the preimage resistance of SHA-256 is what keeps the
+    /// secrets (and the admin credential derived from them) unreachable
+    /// from it.
+    ///
+    /// Fingerprints are **format-versioned**: they hash the current
+    /// magic + body, so a vault-format bump (v2 → v3 added the
+    /// credential seed) renames every bundle — a `parent_fingerprint`
+    /// recorded by an older release will not equal the parent's
+    /// post-upgrade `fingerprint()`. Runtime routing never depends on
+    /// this (lanes resolve by `(model, epoch)`); audit walks across a
+    /// format boundary must recompute under the recording release.
     pub fn fingerprint(&self) -> String {
         let mut h = Sha256::new();
-        h.update(MAGIC_V2);
+        h.update(MAGIC_V3);
         h.update(self.encode_body());
         to_hex(&h.finalize())
+    }
+
+    /// The vault-derived admin-plane credential: a labeled HMAC-SHA256
+    /// over the bundle's **secret** material (morph seed, credential
+    /// seed, permutation, epoch — everything the vault stores). This is
+    /// the shared secret between `mole keygen`/`mole admin` and a
+    /// credential-gated `mole serve`; rotation re-derives it, so an old
+    /// epoch's credential dies with the rollover.
+    pub fn admin_credential(&self) -> [u8; 32] {
+        hmac_sha256(&self.encode_body(), CRED_LABEL)
+    }
+
+    /// Hex form of [`KeyBundle::admin_credential`] — the distribution
+    /// format (`mole keygen` output, `[serving] admin_credential_file`).
+    pub fn admin_credential_hex(&self) -> String {
+        to_hex(&self.admin_credential())
     }
 
     fn encode_body(&self) -> Vec<u8> {
@@ -115,6 +182,7 @@ impl KeyBundle {
             self.kappa as u64,
             self.morph_seed,
             self.epoch as u64,
+            self.cred_seed,
             self.perm.beta() as u64,
         ] {
             out.extend_from_slice(&v.to_le_bytes());
@@ -131,25 +199,27 @@ impl KeyBundle {
     pub fn to_bytes(&self) -> Vec<u8> {
         let body = self.encode_body();
         let mut out = Vec::with_capacity(8 + body.len() + 32);
-        out.extend_from_slice(MAGIC_V2);
+        out.extend_from_slice(MAGIC_V3);
         out.extend_from_slice(&body);
         let mut h = Sha256::new();
-        h.update(MAGIC_V2);
+        h.update(MAGIC_V3);
         h.update(&body);
         out.extend_from_slice(&h.finalize());
         out
     }
 
-    /// Deserialize + integrity-check. Reads the current `MOLEKEY2` format
-    /// and the legacy `MOLEKEY1` layout (which maps to epoch 0 with no
-    /// lineage).
+    /// Deserialize + integrity-check. Reads the current `MOLEKEY3`
+    /// format plus the legacy `MOLEKEY2` (no credential seed; re-derived
+    /// from the morph seed) and `MOLEKEY1` layouts (which additionally
+    /// map to epoch 0 with no lineage).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         if bytes.len() < 8 + 32 {
             return Err(Error::Key("bad vault magic or truncated file".into()));
         }
-        let legacy = match &bytes[..8] {
-            m if m == MAGIC_V2 => false,
-            m if m == MAGIC_V1 => true,
+        let version = match &bytes[..8] {
+            m if m == MAGIC_V3 => 3,
+            m if m == MAGIC_V2 => 2,
+            m if m == MAGIC_V1 => 1,
             _ => return Err(Error::Key("bad vault magic or truncated file".into())),
         };
         let (payload, digest) = bytes.split_at(bytes.len() - 32);
@@ -159,11 +229,38 @@ impl KeyBundle {
             return Err(Error::Key("vault integrity check failed".into()));
         }
         let body = &payload[8..];
-        if legacy {
-            Self::decode_body_v1(body)
-        } else {
-            Self::decode_body_v2(body)
+        match version {
+            3 => Self::decode_body_v3(body),
+            2 => Self::decode_body_v2(body),
+            _ => Self::decode_body_v1(body),
         }
+    }
+
+    fn decode_body_v3(body: &[u8]) -> Result<Self> {
+        let fixed = 9 * 8;
+        if body.len() < fixed + 4 {
+            return Err(Error::Key("vault body truncated".into()));
+        }
+        let u = |i: usize| -> u64 {
+            u64::from_le_bytes(body[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        let geometry = Geometry::new(u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize);
+        let kappa = u(4) as usize;
+        let morph_seed = u(5);
+        let epoch = u(6) as u32;
+        let cred_seed = u(7);
+        let beta = u(8) as usize;
+        let (parent_fingerprint, rest) = Self::decode_lineage(&body[fixed..])?;
+        let perm = Self::decode_perm(rest, beta)?;
+        Ok(Self {
+            geometry,
+            kappa,
+            morph_seed,
+            perm,
+            epoch,
+            parent_fingerprint,
+            cred_seed,
+        })
     }
 
     fn decode_body_v2(body: &[u8]) -> Result<Self> {
@@ -179,16 +276,17 @@ impl KeyBundle {
         let morph_seed = u(5);
         let epoch = u(6) as u32;
         let beta = u(7) as usize;
-        let fp_len =
-            u32::from_le_bytes(body[fixed..fixed + 4].try_into().unwrap()) as usize;
-        let fp_end = fixed + 4 + fp_len;
-        if body.len() < fp_end {
-            return Err(Error::Key("vault lineage field truncated".into()));
-        }
-        let parent_fingerprint = String::from_utf8(body[fixed + 4..fp_end].to_vec())
-            .map_err(|_| Error::Key("vault lineage field is not utf-8".into()))?;
-        let perm = Self::decode_perm(&body[fp_end..], beta)?;
-        Ok(Self { geometry, kappa, morph_seed, perm, epoch, parent_fingerprint })
+        let (parent_fingerprint, rest) = Self::decode_lineage(&body[fixed..])?;
+        let perm = Self::decode_perm(rest, beta)?;
+        Ok(Self {
+            geometry,
+            kappa,
+            morph_seed,
+            perm,
+            epoch,
+            parent_fingerprint,
+            cred_seed: derive_cred_seed(morph_seed),
+        })
     }
 
     fn decode_body_v1(body: &[u8]) -> Result<Self> {
@@ -200,15 +298,32 @@ impl KeyBundle {
             u64::from_le_bytes(body[i * 8..(i + 1) * 8].try_into().unwrap())
         };
         let geometry = Geometry::new(u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize);
+        let morph_seed = u(5);
         let perm = Self::decode_perm(&body[fixed..], u(6) as usize)?;
         Ok(Self {
             geometry,
             kappa: u(4) as usize,
-            morph_seed: u(5),
+            morph_seed,
             perm,
             epoch: 0,
             parent_fingerprint: String::new(),
+            cred_seed: derive_cred_seed(morph_seed),
         })
+    }
+
+    /// Shared v2/v3 lineage decode: u32 length + UTF-8 fingerprint,
+    /// returning the remaining (permutation) bytes.
+    fn decode_lineage(bytes: &[u8]) -> Result<(String, &[u8])> {
+        let fp_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        let fp_end = 4usize
+            .checked_add(fp_len)
+            .ok_or_else(|| Error::Key("vault lineage length overflows".into()))?;
+        if bytes.len() < fp_end {
+            return Err(Error::Key("vault lineage field truncated".into()));
+        }
+        let fp = String::from_utf8(bytes[4..fp_end].to_vec())
+            .map_err(|_| Error::Key("vault lineage field is not utf-8".into()))?;
+        Ok((fp, &bytes[fp_end..]))
     }
 
     fn decode_perm(perm_bytes: &[u8], beta: usize) -> Result<ChannelPerm> {
@@ -223,15 +338,11 @@ impl KeyBundle {
         )
     }
 
-    /// Save to a vault file (0600 on unix).
+    /// Save to a vault file (0600 on unix, applied at create so the
+    /// secrets never sit behind a umask-default mode).
     pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)?;
+        let mut f = create_secret_file(path)?;
         f.write_all(&self.to_bytes())?;
-        #[cfg(unix)]
-        {
-            use std::os::unix::fs::PermissionsExt;
-            std::fs::set_permissions(path, std::fs::Permissions::from_mode(0o600))?;
-        }
         Ok(())
     }
 
@@ -262,6 +373,55 @@ pub fn rotate_file(
     let rotated = keys.rotate(seed)?;
     rotated.save(out)?;
     Ok((keys, rotated))
+}
+
+/// Create a secret-holding file with 0600 applied **at create time**
+/// (unix): creating with the umask default and chmod'ing afterwards
+/// would leave a window where another local user can open the file and
+/// keep the fd — exactly the multi-user-host scenario the admin
+/// credential exists for.
+fn create_secret_file(path: &Path) -> Result<std::fs::File> {
+    let mut opts = std::fs::OpenOptions::new();
+    opts.write(true).create(true).truncate(true);
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::OpenOptionsExt;
+        opts.mode(0o600);
+    }
+    let f = opts.open(path)?;
+    // mode() only applies to newly created files; re-assert on rewrite
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::PermissionsExt;
+        f.set_permissions(std::fs::Permissions::from_mode(0o600))?;
+    }
+    Ok(f)
+}
+
+/// Write an admin credential to a file (lowercase hex + newline, 0600
+/// on unix from the moment it exists) — the distribution format
+/// `mole keygen --credential-out` produces and `[serving]
+/// admin_credential_file` / `mole admin --credential` consume.
+pub fn save_credential_file(cred: &[u8; 32], path: &Path) -> Result<()> {
+    let mut f = create_secret_file(path)?;
+    f.write_all(to_hex(cred).as_bytes())?;
+    f.write_all(b"\n")?;
+    Ok(())
+}
+
+/// Load an admin credential file (64 hex chars, surrounding whitespace
+/// tolerated).
+pub fn load_credential_file(path: &Path) -> Result<[u8; 32]> {
+    let text = std::fs::read_to_string(path)?;
+    let cred = from_hex(text.trim()).ok_or_else(|| {
+        Error::Key(format!("credential file {path:?} is not hex"))
+    })?;
+    cred.as_slice().try_into().map_err(|_| {
+        Error::Key(format!(
+            "credential file {path:?} holds {} bytes, expected 32",
+            cred.len()
+        ))
+    })
 }
 
 #[cfg(test)]
@@ -322,13 +482,114 @@ mod tests {
         assert_eq!(loaded.epoch, 0);
         assert_eq!(loaded.parent_fingerprint, "");
         // re-saving upgrades to the current format without changing the
-        // material (fingerprints agree because epoch 0 + empty lineage)
+        // material (fingerprints agree because epoch 0 + empty lineage +
+        // the same derived credential seed)
         assert_eq!(loaded.fingerprint(), b.fingerprint());
-        assert_eq!(&loaded.to_bytes()[..8], MAGIC_V2);
+        assert_eq!(loaded.admin_credential(), b.admin_credential());
+        assert_eq!(&loaded.to_bytes()[..8], MAGIC_V3);
         // tampered legacy bytes are still caught
         let mut bad = v1_bytes(&b);
         bad[8 + 5 * 8] ^= 1;
         assert!(matches!(KeyBundle::from_bytes(&bad), Err(Error::Key(_))));
+    }
+
+    /// Hand-encode the legacy MOLEKEY2 layout (no credential seed) for
+    /// back-compat coverage.
+    fn v2_bytes(b: &KeyBundle) -> Vec<u8> {
+        let mut body = Vec::new();
+        for v in [
+            b.geometry.alpha as u64,
+            b.geometry.m as u64,
+            b.geometry.beta as u64,
+            b.geometry.p as u64,
+            b.kappa as u64,
+            b.morph_seed,
+            b.epoch as u64,
+            b.perm.beta() as u64,
+        ] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        body.extend_from_slice(&(b.parent_fingerprint.len() as u32).to_le_bytes());
+        body.extend_from_slice(b.parent_fingerprint.as_bytes());
+        for &p in b.perm.as_slice() {
+            body.extend_from_slice(&(p as u32).to_le_bytes());
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V2);
+        out.extend_from_slice(&body);
+        let mut h = Sha256::new();
+        h.update(MAGIC_V2);
+        h.update(&body);
+        out.extend_from_slice(&h.finalize());
+        out
+    }
+
+    #[test]
+    fn legacy_v2_vault_still_loads() {
+        let root = bundle();
+        let b = root.rotate(4242).unwrap();
+        let loaded = KeyBundle::from_bytes(&v2_bytes(&b)).unwrap();
+        assert_eq!(loaded.morph_seed, b.morph_seed);
+        assert_eq!(loaded.epoch, 1);
+        assert_eq!(loaded.parent_fingerprint, b.parent_fingerprint);
+        assert_eq!(loaded.perm, b.perm);
+        // the credential seed is re-derived from the morph seed, so the
+        // upgraded bundle is byte-identical to a natively-v3 rotation
+        assert_eq!(loaded.cred_seed, b.cred_seed);
+        assert_eq!(loaded.fingerprint(), b.fingerprint());
+        assert_eq!(loaded.admin_credential(), b.admin_credential());
+        // tampered v2 bytes are still caught
+        let mut bad = v2_bytes(&b);
+        bad[8 + 5 * 8] ^= 1;
+        assert!(matches!(KeyBundle::from_bytes(&bad), Err(Error::Key(_))));
+    }
+
+    #[test]
+    fn admin_credential_derivation() {
+        let a = bundle();
+        // deterministic, 32 bytes, hex form matches
+        assert_eq!(a.admin_credential(), bundle().admin_credential());
+        assert_eq!(a.admin_credential_hex().len(), 64);
+        assert_eq!(
+            a.admin_credential_hex(),
+            to_hex(&a.admin_credential())
+        );
+        // distinct key material ⇒ distinct credential
+        let b = KeyBundle::generate(Geometry::SMALL, 16, 1235).unwrap();
+        assert_ne!(a.admin_credential(), b.admin_credential());
+        // rotation re-derives the credential along with everything else
+        let r = a.rotate(5678).unwrap();
+        assert_ne!(r.admin_credential(), a.admin_credential());
+        assert_ne!(r.cred_seed, a.cred_seed);
+        // the credential is not the (public) fingerprint, nor derivable
+        // by hashing it the obvious way
+        assert_ne!(a.admin_credential_hex(), a.fingerprint());
+        let fp_hash = crate::hash::sha256(a.fingerprint().as_bytes());
+        assert_ne!(a.admin_credential(), fp_hash);
+    }
+
+    #[test]
+    fn credential_file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("mole_cred_file_test.cred");
+        let cred = bundle().admin_credential();
+        save_credential_file(&cred, &path).unwrap();
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::PermissionsExt;
+            let mode = std::fs::metadata(&path).unwrap().permissions().mode();
+            assert_eq!(mode & 0o777, 0o600);
+        }
+        assert_eq!(load_credential_file(&path).unwrap(), cred);
+        // whitespace tolerated, garbage rejected typed
+        std::fs::write(&path, format!("  {}\n\n", to_hex(&cred))).unwrap();
+        assert_eq!(load_credential_file(&path).unwrap(), cred);
+        std::fs::write(&path, "not-hex-at-all").unwrap();
+        assert!(matches!(load_credential_file(&path), Err(Error::Key(_))));
+        std::fs::write(&path, "abcd").unwrap(); // hex, wrong length
+        let err = load_credential_file(&path).unwrap_err();
+        assert!(err.to_string().contains("expected 32"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -379,9 +640,14 @@ mod tests {
         let mut bytes = b.to_bytes();
         bytes[8 + 6 * 8] ^= 1;
         assert!(matches!(KeyBundle::from_bytes(&bytes), Err(Error::Key(_))));
+        // flip a bit in the credential seed: the v3 field is
+        // integrity-protected too
+        let mut bytes = b.to_bytes();
+        bytes[8 + 7 * 8] ^= 1;
+        assert!(matches!(KeyBundle::from_bytes(&bytes), Err(Error::Key(_))));
         // flip a bit inside the parent fingerprint
         let mut bytes = b.to_bytes();
-        bytes[8 + 8 * 8 + 4] ^= 1;
+        bytes[8 + 9 * 8 + 4] ^= 1;
         assert!(matches!(KeyBundle::from_bytes(&bytes), Err(Error::Key(_))));
         // truncation
         assert!(KeyBundle::from_bytes(&b.to_bytes()[..10]).is_err());

@@ -26,7 +26,10 @@
 //!   κ, channel permutation) with **key epochs**: `KeyBundle::rotate` /
 //!   [`keys::rotate_file`] advance to fresh material while recording
 //!   fingerprint lineage, so epoch N and N+1 can serve side by side
-//!   during rollover.
+//!   during rollover. The vault also derives the **admin-plane
+//!   credential** (labeled HMAC over the secrets, in-tree SHA-256 in
+//!   [`hash`]) that authenticates `mole admin` against a
+//!   credential-gated server.
 //! * **Delivery system ([`coordinator`])** — the Fig.-1 protocol between
 //!   data provider and developer (versioned wire frames with model/epoch
 //!   routing and typed lifecycle faults), training on morphed streams,
@@ -34,9 +37,11 @@
 //!   [`coordinator::ModelRegistry`] of named models × key epochs — each
 //!   an adaptive micro-batcher lane over a shared `Send + Sync` engine,
 //!   moving through the Active → Draining → Retired rollover lifecycle —
-//!   fronted by a concurrent TCP server (`mole serve`) with a
-//!   loopback-only admin surface ([`coordinator::admin`], `mole admin`)
-//!   for runtime register/drain/retire, plus the matching
+//!   fronted by a concurrent TCP server (`mole serve`) with an admin
+//!   surface ([`coordinator::admin`], `mole admin`) for runtime
+//!   register/drain/retire — loopback-gated by default, or MAC-
+//!   authenticated (challenge–response, anti-replay counters) once a
+//!   vault-derived credential is installed — plus the matching
 //!   multi-connection load driver (`mole loadgen`).
 //! * **Client SDK ([`coordinator::client`])** — the typed
 //!   [`coordinator::MoleClient`] (connect / `infer` / `infer_batch` /

@@ -7,8 +7,9 @@
 //! * `provider --listen ADDR [--batches N]` — run a data-provider node
 //! * `developer --connect ADDR` — run a developer node (train on stream)
 //! * `serve [--listen ADDR] [--model NAME,NAME…] [--max-batch N]
-//!   [--timeout-ms T] [--workers W] [--fixed-window] [--max-requests N]`
-//!   — concurrent multi-tenant TCP inference server: every
+//!   [--timeout-ms T] [--workers W] [--fixed-window] [--max-requests N]
+//!   [--admin-credential FILE]` — concurrent multi-tenant TCP inference
+//!   server: every
 //!   `[serving.models.*]` config entry (or the `--model` subset) becomes
 //!   a registry lane over the adaptive micro-batcher (`--max-requests`
 //!   exits after N answered requests; for smoke tests)
@@ -16,13 +17,19 @@
 //!   [--pipeline P] [--model NAME] [--epoch E]` — multi-connection
 //!   serving load driver; prints throughput + latency percentiles, exits
 //!   nonzero on any error
-//! * `keygen --vault FILE [--kappa K] [--seed S]` — generate a root key
-//!   bundle and store it in a vault file
-//! * `rotate-key --vault FILE [--seed S] [--out FILE]` — rotate a vault
-//!   to the next key epoch (fresh morph seed + permutation, lineage
-//!   recorded)
-//! * `admin <register|drain|retire|status> [--connect ADDR]` — drive a
-//!   running server's live registry (loopback only):
+//! * `keygen --vault FILE [--kappa K] [--seed S]
+//!   [--credential-out FILE]` — generate a root key bundle, store it in
+//!   a vault file, and print (optionally save) the vault-derived admin
+//!   credential
+//! * `rotate-key --vault FILE [--seed S] [--out FILE]
+//!   [--credential-out FILE]` — rotate a vault to the next key epoch
+//!   (fresh morph seed + permutation, lineage recorded; the admin
+//!   credential re-derives with it)
+//! * `admin <register|drain|retire|status> [--connect ADDR]
+//!   [--credential FILE]` — drive a running server's live registry.
+//!   Without `--credential` the server must be loopback and
+//!   credential-free; with it, every verb is MAC-authenticated
+//!   (challenge–response + frame counter) and remote servers are legal.
 //!   `register --model NAME [--vault FILE | --kappa K --seed S]
 //!   [--trunk-seed T]` starts a new lane (the vault path is read by the
 //!   **server**); `drain --model NAME --epoch E` stops new traffic on an
@@ -244,6 +251,19 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
         }
     }
     let admin_enabled = cfg.admin_enabled && !args.flag("no-admin");
+    // --admin-credential overrides [serving] admin_credential_file;
+    // either installs the MAC gate (and legalizes remote admin peers)
+    let cred_file = args.get_or("admin-credential", &cfg.admin_credential_file);
+    let admin_credential = if cred_file.is_empty() {
+        None
+    } else {
+        Some(mole::keys::load_credential_file(Path::new(&cred_file))?)
+    };
+    let admin_mode = match (admin_enabled, admin_credential.is_some()) {
+        (false, _) => "off",
+        (true, true) => "on (authenticated)",
+        (true, false) => "on (loopback)",
+    };
     let labels = registry.labels();
     let server = Server::bind(
         registry,
@@ -251,18 +271,18 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
             addr: addr.clone(),
             session_workers: workers,
             admin_enabled,
+            admin_credential,
             ..ServeConfig::default()
         },
     )?;
     println!(
-        "serving {} on {} (workers={workers}, max_batch={}, window={}..{}us{}, admin {})",
+        "serving {} on {} (workers={workers}, max_batch={}, window={}..{}us{}, admin {admin_mode})",
         labels.join(", "),
         server.local_addr(),
         batcher.max_batch,
         batcher.min_timeout.as_micros(),
         batcher.timeout.as_micros(),
         if batcher.adaptive { ", adaptive" } else { ", fixed" },
-        if admin_enabled { "on (loopback)" } else { "off" },
     );
     // wire-level counters live on the server; batching/latency live on
     // each lane — print both so the status lines actually show coalescing
@@ -347,6 +367,30 @@ fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
     Ok(())
 }
 
+/// Shared tail of `keygen` / `rotate-key`: report the vault-derived
+/// admin credential. With `--credential-out` the secret goes **only**
+/// into the 0600 file — printing it too would land it in shell
+/// scrollback and CI logs, undoing the file permissions; without the
+/// flag it prints for manual distribution.
+fn report_credential(args: &Args, keys: &mole::keys::KeyBundle) -> Result<()> {
+    match args.get("credential-out") {
+        Some(out) => {
+            mole::keys::save_credential_file(&keys.admin_credential(), Path::new(out))?;
+            println!(
+                "admin credential (epoch {}) written to {out} (0600); install via \
+                 [serving] admin_credential_file and `mole admin --credential {out}`",
+                keys.epoch
+            );
+        }
+        None => println!(
+            "admin credential (epoch {}): {}",
+            keys.epoch,
+            keys.admin_credential_hex()
+        ),
+    }
+    Ok(())
+}
+
 fn keygen(args: &Args, cfg: &MoleConfig) -> Result<()> {
     let vault = args
         .get("vault")
@@ -359,7 +403,7 @@ fn keygen(args: &Args, cfg: &MoleConfig) -> Result<()> {
         "wrote {vault}: epoch 0, kappa={kappa}, fingerprint {}",
         keys.fingerprint()
     );
-    Ok(())
+    report_credential(args, &keys)
 }
 
 fn rotate_key(args: &Args) -> Result<()> {
@@ -372,6 +416,7 @@ fn rotate_key(args: &Args) -> Result<()> {
     println!("rotated {vault} -> {out}: epoch {} -> {}", old.epoch, rotated.epoch);
     println!("  parent fingerprint {}", rotated.parent_fingerprint);
     println!("  new fingerprint    {}", rotated.fingerprint());
+    report_credential(args, &rotated)?;
     println!("re-morph the corpus under the new epoch, then complete the live rollover:");
     println!("  mole admin register --model NAME --vault {out}");
     println!("  mole admin drain --model NAME --epoch {}", old.epoch);
@@ -397,7 +442,13 @@ fn admin(args: &Args, cfg: &MoleConfig) -> Result<()> {
             .parse::<u32>()
             .map_err(|_| mole::Error::Config("--epoch must be an integer".into()))
     };
-    let mut client = AdminClient::connect(&addr)?;
+    let mut client = match args.get("credential") {
+        Some(path) => {
+            let cred = mole::keys::load_credential_file(Path::new(path))?;
+            AdminClient::connect_with_credential(&addr, cred)?
+        }
+        None => AdminClient::connect(&addr)?,
+    };
     let detail = match verb {
         "register" => {
             let model = model_arg()?;

@@ -1,0 +1,254 @@
+//! Adversarial protocol-conformance driver: replay scripted frame
+//! sequences — valid, forged, replayed, bit-flipped, downgraded, or
+//! plain raw bytes — against a live endpoint and pin the typed replies.
+//!
+//! This is the shared substrate of the admin-auth test suites: the
+//! negative-auth matrix, the authenticated-rotation e2e and the CI
+//! smoke all build their scenarios from [`Driver`] (a step player over
+//! any `Read + Write` transport, TCP included) and [`AdminSigner`] (a
+//! client-side sealer that can also *mis*-seal on purpose: wrong
+//! credential, stale counter, tampered payload, flipped MAC). Keeping
+//! the hostile-frame construction here means every suite forges frames
+//! the same way, and a change to the envelope layout breaks one module
+//! instead of five tests.
+
+use crate::coordinator::protocol::{
+    admin_mac, read_message, seal_admin, write_message, Fault, Message,
+};
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// What a script expects the peer's next reply (or silence) to be.
+#[derive(Debug, Clone)]
+pub enum Expect {
+    /// An `AdminOk` whose detail contains the given substring.
+    Ok(&'static str),
+    /// A typed `Fault::AdminAuth` whose message contains the substring.
+    AuthFault(&'static str),
+    /// A `Fault::Generic` whose message contains the substring.
+    GenericFault(&'static str),
+    /// An `AdminChallenge` (any nonce).
+    Challenge,
+    /// An `EndOfData` frame (the close handshake's second half).
+    EndOfData,
+    /// The peer hangs up (clean EOF) instead of answering.
+    Eof,
+}
+
+/// One step of a conformance script.
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// Write raw bytes on the wire, bypassing the encoder entirely —
+    /// malformed magic, lying lengths, half frames.
+    Raw(Vec<u8>),
+    /// Write one well-framed message.
+    Send(Message),
+    /// Read one reply and check it against an [`Expect`].
+    Expect(Expect),
+}
+
+/// Scripted-frame player over an arbitrary transport.
+pub struct Driver<S: Read + Write = TcpStream> {
+    stream: S,
+}
+
+impl Driver<TcpStream> {
+    /// Connect to a live TCP endpoint.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        Ok(Self { stream: sock })
+    }
+}
+
+impl<S: Read + Write> Driver<S> {
+    /// Drive an already-open transport (e.g. a
+    /// [`super::net::pipe_pair`] end).
+    pub fn over(stream: S) -> Self {
+        Self { stream }
+    }
+
+    /// Write raw bytes, bypassing the frame encoder.
+    pub fn raw(&mut self, bytes: &[u8]) -> Result<&mut Self> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()?;
+        Ok(self)
+    }
+
+    /// Write one framed message.
+    pub fn send(&mut self, msg: &Message) -> Result<&mut Self> {
+        write_message(&mut self.stream, msg)?;
+        Ok(self)
+    }
+
+    /// Read one reply frame.
+    pub fn recv(&mut self) -> Result<Message> {
+        read_message(&mut self.stream)
+    }
+
+    /// Open the authenticated handshake: `AdminHello` out, challenge
+    /// nonce back. A typed `Fault` reply surfaces as its error.
+    pub fn challenge(&mut self) -> Result<[u8; 32]> {
+        self.send(&Message::AdminHello)?;
+        match self.recv()? {
+            Message::AdminChallenge { nonce } => Ok(nonce),
+            Message::Fault { fault, .. } => Err(fault.into_error()),
+            other => Err(Error::Protocol(format!(
+                "expected AdminChallenge, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Read one reply and check it against `want`; mismatches come back
+    /// as typed errors naming both sides.
+    pub fn expect(&mut self, want: &Expect) -> Result<&mut Self> {
+        let got = match self.recv() {
+            Ok(m) => m,
+            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return if matches!(want, Expect::Eof) {
+                    Ok(self)
+                } else {
+                    Err(Error::Protocol(format!("expected {want:?}, peer hung up")))
+                };
+            }
+            Err(e) => return Err(e),
+        };
+        let ok = match want {
+            Expect::Ok(sub) => {
+                matches!(&got, Message::AdminOk { detail } if detail.contains(sub))
+            }
+            Expect::AuthFault(sub) => matches!(
+                &got,
+                Message::Fault { fault: Fault::AdminAuth { msg }, .. }
+                    if msg.contains(sub)
+            ),
+            Expect::GenericFault(sub) => matches!(
+                &got,
+                Message::Fault { fault: Fault::Generic { msg }, .. }
+                    if msg.contains(sub)
+            ),
+            Expect::Challenge => matches!(&got, Message::AdminChallenge { .. }),
+            Expect::EndOfData => matches!(&got, Message::EndOfData),
+            Expect::Eof => false,
+        };
+        if ok {
+            Ok(self)
+        } else {
+            Err(Error::Protocol(format!("expected {want:?}, got {got:?}")))
+        }
+    }
+
+    /// Play a whole script in order, stopping typed at the first
+    /// mismatch.
+    pub fn play(&mut self, steps: &[Step]) -> Result<&mut Self> {
+        for step in steps {
+            match step {
+                Step::Raw(bytes) => {
+                    self.raw(bytes)?;
+                }
+                Step::Send(msg) => {
+                    self.send(msg)?;
+                }
+                Step::Expect(want) => {
+                    self.expect(want)?;
+                }
+            }
+        }
+        Ok(self)
+    }
+}
+
+/// Client-side sealer for the authenticated admin plane — and, for the
+/// adversarial suites, a deliberate *mis*-sealer. Tracks the session
+/// nonce and frame counter like a real client; the `*_forged` /
+/// `replay` / `tampered` constructors produce the exact hostile frames
+/// the negative-auth matrix pins.
+pub struct AdminSigner {
+    credential: [u8; 32],
+    nonce: [u8; 32],
+    counter: u64,
+    last: Option<Message>,
+}
+
+impl AdminSigner {
+    /// Signer for a session whose challenge nonce is already known.
+    pub fn new(credential: [u8; 32], nonce: [u8; 32]) -> Self {
+        Self { credential, nonce, counter: 0, last: None }
+    }
+
+    /// The next counter a [`AdminSigner::seal`] call will stamp.
+    pub fn next_counter(&self) -> u64 {
+        self.counter + 1
+    }
+
+    /// Seal a verb correctly: advance the counter, MAC under the
+    /// session nonce, remember the frame for byte-identical replay.
+    pub fn seal(&mut self, verb: &Message) -> Message {
+        self.counter += 1;
+        let sealed = seal_admin(&self.credential, &self.nonce, self.counter, verb);
+        self.last = Some(sealed.clone());
+        sealed
+    }
+
+    /// Seal with an explicit counter (stale, skipped, or otherwise
+    /// lying) without advancing the signer's own state.
+    pub fn seal_at(&self, counter: u64, verb: &Message) -> Message {
+        seal_admin(&self.credential, &self.nonce, counter, verb)
+    }
+
+    /// Seal under a *different* credential (the wrong-credential cell);
+    /// counter bookkeeping mirrors [`AdminSigner::seal`] so the frame is
+    /// plausible in every way except the MAC key.
+    pub fn seal_forged(&mut self, forged_credential: &[u8; 32], verb: &Message) -> Message {
+        self.counter += 1;
+        seal_admin(forged_credential, &self.nonce, self.counter, verb)
+    }
+
+    /// The last correctly-sealed frame, byte-identical — the replay
+    /// cell. Panics if nothing was sealed yet (a script bug, not a
+    /// runtime condition).
+    pub fn replay(&self) -> Message {
+        self.last.clone().expect("replay() before any seal()")
+    }
+
+    /// Seal correctly, then flip one bit inside the inner payload: the
+    /// MAC no longer matches the bytes (the tampered-payload cell).
+    pub fn tampered(&mut self, verb: &Message) -> Message {
+        match self.seal(verb) {
+            Message::AdminAuthed { counter, mac, inner_tag, mut inner } => {
+                if inner.is_empty() {
+                    // payload-free verb (AdminStatus): tamper the tag
+                    // instead — still MAC-covered
+                    Message::AdminAuthed {
+                        counter,
+                        mac,
+                        inner_tag: inner_tag ^ 1,
+                        inner,
+                    }
+                } else {
+                    inner[0] ^= 1;
+                    Message::AdminAuthed { counter, mac, inner_tag, inner }
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Seal correctly, then flip one MAC bit (the forged-MAC cell).
+    pub fn mac_flipped(&mut self, verb: &Message) -> Message {
+        match self.seal(verb) {
+            Message::AdminAuthed { counter, mut mac, inner_tag, inner } => {
+                mac[0] ^= 1;
+                Message::AdminAuthed { counter, mac, inner_tag, inner }
+            }
+            other => other,
+        }
+    }
+
+    /// MAC over arbitrary envelope fields under this signer's
+    /// credential/nonce — for scripts that need full manual control.
+    pub fn mac_for(&self, counter: u64, inner_tag: u8, inner: &[u8]) -> [u8; 32] {
+        admin_mac(&self.credential, &self.nonce, counter, inner_tag, inner)
+    }
+}

@@ -1,6 +1,10 @@
 //! Mini property-testing harness (proptest is unavailable offline —
 //! DESIGN.md §5). Seeded generators + a `forall` runner that reports the
-//! failing seed/case so failures reproduce deterministically.
+//! failing seed/case so failures reproduce deterministically. The
+//! [`conformance`] submodule adds the scripted raw-frame driver the
+//! adversarial protocol suites replay against live servers.
+
+pub mod conformance;
 
 use crate::rng::Rng;
 

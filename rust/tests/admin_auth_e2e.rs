@@ -1,0 +1,473 @@
+//! Authenticated admin plane, end to end: the conformance scripts, the
+//! table-driven negative-auth matrix, and rotate-under-load driven
+//! entirely through MAC-authenticated admin sessions while a forged
+//! client hammers the same server.
+//!
+//! Everything here runs against a **live** `Server` over real TCP and
+//! builds its frames — valid and hostile — from the shared
+//! [`mole::testkit::conformance`] driver, so the suites and the CI
+//! smoke forge frames identically.
+
+use mole::coordinator::batcher::BatcherConfig;
+use mole::coordinator::client::{ClientConfig, MoleClient};
+use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry, RegisteredModel};
+use mole::coordinator::server::{ServeConfig, Server};
+use mole::coordinator::{AdminClient, Message};
+use mole::keys::KeyBundle;
+use mole::manifest::Manifest;
+use mole::rng::Rng;
+use mole::runtime::{Arg, SharedEngine};
+use mole::tensor::Tensor;
+use mole::testkit::conformance::{AdminSigner, Driver, Expect, Step};
+use mole::{Error, Geometry};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+const KAPPA: usize = 16;
+const SEED: u64 = 4242;
+
+fn manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).unwrap()
+}
+
+fn epoch_keys() -> (KeyBundle, KeyBundle) {
+    let root = KeyBundle::generate(Geometry::SMALL, KAPPA, SEED).unwrap();
+    let rotated = root.rotate(SEED + 1).unwrap();
+    (root, rotated)
+}
+
+fn entry(m: &Manifest, keys: &KeyBundle) -> RegisteredModel {
+    demo_entry_from_keys(m, "alpha", keys, SEED).unwrap()
+}
+
+/// A live credential-gated server hosting `alpha@0`, plus the engine it
+/// runs on (for bitwise reference inference) and the valid credential.
+fn start_authed_server() -> (Server, SharedEngine, [u8; 32]) {
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let (root, _) = epoch_keys();
+    let cred = root.admin_credential();
+    let registry = ModelRegistry::new(
+        engine.clone(),
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(&m, &root)).unwrap();
+    let server = Server::bind(
+        registry,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 8,
+            admin_credential: Some(cred),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    (server, engine, cred)
+}
+
+/// Reference: one row through the batch-1 artifact, per epoch.
+fn single_row_logits(engine: &SharedEngine, e: &RegisteredModel, row: &[f32]) -> Vec<f32> {
+    let mut args: Vec<Arg> = vec![
+        Arg::T(e.layer.matrix().clone()),
+        Arg::T(Tensor::new(&[e.layer.bias().len()], e.layer.bias().to_vec()).unwrap()),
+    ];
+    for p in &e.params {
+        args.push(Arg::T(p.clone()));
+    }
+    args.push(Arg::T(Tensor::new(&[1, row.len()], row.to_vec()).unwrap()));
+    engine.exec("infer_aug_small_b1", &args).unwrap()[0].data().to_vec()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Tentpole acceptance: the conformance scripts. A valid authenticated
+/// round dispatches; every hostile variation — forged MAC, stale
+/// (byte-identical replay) counter, bit-flipped payload, downgrade to
+/// bare verbs — is refused with the typed `Fault::AdminAuth` *before*
+/// any dispatch, and the session is cut.
+#[test]
+fn conformance_scripts_pin_the_auth_plane() {
+    let (server, _engine, cred) = start_authed_server();
+    let addr = server.local_addr();
+
+    // --- valid script: challenge → status → drain-refused (verb-level
+    // error keeps the session alive) → status again → clean close
+    let mut d = Driver::connect(addr).unwrap();
+    let nonce = d.challenge().unwrap();
+    let mut signer = AdminSigner::new(cred, nonce);
+    d.play(&[
+        Step::Send(signer.seal(&Message::AdminStatus)),
+        Step::Expect(Expect::Ok("alpha@0 state=active")),
+        // draining a nonexistent epoch: authenticated, dispatched,
+        // refused at the registry — a Generic fault, NOT an auth fault
+        Step::Send(signer.seal(&Message::AdminDrain { model: "alpha".into(), epoch: 7 })),
+        Step::Expect(Expect::GenericFault("no epoch 7")),
+        Step::Send(signer.seal(&Message::AdminStatus)),
+        Step::Expect(Expect::Ok("alpha@0 state=active")),
+        Step::Send(Message::EndOfData),
+        Step::Expect(Expect::EndOfData),
+        Step::Expect(Expect::Eof),
+    ])
+    .unwrap();
+
+    // --- forged MAC: one flipped MAC bit, otherwise perfect
+    let mut d = Driver::connect(addr).unwrap();
+    let nonce = d.challenge().unwrap();
+    let mut signer = AdminSigner::new(cred, nonce);
+    d.play(&[
+        Step::Send(signer.mac_flipped(&Message::AdminStatus)),
+        Step::Expect(Expect::AuthFault("MAC verification failed")),
+        Step::Expect(Expect::Eof), // session cut after an auth failure
+    ])
+    .unwrap();
+
+    // --- byte-identical replay: valid MAC, stale counter
+    let mut d = Driver::connect(addr).unwrap();
+    let nonce = d.challenge().unwrap();
+    let mut signer = AdminSigner::new(cred, nonce);
+    d.play(&[
+        Step::Send(signer.seal(&Message::AdminStatus)),
+        Step::Expect(Expect::Ok("alpha@0")),
+        Step::Send(signer.replay()),
+        Step::Expect(Expect::AuthFault("anti-replay")),
+        Step::Expect(Expect::Eof),
+    ])
+    .unwrap();
+
+    // --- bit-flipped payload: MAC no longer covers the bytes
+    let mut d = Driver::connect(addr).unwrap();
+    let nonce = d.challenge().unwrap();
+    let mut signer = AdminSigner::new(cred, nonce);
+    d.play(&[
+        Step::Send(signer.tampered(&Message::AdminDrain { model: "alpha".into(), epoch: 0 })),
+        Step::Expect(Expect::AuthFault("MAC verification failed")),
+        Step::Expect(Expect::Eof),
+    ])
+    .unwrap();
+
+    // --- downgrade inside an authenticated session: a bare verb after
+    // the challenge is refused without dispatch
+    let mut d = Driver::connect(addr).unwrap();
+    d.challenge().unwrap();
+    d.play(&[
+        Step::Send(Message::AdminStatus),
+        Step::Expect(Expect::AuthFault("must be authenticated")),
+        Step::Expect(Expect::Eof),
+    ])
+    .unwrap();
+
+    // --- cross-session replay: a frame sealed under session A's nonce
+    // never verifies under session B's
+    let mut a = Driver::connect(addr).unwrap();
+    let nonce_a = a.challenge().unwrap();
+    let mut signer_a = AdminSigner::new(cred, nonce_a);
+    let stolen = signer_a.seal(&Message::AdminStatus);
+    let mut b = Driver::connect(addr).unwrap();
+    let nonce_b = b.challenge().unwrap();
+    assert_ne!(nonce_a, nonce_b, "challenge nonces must be unique per session");
+    b.play(&[
+        Step::Send(stolen),
+        Step::Expect(Expect::AuthFault("MAC verification failed")),
+        Step::Expect(Expect::Eof),
+    ])
+    .unwrap();
+
+    // --- raw garbage on the admin plane: no panic, typed rejection
+    let mut d = Driver::connect(addr).unwrap();
+    d.challenge().unwrap();
+    d.raw(b"ML\xFFgarbage-after-the-magic").unwrap();
+    match d.recv() {
+        Ok(Message::Fault { .. }) | Err(_) => {}
+        other => panic!("expected fault or cut, got {other:?}"),
+    }
+
+    // none of the hostile sessions dispatched anything: alpha@0 is
+    // still the only lane and still active
+    let mut admin = AdminClient::connect_with_credential(addr, cred).unwrap();
+    let status = admin.status().unwrap();
+    assert!(status.contains("alpha@0 state=active"), "{status}");
+    assert_eq!(status.lines().count(), 1, "unexpected lane appeared: {status}");
+    admin.finish().unwrap();
+
+    server.stop();
+}
+
+/// Satellite: table-driven negative-auth matrix. Every cell pins the
+/// exact typed `Error` the client surfaces AND leaves the registry
+/// untouched. Cells run against a credential-gated server; the last
+/// cell against a credential-free one.
+#[test]
+fn negative_auth_matrix() {
+    let (server, _engine, cred) = start_authed_server();
+    let addr = server.local_addr();
+
+    // the credential-free sibling for the "authenticated frame when
+    // auth is not configured" cell
+    let m = manifest();
+    let registry = ModelRegistry::new(
+        SharedEngine::new(m.clone()),
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(&m, &epoch_keys().0)).unwrap();
+    let plain_server = Server::bind(
+        registry,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 2,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let plain_addr = plain_server.local_addr();
+
+    type Cell = (&'static str, fn(SocketAddr, SocketAddr, [u8; 32]) -> Error);
+
+    fn wrong_credential(addr: SocketAddr, _: SocketAddr, _cred: [u8; 32]) -> Error {
+        let mut admin =
+            AdminClient::connect_with_credential(addr, [0x5C; 32]).unwrap();
+        admin.drain("alpha", 0).unwrap_err()
+    }
+    fn replayed_frame(addr: SocketAddr, _: SocketAddr, cred: [u8; 32]) -> Error {
+        let mut d = Driver::connect(addr).unwrap();
+        let nonce = d.challenge().unwrap();
+        let mut signer = AdminSigner::new(cred, nonce);
+        d.send(&signer.seal(&Message::AdminStatus)).unwrap();
+        d.expect(&Expect::Ok("alpha@0")).unwrap();
+        d.send(&signer.replay()).unwrap();
+        match d.recv().unwrap() {
+            Message::Fault { fault, .. } => fault.into_error(),
+            other => panic!("expected Fault, got {other:?}"),
+        }
+    }
+    fn reordered_counter(addr: SocketAddr, _: SocketAddr, cred: [u8; 32]) -> Error {
+        let mut d = Driver::connect(addr).unwrap();
+        let nonce = d.challenge().unwrap();
+        let signer = AdminSigner::new(cred, nonce);
+        // counters may skip forward (5 after nothing) but never move back
+        d.send(&signer.seal_at(5, &Message::AdminStatus)).unwrap();
+        d.expect(&Expect::Ok("alpha@0")).unwrap();
+        d.send(&signer.seal_at(3, &Message::AdminStatus)).unwrap();
+        match d.recv().unwrap() {
+            Message::Fault { fault, .. } => fault.into_error(),
+            other => panic!("expected Fault, got {other:?}"),
+        }
+    }
+    fn tampered_payload(addr: SocketAddr, _: SocketAddr, cred: [u8; 32]) -> Error {
+        let mut d = Driver::connect(addr).unwrap();
+        let nonce = d.challenge().unwrap();
+        let mut signer = AdminSigner::new(cred, nonce);
+        d.send(&signer.tampered(&Message::AdminDrain { model: "alpha".into(), epoch: 0 }))
+            .unwrap();
+        match d.recv().unwrap() {
+            Message::Fault { fault, .. } => fault.into_error(),
+            other => panic!("expected Fault, got {other:?}"),
+        }
+    }
+    fn unauthenticated_when_configured(
+        addr: SocketAddr,
+        _: SocketAddr,
+        _cred: [u8; 32],
+    ) -> Error {
+        // the legacy loopback path, verbatim — refused because the
+        // server has a credential installed
+        let mut admin = AdminClient::connect(addr).unwrap();
+        admin.status().unwrap_err()
+    }
+    fn authenticated_when_not_configured(
+        _: SocketAddr,
+        plain_addr: SocketAddr,
+        cred: [u8; 32],
+    ) -> Error {
+        match AdminClient::connect_with_credential(plain_addr, cred) {
+            Err(e) => e,
+            Ok(_) => panic!("authenticated handshake succeeded without a server credential"),
+        }
+    }
+
+    let cells: &[Cell] = &[
+        ("wrong credential", wrong_credential),
+        ("replayed frame", replayed_frame),
+        ("reordered counter", reordered_counter),
+        ("tampered payload", tampered_payload),
+        ("unauthenticated frame, auth configured", unauthenticated_when_configured),
+        ("authenticated frame, auth not configured", authenticated_when_not_configured),
+    ];
+    let pinned_msg: &[&str] = &[
+        "MAC verification failed",
+        "anti-replay",
+        "anti-replay",
+        "MAC verification failed",
+        "must be authenticated",
+        "not configured",
+    ];
+    for ((name, cell), want) in cells.iter().zip(pinned_msg) {
+        let err = cell(addr, plain_addr, cred);
+        // every cell is the same typed variant with its pinned message —
+        // never a Generic fault, never a connection reset
+        match &err {
+            Error::AdminAuth(msg) => {
+                assert!(msg.contains(want), "cell {name:?}: {msg:?} !~ {want:?}")
+            }
+            other => panic!("cell {name:?}: expected Error::AdminAuth, got {other:?}"),
+        }
+    }
+
+    // no cell dispatched: both registries still hold exactly alpha@0,
+    // active (the drains above never ran)
+    let mut admin = AdminClient::connect_with_credential(addr, cred).unwrap();
+    let status = admin.status().unwrap();
+    assert_eq!(status.trim(), status.trim().lines().next().unwrap(), "{status}");
+    assert!(status.contains("alpha@0 state=active"), "{status}");
+    admin.finish().unwrap();
+    let mut admin = AdminClient::connect(plain_addr).unwrap();
+    let status = admin.status().unwrap();
+    assert!(status.contains("alpha@0 state=active"), "{status}");
+    admin.finish().unwrap();
+
+    server.stop();
+    plain_server.stop();
+}
+
+/// Satellite: rotate-under-load through the authenticated path. The
+/// lifecycle barrier harness runs with every admin verb MAC-sealed,
+/// while a concurrent forged-credential client is refused over and over
+/// — and the in-flight inference stream is answered completely and
+/// bitwise-correctly throughout.
+#[test]
+fn authed_rotate_under_load_with_forged_peer() {
+    const CLIENTS: usize = 3;
+    const PER_PHASE: usize = 3;
+
+    let (server, engine, cred) = start_authed_server();
+    let addr = server.local_addr();
+    let m = manifest();
+    let (root, rotated) = epoch_keys();
+
+    // the rotated epoch's vault, readable by the server
+    let vault = std::env::temp_dir().join(format!("mole_admin_auth_vault_{SEED}.key"));
+    rotated.save(&vault).unwrap();
+
+    let rotate_start = Arc::new(Barrier::new(CLIENTS + 1));
+    let rotate_done = Arc::new(Barrier::new(CLIENTS + 1));
+
+    let client_rows = |client_id: u64, phase: u64, n: usize, d_len: usize| -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(0xAA01 ^ (client_id * 7919) ^ (phase * 104729));
+        (0..n).map(|_| rng.normal_vec(d_len, 0.5)).collect()
+    };
+
+    // the forger: a wrong-credential admin client hammering the server
+    // for the whole run; every attempt must die typed, none may dispatch
+    let stop = Arc::new(AtomicBool::new(false));
+    let refused = Arc::new(AtomicU64::new(0));
+    let forger = {
+        let (stop, refused) = (stop.clone(), refused.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let mut admin =
+                    AdminClient::connect_with_credential(addr, [0xEE; 32]).unwrap();
+                // try the most damaging verbs: drain the live lane,
+                // register a rogue model
+                let err = admin.drain("alpha", 0).unwrap_err();
+                assert!(matches!(err, Error::AdminAuth(_)), "{err}");
+                let mut admin =
+                    AdminClient::connect_with_credential(addr, [0xEE; 32]).unwrap();
+                let err = admin.register("evil", "", 16, 1, 1).unwrap_err();
+                assert!(matches!(err, Error::AdminAuth(_)), "{err}");
+                refused.fetch_add(2, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+
+    let mut threads = Vec::new();
+    for c in 0..CLIENTS as u64 {
+        let (b1, b2) = (rotate_start.clone(), rotate_done.clone());
+        threads.push(std::thread::spawn(move || {
+            let mut client =
+                MoleClient::connect_with(addr, ClientConfig::pinned("alpha", 0)).unwrap();
+            assert_eq!(client.server_info().unwrap().epoch, 0);
+            let d = client.d_len();
+            let mut rng = Rng::new(0xAA01 ^ (c * 7919) ^ 104729);
+            let rows1: Vec<Vec<f32>> =
+                (0..PER_PHASE).map(|_| rng.normal_vec(d, 0.5)).collect();
+            let got1 = client.infer_batch(&rows1).unwrap();
+            b1.wait();
+            b2.wait();
+            let mut rng = Rng::new(0xAA01 ^ (c * 7919) ^ (2 * 104729));
+            let rows2: Vec<Vec<f32>> =
+                (0..PER_PHASE).map(|_| rng.normal_vec(d, 0.5)).collect();
+            let got2 = client.infer_batch(&rows2).unwrap();
+            client.finish().unwrap();
+            (got1, got2)
+        }));
+    }
+
+    rotate_start.wait();
+    // the live rollover, entirely MAC-authenticated
+    let mut admin = AdminClient::connect_with_credential(addr, cred).unwrap();
+    let detail = admin
+        .register("alpha", vault.to_str().unwrap(), KAPPA, SEED, SEED)
+        .unwrap();
+    assert!(detail.contains("registered alpha@1"), "{detail}");
+    let detail = admin.drain("alpha", 0).unwrap();
+    assert!(detail.contains("successor 1"), "{detail}");
+    rotate_done.wait();
+
+    let results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    stop.store(true, Ordering::Relaxed);
+    forger.join().unwrap();
+    std::fs::remove_file(&vault).ok();
+
+    // bitwise ground truth per epoch
+    let (e0, e1) = (entry(&m, &root), entry(&m, &rotated));
+    let d_len = m.geometry("small").unwrap().d_len();
+    for (c, (got1, got2)) in results.iter().enumerate() {
+        assert_eq!(got1.len(), PER_PHASE);
+        assert_eq!(got2.len(), PER_PHASE);
+        for (i, row) in client_rows(c as u64, 1, PER_PHASE, d_len).iter().enumerate() {
+            assert_eq!(
+                bits(&got1[i]),
+                bits(&single_row_logits(&engine, &e0, row)),
+                "client {c} phase-1 row {i} wrong on epoch 0"
+            );
+        }
+        for (i, row) in client_rows(c as u64, 2, PER_PHASE, d_len).iter().enumerate() {
+            assert_eq!(
+                bits(&got2[i]),
+                bits(&single_row_logits(&engine, &e1, row)),
+                "client {c} phase-2 row {i} wrong on epoch 1"
+            );
+        }
+    }
+
+    // the forger really ran, was always refused, and dispatched nothing
+    assert!(refused.load(Ordering::Relaxed) > 0, "forger never got a turn");
+    let status = admin.status().unwrap();
+    assert!(!status.contains("evil"), "forged register dispatched: {status}");
+    assert!(status.contains("alpha@0 state=draining successor=1"), "{status}");
+    assert!(status.contains("alpha@1 state=active"), "{status}");
+    admin.finish().unwrap();
+
+    // zero lost or duplicated responses on the wire
+    assert_eq!(
+        server.metrics().responses.get(),
+        (2 * CLIENTS * PER_PHASE) as u64,
+        "a response was lost or duplicated"
+    );
+
+    server.stop();
+}

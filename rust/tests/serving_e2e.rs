@@ -240,7 +240,7 @@ fn unknown_models_and_old_peers_get_typed_faults() {
     match read_message(&mut sock).unwrap() {
         Message::Fault { fault: Fault::Generic { msg }, .. } => {
             assert!(msg.contains("version mismatch"), "{msg}");
-            assert!(msg.contains("v3") && msg.contains("v4"), "{msg}");
+            assert!(msg.contains("v3") && msg.contains("v5"), "{msg}");
         }
         other => panic!("expected a generic Fault frame, got {other:?}"),
     }
