@@ -1,14 +1,22 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! backend comparison (ref vs parallel) on the GEMM kernel, the
-//! block-diagonal morph, the Aug-Conv C^ac build at both SMALL and
-//! VGG-16/CIFAR geometry, plus the engine train/infer step.
+//! the full backend matrix (ref / parallel / simd / parallel+simd) on the
+//! GEMM kernel, the block-diagonal morph at SMALL and VGG-16/CIFAR
+//! geometry, the Aug-Conv C^ac build at both geometries, plus the engine
+//! train/infer step.
+//!
+//! Besides the stdout tables, results are serialized to
+//! `BENCH_hotpath.json` at the repo root (schema `mole-bench-v1`, see
+//! `mole::bench::Report`) with per-backend GFLOP/s and p50/p95/p99 so
+//! perf deltas are machine-diffable (`scripts/perf_compare.sh`).
 //!
 //! Run: `cargo bench --bench bench_hotpath`
+//! CI smoke: `MOLE_BENCH_BUDGET_MS=120 cargo bench --bench bench_hotpath`
 
 use mole::augconv::{build_aug_conv, build_aug_conv_from_c_on, ChannelPerm};
-use mole::backend::{Backend, ParallelBackend, RefBackend};
-use mole::bench::{bench, bench_auto, fmt_dur};
+use mole::backend::{cpu_features, Backend, ParallelBackend, RefBackend, SimdBackend};
+use mole::bench::{bench, bench_auto, budget, fmt_dur, scaled, BenchResult, Report};
 use mole::coordinator::trainer::{init_params, Trainer, Variant};
+use mole::json::Value;
 use mole::manifest::Manifest;
 use mole::morph::MorphKey;
 use mole::rng::Rng;
@@ -16,10 +24,31 @@ use mole::runtime::Engine;
 use mole::tensor::Tensor;
 use mole::Geometry;
 use std::path::Path;
-use std::time::Duration;
 
 fn gflops(macs: f64, secs: f64) -> f64 {
     2.0 * macs / secs / 1e9
+}
+
+/// Push one timed row: geometry + GFLOP/s + (for non-ref backends) the
+/// measured speedup over the reference time from the same section.
+fn push_row(
+    report: &mut Report,
+    r: &BenchResult,
+    backend: &str,
+    geometry: &str,
+    macs: f64,
+    ref_secs: Option<f64>,
+) {
+    let secs = r.mean.as_secs_f64();
+    let mut row = Report::row(r, backend);
+    row.insert("geometry".into(), Value::Str(geometry.to_string()));
+    if macs > 0.0 {
+        row.insert("gflops".into(), Value::Num(gflops(macs, secs)));
+    }
+    if let Some(rs) = ref_secs {
+        row.insert("speedup_vs_ref".into(), Value::Num(rs / secs));
+    }
+    report.push(row);
 }
 
 fn main() {
@@ -27,42 +56,103 @@ fn main() {
     let mut rng = Rng::new(1);
     let refb = RefBackend::new();
     let parb = ParallelBackend::new(0);
-    let backends: [(&str, &dyn Backend); 2] = [("ref", &refb), ("parallel", &parb)];
+    let simdb = SimdBackend::new();
+    let parsimdb = ParallelBackend::with_simd(0);
+    let backends: [(&str, &dyn Backend); 4] = [
+        ("ref", &refb),
+        ("parallel", &parb),
+        ("simd", &simdb),
+        ("parallel+simd", &parsimdb),
+    ];
+    let mut report = Report::new("hotpath");
+    println!(
+        "cpu: {} ({}), simd kernel: {}",
+        std::env::consts::ARCH,
+        cpu_features(),
+        simdb.describe()
+    );
 
-    println!("=== GEMM kernel: ref vs parallel ===");
+    println!("\n=== GEMM kernel: backend matrix ===");
     for &(m, k, n) in &[(64usize, 768usize, 768usize), (256, 256, 4096), (768, 768, 4096)] {
         let a = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0)).unwrap();
         let b = Tensor::new(&[k, n], rng.normal_vec(k * n, 1.0)).unwrap();
-        let mut means = Vec::new();
+        let geometry = format!("{m}x{k}x{n}");
+        let macs = (m * k * n) as f64;
+        let mut ref_secs = None;
         for (name, be) in backends {
-            let r = bench_auto("gemm", Duration::from_millis(600), || {
-                be.gemm(&a, &b).unwrap()
-            });
+            let r = bench_auto("gemm", budget(600), || be.gemm(&a, &b).unwrap());
+            let secs = r.mean.as_secs_f64();
             println!(
-                "  [{m:>4}x{k:>4}]x[{k:>4}x{n:>5}] {name:>9}  {}  {:.2} GFLOP/s",
+                "  [{m:>4}x{k:>4}]x[{k:>4}x{n:>5}] {name:>13}  {}  {:.2} GFLOP/s{}",
                 fmt_dur(r.mean),
-                gflops((m * k * n) as f64, r.mean.as_secs_f64())
+                gflops(macs, secs),
+                match ref_secs {
+                    Some(rs) => format!("  ({:.2}x vs ref)", rs / secs),
+                    None => String::new(),
+                }
             );
-            means.push(r.mean.as_secs_f64());
+            push_row(&mut report, &r, name, &geometry, macs, ref_secs);
+            if name == "ref" {
+                ref_secs = Some(secs);
+            }
         }
-        println!("           parallel speedup: {:.2}x", means[0] / means[1]);
     }
 
     let g = Geometry::SMALL;
-    println!("\n=== provider morph (batch 64): ref vs parallel ===");
+    println!("\n=== provider morph / blockdiag (batch 64, SMALL): backend matrix ===");
     let rows = Tensor::new(&[64, g.d_len()], rng.normal_vec(64 * g.d_len(), 1.0)).unwrap();
     for &kappa in &[16usize, 3, 1] {
         let key = MorphKey::generate(g, kappa, 2).unwrap();
         let macs = 64.0 * key.macs_per_row() as f64;
+        let geometry = format!("b64_kappa{kappa}_q{}", key.q());
+        let mut ref_secs = None;
         for (name, be) in backends {
-            let r = bench("morph", 3, 30, || key.morph_on(be, &rows).unwrap());
+            let r = bench("morph", 3, scaled(30), || key.morph_on(be, &rows).unwrap());
+            let secs = r.mean.as_secs_f64();
             println!(
-                "  kappa={kappa:<3} q={:<4} {name:>9} {}  {:.2} GFLOP/s  ({:.0} img/s)",
+                "  kappa={kappa:<3} q={:<4} {name:>13} {}  {:.2} GFLOP/s  ({:.0} img/s)",
                 key.q(),
                 fmt_dur(r.mean),
-                gflops(macs, r.mean.as_secs_f64()),
+                gflops(macs, secs),
                 r.throughput(64.0)
             );
+            push_row(&mut report, &r, name, &geometry, macs, ref_secs);
+            if name == "ref" {
+                ref_secs = Some(secs);
+            }
+        }
+    }
+
+    // Raw eq. 2/4 hot path at the paper's VGG-16/CIFAR geometry:
+    // [64, 3072] rows against a shared [96, 96] core — the flattened
+    // [64·32, 96]x[96, 96] GEMM every backend now routes through its own
+    // microkernel.
+    println!("\n=== blockdiag apply, VGG-16/CIFAR geometry (batch 64, q=96) ===");
+    {
+        let cg = Geometry::CIFAR_VGG16;
+        let q = 96usize;
+        let kappa = cg.d_len() / q;
+        let cifar_rows =
+            Tensor::new(&[64, cg.d_len()], rng.normal_vec(64 * cg.d_len(), 1.0)).unwrap();
+        let core = Tensor::new(&[q, q], rng.normal_vec(q * q, 0.5)).unwrap();
+        let macs = (64 * kappa * q * q) as f64;
+        let geometry = format!("b64_kappa{kappa}_q{q}");
+        let mut ref_secs = None;
+        for (name, be) in backends {
+            let r = bench("blockdiag_cifar", 2, scaled(20), || {
+                be.apply_blockdiag(&cifar_rows, &core).unwrap()
+            });
+            let secs = r.mean.as_secs_f64();
+            println!(
+                "  {name:>13} {}  {:.2} GFLOP/s  ({:.0} img/s)",
+                fmt_dur(r.mean),
+                gflops(macs, secs),
+                r.throughput(64.0)
+            );
+            push_row(&mut report, &r, name, &geometry, macs, ref_secs);
+            if name == "ref" {
+                ref_secs = Some(secs);
+            }
         }
     }
 
@@ -78,19 +168,23 @@ fn main() {
         let key = MorphKey::generate(g, kappa, 3).unwrap();
         let perm = ChannelPerm::generate(g.beta, 3);
         let macs = (g.d_len() * key.q() * g.f_len() / key.kappa() * key.kappa()) as f64;
-        let mut means = Vec::new();
+        let geometry = format!("kappa{kappa}_q{}", key.q());
+        let mut ref_secs = None;
         for (name, be) in backends {
-            let r = bench("cac", 1, 8, || {
+            let r = bench("cac_small", 1, scaled(8), || {
                 build_aug_conv_from_c_on(be, &c_small, &key, &perm).unwrap()
             });
+            let secs = r.mean.as_secs_f64();
             println!(
-                "  kappa={kappa:<3} {name:>9} {}  ({:.2} GFLOP/s)",
+                "  kappa={kappa:<3} {name:>13} {}  ({:.2} GFLOP/s)",
                 fmt_dur(r.mean),
-                gflops(macs, r.mean.as_secs_f64())
+                gflops(macs, secs)
             );
-            means.push(r.mean.as_secs_f64());
+            push_row(&mut report, &r, name, &geometry, macs, ref_secs);
+            if name == "ref" {
+                ref_secs = Some(secs);
+            }
         }
-        println!("           parallel speedup: {:.2}x", means[0] / means[1]);
     }
 
     // The acceptance-criteria case: the Aug-Conv build at the paper's
@@ -103,10 +197,14 @@ fn main() {
         let cg = Geometry::CIFAR_VGG16;
         let q = 96usize;
         let kappa = cg.d_len() / q;
-        let f_len = cg.f_len();
+        // smoke mode shrinks the f dimension; the recorded geometry string
+        // reflects what actually ran, so JSONs from different modes never
+        // silently compare
+        let f_len = if mole::bench::short_budget() { cg.f_len() / 8 } else { cg.f_len() };
         let core_inv = Tensor::new(&[q, q], rng.normal_vec(q * q, 0.5)).unwrap();
         let c_block = Tensor::new(&[q, f_len], rng.normal_vec(q * f_len, 0.5)).unwrap();
         let macs = (kappa * q * q * f_len) as f64;
+        let geometry = format!("kappa{kappa}_q{q}_f{f_len}");
         let build = |be: &dyn Backend| -> Tensor {
             let mut out = Tensor::zeros(&[q, f_len]);
             for _blk in 0..kappa {
@@ -116,40 +214,49 @@ fn main() {
             }
             out
         };
-        let r_ref = bench("cac_cifar_ref", 0, 2, || build(&refb));
-        let r_par = bench("cac_cifar_par", 0, 2, || build(&parb));
-        // identical-output check (≤1e-5 rel err; bitwise by construction)
-        let (o_ref, o_par) = (build(&refb), build(&parb));
-        let rel = o_ref.max_abs_diff(&o_par).unwrap()
-            / o_ref.data().iter().map(|v| v.abs() as f64).fold(1e-12, f64::max);
-        assert!(rel <= 1e-5, "backend outputs diverge: rel err {rel}");
-        let speedup = r_ref.mean.as_secs_f64() / r_par.mean.as_secs_f64();
-        println!(
-            "  ref      {}  ({:.2} GFLOP/s)",
-            fmt_dur(r_ref.mean),
-            gflops(macs, r_ref.mean.as_secs_f64())
-        );
-        println!(
-            "  parallel {}  ({:.2} GFLOP/s)",
-            fmt_dur(r_par.mean),
-            gflops(macs, r_par.mean.as_secs_f64())
-        );
-        println!("  parallel speedup: {speedup:.2}x (outputs identical, rel err {rel:.1e})");
+        let o_ref = build(&refb);
+        let mut ref_secs = None;
+        for (name, be) in backends {
+            let r = bench("cac_cifar", 0, scaled(2), || build(be));
+            let secs = r.mean.as_secs_f64();
+            // agreement check against ref (bitwise for parallel; FMA
+            // kernels differ only by fused rounding — tiny rel err)
+            let got = build(be);
+            let rel = o_ref.max_abs_diff(&got).unwrap()
+                / o_ref.data().iter().map(|v| v.abs() as f64).fold(1e-12, f64::max);
+            assert!(rel <= 1e-5, "{name} diverges from ref: rel err {rel}");
+            println!(
+                "  {name:>13} {}  ({:.2} GFLOP/s){}",
+                fmt_dur(r.mean),
+                gflops(macs, secs),
+                match ref_secs {
+                    Some(rs) => format!("  {:.2}x vs ref, rel err {rel:.1e}", rs / secs),
+                    None => String::new(),
+                }
+            );
+            push_row(&mut report, &r, name, &geometry, macs, ref_secs);
+            if name == "ref" {
+                ref_secs = Some(secs);
+            }
+        }
     }
 
     println!("\n=== d2r C-matrix build ===");
-    let r = bench("d2r", 1, 10, || mole::d2r::build_c_matrix(&w1, &g).unwrap());
+    let r = bench("d2r", 1, scaled(10), || mole::d2r::build_c_matrix(&w1, &g).unwrap());
     println!("  build_c_matrix(small)  {}", fmt_dur(r.mean));
+    push_row(&mut report, &r, mole::backend::active().name(), "small", 0.0, None);
 
-    println!("\n=== engine train/infer steps ===");
+    println!("\n=== engine train/infer steps (backend: {}) ===", mole::backend::active().name());
     let engine = Engine::new(Manifest::load(Path::new("artifacts")).unwrap()).unwrap();
     println!("  engine: {}", engine.kind());
+    let active = mole::backend::active().name();
     let mut trainer = Trainer::new_base(&engine, Variant::Base, 1).unwrap();
     let x = Tensor::new(&[64, 3, 16, 16], rng.normal_vec(64 * 768, 0.5)).unwrap();
     let y: Vec<i32> = (0..64).map(|i| (i % 10) as i32).collect();
     trainer.step(&x, &y, 0.01).unwrap(); // warm caches / compile
-    let r = bench("train_base", 1, 10, || trainer.step(&x, &y, 0.01).unwrap());
+    let r = bench("train_base", 1, scaled(10), || trainer.step(&x, &y, 0.01).unwrap());
     println!("  train_step_base(b64)   {}  ({:.0} img/s)", fmt_dur(r.mean), r.throughput(64.0));
+    push_row(&mut report, &r, active, "b64_small", 0.0, None);
 
     let key = MorphKey::generate(g, 16, 4).unwrap();
     let perm = ChannelPerm::generate(g.beta, 4);
@@ -158,8 +265,9 @@ fn main() {
         Trainer::new_aug(&engine, layer.matrix().clone(), layer.bias().to_vec(), 1).unwrap();
     let t_rows = key.morph(&rows).unwrap();
     at.step(&t_rows, &y, 0.01).unwrap();
-    let r = bench("train_aug", 1, 10, || at.step(&t_rows, &y, 0.01).unwrap());
+    let r = bench("train_aug", 1, scaled(10), || at.step(&t_rows, &y, 0.01).unwrap());
     println!("  train_step_aug(b64)    {}  ({:.0} img/s)", fmt_dur(r.mean), r.throughput(64.0));
+    push_row(&mut report, &r, active, "b64_small", 0.0, None);
 
     let mut args: Vec<mole::runtime::Arg> = vec![
         mole::runtime::Arg::T(layer.matrix().clone()),
@@ -171,6 +279,10 @@ fn main() {
     args.push(mole::runtime::Arg::T(Tensor::new(&[32, g.d_len()],
         rng.normal_vec(32 * g.d_len(), 0.5)).unwrap()));
     engine.exec("infer_aug_small_b32", &args).unwrap();
-    let r = bench("infer", 2, 20, || engine.exec("infer_aug_small_b32", &args).unwrap());
+    let r = bench("infer", 2, scaled(20), || engine.exec("infer_aug_small_b32", &args).unwrap());
     println!("  infer_aug(b32)         {}  ({:.0} img/s)", fmt_dur(r.mean), r.throughput(32.0));
+    push_row(&mut report, &r, active, "b32_small", 0.0, None);
+
+    let path = report.write().expect("write BENCH_hotpath.json");
+    println!("\nwrote {} ({} rows)", path.display(), report.len());
 }

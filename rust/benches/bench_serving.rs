@@ -8,15 +8,21 @@
 //! (`max_batch=32`), reporting the throughput multiple — the number the
 //! ISSUE acceptance gate reads (batched ≥ 2x unbatched).
 //!
+//! Part 2's per-policy numbers (throughput, p50/p95/p99 latency, mean
+//! batch size, batched-vs-unbatched speedup) are also serialized to
+//! `BENCH_serving.json` at the repo root (schema `mole-bench-v1`).
+//! `MOLE_BENCH_BUDGET_MS` shrinks request counts to CI-smoke size.
+//!
 //! Run: `cargo bench --bench bench_serving`
 
-use mole::bench::{table_header, table_row};
+use mole::bench::{scaled, table_header, table_row, Report};
 use mole::coordinator::batcher::{BatcherConfig, ServingHandle, ServingModel};
 use mole::coordinator::loadgen::{run as run_loadgen, LoadgenConfig};
 use mole::coordinator::registry::{demo_entry, ModelRegistry};
 use mole::coordinator::server::{ServeConfig, Server};
 use mole::coordinator::trainer::init_params;
 use mole::coordinator::EPOCH_LATEST;
+use mole::json::Value;
 use mole::manifest::Manifest;
 use mole::rng::Rng;
 use mole::runtime::SharedEngine;
@@ -86,7 +92,7 @@ fn in_process_sweep() {
             .unwrap();
             // warmup compiles all bucket executables
             run_load(&handle, 1, 8);
-            let thpt = run_load(&handle, clients, 64);
+            let thpt = run_load(&handle, clients, scaled(64));
             let m = &handle.metrics;
             let (p50, _p95, p99) = m.total_latency.summary().unwrap_or((0, 0, 0));
             table_row(
@@ -106,14 +112,18 @@ fn in_process_sweep() {
     }
 }
 
+/// One measured TCP serving run.
+struct TcpRun {
+    throughput_rps: f64,
+    p50_us: u64,
+    p95_us: u64,
+    p99_us: u64,
+    mean_batch: f64,
+}
+
 /// Start a loopback server with the given batch policy and drive it with
-/// the loadgen; returns (throughput_rps, p50_us, p99_us, mean_batch).
-fn tcp_run(
-    max_batch: usize,
-    timeout: Duration,
-    adaptive: bool,
-    conns: usize,
-) -> (f64, u64, u64, f64) {
+/// the loadgen.
+fn tcp_run(max_batch: usize, timeout: Duration, adaptive: bool, conns: usize) -> TcpRun {
     let manifest = Manifest::load(Path::new("artifacts")).unwrap();
     let engine = SharedEngine::new(manifest.clone());
     let registry = ModelRegistry::new(
@@ -138,7 +148,7 @@ fn tcp_run(
     let cfg = LoadgenConfig {
         addr: server.local_addr().to_string(),
         connections: conns,
-        requests_per_conn: 96,
+        requests_per_conn: scaled(96),
         pipeline: 8,
         seed: 3,
         model: String::new(),
@@ -153,47 +163,63 @@ fn tcp_run(
     let items0 = lane.handle().metrics.batched_items.get();
     let report = run_loadgen(&cfg).unwrap();
     assert_eq!(report.errors, 0, "loadgen errors under bench load");
-    let (p50, _p95, p99) = report.latency.summary().unwrap_or((0, 0, 0));
+    let (p50_us, p95_us, p99_us) = report.latency.summary().unwrap_or((0, 0, 0));
     let batches = lane.handle().metrics.batches.get() - batches0;
     let items = lane.handle().metrics.batched_items.get() - items0;
     let mean_batch = if batches == 0 { 0.0 } else { items as f64 / batches as f64 };
     server.stop();
-    (report.throughput_rps(), p50, p99, mean_batch)
+    TcpRun { throughput_rps: report.throughput_rps(), p50_us, p95_us, p99_us, mean_batch }
 }
 
-fn tcp_comparison() {
+/// Schema row for one serving policy.
+fn policy_row(name: &str, run: &TcpRun, conns: usize) -> std::collections::BTreeMap<String, Value> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("name".into(), Value::Str(name.to_string()));
+    m.insert("backend".into(), Value::Str(mole::backend::active().name().to_string()));
+    m.insert("connections".into(), Value::Num(conns as f64));
+    m.insert("throughput_rps".into(), Value::Num(run.throughput_rps));
+    m.insert("p50_us".into(), Value::Num(run.p50_us as f64));
+    m.insert("p95_us".into(), Value::Num(run.p95_us as f64));
+    m.insert("p99_us".into(), Value::Num(run.p99_us as f64));
+    m.insert("mean_batch".into(), Value::Num(run.mean_batch));
+    m
+}
+
+fn tcp_comparison(report: &mut Report) {
     println!("\n--- part 2: TCP serving, 8 connections, pipeline 8 ---\n");
     let widths = [24, 12, 10, 10, 10];
     table_header(&["policy", "throughput", "p50_us", "p99_us", "batchsz"], &widths);
     let conns = 8;
-    let (base_rps, bp50, bp99, bbs) =
-        tcp_run(1, Duration::from_millis(0), false, conns);
+    let base = tcp_run(1, Duration::from_millis(0), false, conns);
     table_row(
         &[
             "one-request-per-GEMM".into(),
-            format!("{base_rps:.0}/s"),
-            bp50.to_string(),
-            bp99.to_string(),
-            format!("{bbs:.1}"),
+            format!("{:.0}/s", base.throughput_rps),
+            base.p50_us.to_string(),
+            base.p99_us.to_string(),
+            format!("{:.1}", base.mean_batch),
         ],
         &widths,
     );
-    let (micro_rps, mp50, mp99, mbs) =
-        tcp_run(32, Duration::from_millis(2), true, conns);
+    report.push(policy_row("serve_unbatched", &base, conns));
+    let micro = tcp_run(32, Duration::from_millis(2), true, conns);
     table_row(
         &[
             "micro-batch 32, adaptive".into(),
-            format!("{micro_rps:.0}/s"),
-            mp50.to_string(),
-            mp99.to_string(),
-            format!("{mbs:.1}"),
+            format!("{:.0}/s", micro.throughput_rps),
+            micro.p50_us.to_string(),
+            micro.p99_us.to_string(),
+            format!("{:.1}", micro.mean_batch),
         ],
         &widths,
     );
+    let speedup = micro.throughput_rps / base.throughput_rps.max(1e-9);
+    let mut row = policy_row("serve_microbatch", &micro, conns);
+    row.insert("speedup_vs_unbatched".into(), Value::Num(speedup));
+    report.push(row);
     println!(
-        "\nmicro-batched throughput = {:.2}x one-request-per-GEMM at {conns} connections \
-         (acceptance gate: >= 2x)",
-        micro_rps / base_rps.max(1e-9)
+        "\nmicro-batched throughput = {speedup:.2}x one-request-per-GEMM at {conns} connections \
+         (acceptance gate: >= 2x)"
     );
 }
 
@@ -201,7 +227,10 @@ fn main() {
     mole::logging::init();
     println!("=== serving: adaptive micro-batcher throughput/latency ===\n");
     in_process_sweep();
-    tcp_comparison();
+    let mut report = Report::new("serving");
+    tcp_comparison(&mut report);
+    let path = report.write().expect("write BENCH_serving.json");
+    println!("wrote {} ({} rows)", path.display(), report.len());
     println!("\nexpected shape: batching multiplies throughput under concurrency at a");
     println!("bounded p99 cost; padding stays low once load >= bucket sizes.");
 }

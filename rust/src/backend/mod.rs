@@ -5,30 +5,41 @@
 //! engine's training/inference GEMMs — dispatches through the [`Backend`]
 //! trait so implementations can be swapped without touching the callers:
 //!
-//! * [`RefBackend`] — the cache-blocked single-threaded kernel (the
-//!   original `linalg::gemm` code, moved here verbatim; the semantics
-//!   oracle every other backend is tested against).
-//! * [`ParallelBackend`] — the same kernel fanned out over row panels with
-//!   `std::thread::scope` (no extra dependencies). Per-row accumulation
-//!   order is identical to [`RefBackend`], so outputs match bit-for-bit.
+//! * [`RefBackend`] — the cache-blocked single-threaded scalar kernel
+//!   (the original `linalg::gemm` code, moved here verbatim; the
+//!   semantics oracle every other backend is tested against).
+//! * [`SimdBackend`] — packed-panel GEMM microkernels with explicit
+//!   f32-lane arithmetic (AVX2/FMA behind `is_x86_feature_detected!`,
+//!   NEON on aarch64, a portable unrolled-scalar fallback everywhere —
+//!   forced with `MOLE_SIMD=off`). Accumulation order is preserved, so
+//!   the portable kernel is bitwise identical to [`RefBackend`] and the
+//!   FMA kernels drift ≤ max(4, √k) ULP at the output's scale (fused
+//!   rounding only, no reassociation).
+//! * [`ParallelBackend`] — a pluggable inner kernel fanned out over row
+//!   panels with `std::thread::scope`: `"parallel"` wraps the reference
+//!   kernel (bit-for-bit with [`RefBackend`]), `"parallel+simd"` wraps
+//!   [`SimdBackend`] (bit-for-bit with single-threaded simd).
 //!
 //! Selection: the first selection wins for the whole process. The `mole`
 //! launcher resolves `--backend` flag > `MOLE_BACKEND` env var > the
 //! `[backend]` config section and calls [`install`]; library/test use
 //! that never installs falls back lazily at first GEMM to `MOLE_BACKEND`
-//! or the auto default (parallel when the machine has >1 core).
+//! or the auto default ([`auto`]: `parallel+simd` on multi-core machines
+//! with a vector ISA, degrading to `parallel`, `simd`, or `ref`).
 //! `linalg::gemm`/`gemm_into` delegate to [`active`], so code that does
 //! not care about backends keeps calling the same free functions it
 //! always did.
 //!
-//! Future backends (SIMD-intrinsic, GPU, sharded serving) plug in by
-//! implementing the trait and registering a name in [`by_name`].
+//! Future backends (GPU, sharded serving) plug in by implementing the
+//! trait and registering a name in [`by_name`].
 
 mod parallel;
 mod reference;
+mod simd;
 
 pub use parallel::ParallelBackend;
 pub use reference::RefBackend;
+pub use simd::{cpu_features, Isa, SimdBackend};
 
 use crate::linalg::Lu;
 use crate::tensor::Tensor;
@@ -36,12 +47,23 @@ use crate::{Error, Result};
 use std::sync::OnceLock;
 
 /// A dense-compute implementation. All methods must be semantically
-/// equivalent to [`RefBackend`]; parallel implementations must keep the
-/// per-element accumulation order (f32 addition is not associative, and
-/// the parity tests assert exact agreement).
+/// equivalent to [`RefBackend`], and every implementation must keep the
+/// per-element accumulation order (f32 addition is not associative).
+/// The parity suite asserts exact agreement — bitwise for order-preserving
+/// scalar kernels (parallel, simd-portable), and a pinned drift of
+/// ≤ max(4, √k) ULP at the output's scale for FMA microkernels whose
+/// only deviation is fused rounding.
 pub trait Backend: Send + Sync {
-    /// Short identifier ("ref", "parallel") for logs and benches.
+    /// Short identifier ("ref", "parallel", "simd", "parallel+simd") for
+    /// selection, logs and benches.
     fn name(&self) -> &'static str;
+
+    /// Human-readable description with composition/ISA/thread detail
+    /// (e.g. `parallel(8t)+simd(avx2)`) for logs and `BENCH_*.json`
+    /// metadata. Defaults to [`Self::name`].
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
 
     /// Raw-slice GEMM: row-major `c[m,n] = a[m,k]·b[k,n]` when
     /// `accumulate` is false, `c += a·b` when true.
@@ -85,10 +107,20 @@ pub trait Backend: Send + Sync {
     ///
     /// `rows` is [B, κ·q], `core` is [q, q]; each q-block of each row is
     /// multiplied by the shared core: `out_blk = in_blk · core`.
+    ///
+    /// Every q-block of every row is an independent row-vector × core
+    /// product, and the blocks are contiguous in memory — so the whole
+    /// batch is exactly one `[B·κ, q] × [q, q]` GEMM over the same
+    /// buffers. The default dispatches through the backend's **own**
+    /// [`Backend::gemm_slices`] microkernel (parallel/SIMD backends get
+    /// their fan-out and lanes for free; no backend silently drops to a
+    /// scalar single-threaded path).
     fn apply_blockdiag(&self, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
-        let (b, q, _kappa) = blockdiag_dims(rows, core)?;
+        let (b, q, kappa) = blockdiag_dims(rows, core)?;
         let mut out = Tensor::zeros(&[b, rows.shape()[1]]);
-        reference::blockdiag_rows(rows.data(), core.data(), q, rows.shape()[1], out.data_mut());
+        // out is freshly zeroed: accumulate=true skips a second clearing
+        // pass with bitwise-identical results
+        self.gemm_slices(b * kappa, q, q, rows.data(), core.data(), out.data_mut(), true);
         Ok(out)
     }
 
@@ -168,28 +200,43 @@ pub fn install(kind: &str, threads: usize) -> Result<()> {
     Ok(())
 }
 
-/// Construct a backend by name: "ref" | "parallel" | "auto".
+/// Construct a backend by name:
+/// "ref" | "parallel" | "simd" | "parallel+simd" | "auto".
 /// `threads` is the worker count for parallel backends (0 = one per core).
+/// Unknown names — including mistyped composites like "parallel+gpu" —
+/// are hard errors, never a silent fall-through to auto.
 pub fn by_name(kind: &str, threads: usize) -> Result<Box<dyn Backend>> {
     match kind {
         "ref" | "reference" | "single" => Ok(Box::new(RefBackend::new())),
         "parallel" | "par" => Ok(Box::new(ParallelBackend::new(threads))),
+        "simd" => Ok(Box::new(SimdBackend::new())),
+        "parallel+simd" | "par+simd" | "simd+parallel" => {
+            Ok(Box::new(ParallelBackend::with_simd(threads)))
+        }
         "auto" | "" => Ok(auto()),
+        other if other.contains('+') => Err(Error::Config(format!(
+            "unknown composite backend {other:?} (the only composite is \"parallel+simd\")"
+        ))),
         other => Err(Error::Config(format!(
-            "unknown backend {other:?} (expected ref|parallel|auto)"
+            "unknown backend {other:?} (expected ref|parallel|simd|parallel+simd|auto)"
         ))),
     }
 }
 
-/// The automatic default: parallel on multi-core machines, ref otherwise.
+/// The automatic default: row-parallel over the SIMD microkernel on
+/// multi-core machines with a vector ISA, degrading to plain `parallel`
+/// (no vector ISA, or `MOLE_SIMD=off`), single-threaded `simd`
+/// (one core, vector ISA), or `ref` (neither).
 pub fn auto() -> Box<dyn Backend> {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    if cores > 1 {
-        Box::new(ParallelBackend::new(0))
-    } else {
-        Box::new(RefBackend::new())
+    let simd = SimdBackend::new();
+    match (cores > 1, simd.is_vectorized()) {
+        (true, true) => Box::new(ParallelBackend::over_simd(0, simd)),
+        (true, false) => Box::new(ParallelBackend::new(0)),
+        (false, true) => Box::new(simd),
+        (false, false) => Box::new(RefBackend::new()),
     }
 }
 
@@ -217,6 +264,10 @@ mod tests {
             Box::new(RefBackend::new()),
             Box::new(ParallelBackend::new(0)),
             Box::new(ParallelBackend::new(3)),
+            Box::new(SimdBackend::new()),
+            Box::new(SimdBackend::portable()),
+            Box::new(ParallelBackend::with_simd(0)),
+            Box::new(ParallelBackend::over_simd(3, SimdBackend::portable())),
         ]
     }
 
@@ -307,9 +358,68 @@ mod tests {
     fn by_name_selection() {
         assert_eq!(by_name("ref", 0).unwrap().name(), "ref");
         assert_eq!(by_name("parallel", 2).unwrap().name(), "parallel");
+        assert_eq!(by_name("simd", 0).unwrap().name(), "simd");
+        assert_eq!(by_name("parallel+simd", 2).unwrap().name(), "parallel+simd");
+        assert_eq!(by_name("par+simd", 0).unwrap().name(), "parallel+simd");
         assert!(by_name("gpu", 0).is_err());
         let _ = by_name("auto", 0).unwrap();
         // active() is callable and stable
         assert_eq!(active().name(), active().name());
+    }
+
+    /// Mistyped composite names are hard, typed errors — never a silent
+    /// fall-through to the auto default.
+    #[test]
+    fn unknown_composites_rejected() {
+        for bad in ["parallel+gpu", "simd+avx2", "ref+simd", "parallel+"] {
+            let err = by_name(bad, 0).unwrap_err().to_string();
+            assert!(
+                err.contains("composite") && err.contains("parallel+simd"),
+                "{bad}: unexpected error {err:?}"
+            );
+        }
+        let err = by_name("quantum", 0).unwrap_err().to_string();
+        assert!(err.contains("ref|parallel|simd|parallel+simd|auto"), "{err}");
+    }
+
+    /// The trait-default blockdiag must dispatch through the backend's
+    /// OWN gemm microkernel — a backend that only implements
+    /// `gemm_slices` sees the call (this is what keeps parallel/SIMD
+    /// backends from silently degrading to a scalar path).
+    #[test]
+    fn default_blockdiag_uses_own_gemm_kernel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Counting {
+            calls: AtomicUsize,
+        }
+        impl Backend for Counting {
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn gemm_slices(
+                &self,
+                m: usize,
+                k: usize,
+                n: usize,
+                a: &[f32],
+                b: &[f32],
+                c: &mut [f32],
+                accumulate: bool,
+            ) {
+                self.calls.fetch_add(1, Ordering::Relaxed);
+                RefBackend::new().gemm_slices(m, k, n, a, b, c, accumulate);
+            }
+        }
+
+        let be = Counting { calls: AtomicUsize::new(0) };
+        let mut r = Rng::new(6);
+        let rows = Tensor::new(&[3, 32], r.normal_vec(96, 1.0)).unwrap();
+        let core = Tensor::new(&[8, 8], r.normal_vec(64, 1.0)).unwrap();
+        let got = be.apply_blockdiag(&rows, &core).unwrap();
+        assert_eq!(be.calls.load(Ordering::Relaxed), 1, "blockdiag bypassed gemm_slices");
+        // and the flattened [B·κ, q] GEMM is the same computation
+        let want = RefBackend::new().apply_blockdiag(&rows, &core).unwrap();
+        assert_eq!(got, want);
     }
 }

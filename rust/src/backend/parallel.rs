@@ -1,28 +1,65 @@
-//! Row-panel parallel backend: the reference micro-kernel fanned out over
+//! Row-panel parallel backend: an inner GEMM kernel fanned out over
 //! contiguous row chunks with `std::thread::scope` — no thread pool, no
 //! extra dependencies. Rows of C are written by exactly one thread each
-//! and every row is computed with the identical blocked accumulation
-//! order as [`super::RefBackend`], so outputs are bitwise identical.
+//! and every row is computed by the identical inner kernel with the
+//! identical accumulation order, so outputs are bitwise identical to
+//! running that inner kernel single-threaded.
+//!
+//! The inner kernel is pluggable: the original cache-blocked scalar
+//! kernel ([`super::RefBackend`]'s, name `"parallel"`) or the packed-panel
+//! SIMD kernel ([`super::SimdBackend`], name `"parallel+simd"` — the
+//! [`super::auto`] default on multi-core machines with a vector ISA).
 
-use super::reference::{blockdiag_rows, gemm_kernel};
-use super::{blockdiag_dims, Backend};
-use crate::tensor::Tensor;
-use crate::Result;
+use super::reference::gemm_kernel;
+use super::{Backend, SimdBackend};
 
 /// Below this many multiply-accumulates the scoped-thread setup costs more
-/// than it saves; fall through to the single-threaded kernel.
+/// than it saves; fall through to the single-threaded inner kernel.
 const MIN_PAR_FLOPS: usize = 1 << 18;
 
-/// Multi-threaded backend over the reference kernel.
+/// The per-thread GEMM kernel a [`ParallelBackend`] fans out.
+#[derive(Debug, Clone, Copy)]
+enum Inner {
+    /// The reference cache-blocked scalar kernel.
+    Blocked,
+    /// The packed-panel SIMD kernel (whatever ISA it detected).
+    Simd(SimdBackend),
+}
+
+impl Inner {
+    #[allow(clippy::too_many_arguments)]
+    fn gemm(self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], acc: bool) {
+        match self {
+            Inner::Blocked => gemm_kernel(m, k, n, a, b, c, acc),
+            Inner::Simd(s) => s.gemm_slices(m, k, n, a, b, c, acc),
+        }
+    }
+}
+
+/// Multi-threaded backend over a pluggable inner kernel.
 #[derive(Debug, Clone, Copy)]
 pub struct ParallelBackend {
     threads: usize,
+    inner: Inner,
 }
 
 impl ParallelBackend {
-    /// `threads = 0` means one worker per available core.
+    /// Row-parallel over the reference scalar kernel (the historical
+    /// `"parallel"` backend). `threads = 0` means one worker per core.
     pub fn new(threads: usize) -> Self {
-        ParallelBackend { threads }
+        ParallelBackend { threads, inner: Inner::Blocked }
+    }
+
+    /// Row-parallel over the auto-detected SIMD kernel
+    /// (`"parallel+simd"`).
+    pub fn with_simd(threads: usize) -> Self {
+        Self::over_simd(threads, SimdBackend::new())
+    }
+
+    /// Row-parallel over an explicit SIMD backend — lets tests force the
+    /// portable microkernel deterministically.
+    pub fn over_simd(threads: usize, simd: SimdBackend) -> Self {
+        ParallelBackend { threads, inner: Inner::Simd(simd) }
     }
 
     fn worker_count(&self) -> usize {
@@ -38,7 +75,18 @@ impl ParallelBackend {
 
 impl Backend for ParallelBackend {
     fn name(&self) -> &'static str {
-        "parallel"
+        match self.inner {
+            Inner::Blocked => "parallel",
+            Inner::Simd(_) => "parallel+simd",
+        }
+    }
+
+    fn describe(&self) -> String {
+        let t = self.worker_count();
+        match self.inner {
+            Inner::Blocked => format!("parallel({t}t)"),
+            Inner::Simd(s) => format!("parallel({t}t)+{}", s.describe()),
+        }
     }
 
     fn gemm_slices(
@@ -51,9 +99,10 @@ impl Backend for ParallelBackend {
         c: &mut [f32],
         accumulate: bool,
     ) {
+        let inner = self.inner;
         let workers = self.worker_count().min(m);
         if workers <= 1 || m * k * n < MIN_PAR_FLOPS {
-            gemm_kernel(m, k, n, a, b, c, accumulate);
+            inner.gemm(m, k, n, a, b, c, accumulate);
             return;
         }
         let rows_per = m.div_ceil(workers);
@@ -62,34 +111,10 @@ impl Backend for ParallelBackend {
             for chunk in c.chunks_mut(rows_per * n) {
                 let rows = chunk.len() / n;
                 let a_part = &a[row0 * k..(row0 + rows) * k];
-                s.spawn(move || gemm_kernel(rows, k, n, a_part, b, chunk, accumulate));
+                s.spawn(move || inner.gemm(rows, k, n, a_part, b, chunk, accumulate));
                 row0 += rows;
             }
         });
-    }
-
-    fn apply_blockdiag(&self, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
-        let (bsz, q, kappa) = blockdiag_dims(rows, core)?;
-        let d = rows.shape()[1];
-        let mut out = Tensor::zeros(&[bsz, d]);
-        let workers = self.worker_count().min(bsz);
-        if workers <= 1 || bsz * kappa * q * q < MIN_PAR_FLOPS {
-            blockdiag_rows(rows.data(), core.data(), q, d, out.data_mut());
-            return Ok(out);
-        }
-        let per = bsz.div_ceil(workers);
-        let src = rows.data();
-        let core_data = core.data();
-        std::thread::scope(|s| {
-            let mut b0 = 0usize;
-            for chunk in out.data_mut().chunks_mut(per * d) {
-                let nb = chunk.len() / d;
-                let src_part = &src[b0 * d..(b0 + nb) * d];
-                s.spawn(move || blockdiag_rows(src_part, core_data, q, d, chunk));
-                b0 += nb;
-            }
-        });
-        Ok(out)
     }
 }
 
@@ -98,6 +123,7 @@ mod tests {
     use super::*;
     use crate::backend::RefBackend;
     use crate::rng::Rng;
+    use crate::tensor::Tensor;
 
     /// Parallel output must be *bitwise* equal to the reference kernel:
     /// each row is computed by the same code with the same accumulation
@@ -115,6 +141,23 @@ mod tests {
         }
     }
 
+    /// Same bitwise guarantee for the SIMD inner kernel: the row split
+    /// must be invisible.
+    #[test]
+    fn simd_inner_bitwise_identical_to_simd() {
+        let mut r = Rng::new(19);
+        let (m, k, n) = (41, 128, 260);
+        let a = Tensor::new(&[m, k], r.normal_vec(m * k, 1.0)).unwrap();
+        let b = Tensor::new(&[k, n], r.normal_vec(k * n, 1.0)).unwrap();
+        for simd in [SimdBackend::new(), SimdBackend::portable()] {
+            let want = simd.gemm(&a, &b).unwrap();
+            for threads in [2usize, 5] {
+                let got = ParallelBackend::over_simd(threads, simd).gemm(&a, &b).unwrap();
+                assert_eq!(got, want, "threads={threads} isa={}", simd.isa().name());
+            }
+        }
+    }
+
     #[test]
     fn more_threads_than_rows() {
         let mut r = Rng::new(10);
@@ -123,5 +166,12 @@ mod tests {
         let want = RefBackend::new().gemm(&a, &b).unwrap();
         let got = ParallelBackend::new(16).gemm(&a, &b).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn names_track_inner_kernel() {
+        assert_eq!(ParallelBackend::new(2).name(), "parallel");
+        assert_eq!(ParallelBackend::with_simd(2).name(), "parallel+simd");
+        assert!(ParallelBackend::with_simd(2).describe().starts_with("parallel(2t)+simd("));
     }
 }

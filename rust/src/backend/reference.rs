@@ -2,9 +2,7 @@
 //! axpy GEMM kernel, unchanged semantics. Every other backend is tested
 //! for exact agreement against this one.
 
-use super::{blockdiag_dims, Backend};
-use crate::tensor::Tensor;
-use crate::Result;
+use super::Backend;
 
 /// Block sizes tuned for ~32 KiB L1 / 1 MiB L2 on the test machine
 /// (see EXPERIMENTS.md §Perf for the sweep).
@@ -43,14 +41,6 @@ impl Backend for RefBackend {
         accumulate: bool,
     ) {
         gemm_kernel(m, k, n, a, b, c, accumulate);
-    }
-
-    fn apply_blockdiag(&self, rows: &Tensor, core: &Tensor) -> Result<Tensor> {
-        let (bsz, q, _kappa) = blockdiag_dims(rows, core)?;
-        let d = rows.shape()[1];
-        let mut out = Tensor::zeros(&[bsz, d]);
-        blockdiag_rows(rows.data(), core.data(), q, d, out.data_mut());
-        Ok(out)
     }
 }
 
@@ -94,32 +84,6 @@ pub(crate) fn gemm_kernel(
                             *cv += aik * bv;
                         }
                     }
-                }
-            }
-        }
-    }
-}
-
-/// Block-diagonal work unit over a contiguous range of rows: for each row
-/// of `rows` (length `d` each, `d = kappa*q`) every q-block is multiplied
-/// by the shared `core` [q, q] with the vecmat-style axpy order the morph
-/// path has always used. `out` must be zeroed on entry.
-pub(crate) fn blockdiag_rows(rows: &[f32], core: &[f32], q: usize, d: usize, out: &mut [f32]) {
-    debug_assert_eq!(rows.len(), out.len());
-    debug_assert_eq!(rows.len() % d, 0);
-    debug_assert_eq!(core.len(), q * q);
-    let kappa = d / q;
-    for (src, dst) in rows.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
-        for blk in 0..kappa {
-            let xs = &src[blk * q..(blk + 1) * q];
-            let ys = &mut dst[blk * q..(blk + 1) * q];
-            for (i, &xv) in xs.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let crow = &core[i * q..(i + 1) * q];
-                for (yv, &cv) in ys.iter_mut().zip(crow) {
-                    *yv += xv * cv;
                 }
             }
         }

@@ -1,0 +1,551 @@
+//! Explicitly vectorized packed-panel GEMM backend.
+//!
+//! [`SimdBackend`] implements the classic three-level blocked GEMM
+//! (BLIS-style): operands are packed into contiguous, lane-aligned panels
+//! — A into `MR`-row panels, B into `NR`-column panels — and an `MR×NR`
+//! register-tile microkernel walks the `KC`-deep panels with f32×8 lane
+//! arithmetic. Three microkernels exist:
+//!
+//! * **AVX2+FMA** (`x86_64`, behind `is_x86_feature_detected!`): a 6×16
+//!   tile held in twelve 8-lane ymm accumulators, `_mm256_fmadd_ps` per
+//!   k-step.
+//! * **NEON** (`aarch64`): a 6×8 tile in twelve 4-lane q-register
+//!   accumulators, `vfmaq_f32` per k-step.
+//! * **Portable** (every target, and the `MOLE_SIMD=off` escape hatch): a
+//!   4×8 tile of unrolled scalar mul+add the compiler can keep in
+//!   registers. This fallback is *mandatory*: the backend exists and
+//!   passes the parity suite on targets with no vector ISA at all.
+//!
+//! ## Numerics contract
+//!
+//! Every microkernel **loads the live C tile, accumulates the k-steps in
+//! increasing-k order onto it, and stores it back** — partial tiles go
+//! through a scratch pre-seeded with the live C values. That means the
+//! per-element accumulation chain is `((c₀ + t₁) + t₂) + …` in plain
+//! k-order for every blocking parameter, exactly the chain the reference
+//! kernel produces. Consequences the parity suite pins:
+//!
+//! * the portable microkernel (plain mul+add) is **bitwise identical** to
+//!   [`super::RefBackend`] on finite data;
+//! * the AVX2/NEON microkernels differ from the reference *only* by the
+//!   fused multiply-add rounding of each step — same association order —
+//!   a drift pinned to ≤ max(4, √k) ULP at the output's max-magnitude
+//!   scale in `tests/backend_parity.rs`, never "allclose"-loose.
+//!
+//! Runtime selection: [`SimdBackend::new`] probes the CPU once; setting
+//! `MOLE_SIMD=off` (or `0` / `portable`) forces the portable microkernel,
+//! which is how CI exercises the fallback path on vector-capable runners.
+
+use super::Backend;
+
+/// Depth of one packed panel pair (k-blocking).
+const KC: usize = 256;
+/// Rows of A packed per L2 block.
+const MC: usize = 96;
+/// Columns of B packed per outer block.
+const NC: usize = 1024;
+/// Below this B-panel footprint (`k·n` elements) packing costs more than
+/// it saves; fall through to the reference cache-blocked kernel. The
+/// threshold depends only on (k, n), never m, so splitting rows across
+/// threads (the `parallel+simd` composition) cannot change which kernel
+/// a row meets — outputs stay bitwise identical under row-panel fan-out.
+const SMALL_KN: usize = 1024;
+
+/// The instruction set a [`SimdBackend`] instance drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// x86-64 AVX2 + FMA (8-lane f32, fused multiply-add).
+    Avx2,
+    /// AArch64 NEON (4-lane f32, fused multiply-add).
+    Neon,
+    /// Unrolled scalar tile — the mandatory every-target fallback.
+    Portable,
+}
+
+impl Isa {
+    /// Microkernel tile rows (MR).
+    fn mr(self) -> usize {
+        match self {
+            Isa::Avx2 | Isa::Neon => 6,
+            Isa::Portable => 4,
+        }
+    }
+
+    /// Microkernel tile columns (NR).
+    fn nr(self) -> usize {
+        match self {
+            Isa::Avx2 => 16,
+            Isa::Neon | Isa::Portable => 8,
+        }
+    }
+
+    /// Short name for logs and `BENCH_*.json` metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Portable => "portable",
+        }
+    }
+}
+
+/// Probe the CPU for the best available microkernel, honouring the
+/// `MOLE_SIMD=off|0|portable` escape hatch.
+fn detect_isa() -> Isa {
+    if matches!(
+        std::env::var("MOLE_SIMD").as_deref(),
+        Ok("off") | Ok("0") | Ok("portable")
+    ) {
+        return Isa::Portable;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Portable
+}
+
+/// Runtime-detected CPU vector features, for bench metadata and logs
+/// (independent of which backend is active).
+pub fn cpu_features() -> String {
+    let mut feats: Vec<&'static str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            feats.push("neon");
+        }
+    }
+    if feats.is_empty() {
+        "none".to_string()
+    } else {
+        feats.join(",")
+    }
+}
+
+/// Packed-panel SIMD GEMM backend. See the module docs for the kernel
+/// structure and the numerics contract.
+#[derive(Debug, Clone, Copy)]
+pub struct SimdBackend {
+    isa: Isa,
+}
+
+impl Default for SimdBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimdBackend {
+    /// Auto-detect the best microkernel for this CPU (respects the
+    /// `MOLE_SIMD=off` escape hatch).
+    pub fn new() -> Self {
+        SimdBackend { isa: detect_isa() }
+    }
+
+    /// Force the portable (unrolled-scalar) microkernel — what
+    /// `MOLE_SIMD=off` selects, constructible directly for deterministic
+    /// tests.
+    pub fn portable() -> Self {
+        SimdBackend { isa: Isa::Portable }
+    }
+
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// True when a real vector ISA (AVX2/NEON) was detected — i.e. the
+    /// outputs may differ from [`super::RefBackend`] by FMA rounding
+    /// (≤ max(4, √k) ULP at the output's scale); the portable kernel is
+    /// bitwise identical instead.
+    pub fn is_vectorized(&self) -> bool {
+        self.isa != Isa::Portable
+    }
+}
+
+impl Backend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn describe(&self) -> String {
+        format!("simd({})", self.isa.name())
+    }
+
+    fn gemm_slices(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        accumulate: bool,
+    ) {
+        packed_gemm(self.isa, m, k, n, a, b, c, accumulate);
+    }
+}
+
+/// Pack an `mb×kb` sub-block of row-major `a` into `MR`-row panels:
+/// panel `p` holds rows `ic+p·mr ..`, laid out k-major (`kk·mr + r`) so
+/// the microkernel reads `mr` A values per k-step from one cache line.
+/// Rows past `mb` pad with zeros (their products land in discarded lanes).
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &[f32],
+    lda: usize,
+    ic: usize,
+    mb: usize,
+    pc: usize,
+    kb: usize,
+    mr: usize,
+    buf: &mut [f32],
+) {
+    let panels = mb.div_ceil(mr);
+    for p in 0..panels {
+        let dst = &mut buf[p * kb * mr..(p + 1) * kb * mr];
+        for kk in 0..kb {
+            for r in 0..mr {
+                let row = p * mr + r;
+                dst[kk * mr + r] = if row < mb {
+                    a[(ic + row) * lda + pc + kk]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack a `kb×nb` sub-block of row-major `b` into `NR`-column panels:
+/// panel `t` holds columns `jc+t·nr ..`, laid out k-major (`kk·nr + c`)
+/// so each k-step is one (or two) contiguous lane loads. Columns past
+/// `nb` pad with zeros.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &[f32],
+    ldb: usize,
+    pc: usize,
+    kb: usize,
+    jc: usize,
+    nb: usize,
+    nr: usize,
+    buf: &mut [f32],
+) {
+    let panels = nb.div_ceil(nr);
+    for t in 0..panels {
+        let dst = &mut buf[t * kb * nr..(t + 1) * kb * nr];
+        for kk in 0..kb {
+            let src_row = (pc + kk) * ldb + jc + t * nr;
+            let cols = nr.min(nb - t * nr);
+            let d = &mut dst[kk * nr..kk * nr + nr];
+            d[..cols].copy_from_slice(&b[src_row..src_row + cols]);
+            for v in &mut d[cols..] {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// The packed-panel GEMM driver: `c[m,n] (+)= a[m,k]·b[k,n]`, row-major.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn packed_gemm(
+    isa: Isa,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        for v in c.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    if k * n < SMALL_KN {
+        // tiny B panel: packing overhead dominates. The reference kernel
+        // accumulates in the same k-order, so this switch is invisible to
+        // the portable-parity guarantee (c is already zeroed above).
+        super::reference::gemm_kernel(m, k, n, a, b, c, true);
+        return;
+    }
+    let (mr, nr) = (isa.mr(), isa.nr());
+    let mut apack = vec![0.0f32; MC.div_ceil(mr) * mr * KC];
+    let mut bpack = vec![0.0f32; NC.div_ceil(nr) * nr * KC];
+    let mut scratch = vec![0.0f32; mr * nr];
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            pack_b(b, n, pc, kb, jc, nb, nr, &mut bpack);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                pack_a(a, k, ic, mb, pc, kb, mr, &mut apack);
+                for (t, jr) in (0..nb).step_by(nr).enumerate() {
+                    let nbr = nr.min(nb - jr);
+                    let bp = &bpack[t * kb * nr..];
+                    for (p, ir) in (0..mb).step_by(mr).enumerate() {
+                        let mbr = mr.min(mb - ir);
+                        let ap = &apack[p * kb * mr..];
+                        let c0 = (ic + ir) * n + jc + jr;
+                        if mbr == mr && nbr == nr {
+                            // SAFETY: full tile — mr rows of nr elements
+                            // at stride n starting at c0 are in bounds,
+                            // and ap/bp hold kb·mr / kb·nr packed values.
+                            unsafe {
+                                run_tile(isa, kb, ap.as_ptr(), bp.as_ptr(), c[c0..].as_mut_ptr(), n);
+                            }
+                        } else {
+                            // partial tile: seed the scratch with the live
+                            // C values so the accumulation chain per
+                            // element is identical to the full-tile path.
+                            scratch.fill(0.0);
+                            for i in 0..mbr {
+                                scratch[i * nr..i * nr + nbr]
+                                    .copy_from_slice(&c[c0 + i * n..c0 + i * n + nbr]);
+                            }
+                            // SAFETY: scratch is exactly mr·nr with
+                            // stride nr; panels as above.
+                            unsafe {
+                                run_tile(isa, kb, ap.as_ptr(), bp.as_ptr(), scratch.as_mut_ptr(), nr);
+                            }
+                            for i in 0..mbr {
+                                c[c0 + i * n..c0 + i * n + nbr]
+                                    .copy_from_slice(&scratch[i * nr..i * nr + nbr]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one register tile. Callers guarantee `a` holds `kc·MR` packed
+/// values, `b` holds `kc·NR`, and `c` addresses an `MR×NR` tile at row
+/// stride `ldc`.
+unsafe fn run_tile(isa: Isa, kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => tile_avx2(kc, a, b, c, ldc),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => tile_neon(kc, a, b, c, ldc),
+        _ => tile_portable(kc, a, b, c, ldc),
+    }
+}
+
+/// 6×16 AVX2+FMA tile: twelve ymm accumulators (2 per row), one
+/// broadcast + two fused multiply-adds per (row, k-step). Loads the live
+/// C tile first so the k-chain continues across KC blocks unchanged.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn tile_avx2(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+    use std::arch::x86_64::*;
+    let mut acc = [[_mm256_setzero_ps(); 2]; 6];
+    for (i, row) in acc.iter_mut().enumerate() {
+        row[0] = _mm256_loadu_ps(c.add(i * ldc));
+        row[1] = _mm256_loadu_ps(c.add(i * ldc + 8));
+    }
+    let mut ap = a;
+    let mut bp = b;
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = _mm256_set1_ps(*ap.add(i));
+            row[0] = _mm256_fmadd_ps(ai, b0, row[0]);
+            row[1] = _mm256_fmadd_ps(ai, b1, row[1]);
+        }
+        ap = ap.add(6);
+        bp = bp.add(16);
+    }
+    for (i, row) in acc.iter().enumerate() {
+        _mm256_storeu_ps(c.add(i * ldc), row[0]);
+        _mm256_storeu_ps(c.add(i * ldc + 8), row[1]);
+    }
+}
+
+/// 6×8 NEON tile: twelve 4-lane q-register accumulators, `vfmaq_f32` per
+/// (row, k-step). Same load-accumulate-store C discipline as AVX2.
+#[cfg(target_arch = "aarch64")]
+unsafe fn tile_neon(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+    use std::arch::aarch64::*;
+    let mut acc = [[vdupq_n_f32(0.0); 2]; 6];
+    for (i, row) in acc.iter_mut().enumerate() {
+        row[0] = vld1q_f32(c.add(i * ldc));
+        row[1] = vld1q_f32(c.add(i * ldc + 4));
+    }
+    let mut ap = a;
+    let mut bp = b;
+    for _ in 0..kc {
+        let b0 = vld1q_f32(bp);
+        let b1 = vld1q_f32(bp.add(4));
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = vdupq_n_f32(*ap.add(i));
+            row[0] = vfmaq_f32(row[0], ai, b0);
+            row[1] = vfmaq_f32(row[1], ai, b1);
+        }
+        ap = ap.add(6);
+        bp = bp.add(8);
+    }
+    for (i, row) in acc.iter().enumerate() {
+        vst1q_f32(c.add(i * ldc), row[0]);
+        vst1q_f32(c.add(i * ldc + 4), row[1]);
+    }
+}
+
+/// 4×8 portable tile: unrolled scalar mul+add (no fusion, no lane tricks)
+/// in increasing-k order — bitwise identical to the reference kernel's
+/// per-element chain, which is what the forced-fallback parity tests pin.
+unsafe fn tile_portable(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+    let mut acc = [[0.0f32; 8]; 4];
+    for (i, row) in acc.iter_mut().enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = *c.add(i * ldc + j);
+        }
+    }
+    let mut ap = a;
+    let mut bp = b;
+    for _ in 0..kc {
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = *ap.add(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += ai * *bp.add(j);
+            }
+        }
+        ap = ap.add(4);
+        bp = bp.add(8);
+    }
+    for (i, row) in acc.iter().enumerate() {
+        for (j, v) in row.iter().enumerate() {
+            *c.add(i * ldc + j) = *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::RefBackend;
+    use crate::rng::Rng;
+
+    fn ref_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], acc: bool, c: &mut [f32]) {
+        RefBackend::new().gemm_slices(m, k, n, a, b, c, acc);
+    }
+
+    /// Portable packed kernel == reference kernel, bitwise, across shapes
+    /// that hit the small-path, full tiles, edge tiles and multiple KC
+    /// blocks.
+    #[test]
+    fn portable_is_bitwise_ref() {
+        let be = SimdBackend::portable();
+        let mut r = Rng::new(71);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 8, 8),       // exact tiles, small path
+            (7, 40, 130),    // edge tiles both dims
+            (64, 300, 96),   // two KC blocks
+            (97, 513, 200),  // everything ragged
+        ] {
+            let a: Vec<f32> = r.normal_vec(m * k, 1.0);
+            let b: Vec<f32> = r.normal_vec(k * n, 1.0);
+            for acc in [false, true] {
+                let seed: Vec<f32> = r.normal_vec(m * n, 1.0);
+                let mut want = seed.clone();
+                ref_gemm(m, k, n, &a, &b, acc, &mut want);
+                let mut got = seed;
+                be.gemm_slices(m, k, n, &a, &b, &mut got, acc);
+                assert_eq!(
+                    got, want,
+                    "portable != ref at ({m},{k},{n}) accumulate={acc}"
+                );
+            }
+        }
+    }
+
+    /// The detected kernel (whatever this machine offers) stays within
+    /// the pinned FMA-drift bound of the reference chain: ≤ max(4, √k)
+    /// ULP measured at the output's max-magnitude scale. (Raw
+    /// elementwise ULP distance is the wrong measure here — a k-step
+    /// chain that cancels to near zero puts the same absolute drift
+    /// hundreds of the tiny result's own ULPs away.)
+    #[test]
+    fn detected_kernel_close_to_ref() {
+        let be = SimdBackend::new();
+        let mut r = Rng::new(72);
+        let (m, k, n) = (37, 220, 150);
+        let a: Vec<f32> = r.normal_vec(m * k, 1.0);
+        let b: Vec<f32> = r.normal_vec(k * n, 1.0);
+        let mut want = vec![0.0f32; m * n];
+        ref_gemm(m, k, n, &a, &b, false, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        be.gemm_slices(m, k, n, &a, &b, &mut got, false);
+        let scale = want.iter().fold(0.0f32, |mx, &x| mx.max(x.abs()));
+        let unit = crate::testkit::ulp_at(scale) as f64;
+        let worst = got
+            .iter()
+            .zip(&want)
+            .map(|(&g, &w)| (g as f64 - w as f64).abs() / unit)
+            .fold(0.0, f64::max);
+        let bound = (k as f64).sqrt().max(4.0);
+        assert!(
+            worst <= bound,
+            "simd({}) drifted {worst:.1} ULP-at-scale from ref (bound {bound:.1})",
+            be.isa().name()
+        );
+    }
+
+    #[test]
+    fn portable_never_vectorized() {
+        let be = SimdBackend::portable();
+        assert!(!be.is_vectorized());
+        assert_eq!(be.isa().name(), "portable");
+        assert_eq!(be.name(), "simd");
+        assert_eq!(be.describe(), "simd(portable)");
+    }
+
+    #[test]
+    fn cpu_features_reports_something() {
+        // shape only: non-empty, comma-joined lowercase tokens or "none"
+        let f = cpu_features();
+        assert!(!f.is_empty());
+        assert!(f.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == ','));
+    }
+
+    /// Zero-sized operands are a no-op (and still honour !accumulate).
+    #[test]
+    fn degenerate_shapes() {
+        let be = SimdBackend::new();
+        let mut c = vec![7.0f32; 6];
+        be.gemm_slices(2, 0, 3, &[], &[], &mut c, false);
+        assert_eq!(c, vec![0.0; 6]);
+        be.gemm_slices(0, 5, 0, &[], &[], &mut [], true);
+    }
+}

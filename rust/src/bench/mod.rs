@@ -1,9 +1,19 @@
 //! Bench harness (criterion is unavailable offline — DESIGN.md §5).
 //!
-//! Warmup + N timed trials with mean / p50 / p99 and a throughput helper;
-//! benches print aligned table rows so `cargo bench` output maps 1:1 onto
-//! the paper's tables and figures.
+//! Warmup + N timed trials with mean / p50 / p95 / p99 and a throughput
+//! helper; benches print aligned table rows so `cargo bench` output maps
+//! 1:1 onto the paper's tables and figures.
+//!
+//! The [`Report`] builder additionally serializes results through the
+//! in-tree [`crate::json`] writer into `BENCH_<name>.json` at the repo
+//! root (schema `mole-bench-v1`), so perf regressions are diffable by
+//! machines — `scripts/perf_compare.sh` joins two such files — instead of
+//! by eyeballing stdout tables. `MOLE_BENCH_OUT_DIR` redirects the output
+//! directory; `MOLE_BENCH_BUDGET_MS` puts bench binaries in short-budget
+//! (CI smoke) mode.
 
+use crate::json::Value;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Result of one timed benchmark.
@@ -13,6 +23,7 @@ pub struct BenchResult {
     pub trials: usize,
     pub mean: Duration,
     pub p50: Duration,
+    pub p95: Duration,
     pub p99: Duration,
 }
 
@@ -38,8 +49,9 @@ pub fn bench<R>(name: &str, warmup: usize, trials: usize, mut f: impl FnMut() ->
     times.sort_unstable();
     let mean = times.iter().sum::<Duration>() / trials as u32;
     let p50 = times[trials / 2];
+    let p95 = times[(trials * 95 / 100).min(trials - 1)];
     let p99 = times[(trials * 99 / 100).min(trials - 1)];
-    BenchResult { name: name.to_string(), trials, mean, p50, p99 }
+    BenchResult { name: name.to_string(), trials, mean, p50, p95, p99 }
 }
 
 /// Auto-pick trial count so the bench takes roughly `budget`.
@@ -49,6 +61,121 @@ pub fn bench_auto<R>(name: &str, budget: Duration, mut f: impl FnMut() -> R) -> 
     let one = t0.elapsed().max(Duration::from_micros(1));
     let trials = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 1000.0) as usize;
     bench(name, 1, trials, f)
+}
+
+/// True when `MOLE_BENCH_BUDGET_MS` is set: bench binaries shrink their
+/// per-section budgets, trial counts and sweep sizes to smoke-test size
+/// (the CI bench-smoke job sets it; local runs normally don't).
+pub fn short_budget() -> bool {
+    std::env::var_os("MOLE_BENCH_BUDGET_MS").is_some()
+}
+
+/// Per-section time budget: `MOLE_BENCH_BUDGET_MS` when set, else
+/// `default_ms`.
+pub fn budget(default_ms: u64) -> Duration {
+    let ms = std::env::var("MOLE_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(default_ms);
+    Duration::from_millis(ms.max(1))
+}
+
+/// Scale a trial/request count down under [`short_budget`]: returns
+/// `full` normally, `max(1, full / 8)` in smoke mode.
+pub fn scaled(full: usize) -> usize {
+    if short_budget() {
+        (full / 8).max(1)
+    } else {
+        full
+    }
+}
+
+/// Machine-readable bench report (schema `mole-bench-v1`).
+///
+/// Collect rows with [`Report::push`] — start each from
+/// [`Report::row`] for timed results, or build a [`BTreeMap`] by hand for
+/// throughput-style entries — then [`Report::write`] emits
+/// `BENCH_<bench>.json` with CPU/thread metadata attached:
+///
+/// ```json
+/// {"schema": "mole-bench-v1", "bench": "hotpath",
+///  "threads": 8, "cpu": {"arch": "x86_64", "cores": 8, "features": "avx2,fma"},
+///  "results": [{"name": "gemm", "backend": "simd", "geometry": "64x768x768",
+///               "trials": 40, "mean_us": ..., "p50_us": ..., "p95_us": ...,
+///               "p99_us": ..., "gflops": ...}, ...]}
+/// ```
+#[derive(Debug, Clone)]
+pub struct Report {
+    bench: String,
+    results: Vec<Value>,
+}
+
+impl Report {
+    pub fn new(bench: &str) -> Self {
+        Report { bench: bench.to_string(), results: Vec::new() }
+    }
+
+    /// Schema row for a timed result: name/backend/trials plus
+    /// mean/p50/p95/p99 in microseconds. Extend with bench-specific keys
+    /// (`gflops`, `geometry`, `speedup_vs_ref`, …) before pushing.
+    pub fn row(r: &BenchResult, backend: &str) -> BTreeMap<String, Value> {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Value::Str(r.name.clone()));
+        m.insert("backend".into(), Value::Str(backend.to_string()));
+        m.insert("trials".into(), Value::Num(r.trials as f64));
+        m.insert("mean_us".into(), Value::Num(us(r.mean)));
+        m.insert("p50_us".into(), Value::Num(us(r.p50)));
+        m.insert("p95_us".into(), Value::Num(us(r.p95)));
+        m.insert("p99_us".into(), Value::Num(us(r.p99)));
+        m
+    }
+
+    pub fn push(&mut self, row: BTreeMap<String, Value>) {
+        self.results.push(Value::Obj(row));
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// The full document as a JSON value.
+    pub fn to_json(&self) -> Value {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut cpu = BTreeMap::new();
+        cpu.insert("arch".into(), Value::Str(std::env::consts::ARCH.to_string()));
+        cpu.insert("cores".into(), Value::Num(cores as f64));
+        cpu.insert("features".into(), Value::Str(crate::backend::cpu_features()));
+        let mut top = BTreeMap::new();
+        top.insert("schema".into(), Value::Str("mole-bench-v1".into()));
+        top.insert("bench".into(), Value::Str(self.bench.clone()));
+        top.insert("threads".into(), Value::Num(cores as f64));
+        top.insert("cpu".into(), Value::Obj(cpu));
+        top.insert("results".into(), Value::Arr(self.results.clone()));
+        Value::Obj(top)
+    }
+
+    /// Write `BENCH_<bench>.json` into [`out_dir`]; returns the path.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = out_dir().join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, crate::json::write(&self.to_json()) + "\n")?;
+        Ok(path)
+    }
+}
+
+/// Where `BENCH_*.json` files land: `MOLE_BENCH_OUT_DIR` when set, else
+/// the repo root (one level above the cargo manifest).
+pub fn out_dir() -> std::path::PathBuf {
+    std::env::var_os("MOLE_BENCH_OUT_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/..")))
+}
+
+fn us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
 }
 
 /// Pretty duration for table cells.
@@ -98,7 +225,8 @@ mod tests {
             s
         });
         assert!(r.mean > Duration::ZERO);
-        assert!(r.p99 >= r.p50);
+        assert!(r.p99 >= r.p95);
+        assert!(r.p95 >= r.p50);
         assert_eq!(r.trials, 10);
         assert!(r.throughput(10_000.0) > 0.0);
     }
@@ -108,5 +236,64 @@ mod tests {
         assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
         assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+
+    #[test]
+    fn report_schema_shape() {
+        let mut rep = Report::new("unit");
+        assert!(rep.is_empty());
+        let r = BenchResult {
+            name: "gemm".into(),
+            trials: 7,
+            mean: Duration::from_micros(120),
+            p50: Duration::from_micros(110),
+            p95: Duration::from_micros(180),
+            p99: Duration::from_micros(200),
+        };
+        let mut row = Report::row(&r, "simd");
+        row.insert("gflops".into(), Value::Num(12.5));
+        rep.push(row);
+        assert_eq!(rep.len(), 1);
+
+        // round-trip through the writer and check every schema key+type
+        let doc = crate::json::parse(&crate::json::write(&rep.to_json())).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "mole-bench-v1");
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit");
+        assert!(doc.get("threads").unwrap().as_usize().unwrap() >= 1);
+        let cpu = doc.get("cpu").unwrap();
+        assert!(!cpu.get("arch").unwrap().as_str().unwrap().is_empty());
+        assert!(cpu.get("cores").unwrap().as_usize().unwrap() >= 1);
+        assert!(!cpu.get("features").unwrap().as_str().unwrap().is_empty());
+        let rows = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.get("name").unwrap().as_str().unwrap(), "gemm");
+        assert_eq!(row.get("backend").unwrap().as_str().unwrap(), "simd");
+        assert_eq!(row.get("trials").unwrap().as_usize().unwrap(), 7);
+        for key in ["mean_us", "p50_us", "p95_us", "p99_us", "gflops"] {
+            assert!(row.get(key).unwrap().as_f64().unwrap() > 0.0, "{key}");
+        }
+        assert!((row.get("p95_us").unwrap().as_f64().unwrap() - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_writes_to_override_dir() {
+        let dir = std::env::temp_dir().join(format!("mole_bench_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("MOLE_BENCH_OUT_DIR", &dir);
+        let path = Report::new("unitwrite").write().unwrap();
+        std::env::remove_var("MOLE_BENCH_OUT_DIR");
+        assert_eq!(path, dir.join("BENCH_unitwrite.json"));
+        let doc = crate::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unitwrite");
+        assert!(doc.get("results").unwrap().as_arr().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_defaults_without_env() {
+        // Note: doesn't set the env var (parallel tests share the
+        // process); the default path is the only deterministic one here.
+        assert_eq!(budget(250), Duration::from_millis(250));
     }
 }

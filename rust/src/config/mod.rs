@@ -164,7 +164,9 @@ pub struct MoleConfig {
     pub train_per_class: usize,
     pub test_per_class: usize,
     /// Compute backend for the hot-path linalg: "auto" | "ref" |
-    /// "parallel" (see [`crate::backend`]).
+    /// "parallel" | "simd" | "parallel+simd" (see [`crate::backend`];
+    /// auto resolves to parallel+simd on multi-core machines with a
+    /// vector ISA).
     pub backend: String,
     /// Worker threads for parallel backends (0 = one per core).
     pub backend_threads: usize,

@@ -7,10 +7,14 @@
 //! Layer map (bottom to top):
 //! * **Compute backends ([`backend`])** — the pluggable dense-kernel
 //!   layer every hot path dispatches through: `RefBackend` (cache-blocked
-//!   single-threaded oracle) and `ParallelBackend` (row-panel scoped
-//!   threads, bitwise-identical outputs). Selected via the `[backend]`
-//!   config section, `MOLE_BACKEND`, or auto (parallel on multi-core).
-//!   Future SIMD/GPU/sharded backends plug in here.
+//!   single-threaded oracle), `SimdBackend` (packed-panel AVX2/NEON
+//!   microkernels with a mandatory portable fallback, FMA drift pinned
+//!   to ≤ max(4, √k) ULP at the output's scale vs ref) and
+//!   `ParallelBackend` (row-panel scoped threads over a
+//!   pluggable inner kernel — `parallel` or `parallel+simd` — bitwise
+//!   identical to its inner kernel). Selected via the `[backend]` config
+//!   section, `MOLE_BACKEND`, or auto (parallel+simd on multi-core with
+//!   a vector ISA). Future GPU/sharded backends plug in here.
 //! * **Linear algebra ([`linalg`], [`tensor`])** — tensor GEMM entry
 //!   points delegating to the active backend, plus LU / inversion /
 //!   norms.

@@ -4,8 +4,8 @@
 //! [`crate::backend`] (see [`crate::backend::active`]): callers that do
 //! not care which implementation runs keep using `linalg::gemm` exactly as
 //! before, while the actual kernels live in `backend::{RefBackend,
-//! ParallelBackend}`. The matrix–vector helpers stay here — they are not
-//! worth dispatching.
+//! SimdBackend, ParallelBackend}`. The matrix–vector helpers stay here —
+//! they are not worth dispatching.
 
 use crate::backend::{self, Backend as _};
 use crate::tensor::Tensor;

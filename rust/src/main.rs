@@ -40,9 +40,13 @@
 //! * `attack [--kappa K]` — run the three §4.2 attacks at small scale
 //!
 //! Options not listed fall back to `mole.toml` ([`mole::config`]) and then
-//! to built-in defaults. `--backend ref|parallel|auto` (or the `[backend]`
-//! config section / `MOLE_BACKEND` env var) selects the compute backend
-//! for all hot-path linalg ([`mole::backend`]).
+//! to built-in defaults. `--backend ref|parallel|simd|parallel+simd|auto`
+//! (or the `[backend]` config section / `MOLE_BACKEND` env var) selects
+//! the compute backend for all hot-path linalg ([`mole::backend`]); auto
+//! picks `parallel+simd` on multi-core machines with a vector ISA, and
+//! `MOLE_SIMD=off` forces the portable (non-vectorized) simd microkernel.
+//! Unknown names — including mistyped composites like `parallel+gpu` —
+//! are hard errors, never a silent fall-through.
 
 use mole::cli::Args;
 use mole::config::MoleConfig;

@@ -410,6 +410,9 @@ mod tests {
             for be in [
                 &crate::backend::RefBackend::new() as &dyn Backend,
                 &crate::backend::ParallelBackend::new(2) as &dyn Backend,
+                &crate::backend::SimdBackend::new() as &dyn Backend,
+                &crate::backend::SimdBackend::portable() as &dyn Backend,
+                &crate::backend::ParallelBackend::with_simd(2) as &dyn Backend,
             ] {
                 let got = conv2d_same_gemm(be, &x, &w, Some(&bias)).unwrap();
                 assert!(

@@ -134,6 +134,80 @@ pub mod gen {
     }
 }
 
+/// Monotone integer key for f32 ordering: maps the sign-magnitude bit
+/// pattern onto a line where adjacent representable floats differ by 1.
+fn ulp_key(x: f32) -> i64 {
+    let i = x.to_bits() as i32 as i64;
+    if i < 0 {
+        (i32::MIN as i64) - i
+    } else {
+        i
+    }
+}
+
+/// Units-in-the-last-place distance between two finite f32s: 0 means
+/// bitwise identical (±0.0 count as equal), 1 means adjacent
+/// representables. Panics on NaN. (The backend parity suite pins FMA
+/// microkernels with [`max_ulp_at_scale`], not this — see its docs.)
+pub fn ulp_distance(a: f32, b: f32) -> u64 {
+    assert!(!a.is_nan() && !b.is_nan(), "ulp_distance on NaN ({a} vs {b})");
+    (ulp_key(a) - ulp_key(b)).unsigned_abs()
+}
+
+/// Largest elementwise [`ulp_distance`] between two same-shape tensors.
+///
+/// Caution: this is the wrong measure for *reduction outputs* (GEMM,
+/// dot products). A k-step sum with cancellation can land arbitrarily
+/// close to zero, where a rounding difference that is minuscule relative
+/// to the operand magnitudes spans hundreds of the tiny result's own
+/// ULPs. Use [`max_ulp_at_scale`] for those.
+pub fn max_ulp(a: &crate::tensor::Tensor, b: &crate::tensor::Tensor) -> u64 {
+    assert_eq!(a.shape(), b.shape(), "max_ulp shape mismatch");
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(&x, &y)| ulp_distance(x, y))
+        .max()
+        .unwrap_or(0)
+}
+
+/// The spacing between adjacent f32s at magnitude `scale` (one ULP at
+/// that scale). `scale` is clamped to the smallest positive normal, so
+/// `ulp_at(0.0)` is finite and positive. Panics on non-finite input.
+pub fn ulp_at(scale: f32) -> f32 {
+    assert!(scale.is_finite(), "ulp_at on non-finite scale {scale}");
+    let s = scale.abs().max(f32::MIN_POSITIVE);
+    f32::from_bits(s.to_bits() + 1) - s
+}
+
+/// Largest elementwise |got − want| between two same-shape tensors,
+/// measured in units of the ULP at `want`'s max-magnitude element.
+///
+/// This is the right pinned-tolerance measure for comparing two
+/// differently-rounded accumulation chains (e.g. an FMA microkernel vs
+/// the mul-then-add reference): per k-step the rounding difference is
+/// ≤ ½ ULP *of that step's product*, so the accumulated drift is a few
+/// ULPs at the magnitude of the values flowing through the reduction —
+/// not of whatever (possibly cancelled-to-near-zero) element it lands
+/// on. Still ~3 orders of magnitude tighter than an `allclose` epsilon.
+/// Panics on NaN.
+pub fn max_ulp_at_scale(got: &crate::tensor::Tensor, want: &crate::tensor::Tensor) -> f64 {
+    assert_eq!(got.shape(), want.shape(), "max_ulp_at_scale shape mismatch");
+    let scale = want.data().iter().fold(0.0f32, |m, &x| {
+        assert!(!x.is_nan(), "max_ulp_at_scale on NaN reference");
+        m.max(x.abs())
+    });
+    let unit = ulp_at(scale) as f64;
+    got.data()
+        .iter()
+        .zip(want.data())
+        .map(|(&g, &w)| {
+            assert!(!g.is_nan(), "max_ulp_at_scale on NaN ({g} vs {w})");
+            (g as f64 - w as f64).abs() / unit
+        })
+        .fold(0.0, f64::max)
+}
+
 /// Assertion helper for float closeness returning Result for `forall`.
 pub fn check_close(got: f64, want: f64, tol: f64, what: &str) -> Result<(), String> {
     if (got - want).abs() <= tol {
@@ -173,6 +247,60 @@ mod tests {
                 Err("too big".into())
             }
         });
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        // straddling zero: distance counts representables in between
+        assert_eq!(ulp_distance(f32::from_bits(1), f32::from_bits(0x8000_0001)), 2);
+        assert!(ulp_distance(1.0, -1.0) > 1 << 30);
+    }
+
+    #[test]
+    #[should_panic(expected = "ulp_distance on NaN")]
+    fn ulp_distance_rejects_nan() {
+        ulp_distance(f32::NAN, 1.0);
+    }
+
+    #[test]
+    fn max_ulp_over_tensors() {
+        use crate::tensor::Tensor;
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(max_ulp(&a, &a), 0);
+        let mut b = a.clone();
+        b.data_mut()[2] = f32::from_bits(3.0f32.to_bits() + 3);
+        assert_eq!(max_ulp(&a, &b), 3);
+    }
+
+    #[test]
+    fn ulp_at_scales() {
+        assert_eq!(ulp_at(1.0), 2.0f32.powi(-23));
+        assert_eq!(ulp_at(-1.5), 2.0f32.powi(-23)); // same binade, sign ignored
+        assert_eq!(ulp_at(100.0), 2.0f32.powi(-17)); // [64,128): 2^6 · 2^-23
+        assert!(ulp_at(0.0) > 0.0); // clamped to MIN_POSITIVE
+    }
+
+    #[test]
+    #[should_panic(expected = "ulp_at on non-finite")]
+    fn ulp_at_rejects_inf() {
+        ulp_at(f32::INFINITY);
+    }
+
+    #[test]
+    fn max_ulp_at_scale_uses_reference_magnitude() {
+        use crate::tensor::Tensor;
+        let want = Tensor::new(&[2, 2], vec![100.0, 0.0, -3.0, 1.0]).unwrap();
+        assert_eq!(max_ulp_at_scale(&want, &want), 0.0);
+        // perturb the near-zero element by 2 ULP *at the tensor's max
+        // magnitude* (100.0): raw elementwise ULP distance would be huge,
+        // the scaled measure reports exactly 2.
+        let mut got = want.clone();
+        got.data_mut()[1] = 2.0 * ulp_at(100.0);
+        assert_eq!(max_ulp_at_scale(&got, &want), 2.0);
     }
 
     #[test]

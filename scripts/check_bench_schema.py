@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json file against the mole-bench-v1 schema.
+
+Stdlib-only (the CI bench-smoke job runs it on the artifacts the bench
+binaries just wrote). Checks required keys AND value types, so a refactor
+that silently drops a percentile or stringifies a number fails CI rather
+than producing un-diffable baselines.
+
+Usage: check_bench_schema.py BENCH_hotpath.json [BENCH_serving.json ...]
+"""
+import json
+import numbers
+import sys
+
+
+def fail(path, msg):
+    print(f"{path}: SCHEMA ERROR: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def want(path, cond, msg):
+    if not cond:
+        fail(path, msg)
+
+
+def is_num(v):
+    return isinstance(v, numbers.Real) and not isinstance(v, bool)
+
+
+def is_int(v):
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+# row keys that must be numeric when present
+OPTIONAL_NUM = [
+    "mean_us",
+    "gflops",
+    "throughput_rps",
+    "speedup_vs_ref",
+    "speedup_vs_unbatched",
+    "mean_batch",
+]
+OPTIONAL_INT = ["trials", "connections"]
+
+
+def check(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+
+    want(path, isinstance(doc, dict), "top level must be an object")
+    want(path, doc.get("schema") == "mole-bench-v1",
+         f"schema must be 'mole-bench-v1', got {doc.get('schema')!r}")
+    want(path, isinstance(doc.get("bench"), str) and doc["bench"],
+         "bench must be a non-empty string")
+    want(path, is_int(doc.get("threads")) and doc["threads"] >= 1,
+         "threads must be an int >= 1")
+
+    cpu = doc.get("cpu")
+    want(path, isinstance(cpu, dict), "cpu must be an object")
+    want(path, isinstance(cpu.get("arch"), str) and cpu["arch"],
+         "cpu.arch must be a non-empty string")
+    want(path, is_int(cpu.get("cores")) and cpu["cores"] >= 1,
+         "cpu.cores must be an int >= 1")
+    want(path, isinstance(cpu.get("features"), str) and cpu["features"],
+         "cpu.features must be a non-empty string")
+
+    results = doc.get("results")
+    want(path, isinstance(results, list) and results,
+         "results must be a non-empty array")
+    for i, row in enumerate(results):
+        where = f"results[{i}]"
+        want(path, isinstance(row, dict), f"{where} must be an object")
+        for key in ("name", "backend"):
+            want(path, isinstance(row.get(key), str) and row[key],
+                 f"{where}.{key} must be a non-empty string")
+        for key in ("p50_us", "p95_us", "p99_us"):
+            want(path, is_num(row.get(key)) and row[key] >= 0,
+                 f"{where}.{key} must be a number >= 0 "
+                 f"(got {row.get(key)!r})")
+        for key in OPTIONAL_NUM:
+            if key in row:
+                want(path, is_num(row[key]),
+                     f"{where}.{key} must be numeric (got {row[key]!r})")
+        for key in OPTIONAL_INT:
+            if key in row:
+                want(path, is_int(row[key]) and row[key] >= 1,
+                     f"{where}.{key} must be an int >= 1 (got {row[key]!r})")
+        if "geometry" in row:
+            want(path, isinstance(row["geometry"], str) and row["geometry"],
+                 f"{where}.geometry must be a non-empty string")
+    print(f"{path}: ok ({len(results)} rows, bench={doc['bench']}, "
+          f"cpu={cpu['arch']}/{cpu['features']})")
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    for path in sys.argv[1:]:
+        check(path)
+
+
+if __name__ == "__main__":
+    main()

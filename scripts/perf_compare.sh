@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Compare two mole-bench-v1 JSON files and print a delta table.
+#
+# Rows are joined on (name, backend, geometry). Timed rows compare
+# mean_us (negative delta = faster); serving rows compare throughput_rps
+# (positive delta = faster). Rows present in only one file are listed so
+# a bench rename never silently drops coverage.
+#
+# Usage: scripts/perf_compare.sh BASELINE.json CURRENT.json
+set -euo pipefail
+
+if [ $# -ne 2 ]; then
+    echo "usage: $0 BASELINE.json CURRENT.json" >&2
+    exit 2
+fi
+
+exec python3 - "$1" "$2" <<'PYEOF'
+import json
+import sys
+
+base_path, cur_path = sys.argv[1], sys.argv[2]
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != "mole-bench-v1":
+        sys.exit(f"{path}: not a mole-bench-v1 file")
+    rows = {}
+    for row in doc["results"]:
+        key = (row["name"], row["backend"], row.get("geometry", ""))
+        rows[key] = row
+    return doc, rows
+
+
+base_doc, base = load(base_path)
+cur_doc, cur = load(cur_path)
+
+print(f"baseline: {base_path} (cpu {base_doc['cpu']['arch']}/"
+      f"{base_doc['cpu']['features']}, {base_doc['threads']} threads)")
+print(f"current:  {cur_path} (cpu {cur_doc['cpu']['arch']}/"
+      f"{cur_doc['cpu']['features']}, {cur_doc['threads']} threads)")
+print()
+hdr = f"{'bench':<18} {'backend':<14} {'geometry':<22} {'base':>12} {'cur':>12} {'delta':>8}"
+print(hdr)
+print("-" * len(hdr))
+
+for key in sorted(set(base) & set(cur)):
+    b, c = base[key], cur[key]
+    name, backend, geom = key
+    if "mean_us" in b and "mean_us" in c:
+        bv, cv, unit = b["mean_us"], c["mean_us"], "us"
+        delta = (cv - bv) / bv * 100 if bv else float("nan")
+    elif "throughput_rps" in b and "throughput_rps" in c:
+        bv, cv, unit = b["throughput_rps"], c["throughput_rps"], "rps"
+        delta = (cv - bv) / bv * 100 if bv else float("nan")
+    else:
+        continue
+    print(f"{name:<18} {backend:<14} {geom:<22} "
+          f"{bv:>10.1f}{unit:>2} {cv:>10.1f}{unit:>2} {delta:>+7.1f}%")
+
+for key in sorted(set(base) - set(cur)):
+    print(f"{key[0]:<18} {key[1]:<14} {key[2]:<22} {'(baseline only)':>36}")
+for key in sorted(set(cur) - set(base)):
+    print(f"{key[0]:<18} {key[1]:<14} {key[2]:<22} {'(current only)':>36}")
+PYEOF
