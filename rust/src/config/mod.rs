@@ -145,8 +145,20 @@ pub struct MoleConfig {
     pub min_batch_timeout_us: u64,
     /// Micro-batcher: adapt the hold window to observed fill levels.
     pub adaptive_batching: bool,
-    /// Serving: session worker threads (max concurrent TCP sessions).
+    /// Micro-batcher: per-lane submit-queue bound (in-flight rows).
+    /// Requests past the bound are shed with a typed
+    /// `Fault::Overloaded` instead of queueing without limit.
+    pub queue_bound: usize,
+    /// Serving: session-driver shards (threads running the readiness
+    /// event loop; each multiplexes many sessions).
     pub serve_workers: usize,
+    /// Serving: max concurrently open sessions (serving + admin).
+    /// Connections past the budget are refused with a session-scoped
+    /// `Fault::Overloaded` and closed.
+    pub max_sessions: usize,
+    /// Serving: max accepted-but-not-yet-adopted connections (the
+    /// bounded accept queue between the acceptor and the drivers).
+    pub max_pending: usize,
     /// Serving: accept `Admin*` frames (live register / drain / retire /
     /// status). Off, the registry is fixed at startup.
     pub admin_enabled: bool,
@@ -188,7 +200,10 @@ impl Default for MoleConfig {
             batch_timeout_ms: 2,
             min_batch_timeout_us: 200,
             adaptive_batching: true,
+            queue_bound: 1024,
             serve_workers: 8,
+            max_sessions: 1024,
+            max_pending: 128,
             admin_enabled: true,
             admin_credential_file: String::new(),
             train_steps: 300,
@@ -252,7 +267,10 @@ impl MoleConfig {
                 d.min_batch_timeout_us,
             )?,
             adaptive_batching: raw.get_bool("serving", "adaptive", d.adaptive_batching)?,
+            queue_bound: raw.get_usize("serving", "queue_bound", d.queue_bound)?,
             serve_workers: raw.get_usize("serving", "workers", d.serve_workers)?,
+            max_sessions: raw.get_usize("serving", "max_sessions", d.max_sessions)?,
+            max_pending: raw.get_usize("serving", "max_pending", d.max_pending)?,
             admin_enabled: raw.get_bool("serving", "admin", d.admin_enabled)?,
             admin_credential_file: raw
                 .get_or("serving", "admin_credential_file", &d.admin_credential_file)
@@ -290,6 +308,7 @@ impl MoleConfig {
             timeout: std::time::Duration::from_millis(self.batch_timeout_ms),
             min_timeout: std::time::Duration::from_micros(self.min_batch_timeout_us),
             adaptive: self.adaptive_batching,
+            queue_bound: self.queue_bound,
         }
     }
 }
@@ -310,7 +329,10 @@ max_batch = 8
 batch_timeout_ms = 5
 min_timeout_us = 150
 adaptive = false
+queue_bound = 64
 workers = 4
+max_sessions = 50
+max_pending = 9
 admin = false
 
 [train]
@@ -338,6 +360,12 @@ lr = 0.1
         assert_eq!(cfg.min_batch_timeout_us, 150);
         assert!(!cfg.adaptive_batching);
         assert_eq!(cfg.serve_workers, 4);
+        assert_eq!(cfg.max_sessions, 50);
+        assert_eq!(cfg.max_pending, 9);
+        // backpressure bounds default sane when absent
+        assert_eq!(MoleConfig::default().queue_bound, 1024);
+        assert_eq!(MoleConfig::default().max_sessions, 1024);
+        assert_eq!(MoleConfig::default().max_pending, 128);
         assert!(!cfg.admin_enabled);
         // admin defaults on when the key is absent, with no credential
         assert!(MoleConfig::default().admin_enabled);
@@ -359,6 +387,7 @@ lr = 0.1
         assert_eq!(b.timeout, std::time::Duration::from_millis(5));
         assert_eq!(b.min_timeout, std::time::Duration::from_micros(150));
         assert!(!b.adaptive);
+        assert_eq!(b.queue_bound, 64);
     }
 
     #[test]

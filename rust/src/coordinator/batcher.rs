@@ -50,6 +50,14 @@ pub struct BatcherConfig {
     /// Adapt the hold window to the observed fill level (see
     /// [`AdaptiveWindow`]). When false the window is fixed at `timeout`.
     pub adaptive: bool,
+    /// Bound on the lane's submit queue, measured on the in-flight gauge
+    /// (requests accepted but not yet answered). An enqueue that would
+    /// push the gauge past this bound is **shed** with the typed
+    /// [`Error::Overloaded`] carrying a retry hint — never parked on an
+    /// unbounded channel. This is the per-lane half of the serving
+    /// plane's end-to-end backpressure (the accept path has its own
+    /// session/pending budgets).
+    pub queue_bound: usize,
 }
 
 impl Default for BatcherConfig {
@@ -59,6 +67,7 @@ impl Default for BatcherConfig {
             timeout: Duration::from_millis(2),
             min_timeout: Duration::from_micros(200),
             adaptive: false,
+            queue_bound: 1024,
         }
     }
 }
@@ -193,6 +202,7 @@ pub struct ServingHandle {
     /// Requests enqueued whose replies have not yet been delivered.
     in_flight: Arc<AtomicU64>,
     worker: Arc<Mutex<Option<JoinHandle<()>>>>,
+    cfg: BatcherConfig,
     d_len: usize,
     num_classes: usize,
 }
@@ -237,6 +247,9 @@ impl ServingHandle {
                 cfg.max_batch
             )));
         }
+        if cfg.queue_bound == 0 {
+            return Err(Error::Config("queue_bound must be >= 1".into()));
+        }
         let num_classes = manifest.num_classes;
         let metrics = Arc::new(ServingMetrics::default());
         let (tx, rx) = mpsc::channel::<Job>();
@@ -248,9 +261,12 @@ impl ServingHandle {
                 engine.prepare(&format!("infer_aug_small_b{b}"))?;
             }
         }
+        let worker_cfg = cfg.clone();
         let worker = std::thread::Builder::new()
             .name(format!("mole-lane-{label}"))
-            .spawn(move || worker_loop(engine, model, cfg, sizes, rx, worker_metrics, d_len))
+            .spawn(move || {
+                worker_loop(engine, model, worker_cfg, sizes, rx, worker_metrics, d_len)
+            })
             .map_err(Error::Io)?;
         Ok(Self {
             tx,
@@ -258,6 +274,7 @@ impl ServingHandle {
             closed: Arc::new(AtomicBool::new(false)),
             in_flight: Arc::new(AtomicU64::new(0)),
             worker: Arc::new(Mutex::new(Some(worker))),
+            cfg,
             d_len,
             num_classes,
         })
@@ -280,12 +297,49 @@ impl ServingHandle {
     /// worker flush everything already enqueued (channel FIFO — the
     /// shutdown marker sorts after the tail), and join it. Idempotent;
     /// replies for the flushed tail are delivered normally.
-    pub fn shutdown(&self) {
+    ///
+    /// Robust against a dead worker: a panic on the worker thread (or on
+    /// a previous caller that died holding the join-handle mutex) must
+    /// not turn graceful shutdown into a second panic. The poisoned lock
+    /// is recovered — the slot it guards is a plain `Option<JoinHandle>`
+    /// with no invariant a panic can break — and the worker's own death
+    /// surfaces as the typed [`Error::Runtime`] so operators see *why*
+    /// the lane went down instead of a poison unwrap.
+    pub fn shutdown(&self) -> Result<()> {
         self.closed.store(true, Ordering::SeqCst);
         let _ = self.tx.send(Job::Shutdown);
-        if let Some(w) = self.worker.lock().unwrap().take() {
-            let _ = w.join();
+        let mut slot =
+            self.worker.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(w) = slot.take() {
+            if let Err(panic) = w.join() {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic payload".into());
+                return Err(Error::Runtime(format!(
+                    "serving worker died by panic: {msg}"
+                )));
+            }
         }
+        Ok(())
+    }
+
+    /// The backoff hint stamped into [`Error::Overloaded`] when this
+    /// lane sheds: roughly the time the current backlog needs to drain
+    /// (queued batches × the active hold window), clamped to [1, 1000]
+    /// ms so a hint is always actionable and never pins a client for
+    /// more than a second.
+    pub fn retry_after_ms(&self) -> u64 {
+        let max_batch = self.cfg.max_batch.max(1) as u64;
+        let backlog_batches = self.in_flight().div_ceil(max_batch);
+        // the live adaptive window when the worker has stamped one, the
+        // configured ceiling before first flush
+        let window_us = match self.metrics.window_us.get() {
+            0 => self.cfg.timeout.as_micros() as u64,
+            w => w,
+        };
+        (backlog_batches.max(1) * window_us / 1000).clamp(1, 1000)
     }
 
     /// Blocking inference on one morphed row. Thread-safe; clones of the
@@ -349,6 +403,16 @@ impl ServingHandle {
         if self.closed.load(Ordering::SeqCst) {
             return Err(Error::Protocol("serving lane is shut down".into()));
         }
+        // Admission control on the in-flight gauge: past the bound the
+        // request is shed typed with a backoff hint, never parked on the
+        // channel. (The increment below can race a concurrent enqueue
+        // past the bound by a few requests — the bound is a shedding
+        // threshold, not a hard capacity invariant, so an off-by-few
+        // under contention is harmless and keeps this lock-free.)
+        if self.in_flight.load(Ordering::SeqCst) >= self.cfg.queue_bound as u64 {
+            self.metrics.overloaded.inc();
+            return Err(Error::Overloaded { retry_after_ms: self.retry_after_ms() });
+        }
         self.metrics.requests.inc();
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         let guard = InFlightGuard(self.in_flight.clone());
@@ -379,6 +443,12 @@ impl ServingHandle {
     /// Row length this model serves (α·m²).
     pub fn d_len(&self) -> usize {
         self.d_len
+    }
+
+    /// The lane's submit-queue bound (shedding threshold on the
+    /// in-flight gauge).
+    pub fn queue_bound(&self) -> usize {
+        self.cfg.queue_bound
     }
 }
 
@@ -626,6 +696,7 @@ mod tests {
             timeout: Duration::from_millis(4),
             min_timeout: Duration::from_micros(250),
             adaptive: true,
+            ..BatcherConfig::default()
         };
         let mut w = AdaptiveWindow::new(&cfg);
         assert_eq!(w.window(), Duration::from_millis(4));
@@ -648,6 +719,7 @@ mod tests {
             timeout: Duration::from_micros(100),
             min_timeout: Duration::from_millis(9),
             adaptive: true,
+            ..BatcherConfig::default()
         };
         let w = AdaptiveWindow::new(&odd);
         assert_eq!(w.window(), Duration::from_micros(100));
@@ -658,6 +730,7 @@ mod tests {
             timeout: Duration::from_millis(4),
             min_timeout: Duration::from_micros(250),
             adaptive: true,
+            ..BatcherConfig::default()
         };
         let mut w = AdaptiveWindow::new(&small);
         w.on_batch(2, 2); // full batch holds the ceiling
@@ -678,6 +751,7 @@ mod tests {
             timeout: Duration::from_millis(3),
             min_timeout: Duration::from_micros(300),
             adaptive: true,
+            ..BatcherConfig::default()
         };
         // already at the ceiling: size flushes hold it there exactly
         let mut w = AdaptiveWindow::new(&cfg);
@@ -750,7 +824,7 @@ mod tests {
         drop(done_tx);
         assert!(h.in_flight() > 0, "tail not registered as in flight");
         let t0 = Instant::now();
-        h.shutdown();
+        h.shutdown().unwrap();
         // every pre-shutdown request answered, correctly paired, fast
         let mut got = vec![None; rows.len()];
         for c in done_rx {
@@ -769,7 +843,116 @@ mod tests {
         let err = h.infer(&rows[0]).unwrap_err();
         assert!(err.to_string().contains("shut down"), "{err}");
         // idempotent
-        h.shutdown();
+        h.shutdown().unwrap();
+    }
+
+    /// Satellite: the bounded submit queue sheds typed. Requests past
+    /// `queue_bound` on the in-flight gauge come back as
+    /// [`Error::Overloaded`] with an actionable `retry_after_ms`, the
+    /// shed counter moves, nothing hangs — and once the backlog drains,
+    /// admission reopens without intervention.
+    #[test]
+    fn bounded_queue_sheds_typed_overload() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let manifest = Manifest::load(&dir).unwrap();
+        let g = manifest.geometry("small").unwrap();
+        let mut rng = Rng::new(17);
+        let model = ServingModel {
+            cac: Tensor::new(
+                &[g.d_len(), g.f_len()],
+                rng.normal_vec(g.d_len() * g.f_len(), 0.02),
+            )
+            .unwrap(),
+            bias: vec![0.0; g.beta],
+            params: init_params(&manifest.aug_params, &mut rng),
+        };
+        // a long hold window parks the first request, so later enqueues
+        // pile onto the gauge deterministically
+        let h = ServingHandle::start(
+            manifest,
+            model,
+            BatcherConfig {
+                max_batch: 4,
+                timeout: Duration::from_millis(2_000),
+                queue_bound: 3,
+                ..BatcherConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(h.queue_bound(), 3);
+        let row = rng.normal_vec(768, 1.0);
+        let (done_tx, done_rx) = mpsc::channel();
+        for i in 0..3u64 {
+            h.submit(i, &row, done_tx.clone()).unwrap();
+        }
+        // gauge is at the bound: the 4th submit is shed typed, with a
+        // sane hint, and is NOT left in flight
+        let err = h.submit(3, &row, done_tx.clone()).unwrap_err();
+        match err {
+            Error::Overloaded { retry_after_ms } => {
+                assert!((1..=1000).contains(&retry_after_ms), "{retry_after_ms}");
+            }
+            other => panic!("expected Overloaded, got {other}"),
+        }
+        assert_eq!(h.metrics.overloaded.get(), 1);
+        assert_eq!(h.in_flight(), 3);
+        // flush the backlog (max_batch 4 > 3 queued, so shutdown drains
+        // in one batch); every admitted request is answered
+        h.shutdown().unwrap();
+        drop(done_tx);
+        let mut served = 0;
+        for c in done_rx {
+            c.result.unwrap();
+            served += 1;
+        }
+        assert_eq!(served, 3, "admitted requests must all be answered");
+    }
+
+    /// Satellite bugfix: a poisoned join-handle mutex must not turn
+    /// graceful shutdown into a second panic. The mutex is poisoned the
+    /// way any panicking holder would; shutdown recovers the lock (the
+    /// guarded slot is a plain `Option` with no breakable invariant) and
+    /// completes instead of dying on `.unwrap()`.
+    #[test]
+    fn shutdown_survives_poisoned_worker_mutex() {
+        let h = handle(8, 1);
+        // poison the join-handle mutex the way a panicking caller would
+        let poisoner = h.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.worker.lock().unwrap();
+            panic!("deliberate: poison the worker mutex");
+        })
+        .join();
+        assert!(h.worker.lock().is_err(), "mutex should be poisoned");
+        // old code: shutdown() panicked here on the poisoned unwrap
+        h.shutdown().unwrap();
+        assert!(h.is_closed());
+    }
+
+    /// The typed-worker-death half of the shutdown bugfix: when the
+    /// worker thread itself dies by panic, `shutdown` joins it and
+    /// returns [`Error::Runtime`] naming the panic instead of succeeding
+    /// silently (or poisoning anything).
+    #[test]
+    fn shutdown_reports_worker_panic_typed() {
+        let h = handle(8, 1);
+        // replace the real worker with one that dies by panic — the
+        // registry can't make the engine panic deterministically, but
+        // the join/report path is identical
+        let dead = std::thread::Builder::new()
+            .name("mole-lane-doomed".into())
+            .spawn(|| panic!("deliberate: worker died"))
+            .unwrap();
+        let real = h.worker.lock().unwrap().replace(dead).unwrap();
+        let err = h.shutdown().unwrap_err();
+        assert!(
+            matches!(&err, Error::Runtime(m) if m.contains("worker died by panic")
+                && m.contains("deliberate")),
+            "{err}"
+        );
+        // idempotent after the report; join the displaced real worker
+        h.shutdown().unwrap();
+        real.join().unwrap();
     }
 
     #[test]
@@ -795,6 +978,7 @@ mod tests {
                 timeout: Duration::from_millis(2),
                 min_timeout: Duration::from_micros(100),
                 adaptive: true,
+                ..BatcherConfig::default()
             },
         )
         .unwrap();

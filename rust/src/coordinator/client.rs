@@ -5,7 +5,7 @@
 //! types; raw [`Message`] construction stays inside `protocol.rs`,
 //! `client.rs` and `server.rs`.
 //!
-//! ## Serving flow (protocol v5: client speaks first)
+//! ## Serving flow (protocol v6: client speaks first)
 //!
 //! ```text
 //! client  Hello { version, model, epoch }          →  server
@@ -30,6 +30,13 @@
 //! [`Error::Version`]; both endpoints answer it with a best-effort
 //! `Fault` frame so the peer sees a typed rejection instead of a
 //! connection reset.
+//!
+//! Overload (v6): a server shedding load answers `Fault::Overloaded`
+//! carrying a `retry_after_ms` backoff hint — session-scoped at connect
+//! (budget full), request-scoped on a full lane queue. Every receive
+//! path surfaces it as the typed [`Error::Overloaded`]; the client does
+//! **not** retry automatically (unlike lifecycle redirects) — backoff
+//! policy belongs to the caller, e.g. [`super::loadgen`].
 
 use super::protocol::{
     read_message, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
@@ -416,6 +423,16 @@ impl<S: Read + Write> MoleClient<S> {
             }
             other => Err(Error::Protocol(format!("expected InferResponse, got {other:?}"))),
         }
+    }
+
+    /// Next pipelined outcome keyed by request id: logits, or the typed
+    /// [`Fault`] the server answered instead. Unlike
+    /// [`MoleClient::recv_response`] the fault keeps its request id, so
+    /// load drivers can retry exactly the shed request (e.g. an
+    /// `Overloaded` answer, after honoring its `retry_after_ms`).
+    /// Lifecycle faults still record the sticky redirect.
+    pub fn recv_outcome(&mut self) -> Result<(u64, std::result::Result<Vec<f32>, Fault>)> {
+        self.recv_incoming()
     }
 
     /// Next `InferResponse`; `Fault` frames surface as `Err` (lifecycle
@@ -907,6 +924,67 @@ mod tests {
         assert_eq!(client.drain_redirects(), 1);
         assert_eq!(client.infer(&[9.0, 0.0, 0.0]).unwrap(), vec![2.0]);
         assert_eq!(client.drain_redirects(), 1, "sticky redirect must not re-fault");
+        client.finish().unwrap();
+        server.join().unwrap();
+    }
+
+    /// A request shed with the typed `Overloaded` fault surfaces as the
+    /// typed [`Error::Overloaded`] (backoff hint intact) — never as a
+    /// generic protocol error, and never as an automatic retry.
+    #[test]
+    fn overloaded_fault_surfaces_typed() {
+        let (server_side, client_side) = pipe_pair();
+        let server = std::thread::spawn(move || {
+            let mut s = CountingStream::new(server_side);
+            match read_message(&mut s).unwrap() {
+                Message::Hello { .. } => {}
+                other => panic!("expected Hello, got {other:?}"),
+            }
+            write_message(
+                &mut s,
+                &Message::Hello {
+                    version: PROTOCOL_VERSION,
+                    model: "alpha".into(),
+                    epoch: 0,
+                    geometry: Geometry::SMALL,
+                    kappa: 16,
+                    fingerprint: "fp".into(),
+                    num_batches: 0,
+                    batch_size: 8,
+                },
+            )
+            .unwrap();
+            // shed the one request, typed, request-scoped
+            match read_message(&mut s).unwrap() {
+                Message::InferRequest { id, .. } => {
+                    write_message(
+                        &mut s,
+                        &Message::Fault {
+                            of: id,
+                            fault: Fault::Overloaded { retry_after_ms: 7 },
+                        },
+                    )
+                    .unwrap();
+                }
+                other => panic!("expected InferRequest, got {other:?}"),
+            }
+            // the client must NOT have auto-retried: next frame is the
+            // close, not a re-sent request
+            match read_message(&mut s).unwrap() {
+                Message::EndOfData => {
+                    write_message(&mut s, &Message::EndOfData).unwrap()
+                }
+                other => panic!("expected EndOfData after shed, got {other:?}"),
+            }
+        });
+
+        let mut client = MoleClient::over(client_side, ClientConfig::default()).unwrap();
+        let err = client.infer(&[1.0, 2.0, 3.0]).unwrap_err();
+        assert!(
+            matches!(err, Error::Overloaded { retry_after_ms: 7 }),
+            "expected typed Overloaded with hint, got {err}"
+        );
+        assert_eq!(client.drain_redirects(), 0, "overload is not a lifecycle redirect");
         client.finish().unwrap();
         server.join().unwrap();
     }

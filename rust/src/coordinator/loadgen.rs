@@ -1,17 +1,64 @@
 //! Multi-connection load generator for the serving layer (`mole
-//! loadgen`): N [`MoleClient`] connections, each pipelining requests
-//! against a [`super::server::Server`] (optionally pinned to one
-//! registered model / key epoch), reporting throughput and latency
-//! percentiles through the [`crate::metrics`] machinery.
+//! loadgen`): N [`MoleClient`] connections driving a
+//! [`super::server::Server`] (optionally pinned to one registered model
+//! / key epoch), reporting throughput and latency percentiles through
+//! the [`crate::metrics`] machinery.
+//!
+//! ## Closed loop vs. open loop — coordinated omission
+//!
+//! With [`LoadgenConfig::rate`] `== 0` (the legacy default) the driver
+//! is **closed-loop**: each connection keeps `pipeline` requests in
+//! flight and sends the next the moment a response frees a slot. Under
+//! overload a closed loop slows its own arrival rate to whatever the
+//! server can absorb, so the latency histogram silently *omits* all the
+//! waiting that a real, independent client population would have
+//! experienced — the classic **coordinated omission** bug. A stalled
+//! server can look "fine at p99" because the loadgen politely stopped
+//! asking.
+//!
+//! With `rate > 0` the driver is **open-loop**: requests follow a fixed
+//! arrival schedule (`rate` req/s across all connections, interleaved
+//! round-robin), independent of how fast the server answers. Two
+//! latency histograms are reported:
+//!
+//! * `latency` (raw) — actual send → response, what the old driver
+//!   measured;
+//! * `corrected` — **intended** (scheduled) send → response, which
+//!   charges every queueing/backoff delay to the requests that suffered
+//!   it. This is the honest number under overload.
+//!
+//! Typed `Fault::Overloaded` sheds (protocol v6) are first-class: a shed
+//! request is counted, the server's `retry_after_ms` hint is honored,
+//! and the row is re-sent — still measured against its *original*
+//! intended time, so backoff cost is never hidden. Accept-level sheds
+//! (session budget full) back off and reconnect the same way.
 
 use super::client::{ClientConfig, MoleClient};
-use super::protocol::EPOCH_LATEST;
+use super::protocol::{Fault, EPOCH_LATEST};
 use crate::metrics::{Counter, Histogram};
 use crate::rng::Rng;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Connect attempts per connection before an accept-level shed becomes a
+/// hard error (each attempt honors the server's backoff hint first).
+const MAX_CONNECT_RETRIES: u32 = 50;
+
+/// Re-sends per request before a persistent `Overloaded` answer becomes
+/// a hard error.
+const MAX_REQUEST_RETRIES: u32 = 100;
+
+/// Ceiling on any server-suggested backoff sleep (a confused server must
+/// not park the loadgen for minutes).
+const MAX_RETRY_SLEEP: Duration = Duration::from_secs(1);
+
+/// Open-loop in-flight ceiling per connection — a memory bound, not a
+/// pacing device (the arrival schedule, not this cap, decides send
+/// times; a server slow enough to pile this many up is already deep in
+/// corrected-latency territory).
+const OPEN_LOOP_MAX_INFLIGHT: usize = 4096;
 
 /// Load shape.
 #[derive(Debug, Clone)]
@@ -22,10 +69,14 @@ pub struct LoadgenConfig {
     pub connections: usize,
     /// Requests issued per connection.
     pub requests_per_conn: usize,
-    /// In-flight requests per connection (1 = strict request/response
-    /// ping-pong; deeper pipelines let the server batch across one
-    /// connection as well as across connections).
+    /// Closed-loop in-flight requests per connection (1 = strict
+    /// request/response ping-pong; deeper pipelines let the server batch
+    /// across one connection as well as across connections). Ignored for
+    /// pacing when [`LoadgenConfig::rate`] is set.
     pub pipeline: usize,
+    /// Target offered load in requests/sec summed over **all**
+    /// connections (open loop). `0.0` = closed loop.
+    pub rate: f64,
     /// Seed for the synthetic morphed rows (per-connection streams are
     /// derived from it, so runs are reproducible).
     pub seed: u64,
@@ -42,6 +93,7 @@ impl Default for LoadgenConfig {
             connections: 8,
             requests_per_conn: 64,
             pipeline: 4,
+            rate: 0.0,
             seed: 1,
             model: String::new(),
             epoch: EPOCH_LATEST,
@@ -56,9 +108,23 @@ pub struct LoadReport {
     pub ok: u64,
     /// Requests that failed or were abandoned when a connection errored.
     pub errors: u64,
+    /// Typed `Overloaded` sheds received on live sessions (each was
+    /// retried after the server's backoff hint; a shed is not an error
+    /// unless it persists past the retry budget).
+    pub shed: u64,
+    /// Connect attempts refused typed at accept (session/pending budget
+    /// full) and retried.
+    pub connect_shed: u64,
     pub elapsed: Duration,
-    /// Per-request wall latency (send → matching response).
+    /// Raw per-request wall latency (actual send → matching response).
     pub latency: Arc<Histogram>,
+    /// Coordinated-omission-corrected latency (**intended** send →
+    /// response). Equals `latency` in closed-loop runs, where intended
+    /// and actual send times coincide by construction.
+    pub corrected: Arc<Histogram>,
+    /// The configured arrival rate (req/s, all connections); `0.0` for a
+    /// closed-loop run.
+    pub offered_rps: f64,
     pub bytes_out: u64,
 }
 
@@ -71,16 +137,42 @@ impl LoadReport {
     /// [`crate::metrics::ServingMetrics::report`].
     pub fn report(&self) -> String {
         let (p50, p95, p99) = self.latency.summary().unwrap_or((0, 0, 0));
+        let (c50, c95, c99) = self.corrected.summary().unwrap_or((0, 0, 0));
         format!(
-            "conns={} ok={} errors={} elapsed_ms={:.1} throughput={:.0}/s \
-             latency_us p50={p50} p95={p95} p99={p99}",
+            "conns={} ok={} errors={} shed={} connect_shed={} elapsed_ms={:.1} \
+             offered={:.0}/s throughput={:.0}/s latency_us p50={p50} p95={p95} p99={p99} \
+             corrected_us p50={c50} p95={c95} p99={c99}",
             self.connections,
             self.ok,
             self.errors,
+            self.shed,
+            self.connect_shed,
             self.elapsed.as_secs_f64() * 1e3,
+            self.offered_rps,
             self.throughput_rps(),
         )
     }
+}
+
+/// Shared per-run counters each connection thread reports into.
+struct RunStats {
+    latency: Arc<Histogram>,
+    corrected: Arc<Histogram>,
+    bytes_out: Arc<Counter>,
+    shed: Arc<Counter>,
+    connect_shed: Arc<Counter>,
+}
+
+/// One request awaiting its response (or retry).
+struct Pending {
+    /// Scheduled send time — the latency a non-coordinated client would
+    /// measure starts here. Survives retries unchanged.
+    intended: Instant,
+    /// Actual (most recent) send time — raw latency starts here.
+    sent: Instant,
+    /// Kept so a typed shed can re-send exactly this row.
+    row: Vec<f32>,
+    tries: u32,
 }
 
 /// Drive one connection's request stream; returns how many requests
@@ -89,50 +181,154 @@ impl LoadReport {
 fn run_connection(
     cfg: &LoadgenConfig,
     conn_index: u64,
-    latency: &Histogram,
-    bytes_out: &Counter,
+    stats: &RunStats,
 ) -> (u64, Option<Error>) {
     let mut ok = 0u64;
-    match drive_connection(cfg, conn_index, latency, bytes_out, &mut ok) {
+    match drive_connection(cfg, conn_index, stats, &mut ok) {
         Ok(()) => (ok, None),
         Err(e) => (ok, Some(e)),
+    }
+}
+
+/// Connect, honoring typed accept-level sheds with the server's backoff
+/// hint (bounded attempts).
+fn connect(cfg: &LoadgenConfig, stats: &RunStats) -> Result<MoleClient> {
+    let mut attempts = 0u32;
+    loop {
+        match MoleClient::connect_with(
+            &cfg.addr,
+            ClientConfig { model: cfg.model.clone(), epoch: cfg.epoch },
+        ) {
+            Ok(c) => return Ok(c),
+            Err(Error::Overloaded { retry_after_ms }) if attempts < MAX_CONNECT_RETRIES => {
+                attempts += 1;
+                stats.connect_shed.inc();
+                std::thread::sleep(
+                    Duration::from_millis(retry_after_ms).min(MAX_RETRY_SLEEP),
+                );
+            }
+            Err(e) => return Err(e),
+        }
     }
 }
 
 fn drive_connection(
     cfg: &LoadgenConfig,
     conn_index: u64,
-    latency: &Histogram,
-    bytes_out: &Counter,
+    stats: &RunStats,
     ok: &mut u64,
 ) -> Result<()> {
-    let mut client = MoleClient::connect_with(
-        &cfg.addr,
-        ClientConfig { model: cfg.model.clone(), epoch: cfg.epoch },
-    )?;
+    let mut client = connect(cfg, stats)?;
     let d_len = client.d_len();
     let total = cfg.requests_per_conn as u64;
-    let depth = cfg.pipeline.max(1) as u64;
+    let open = cfg.rate > 0.0;
+    // the aggregate schedule is interleaved round-robin across
+    // connections, so each connection fires every connections/rate s
+    let interval = if open {
+        Duration::from_secs_f64(cfg.connections as f64 / cfg.rate)
+    } else {
+        Duration::ZERO
+    };
+    let depth = if open { OPEN_LOOP_MAX_INFLIGHT } else { cfg.pipeline.max(1) };
     let mut rng = Rng::new(cfg.seed ^ (0xC0FFEE + conn_index * 0x9E3779B9));
+    let start = Instant::now();
 
-    let mut inflight: HashMap<u64, Instant> = HashMap::new();
-    let mut next_id = 0u64;
-    while *ok < total {
-        while (inflight.len() as u64) < depth && next_id < total {
+    let mut inflight: HashMap<u64, Pending> = HashMap::new();
+    let mut next_seq = 0u64; // position in the arrival schedule
+    let mut next_id = 0u64; // wire ids (run ahead of seq on retries)
+    let mut done = 0u64;
+    while done < total {
+        // admit every due request: schedule-driven in the open loop,
+        // slot-driven in the closed loop (where intended == actual by
+        // construction, making corrected == raw)
+        while next_seq < total && inflight.len() < depth {
+            let intended =
+                if open { start + interval.mul_f64(next_seq as f64) } else { Instant::now() };
+            if open && Instant::now() < intended {
+                break;
+            }
             let row = rng.normal_vec(d_len, 0.5);
-            bytes_out.add(client.send_request(next_id, &row)? as u64);
-            inflight.insert(next_id, Instant::now());
+            let id = next_id;
             next_id += 1;
+            stats.bytes_out.add(client.send_request(id, &row)? as u64);
+            inflight.insert(id, Pending { intended, sent: Instant::now(), row, tries: 0 });
+            next_seq += 1;
         }
-        let (id, logits) = client.recv_response()?;
-        let sent = inflight.remove(&id).ok_or_else(|| {
+        if inflight.is_empty() {
+            if next_seq >= total {
+                // every scheduled request was admitted yet none is in
+                // flight or done — impossible unless accounting broke
+                return Err(Error::Protocol("loadgen lost track of a request".into()));
+            }
+            // ahead of schedule with nothing outstanding: sleep to the
+            // next arrival slot instead of spinning
+            let intended = start + interval.mul_f64(next_seq as f64);
+            let now = Instant::now();
+            if intended > now {
+                std::thread::sleep((intended - now).min(Duration::from_millis(50)));
+            }
+            continue;
+        }
+        // blocking on a response can overshoot the next scheduled send;
+        // the intended-time bookkeeping charges exactly that delay to
+        // the late requests, which is the whole point
+        let (id, served) = client.recv_outcome()?;
+        let p = inflight.remove(&id).ok_or_else(|| {
             Error::Protocol(format!("response for unknown/duplicate id {id}"))
         })?;
-        if logits.is_empty() || logits.iter().any(|v| !v.is_finite()) {
-            return Err(Error::Protocol(format!("request {id}: non-finite logits")));
+        match served {
+            Ok(logits) => {
+                if logits.is_empty() || logits.iter().any(|v| !v.is_finite()) {
+                    return Err(Error::Protocol(format!("request {id}: non-finite logits")));
+                }
+                stats.latency.record(p.sent.elapsed());
+                stats.corrected.record(p.intended.elapsed());
+                done += 1;
+                *ok += 1;
+            }
+            Err(Fault::Overloaded { retry_after_ms }) => {
+                stats.shed.inc();
+                if p.tries >= MAX_REQUEST_RETRIES {
+                    return Err(Error::Overloaded { retry_after_ms });
+                }
+                std::thread::sleep(
+                    Duration::from_millis(retry_after_ms).min(MAX_RETRY_SLEEP),
+                );
+                let nid = next_id;
+                next_id += 1;
+                stats.bytes_out.add(client.send_request(nid, &p.row)? as u64);
+                inflight.insert(
+                    nid,
+                    Pending {
+                        intended: p.intended,
+                        sent: Instant::now(),
+                        row: p.row,
+                        tries: p.tries + 1,
+                    },
+                );
+            }
+            Err(Fault::Draining { .. } | Fault::Retired { .. }) => {
+                // the sticky redirect was recorded by the client; re-send
+                // to the successor lane under a fresh id (rotation under
+                // load loses nothing)
+                let nid = next_id;
+                next_id += 1;
+                stats.bytes_out.add(client.send_request(nid, &p.row)? as u64);
+                inflight.insert(
+                    nid,
+                    Pending {
+                        intended: p.intended,
+                        sent: Instant::now(),
+                        row: p.row,
+                        tries: p.tries + 1,
+                    },
+                );
+            }
+            Err(Fault::Generic { msg }) => {
+                return Err(Error::Protocol(format!("server fault: {msg}")))
+            }
+            Err(fault) => return Err(fault.into_error()),
         }
-        latency.record(sent.elapsed());
-        *ok += 1;
     }
     client.finish()?;
     Ok(())
@@ -143,18 +339,31 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     if cfg.connections == 0 || cfg.requests_per_conn == 0 {
         return Err(Error::Config("loadgen needs connections >= 1 and requests >= 1".into()));
     }
-    let latency = Arc::new(Histogram::default());
-    let bytes_out = Arc::new(Counter::default());
+    if !cfg.rate.is_finite() || cfg.rate < 0.0 {
+        return Err(Error::Config("loadgen rate must be finite and >= 0".into()));
+    }
+    let stats = RunStats {
+        latency: Arc::new(Histogram::default()),
+        corrected: Arc::new(Histogram::default()),
+        bytes_out: Arc::new(Counter::default()),
+        shed: Arc::new(Counter::default()),
+        connect_shed: Arc::new(Counter::default()),
+    };
     let t0 = Instant::now();
     let mut threads = Vec::with_capacity(cfg.connections);
     for c in 0..cfg.connections {
         let cfg = cfg.clone();
-        let latency = latency.clone();
-        let bytes_out = bytes_out.clone();
+        let stats = RunStats {
+            latency: stats.latency.clone(),
+            corrected: stats.corrected.clone(),
+            bytes_out: stats.bytes_out.clone(),
+            shed: stats.shed.clone(),
+            connect_shed: stats.connect_shed.clone(),
+        };
         threads.push(
             std::thread::Builder::new()
                 .name(format!("mole-loadgen-{c}"))
-                .spawn(move || run_connection(&cfg, c as u64, &latency, &bytes_out))
+                .spawn(move || run_connection(&cfg, c as u64, &stats))
                 .map_err(Error::Io)?,
         );
     }
@@ -182,8 +391,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         connections: cfg.connections,
         ok,
         errors,
+        shed: stats.shed.get(),
+        connect_shed: stats.connect_shed.get(),
         elapsed: t0.elapsed(),
-        latency,
-        bytes_out: bytes_out.get(),
+        latency: stats.latency,
+        corrected: stats.corrected,
+        offered_rps: cfg.rate,
+        bytes_out: stats.bytes_out.get(),
     })
 }

@@ -12,9 +12,13 @@
 //!   [`registry::ModelRegistry`] of named models × key epochs, each with
 //!   its own adaptive micro-batcher lane (queue / padding / window
 //!   metrics) moving through the Active → Draining → Retired lifecycle,
-//!   fronted by a concurrent TCP server (`mole serve`) that fans many
-//!   client sessions into one shared engine; [`loadgen`]
-//!   (`mole loadgen`) is the matching multi-connection driver.
+//!   fronted by an evented TCP server (`mole serve`; readiness-driven
+//!   session drivers over the in-tree [`reactor`] poller) that fans many
+//!   client sessions into one shared engine with end-to-end
+//!   backpressure — session/pending budgets at accept, bounded submit
+//!   queues per lane, typed `Fault::Overloaded` sheds (protocol v6)
+//!   instead of silent stalls; [`loadgen`] (`mole loadgen`) is the
+//!   matching open-loop multi-connection driver.
 //! * **Admin surface** ([`admin`]): `Admin*` frames on the same
 //!   listener (`mole admin register|drain|retire|status`) mutate the
 //!   registry at runtime — the live half of key rotation: register the
@@ -42,6 +46,7 @@ pub mod experiment;
 pub mod loadgen;
 pub mod protocol;
 pub mod provider;
+pub mod reactor;
 pub mod registry;
 pub mod server;
 pub mod trainer;

@@ -55,6 +55,17 @@
 //! inner frame is even decoded ([`open_admin`]). The MAC authenticates
 //! and freshens admin *commands* only: it provides no confidentiality,
 //! no wire encryption, and does not cover server replies.
+//!
+//! ## Backpressure faults (v6)
+//!
+//! v6 adds [`Fault::Overloaded`] (fault kind 4): the serving plane shed
+//! a request or refused a connection because an explicit budget was
+//! full (session budget, pending-accept budget, or a lane's bounded
+//! submit queue). The fault carries `retry_after_ms`, the server's
+//! backoff hint; clients surface it as the typed
+//! [`Error::Overloaded`] and well-behaved drivers (`mole loadgen`)
+//! sleep that long before retrying. Overload is always *answered* —
+//! a saturated v6 server never parks a request silently.
 
 use crate::hash::{ct_eq, hmac_sha256};
 use crate::tensor::Tensor;
@@ -71,11 +82,14 @@ const MAX_PAYLOAD: usize = 1 << 30;
 /// v4 re-laid-out `Fault` (tag 9: `of` + typed fault kind) and added
 /// the Admin frames (tags 10–14); v5 added the authenticated admin
 /// handshake (tags 15–17: `AdminHello`/`AdminChallenge`/`AdminAuthed`)
-/// and fault kind 3 (`AdminAuth`). **v3 is deliberately skipped**:
+/// and fault kind 3 (`AdminAuth`); v6 added fault kind 4
+/// ([`Fault::Overloaded`], carrying `retry_after_ms`) — the typed
+/// load-shed answer that replaced silent stalls under overload.
+/// **v3 is deliberately skipped**:
 /// pre-versioning (v1) `Hello` frames began with the geometry's α = 3,
 /// which decodes as "version 3" — a build claiming v3 could not tell a
 /// legacy peer from a current one.
-pub const PROTOCOL_VERSION: u32 = 5;
+pub const PROTOCOL_VERSION: u32 = 6;
 
 /// `epoch` sentinel meaning "the newest epoch the peer serves".
 pub const EPOCH_LATEST: u32 = u32::MAX;
@@ -103,6 +117,9 @@ pub enum Fault {
     /// Admin-plane authentication refusal (forged/missing MAC, replayed
     /// counter, unauthenticated frame on a credential-gated server, …).
     AdminAuth { msg: String },
+    /// The server shed this request (or refused this connection) under
+    /// load; retry no sooner than `retry_after_ms` milliseconds (v6).
+    Overloaded { retry_after_ms: u64 },
 }
 
 impl Fault {
@@ -121,6 +138,9 @@ impl Fault {
                 successor: *successor,
             },
             Error::AdminAuth(msg) => Fault::AdminAuth { msg: msg.clone() },
+            Error::Overloaded { retry_after_ms } => {
+                Fault::Overloaded { retry_after_ms: *retry_after_ms }
+            }
             other => Fault::Generic { msg: other.to_string() },
         }
     }
@@ -138,6 +158,7 @@ impl Fault {
                 Error::Retired { model, epoch, successor }
             }
             Fault::AdminAuth { msg } => Error::AdminAuth(msg),
+            Fault::Overloaded { retry_after_ms } => Error::Overloaded { retry_after_ms },
         }
     }
 }
@@ -569,6 +590,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
                     out.push(3);
                     put_str(&mut out, msg);
                 }
+                Fault::Overloaded { retry_after_ms } => {
+                    out.push(4);
+                    put_u64(&mut out, *retry_after_ms);
+                }
             }
         }
         Message::AdminRegister { model, vault_path, kappa, seed, trunk_seed } => {
@@ -652,6 +677,7 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
                     successor: c.u32()?,
                 },
                 3 => Fault::AdminAuth { msg: c.str()? },
+                4 => Fault::Overloaded { retry_after_ms: c.u64()? },
                 k => return Err(Error::Protocol(format!("unknown fault kind {k}"))),
             };
             Message::Fault { of, fault }
@@ -695,6 +721,34 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<usize> {
     w.write_all(&payload)?;
     w.flush()?;
     Ok(7 + payload.len())
+}
+
+/// Try to peel one framed message off the front of a byte buffer — the
+/// evented session layer's decode entry point (per-session read buffers
+/// accumulate whatever the socket had; frames are consumed as they
+/// complete). Returns `Ok(None)` while the buffer holds only a partial
+/// frame (read more), `Ok(Some((msg, consumed)))` when a full frame
+/// decoded (`consumed` bytes, header included, should be drained), and
+/// `Err` for the same malformed-framing cases the blocking
+/// [`read_message`] raises (bad magic, oversized length, bad payload).
+/// A hostile length field is rejected from the 7-byte header alone —
+/// before the buffer is ever asked to hold the claimed bytes.
+pub fn try_decode_frame(buf: &[u8]) -> Result<Option<(Message, usize)>> {
+    if buf.len() < 7 {
+        return Ok(None);
+    }
+    if buf[0..2] != FRAME_MAGIC {
+        return Err(Error::Protocol("bad frame magic".into()));
+    }
+    let tag = buf[2];
+    let len = u32::from_le_bytes(buf[3..7].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(Error::Protocol(format!("frame length {len} too large")));
+    }
+    if buf.len() < 7 + len {
+        return Ok(None);
+    }
+    Ok(Some((decode(tag, &buf[7..7 + len])?, 7 + len)))
 }
 
 /// Read one framed message (blocking).
@@ -744,6 +798,34 @@ mod tests {
         for msg in all_variants() {
             roundtrip(msg);
         }
+        // the buffer-based decoder agrees with the stream decoder: every
+        // variant, concatenated on one wire, peels off in order with the
+        // exact consumed count, and every strict prefix is "incomplete",
+        // never an error
+        let msgs = all_variants();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_message(&mut wire, m).unwrap();
+        }
+        let mut at = 0;
+        for m in &msgs {
+            let (got, used) = try_decode_frame(&wire[at..]).unwrap().unwrap();
+            assert_eq!(&got, m);
+            for cut in (0..used).step_by(1.max(used / 64)) {
+                assert!(
+                    try_decode_frame(&wire[at..at + cut]).unwrap().is_none(),
+                    "prefix of {cut}/{used} bytes decoded"
+                );
+            }
+            at += used;
+        }
+        assert_eq!(at, wire.len());
+        // malformed headers die from the 7 header bytes alone
+        assert!(try_decode_frame(b"XX\x01\x00\x00\x00\x00").is_err());
+        let mut huge = FRAME_MAGIC.to_vec();
+        huge.push(1);
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(try_decode_frame(&huge).is_err());
         // routing fields survive the trip
         roundtrip(Message::Hello {
             version: PROTOCOL_VERSION,
@@ -912,6 +994,10 @@ mod tests {
                 of: FAULT_SESSION,
                 fault: Fault::AdminAuth { msg: "MAC verification failed".into() },
             },
+            Message::Fault {
+                of: 9,
+                fault: Fault::Overloaded { retry_after_ms: 25 },
+            },
             Message::AdminHello,
             Message::AdminChallenge { nonce: [7u8; 32] },
             seal_admin(
@@ -1027,6 +1113,14 @@ mod tests {
             Error::AdminAuth(msg) if msg == "bad MAC"
         ));
         assert!(f.to_string().contains("admin auth"), "{f}");
+        // overload faults carry the backoff hint losslessly both ways
+        let f = Fault::from_error(&Error::Overloaded { retry_after_ms: 25 });
+        assert!(matches!(&f, Fault::Overloaded { retry_after_ms: 25 }));
+        assert!(matches!(
+            f.clone().into_error(),
+            Error::Overloaded { retry_after_ms: 25 }
+        ));
+        assert!(f.to_string().contains("25 ms"), "{f}");
         // typed faults display the successor so raw logs stay readable
         let f = Fault::Draining { model: "alpha".into(), epoch: 0, successor: 1 };
         assert!(f.to_string().contains("draining"), "{f}");
@@ -1034,7 +1128,7 @@ mod tests {
     }
 
     /// Satellite: property-style decoder fuzz. Seeded-random frames from
-    /// every v5 + Admin variant are mutated — truncated anywhere,
+    /// every v6 + Admin variant are mutated — truncated anywhere,
     /// bit-flipped, replaced with pure garbage, or given a lying length
     /// header — and fed to `read_message`, which must always return a
     /// typed result: never panic, and never allocate/stall past the

@@ -390,9 +390,13 @@ impl ModelRegistry {
             None => None,
         };
         if let Some(e) = conflict {
-            // tear the orphan worker down before reporting
+            // tear the orphan worker down before reporting (a dead
+            // worker is logged, not propagated — the registration
+            // conflict is the caller's error)
             drop(inner);
-            lane.handle().shutdown();
+            if let Err(dead) = lane.handle().shutdown() {
+                crate::logging::warn(&format!("orphan lane teardown: {dead}"));
+            }
             return Err(e);
         }
         if inner.default_model.is_none() {
@@ -473,11 +477,12 @@ impl ModelRegistry {
         // immediate. A request racing the state check either sorts before
         // the shutdown marker (flushed by the worker) or is answered with
         // a typed error by the batcher's reply-on-drop guarantee — it is
-        // never silently lost.
-        lane.handle().shutdown();
+        // never silently lost. A worker that died by panic is reported
+        // typed; the lane is still marked retired (it is equally gone).
+        let death = lane.handle().shutdown();
         lane.set_state(LaneState::Retired);
         Self::refresh_successors(epochs);
-        Ok(())
+        death
     }
 
     /// Every epoch of a model must carry the same trunk: rotation

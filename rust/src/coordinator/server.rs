@@ -1,9 +1,20 @@
-//! The concurrent multi-tenant TCP serving layer (`mole serve`).
+//! The concurrent multi-tenant TCP serving layer (`mole serve`) — an
+//! **evented** session layer with end-to-end backpressure.
 //!
-//! A [`Server`] binds a `std::net::TcpListener`, accepts many concurrent
-//! client sessions on a fixed thread pool, and routes every request to a
-//! lane of its [`ModelRegistry`]. Each session runs the serving half of
-//! the wire protocol ([`super::protocol`], v5 — client speaks first):
+//! A [`Server`] binds a `std::net::TcpListener` and splits the work
+//! between one blocking acceptor thread and a small fixed set of
+//! **session drivers** ([`ServeConfig::session_workers`] shards). Every
+//! accepted connection is made nonblocking and adopted by one driver;
+//! each driver multiplexes *all* of its sessions on one readiness loop
+//! over the in-tree poller ([`super::reactor`]), with per-session read
+//! and write buffers replacing the old blocking thread-per-session
+//! `read_message`/`write_message` calls. A driver therefore serves
+//! hundreds of concurrent sessions without holding a thread per
+//! connection — and a stalled peer stalls only its own buffers, never a
+//! thread another session needs.
+//!
+//! Each session runs the serving half of the wire protocol
+//! ([`super::protocol`], v6 — client speaks first):
 //!
 //! 1. the client opens with `Hello` (protocol version + requested
 //!    model/epoch); the server resolves it against the registry and
@@ -16,12 +27,35 @@
 //!    latest-epoch sentinel route to the session lane, anything else is
 //!    resolved per request, so one connection can mix models;
 //! 3. each lane's adaptive micro-batcher ([`super::batcher`]) coalesces
-//!    rows from *all* sessions into single Aug-Conv GEMMs and fans
-//!    `InferResponse { id, logits }` frames back on the originating
-//!    connection — possibly out of order across ids (clients match on
-//!    `id`);
+//!    rows from *all* sessions into single Aug-Conv GEMMs; completions
+//!    land on the owning driver's inbox (a [`super::reactor::Waker`]
+//!    pulls it out of `poll`) and fan `InferResponse { id, logits }`
+//!    frames back on the originating connection — possibly out of order
+//!    across ids (clients match on `id`);
 //! 4. the client closes with `EndOfData`; the server flushes every
 //!    in-flight response, answers `EndOfData`, and ends the session.
+//!
+//! ## Backpressure — overload is answered, never parked
+//!
+//! Three explicit budgets stand between an open socket and a GEMM, and
+//! blowing any of them produces the typed `Fault::Overloaded` (fault
+//! kind 4, carrying a `retry_after_ms` backoff hint) instead of a silent
+//! stall:
+//!
+//! * **session budget** ([`ServeConfig::max_sessions`]) — open sessions
+//!   (serving + admin) across all drivers;
+//! * **pending-accept budget** ([`ServeConfig::max_pending`]) — accepted
+//!   connections not yet adopted by a driver (the old unbounded accept
+//!   channel is gone);
+//! * **per-lane submit queue**
+//!   ([`super::batcher::BatcherConfig::queue_bound`]) — requests in
+//!   flight inside one lane's batcher; a shed here is request-scoped
+//!   (`of: id`), the connection survives.
+//!
+//! The first two are enforced by the acceptor: an over-budget connection
+//! gets a best-effort session-scoped `Fault::Overloaded` and is closed —
+//! the client sees a typed refusal in one round trip, not a connect that
+//! hangs in a queue nobody drains.
 //!
 //! Per-request failures (bad row length, unknown model/epoch, engine
 //! faults) come back as `Fault` frames; framing violations fault the
@@ -33,44 +67,78 @@
 //! frame instead of `Hello` becomes an admin session ([`super::admin`];
 //! gated by [`ServeConfig::admin_enabled`] and either the loopback
 //! check or — when [`ServeConfig::admin_credential`] is set — the
-//! challenge–response MAC handshake) that can register, drain and
-//! retire lanes while traffic is flowing.
+//! challenge–response MAC handshake). Admin sessions are rare,
+//! long-lived and strictly request/response, so they **detach** from the
+//! event loop onto a dedicated blocking thread (reusing the session
+//! loops in [`super::admin`]) while still counting against
+//! [`ServeConfig::max_sessions`].
 //! Lifecycle refusals — a draining or retired lane, at handshake or on
 //! any later request (the session lane is revalidated per request) —
 //! answer with the typed `Fault::Draining`/`Fault::Retired` carrying
 //! the successor epoch so clients re-resolve instead of failing.
 
 use super::protocol::{
-    read_message, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
+    try_decode_frame, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
     PROTOCOL_VERSION,
 };
+use super::reactor::{waker, Interest, Poller, WakeRx, Waker};
 use super::registry::{ModelLane, ModelRegistry};
 use crate::metrics::ServingMetrics;
 use crate::{Error, Result};
-use std::io::Read;
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Backoff hint stamped on connections shed at accept. Accept-time sheds
+/// happen before any lane is known, so there is no live backlog to
+/// derive a hint from; a flat 100 ms keeps refused clients from
+/// hammering a saturated listener without pinning them for long.
+const ACCEPT_RETRY_AFTER_MS: u64 = 100;
+
+/// How long a driver keeps serving open sessions after [`Server::stop`]
+/// before dropping them. Bounds `stop()` even against a peer that never
+/// sends `EndOfData` (the old thread-per-session server could wait out
+/// the full idle timeout).
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Ceiling on one poll round, so drivers notice shutdown promptly even
+/// with no session deadlines near.
+const POLL_CAP: Duration = Duration::from_millis(250);
 
 /// Server tuning.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Listen address, e.g. `127.0.0.1:7433` (`:0` picks a free port).
     pub addr: String,
-    /// Session worker threads == max concurrently served connections
-    /// (excess connections queue in the accept channel).
+    /// Session-driver shards — threads running the readiness event loop.
+    /// Each shard multiplexes many sessions, so this is a parallelism
+    /// knob, **not** a concurrency ceiling (that is
+    /// [`ServeConfig::max_sessions`]).
     pub session_workers: usize,
-    /// How long a freshly accepted connection may stay silent before its
-    /// handshake is abandoned (bounds slow/loris peers and pre-v2/v4
-    /// clients that wait for the server to speak first).
+    /// How long a freshly accepted connection may go without completing
+    /// its handshake before it is shed. The deadline is fixed at
+    /// adoption and is **not** extended by trickled bytes, so slow-loris
+    /// peers and pre-v2/v4 clients that wait for the server to speak
+    /// first are strictly bounded.
     pub handshake_timeout: Duration,
-    /// How long an established session may sit idle (no frame at all)
-    /// before it is closed. Session workers are a fixed pool, so an
-    /// abandoned-but-open connection would otherwise hold a worker
-    /// forever.
+    /// How long an established session may sit idle (no inbound bytes)
+    /// before it is closed. Evented drivers don't burn a thread on an
+    /// abandoned connection, but its session-budget slot and buffers
+    /// would otherwise leak forever.
     pub idle_timeout: Duration,
+    /// Max concurrently open sessions, serving + admin, across all
+    /// drivers. Connections past the budget are answered with a
+    /// session-scoped `Fault::Overloaded` and closed at accept.
+    pub max_sessions: usize,
+    /// Max accepted-but-not-yet-adopted connections (the bounded accept
+    /// queue between the acceptor and the drivers). Past it, same typed
+    /// shed as [`ServeConfig::max_sessions`].
+    pub max_pending: usize,
     /// Accept `Admin*` frames (register/drain/retire/status). Off, the
     /// registry is fixed at bind time like a pre-lifecycle server.
     /// Defaults on — a deliberate tradeoff for the single-operator demo
@@ -98,21 +166,82 @@ impl Default for ServeConfig {
             session_workers: 8,
             handshake_timeout: Duration::from_secs(10),
             idle_timeout: Duration::from_secs(300),
+            max_sessions: 1024,
+            max_pending: 128,
             admin_enabled: true,
             admin_credential: None,
         }
     }
 }
 
-/// A running serving instance: acceptor thread + session pool + one
-/// batcher lane per registered `(model, epoch)`.
+/// RAII slot in the live-session budget: claimed by the acceptor at
+/// admission (so the budget check races with nothing downstream),
+/// released wherever the session actually ends — driver teardown or
+/// admin-thread exit. Mirrored onto the `sessions` gauge.
+struct LiveSlot {
+    live: Arc<AtomicU64>,
+    metrics: Arc<ServingMetrics>,
+}
+
+impl LiveSlot {
+    fn claim(live: &Arc<AtomicU64>, metrics: &Arc<ServingMetrics>) -> Self {
+        live.fetch_add(1, Ordering::SeqCst);
+        metrics.sessions.set(live.load(Ordering::SeqCst));
+        Self { live: live.clone(), metrics: metrics.clone() }
+    }
+}
+
+impl Drop for LiveSlot {
+    fn drop(&mut self) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+        self.metrics.sessions.set(self.live.load(Ordering::SeqCst));
+    }
+}
+
+/// RAII slot in the pending-accept budget; released when a driver adopts
+/// the connection.
+struct PendingSlot(Arc<AtomicU64>);
+
+impl PendingSlot {
+    fn claim(pending: &Arc<AtomicU64>) -> Self {
+        pending.fetch_add(1, Ordering::SeqCst);
+        Self(pending.clone())
+    }
+}
+
+impl Drop for PendingSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// What the acceptor and lane workers push at a driver. One mutex per
+/// shard; every push is paired with a waker kick.
+#[derive(Default)]
+struct Inbox {
+    /// Admitted connections awaiting adoption.
+    adopt: Vec<(TcpStream, LiveSlot, PendingSlot)>,
+    /// Batcher completions: (session token, ready-to-queue frame).
+    completions: Vec<(u64, Message)>,
+}
+
+/// One driver shard's cross-thread handle.
+struct DriverShared {
+    inbox: Mutex<Inbox>,
+    waker: Waker,
+}
+
+/// A running serving instance: acceptor thread + session-driver shards +
+/// one batcher lane per registered `(model, epoch)`.
 pub struct Server {
     local_addr: SocketAddr,
     registry: Arc<ModelRegistry>,
     metrics: Arc<ServingMetrics>,
     shutdown: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
-    sessions: Vec<JoinHandle<()>>,
+    drivers: Vec<JoinHandle<()>>,
+    driver_shared: Vec<Arc<DriverShared>>,
+    admin_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl Server {
@@ -121,33 +250,45 @@ impl Server {
         if registry.is_empty() {
             return Err(Error::Config("cannot serve an empty model registry".into()));
         }
+        if cfg.max_sessions == 0 {
+            return Err(Error::Config("max_sessions must be >= 1".into()));
+        }
+        if cfg.max_pending == 0 {
+            return Err(Error::Config("max_pending must be >= 1".into()));
+        }
         let registry = Arc::new(registry);
         let metrics = Arc::new(ServingMetrics::default());
         let listener = TcpListener::bind(&cfg.addr)?;
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicU64::new(0));
+        let pending = Arc::new(AtomicU64::new(0));
+        let admin_threads = Arc::new(Mutex::new(Vec::new()));
 
-        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let workers = cfg.session_workers.max(1);
-        let mut sessions = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let conn_rx = conn_rx.clone();
-            let registry = registry.clone();
-            let metrics = metrics.clone();
-            let cfg = cfg.clone();
-            sessions.push(
+        let shards = cfg.session_workers.max(1);
+        let mut driver_shared = Vec::with_capacity(shards);
+        let mut drivers = Vec::with_capacity(shards);
+        for w in 0..shards {
+            let (wake, wake_rx) = waker().map_err(Error::Io)?;
+            let shared =
+                Arc::new(DriverShared { inbox: Mutex::new(Inbox::default()), waker: wake });
+            driver_shared.push(shared.clone());
+            let driver = Driver {
+                cfg: cfg.clone(),
+                registry: registry.clone(),
+                metrics: metrics.clone(),
+                shutdown: shutdown.clone(),
+                shared,
+                wake_rx,
+                admin_threads: admin_threads.clone(),
+                sessions: HashMap::new(),
+                next_token: 0,
+                poller: Poller::new(),
+            };
+            drivers.push(
                 std::thread::Builder::new()
-                    .name(format!("mole-session-{w}"))
-                    .spawn(move || loop {
-                        let sock = match conn_rx.lock().unwrap().recv() {
-                            Ok(s) => s,
-                            Err(_) => return, // acceptor gone: drain done
-                        };
-                        if let Err(e) = run_session(sock, &registry, &metrics, &cfg) {
-                            crate::logging::warn(&format!("session ended with error: {e}"));
-                        }
-                    })
+                    .name(format!("mole-driver-{w}"))
+                    .spawn(move || driver.run())
                     .map_err(Error::Io)?,
             );
         }
@@ -155,25 +296,45 @@ impl Server {
         let acceptor = {
             let shutdown = shutdown.clone();
             let metrics = metrics.clone();
+            let shards: Vec<Arc<DriverShared>> = driver_shared.clone();
+            let max_sessions = cfg.max_sessions as u64;
+            let max_pending = cfg.max_pending as u64;
             std::thread::Builder::new()
                 .name("mole-accept".into())
                 .spawn(move || {
+                    let mut next = 0usize;
                     for conn in listener.incoming() {
                         if shutdown.load(Ordering::SeqCst) {
-                            return; // drops conn_tx → session pool drains
+                            return;
                         }
-                        match conn {
-                            Ok(sock) => {
-                                sock.set_nodelay(true).ok();
-                                metrics.connections.inc();
-                                if conn_tx.send(sock).is_err() {
-                                    return;
-                                }
-                            }
+                        let sock = match conn {
+                            Ok(s) => s,
                             Err(e) => {
                                 crate::logging::warn(&format!("accept failed: {e}"));
+                                continue;
                             }
+                        };
+                        sock.set_nodelay(true).ok();
+                        metrics.connections.inc();
+                        // end-to-end backpressure starts here: past
+                        // either budget, the connection is *answered* —
+                        // typed Overloaded, then closed — never queued
+                        // silently
+                        if live.load(Ordering::SeqCst) >= max_sessions
+                            || pending.load(Ordering::SeqCst) >= max_pending
+                        {
+                            shed_accept(sock, &metrics);
+                            continue;
                         }
+                        let slot = LiveSlot::claim(&live, &metrics);
+                        let pend = PendingSlot::claim(&pending);
+                        if sock.set_nonblocking(true).is_err() {
+                            continue; // slot + pend released by drop
+                        }
+                        let shard = &shards[next % shards.len()];
+                        next = next.wrapping_add(1);
+                        shard.inbox.lock().unwrap().adopt.push((sock, slot, pend));
+                        shard.waker.wake();
                     }
                 })
                 .map_err(Error::Io)?
@@ -185,7 +346,9 @@ impl Server {
             metrics,
             shutdown,
             acceptor: Some(acceptor),
-            sessions,
+            drivers,
+            driver_shared,
+            admin_threads,
         })
     }
 
@@ -193,10 +356,10 @@ impl Server {
         self.local_addr
     }
 
-    /// Server-level metrics: connections, wire bytes, TCP-answered
-    /// responses and faults. Per-lane batching/latency metrics live on
-    /// each lane's [`super::batcher::ServingHandle`] (via
-    /// [`Server::registry`]).
+    /// Server-level metrics: connections, live/shed session counts, wire
+    /// bytes, TCP-answered responses and faults. Per-lane
+    /// batching/latency metrics live on each lane's
+    /// [`super::batcher::ServingHandle`] (via [`Server::registry`]).
     pub fn metrics(&self) -> &Arc<ServingMetrics> {
         &self.metrics
     }
@@ -222,7 +385,8 @@ impl Server {
         true
     }
 
-    /// Stop accepting, finish queued sessions, and join every thread.
+    /// Stop accepting, give open sessions a short grace window to finish
+    /// their close handshake, and join every thread.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // unblock the acceptor's blocking accept()
@@ -230,234 +394,589 @@ impl Server {
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
-        for s in self.sessions.drain(..) {
-            let _ = s.join();
+        for s in &self.driver_shared {
+            s.waker.wake();
+        }
+        for d in self.drivers.drain(..) {
+            let _ = d.join();
+        }
+        let admins = std::mem::take(&mut *self.admin_threads.lock().unwrap());
+        for t in admins {
+            let _ = t.join();
         }
     }
 }
 
-/// Counts protocol bytes as they stream in, so `bytes_in` reflects real
-/// wire traffic (the 5.12%-overhead story is about these bytes).
-struct CountingReader<R: Read> {
-    inner: R,
-    metrics: Arc<ServingMetrics>,
-}
+/// Shed sockets being drained right now (see [`shed_accept`]). A cap,
+/// not a pool: each drain is a short-lived detached thread.
+static SHED_DRAINS: AtomicUsize = AtomicUsize::new(0);
+const SHED_DRAIN_CAP: usize = 32;
+const SHED_DRAIN_WINDOW: Duration = Duration::from_millis(250);
 
-impl<R: Read> Read for CountingReader<R> {
-    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
-        let n = self.inner.read(buf)?;
-        self.metrics.bytes_in.add(n as u64);
-        Ok(n)
-    }
-}
-
-/// Best-effort typed rejection during the handshake (before the writer
-/// thread exists).
-fn handshake_fault(sock: &mut TcpStream, metrics: &Arc<ServingMetrics>, fault: Fault) {
-    metrics.faults.inc();
-    if let Ok(n) = write_message(sock, &Message::Fault { of: FAULT_SESSION, fault }) {
+/// Best-effort typed refusal of a connection the budgets won't admit:
+/// one session-scoped `Fault::Overloaded` frame (bounded blocking write
+/// — the socket was just accepted, its send buffer is empty, and a write
+/// timeout backstops a pathological peer), then FIN.
+///
+/// The socket must NOT be closed while the peer's handshake bytes sit
+/// unread in our receive queue: `close(2)` with unread data makes the
+/// kernel answer RST, and an RST destroys the fault frame still in
+/// flight — the client would see a connection reset instead of the
+/// typed refusal. So after the FIN, the socket lingers on a detached
+/// drainer that reads until the peer closes, bounded in threads
+/// ([`SHED_DRAIN_CAP`]), time ([`SHED_DRAIN_WINDOW`]) and bytes. Past
+/// the thread cap the close is abrupt — under a genuine shed storm an
+/// occasional reset beats unbounded thread growth, and the well-behaved
+/// retry path ([`ACCEPT_RETRY_AFTER_MS`]) keeps storms self-limiting.
+fn shed_accept(mut sock: TcpStream, metrics: &Arc<ServingMetrics>) {
+    metrics.accept_shed.inc();
+    sock.set_write_timeout(Some(Duration::from_millis(250))).ok();
+    let fault = Message::Fault {
+        of: FAULT_SESSION,
+        fault: Fault::Overloaded { retry_after_ms: ACCEPT_RETRY_AFTER_MS },
+    };
+    if let Ok(n) = write_message(&mut sock, &fault) {
         metrics.bytes_out.add(n as u64);
     }
-    let _ = sock.shutdown(Shutdown::Both);
+    let _ = sock.shutdown(Shutdown::Write);
+    if SHED_DRAINS.fetch_add(1, Ordering::SeqCst) < SHED_DRAIN_CAP {
+        let spawned = std::thread::Builder::new()
+            .name("mole-shed-drain".into())
+            .spawn(move || {
+                let deadline = Instant::now() + SHED_DRAIN_WINDOW;
+                sock.set_read_timeout(Some(SHED_DRAIN_WINDOW)).ok();
+                let mut buf = [0u8; 512];
+                let mut budget = 16 * 1024usize;
+                while budget > 0 && Instant::now() < deadline {
+                    match sock.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => budget = budget.saturating_sub(n),
+                    }
+                }
+                SHED_DRAINS.fetch_sub(1, Ordering::SeqCst);
+            });
+        if spawned.is_err() {
+            SHED_DRAINS.fetch_sub(1, Ordering::SeqCst);
+        }
+    } else {
+        SHED_DRAINS.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
-/// What the opening frame turned a fresh connection into.
-enum Opening {
-    /// A serving session bound to a resolved lane.
-    Lane(Arc<ModelLane>),
-    /// An unauthenticated (loopback-gated) admin session; the
-    /// already-read first admin frame rides along.
-    Admin(Message),
-    /// An authenticated admin session (opened with `AdminHello` on a
-    /// credential-gated server); the credential to verify against rides
-    /// along. The challenge is issued by the session loop itself.
+/// One multiplexed connection's state inside a driver.
+struct Session {
+    sock: TcpStream,
+    /// Holds this session's slot in the live budget until teardown.
+    _slot: LiveSlot,
+    /// Unparsed inbound bytes (frames are peeled off the front).
+    rbuf: Vec<u8>,
+    /// Outbound bytes not yet on the wire…
+    wbuf: Vec<u8>,
+    /// …of which the first `wpos` are already written.
+    wpos: usize,
+    /// The lane negotiated at handshake; `None` while handshaking.
+    lane: Option<Arc<ModelLane>>,
+    /// Handshake or idle deadline (handshake deadlines are fixed at
+    /// adoption; idle deadlines renew on inbound bytes).
+    deadline: Instant,
+    /// Requests submitted to a batcher whose completions have not yet
+    /// come back through the inbox. The `EndOfData` answer waits for
+    /// zero — "flush every in-flight response" is this counter.
+    inflight: u64,
+    /// No more inbound frames will be processed (client `EndOfData`, or
+    /// read-side EOF). The session still drains in-flight responses.
+    rd_done: bool,
+    /// An `EndOfData` answer is owed once `inflight` hits zero.
+    eof: bool,
+    eof_answered: bool,
+    /// Flush `wbuf`, then close (set after a session-fatal fault or the
+    /// `EndOfData` answer).
+    closing: bool,
+    /// Tear down now.
+    dead: bool,
+}
+
+/// Append one frame to a session's write buffer. In-memory encode can
+/// only fail on an over-`MAX_PAYLOAD` payload, which the serving plane
+/// never constructs; if it somehow does, the session dies rather than
+/// desync its framing.
+fn queue_frame(sess: &mut Session, msg: &Message) {
+    if write_message(&mut sess.wbuf, msg).is_err() {
+        sess.dead = true;
+    }
+}
+
+/// Write as much buffered output as the socket accepts right now.
+fn flush(sess: &mut Session, metrics: &ServingMetrics) {
+    while sess.wpos < sess.wbuf.len() {
+        match sess.sock.write(&sess.wbuf[sess.wpos..]) {
+            Ok(0) => {
+                sess.dead = true;
+                return;
+            }
+            Ok(n) => {
+                sess.wpos += n;
+                metrics.bytes_out.add(n as u64);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                sess.dead = true;
+                return;
+            }
+        }
+    }
+    sess.wbuf.clear();
+    sess.wpos = 0;
+    if sess.closing {
+        let _ = sess.sock.shutdown(Shutdown::Both);
+        sess.dead = true;
+    }
+}
+
+/// What a handshake frame asked the session to become (beyond staying a
+/// serving session or dying).
+enum Detach {
+    /// Hand the connection to a blocking thread running the legacy
+    /// (loopback-gated) admin loop; the first admin frame rides along.
+    AdminPlain(Message),
+    /// Same, for the authenticated admin loop; carries the credential.
     AdminAuthed([u8; 32]),
-    /// The peer went away silently (port probes, health checks).
-    Probe,
 }
 
-/// Classify and answer the client's opening frame: a `Hello` resolves to
-/// a session lane (version mismatches, unknown models and draining /
-/// retired lanes answered with their typed `Fault`); an `AdminHello` on
-/// a credential-gated server opens an authenticated admin session (any
-/// peer address); a bare `Admin*` frame opens a legacy admin session
-/// when no credential is configured (loopback peers only) and is
-/// refused typed when one is; anything else faults.
-fn handshake(
-    sock: &mut TcpStream,
-    registry: &Arc<ModelRegistry>,
-    metrics: &Arc<ServingMetrics>,
-    cfg: &ServeConfig,
-) -> Result<Opening> {
-    let timeout = cfg.handshake_timeout;
-    sock.set_read_timeout(Some(timeout)).ok();
-    let opening = {
-        let mut reader =
-            CountingReader { inner: &mut *sock, metrics: metrics.clone() };
-        read_message(&mut reader)
-    };
-    let lane = match opening {
-        Ok(Message::Hello { model, epoch, .. }) => {
-            match registry.resolve(&model, epoch) {
-                Ok(lane) => lane,
+/// A blocking `Read + Write` view of a detached connection that replays
+/// bytes the event loop had already buffered before handing the rest of
+/// the stream through. Keeps a pipelining admin client from losing
+/// frames at the detach boundary.
+struct PrefixedStream {
+    pre: std::io::Cursor<Vec<u8>>,
+    sock: TcpStream,
+}
+
+impl Read for PrefixedStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.pre.read(buf)?;
+        if n > 0 {
+            return Ok(n);
+        }
+        self.sock.read(buf)
+    }
+}
+
+impl Write for PrefixedStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.sock.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.sock.flush()
+    }
+}
+
+/// One session-driver shard: the readiness event loop.
+struct Driver {
+    cfg: ServeConfig,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<ServingMetrics>,
+    shutdown: Arc<AtomicBool>,
+    shared: Arc<DriverShared>,
+    wake_rx: WakeRx,
+    admin_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    sessions: HashMap<u64, Session>,
+    next_token: u64,
+    poller: Poller,
+}
+
+impl Driver {
+    fn run(mut self) {
+        let mut shutdown_at: Option<Instant> = None;
+        loop {
+            // 1. inbox: adoptions from the acceptor, completions from
+            //    lane workers
+            let (adopt, completions) = {
+                let mut inbox = self.shared.inbox.lock().unwrap();
+                (std::mem::take(&mut inbox.adopt), std::mem::take(&mut inbox.completions))
+            };
+            for (sock, slot, pend) in adopt {
+                self.adopt(sock, slot);
+                drop(pend); // adopted: pending-accept slot freed
+            }
+            for (token, msg) in completions {
+                // a completion for a torn-down session is dropped — the
+                // peer is gone, and the lane's reply already fired
+                if let Some(sess) = self.sessions.get_mut(&token) {
+                    sess.inflight = sess.inflight.saturating_sub(1);
+                    queue_frame(sess, &msg);
+                }
+            }
+
+            // 2. shutdown: exit once every session finished its close
+            //    handshake, or the grace window runs out
+            if self.shutdown.load(Ordering::SeqCst) {
+                let at = *shutdown_at.get_or_insert_with(|| Instant::now() + SHUTDOWN_GRACE);
+                if self.sessions.is_empty() || Instant::now() >= at {
+                    return;
+                }
+            }
+
+            // 3. per-session bookkeeping: the EndOfData barrier (answer
+            //    only once every in-flight response is queued), expired
+            //    deadlines, and an opportunistic flush
+            let now = Instant::now();
+            for sess in self.sessions.values_mut() {
+                if sess.dead {
+                    continue;
+                }
+                if sess.eof && sess.inflight == 0 && !sess.eof_answered {
+                    sess.eof_answered = true;
+                    queue_frame(sess, &Message::EndOfData);
+                    sess.closing = true;
+                }
+                if !sess.closing && now >= sess.deadline {
+                    if sess.lane.is_none() {
+                        self.metrics.faults.inc();
+                        let timeout = self.cfg.handshake_timeout;
+                        queue_frame(
+                            sess,
+                            &Message::Fault {
+                                of: FAULT_SESSION,
+                                fault: Fault::Generic {
+                                    msg: format!(
+                                        "handshake timed out after {timeout:?} \
+                                         (v{PROTOCOL_VERSION} clients send Hello first)"
+                                    ),
+                                },
+                            },
+                        );
+                    } else {
+                        queue_frame(
+                            sess,
+                            &Message::Fault {
+                                of: FAULT_SESSION,
+                                fault: Fault::Generic {
+                                    msg: format!(
+                                        "session idle for {:?}, closing",
+                                        self.cfg.idle_timeout
+                                    ),
+                                },
+                            },
+                        );
+                    }
+                    sess.closing = true;
+                }
+                if sess.wpos < sess.wbuf.len() || sess.closing {
+                    flush(sess, &self.metrics);
+                }
+            }
+            self.sessions.retain(|_, s| !s.dead);
+
+            // 4. interest list: slot 0 is the waker, then every session
+            //    that still wants socket readiness
+            let mut fds = vec![(self.wake_rx.fd(), Interest::READ)];
+            let mut tokens = vec![u64::MAX];
+            let mut next_deadline: Option<Instant> = None;
+            for (&tok, sess) in &self.sessions {
+                next_deadline = Some(match next_deadline {
+                    Some(d) => d.min(sess.deadline),
+                    None => sess.deadline,
+                });
+                let wants_write = sess.wpos < sess.wbuf.len();
+                let want = match (sess.rd_done || sess.closing, wants_write) {
+                    (false, false) => Interest::READ,
+                    (false, true) => Interest::BOTH,
+                    (true, true) => Interest::WRITE,
+                    // waiting only on batcher completions: the waker,
+                    // not this socket, is the wake signal
+                    (true, false) => continue,
+                };
+                fds.push((sess.sock.as_raw_fd(), want));
+                tokens.push(tok);
+            }
+
+            let now = Instant::now();
+            let mut timeout = POLL_CAP;
+            if let Some(d) = next_deadline {
+                timeout = timeout.min(d.saturating_duration_since(now));
+            }
+            if let Some(at) = shutdown_at {
+                timeout = timeout.min(at.saturating_duration_since(now));
+            }
+            let events = match self.poller.wait(&fds, Some(timeout)) {
+                Ok(ev) => ev,
                 Err(e) => {
-                    handshake_fault(sock, metrics, Fault::from_error(&e));
-                    return Err(e);
+                    crate::logging::warn(&format!("session driver poll failed: {e}"));
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+
+            // 5. readiness: reads may complete handshakes, submit
+            //    requests, or detach admin sessions; writes drain wbufs
+            let mut woke = false;
+            for ev in events {
+                if ev.slot == 0 {
+                    woke = true;
+                    continue;
+                }
+                let tok = tokens[ev.slot];
+                if ev.readable || ev.hangup {
+                    self.on_readable(tok);
+                }
+                if ev.writable {
+                    if let Some(sess) = self.sessions.get_mut(&tok) {
+                        flush(sess, &self.metrics);
+                    }
+                }
+            }
+            if woke {
+                self.wake_rx.drain();
+            }
+            self.sessions.retain(|_, s| !s.dead);
+        }
+    }
+
+    fn adopt(&mut self, sock: TcpStream, slot: LiveSlot) {
+        let token = self.next_token;
+        self.next_token = self.next_token.wrapping_add(1);
+        self.sessions.insert(
+            token,
+            Session {
+                sock,
+                _slot: slot,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                lane: None,
+                deadline: Instant::now() + self.cfg.handshake_timeout,
+                inflight: 0,
+                rd_done: false,
+                eof: false,
+                eof_answered: false,
+                closing: false,
+                dead: false,
+            },
+        );
+    }
+
+    /// Drain the socket, peel complete frames, dispatch them. The
+    /// session is taken out of the map for the duration so the borrow of
+    /// `self` stays free for lane resolution and admin detach.
+    fn on_readable(&mut self, token: u64) {
+        let mut sess = match self.sessions.remove(&token) {
+            Some(s) => s,
+            None => return,
+        };
+
+        let mut tmp = [0u8; 16384];
+        loop {
+            match sess.sock.read(&mut tmp) {
+                Ok(0) => {
+                    // peer closed its sending half: no more bytes will
+                    // arrive. Frames already buffered still get parsed
+                    // below; `eof` is derived only after that, so a
+                    // client that pipelines and closes loses nothing.
+                    sess.rd_done = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.metrics.bytes_in.add(n as u64);
+                    sess.rbuf.extend_from_slice(&tmp[..n]);
+                    if sess.lane.is_some() {
+                        // idle deadlines renew on traffic; handshake
+                        // deadlines deliberately don't (loris bound)
+                        sess.deadline = Instant::now() + self.cfg.idle_timeout;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    sess.dead = true;
+                    break;
                 }
             }
         }
-        Ok(Message::AdminHello) => {
-            if !cfg.admin_enabled {
-                let msg = "admin surface is disabled on this server".to_string();
-                handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
-                return Err(Error::Protocol(msg));
-            }
-            match cfg.admin_credential {
-                // credential gate on: any peer address may try; the MAC
-                // decides, not the routing table
-                Some(cred) => return Ok(Opening::AdminAuthed(cred)),
-                None => {
-                    let e = Error::AdminAuth(
-                        "admin authentication is not configured on this server \
-                         (no admin credential installed)"
-                            .into(),
-                    );
-                    handshake_fault(sock, metrics, Fault::from_error(&e));
-                    return Err(e);
+
+        let mut detach = None;
+        let mut at = 0usize;
+        // `eof` stops the parse after an explicit EndOfData frame (later
+        // pipelined frames are ignored, as the blocking server did)
+        while !sess.dead && !sess.closing && !sess.eof && detach.is_none() {
+            match try_decode_frame(&sess.rbuf[at..]) {
+                Ok(None) => break,
+                Ok(Some((msg, used))) => {
+                    at += used;
+                    detach = self.handle_frame(token, &mut sess, msg);
+                }
+                Err(e) => {
+                    self.metrics.faults.inc();
+                    let fault = Fault::Generic { msg: e.to_string() };
+                    queue_frame(&mut sess, &Message::Fault { of: FAULT_SESSION, fault });
+                    sess.closing = true;
                 }
             }
         }
-        Ok(
-            msg @ (Message::AdminRegister { .. }
+        if at > 0 {
+            sess.rbuf.drain(..at);
+        }
+
+        if let Some(kind) = detach {
+            self.detach_admin(sess, kind);
+            return;
+        }
+
+        // a probe (silent close before any handshake frame) dies
+        // quietly; an established session whose peer closed without
+        // EndOfData drains in-flight responses and answers EndOfData
+        // best-effort (like the old writer thread did on a hangup)
+        if sess.rd_done && sess.lane.is_none() {
+            sess.dead = true;
+        }
+        if sess.rd_done && sess.lane.is_some() {
+            sess.eof = true;
+        }
+        // the EndOfData barrier also runs in the main loop's bookkeeping
+        // pass; do it eagerly here to save a poll round
+        if !sess.dead {
+            if sess.eof && sess.inflight == 0 && !sess.eof_answered {
+                sess.eof_answered = true;
+                queue_frame(&mut sess, &Message::EndOfData);
+                sess.closing = true;
+            }
+            if sess.wpos < sess.wbuf.len() || sess.closing {
+                flush(&mut sess, &self.metrics);
+            }
+        }
+        if !sess.dead {
+            self.sessions.insert(token, sess);
+        }
+    }
+
+    /// Dispatch one decoded frame. `Some(_)` means the session leaves
+    /// the event loop to become a blocking admin session.
+    fn handle_frame(
+        &mut self,
+        token: u64,
+        sess: &mut Session,
+        msg: Message,
+    ) -> Option<Detach> {
+        if sess.lane.is_some() {
+            self.handle_serving_frame(token, sess, msg);
+            return None;
+        }
+        self.handle_handshake_frame(sess, msg)
+    }
+
+    /// The opening frame: a `Hello` resolves to a session lane (version
+    /// mismatches, unknown models and draining/retired lanes answered
+    /// with their typed `Fault`); an `AdminHello` on a credential-gated
+    /// server detaches into an authenticated admin session (any peer
+    /// address); a bare `Admin*` frame detaches into a legacy admin
+    /// session when no credential is configured (loopback peers only)
+    /// and is refused typed when one is; anything else faults.
+    fn handle_handshake_frame(&mut self, sess: &mut Session, msg: Message) -> Option<Detach> {
+        fn refuse(sess: &mut Session, metrics: &ServingMetrics, fault: Fault) {
+            metrics.faults.inc();
+            queue_frame(sess, &Message::Fault { of: FAULT_SESSION, fault });
+            sess.closing = true;
+        }
+        match msg {
+            Message::Hello { model, epoch, .. } => {
+                match self.registry.resolve(&model, epoch) {
+                    Ok(lane) => {
+                        let hello = Message::Hello {
+                            version: PROTOCOL_VERSION,
+                            model: lane.name().to_string(),
+                            epoch: lane.epoch(),
+                            geometry: lane.geometry(),
+                            kappa: lane.kappa(),
+                            fingerprint: lane.fingerprint().to_string(),
+                            num_batches: 0,
+                            batch_size: self.registry.batcher().max_batch as u32,
+                        };
+                        queue_frame(sess, &hello);
+                        sess.lane = Some(lane);
+                        sess.deadline = Instant::now() + self.cfg.idle_timeout;
+                    }
+                    Err(e) => refuse(sess, &self.metrics, Fault::from_error(&e)),
+                }
+                None
+            }
+            Message::AdminHello => {
+                if !self.cfg.admin_enabled {
+                    let msg = "admin surface is disabled on this server".to_string();
+                    refuse(sess, &self.metrics, Fault::Generic { msg });
+                    return None;
+                }
+                match self.cfg.admin_credential {
+                    // credential gate on: any peer address may try; the
+                    // MAC decides, not the routing table
+                    Some(cred) => Some(Detach::AdminAuthed(cred)),
+                    None => {
+                        let e = Error::AdminAuth(
+                            "admin authentication is not configured on this server \
+                             (no admin credential installed)"
+                                .into(),
+                        );
+                        refuse(sess, &self.metrics, Fault::from_error(&e));
+                        None
+                    }
+                }
+            }
+            first @ (Message::AdminRegister { .. }
             | Message::AdminDrain { .. }
             | Message::AdminRetire { .. }
-            | Message::AdminStatus),
-        ) => {
-            if !cfg.admin_enabled {
-                let msg = "admin surface is disabled on this server".to_string();
-                handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
-                return Err(Error::Protocol(msg));
+            | Message::AdminStatus) => {
+                if !self.cfg.admin_enabled {
+                    let msg = "admin surface is disabled on this server".to_string();
+                    refuse(sess, &self.metrics, Fault::Generic { msg });
+                    return None;
+                }
+                if self.cfg.admin_credential.is_some() {
+                    // downgrade attempt: with a credential installed, a
+                    // bare admin verb is never dispatched — loopback
+                    // included
+                    let e = Error::AdminAuth(
+                        "admin frames must be authenticated on this server \
+                         (open with AdminHello and a credential)"
+                            .into(),
+                    );
+                    refuse(sess, &self.metrics, Fault::from_error(&e));
+                    return None;
+                }
+                let loopback =
+                    sess.sock.peer_addr().map(|a| a.ip().is_loopback()).unwrap_or(false);
+                if !loopback {
+                    let msg =
+                        "admin frames are accepted from loopback peers only".to_string();
+                    refuse(sess, &self.metrics, Fault::Generic { msg });
+                    return None;
+                }
+                Some(Detach::AdminPlain(first))
             }
-            if cfg.admin_credential.is_some() {
-                // downgrade attempt: with a credential installed, a bare
-                // admin verb is never dispatched — loopback included
+            Message::AdminAuthed { .. } => {
+                // sealed frame before any AdminHello: there is no session
+                // nonce to verify against, so this cannot be dispatched
                 let e = Error::AdminAuth(
-                    "admin frames must be authenticated on this server \
-                     (open with AdminHello and a credential)"
+                    "authenticated admin frame before AdminHello (no challenge issued)"
                         .into(),
                 );
-                handshake_fault(sock, metrics, Fault::from_error(&e));
-                return Err(e);
+                refuse(sess, &self.metrics, Fault::from_error(&e));
+                None
             }
-            let loopback =
-                sock.peer_addr().map(|a| a.ip().is_loopback()).unwrap_or(false);
-            if !loopback {
-                let msg = "admin frames are accepted from loopback peers only".to_string();
-                handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
-                return Err(Error::Protocol(msg));
+            other => {
+                let msg = format!("serving sessions open with Hello, got {other:?}");
+                refuse(sess, &self.metrics, Fault::Generic { msg });
+                None
             }
-            return Ok(Opening::Admin(msg));
         }
-        Ok(Message::AdminAuthed { .. }) => {
-            // sealed frame before any AdminHello: there is no session
-            // nonce to verify against, so this cannot be dispatched
-            let e = Error::AdminAuth(
-                "authenticated admin frame before AdminHello (no challenge issued)"
-                    .into(),
-            );
-            handshake_fault(sock, metrics, Fault::from_error(&e));
-            return Err(e);
-        }
-        Ok(other) => {
-            let msg = format!("serving sessions open with Hello, got {other:?}");
-            handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
-            return Err(Error::Protocol(msg));
-        }
-        // silent close before any frame: a probe, not a protocol error
-        Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-            return Ok(Opening::Probe)
-        }
-        Err(Error::Io(e))
-            if e.kind() == std::io::ErrorKind::WouldBlock
-                || e.kind() == std::io::ErrorKind::TimedOut =>
-        {
-            let msg = format!(
-                "handshake timed out after {timeout:?} (v{PROTOCOL_VERSION} clients \
-                 send Hello first)"
-            );
-            handshake_fault(sock, metrics, Fault::Generic { msg: msg.clone() });
-            return Err(Error::Protocol(msg));
-        }
-        Err(e) => {
-            // includes Error::Version: tell the peer why, typed
-            handshake_fault(sock, metrics, Fault::Generic { msg: e.to_string() });
-            return Err(e);
-        }
-    };
-    let hello = Message::Hello {
-        version: PROTOCOL_VERSION,
-        model: lane.name().to_string(),
-        epoch: lane.epoch(),
-        geometry: lane.geometry(),
-        kappa: lane.kappa(),
-        fingerprint: lane.fingerprint().to_string(),
-        num_batches: 0,
-        batch_size: registry.batcher().max_batch as u32,
-    };
-    let n = write_message(sock, &hello)?;
-    metrics.bytes_out.add(n as u64);
-    Ok(Opening::Lane(lane))
-}
+    }
 
-/// One client session: handshake, then reader (this thread) + writer
-/// thread linked by a message queue. In-flight batcher completions hold
-/// queue senders, so the writer drains every pending response before
-/// `EndOfData`.
-fn run_session(
-    mut sock: TcpStream,
-    registry: &Arc<ModelRegistry>,
-    metrics: &Arc<ServingMetrics>,
-    cfg: &ServeConfig,
-) -> Result<()> {
-    let session_lane = match handshake(&mut sock, registry, metrics, cfg)? {
-        Opening::Lane(lane) => lane,
-        Opening::Admin(first) => {
-            sock.set_read_timeout(Some(cfg.idle_timeout)).ok();
-            return super::admin::run_admin_session(sock, first, registry);
-        }
-        Opening::AdminAuthed(cred) => {
-            sock.set_read_timeout(Some(cfg.idle_timeout)).ok();
-            return super::admin::run_authed_admin_session(sock, registry, &cred);
-        }
-        Opening::Probe => return Ok(()),
-    };
-    // the fixed worker pool must not be held hostage by an abandoned
-    // connection: an idle session (no frame at all) is eventually shed
-    sock.set_read_timeout(Some(cfg.idle_timeout)).ok();
-
-    let mut writer_sock = sock.try_clone()?;
-    let (out_tx, out_rx) = mpsc::channel::<Message>();
-    let writer_metrics = metrics.clone();
-    let writer = std::thread::Builder::new()
-        .name("mole-session-writer".into())
-        .spawn(move || {
-            for msg in out_rx {
-                match write_message(&mut writer_sock, &msg) {
-                    Ok(n) => writer_metrics.bytes_out.add(n as u64),
-                    Err(_) => return, // peer gone; reader will notice too
-                }
-            }
-            // all senders dropped ⇒ every in-flight response is written
-            let _ = write_message(&mut writer_sock, &Message::EndOfData);
-            let _ = writer_sock.shutdown(Shutdown::Write);
-        })
-        .map_err(Error::Io)?;
-
-    let mut reader = CountingReader { inner: sock, metrics: metrics.clone() };
-    let result = loop {
-        match read_message(&mut reader) {
-            Ok(Message::InferRequest { id, model, epoch, row }) => {
-                metrics.requests.inc();
+    /// One frame on an established serving session.
+    fn handle_serving_frame(&mut self, token: u64, sess: &mut Session, msg: Message) {
+        match msg {
+            Message::InferRequest { id, model, epoch, row } => {
+                self.metrics.requests.inc();
+                let session_lane = sess.lane.as_ref().expect("established session").clone();
                 // "" + latest ⇒ the lane negotiated at handshake —
                 // **revalidated per request**: a drained/retired session
                 // lane answers its typed lifecycle fault (with the
@@ -465,17 +984,18 @@ fn run_session(
                 // visible to pipelined sessions, not just new ones.
                 // Anything else re-resolves per request. Resolve + submit
                 // fold into one Result: any Err faults this request only,
-                // never the session (row-length validation happens inside
-                // the lane's batcher `enqueue`, the lifecycle check
-                // inside the lane's state-checked `submit_with`).
-                let tx = out_tx.clone();
-                let m = metrics.clone();
+                // never the session (row-length validation and the
+                // bounded-queue admission check happen inside the lane's
+                // batcher `enqueue`, the lifecycle check inside the
+                // lane's state-checked `submit_with`).
+                let shared = self.shared.clone();
+                let m = self.metrics.clone();
                 let outcome = if model.is_empty() && epoch == EPOCH_LATEST {
-                    Ok(session_lane.clone())
+                    Ok(session_lane)
                 } else if model.is_empty() {
-                    registry.resolve(session_lane.name(), epoch)
+                    self.registry.resolve(session_lane.name(), epoch)
                 } else {
-                    registry.resolve(&model, epoch)
+                    self.registry.resolve(&model, epoch)
                 }
                 .and_then(|lane| {
                     lane.submit_with(row.data(), move |result| {
@@ -494,63 +1014,80 @@ fn run_session(
                                 }
                             }
                         };
-                        let _ = tx.send(msg);
+                        shared.inbox.lock().unwrap().completions.push((token, msg));
+                        shared.waker.wake();
                     })
                 });
-                if let Err(e) = outcome {
-                    metrics.faults.inc();
-                    let fault = match e {
-                        // lifecycle refusals keep their successor info
-                        Error::Draining { .. } | Error::Retired { .. } => {
-                            Fault::from_error(&e)
-                        }
-                        other => Fault::Generic { msg: format!("request {id}: {other}") },
-                    };
-                    let _ = out_tx.send(Message::Fault { of: id, fault });
+                match outcome {
+                    Ok(()) => sess.inflight += 1,
+                    Err(e) => {
+                        self.metrics.faults.inc();
+                        let fault = match e {
+                            // lifecycle and overload refusals keep their
+                            // typed payload (successor epoch / backoff
+                            // hint); a shed request faults, the session
+                            // lives on
+                            Error::Draining { .. }
+                            | Error::Retired { .. }
+                            | Error::Overloaded { .. } => Fault::from_error(&e),
+                            other => {
+                                Fault::Generic { msg: format!("request {id}: {other}") }
+                            }
+                        };
+                        queue_frame(sess, &Message::Fault { of: id, fault });
+                    }
                 }
             }
-            Ok(Message::EndOfData) => break Ok(()),
-            Ok(other) => {
-                metrics.faults.inc();
-                let _ = out_tx.send(Message::Fault {
-                    of: FAULT_SESSION,
-                    fault: Fault::Generic {
-                        msg: format!("serving session got unexpected {other:?}"),
-                    },
-                });
-                break Err(Error::Protocol(format!(
-                    "unexpected message in serving session: {other:?}"
-                )));
+            Message::EndOfData => {
+                sess.eof = true;
+                sess.rd_done = true;
             }
-            // peer hung up without EndOfData: close quietly
-            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => break Ok(()),
-            // idle timeout: flush what's in flight and shed the session
-            Err(Error::Io(e))
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                let _ = out_tx.send(Message::Fault {
-                    of: FAULT_SESSION,
-                    fault: Fault::Generic {
-                        msg: format!("session idle for {:?}, closing", cfg.idle_timeout),
+            other => {
+                self.metrics.faults.inc();
+                queue_frame(
+                    sess,
+                    &Message::Fault {
+                        of: FAULT_SESSION,
+                        fault: Fault::Generic {
+                            msg: format!("serving session got unexpected {other:?}"),
+                        },
                     },
-                });
-                break Err(Error::Protocol("session idle timeout".into()));
-            }
-            Err(e) => {
-                metrics.faults.inc();
-                let _ = out_tx.send(Message::Fault {
-                    of: FAULT_SESSION,
-                    fault: Fault::Generic { msg: e.to_string() },
-                });
-                break Err(e);
+                );
+                sess.closing = true;
             }
         }
-    };
+    }
 
-    // Drop our sender; in-flight completions still hold clones, so the
-    // writer exits only after the last response frame is on the wire.
-    drop(out_tx);
-    let _ = writer.join();
-    result
+    /// Move a connection off the event loop onto a dedicated blocking
+    /// thread running the admin session loops from [`super::admin`]. The
+    /// session's live-budget slot rides along, so admin sessions count
+    /// against `max_sessions` for their whole lifetime.
+    fn detach_admin(&mut self, sess: Session, kind: Detach) {
+        let Session { sock, _slot: slot, rbuf, .. } = sess;
+        if sock.set_nonblocking(false).is_err() {
+            return; // connection unusable; slot freed by drop
+        }
+        sock.set_read_timeout(Some(self.cfg.idle_timeout)).ok();
+        let stream = PrefixedStream { pre: std::io::Cursor::new(rbuf), sock };
+        let registry = self.registry.clone();
+        let spawned =
+            std::thread::Builder::new().name("mole-admin-session".into()).spawn(move || {
+                let _slot = slot;
+                let result = match kind {
+                    Detach::AdminPlain(first) => {
+                        super::admin::run_admin_session(stream, first, &registry)
+                    }
+                    Detach::AdminAuthed(cred) => {
+                        super::admin::run_authed_admin_session(stream, &registry, &cred)
+                    }
+                };
+                if let Err(e) = result {
+                    crate::logging::warn(&format!("admin session ended with error: {e}"));
+                }
+            });
+        match spawned {
+            Ok(handle) => self.admin_threads.lock().unwrap().push(handle),
+            Err(e) => crate::logging::warn(&format!("admin session spawn failed: {e}")),
+        }
+    }
 }

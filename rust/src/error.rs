@@ -36,6 +36,14 @@ pub enum Error {
     /// [`Error::Draining`].
     Retired { model: String, epoch: u32, successor: u32 },
 
+    /// The serving plane shed this request (or connection) under load:
+    /// the session budget, pending-accept budget, or a lane's bounded
+    /// submit queue was full. Carries the server's backoff hint so
+    /// clients can retry politely instead of hammering a saturated
+    /// endpoint. Servers answer this with the typed `Fault::Overloaded`
+    /// — never by silently parking the request.
+    Overloaded { retry_after_ms: u64 },
+
     /// Admin-plane authentication failure: forged/absent MAC, replayed
     /// or reordered frame counter, unauthenticated admin frame on a
     /// credential-gated server, or an authenticated handshake against a
@@ -83,6 +91,10 @@ impl std::fmt::Display for Error {
                 write!(f, "model {model:?} epoch {epoch} is retired; ")?;
                 successor_hint(f, *successor)
             }
+            Error::Overloaded { retry_after_ms } => write!(
+                f,
+                "server overloaded: request shed, retry after {retry_after_ms} ms"
+            ),
             Error::AdminAuth(m) => write!(f, "admin auth error: {m}"),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
@@ -157,6 +169,13 @@ mod tests {
         let e = Error::Retired { model: "alpha".into(), epoch: 2, successor: u32::MAX };
         assert!(e.to_string().contains("retired"), "{e}");
         assert!(e.to_string().contains("latest epoch"), "{e}");
+    }
+
+    #[test]
+    fn overloaded_display_names_the_backoff() {
+        let e = Error::Overloaded { retry_after_ms: 25 };
+        assert!(e.to_string().contains("overloaded"), "{e}");
+        assert!(e.to_string().contains("25 ms"), "{e}");
     }
 
     #[test]

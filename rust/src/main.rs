@@ -7,16 +7,25 @@
 //! * `provider --listen ADDR [--batches N]` — run a data-provider node
 //! * `developer --connect ADDR` — run a developer node (train on stream)
 //! * `serve [--listen ADDR] [--model NAME,NAME…] [--max-batch N]
-//!   [--timeout-ms T] [--workers W] [--fixed-window] [--max-requests N]
-//!   [--admin-credential FILE]` — concurrent multi-tenant TCP inference
-//!   server: every
+//!   [--timeout-ms T] [--workers W] [--max-sessions N] [--max-pending N]
+//!   [--fixed-window] [--max-requests N] [--admin-credential FILE]` —
+//!   concurrent multi-tenant TCP inference server: every
 //!   `[serving.models.*]` config entry (or the `--model` subset) becomes
-//!   a registry lane over the adaptive micro-batcher (`--max-requests`
-//!   exits after N answered requests; for smoke tests)
+//!   a registry lane over the adaptive micro-batcher. Sessions run on
+//!   `--workers` evented driver shards; past `--max-sessions` live /
+//!   `--max-pending` handshaking sessions new connects are answered with
+//!   a typed overload fault instead of queueing (`--max-requests` exits
+//!   after N answered requests; for smoke tests)
 //! * `loadgen [--connect ADDR] [--connections C] [--requests R]
-//!   [--pipeline P] [--model NAME] [--epoch E]` — multi-connection
-//!   serving load driver; prints throughput + latency percentiles, exits
-//!   nonzero on any error
+//!   [--pipeline P] [--rate RPS] [--model NAME] [--epoch E]` —
+//!   multi-connection serving load driver. `--rate 0` (default) is
+//!   closed-loop; `--rate R` switches to open loop: requests follow a
+//!   fixed arrival schedule and a second "corrected" percentile set is
+//!   measured from each request's *intended* send time, so queueing
+//!   delay the closed loop would hide (coordinated omission) shows up.
+//!   Prints throughput + latency percentiles, honors the server's
+//!   `retry_after_ms` backoff hints on overload, exits nonzero on any
+//!   error
 //! * `keygen --vault FILE [--kappa K] [--seed S]
 //!   [--credential-out FILE]` — generate a root key bundle, store it in
 //!   a vault file, and print (optionally save) the vault-derived admin
@@ -225,6 +234,8 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
         batcher.adaptive = false;
     }
     let workers = args.get_usize("workers", cfg.serve_workers)?;
+    let max_sessions = args.get_usize("max-sessions", cfg.max_sessions)?;
+    let max_pending = args.get_usize("max-pending", cfg.max_pending)?;
     let max_requests = args.get_u64("max-requests", 0)?;
     // --model alpha,beta restricts the registry to a subset of the
     // configured [serving.models.*] entries
@@ -274,13 +285,16 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
         ServeConfig {
             addr: addr.clone(),
             session_workers: workers,
+            max_sessions,
+            max_pending,
             admin_enabled,
             admin_credential,
             ..ServeConfig::default()
         },
     )?;
     println!(
-        "serving {} on {} (workers={workers}, max_batch={}, window={}..{}us{}, admin {admin_mode})",
+        "serving {} on {} (drivers={workers}, max_sessions={max_sessions}, max_pending={max_pending}, \
+         max_batch={}, window={}..{}us{}, admin {admin_mode})",
         labels.join(", "),
         server.local_addr(),
         batcher.max_batch,
@@ -337,6 +351,7 @@ fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
         connections: args.get_usize("connections", 8)?,
         requests_per_conn: args.get_usize("requests", 64)?,
         pipeline: args.get_usize("pipeline", 4)?,
+        rate: args.get_f64("rate", 0.0)?,
         seed: args.get_u64("seed", cfg.data_seed)?,
         model: args.get_or("model", ""),
         epoch: match args.get("epoch") {
@@ -347,10 +362,14 @@ fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
         },
     };
     println!(
-        "loadgen: {} connections x {} requests (pipeline {}) -> {} (model {:?}{})",
+        "loadgen: {} connections x {} requests ({}) -> {} (model {:?}{})",
         lg.connections,
         lg.requests_per_conn,
-        lg.pipeline,
+        if lg.rate > 0.0 {
+            format!("open loop @ {:.0} req/s", lg.rate)
+        } else {
+            format!("closed loop, pipeline {}", lg.pipeline)
+        },
         lg.addr,
         if lg.model.is_empty() { "<default>" } else { lg.model.as_str() },
         if lg.epoch == EPOCH_LATEST {

@@ -109,6 +109,16 @@ pub struct ServingMetrics {
     pub connections: Counter,
     /// Per-request protocol/execution failures surfaced to clients.
     pub faults: Counter,
+    /// Requests shed typed (`Fault::Overloaded`) by a lane's bounded
+    /// submit queue — the batcher's admission control.
+    pub overloaded: Counter,
+    /// Connections refused at accept because the session or
+    /// pending-accept budget was full (each one got a best-effort
+    /// session-scoped `Fault::Overloaded` before close).
+    pub accept_shed: Counter,
+    /// Sessions currently open (serving + admin), i.e. the live side of
+    /// [`ServingMetrics::connections`].
+    pub sessions: Gauge,
     /// The batcher's current hold window in µs (adaptive mode moves it).
     pub window_us: Gauge,
 }
@@ -138,12 +148,16 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         let (p50, p95, p99) = self.total_latency.summary().unwrap_or((0, 0, 0));
         format!(
-            "conns={} requests={} responses={} faults={} batches={} mean_batch={:.2} \
+            "conns={} live={} requests={} responses={} faults={} shed={} \
+             accept_shed={} batches={} mean_batch={:.2} \
              pad={:.1}% latency_us p50={} p95={} p99={}",
             self.connections.get(),
+            self.sessions.get(),
             self.requests.get(),
             self.responses.get(),
             self.faults.get(),
+            self.overloaded.get(),
+            self.accept_shed.get(),
             self.batches.get(),
             self.mean_batch_size(),
             self.padding_fraction() * 100.0,
@@ -214,6 +228,13 @@ mod tests {
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
         assert!((m.padding_fraction() - 0.25).abs() < 1e-9);
         m.total_latency.record_micros(100);
-        assert!(m.report().contains("mean_batch=6.00"));
+        m.overloaded.inc();
+        m.accept_shed.add(2);
+        m.sessions.set(3);
+        let r = m.report();
+        assert!(r.contains("mean_batch=6.00"), "{r}");
+        assert!(r.contains("shed=1"), "{r}");
+        assert!(r.contains("accept_shed=2"), "{r}");
+        assert!(r.contains("live=3"), "{r}");
     }
 }

@@ -1,0 +1,342 @@
+//! Overload end-to-end tests: the serving plane under more demand than
+//! its budgets admit. The invariant under test is the PR's headline —
+//! **overload is answered, never parked**: every refused connection and
+//! every refused request comes back as a typed `Overloaded` fault with
+//! an actionable `retry_after_ms`, nothing blocks indefinitely, and the
+//! plane recovers by itself once the backlog drains.
+//!
+//! The final test is a budget-scaled soak: `MOLE_SOAK_CONNS` sets the
+//! connection count (default 64 so CI stays fast; run with
+//! `MOLE_SOAK_CONNS=10000` for the full event-loop scaling check). It
+//! asserts the two non-negotiables under load: zero lost responses and
+//! logits bitwise identical to single-row inference.
+
+use mole::coordinator::batcher::BatcherConfig;
+use mole::coordinator::client::MoleClient;
+use mole::coordinator::loadgen::{run as run_loadgen, LoadgenConfig};
+use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry, RegisteredModel};
+use mole::coordinator::server::{ServeConfig, Server};
+use mole::coordinator::{Fault, EPOCH_LATEST};
+use mole::keys::KeyBundle;
+use mole::manifest::Manifest;
+use mole::rng::Rng;
+use mole::runtime::{Arg, SharedEngine};
+use mole::tensor::Tensor;
+use mole::Error;
+use mole::Geometry;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+const KAPPA: usize = 16;
+const OMEGA_SEED: u64 = 31337;
+
+fn manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).unwrap()
+}
+
+fn omega_entry(m: &Manifest) -> RegisteredModel {
+    let keys = KeyBundle::generate(Geometry::SMALL, KAPPA, OMEGA_SEED).unwrap();
+    demo_entry_from_keys(m, "omega", &keys, OMEGA_SEED).unwrap()
+}
+
+/// One-model server with explicit serving + batcher budgets — the tests
+/// here shrink them to force deterministic sheds.
+fn start_server(serve: ServeConfig, batcher: BatcherConfig) -> (Server, SharedEngine) {
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let registry = ModelRegistry::new(engine.clone(), batcher);
+    registry.register(omega_entry(&m)).unwrap();
+    let server = Server::bind(registry, serve).unwrap();
+    (server, engine)
+}
+
+/// Reference logits: the same row through the batch-1 artifact directly
+/// on the shared engine (what every served response must match bitwise).
+fn single_row_logits(engine: &SharedEngine, entry: &RegisteredModel, row: &[f32]) -> Vec<f32> {
+    let mut args: Vec<Arg> = vec![
+        Arg::T(entry.layer.matrix().clone()),
+        Arg::T(Tensor::new(&[entry.layer.bias().len()], entry.layer.bias().to_vec()).unwrap()),
+    ];
+    for p in &entry.params {
+        args.push(Arg::T(p.clone()));
+    }
+    args.push(Arg::T(Tensor::new(&[1, row.len()], row.to_vec()).unwrap()));
+    let out = engine.exec("infer_aug_small_b1", &args).unwrap();
+    out[0].data().to_vec()
+}
+
+fn rows(seed: u64, n: usize, d_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0x0E2E ^ seed);
+    (0..n).map(|_| rng.normal_vec(d_len, 0.5)).collect()
+}
+
+/// Session-budget sheds at accept: with `max_sessions = 2` the third
+/// concurrent connection is refused **typed** — `Error::Overloaded` with
+/// a sane backoff hint, not a hang, not a connection reset — every
+/// single time; and once a session closes, admission reopens without any
+/// operator action.
+#[test]
+fn accept_budget_sheds_typed_and_recovers() {
+    let (server, _engine) = start_server(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 2,
+            max_sessions: 2,
+            ..ServeConfig::default()
+        },
+        BatcherConfig::default(),
+    );
+    let addr = server.local_addr();
+
+    let c1 = MoleClient::connect(addr).unwrap();
+    let mut c2 = MoleClient::connect(addr).unwrap();
+
+    // budget full: every further connect is a typed shed
+    for attempt in 0..3 {
+        match MoleClient::connect(addr) {
+            Err(Error::Overloaded { retry_after_ms }) => {
+                assert!(
+                    (1..=1000).contains(&retry_after_ms),
+                    "attempt {attempt}: hint {retry_after_ms} ms not actionable"
+                );
+            }
+            Err(other) => panic!("attempt {attempt}: expected typed Overloaded, got {other}"),
+            Ok(_) => panic!("attempt {attempt}: connect admitted past max_sessions=2"),
+        }
+    }
+    assert_eq!(server.metrics().accept_shed.get(), 3);
+    // a shed is flow control, not a protocol fault
+    assert_eq!(server.metrics().faults.get(), 0);
+
+    // free one slot; the server notices the close on its own and reopens
+    // admission — poll (bounded) rather than trusting a fixed sleep
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut readmitted = loop {
+        match MoleClient::connect(addr) {
+            Ok(c) => break c,
+            Err(Error::Overloaded { .. }) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => panic!("admission never reopened after a session closed: {e}"),
+        }
+    };
+
+    // both admitted sessions actually serve
+    let d = c2.d_len();
+    let row = rows(1, 1, d).remove(0);
+    assert!(!c2.infer(&row).unwrap().is_empty());
+    assert!(!readmitted.infer(&row).unwrap().is_empty());
+    c2.finish().unwrap();
+    readmitted.finish().unwrap();
+    server.stop();
+}
+
+/// Lane-backlog sheds are **request**-scoped: with `queue_bound = 1` and
+/// the single queue slot pinned by a stalled in-process request, a TCP
+/// request is answered `Fault::Overloaded` (correct id, sane hint) —
+/// and the same session keeps serving once the backlog drains. The stall
+/// is a completion callback blocked on a channel, so the shed is
+/// deterministic, not a timing accident.
+#[test]
+fn lane_backlog_sheds_requests_typed_not_sessions() {
+    let (server, _engine) = start_server(
+        ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+        BatcherConfig {
+            max_batch: 4,
+            timeout: Duration::from_millis(2),
+            queue_bound: 1,
+            ..BatcherConfig::default()
+        },
+    );
+    let mut client = MoleClient::connect(server.local_addr()).unwrap();
+    let d = client.d_len();
+    let test_rows = rows(2, 3, d);
+
+    // sanity: the lane serves when idle
+    assert!(!client.infer(&test_rows[0]).unwrap().is_empty());
+
+    // pin the queue slot: the completion blocks on `gate`, holding the
+    // in-flight gauge at 1 (== queue_bound) until released
+    let lane = server.registry().resolve("omega", EPOCH_LATEST).unwrap();
+    let handle = lane.handle().clone();
+    // the sanity request's in-flight guard drops on the worker thread a
+    // moment after the client sees its response — settle first
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while handle.in_flight() > 0 {
+        assert!(Instant::now() < deadline, "sanity request never left the gauge");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    handle
+        .submit_with(&test_rows[1], move |_| {
+            let _ = gate_rx.recv();
+        })
+        .unwrap();
+    assert_eq!(handle.in_flight(), 1);
+
+    // the TCP request is shed typed, tagged with its own id
+    client.send_request(42, &test_rows[2]).unwrap();
+    let (id, outcome) = client.recv_outcome().unwrap();
+    assert_eq!(id, 42, "shed must be attributed to the request that hit the bound");
+    match outcome {
+        Err(Fault::Overloaded { retry_after_ms }) => {
+            assert!((1..=1000).contains(&retry_after_ms), "hint {retry_after_ms} ms");
+        }
+        other => panic!("expected Fault::Overloaded, got {other:?}"),
+    }
+    assert_eq!(handle.metrics.overloaded.get(), 1);
+
+    // drain the backlog; admission reopens on the SAME session — the
+    // shed faulted one request, not the connection
+    gate_tx.send(()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while handle.in_flight() > 0 {
+        assert!(Instant::now() < deadline, "stalled request never drained");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(!client.infer(&test_rows[2]).unwrap().is_empty());
+    client.finish().unwrap();
+    server.stop();
+}
+
+/// Open-loop loadgen (satellite 1): with a fixed arrival rate the driver
+/// measures two latency distributions — raw (actual send → response) and
+/// corrected (**intended** send → response). Corrected must dominate raw
+/// (a send can only happen at or after its schedule slot), and a
+/// closed-loop run must report the two as identical, because there the
+/// intended time IS the send time.
+#[test]
+fn open_loop_reports_raw_and_corrected_latency() {
+    let (server, _engine) = start_server(
+        ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
+    );
+    let addr = server.local_addr().to_string();
+    let base = LoadgenConfig {
+        addr,
+        connections: 2,
+        requests_per_conn: 16,
+        pipeline: 4,
+        rate: 0.0,
+        seed: 5,
+        model: "omega".to_string(),
+        epoch: EPOCH_LATEST,
+    };
+
+    // closed loop: corrected == raw sample for sample
+    let closed = run_loadgen(&base).unwrap();
+    assert_eq!(closed.ok, 32);
+    assert_eq!(closed.errors, 0);
+    assert_eq!(closed.latency.count(), closed.corrected.count());
+    assert_eq!(closed.latency.summary(), closed.corrected.summary());
+    assert_eq!(closed.offered_rps, 0.0);
+
+    // open loop at 400 req/s across 2 connections
+    let open = run_loadgen(&LoadgenConfig { rate: 400.0, ..base }).unwrap();
+    assert_eq!(open.ok, 32);
+    assert_eq!(open.errors, 0);
+    assert_eq!(open.corrected.count(), 32, "every request needs a corrected sample");
+    assert_eq!(open.offered_rps, 400.0);
+    let (raw_p50, _, raw_p99) = open.latency.summary().unwrap();
+    let (cor_p50, _, cor_p99) = open.corrected.summary().unwrap();
+    assert!(
+        cor_p50 >= raw_p50 && cor_p99 >= raw_p99,
+        "corrected ({cor_p50}/{cor_p99}us) must dominate raw ({raw_p50}/{raw_p99}us): \
+         intended send times never come after actual ones"
+    );
+    let line = open.report();
+    assert!(line.contains("corrected_us"), "{line}");
+    assert!(line.contains("offered=400"), "{line}");
+    server.stop();
+}
+
+/// Budget-scaled soak: `MOLE_SOAK_CONNS` concurrent sessions (default 64
+/// for CI; documented full run 10 000), each pipelining 8 requests.
+/// Asserts the serving plane's two hard guarantees hold at scale: zero
+/// lost responses (every request answered exactly once) and logits
+/// bitwise identical to single-row inference on the same model.
+#[test]
+fn soak_zero_lost_responses_bitwise_identical() {
+    let conns: usize = std::env::var("MOLE_SOAK_CONNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    const PER_CONN: usize = 8;
+    // cap simultaneously-live client threads so a 10k run doesn't need
+    // 10k OS threads on the *client* side (the server is evented and
+    // holds them all; the cap only staggers arrivals)
+    let wave = conns.min(128);
+
+    let (server, engine) = start_server(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 8,
+            max_sessions: conns + 16,
+            max_pending: 256,
+            ..ServeConfig::default()
+        },
+        BatcherConfig {
+            max_batch: 32,
+            timeout: Duration::from_millis(2),
+            adaptive: true,
+            ..BatcherConfig::default()
+        },
+    );
+    let addr = server.local_addr();
+    let m = manifest();
+    let d_len = m.geometry("small").unwrap().d_len();
+    // every connection sends the same row set so the bitwise reference
+    // is computed once, not conns× (soak cost lives on the wire)
+    let shared_rows = std::sync::Arc::new(rows(0x50AC, PER_CONN, d_len));
+
+    let mut answered = 0u64;
+    let mut all: Vec<Vec<Vec<f32>>> = Vec::with_capacity(conns);
+    let mut remaining = conns;
+    while remaining > 0 {
+        let batch = remaining.min(wave);
+        remaining -= batch;
+        let mut threads = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let rows = shared_rows.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut client = MoleClient::connect(addr).unwrap();
+                let logits = client.infer_batch(&rows).unwrap();
+                client.finish().unwrap();
+                logits
+            }));
+        }
+        for t in threads {
+            let logits = t.join().unwrap();
+            answered += logits.len() as u64;
+            all.push(logits);
+        }
+    }
+
+    // zero lost responses: every request answered, none double-counted
+    let total = (conns * PER_CONN) as u64;
+    assert_eq!(answered, total, "lost responses under soak");
+    assert_eq!(server.metrics().responses.get(), total);
+    assert_eq!(server.metrics().connections.get(), conns as u64);
+    assert_eq!(server.metrics().faults.get(), 0);
+
+    // bitwise identity vs single-row inference
+    let entry = omega_entry(&m);
+    let reference: Vec<Vec<u32>> = shared_rows
+        .iter()
+        .map(|r| single_row_logits(&engine, &entry, r).iter().map(|v| v.to_bits()).collect())
+        .collect();
+    for (c, logits) in all.iter().enumerate() {
+        for (i, got) in logits.iter().enumerate() {
+            let bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits, reference[i], "conn {c} row {i}: batched logits drifted");
+        }
+    }
+    server.stop();
+}

@@ -240,7 +240,7 @@ fn unknown_models_and_old_peers_get_typed_faults() {
     match read_message(&mut sock).unwrap() {
         Message::Fault { fault: Fault::Generic { msg }, .. } => {
             assert!(msg.contains("version mismatch"), "{msg}");
-            assert!(msg.contains("v3") && msg.contains("v5"), "{msg}");
+            assert!(msg.contains("v3") && msg.contains("v6"), "{msg}");
         }
         other => panic!("expected a generic Fault frame, got {other:?}"),
     }
@@ -306,6 +306,7 @@ fn loadgen_drives_the_server_cleanly() {
         connections: 4,
         requests_per_conn: 16,
         pipeline: 4,
+        rate: 0.0,
         seed: 9,
         model: "beta".to_string(),
         epoch: 1,
@@ -330,6 +331,7 @@ fn loadgen_drives_the_server_cleanly() {
         connections: 1,
         requests_per_conn: 4,
         pipeline: 1,
+        rate: 0.0,
         seed: 9,
         model: "beta".to_string(),
         epoch: 0,

@@ -39,8 +39,21 @@ OPTIONAL_NUM = [
     "speedup_vs_ref",
     "speedup_vs_unbatched",
     "mean_batch",
+    # open-loop loadgen rows (serving bench): coordinated-omission-
+    # corrected percentiles, the configured arrival rate, and the count
+    # of typed Overloaded sheds absorbed by retries (0 for closed loop)
+    "corrected_p50_us",
+    "corrected_p95_us",
+    "corrected_p99_us",
+    "offered_rps",
+    "shed",
+    "connect_shed",
 ]
 OPTIONAL_INT = ["trials", "connections"]
+
+# corrected percentiles travel as a set: a row reporting one must report
+# all three (a partial set means the bench refactor dropped a field)
+CORRECTED_SET = ("corrected_p50_us", "corrected_p95_us", "corrected_p99_us")
 
 
 def check(path):
@@ -81,6 +94,14 @@ def check(path):
             if key in row:
                 want(path, is_num(row[key]),
                      f"{where}.{key} must be numeric (got {row[key]!r})")
+        present = [k for k in CORRECTED_SET if k in row]
+        want(path, len(present) in (0, len(CORRECTED_SET)),
+             f"{where}: corrected percentiles are all-or-nothing, "
+             f"got only {present}")
+        for key in ("offered_rps", "shed", "connect_shed"):
+            if key in row:
+                want(path, row[key] >= 0,
+                     f"{where}.{key} must be >= 0 (got {row[key]!r})")
         for key in OPTIONAL_INT:
             if key in row:
                 want(path, is_int(row[key]) and row[key] >= 1,
