@@ -70,6 +70,19 @@ fn main() {
         });
         println!("  kappa={kappa:<3} q={:<5} build {}", key.q(), fmt_dur(r.mean));
     }
+    println!("\n=== transmission overhead over the delivery plane (§4.3, 5.12%) ===");
+    let rep = mole::overhead::transmission::TransmissionReport::analyze(
+        mole::overhead::transmission::default_probe_bytes(),
+        64 * 1024,
+        4,
+    )
+    .unwrap();
+    rep.print();
+    match rep.write() {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_overhead.json: {e}"),
+    }
+
     println!("\ndepth-independence: none of the numbers above involve network depth —");
     println!("the paper's central overhead claim, visible directly in eq. 16/17.");
 }

@@ -24,7 +24,19 @@
 //! [`MoleClient::connect_provider`] reads the provider's `Hello`,
 //! [`MoleClient::negotiate_aug_conv`] ships the first layer and receives
 //! C^ac, and [`MoleClient::stream_training`] drains the morphed-batch
-//! stream. The accepting side is [`ProviderSession`].
+//! stream — since v7 as a 1-stripe, non-resumable **delivery fetch**
+//! (manifest + hash-verified chunks, one per batch;
+//! [`super::delivery`]). The accepting side is [`ProviderSession`],
+//! whose [`ProviderSession::serve_dataset`] answers the pull.
+//!
+//! ## Bulk delivery flow (protocol v7)
+//!
+//! [`DeliveryClient`] speaks the standalone delivery plane:
+//! `DatasetHello` handshake, cached manifest, explicit
+//! [`DeliveryClient::fetch`] chunk ranges with per-chunk SHA-256
+//! verification and automatic single retry, `DeliveryDone` close — byte
+//! counted both ways. Striping/resume orchestration lives in
+//! [`super::delivery::pull`].
 //!
 //! Version negotiation: decoding a mismatched `Hello` yields
 //! [`Error::Version`]; both endpoints answer it with a best-effort
@@ -38,6 +50,7 @@
 //! **not** retry automatically (unlike lifecycle redirects) — backoff
 //! policy belongs to the caller, e.g. [`super::loadgen`].
 
+use super::delivery::{self, ChunkStore, DatasetManifest};
 use super::protocol::{
     read_message, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
     PROTOCOL_VERSION,
@@ -51,15 +64,22 @@ use std::net::{TcpStream, ToSocketAddrs};
 
 /// Byte-counting transport wrapper: `bytes_in`/`bytes_out` reflect real
 /// wire traffic (the §4.3 5.12%-overhead story is about these bytes).
-struct CountingStream<S> {
+/// `pub(crate)` so the delivery plane's [`super::delivery::pull`] can
+/// report honest per-connection wire totals with the same counter.
+pub(crate) struct CountingStream<S> {
     inner: S,
     bytes_in: u64,
     bytes_out: u64,
 }
 
 impl<S> CountingStream<S> {
-    fn new(inner: S) -> Self {
+    pub(crate) fn new(inner: S) -> Self {
         Self { inner, bytes_in: 0, bytes_out: 0 }
+    }
+
+    /// `(bytes_in, bytes_out)` so far.
+    pub(crate) fn counts(&self) -> (u64, u64) {
+        (self.bytes_in, self.bytes_out)
     }
 }
 
@@ -586,7 +606,11 @@ impl<S: Read + Write> MoleClient<S> {
         }
     }
 
-    /// Next morphed training batch, or `None` at `EndOfData`.
+    /// Next morphed training batch, or `None` at `EndOfData` — the
+    /// **legacy** (pre-v7) one-frame-at-a-time path, kept for peers that
+    /// push raw `MorphedBatch` frames ([`ProviderSession::send_batch`]).
+    /// New code should use [`MoleClient::stream_training`], which rides
+    /// the hash-verified delivery plane.
     pub fn next_batch(&mut self) -> Result<Option<(u64, Tensor, Vec<i32>)>> {
         match read_message(&mut self.stream)? {
             Message::MorphedBatch { id, rows, labels } => Ok(Some((id, rows, labels))),
@@ -601,16 +625,117 @@ impl<S: Read + Write> MoleClient<S> {
     /// Drain the whole morphed-batch stream into a callback; returns the
     /// number of batches consumed. (`on_batch` typically feeds a
     /// [`super::trainer::Trainer`] step.)
+    ///
+    /// Since protocol v7 this is a **1-stripe, non-resumable delivery
+    /// fetch**: the provider answers with a chunk manifest (one chunk
+    /// per morphed batch), every chunk's SHA-256 is verified while
+    /// decoding (one automatic retry per corrupt chunk), and the
+    /// exchange closes with `DeliveryDone` — same signature as the
+    /// legacy path, so `developer.rs`/`trainer.rs` needed no change.
     pub fn stream_training<F>(&mut self, mut on_batch: F) -> Result<usize>
     where
         F: FnMut(u64, &Tensor, &[i32]) -> Result<()>,
     {
+        let manifest = delivery::request_manifest(&mut self.stream, "")?;
+        let n = manifest.chunks.len() as u32;
         let mut batches = 0;
-        while let Some((id, rows, labels)) = self.next_batch()? {
+        delivery::fetch_range(&mut self.stream, &manifest, 0, n, |_i, raw| {
+            let (id, rows, labels) = delivery::decode_batch_chunk(raw)?;
             on_batch(id, &rows, &labels)?;
             batches += 1;
-        }
+            Ok(())
+        })?;
+        delivery::finish_delivery(&mut self.stream)?;
         Ok(batches)
+    }
+}
+
+/// Typed client for the bulk delivery plane (protocol v7): manifest
+/// negotiation plus explicit hash-verified chunk-range fetches, byte
+/// counted both ways. One `DeliveryClient` is one connection — the
+/// striped orchestration ([`super::delivery::pull`]) opens one per
+/// stripe. Generic over the transport like [`MoleClient`].
+pub struct DeliveryClient<S: Read + Write = TcpStream> {
+    stream: CountingStream<S>,
+    /// The dataset id the server's `DatasetHello` echo resolved to.
+    dataset_id: String,
+    manifest: Option<DatasetManifest>,
+    retried: usize,
+}
+
+impl DeliveryClient<TcpStream> {
+    /// Connect and perform the `DatasetHello` handshake (`""` = whatever
+    /// dataset the server serves). A server over its session budget
+    /// answers here with `Fault::Overloaded`, surfaced typed.
+    pub fn connect<A: ToSocketAddrs>(addr: A, dataset_id: &str) -> Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        Self::over(sock, dataset_id)
+    }
+}
+
+impl<S: Read + Write> DeliveryClient<S> {
+    /// Handshake over an arbitrary transport.
+    pub fn over(stream: S, dataset_id: &str) -> Result<Self> {
+        let mut stream = CountingStream::new(stream);
+        let resolved = delivery::open_delivery(&mut stream, dataset_id)?;
+        Ok(Self { stream, dataset_id: resolved, manifest: None, retried: 0 })
+    }
+
+    /// The dataset id the server resolved the session to.
+    pub fn dataset_id(&self) -> &str {
+        &self.dataset_id
+    }
+
+    /// The dataset manifest (requested once, then cached).
+    pub fn manifest(&mut self) -> Result<&DatasetManifest> {
+        if self.manifest.is_none() {
+            let id = self.dataset_id.clone();
+            self.manifest = Some(delivery::request_manifest(&mut self.stream, &id)?);
+        }
+        Ok(self.manifest.as_ref().unwrap())
+    }
+
+    /// Fetch and verify the chunk range, invoking `on_chunk(index, raw)`
+    /// per verified chunk. Corrupt chunks are re-requested once
+    /// automatically; a second corruption surfaces the typed
+    /// [`Error::ChunkCorrupt`].
+    pub fn fetch<F>(&mut self, range: std::ops::Range<u64>, on_chunk: F) -> Result<()>
+    where
+        F: FnMut(u64, &[u8]) -> Result<()>,
+    {
+        self.manifest()?;
+        let Self { stream, manifest, .. } = self;
+        let m = manifest.as_ref().unwrap();
+        let count = range
+            .end
+            .checked_sub(range.start)
+            .and_then(|c| u32::try_from(c).ok())
+            .ok_or_else(|| {
+                Error::Protocol(format!("bad fetch range {}..{}", range.start, range.end))
+            })?;
+        self.retried += delivery::fetch_range(stream, m, range.start, count, on_chunk)?;
+        Ok(())
+    }
+
+    /// Chunks that needed the automatic single retry so far.
+    pub fn retried_chunks(&self) -> usize {
+        self.retried
+    }
+
+    /// Close the exchange (`DeliveryDone` both ways); returns
+    /// `(bytes_in, bytes_out)` for the connection.
+    pub fn finish(mut self) -> Result<(u64, u64)> {
+        delivery::finish_delivery(&mut self.stream)?;
+        Ok(self.stream.counts())
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.stream.bytes_in
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.stream.bytes_out
     }
 }
 
@@ -681,9 +806,21 @@ impl<S: Read + Write> ProviderSession<S> {
         write_message(&mut self.stream, &Message::AugConv { matrix, bias })
     }
 
-    /// Stream one morphed batch; returns frame bytes.
+    /// Stream one morphed batch; returns frame bytes. The **legacy**
+    /// push path — [`ProviderSession::serve_dataset`] is the v7 pull
+    /// path the client's `stream_training` speaks.
     pub fn send_batch(&mut self, id: u64, rows: Tensor, labels: Vec<i32>) -> Result<usize> {
         write_message(&mut self.stream, &Message::MorphedBatch { id, rows, labels })
+    }
+
+    /// Serve the morphed dataset over the delivery plane: answer the
+    /// client's `ManifestRequest` / `ChunkRequest` frames until its
+    /// `DeliveryDone`. Returns total bytes sent over the session so far
+    /// (handshake + C^ac + manifest + chunks), keeping the provider's
+    /// transfer counters exact.
+    pub fn serve_dataset(&mut self, store: &ChunkStore) -> Result<u64> {
+        delivery::serve_chunks(&mut self.stream, store)?;
+        Ok(self.stream.bytes_out)
     }
 
     /// Close the stream (`EndOfData`); returns total bytes sent over the
@@ -722,15 +859,19 @@ mod tests {
             assert_eq!(w1.shape(), &[16, 3, 3, 3]);
             assert_eq!(b1.len(), 16);
             s.send_aug_conv(Tensor::zeros(&[4, 4]), vec![0.0; 4])?;
+            // v7: one delivery chunk per morphed batch, served on pull
             let mut rng = Rng::new(1);
-            for id in 0..3u64 {
-                s.send_batch(
-                    id,
-                    Tensor::new(&[2, 5], rng.normal_vec(10, 1.0))?,
-                    vec![1, 2],
-                )?;
-            }
-            s.finish()
+            let blobs = (0..3u64)
+                .map(|id| {
+                    Ok(delivery::encode_batch_chunk(
+                        id,
+                        &Tensor::new(&[2, 5], rng.normal_vec(10, 1.0))?,
+                        &[1, 2],
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let store = ChunkStore::from_blobs("train", 6, 2, blobs, false)?;
+            s.serve_dataset(&store)
         });
 
         let mut client = MoleClient::training_over(dev_side).unwrap();
@@ -757,6 +898,43 @@ mod tests {
         let bytes = provider.join().unwrap().unwrap();
         assert!(bytes > 0);
         assert!(client.bytes_in() > 0 && client.bytes_out() > 0);
+    }
+
+    /// `DeliveryClient` over a pipe: handshake resolves the dataset id,
+    /// the cached manifest drives explicit range fetches, chunks verify,
+    /// and the close handshake returns honest byte counts.
+    #[test]
+    fn delivery_client_fetch_over_pipe() {
+        let (client_side, mut server_side) = pipe_pair();
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let store = ChunkStore::from_bytes("blob", &data, 1024, true).unwrap();
+        let expect_chunks = store.num_chunks();
+        let server = std::thread::spawn(move || {
+            delivery::run_delivery_session(&mut server_side, &store).unwrap()
+        });
+
+        // "" asks for whatever the server serves; the echo resolves it
+        let mut client = DeliveryClient::over(client_side, "").unwrap();
+        assert_eq!(client.dataset_id(), "blob");
+        let manifest = client.manifest().unwrap().clone();
+        assert_eq!(manifest.chunks.len(), expect_chunks);
+        assert_eq!(manifest.raw_bytes(), data.len() as u64);
+        let offsets = manifest.offsets();
+        let mut got = vec![0u8; data.len()];
+        client
+            .fetch(0..expect_chunks as u64, |i, raw| {
+                let at = offsets[i as usize] as usize;
+                got[at..at + raw.len()].copy_from_slice(raw);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(client.retried_chunks(), 0);
+        let (bytes_in, bytes_out) = client.finish().unwrap();
+        assert_eq!(got, data);
+        assert!(bytes_in > data.len() as u64 / 2, "chunks flow inward");
+        assert!(bytes_out > 0, "requests flow outward");
+        let served = server.join().unwrap();
+        assert!(served > 0);
     }
 
     /// A v1-shaped provider `Hello` must surface as the typed version

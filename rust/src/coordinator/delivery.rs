@@ -1,0 +1,1233 @@
+//! Bulk delivery plane (protocol v7): chunked, resumable, striped
+//! morphed-dataset transfer with per-chunk integrity hashing.
+//!
+//! The paper's headline number is cheap *delivery* — 5.12 % data
+//! transmission overhead for MoLe vs GAZELLE's 421,000× — and this
+//! module is the subsystem that actually moves morphed datasets at that
+//! cost. The provider splits a dataset into chunks and publishes a
+//! [`DatasetManifest`]: per chunk, the raw length, the wire length, an
+//! RLE-compression flag, and a SHA-256 over the **raw** bytes
+//! ([`crate::hash`]). The developer pulls explicit chunk ranges with a
+//! resumable cursor:
+//!
+//! * **hash-while-decode** — [`decode_chunk`] feeds every byte it
+//!   produces (decompressing or not) through a streaming
+//!   [`crate::hash::Sha256`], compares against the manifest digest in
+//!   constant time, and surfaces mismatches as the typed
+//!   [`Error::ChunkCorrupt`]; the fetch loop re-requests a corrupt
+//!   chunk exactly once before giving up ([`fetch_range`]);
+//! * **resume journal** — [`ResumeJournal`] appends one fsync-free
+//!   `"<index> ok"` line per *verified* chunk under a header that binds
+//!   the dataset id, chunk count, and manifest digest, so a transfer
+//!   killed at any point restarts at the set of verified chunks (torn
+//!   tail lines are ignored; a journal written for a different manifest
+//!   is refused typed instead of silently merged);
+//! * **striping** — [`pull`] partitions the unverified indices into N
+//!   contiguous slices, one connection per stripe, all writing through
+//!   one thread-safe sink at manifest-derived offsets, so the
+//!   assembled output is bitwise identical whatever the stripe count.
+//!
+//! The server side ([`ChunkStore`] + [`serve_chunks`]) is a plain
+//! blocking loop: the evented server detaches a `DatasetHello` session
+//! onto a dedicated thread *holding its live-session slot*
+//! ([`super::server`]), so bulk pulls count against `--max-sessions`
+//! and over-budget pulls are answered with the typed
+//! `Fault::Overloaded` instead of starving inference.
+//!
+//! Training rides the same plane: `MoleClient::stream_training` is a
+//! 1-stripe, non-resumable [`fetch_range`] over chunks that each hold
+//! one encoded morphed batch ([`encode_batch_chunk`]).
+
+use super::client::CountingStream;
+use super::protocol::{
+    encode, read_message, write_message, ChunkMeta, Fault, Message, FAULT_SESSION,
+    PROTOCOL_VERSION,
+};
+use crate::hash::{ct_eq, sha256, to_hex, Sha256};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Upper bound on chunks per `ChunkRequest` issued by the pull loops —
+/// keeps single write bursts on the server bounded without limiting how
+/// large a range the caller may ask [`fetch_range`] for.
+const MAX_CHUNKS_PER_REQUEST: u32 = 64;
+
+/// Marker carried by the injected-kill error ([`PullOptions::kill_after`])
+/// so tests and the CLI can tell a deliberate mid-transfer abort from a
+/// real failure.
+pub const KILL_MARKER: &str = "delivery kill injected";
+
+// ---------------------------------------------------------------------------
+// byte-wise RLE
+// ---------------------------------------------------------------------------
+
+/// Byte-wise run-length encoding: a flat sequence of `(run_len, byte)`
+/// pairs, `run_len` in `1..=255`. Worst case doubles the input — which
+/// is fine, because [`ChunkStore`] only keeps the compressed form when
+/// it is strictly smaller (morphed float rows almost never compress;
+/// zero padding and label runs do).
+pub fn rle_compress(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < raw.len() {
+        let b = raw[i];
+        let mut run = 1usize;
+        while run < 255 && i + run < raw.len() && raw[i + run] == b {
+            run += 1;
+        }
+        out.push(run as u8);
+        out.push(b);
+        i += run;
+    }
+    out
+}
+
+/// Decompress an RLE stream produced by [`rle_compress`], feeding every
+/// produced byte through `hasher` (the hash-while-decode half of chunk
+/// verification) and appending to `out`. Typed errors for odd-length
+/// streams, zero run lengths, and output overrunning `raw_len`.
+pub fn rle_decompress_into(
+    wire: &[u8],
+    raw_len: usize,
+    hasher: &mut Sha256,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    if wire.len() % 2 != 0 {
+        return Err(Error::Protocol("RLE stream has odd length".into()));
+    }
+    let start = out.len();
+    for pair in wire.chunks_exact(2) {
+        let (run, b) = (pair[0] as usize, pair[1]);
+        if run == 0 {
+            return Err(Error::Protocol("RLE run length 0".into()));
+        }
+        if out.len() - start + run > raw_len {
+            return Err(Error::Protocol(format!(
+                "RLE output exceeds declared raw length {raw_len}"
+            )));
+        }
+        let buf = [b; 255];
+        hasher.update(&buf[..run]);
+        out.extend_from_slice(&buf[..run]);
+    }
+    if out.len() - start != raw_len {
+        return Err(Error::Protocol(format!(
+            "RLE output {} shorter than declared raw length {raw_len}",
+            out.len() - start
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// chunk verification (hash while decoding)
+// ---------------------------------------------------------------------------
+
+/// Decode one received chunk against its manifest entry: decompress (if
+/// flagged) while hashing, or hash the plain bytes, then compare the
+/// digest **constant-time** against the manifest. Any mismatch — wire
+/// bytes, a lying compression flag, a lying raw length — converges to
+/// either a typed protocol error or [`Error::ChunkCorrupt`] carrying
+/// both digests in hex. The raw bytes are returned only when verified.
+pub fn decode_chunk(
+    index: u64,
+    meta: &ChunkMeta,
+    compressed: bool,
+    data: &[u8],
+) -> Result<Vec<u8>> {
+    let mut hasher = Sha256::new();
+    let mut raw = Vec::with_capacity(meta.raw_len as usize);
+    if compressed {
+        rle_decompress_into(data, meta.raw_len as usize, &mut hasher, &mut raw)?;
+    } else {
+        if data.len() != meta.raw_len as usize {
+            return Err(Error::Protocol(format!(
+                "chunk {index}: {} bytes on the wire, manifest says {}",
+                data.len(),
+                meta.raw_len
+            )));
+        }
+        hasher.update(data);
+        raw.extend_from_slice(data);
+    }
+    let got = hasher.finalize();
+    if !ct_eq(&got, &meta.sha256) {
+        return Err(Error::ChunkCorrupt {
+            chunk: index,
+            want: to_hex(&meta.sha256),
+            got: to_hex(&got),
+        });
+    }
+    Ok(raw)
+}
+
+// ---------------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------------
+
+/// Parsed chunk manifest — everything a resumable, striped puller needs
+/// to plan, verify, journal, and assemble a transfer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DatasetManifest {
+    pub dataset_id: String,
+    /// Total dataset rows (0 for an opaque byte blob).
+    pub total_rows: u64,
+    /// Rows per chunk (0 for an opaque byte blob).
+    pub chunk_rows: u32,
+    pub chunks: Vec<ChunkMeta>,
+}
+
+impl DatasetManifest {
+    /// Total raw (decompressed) dataset size in bytes.
+    pub fn raw_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.raw_len as u64).sum()
+    }
+
+    /// Byte offset of each chunk in the assembled output.
+    pub fn offsets(&self) -> Vec<u64> {
+        let mut at = 0u64;
+        self.chunks
+            .iter()
+            .map(|c| {
+                let o = at;
+                at += c.raw_len as u64;
+                o
+            })
+            .collect()
+    }
+
+    /// SHA-256 (hex) over the encoded manifest frame — what the resume
+    /// journal binds to, so a journal can never be replayed against a
+    /// re-chunked or re-morphed dataset.
+    pub fn digest_hex(&self) -> String {
+        to_hex(&sha256(&encode(&self.to_message())))
+    }
+
+    pub fn to_message(&self) -> Message {
+        Message::Manifest {
+            dataset_id: self.dataset_id.clone(),
+            total_rows: self.total_rows,
+            chunk_rows: self.chunk_rows,
+            chunks: self.chunks.clone(),
+        }
+    }
+
+    pub fn from_message(msg: Message) -> Result<Self> {
+        match msg {
+            Message::Manifest { dataset_id, total_rows, chunk_rows, chunks } => {
+                Ok(Self { dataset_id, total_rows, chunk_rows, chunks })
+            }
+            Message::Fault { fault, .. } => Err(fault.into_error()),
+            other => Err(Error::Protocol(format!("expected Manifest, got {other:?}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server side: chunk store + serving loop
+// ---------------------------------------------------------------------------
+
+/// One stored chunk: its manifest entry plus the wire payload (already
+/// compressed when the flag is set).
+#[derive(Debug)]
+pub struct StoredChunk {
+    pub meta: ChunkMeta,
+    pub payload: Vec<u8>,
+}
+
+/// The provider-side chunk store: an immutable chunked dataset with its
+/// manifest precomputed (hashes up front, compression chosen per chunk)
+/// plus per-chunk serve counters — the instrumentation the resume e2e
+/// uses to prove that verified chunks are never re-fetched.
+#[derive(Debug)]
+pub struct ChunkStore {
+    dataset_id: String,
+    total_rows: u64,
+    chunk_rows: u32,
+    chunks: Vec<StoredChunk>,
+    fetch_counts: Vec<AtomicU32>,
+}
+
+impl ChunkStore {
+    /// Build a store from pre-split chunk blobs (the provider's
+    /// one-chunk-per-morphed-batch path). Each blob is hashed raw; RLE
+    /// compression is kept only where it strictly shrinks the chunk.
+    pub fn from_blobs(
+        dataset_id: &str,
+        total_rows: u64,
+        chunk_rows: u32,
+        blobs: Vec<Vec<u8>>,
+        compress: bool,
+    ) -> Result<Self> {
+        let mut chunks = Vec::with_capacity(blobs.len());
+        for raw in blobs {
+            if raw.len() > u32::MAX as usize {
+                return Err(Error::Config(format!("chunk of {} bytes too large", raw.len())));
+            }
+            let digest = sha256(&raw);
+            let (payload, compressed) = if compress {
+                let rle = rle_compress(&raw);
+                if rle.len() < raw.len() {
+                    (rle, true)
+                } else {
+                    (raw, false)
+                }
+            } else {
+                (raw, false)
+            };
+            chunks.push(StoredChunk {
+                meta: ChunkMeta {
+                    raw_len: if compressed {
+                        // raw length is the decompressed size
+                        chunks_raw_len(&payload)
+                    } else {
+                        payload.len() as u32
+                    },
+                    wire_len: payload.len() as u32,
+                    compressed,
+                    sha256: digest,
+                },
+                payload,
+            });
+        }
+        let n = chunks.len();
+        Ok(Self {
+            dataset_id: dataset_id.to_string(),
+            total_rows,
+            chunk_rows,
+            chunks,
+            fetch_counts: (0..n).map(|_| AtomicU32::new(0)).collect(),
+        })
+    }
+
+    /// Build a store by splitting one opaque byte blob into fixed-size
+    /// chunks (the `mole push-dataset` file path). `total_rows` and
+    /// `chunk_rows` are 0: the content is not row-structured here.
+    pub fn from_bytes(
+        dataset_id: &str,
+        data: &[u8],
+        chunk_size: usize,
+        compress: bool,
+    ) -> Result<Self> {
+        if chunk_size == 0 {
+            return Err(Error::Config("chunk size must be at least 1 byte".into()));
+        }
+        let blobs = data.chunks(chunk_size).map(|c| c.to_vec()).collect();
+        Self::from_blobs(dataset_id, 0, 0, blobs, compress)
+    }
+
+    pub fn dataset_id(&self) -> &str {
+        &self.dataset_id
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Total raw dataset bytes.
+    pub fn raw_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.meta.raw_len as u64).sum()
+    }
+
+    /// Total bytes as stored (post-compression) — what actually crosses
+    /// the wire inside `Chunk` frames.
+    pub fn wire_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.payload.len() as u64).sum()
+    }
+
+    pub fn manifest(&self) -> DatasetManifest {
+        DatasetManifest {
+            dataset_id: self.dataset_id.clone(),
+            total_rows: self.total_rows,
+            chunk_rows: self.chunk_rows,
+            chunks: self.chunks.iter().map(|c| c.meta.clone()).collect(),
+        }
+    }
+
+    /// The `Chunk` frame for one index, bumping its serve counter.
+    pub fn chunk_frame(&self, index: u64) -> Result<Message> {
+        let c = self
+            .chunks
+            .get(index as usize)
+            .ok_or_else(|| Error::Protocol(format!("chunk index {index} out of range")))?;
+        self.fetch_counts[index as usize].fetch_add(1, Ordering::Relaxed);
+        Ok(Message::Chunk {
+            index,
+            compressed: c.meta.compressed,
+            raw_len: c.meta.raw_len,
+            data: c.payload.clone(),
+        })
+    }
+
+    /// Snapshot of how many times each chunk has been served.
+    pub fn fetch_counts(&self) -> Vec<u32> {
+        self.fetch_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Raw length of an RLE stream without materializing it (sum of run
+/// lengths) — used when the store keeps the compressed form.
+fn chunks_raw_len(rle: &[u8]) -> u32 {
+    rle.chunks_exact(2).map(|p| p[0] as u32).sum()
+}
+
+/// Serve one delivery session over an already-open transport: answer
+/// `ManifestRequest` / `ChunkRequest` until the peer's `DeliveryDone`
+/// (echoed back, clean exit) or EOF. Bad requests (unknown dataset id,
+/// out-of-range chunk index) are answered with a typed session `Fault`
+/// and the loop continues — a puller's bug costs it one request, not
+/// the transfer. Returns the bytes written on this session.
+pub fn serve_chunks<S: Read + Write>(stream: &mut S, store: &ChunkStore) -> Result<u64> {
+    let mut bytes_out = 0u64;
+    let mut fault = |stream: &mut S, msg: String| -> Result<usize> {
+        write_message(
+            stream,
+            &Message::Fault { of: FAULT_SESSION, fault: Fault::Generic { msg } },
+        )
+    };
+    loop {
+        match read_message(stream)? {
+            Message::ManifestRequest { dataset_id } => {
+                if !dataset_id.is_empty() && dataset_id != store.dataset_id {
+                    bytes_out +=
+                        fault(stream, format!("unknown dataset {dataset_id:?}"))? as u64;
+                    continue;
+                }
+                bytes_out += write_message(stream, &store.manifest().to_message())? as u64;
+            }
+            Message::ChunkRequest { first, count } => {
+                let end = first.checked_add(count as u64);
+                let n = store.num_chunks() as u64;
+                match end {
+                    Some(end) if end <= n => {
+                        for i in first..end {
+                            bytes_out += write_message(stream, &store.chunk_frame(i)?)? as u64;
+                        }
+                    }
+                    _ => {
+                        bytes_out += fault(
+                            stream,
+                            format!(
+                                "chunk range [{first}, +{count}) out of range (dataset has \
+                                 {n} chunks)"
+                            ),
+                        )? as u64;
+                    }
+                }
+            }
+            Message::DeliveryDone => {
+                bytes_out += write_message(stream, &Message::DeliveryDone)? as u64;
+                return Ok(bytes_out);
+            }
+            Message::Fault { fault, .. } => return Err(fault.into_error()),
+            other => {
+                fault(stream, format!("unexpected frame in delivery session: {other:?}"))?;
+                return Err(Error::Protocol(format!(
+                    "unexpected frame in delivery session: {other:?}"
+                )));
+            }
+        }
+    }
+}
+
+/// Serve a full standalone delivery session: echo the `DatasetHello`
+/// handshake, then [`serve_chunks`]. This is what the evented server's
+/// detached delivery threads run ([`super::server`]).
+pub fn run_delivery_session<S: Read + Write>(stream: &mut S, store: &ChunkStore) -> Result<u64> {
+    let mut bytes_out = write_message(
+        stream,
+        &Message::DatasetHello {
+            version: PROTOCOL_VERSION,
+            dataset_id: store.dataset_id.clone(),
+        },
+    )? as u64;
+    bytes_out += serve_chunks(stream, store)?;
+    Ok(bytes_out)
+}
+
+// ---------------------------------------------------------------------------
+// client side: manifest request + verified range fetch
+// ---------------------------------------------------------------------------
+
+/// Client half of the `DatasetHello` handshake: send ours, read the
+/// server's echo (or surface its typed `Fault`).
+pub fn open_delivery<S: Read + Write>(stream: &mut S, dataset_id: &str) -> Result<String> {
+    write_message(
+        stream,
+        &Message::DatasetHello {
+            version: PROTOCOL_VERSION,
+            dataset_id: dataset_id.to_string(),
+        },
+    )?;
+    match read_message(stream)? {
+        Message::DatasetHello { dataset_id, .. } => Ok(dataset_id),
+        Message::Fault { fault, .. } => Err(fault.into_error()),
+        other => Err(Error::Protocol(format!("expected DatasetHello, got {other:?}"))),
+    }
+}
+
+/// Request the manifest over an open delivery (or training) session.
+/// An empty `dataset_id` means "whatever this session serves".
+pub fn request_manifest<S: Read + Write>(
+    stream: &mut S,
+    dataset_id: &str,
+) -> Result<DatasetManifest> {
+    write_message(stream, &Message::ManifestRequest { dataset_id: dataset_id.to_string() })?;
+    DatasetManifest::from_message(read_message(stream)?)
+}
+
+/// Fetch and verify chunks `[first, first + count)`, invoking
+/// `on_chunk(index, raw_bytes)` for each chunk **after** its hash
+/// verified. The request is issued in bounded sub-ranges
+/// ([`MAX_CHUNKS_PER_REQUEST`]); a chunk that arrives corrupt
+/// ([`Error::ChunkCorrupt`]) is re-requested exactly once at the end of
+/// its sub-range — a second corruption surfaces the typed error. A
+/// chunk frame whose index is not the one requested is a typed protocol
+/// error (a lying server, not line noise — no retry). Returns how many
+/// chunks needed the retry.
+pub fn fetch_range<S, F>(
+    stream: &mut S,
+    manifest: &DatasetManifest,
+    first: u64,
+    count: u32,
+    mut on_chunk: F,
+) -> Result<usize>
+where
+    S: Read + Write,
+    F: FnMut(u64, &[u8]) -> Result<()>,
+{
+    let n = manifest.chunks.len() as u64;
+    if first.checked_add(count as u64).map(|e| e > n).unwrap_or(true) {
+        return Err(Error::Protocol(format!(
+            "fetch range [{first}, +{count}) out of range ({n} chunks)"
+        )));
+    }
+    let mut retried = 0usize;
+    let mut at = first;
+    let mut left = count;
+    while left > 0 {
+        let batch = left.min(MAX_CHUNKS_PER_REQUEST);
+        write_message(stream, &Message::ChunkRequest { first: at, count: batch })?;
+        let mut corrupt = Vec::new();
+        for want in at..at + batch as u64 {
+            match read_one_chunk(stream, manifest, want)? {
+                Ok(raw) => on_chunk(want, &raw)?,
+                Err(e) => {
+                    crate::logging::warn(&format!("delivery: {e}; will retry once"));
+                    corrupt.push(want);
+                }
+            }
+        }
+        // single automatic retry per corrupt chunk, one at a time
+        for want in corrupt {
+            retried += 1;
+            write_message(stream, &Message::ChunkRequest { first: want, count: 1 })?;
+            match read_one_chunk(stream, manifest, want)? {
+                Ok(raw) => on_chunk(want, &raw)?,
+                Err(e) => return Err(e),
+            }
+        }
+        at += batch as u64;
+        left -= batch;
+    }
+    Ok(retried)
+}
+
+/// Read one `Chunk` frame, expecting index `want`. Outer `Result` is a
+/// hard session error (transport, typed fault, lying index); the inner
+/// one isolates [`Error::ChunkCorrupt`] so the caller can retry it.
+#[allow(clippy::type_complexity)]
+fn read_one_chunk<S: Read + Write>(
+    stream: &mut S,
+    manifest: &DatasetManifest,
+    want: u64,
+) -> Result<std::result::Result<Vec<u8>, Error>> {
+    match read_message(stream)? {
+        Message::Chunk { index, compressed, raw_len, data } => {
+            if index != want {
+                return Err(Error::Protocol(format!(
+                    "chunk index lied: requested {want}, got {index}"
+                )));
+            }
+            let meta = &manifest.chunks[index as usize];
+            if raw_len != meta.raw_len {
+                return Err(Error::Protocol(format!(
+                    "chunk {index}: frame claims raw length {raw_len}, manifest says {}",
+                    meta.raw_len
+                )));
+            }
+            match decode_chunk(index, meta, compressed, &data) {
+                Ok(raw) => Ok(Ok(raw)),
+                Err(e @ Error::ChunkCorrupt { .. }) => Ok(Err(e)),
+                Err(e) => Err(e),
+            }
+        }
+        Message::Fault { fault, .. } => Err(fault.into_error()),
+        other => Err(Error::Protocol(format!("expected Chunk, got {other:?}"))),
+    }
+}
+
+/// Close a delivery exchange: `DeliveryDone` out, `DeliveryDone` back.
+pub fn finish_delivery<S: Read + Write>(stream: &mut S) -> Result<()> {
+    write_message(stream, &Message::DeliveryDone)?;
+    match read_message(stream)? {
+        Message::DeliveryDone => Ok(()),
+        Message::Fault { fault, .. } => Err(fault.into_error()),
+        other => Err(Error::Protocol(format!("expected DeliveryDone, got {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batch chunks (training plane)
+// ---------------------------------------------------------------------------
+
+/// Encode one morphed training batch as a chunk blob. Reuses the
+/// hardened `MorphedBatch` payload codec, so a chunk blob is exactly a
+/// tag-4 payload and inherits all of its decode hardening.
+pub fn encode_batch_chunk(id: u64, rows: &Tensor, labels: &[i32]) -> Vec<u8> {
+    encode(&Message::MorphedBatch { id, rows: rows.clone(), labels: labels.to_vec() })
+}
+
+/// Decode a chunk blob produced by [`encode_batch_chunk`].
+pub fn decode_batch_chunk(raw: &[u8]) -> Result<(u64, Tensor, Vec<i32>)> {
+    match super::protocol::decode(4, raw)? {
+        Message::MorphedBatch { id, rows, labels } => Ok((id, rows, labels)),
+        other => Err(Error::Protocol(format!("expected batch chunk, got {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// resume journal
+// ---------------------------------------------------------------------------
+
+const JOURNAL_MAGIC: &str = "mole-delivery-journal-v1";
+
+/// Append-only resume journal: a 4-line header binding (dataset id,
+/// chunk count, manifest digest) followed by one `"<index> ok"` line
+/// per verified chunk, flushed per line. Lines without the ` ok`
+/// terminator (a torn final write from a kill) are ignored on load, so
+/// the journal can only ever *under*-claim — a chunk is re-fetched, but
+/// never trusted unverified.
+#[derive(Debug)]
+pub struct ResumeJournal {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl ResumeJournal {
+    fn header(dataset_id: &str, num_chunks: usize, digest_hex: &str) -> String {
+        format!(
+            "{JOURNAL_MAGIC}\ndataset {dataset_id}\nchunks {num_chunks}\nmanifest \
+             {digest_hex}\n"
+        )
+    }
+
+    /// Start a fresh journal (truncating any existing file).
+    pub fn create(
+        path: &Path,
+        dataset_id: &str,
+        num_chunks: usize,
+        digest_hex: &str,
+    ) -> Result<Self> {
+        let mut file = std::fs::File::create(path)?;
+        file.write_all(Self::header(dataset_id, num_chunks, digest_hex).as_bytes())?;
+        file.flush()?;
+        Ok(Self { path: path.to_path_buf(), file })
+    }
+
+    /// Open an existing journal for resume (or create a fresh one when
+    /// the file does not exist). Returns the journal and the verified
+    /// chunk indices it recorded. A journal whose header names a
+    /// different dataset, chunk count, or manifest digest is refused
+    /// typed — resuming it would stitch two different datasets together.
+    pub fn open(
+        path: &Path,
+        dataset_id: &str,
+        num_chunks: usize,
+        digest_hex: &str,
+    ) -> Result<(Self, Vec<u64>)> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok((Self::create(path, dataset_id, num_chunks, digest_hex)?, Vec::new()))
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let want = Self::header(dataset_id, num_chunks, digest_hex);
+        if !text.starts_with(&want) {
+            return Err(Error::Manifest(format!(
+                "resume journal {} was written for a different dataset or manifest; \
+                 delete it to restart the transfer from scratch",
+                path.display()
+            )));
+        }
+        let mut seen = Vec::new();
+        for line in text[want.len()..].lines() {
+            // only complete "<index> ok" lines count; a torn tail line is
+            // an unverified chunk, not corruption
+            if let Some(idx) = line.strip_suffix(" ok").and_then(|s| s.parse::<u64>().ok()) {
+                if (idx as usize) < num_chunks {
+                    seen.push(idx);
+                }
+            }
+        }
+        let file = std::fs::OpenOptions::new().append(true).open(path)?;
+        Ok((Self { path: path.to_path_buf(), file }, seen))
+    }
+
+    /// Record one verified chunk (single write + flush, so a kill can
+    /// tear at most the final line).
+    pub fn record(&mut self, index: u64) -> Result<()> {
+        self.file.write_all(format!("{index} ok\n").as_bytes())?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Delete the journal (transfer complete).
+    pub fn remove(self) -> Result<()> {
+        std::fs::remove_file(&self.path)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// striped, resumable pull orchestration
+// ---------------------------------------------------------------------------
+
+/// Options for [`pull`].
+#[derive(Debug, Clone, Default)]
+pub struct PullOptions {
+    /// Dataset to request ("" = whatever the server serves).
+    pub dataset_id: String,
+    /// Parallel connections (clamped to `1..=missing-chunk count`).
+    pub stripes: usize,
+    /// Resume-journal path; `None` = non-resumable transfer.
+    pub journal: Option<PathBuf>,
+    /// With a journal set: load existing progress instead of truncating.
+    pub resume: bool,
+    /// Test/CI hook: abort the transfer (typed error containing
+    /// [`KILL_MARKER`]) once this many chunks verified *in this run*.
+    pub kill_after: Option<usize>,
+}
+
+/// What a completed (or killed) pull did.
+#[derive(Debug, Clone)]
+pub struct PullReport {
+    pub manifest: DatasetManifest,
+    /// Chunks skipped because the resume journal already verified them.
+    pub resumed_chunks: usize,
+    /// Chunks fetched and verified in this run.
+    pub fetched_chunks: usize,
+    /// Chunks that needed the automatic single retry.
+    pub retried_chunks: usize,
+    /// Bytes received / sent across every connection (frame headers,
+    /// manifest, chunk payloads — the honest wire total).
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub stripes: usize,
+}
+
+/// Split `indices` (sorted) into `parts` contiguous slices of
+/// near-equal length.
+fn partition(indices: &[u64], parts: usize) -> Vec<&[u64]> {
+    let n = indices.len();
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(&indices[at..at + len]);
+        at += len;
+    }
+    out
+}
+
+/// Group sorted indices into maximal contiguous `(first, count)` runs.
+fn contiguous_runs(indices: &[u64]) -> Vec<(u64, u32)> {
+    let mut runs: Vec<(u64, u32)> = Vec::new();
+    for &i in indices {
+        match runs.last_mut() {
+            Some((first, count)) if *first + *count as u64 == i && *count < u32::MAX => {
+                *count += 1
+            }
+            _ => runs.push((i, 1)),
+        }
+    }
+    runs
+}
+
+/// Pull a dataset: open a manifest connection, plan the missing-chunk
+/// set against the resume journal, stripe it across `opts.stripes`
+/// connections, verify every chunk while decoding, and write raw bytes
+/// through `put(index, offset, bytes)` (which must be thread-safe —
+/// stripes call it concurrently). On success the journal is removed; on
+/// any error (including the injected kill) it survives with every chunk
+/// verified so far, so the next `resume: true` run fetches only the
+/// remainder.
+///
+/// `connect` makes one new transport per connection: the manifest
+/// connection plus one per stripe. Each performs its own
+/// `DatasetHello` handshake.
+pub fn pull<S, F, P>(connect: F, opts: &PullOptions, put: P) -> Result<PullReport>
+where
+    S: Read + Write + Send,
+    F: Fn() -> Result<S> + Sync,
+    P: Fn(u64, u64, &[u8]) -> Result<()> + Sync,
+{
+    let mut mstream = CountingStream::new(connect()?);
+    open_delivery(&mut mstream, &opts.dataset_id)?;
+    let manifest = request_manifest(&mut mstream, &opts.dataset_id)?;
+    let digest = manifest.digest_hex();
+    let n = manifest.chunks.len();
+    let offsets = manifest.offsets();
+
+    let mut verified = vec![false; n];
+    let journal = match &opts.journal {
+        Some(path) => {
+            let j = if opts.resume {
+                let (j, seen) =
+                    ResumeJournal::open(path, &manifest.dataset_id, n, &digest)?;
+                for i in seen {
+                    verified[i as usize] = true;
+                }
+                j
+            } else {
+                ResumeJournal::create(path, &manifest.dataset_id, n, &digest)?
+            };
+            Some(j)
+        }
+        None => None,
+    };
+    let resumed = verified.iter().filter(|v| **v).count();
+    let missing: Vec<u64> = (0..n as u64).filter(|&i| !verified[i as usize]).collect();
+    let stripes = opts.stripes.max(1).min(missing.len().max(1));
+
+    let journal = Mutex::new(journal);
+    let done = AtomicUsize::new(0);
+    let retried = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let parts = partition(&missing, stripes);
+
+    // each stripe: own connection, own handshake, contiguous runs of its
+    // slice, verified bytes through the shared sink + journal
+    let stripe_results: Vec<Result<(u64, u64)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|part| {
+                let (connect, put) = (&connect, &put);
+                let (manifest, offsets) = (&manifest, &offsets);
+                let (journal, done, retried, abort) = (&journal, &done, &retried, &abort);
+                let (dataset_id, kill_after) = (&opts.dataset_id, opts.kill_after);
+                scope.spawn(move || -> Result<(u64, u64)> {
+                    if part.is_empty() {
+                        return Ok((0, 0));
+                    }
+                    let mut stream = CountingStream::new(connect()?);
+                    open_delivery(&mut stream, dataset_id)?;
+                    for (first, count) in contiguous_runs(part) {
+                        if abort.load(Ordering::Relaxed) {
+                            return Err(Error::Runtime("delivery aborted".into()));
+                        }
+                        let r = fetch_range(&mut stream, manifest, first, count, |i, raw| {
+                            if abort.load(Ordering::Relaxed) {
+                                return Err(Error::Runtime("delivery aborted".into()));
+                            }
+                            put(i, offsets[i as usize], raw)?;
+                            if let Some(j) = journal.lock().unwrap().as_mut() {
+                                j.record(i)?;
+                            }
+                            let v = done.fetch_add(1, Ordering::SeqCst) + 1;
+                            if let Some(k) = kill_after {
+                                if v >= k {
+                                    abort.store(true, Ordering::SeqCst);
+                                    return Err(Error::Runtime(format!(
+                                        "{KILL_MARKER} after {v} chunks"
+                                    )));
+                                }
+                            }
+                            Ok(())
+                        })?;
+                        retried.fetch_add(r, Ordering::Relaxed);
+                    }
+                    finish_delivery(&mut stream)?;
+                    Ok(stream.counts())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Runtime("delivery stripe panicked".into())))
+            })
+            .collect()
+    });
+
+    finish_delivery(&mut mstream)?;
+    let (mut bytes_in, mut bytes_out) = mstream.counts();
+    let mut first_err = None;
+    for r in stripe_results {
+        match r {
+            Ok((bi, bo)) => {
+                bytes_in += bi;
+                bytes_out += bo;
+            }
+            Err(e) => {
+                // prefer the injected kill over the secondary aborts it
+                // causes on sibling stripes
+                let is_kill = e.to_string().contains(KILL_MARKER);
+                match &first_err {
+                    None => first_err = Some(e),
+                    Some(prev) if is_kill && !prev.to_string().contains(KILL_MARKER) => {
+                        first_err = Some(e)
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e); // journal survives: resume picks up the verified set
+    }
+    if let Some(j) = journal.into_inner().unwrap() {
+        j.remove()?;
+    }
+    Ok(PullReport {
+        manifest,
+        resumed_chunks: resumed,
+        fetched_chunks: done.load(Ordering::SeqCst),
+        retried_chunks: retried.load(Ordering::SeqCst),
+        bytes_in,
+        bytes_out,
+        stripes,
+    })
+}
+
+/// A thread-safe in-memory sink for [`pull`]: pre-sized, chunks land at
+/// their manifest offsets.
+#[derive(Debug)]
+pub struct VecSink {
+    buf: Mutex<Vec<u8>>,
+}
+
+impl VecSink {
+    pub fn new(total_bytes: usize) -> Self {
+        Self { buf: Mutex::new(vec![0u8; total_bytes]) }
+    }
+
+    pub fn put(&self, offset: u64, raw: &[u8]) -> Result<()> {
+        let mut buf = self.buf.lock().unwrap();
+        let at = offset as usize;
+        if at + raw.len() > buf.len() {
+            return Err(Error::Protocol(format!(
+                "chunk at offset {offset} overruns sink of {} bytes",
+                buf.len()
+            )));
+        }
+        buf[at..at + raw.len()].copy_from_slice(raw);
+        Ok(())
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf.into_inner().unwrap()
+    }
+}
+
+/// A thread-safe positioned-write file sink for [`pull`] (the
+/// `mole pull-dataset` output). The file is sized up front so stripes
+/// can write at their offsets in any order.
+#[derive(Debug)]
+pub struct FileSink {
+    file: Mutex<std::fs::File>,
+}
+
+impl FileSink {
+    pub fn create(path: &Path, total_bytes: u64) -> Result<Self> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        file.set_len(total_bytes)?;
+        Ok(Self { file: Mutex::new(file) })
+    }
+
+    pub fn put(&self, offset: u64, raw: &[u8]) -> Result<()> {
+        use std::io::{Seek, SeekFrom};
+        let mut file = self.file.lock().unwrap();
+        file.seek(SeekFrom::Start(offset))?;
+        file.write_all(raw)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::net::pipe_pair;
+
+    #[test]
+    fn rle_roundtrips_and_only_wins_on_runs() {
+        crate::testkit::forall(
+            0xDE11,
+            32,
+            |rng| {
+                let n = rng.below(2048);
+                let mut raw = Vec::with_capacity(n);
+                while raw.len() < n {
+                    if rng.below(2) == 0 {
+                        // a run (possibly longer than the 255 cap)
+                        let b = rng.below(256) as u8;
+                        let len = 1 + rng.below(600);
+                        for _ in 0..len.min(n - raw.len()) {
+                            raw.push(b);
+                        }
+                    } else {
+                        raw.push(rng.below(256) as u8);
+                    }
+                }
+                raw
+            },
+            |raw| {
+                let rle = rle_compress(raw);
+                let mut h = Sha256::new();
+                let mut out = Vec::new();
+                rle_decompress_into(&rle, raw.len(), &mut h, &mut out)
+                    .map_err(|e| e.to_string())?;
+                if &out != raw {
+                    return Err("rle roundtrip mismatch".into());
+                }
+                if h.finalize() != sha256(raw) {
+                    return Err("hash-while-decode digest mismatch".into());
+                }
+                Ok(())
+            },
+        );
+        // all-runs input compresses; uniform-random rarely does — the
+        // store only keeps winners either way
+        let zeros = vec![0u8; 10_000];
+        assert!(rle_compress(&zeros).len() < zeros.len());
+        let store =
+            ChunkStore::from_blobs("d", 0, 0, vec![zeros.clone(), (0..=255u8).collect()], true)
+                .unwrap();
+        assert!(store.chunks[0].meta.compressed);
+        assert!(!store.chunks[1].meta.compressed);
+        assert_eq!(store.chunks[0].meta.raw_len, 10_000);
+        assert!(store.wire_bytes() < store.raw_bytes());
+    }
+
+    #[test]
+    fn rle_hostile_streams_fail_typed() {
+        let mut h = Sha256::new();
+        let mut out = Vec::new();
+        // odd length
+        assert!(rle_decompress_into(&[3], 3, &mut h, &mut out).is_err());
+        // zero run
+        assert!(rle_decompress_into(&[0, 7], 0, &mut Sha256::new(), &mut Vec::new()).is_err());
+        // overrun of declared raw_len
+        assert!(rle_decompress_into(&[5, 7], 3, &mut Sha256::new(), &mut Vec::new()).is_err());
+        // underrun
+        assert!(rle_decompress_into(&[2, 7], 3, &mut Sha256::new(), &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn decode_chunk_verifies_and_types_corruption() {
+        let raw = b"morphed bytes, morphed bytes!!".to_vec();
+        let store = ChunkStore::from_blobs("d", 0, 0, vec![raw.clone()], false).unwrap();
+        let meta = &store.chunks[0].meta;
+        assert_eq!(decode_chunk(0, meta, false, &raw).unwrap(), raw);
+        // one flipped bit → typed ChunkCorrupt with both digests in hex
+        let mut bad = raw.clone();
+        bad[3] ^= 1;
+        match decode_chunk(0, meta, false, &bad) {
+            Err(Error::ChunkCorrupt { chunk: 0, want, got }) => {
+                assert_eq!(want, to_hex(&meta.sha256));
+                assert_ne!(want, got);
+            }
+            other => panic!("expected ChunkCorrupt, got {other:?}"),
+        }
+        // length lie is a protocol error, not a hash mismatch
+        assert!(matches!(decode_chunk(0, meta, false, &raw[1..]), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn batch_chunk_roundtrip() {
+        let rows = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let blob = encode_batch_chunk(7, &rows, &[1, 9]);
+        let (id, r, l) = decode_batch_chunk(&blob).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(r, rows);
+        assert_eq!(l, vec![1, 9]);
+        assert!(decode_batch_chunk(&blob[..blob.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn journal_roundtrip_torn_tail_and_binding() {
+        let dir = std::env::temp_dir().join(format!("mole-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j1.journal");
+        let mut j = ResumeJournal::create(&path, "d1", 10, "abcd").unwrap();
+        j.record(3).unwrap();
+        j.record(7).unwrap();
+        let (_j2, seen) = ResumeJournal::open(&path, "d1", 10, "abcd").unwrap();
+        assert_eq!(seen, vec![3, 7]);
+        drop(_j2);
+        // torn tail: an unterminated line must be ignored, not misread
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"12").unwrap();
+        }
+        let (_j3, seen) = ResumeJournal::open(&path, "d1", 10, "abcd").unwrap();
+        assert_eq!(seen, vec![3, 7], "torn line 12 must not count as verified");
+        drop(_j3);
+        // a journal for another manifest digest is refused typed
+        match ResumeJournal::open(&path, "d1", 10, "ffff") {
+            Err(Error::Manifest(m)) => assert!(m.contains("different"), "{m}"),
+            other => panic!("expected manifest-binding refusal, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Deterministic mixed-content blob: compressible zero stretches +
+    /// seeded noise, so both chunk kinds (compressed / plain) exist.
+    fn test_blob(len: usize, seed: u64) -> Vec<u8> {
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut out = Vec::with_capacity(len);
+        while out.len() < len {
+            if rng.below(3) == 0 {
+                let n = (64 + rng.below(256)).min(len - out.len());
+                out.extend(std::iter::repeat(rng.below(4) as u8).take(n));
+            } else {
+                let n = (1 + rng.below(128)).min(len - out.len());
+                for _ in 0..n {
+                    out.push(rng.below(256) as u8);
+                }
+            }
+        }
+        out
+    }
+
+    fn pipe_connector(
+        store: &std::sync::Arc<ChunkStore>,
+    ) -> impl Fn() -> Result<crate::testkit::net::Pipe> + Sync + '_ {
+        move || {
+            let (a, mut b) = pipe_pair();
+            let store = std::sync::Arc::clone(store);
+            std::thread::spawn(move || {
+                let _ = run_delivery_session(&mut b, &store);
+            });
+            Ok(a)
+        }
+    }
+
+    #[test]
+    fn pull_unstriped_striped_and_resume_agree() {
+        let data = test_blob(40_000, 0xBEEF);
+        let store = std::sync::Arc::new(
+            ChunkStore::from_bytes("blob", &data, 1500, true).unwrap(),
+        );
+        let n = store.num_chunks();
+        assert!(n > 20, "want a multi-chunk dataset, got {n}");
+
+        // unstriped pull
+        let sink = VecSink::new(data.len());
+        let opts = PullOptions { dataset_id: "blob".into(), stripes: 1, ..Default::default() };
+        let report =
+            pull(pipe_connector(&store), &opts, |_, off, raw| sink.put(off, raw)).unwrap();
+        assert_eq!(sink.into_inner(), data);
+        assert_eq!(report.fetched_chunks, n);
+        assert_eq!(report.resumed_chunks, 0);
+        assert_eq!(report.retried_chunks, 0);
+
+        // striped N=4 == unstriped bitwise
+        let sink = VecSink::new(data.len());
+        let opts = PullOptions { dataset_id: "blob".into(), stripes: 4, ..Default::default() };
+        let report =
+            pull(pipe_connector(&store), &opts, |_, off, raw| sink.put(off, raw)).unwrap();
+        assert_eq!(report.stripes, 4);
+        assert_eq!(sink.into_inner(), data);
+
+        // kill after 9 verified chunks, then resume: the union of runs
+        // covers everything, journaled chunks are not re-fetched
+        let dir = std::env::temp_dir().join(format!("mole-pull-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let jpath = dir.join("blob.journal");
+        std::fs::remove_file(&jpath).ok();
+        let store2 = std::sync::Arc::new(
+            ChunkStore::from_bytes("blob", &data, 1500, true).unwrap(),
+        );
+        let sink = VecSink::new(data.len());
+        let opts = PullOptions {
+            dataset_id: "blob".into(),
+            stripes: 1,
+            journal: Some(jpath.clone()),
+            resume: true,
+            kill_after: Some(9),
+        };
+        let err = pull(pipe_connector(&store2), &opts, |_, off, raw| sink.put(off, raw))
+            .unwrap_err();
+        assert!(err.to_string().contains(KILL_MARKER), "{err}");
+        assert!(jpath.exists(), "journal must survive the kill");
+        let (_j, seen) = ResumeJournal::open(
+            &jpath,
+            "blob",
+            n,
+            &store2.manifest().digest_hex(),
+        )
+        .unwrap();
+        drop(_j);
+        assert_eq!(seen.len(), 9, "exactly kill_after chunks verified");
+        // resume: only the remainder is fetched, output is complete
+        let opts = PullOptions {
+            dataset_id: "blob".into(),
+            stripes: 1,
+            journal: Some(jpath.clone()),
+            resume: true,
+            kill_after: None,
+        };
+        let report = pull(pipe_connector(&store2), &opts, |_, off, raw| sink.put(off, raw))
+            .unwrap();
+        assert_eq!(report.resumed_chunks, 9);
+        assert_eq!(report.fetched_chunks, n - 9);
+        assert_eq!(sink.into_inner(), data);
+        assert!(!jpath.exists(), "journal removed after a complete pull");
+        // zero re-fetches of verified chunks: the 9 journaled chunks
+        // (stripe 1 verifies in order, so indices 0..9) are served
+        // exactly once across kill + resume. Unverified chunks may have
+        // been served once in the killed run (the request batch was
+        // already written when the abort landed) and once on resume —
+        // never more.
+        for (i, &c) in store2.fetch_counts().iter().enumerate() {
+            if i < 9 {
+                assert_eq!(c, 1, "verified chunk {i} re-fetched ({c} serves)");
+            } else {
+                assert!(
+                    (1..=2).contains(&c),
+                    "unverified chunk {i} served {c} times"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_and_runs_cover_exactly() {
+        let idx: Vec<u64> = vec![0, 1, 2, 5, 6, 9];
+        let parts = partition(&idx, 4);
+        assert_eq!(parts.len(), 4);
+        let flat: Vec<u64> = parts.iter().flat_map(|p| p.iter().copied()).collect();
+        assert_eq!(flat, idx);
+        assert_eq!(contiguous_runs(&idx), vec![(0, 3), (5, 2), (9, 1)]);
+        assert_eq!(contiguous_runs(&[]), vec![]);
+    }
+}

@@ -28,10 +28,19 @@
 //!   vault-derived credential installed — a challenge–response MAC
 //!   handshake (per-frame HMAC + monotonic counter, protocol v5) that
 //!   makes remote admin legal and forged/replayed frames die typed.
+//! * **Bulk delivery plane ([`delivery`], protocol v7)**: chunked,
+//!   hash-verified, resumable, striped morphed-dataset transfer —
+//!   [`delivery::ChunkStore`] + manifest serving on the provider side,
+//!   [`client::DeliveryClient`] / [`delivery::pull`] on the developer
+//!   side (`mole push-dataset` / `mole pull-dataset`). Delivery
+//!   sessions ride the evented server's session budget, so bulk pulls
+//!   shed with typed `Fault::Overloaded` instead of starving inference.
 //! * **Client SDK ([`client`])**: the typed [`client::MoleClient`]
-//!   (connect / handshake / `infer` / `infer_batch` / `stream_training`)
-//!   and the provider-side [`client::ProviderSession`] — the only
-//!   consumers of raw protocol frames outside `protocol.rs`/`server.rs`.
+//!   (connect / handshake / `infer` / `infer_batch` / `stream_training`
+//!   — the latter a 1-stripe, non-resumable delivery fetch since v7),
+//!   [`client::DeliveryClient`], and the provider-side
+//!   [`client::ProviderSession`] — the only consumers of raw protocol
+//!   frames outside `protocol.rs`/`server.rs`/`delivery.rs`.
 //!
 //! Transport is a length-prefixed binary protocol over TCP
 //! ([`protocol`]) with explicit version negotiation and model/epoch
@@ -41,6 +50,7 @@
 pub mod admin;
 pub mod batcher;
 pub mod client;
+pub mod delivery;
 pub mod developer;
 pub mod experiment;
 pub mod loadgen;
@@ -53,7 +63,8 @@ pub mod trainer;
 
 pub use admin::AdminClient;
 pub use batcher::{AdaptiveWindow, BatcherConfig, ServingHandle};
-pub use client::{ClientConfig, MoleClient, ProviderSession, ServerInfo};
+pub use client::{ClientConfig, DeliveryClient, MoleClient, ProviderSession, ServerInfo};
+pub use delivery::{ChunkStore, DatasetManifest, PullOptions, PullReport};
 pub use developer::{DeveloperNode, TrainOutcome};
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use protocol::{

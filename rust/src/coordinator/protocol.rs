@@ -66,6 +66,25 @@
 //! [`Error::Overloaded`] and well-behaved drivers (`mole loadgen`)
 //! sleep that long before retrying. Overload is always *answered* —
 //! a saturated v6 server never parks a request silently.
+//!
+//! ## Bulk delivery plane (v7)
+//!
+//! v7 adds the chunked morphed-dataset transfer frames (tags 18–23,
+//! [`super::delivery`]). `DatasetHello` opens a bulk pull like `Hello`
+//! opens a serving session — it leads with the protocol version (same
+//! typed [`Error::Version`] rejection) and names the dataset. The
+//! server answers with its own `DatasetHello`, then `ManifestRequest`
+//! fetches the [`Message::Manifest`]: total rows plus one [`ChunkMeta`]
+//! per chunk — raw length, wire length, an RLE-compression flag, and
+//! the chunk's SHA-256 ([`crate::hash`]) over the *raw* bytes, which is
+//! what makes resumable verified transfer possible. `ChunkRequest`
+//! names an explicit `[first, first+count)` index range (a resumable
+//! cursor re-requests only unverified indices; stripes partition the
+//! range across connections) and the server streams one `Chunk` frame
+//! per index. `DeliveryDone` is the flush handshake, both directions.
+//! Chunk payloads are opaque bytes at this layer; integrity is checked
+//! against the manifest hash *while decoding* on the client
+//! ([`super::delivery::decode_chunk`]).
 
 use crate::hash::{ct_eq, hmac_sha256};
 use crate::tensor::Tensor;
@@ -84,12 +103,15 @@ const MAX_PAYLOAD: usize = 1 << 30;
 /// handshake (tags 15–17: `AdminHello`/`AdminChallenge`/`AdminAuthed`)
 /// and fault kind 3 (`AdminAuth`); v6 added fault kind 4
 /// ([`Fault::Overloaded`], carrying `retry_after_ms`) — the typed
-/// load-shed answer that replaced silent stalls under overload.
-/// **v3 is deliberately skipped**:
+/// load-shed answer that replaced silent stalls under overload; v7
+/// added the bulk-delivery frames (tags 18–23:
+/// `DatasetHello`/`ManifestRequest`/`Manifest`/`ChunkRequest`/`Chunk`/
+/// `DeliveryDone`) for chunked, hash-verified, resumable
+/// morphed-dataset transfer. **v3 is deliberately skipped**:
 /// pre-versioning (v1) `Hello` frames began with the geometry's α = 3,
 /// which decodes as "version 3" — a build claiming v3 could not tell a
 /// legacy peer from a current one.
-pub const PROTOCOL_VERSION: u32 = 6;
+pub const PROTOCOL_VERSION: u32 = 7;
 
 /// `epoch` sentinel meaning "the newest epoch the peer serves".
 pub const EPOCH_LATEST: u32 = u32::MAX;
@@ -170,6 +192,26 @@ impl std::fmt::Display for Fault {
             other => write!(f, "{}", other.clone().into_error()),
         }
     }
+}
+
+/// Per-chunk manifest entry for the bulk delivery plane (v7). The
+/// SHA-256 is always over the chunk's **raw** (decompressed) bytes, so
+/// a client verifies integrity *while* decoding — a corrupt compressed
+/// stream and a corrupt plain chunk both surface as the same typed
+/// [`Error::ChunkCorrupt`], and the hash stays stable whether or not
+/// the server chose to compress.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Decompressed chunk size in bytes.
+    pub raw_len: u32,
+    /// Size of the bytes actually carried in the `Chunk` frame
+    /// (== `raw_len` when `compressed` is false).
+    pub wire_len: u32,
+    /// Whether the stored payload is byte-wise RLE compressed
+    /// ([`super::delivery`]; only chosen when it shrinks the chunk).
+    pub compressed: bool,
+    /// SHA-256 over the raw bytes ([`crate::hash::sha256`]).
+    pub sha256: [u8; 32],
 }
 
 /// Protocol messages.
@@ -253,6 +295,44 @@ pub enum Message {
         inner_tag: u8,
         inner: Vec<u8>,
     },
+    /// Bulk-delivery handshake (v7, both directions — client names the
+    /// dataset it wants, server echoes what it serves). Opens with the
+    /// protocol version exactly like [`Message::Hello`] so a
+    /// wrong-version peer dies as the typed [`Error::Version`] at
+    /// decode, before the rest of the payload is interpreted.
+    DatasetHello {
+        /// Must equal [`PROTOCOL_VERSION`]; decode rejects anything else.
+        version: u32,
+        dataset_id: String,
+    },
+    /// Request the chunk manifest for a dataset (client → server).
+    ManifestRequest { dataset_id: String },
+    /// The chunk manifest: everything a resumable, striped puller needs
+    /// to plan, verify, and journal a transfer (server → client).
+    Manifest {
+        dataset_id: String,
+        /// Total dataset rows (0 for an opaque byte blob).
+        total_rows: u64,
+        /// Rows per chunk (0 for an opaque byte blob).
+        chunk_rows: u32,
+        chunks: Vec<ChunkMeta>,
+    },
+    /// Request chunks `[first, first + count)` (client → server). The
+    /// server answers with `count` [`Message::Chunk`] frames in index
+    /// order.
+    ChunkRequest { first: u64, count: u32 },
+    /// One delivered chunk (server → client). `compressed`/`raw_len`
+    /// mirror the manifest entry so a chunk is decodable standalone;
+    /// integrity is the manifest hash, checked while decoding.
+    Chunk {
+        index: u64,
+        compressed: bool,
+        raw_len: u32,
+        data: Vec<u8>,
+    },
+    /// Bulk-delivery flush handshake: client sends it when done pulling,
+    /// server echoes it and ends the session.
+    DeliveryDone,
 }
 
 impl Message {
@@ -275,6 +355,12 @@ impl Message {
             Message::AdminHello => 15,
             Message::AdminChallenge { .. } => 16,
             Message::AdminAuthed { .. } => 17,
+            Message::DatasetHello { .. } => 18,
+            Message::ManifestRequest { .. } => 19,
+            Message::Manifest { .. } => 20,
+            Message::ChunkRequest { .. } => 21,
+            Message::Chunk { .. } => 22,
+            Message::DeliveryDone => 23,
         }
     }
 }
@@ -618,6 +704,35 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_u32(&mut out, inner.len() as u32);
             out.extend_from_slice(inner);
         }
+        Message::DatasetHello { version, dataset_id } => {
+            put_u32(&mut out, *version);
+            put_str(&mut out, dataset_id);
+        }
+        Message::ManifestRequest { dataset_id } => put_str(&mut out, dataset_id),
+        Message::Manifest { dataset_id, total_rows, chunk_rows, chunks } => {
+            put_str(&mut out, dataset_id);
+            put_u64(&mut out, *total_rows);
+            put_u32(&mut out, *chunk_rows);
+            put_u32(&mut out, chunks.len() as u32);
+            for c in chunks {
+                put_u32(&mut out, c.raw_len);
+                put_u32(&mut out, c.wire_len);
+                out.push(c.compressed as u8);
+                out.extend_from_slice(&c.sha256);
+            }
+        }
+        Message::ChunkRequest { first, count } => {
+            put_u64(&mut out, *first);
+            put_u32(&mut out, *count);
+        }
+        Message::Chunk { index, compressed, raw_len, data } => {
+            put_u64(&mut out, *index);
+            out.push(*compressed as u8);
+            put_u32(&mut out, *raw_len);
+            put_u32(&mut out, data.len() as u32);
+            out.extend_from_slice(data);
+        }
+        Message::DeliveryDone => {}
     }
     out
 }
@@ -703,6 +818,57 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
             let inner = c.take(n)?.to_vec();
             Message::AdminAuthed { counter, mac, inner_tag, inner }
         }
+        18 => {
+            let version = c.u32()?;
+            if version != PROTOCOL_VERSION {
+                // Same contract as Hello: the rest of the payload has an
+                // unknown layout, so surface the typed mismatch and let
+                // the session answer with a Fault naming both versions.
+                return Err(Error::Version { got: version, want: PROTOCOL_VERSION });
+            }
+            Message::DatasetHello { version, dataset_id: c.str()? }
+        }
+        19 => Message::ManifestRequest { dataset_id: c.str()? },
+        20 => {
+            let dataset_id = c.str()?;
+            let total_rows = c.u64()?;
+            let chunk_rows = c.u32()?;
+            let n = c.u32()? as usize;
+            // no with_capacity(n): a lying count must fail at the cursor
+            // bounds check, not pre-allocate gigabytes
+            let mut chunks = Vec::new();
+            for _ in 0..n {
+                let raw_len = c.u32()?;
+                let wire_len = c.u32()?;
+                let compressed = match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    k => {
+                        return Err(Error::Protocol(format!(
+                            "bad chunk compression flag {k}"
+                        )))
+                    }
+                };
+                chunks.push(ChunkMeta { raw_len, wire_len, compressed, sha256: c.bytes32()? });
+            }
+            Message::Manifest { dataset_id, total_rows, chunk_rows, chunks }
+        }
+        21 => Message::ChunkRequest { first: c.u64()?, count: c.u32()? },
+        22 => {
+            let index = c.u64()?;
+            let compressed = match c.u8()? {
+                0 => false,
+                1 => true,
+                k => {
+                    return Err(Error::Protocol(format!("bad chunk compression flag {k}")))
+                }
+            };
+            let raw_len = c.u32()?;
+            let n = c.u32()? as usize;
+            let data = c.take(n)?.to_vec();
+            Message::Chunk { index, compressed, raw_len, data }
+        }
+        23 => Message::DeliveryDone,
         t => return Err(Error::Protocol(format!("unknown message tag {t}"))),
     };
     c.done()?;
@@ -869,6 +1035,63 @@ mod tests {
             read_message(&mut frame.as_slice()),
             Err(Error::Version { got, .. }) if got == PROTOCOL_VERSION + 7
         ));
+        // DatasetHello (v7) mirrors Hello's version-first contract: the
+        // version field is checked before the dataset id is parsed
+        let mut payload = Vec::new();
+        put_u32(&mut payload, PROTOCOL_VERSION - 1);
+        put_str(&mut payload, "cifar-morphed");
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"ML");
+        frame.push(18);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        assert!(matches!(
+            read_message(&mut frame.as_slice()),
+            Err(Error::Version { got, want })
+                if got == PROTOCOL_VERSION - 1 && want == PROTOCOL_VERSION
+        ));
+    }
+
+    /// Manifest decode hardening: a lying chunk count dies at the cursor
+    /// bounds check (no pre-allocation from the count), and a bad
+    /// compression flag is a typed refusal, not a silent bool coercion.
+    #[test]
+    fn manifest_decode_hardened() {
+        let msg = Message::Manifest {
+            dataset_id: "d".into(),
+            total_rows: 10,
+            chunk_rows: 2,
+            chunks: vec![ChunkMeta {
+                raw_len: 8,
+                wire_len: 8,
+                compressed: false,
+                sha256: [1; 32],
+            }],
+        };
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg).unwrap();
+        // count field sits after dataset_id(4+1) + total_rows(8) +
+        // chunk_rows(4) in the payload; lie that there are 2^32-1 chunks
+        let count_at = 7 + 4 + 1 + 8 + 4;
+        let t0 = std::time::Instant::now();
+        let mut lying = buf.clone();
+        lying[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        match read_message(&mut lying.as_slice()) {
+            Err(Error::Protocol(m)) => assert!(m.contains("truncated"), "{m}"),
+            other => panic!("expected truncated-payload error, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(1),
+            "lying chunk count must fail fast"
+        );
+        // compression flag 7 is refused typed
+        let flag_at = count_at + 4 + 4 + 4;
+        let mut bad = buf.clone();
+        bad[flag_at] = 7;
+        match read_message(&mut bad.as_slice()) {
+            Err(Error::Protocol(m)) => assert!(m.contains("compression flag"), "{m}"),
+            other => panic!("expected bad-flag error, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1006,6 +1229,47 @@ mod tests {
                 1,
                 &Message::AdminDrain { model: "alpha".into(), epoch: 0 },
             ),
+            // v7 bulk-delivery frames (tags 18–23): their presence here
+            // pulls them into every truncation / bit-flip / lying-length
+            // suite below
+            Message::DatasetHello {
+                version: PROTOCOL_VERSION,
+                dataset_id: "cifar-morphed".into(),
+            },
+            Message::ManifestRequest { dataset_id: "cifar-morphed".into() },
+            Message::Manifest {
+                dataset_id: "cifar-morphed".into(),
+                total_rows: 60_000,
+                chunk_rows: 64,
+                chunks: vec![
+                    ChunkMeta {
+                        raw_len: 12_288,
+                        wire_len: 12_288,
+                        compressed: false,
+                        sha256: [0xAB; 32],
+                    },
+                    ChunkMeta {
+                        raw_len: 12_288,
+                        wire_len: 96,
+                        compressed: true,
+                        sha256: [0xCD; 32],
+                    },
+                ],
+            },
+            Message::ChunkRequest { first: 3, count: 5 },
+            Message::Chunk {
+                index: 3,
+                compressed: false,
+                raw_len: 6,
+                data: vec![1, 2, 3, 4, 5, 6],
+            },
+            Message::Chunk {
+                index: 4,
+                compressed: true,
+                raw_len: 300,
+                data: vec![255, 0, 45, 7],
+            },
+            Message::DeliveryDone,
         ]
     }
 

@@ -6,7 +6,10 @@
 //!    epoch, stream plan);
 //! 2. receive the developer's pre-trained first layer;
 //! 3. build **C**^ac = **M**⁻¹·**C** + channel shuffle, ship it;
-//! 4. stream morphed training batches, then `EndOfData`.
+//! 4. serve the morphed dataset over the **delivery plane** (protocol
+//!    v7): one hash-manifested chunk per morphed batch, pulled by the
+//!    developer's `stream_training`, closed by `DeliveryDone`
+//!    ([`super::delivery`]).
 //!
 //! The provider's compute is exactly what the paper allows a "regular
 //! desktop PC": the block-diagonal morph (eq. 16) plus the one-off C^ac
@@ -16,6 +19,7 @@
 //! serving lanes drain.
 
 use super::client::ProviderSession;
+use super::delivery::{self, ChunkStore};
 use super::SessionInfo;
 use crate::augconv::{build_aug_conv, AugConvLayer};
 use crate::data::Dataset;
@@ -104,6 +108,40 @@ impl ProviderNode {
         &self.morph_key
     }
 
+    /// Morph the whole stream plan up front into a delivery
+    /// [`ChunkStore`]: one chunk per morphed batch (batch-chunk
+    /// encoding, [`delivery::encode_batch_chunk`]), per-chunk SHA-256
+    /// computed at build time, dataset id derived from the key
+    /// fingerprint + epoch so a resume journal can never stitch chunks
+    /// morphed under different keys. Morphed float rows are
+    /// high-entropy, so RLE is left off.
+    pub fn build_delivery_store(
+        &self,
+        plan: StreamPlan,
+        data_rng_seed: u64,
+    ) -> Result<ChunkStore> {
+        let mut rng = Rng::new(data_rng_seed);
+        let mut iter = self.dataset.train_batches(plan.batch_size);
+        let mut blobs = Vec::with_capacity(plan.num_batches);
+        for id in 0..plan.num_batches as u64 {
+            let batch = iter.next_batch(&mut rng);
+            let rows = self.morph_images(batch.images)?;
+            blobs.push(delivery::encode_batch_chunk(id, &rows, &batch.labels));
+        }
+        let dataset_id = format!(
+            "morphed-{}-e{}",
+            &self.keys.fingerprint()[..16],
+            self.keys.epoch
+        );
+        ChunkStore::from_blobs(
+            &dataset_id,
+            (plan.num_batches * plan.batch_size) as u64,
+            plan.batch_size as u32,
+            blobs,
+            false,
+        )
+    }
+
     /// Run one full delivery session over a bidirectional stream.
     pub fn run_session<S: Read + Write>(
         &self,
@@ -128,17 +166,12 @@ impl ProviderNode {
         ));
         session.send_aug_conv(layer.matrix().clone(), layer.bias().to_vec())?;
 
-        // 4. stream morphed batches
-        let mut rng = Rng::new(data_rng_seed);
-        let mut iter = self.dataset.train_batches(plan.batch_size);
-        for id in 0..plan.num_batches as u64 {
-            let batch = iter.next_batch(&mut rng);
-            let rows = self.morph_images(batch.images)?;
-            session.send_batch(id, rows, batch.labels)?;
-            self.batches_sent.inc();
-        }
-        // the typed session counted every frame, handshake included
-        let total = session.finish()?;
+        // 4. serve morphed batches over the delivery plane (v7): the
+        // developer's stream_training pulls the manifest, fetches every
+        // chunk hash-verified, and closes with DeliveryDone
+        let store = self.build_delivery_store(plan, data_rng_seed)?;
+        let total = session.serve_dataset(&store)?;
+        self.batches_sent.add(store.num_chunks() as u64);
         self.bytes_sent.add(total);
         crate::logging::info(&format!(
             "provider: session done, {} batches / {} bytes",

@@ -63,6 +63,17 @@
 //! `Send + Sync` [`SharedEngine`](crate::runtime::SharedEngine) — no
 //! per-connection engine or model state.
 //!
+//! ## Bulk delivery sessions (protocol v7)
+//!
+//! A connection that opens with `DatasetHello` becomes a **bulk
+//! delivery session** when a dataset is configured
+//! ([`ServeConfig::dataset`]): like admin sessions it detaches onto a
+//! blocking thread (`delivery::run_delivery_session`) **holding its
+//! live-session slot**, so bulk pulls count against
+//! [`ServeConfig::max_sessions`] and an over-budget pull is answered
+//! `Fault::Overloaded` at accept instead of starving inference. With no
+//! dataset configured the frame is refused typed.
+//!
 //! The registry is **live**: a connection that opens with an admin
 //! frame instead of `Hello` becomes an admin session ([`super::admin`];
 //! gated by [`ServeConfig::admin_enabled`] and either the loopback
@@ -77,6 +88,7 @@
 //! answer with the typed `Fault::Draining`/`Fault::Retired` carrying
 //! the successor epoch so clients re-resolve instead of failing.
 
+use super::delivery::ChunkStore;
 use super::protocol::{
     try_decode_frame, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
     PROTOCOL_VERSION,
@@ -157,6 +169,9 @@ pub struct ServeConfig {
     /// and authenticated peers may be non-loopback. `None` keeps the
     /// legacy loopback-only gate.
     pub admin_credential: Option<[u8; 32]>,
+    /// Bulk dataset served to `DatasetHello` sessions (protocol v7,
+    /// `mole push-dataset`). `None` refuses delivery handshakes typed.
+    pub dataset: Option<Arc<ChunkStore>>,
 }
 
 impl Default for ServeConfig {
@@ -170,6 +185,7 @@ impl Default for ServeConfig {
             max_pending: 128,
             admin_enabled: true,
             admin_credential: None,
+            dataset: None,
         }
     }
 }
@@ -247,7 +263,9 @@ pub struct Server {
 impl Server {
     /// Bind the listener and start serving every lane in `registry`.
     pub fn bind(registry: ModelRegistry, cfg: ServeConfig) -> Result<Self> {
-        if registry.is_empty() {
+        if registry.is_empty() && cfg.dataset.is_none() {
+            // a pure delivery server (`mole push-dataset`) has no model
+            // lanes; anything else needs at least one
             return Err(Error::Config("cannot serve an empty model registry".into()));
         }
         if cfg.max_sessions == 0 {
@@ -542,6 +560,9 @@ enum Detach {
     AdminPlain(Message),
     /// Same, for the authenticated admin loop; carries the credential.
     AdminAuthed([u8; 32]),
+    /// Hand the connection to a blocking thread serving bulk delivery
+    /// (`DatasetHello` already validated; the thread sends the echo).
+    Delivery(Arc<ChunkStore>),
 }
 
 /// A blocking `Read + Write` view of a detached connection that replays
@@ -901,6 +922,30 @@ impl Driver {
                 }
                 None
             }
+            Message::DatasetHello { dataset_id, .. } => {
+                // decode already enforced the version; route to the
+                // configured chunk store (empty id = "whatever you serve")
+                match &self.cfg.dataset {
+                    Some(store)
+                        if dataset_id.is_empty() || dataset_id == store.dataset_id() =>
+                    {
+                        Some(Detach::Delivery(store.clone()))
+                    }
+                    Some(store) => {
+                        let msg = format!(
+                            "unknown dataset {dataset_id:?} (this server serves {:?})",
+                            store.dataset_id()
+                        );
+                        refuse(sess, &self.metrics, Fault::Generic { msg });
+                        None
+                    }
+                    None => {
+                        let msg = "no bulk dataset is served here".to_string();
+                        refuse(sess, &self.metrics, Fault::Generic { msg });
+                        None
+                    }
+                }
+            }
             Message::AdminHello => {
                 if !self.cfg.admin_enabled {
                     let msg = "admin surface is disabled on this server".to_string();
@@ -1059,35 +1104,47 @@ impl Driver {
     }
 
     /// Move a connection off the event loop onto a dedicated blocking
-    /// thread running the admin session loops from [`super::admin`]. The
-    /// session's live-budget slot rides along, so admin sessions count
-    /// against `max_sessions` for their whole lifetime.
+    /// thread: the admin session loops from [`super::admin`], or a bulk
+    /// delivery serving loop ([`super::delivery`]). The session's
+    /// live-budget slot rides along, so detached sessions count against
+    /// `max_sessions` for their whole lifetime — which is exactly how
+    /// bulk pulls end up shedding `Fault::Overloaded` at accept instead
+    /// of starving inference.
     fn detach_admin(&mut self, sess: Session, kind: Detach) {
         let Session { sock, _slot: slot, rbuf, .. } = sess;
         if sock.set_nonblocking(false).is_err() {
             return; // connection unusable; slot freed by drop
         }
         sock.set_read_timeout(Some(self.cfg.idle_timeout)).ok();
-        let stream = PrefixedStream { pre: std::io::Cursor::new(rbuf), sock };
+        let mut stream = PrefixedStream { pre: std::io::Cursor::new(rbuf), sock };
         let registry = self.registry.clone();
-        let spawned =
-            std::thread::Builder::new().name("mole-admin-session".into()).spawn(move || {
-                let _slot = slot;
-                let result = match kind {
-                    Detach::AdminPlain(first) => {
-                        super::admin::run_admin_session(stream, first, &registry)
-                    }
-                    Detach::AdminAuthed(cred) => {
-                        super::admin::run_authed_admin_session(stream, &registry, &cred)
-                    }
-                };
-                if let Err(e) = result {
-                    crate::logging::warn(&format!("admin session ended with error: {e}"));
+        let name = match &kind {
+            Detach::Delivery(_) => "mole-delivery-session",
+            _ => "mole-admin-session",
+        };
+        let metrics = self.metrics.clone();
+        let spawned = std::thread::Builder::new().name(name.into()).spawn(move || {
+            let _slot = slot;
+            let result = match kind {
+                Detach::AdminPlain(first) => {
+                    super::admin::run_admin_session(stream, first, &registry)
                 }
-            });
+                Detach::AdminAuthed(cred) => {
+                    super::admin::run_authed_admin_session(stream, &registry, &cred)
+                }
+                Detach::Delivery(store) => {
+                    super::delivery::run_delivery_session(&mut stream, &store).map(|bytes| {
+                        metrics.bytes_out.add(bytes);
+                    })
+                }
+            };
+            if let Err(e) = result {
+                crate::logging::warn(&format!("detached session ended with error: {e}"));
+            }
+        });
         match spawned {
             Ok(handle) => self.admin_threads.lock().unwrap().push(handle),
-            Err(e) => crate::logging::warn(&format!("admin session spawn failed: {e}")),
+            Err(e) => crate::logging::warn(&format!("detached session spawn failed: {e}")),
         }
     }
 }

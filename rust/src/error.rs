@@ -52,6 +52,15 @@ pub enum Error {
     /// `Fault::AdminAuth` and tests can pin the exact refusal.
     AdminAuth(String),
 
+    /// A bulk-delivery chunk failed its manifest integrity check: the
+    /// SHA-256 computed while decoding the received bytes does not match
+    /// the per-chunk hash the manifest promised (bit rot, truncation, or
+    /// a lying sender). Carries the chunk index and both digests (hex)
+    /// so a retry loop can name exactly what it is re-fetching. The
+    /// delivery client retries a corrupt chunk once automatically before
+    /// surfacing this.
+    ChunkCorrupt { chunk: u64, want: String, got: String },
+
     /// Artifact manifest problems (missing artifact, bad signature).
     Manifest(String),
 
@@ -96,6 +105,10 @@ impl std::fmt::Display for Error {
                 "server overloaded: request shed, retry after {retry_after_ms} ms"
             ),
             Error::AdminAuth(m) => write!(f, "admin auth error: {m}"),
+            Error::ChunkCorrupt { chunk, want, got } => write!(
+                f,
+                "chunk {chunk} corrupt: sha256 mismatch (manifest {want}, received {got})"
+            ),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
@@ -183,6 +196,18 @@ mod tests {
         let e = Error::AdminAuth("MAC verification failed".into());
         assert!(e.to_string().contains("admin auth"), "{e}");
         assert!(e.to_string().contains("MAC"), "{e}");
+    }
+
+    #[test]
+    fn chunk_corrupt_display_names_chunk_and_digests() {
+        let e = Error::ChunkCorrupt {
+            chunk: 7,
+            want: "aa11".into(),
+            got: "bb22".into(),
+        };
+        assert!(e.to_string().contains("chunk 7"), "{e}");
+        assert!(e.to_string().contains("aa11"), "{e}");
+        assert!(e.to_string().contains("bb22"), "{e}");
     }
 
     #[test]

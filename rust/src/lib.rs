@@ -47,9 +47,17 @@
 //!   authenticated (challenge–response, anti-replay counters) once a
 //!   vault-derived credential is installed — plus the matching
 //!   multi-connection load driver (`mole loadgen`).
+//! * **Bulk delivery plane ([`coordinator::delivery`])** — protocol-v7
+//!   chunked morphed-dataset transfer: per-chunk SHA-256 manifests,
+//!   hash-while-decode verification with a single automatic retry,
+//!   crash-resumable journaled pulls, and striping across parallel
+//!   connections (`mole push-dataset` / `mole pull-dataset`); bulk
+//!   sessions ride the same accept budget as serving, so overload sheds
+//!   typed instead of starving inference.
 //! * **Client SDK ([`coordinator::client`])** — the typed
 //!   [`coordinator::MoleClient`] (connect / `infer` / `infer_batch` /
-//!   `stream_training`) and provider-side session endpoint; no consumer
+//!   `stream_training`) and [`coordinator::DeliveryClient`] plus the
+//!   provider-side session endpoint; no consumer
 //!   outside the coordinator touches raw protocol frames.
 //!
 //! Quick orientation:

@@ -6,6 +6,19 @@
 //! * `morph --out DIR [--kappa K]` — morph a demo image, dump PPMs + SSIM
 //! * `provider --listen ADDR [--batches N]` — run a data-provider node
 //! * `developer --connect ADDR` — run a developer node (train on stream)
+//! * `push-dataset --input FILE [--listen ADDR] [--dataset-id ID]
+//!   [--chunk-size N] [--compress] [--max-sessions N]` — serve a file as
+//!   a chunked, hash-manifested bulk dataset (protocol v7 delivery
+//!   plane). Chunk SHA-256s are computed once at startup; pulls ride the
+//!   evented server's session budget, so past `--max-sessions` they shed
+//!   with a typed overload fault instead of starving inference lanes
+//! * `pull-dataset --out FILE [--connect ADDR] [--dataset-id ID]
+//!   [--stripe N] [--resume]` — pull a bulk dataset into FILE across
+//!   `--stripe` parallel connections, verifying every chunk hash while
+//!   decoding (corrupt chunks are re-fetched once, then fail typed).
+//!   Progress lands in `FILE.journal`; after an interrupt, `--resume`
+//!   fetches only the chunks the journal has not verified. The journal
+//!   is bound to the dataset id + manifest digest and removed on success
 //! * `serve [--listen ADDR] [--model NAME,NAME…] [--max-batch N]
 //!   [--timeout-ms T] [--workers W] [--max-sessions N] [--max-pending N]
 //!   [--fixed-window] [--max-requests N] [--admin-credential FILE]` —
@@ -92,6 +105,8 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("morph") => morph_demo(&args, &cfg),
         Some("provider") => provider(&args, &cfg),
         Some("developer") => developer(&args, &cfg),
+        Some("push-dataset") => push_dataset(&args, &cfg),
+        Some("pull-dataset") => pull_dataset(&args, &cfg),
         Some("serve") => serve(&args, &cfg),
         Some("loadgen") => loadgen(&args, &cfg),
         Some("keygen") => keygen(&args, &cfg),
@@ -101,7 +116,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("attack") => attack(&args, &cfg),
         _ => {
             eprintln!(
-                "usage: mole <security-report|overhead|morph|provider|developer|serve|loadgen|keygen|rotate-key|admin|e2e|attack> [options]"
+                "usage: mole <security-report|overhead|morph|provider|developer|push-dataset|pull-dataset|serve|loadgen|keygen|rotate-key|admin|e2e|attack> [options]"
             );
             Ok(())
         }
@@ -215,6 +230,151 @@ fn developer(args: &Args, cfg: &MoleConfig) -> Result<()> {
             .take(10)
             .sum::<f32>()
             / outcome.accs.len().min(10).max(1) as f32
+    );
+    Ok(())
+}
+
+/// Serve one file as a bulk delivery dataset (protocol v7). The server
+/// runs with an empty model registry — pure delivery — but the full
+/// evented accept path, so pulls compete under the same session budget
+/// as inference and shed typed when it is exhausted.
+fn push_dataset(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::coordinator::registry::ModelRegistry;
+    use mole::coordinator::server::{ServeConfig, Server};
+    use mole::coordinator::ChunkStore;
+    use mole::runtime::SharedEngine;
+
+    let input = args
+        .get("input")
+        .ok_or_else(|| mole::Error::Config("push-dataset requires --input FILE".into()))?;
+    let addr = args.get_or("listen", &cfg.addr);
+    let default_id = Path::new(input)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("dataset")
+        .to_string();
+    let dataset_id = args.get_or("dataset-id", &default_id);
+    let chunk_size = args.get_usize("chunk-size", 64 * 1024)?;
+    let compress = args.flag("compress");
+    let max_sessions = args.get_usize("max-sessions", cfg.max_sessions)?;
+
+    let data = std::fs::read(input)?;
+    let store = std::sync::Arc::new(ChunkStore::from_bytes(
+        &dataset_id,
+        &data,
+        chunk_size,
+        compress,
+    )?);
+    let manifest = store.manifest();
+    // empty registry over the built-in manifest contract: no inference
+    // lanes, just the delivery plane
+    let engine = SharedEngine::new(mole::manifest::Manifest::builtin(Path::new(
+        &cfg.artifacts_dir,
+    )));
+    let registry = ModelRegistry::new(engine, cfg.batcher());
+    let server = Server::bind(
+        registry,
+        ServeConfig {
+            addr: addr.clone(),
+            max_sessions,
+            admin_enabled: false,
+            dataset: Some(store.clone()),
+            ..ServeConfig::default()
+        },
+    )?;
+    println!(
+        "pushing dataset {:?} on {}: {} chunks x {} rows-eq, {} raw / {} wire bytes, manifest {}",
+        store.dataset_id(),
+        server.local_addr(),
+        store.num_chunks(),
+        chunk_size,
+        store.raw_bytes(),
+        store.wire_bytes(),
+        &manifest.digest_hex()[..16],
+    );
+    // serve until killed (CI backgrounds this and SIGTERMs it)
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let m = server.metrics();
+        mole::logging::info(&format!(
+            "push-dataset: sessions={} bytes_out={}",
+            m.sessions.get(),
+            m.bytes_out.get()
+        ));
+    }
+}
+
+/// Pull a bulk dataset into a local file: striped, hash-verified,
+/// resumable. The journal lives at `<out>.journal` while the transfer
+/// is incomplete; `--resume` re-fetches only unverified chunks.
+fn pull_dataset(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::coordinator::delivery::{self, FileSink, PullOptions};
+    use mole::coordinator::DeliveryClient;
+
+    let out = args
+        .get("out")
+        .ok_or_else(|| mole::Error::Config("pull-dataset requires --out FILE".into()))?;
+    let addr = args.get_or("connect", &cfg.addr);
+    let dataset_id = args.get_or("dataset-id", "");
+    let stripes = args.get_usize("stripe", 1)?;
+    let resume = args.flag("resume");
+    // CI/test hook: abort after N verified chunks to exercise resume
+    let kill_after = match std::env::var("MOLE_DELIVERY_KILL_AFTER") {
+        Ok(v) => Some(v.parse::<usize>().map_err(|_| {
+            mole::Error::Config(format!("MOLE_DELIVERY_KILL_AFTER={v:?}: not an integer"))
+        })?),
+        Err(_) => None,
+    };
+
+    // one handshake up front to size the output file from the manifest
+    let mut probe = DeliveryClient::connect(&addr, &dataset_id)?;
+    let total = probe.manifest()?.raw_bytes();
+    probe.finish()?;
+
+    let out_path = Path::new(out);
+    let sink = FileSink::create(out_path, total)?;
+    let journal = out_path.with_extension(format!(
+        "{}journal",
+        out_path
+            .extension()
+            .and_then(|e| e.to_str())
+            .map(|e| format!("{e}."))
+            .unwrap_or_default()
+    ));
+    let opts = PullOptions {
+        dataset_id: dataset_id.clone(),
+        stripes,
+        journal: Some(journal.clone()),
+        resume,
+        kill_after,
+    };
+    let report = delivery::pull(
+        || {
+            let sock = std::net::TcpStream::connect(&addr)?;
+            sock.set_nodelay(true).ok();
+            Ok(sock)
+        },
+        &opts,
+        |_, offset, raw| sink.put(offset, raw),
+    )
+    .map_err(|e| {
+        eprintln!(
+            "pull interrupted; verified progress kept in {:?} — rerun with --resume",
+            journal
+        );
+        e
+    })?;
+    println!(
+        "pulled dataset {:?} -> {out}: {} bytes, {} chunks fetched + {} resumed \
+         ({} retried) over {} stripe(s); {} bytes in / {} bytes out on the wire",
+        report.manifest.dataset_id,
+        total,
+        report.fetched_chunks,
+        report.resumed_chunks,
+        report.retried_chunks,
+        report.stripes,
+        report.bytes_in,
+        report.bytes_out,
     );
     Ok(())
 }

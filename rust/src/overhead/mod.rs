@@ -16,9 +16,12 @@
 //!
 //! [`catalog`] carries per-layer MAC counts for VGG-16 (CIFAR + ImageNet)
 //! and ResNet-152 so ratios like the ResNet "10×" are reproduced from
-//! audited per-layer numbers, not assumed.
+//! audited per-layer numbers, not assumed. [`transmission`] grounds the
+//! 5.12 % figure in a *measured* transfer over the real delivery plane
+//! and emits `BENCH_overhead.json` (schema `mole-overhead-v1`).
 
 pub mod catalog;
+pub mod transmission;
 
 use crate::Geometry;
 use catalog::NetworkSpec;

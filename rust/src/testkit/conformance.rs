@@ -11,6 +11,11 @@
 //! the hostile-frame construction here means every suite forges frames
 //! the same way, and a change to the envelope layout breaks one module
 //! instead of five tests.
+//!
+//! Since protocol v7 the same applies to the bulk delivery plane:
+//! [`hostile_delivery`] builds the corrupt-chunk and lying-index frames
+//! a byzantine dataset server would send, so the delivery e2e suite and
+//! any future fuzz lane forge them identically.
 
 use crate::coordinator::protocol::{
     admin_mac, read_message, seal_admin, write_message, Fault, Message,
@@ -156,6 +161,50 @@ impl<S: Read + Write> Driver<S> {
             }
         }
         Ok(self)
+    }
+}
+
+/// Hostile delivery-plane frame builders (protocol v7). Each starts
+/// from a *real* frame out of a [`ChunkStore`] and then lies in exactly
+/// one way, so the client-side verifier is tested against frames that
+/// are plausible in every other respect.
+pub mod hostile_delivery {
+    use crate::coordinator::delivery::ChunkStore;
+    use crate::coordinator::protocol::Message;
+    use crate::{Error, Result};
+
+    /// The chunk-hash-mismatch cell: the genuine chunk frame with one
+    /// payload bit flipped. Decoding must fail typed
+    /// (`Error::ChunkCorrupt`) — never deliver the bytes.
+    pub fn corrupted_chunk(store: &ChunkStore, index: u64) -> Result<Message> {
+        match store.chunk_frame(index)? {
+            Message::Chunk { index, compressed, raw_len, mut data } => {
+                data[0] ^= 1;
+                Ok(Message::Chunk { index, compressed, raw_len, data })
+            }
+            other => Err(Error::Protocol(format!(
+                "chunk_frame returned {other:?}"
+            ))),
+        }
+    }
+
+    /// The lying-chunk-index cell: the genuine frame for `actual`
+    /// relabeled as `claimed`. A client that trusts the label would
+    /// write verified bytes at the wrong offset; ours must reject the
+    /// frame before hashing anything.
+    pub fn lying_index_chunk(
+        store: &ChunkStore,
+        actual: u64,
+        claimed: u64,
+    ) -> Result<Message> {
+        match store.chunk_frame(actual)? {
+            Message::Chunk { compressed, raw_len, data, .. } => {
+                Ok(Message::Chunk { index: claimed, compressed, raw_len, data })
+            }
+            other => Err(Error::Protocol(format!(
+                "chunk_frame returned {other:?}"
+            ))),
+        }
     }
 }
 

@@ -1,12 +1,18 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_*.json file against the mole-bench-v1 schema.
+"""Validate BENCH_*.json files against their declared schema.
 
 Stdlib-only (the CI bench-smoke job runs it on the artifacts the bench
 binaries just wrote). Checks required keys AND value types, so a refactor
 that silently drops a percentile or stringifies a number fails CI rather
 than producing un-diffable baselines.
 
-Usage: check_bench_schema.py BENCH_hotpath.json [BENCH_serving.json ...]
+Two schemas are known, dispatched on the document's "schema" key:
+* mole-bench-v1    — timed results (percentile rows; BENCH_hotpath.json,
+                     BENCH_serving.json, ...)
+* mole-overhead-v1 — transmission-overhead rows (raw/delivered byte
+                     counts + overhead percentages; BENCH_overhead.json)
+
+Usage: check_bench_schema.py BENCH_hotpath.json [BENCH_overhead.json ...]
 """
 import json
 import numbers
@@ -31,7 +37,7 @@ def is_int(v):
     return isinstance(v, int) and not isinstance(v, bool)
 
 
-# row keys that must be numeric when present
+# mole-bench-v1 row keys that must be numeric when present
 OPTIONAL_NUM = [
     "mean_us",
     "gflops",
@@ -56,13 +62,11 @@ OPTIONAL_INT = ["trials", "connections"]
 CORRECTED_SET = ("corrected_p50_us", "corrected_p95_us", "corrected_p99_us")
 
 
-def check(path):
-    with open(path, encoding="utf-8") as f:
-        doc = json.load(f)
-
+def check_envelope(path, doc, schema_id):
+    """The shared envelope both schemas carry: bench/threads/cpu/results."""
     want(path, isinstance(doc, dict), "top level must be an object")
-    want(path, doc.get("schema") == "mole-bench-v1",
-         f"schema must be 'mole-bench-v1', got {doc.get('schema')!r}")
+    want(path, doc.get("schema") == schema_id,
+         f"schema must be {schema_id!r}, got {doc.get('schema')!r}")
     want(path, isinstance(doc.get("bench"), str) and doc["bench"],
          "bench must be a non-empty string")
     want(path, is_int(doc.get("threads")) and doc["threads"] >= 1,
@@ -81,36 +85,79 @@ def check(path):
     want(path, isinstance(results, list) and results,
          "results must be a non-empty array")
     for i, row in enumerate(results):
-        where = f"results[{i}]"
-        want(path, isinstance(row, dict), f"{where} must be an object")
-        for key in ("name", "backend"):
-            want(path, isinstance(row.get(key), str) and row[key],
-                 f"{where}.{key} must be a non-empty string")
-        for key in ("p50_us", "p95_us", "p99_us"):
-            want(path, is_num(row.get(key)) and row[key] >= 0,
-                 f"{where}.{key} must be a number >= 0 "
-                 f"(got {row.get(key)!r})")
-        for key in OPTIONAL_NUM:
-            if key in row:
-                want(path, is_num(row[key]),
-                     f"{where}.{key} must be numeric (got {row[key]!r})")
-        present = [k for k in CORRECTED_SET if k in row]
-        want(path, len(present) in (0, len(CORRECTED_SET)),
-             f"{where}: corrected percentiles are all-or-nothing, "
-             f"got only {present}")
-        for key in ("offered_rps", "shed", "connect_shed"):
-            if key in row:
-                want(path, row[key] >= 0,
-                     f"{where}.{key} must be >= 0 (got {row[key]!r})")
-        for key in OPTIONAL_INT:
-            if key in row:
-                want(path, is_int(row[key]) and row[key] >= 1,
-                     f"{where}.{key} must be an int >= 1 (got {row[key]!r})")
+        want(path, isinstance(row, dict), f"results[{i}] must be an object")
+        want(path, isinstance(row.get("name"), str) and row["name"],
+             f"results[{i}].name must be a non-empty string")
         if "geometry" in row:
             want(path, isinstance(row["geometry"], str) and row["geometry"],
-                 f"{where}.geometry must be a non-empty string")
-    print(f"{path}: ok ({len(results)} rows, bench={doc['bench']}, "
-          f"cpu={cpu['arch']}/{cpu['features']})")
+                 f"results[{i}].geometry must be a non-empty string")
+    return results
+
+
+def check_bench_row(path, where, row):
+    want(path, isinstance(row.get("backend"), str) and row["backend"],
+         f"{where}.backend must be a non-empty string")
+    for key in ("p50_us", "p95_us", "p99_us"):
+        want(path, is_num(row.get(key)) and row[key] >= 0,
+             f"{where}.{key} must be a number >= 0 (got {row.get(key)!r})")
+    for key in OPTIONAL_NUM:
+        if key in row:
+            want(path, is_num(row[key]),
+                 f"{where}.{key} must be numeric (got {row[key]!r})")
+    present = [k for k in CORRECTED_SET if k in row]
+    want(path, len(present) in (0, len(CORRECTED_SET)),
+         f"{where}: corrected percentiles are all-or-nothing, "
+         f"got only {present}")
+    for key in ("offered_rps", "shed", "connect_shed"):
+        if key in row:
+            want(path, row[key] >= 0,
+                 f"{where}.{key} must be >= 0 (got {row[key]!r})")
+    for key in OPTIONAL_INT:
+        if key in row:
+            want(path, is_int(row[key]) and row[key] >= 1,
+                 f"{where}.{key} must be an int >= 1 (got {row[key]!r})")
+
+
+def check_overhead_row(path, where, row):
+    for key in ("raw_bytes", "delivered_bytes"):
+        want(path, is_num(row.get(key)) and row[key] >= 0,
+             f"{where}.{key} must be a number >= 0 (got {row.get(key)!r})")
+    want(path, is_num(row.get("overhead_pct")),
+         f"{where}.overhead_pct must be numeric (got {row.get('overhead_pct')!r})")
+    for key in ("framing_pct", "paper_pct"):
+        if key in row:
+            want(path, is_num(row[key]),
+                 f"{where}.{key} must be numeric (got {row[key]!r})")
+    for key in ("chunk_count", "stripes"):
+        if key in row:
+            want(path, is_num(row[key]) and row[key] >= 1
+                 and float(row[key]).is_integer(),
+                 f"{where}.{key} must be an integer >= 1 (got {row[key]!r})")
+    # a delivered count below raw would mean negative framing — a
+    # byte-counter bug, not a measurement
+    want(path, row["delivered_bytes"] >= row["raw_bytes"],
+         f"{where}: delivered_bytes < raw_bytes")
+
+
+ROW_CHECKS = {
+    "mole-bench-v1": check_bench_row,
+    "mole-overhead-v1": check_overhead_row,
+}
+
+
+def check(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+
+    schema = doc.get("schema") if isinstance(doc, dict) else None
+    want(path, schema in ROW_CHECKS,
+         f"unknown schema {schema!r} (known: {sorted(ROW_CHECKS)})")
+    results = check_envelope(path, doc, schema)
+    row_check = ROW_CHECKS[schema]
+    for i, row in enumerate(results):
+        row_check(path, f"results[{i}]", row)
+    print(f"{path}: ok ({len(results)} rows, schema={schema}, "
+          f"bench={doc['bench']}, cpu={doc['cpu']['arch']}/{doc['cpu']['features']})")
 
 
 def main():
