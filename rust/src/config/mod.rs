@@ -168,6 +168,24 @@ pub struct MoleConfig {
     /// every admin frame must be MAC-authenticated against the loaded
     /// credential, and non-loopback admin peers become legal.
     pub admin_credential_file: String,
+    /// Serving: path to a key vault whose **operator roster** gates the
+    /// admin plane (per-operator credentials, `mole operator add|
+    /// revoke|list`). Supersedes [`MoleConfig::admin_credential_file`]
+    /// when both are set: each admin frame is attributed to the operator
+    /// whose credential sealed it, and operators can be revoked live.
+    /// The vault may be a signed (`MOLESIG1`) envelope; combine with
+    /// [`MoleConfig::vault_signer_file`] to refuse unsigned or
+    /// re-signed vaults.
+    pub admin_vault_file: String,
+    /// Serving: append-only admin audit log path (created `0600`).
+    /// Every authenticated admin verb — and every refused frame — is
+    /// recorded attributed to its operator label. Empty = no audit log.
+    pub audit_log_file: String,
+    /// Keys: path to an ed25519 verifying-key file (the `mole
+    /// sign-keygen --pub` output). Non-empty pins every vault load that
+    /// honors it (`serve --admin-vault`, `mole operator`): a vault that
+    /// is unsigned, tampered, or signed by any other key is refused.
+    pub vault_signer_file: String,
     /// Training: steps / learning rate.
     pub train_steps: usize,
     pub lr: f64,
@@ -206,6 +224,9 @@ impl Default for MoleConfig {
             max_pending: 128,
             admin_enabled: true,
             admin_credential_file: String::new(),
+            admin_vault_file: String::new(),
+            audit_log_file: String::new(),
+            vault_signer_file: String::new(),
             train_steps: 300,
             lr: 0.05,
             data_seed: 7,
@@ -274,6 +295,15 @@ impl MoleConfig {
             admin_enabled: raw.get_bool("serving", "admin", d.admin_enabled)?,
             admin_credential_file: raw
                 .get_or("serving", "admin_credential_file", &d.admin_credential_file)
+                .to_string(),
+            admin_vault_file: raw
+                .get_or("serving", "admin_vault_file", &d.admin_vault_file)
+                .to_string(),
+            audit_log_file: raw
+                .get_or("serving", "audit_log_file", &d.audit_log_file)
+                .to_string(),
+            vault_signer_file: raw
+                .get_or("keys", "signer_file", &d.vault_signer_file)
                 .to_string(),
             train_steps: raw.get_usize("train", "steps", d.train_steps)?,
             lr: raw.get_f64("train", "lr", d.lr)?,
@@ -378,6 +408,20 @@ lr = 0.1
         .unwrap();
         let with_cred = MoleConfig::from_raw(&raw).unwrap();
         assert_eq!(with_cred.admin_credential_file, "ops/admin.cred");
+        // the v8 admin-plane keys: operator vault, audit log, signer pin
+        assert!(MoleConfig::default().admin_vault_file.is_empty());
+        assert!(MoleConfig::default().audit_log_file.is_empty());
+        assert!(MoleConfig::default().vault_signer_file.is_empty());
+        let raw = RawConfig::parse(
+            "[serving]\nadmin_vault_file = \"ops/provider.key\"\n\
+             audit_log_file = \"ops/admin-audit.log\"\n\
+             [keys]\nsigner_file = \"ops/vault-signer.pub\"\n",
+        )
+        .unwrap();
+        let with_ops = MoleConfig::from_raw(&raw).unwrap();
+        assert_eq!(with_ops.admin_vault_file, "ops/provider.key");
+        assert_eq!(with_ops.audit_log_file, "ops/admin-audit.log");
+        assert_eq!(with_ops.vault_signer_file, "ops/vault-signer.pub");
         // default kept where unspecified
         assert_eq!(cfg.addr, "127.0.0.1:7433");
         assert_eq!(cfg.geometry, Geometry::SMALL);

@@ -8,23 +8,55 @@
 //!
 //! * **No credential configured** — legacy gate: bare admin verbs are
 //!   accepted **only from loopback peers**, exactly as before v5.
-//! * **Credential configured** ([`ServeConfig::admin_credential`],
-//!   the vault-derived [`crate::keys::KeyBundle::admin_credential`]) —
-//!   every admin verb must ride the authenticated envelope: the session
-//!   opens with `AdminHello`, the server answers `AdminChallenge` with
-//!   a fresh nonce, and each verb arrives as `AdminAuthed` (monotonic
-//!   frame counter + HMAC over tag/counter/payload, verified in
-//!   constant time **before** dispatch — see
-//!   [`super::protocol::open_admin`]). With the MAC in force, admin
-//!   peers no longer need to be loopback — this is what makes a remote
-//!   `mole admin --credential` deployment legal. A bare (downgraded)
-//!   admin verb on a credential-gated server is refused typed, as is an
-//!   `AdminHello` against a server with no credential.
+//! * **Credential configured** — every admin verb must ride the
+//!   authenticated envelope: the session opens with `AdminHello`, the
+//!   server answers `AdminChallenge` with a fresh nonce, and each verb
+//!   arrives as `AdminAuthed` (monotonic frame counter + HMAC over
+//!   direction/tag/counter/payload, verified in constant time
+//!   **before** dispatch — see [`super::protocol::open_admin`]). With
+//!   the MAC in force, admin peers no longer need to be loopback — this
+//!   is what makes a remote `mole admin --credential` deployment legal.
+//!   A bare (downgraded) admin verb on a credential-gated server is
+//!   refused typed, as is an `AdminHello` against a server with no
+//!   credential.
+//!
+//! Since v8 the credential gate is an [`OperatorTable`], not one shared
+//! secret:
+//!
+//! * **Per-operator credentials** — the vault's operator roster
+//!   ([`crate::keys::KeyBundle::operators`], `mole operator add|revoke|
+//!   list`) derives one independent credential per label
+//!   ([`crate::keys::KeyBundle::operator_credential`]). A frame's MAC
+//!   is tried against every *live* operator, so the server knows **who**
+//!   sealed each verb; the legacy single-credential config still works
+//!   as an implicit operator labeled `"shared"`
+//!   ([`OperatorTable::shared`]).
+//! * **Live revocation** — `Message::AdminRevoke` (itself an
+//!   authenticated verb) moves an operator from the live roster to the
+//!   revoked tombstones **in the running server**: the revoked
+//!   credential's next frame is refused with a typed error naming the
+//!   revocation (distinct from a plain forgery), and is never
+//!   dispatched. Revoking the last live operator is refused — a server
+//!   with an empty roster could never be administered again.
+//! * **Sealed replies** — every `AdminOk`/`Fault` answer to an
+//!   authenticated verb comes back sealed under the session nonce at
+//!   the request's counter ([`super::protocol::seal_admin_reply`]), and
+//!   [`AdminClient`] verifies the MAC constant-time **before** decoding
+//!   ([`super::protocol::open_admin_reply`]): a forged, tampered,
+//!   replayed, or cleartext-downgraded ack dies typed on the client.
+//!   The one cleartext frame an authenticated client still accepts is a
+//!   `Fault::AdminAuth` refusal — the server cannot seal a reply to a
+//!   peer whose credential it just rejected.
+//! * **Audit** — with an [`AuditLog`] configured, every verb (and every
+//!   authentication refusal) is recorded attributed to its operator
+//!   label, append-only, `0600` at create.
 //!
 //! Key material never crosses the connection: `AdminRegister` names a
 //! vault file on the **server's** filesystem (the `mole keygen` /
 //! `mole rotate-key` output), which the server loads itself —
-//! completing the vault → live rotate → register path.
+//! completing the vault → live rotate → register path. Likewise
+//! `AdminRevoke` names a *label*; credentials are derived, distributed,
+//! and revoked without ever appearing in a frame.
 //!
 //! The rollover runbook this module exists for:
 //!
@@ -39,17 +71,215 @@
 //!
 //! [`ServeConfig::admin_credential`]: super::server::ServeConfig::admin_credential
 
+use super::audit::{AuditLog, UNAUTHENTICATED};
 use super::protocol::{
-    open_admin, read_message, seal_admin, write_message, Fault, Message, FAULT_SESSION,
+    admin_mac, decode, open_admin_reply, read_message, seal_admin, seal_admin_reply,
+    write_message, Fault, Message, DIR_REQUEST, FAULT_SESSION,
 };
 use super::registry::ModelRegistry;
-use crate::hash::Sha256;
+use crate::hash::{ct_eq, Sha256};
 use crate::keys::KeyBundle;
 use crate::{Error, Result};
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
+
+/// The label the legacy single-credential configuration appears under
+/// in the operator table, status lines, and the audit log.
+pub const SHARED_OPERATOR: &str = "shared";
+
+/// The live credential gate of one serving instance: operator label →
+/// admin credential, plus the tombstones of revoked operators.
+///
+/// The table is **live** — [`OperatorTable::revoke`] takes effect on
+/// the next frame of every admin session sharing the `Arc`, with no
+/// restart. Tombstones keep the revoked credentials so a revoked
+/// operator's frames are refused with a *naming* error ("credential
+/// revoked", attributable in the audit log) instead of the anonymous
+/// MAC failure a true forgery gets.
+///
+/// Credentials never leave the table; `Debug` prints labels only.
+pub struct OperatorTable {
+    state: RwLock<TableState>,
+}
+
+struct TableState {
+    live: Vec<(String, [u8; 32])>,
+    revoked: Vec<(String, [u8; 32])>,
+}
+
+impl std::fmt::Debug for OperatorTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let state = self.state.read().unwrap();
+        f.debug_struct("OperatorTable")
+            .field("live", &state.live.iter().map(|(l, _)| l).collect::<Vec<_>>())
+            .field("revoked", &state.revoked.iter().map(|(l, _)| l).collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl OperatorTable {
+    /// Table with the single legacy operator [`SHARED_OPERATOR`] holding
+    /// the vault-wide [`KeyBundle::admin_credential`]. This is what a
+    /// `[serving] admin_credential_file` config builds — pre-roster
+    /// deployments keep working, they just attribute every verb to
+    /// `"shared"`.
+    pub fn shared(credential: [u8; 32]) -> Self {
+        Self {
+            state: RwLock::new(TableState {
+                live: vec![(SHARED_OPERATOR.to_string(), credential)],
+                revoked: Vec::new(),
+            }),
+        }
+    }
+
+    /// Table derived from a vault's operator roster
+    /// ([`KeyBundle::operator_credentials`]). An empty roster falls back
+    /// to [`OperatorTable::shared`] so `--admin-vault` on a pre-roster
+    /// vault behaves exactly like the legacy credential file.
+    pub fn from_bundle(keys: &KeyBundle) -> Self {
+        let creds = keys.operator_credentials();
+        if creds.is_empty() {
+            return Self::shared(keys.admin_credential());
+        }
+        Self { state: RwLock::new(TableState { live: creds, revoked: Vec::new() }) }
+    }
+
+    /// Labels currently able to authenticate (sorted like the vault
+    /// roster they came from).
+    pub fn live_labels(&self) -> Vec<String> {
+        self.state.read().unwrap().live.iter().map(|(l, _)| l.clone()).collect()
+    }
+
+    /// Labels that have been revoked on this instance.
+    pub fn revoked_labels(&self) -> Vec<String> {
+        self.state.read().unwrap().revoked.iter().map(|(l, _)| l.clone()).collect()
+    }
+
+    /// Move `label` from the live roster to the tombstones — effective
+    /// on the very next frame of every session sharing this table.
+    /// Refused typed when the label is unknown (or already revoked), and
+    /// when it is the **last** live operator: an instance with an empty
+    /// live roster could never be administered again, including to undo
+    /// the mistake.
+    pub fn revoke(&self, label: &str) -> Result<()> {
+        let mut state = self.state.write().unwrap();
+        let idx = state.live.iter().position(|(l, _)| l == label).ok_or_else(|| {
+            if state.revoked.iter().any(|(l, _)| l == label) {
+                Error::AdminAuth(format!("operator {label:?} is already revoked"))
+            } else {
+                Error::Config(format!("no live operator {label:?} to revoke"))
+            }
+        })?;
+        if state.live.len() == 1 {
+            return Err(Error::Config(format!(
+                "refusing to revoke {label:?}: it is the last live operator \
+                 (an empty roster would lock the admin plane until restart)"
+            )));
+        }
+        let entry = state.live.remove(idx);
+        state.revoked.push(entry);
+        Ok(())
+    }
+
+    /// Authenticate one [`Message::AdminAuthed`] request frame against
+    /// the live roster and return `(operator label, credential, counter,
+    /// inner verb)`.
+    ///
+    /// Order matters, same as [`super::protocol::open_admin`]: the MAC
+    /// is recomputed per live credential and compared constant-time
+    /// ([`ct_eq`]) — **every** live entry is tried even after a match,
+    /// so timing does not depend on roster position — then the counter
+    /// must be strictly increasing, and only then are the inner bytes
+    /// decoded. On MAC failure the tombstones are consulted: a revoked
+    /// credential earns the typed "revoked" refusal (audit-attributable),
+    /// anything else the same anonymous MAC error a single-credential
+    /// server gives.
+    fn open_request(
+        &self,
+        nonce: &[u8; 32],
+        last_counter: u64,
+        frame: &Message,
+    ) -> Result<(String, [u8; 32], u64, Message)> {
+        let (counter, mac, inner_tag, inner) = match frame {
+            Message::AdminAuthed { counter, mac, inner_tag, inner } => {
+                (*counter, mac, *inner_tag, inner.as_slice())
+            }
+            _ => {
+                return Err(Error::AdminAuth(
+                    "admin frames must be authenticated on this server".into(),
+                ))
+            }
+        };
+        let state = self.state.read().unwrap();
+        let mut matched: Option<(String, [u8; 32])> = None;
+        for (label, cred) in &state.live {
+            let want = admin_mac(cred, nonce, counter, DIR_REQUEST, inner_tag, inner);
+            if ct_eq(&want, mac) && matched.is_none() {
+                matched = Some((label.clone(), *cred));
+            }
+        }
+        let (label, cred) = match matched {
+            Some(hit) => hit,
+            None => {
+                for (label, cred) in &state.revoked {
+                    let want =
+                        admin_mac(cred, nonce, counter, DIR_REQUEST, inner_tag, inner);
+                    if ct_eq(&want, mac) {
+                        return Err(Error::AdminAuth(format!(
+                            "credential of operator {label:?} was revoked \
+                             (frame refused, not dispatched)"
+                        )));
+                    }
+                }
+                return Err(Error::AdminAuth(
+                    "admin frame MAC verification failed".into(),
+                ));
+            }
+        };
+        if counter <= last_counter {
+            return Err(Error::AdminAuth(format!(
+                "anti-replay: frame counter {counter} is not above {last_counter} \
+                 (replayed or reordered admin frame)"
+            )));
+        }
+        Ok((label, cred, counter, decode(inner_tag, inner)?))
+    }
+}
+
+/// Everything the authenticated admin plane of one server shares:
+/// the live operator table and the optional audit log. Built once at
+/// [`super::server::Server::bind`] and handed (via `Arc`) to each
+/// detached admin session.
+#[derive(Debug)]
+pub struct AdminGate {
+    /// Live credential gate (shared with every admin session, so
+    /// revocation is instant across sessions).
+    pub table: Arc<OperatorTable>,
+    /// Append-only verb attribution log, if configured.
+    pub audit: Option<Arc<AuditLog>>,
+}
+
+impl AdminGate {
+    fn audit(&self, operator: &str, verb: &str, outcome: &str, detail: &str) {
+        if let Some(log) = &self.audit {
+            log.record(operator, verb, outcome, detail);
+        }
+    }
+}
+
+/// Audit-log verb name for an admin message.
+fn verb_name(msg: &Message) -> &'static str {
+    match msg {
+        Message::AdminRegister { .. } => "register",
+        Message::AdminDrain { .. } => "drain",
+        Message::AdminRetire { .. } => "retire",
+        Message::AdminStatus => "status",
+        Message::AdminRevoke { .. } => "revoke",
+        _ => "-",
+    }
+}
 
 /// Execute one admin request against the registry, returning the
 /// operator-readable success detail.
@@ -98,6 +328,11 @@ fn apply(registry: &Arc<ModelRegistry>, msg: &Message) -> Result<String> {
             Ok(format!("retired {model}@{epoch}"))
         }
         Message::AdminStatus => Ok(registry.status_report()),
+        Message::AdminRevoke { .. } => Err(Error::AdminAuth(
+            "operator revocation requires the authenticated admin plane \
+             (there is no operator table behind the loopback gate)"
+                .into(),
+        )),
         other => Err(Error::Protocol(format!(
             "admin session got non-admin frame {other:?}"
         ))),
@@ -131,18 +366,32 @@ fn fresh_nonce() -> [u8; 32] {
 /// Server side of an **authenticated** admin session: issue the
 /// challenge nonce, then require every verb to arrive sealed
 /// ([`Message::AdminAuthed`]) with a valid constant-time-verified MAC
-/// and a strictly-increasing frame counter. Verb-level failures (vault
-/// load, duplicate register, retire-while-busy …) answer a typed
-/// `Fault` and keep the session alive, like the unauthenticated plane —
-/// but **authentication** failures (forged MAC, replay, a bare admin
-/// verb slipped in as a downgrade) answer their typed
-/// `Fault::AdminAuth` and then terminate the session: a peer that fails
-/// the MAC once is not an operator having a bad day, and it gets no
-/// second frame to probe with.
+/// from a **live operator** and a strictly-increasing frame counter.
+/// Verb-level failures (vault load, duplicate register,
+/// retire-while-busy …) answer a typed `Fault` and keep the session
+/// alive, like the unauthenticated plane — but **authentication**
+/// failures (forged MAC, revoked credential, replay, a bare admin verb
+/// slipped in as a downgrade) answer their typed `Fault::AdminAuth` and
+/// then terminate the session: a peer that fails the MAC once is not an
+/// operator having a bad day, and it gets no second frame to probe
+/// with.
+///
+/// Replies are **sealed** (v8): every `AdminOk` / verb-level `Fault`
+/// goes back through [`seal_admin_reply`] under the authenticated
+/// operator's own credential at the request's counter. The only
+/// cleartext answers are the `Fault::AdminAuth` refusals above — by
+/// definition there is no authenticated credential to seal those under
+/// — and the `EndOfData` close handshake, which carries no verb result.
+///
+/// `AdminRevoke` is dispatched here rather than in `apply`: it mutates
+/// the [`AdminGate`]'s operator table (shared live across sessions),
+/// not the model registry. Every verb and refusal is recorded in the
+/// gate's audit log, attributed to the operator whose credential sealed
+/// it.
 pub(crate) fn run_authed_admin_session<S: Read + Write>(
     mut stream: S,
     registry: &Arc<ModelRegistry>,
-    credential: &[u8; 32],
+    gate: &AdminGate,
 ) -> Result<()> {
     let nonce = fresh_nonce();
     write_message(&mut stream, &Message::AdminChallenge { nonce })?;
@@ -159,42 +408,47 @@ pub(crate) fn run_authed_admin_session<S: Read + Write>(
             }
             Err(e) => return Err(e),
         };
-        if !matches!(frame, Message::AdminAuthed { .. }) {
-            // downgrade attempt: a bare admin verb (or anything else)
-            // on the authenticated plane is never dispatched
-            let e = Error::AdminAuth(
-                "admin frames must be authenticated on this server".into(),
-            );
-            let _ = write_message(
-                &mut stream,
-                &Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
-            );
-            return Err(e);
-        }
-        let inner = match open_admin(credential, &nonce, last_counter, &frame) {
-            Ok((counter, inner)) => {
-                last_counter = counter;
-                inner
+        let (operator, cred, counter, inner) =
+            match gate.table.open_request(&nonce, last_counter, &frame) {
+                Ok(opened) => opened,
+                Err(e) => {
+                    // forged MAC, revoked credential, replay, or a bare
+                    // (downgraded) verb: never dispatched, answered with
+                    // the one legitimately-cleartext fault, session over
+                    gate.audit(UNAUTHENTICATED, "-", "refused", &e.to_string());
+                    let _ = write_message(
+                        &mut stream,
+                        &Message::Fault {
+                            of: FAULT_SESSION,
+                            fault: Fault::from_error(&e),
+                        },
+                    );
+                    return Err(e);
+                }
+            };
+        last_counter = counter;
+        let verb = verb_name(&inner);
+        let outcome = match &inner {
+            Message::AdminRevoke { label } => {
+                gate.table.revoke(label).map(|()| format!("revoked operator {label:?}"))
             }
-            Err(e) => {
-                let _ = write_message(
-                    &mut stream,
-                    &Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
-                );
-                return Err(e);
-            }
+            other => apply(registry, other),
         };
-        let reply = match apply(registry, &inner) {
+        let reply = match outcome {
             Ok(detail) => {
                 crate::logging::info(&format!(
-                    "admin(authed): {}",
+                    "admin({operator}): {}",
                     detail.lines().next().unwrap_or("")
                 ));
+                gate.audit(&operator, verb, "ok", &detail);
                 Message::AdminOk { detail }
             }
-            Err(e) => Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
+            Err(e) => {
+                gate.audit(&operator, verb, "err", &e.to_string());
+                Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) }
+            }
         };
-        write_message(&mut stream, &reply)?;
+        write_message(&mut stream, &seal_admin_reply(&cred, &nonce, counter, &reply))?;
     }
 }
 
@@ -305,19 +559,36 @@ impl<S: Read + Write> AdminClient<S> {
         }
     }
 
+    /// One request/reply round trip. On the authenticated plane the verb
+    /// goes out sealed and the answer **must come back sealed** at the
+    /// same counter ([`open_admin_reply`]: constant-time MAC before
+    /// decode) — closing the v5 hole where a MITM could fabricate a
+    /// cleartext `AdminOk` and this client would take it at face value.
+    /// The sole cleartext frame still honored is a `Fault::AdminAuth`
+    /// refusal: the server cannot seal a reply to a credential it just
+    /// rejected. Any *other* cleartext frame — including a forged
+    /// `AdminOk` — dies as the typed downgrade error.
     fn call(&mut self, msg: &Message) -> Result<String> {
-        match &mut self.auth {
+        let reply = match &mut self.auth {
             Some(auth) => {
                 auth.counter += 1;
                 let sealed =
                     seal_admin(&auth.credential, &auth.nonce, auth.counter, msg);
                 write_message(&mut self.stream, &sealed)?;
+                let frame = read_message(&mut self.stream)?;
+                if let Message::Fault { fault: fault @ Fault::AdminAuth { .. }, .. } =
+                    frame
+                {
+                    return Err(fault.into_error());
+                }
+                open_admin_reply(&auth.credential, &auth.nonce, auth.counter, &frame)?
             }
             None => {
                 write_message(&mut self.stream, msg)?;
+                read_message(&mut self.stream)?
             }
-        }
-        match read_message(&mut self.stream)? {
+        };
+        match reply {
             Message::AdminOk { detail } => Ok(detail),
             Message::Fault { fault, .. } => Err(fault.into_error()),
             other => Err(Error::Protocol(format!(
@@ -361,6 +632,14 @@ impl<S: Read + Write> AdminClient<S> {
     /// Lane-per-line status report.
     pub fn status(&mut self) -> Result<String> {
         self.call(&Message::AdminStatus)
+    }
+
+    /// Revoke `label`'s admin credential **live** on the serving side
+    /// (authenticated plane only — the verb mutates the server's
+    /// operator table, so the loopback-legacy plane refuses it typed).
+    /// The revoked operator's next frame is refused, never dispatched.
+    pub fn revoke_operator(&mut self, label: &str) -> Result<String> {
+        self.call(&Message::AdminRevoke { label: label.to_string() })
     }
 
     /// Graceful close (`EndOfData` both ways; EOF tolerated).
@@ -478,7 +757,11 @@ mod tests {
                     read_message(&mut stream).unwrap(),
                     Message::AdminHello
                 ));
-                run_authed_admin_session(stream, &reg, &cred)
+                let gate = AdminGate {
+                    table: Arc::new(OperatorTable::shared(cred)),
+                    audit: None,
+                };
+                run_authed_admin_session(stream, &reg, &gate)
             })
         };
 
@@ -514,6 +797,148 @@ mod tests {
         let server_err = server.join().unwrap().unwrap_err();
         assert!(matches!(server_err, Error::AdminAuth(_)), "{server_err}");
         assert_eq!(reg.resolve("alpha", 0).unwrap().epoch(), 0, "forged drain ran");
+    }
+
+    /// Per-operator roster over two concurrent sessions sharing one
+    /// gate: verbs are attributed in the audit log, revocation by one
+    /// operator takes effect **live** on the other's session (typed
+    /// "revoked", never dispatched), the last live operator cannot be
+    /// revoked, and a double-revoke is a verb-level error that keeps
+    /// the session alive.
+    #[test]
+    fn operator_roster_revocation_is_live_and_audited() {
+        let mut keys = crate::keys::KeyBundle::generate(Geometry::SMALL, 16, 77).unwrap();
+        keys.add_operator("ada").unwrap();
+        keys.add_operator("grace").unwrap();
+        let audit_path = std::env::temp_dir()
+            .join(format!("mole_admin_audit_{}.log", std::process::id()));
+        std::fs::remove_file(&audit_path).ok();
+        let gate = Arc::new(AdminGate {
+            table: Arc::new(OperatorTable::from_bundle(&keys)),
+            audit: Some(Arc::new(AuditLog::open(&audit_path).unwrap())),
+        });
+        assert_eq!(gate.table.live_labels(), vec!["ada", "grace"]);
+        let reg = registry();
+
+        let run_server = |reg: Arc<ModelRegistry>, gate: Arc<AdminGate>, server_side| {
+            std::thread::spawn(move || {
+                let mut stream = server_side;
+                assert!(matches!(
+                    read_message(&mut stream).unwrap(),
+                    Message::AdminHello
+                ));
+                run_authed_admin_session(stream, &reg, &gate)
+            })
+        };
+
+        // two authenticated sessions, one per operator, same live gate
+        let (ada_server_side, ada_client_side) = pipe_pair();
+        let ada_server = run_server(reg.clone(), gate.clone(), ada_server_side);
+        let mut ada = AdminClient::over(ada_client_side);
+        ada.authenticate(keys.operator_credential("ada")).unwrap();
+        let (grace_server_side, grace_client_side) = pipe_pair();
+        let grace_server = run_server(reg.clone(), gate.clone(), grace_server_side);
+        let mut grace = AdminClient::over(grace_client_side);
+        grace.authenticate(keys.operator_credential("grace")).unwrap();
+
+        // both operators work; their credentials are independent
+        let detail = grace.register("alpha", "", 16, 11, 11).unwrap();
+        assert!(detail.contains("registered alpha@0"), "{detail}");
+        assert!(ada.status().unwrap().contains("alpha@0 state=active"));
+
+        // ada revokes grace — mid-session, no restart
+        let detail = ada.revoke_operator("grace").unwrap();
+        assert!(detail.contains("revoked operator \"grace\""), "{detail}");
+        assert_eq!(gate.table.live_labels(), vec!["ada"]);
+        assert_eq!(gate.table.revoked_labels(), vec!["grace"]);
+
+        // grace's next verb dies with the *naming* refusal, is never
+        // dispatched, and her session is terminated server-side
+        let err = grace.drain("alpha", 0).unwrap_err();
+        assert!(
+            matches!(&err, Error::AdminAuth(m) if m.contains("revoked")),
+            "{err}"
+        );
+        let server_err = grace_server.join().unwrap().unwrap_err();
+        assert!(server_err.to_string().contains("\"grace\""), "{server_err}");
+        assert_eq!(reg.resolve("alpha", 0).unwrap().epoch(), 0, "revoked drain ran");
+
+        // the surviving operator keeps working on the same session
+        assert!(ada.status().unwrap().contains("alpha@0 state=active"));
+        // double revoke: verb-level error, session stays alive
+        let err = ada.revoke_operator("grace").unwrap_err();
+        assert!(err.to_string().contains("already revoked"), "{err}");
+        // the last live operator cannot lock the plane
+        let err = ada.revoke_operator("ada").unwrap_err();
+        assert!(err.to_string().contains("last live operator"), "{err}");
+        assert_eq!(gate.table.live_labels(), vec!["ada"]);
+        ada.finish().unwrap();
+        ada_server.join().unwrap().unwrap();
+
+        // the audit log attributed every verb; the revoked operator's
+        // refusal is recorded unauthenticated (no label was proved)
+        let audit = std::fs::read_to_string(&audit_path).unwrap();
+        assert!(
+            audit.contains("operator=\"grace\" verb=register outcome=ok"),
+            "{audit}"
+        );
+        assert!(audit.contains("operator=\"ada\" verb=revoke outcome=ok"), "{audit}");
+        assert!(audit.contains("operator=\"ada\" verb=revoke outcome=err"), "{audit}");
+        assert!(
+            audit.contains("operator=\"(unauthenticated)\" verb=- outcome=refused"),
+            "{audit}"
+        );
+        assert!(audit.contains("was revoked"), "{audit}");
+        std::fs::remove_file(&audit_path).ok();
+    }
+
+    /// The MITM proof for the v5 hole: a "server" that answers an
+    /// authenticated verb with a **cleartext** `AdminOk` (or a replayed
+    /// sealed ack from an earlier verb) no longer gets believed — the
+    /// client refuses both typed, before decoding anything.
+    #[test]
+    fn client_refuses_forged_and_replayed_replies() {
+        let cred = [0x21u8; 32];
+        let (mut server_side, client_side) = pipe_pair();
+        let mitm = std::thread::spawn(move || {
+            assert!(matches!(
+                read_message(&mut server_side).unwrap(),
+                Message::AdminHello
+            ));
+            let nonce = [0x07u8; 32];
+            write_message(&mut server_side, &Message::AdminChallenge { nonce }).unwrap();
+            // verb 1: fabricate a cleartext success ack
+            let _ = read_message(&mut server_side).unwrap();
+            write_message(
+                &mut server_side,
+                &Message::AdminOk { detail: "registered alpha@0 (forged)".into() },
+            )
+            .unwrap();
+            // verb 2: replay a correctly-sealed ack from counter 1
+            let _ = read_message(&mut server_side).unwrap();
+            let stale = seal_admin_reply(
+                &cred,
+                &nonce,
+                1,
+                &Message::AdminOk { detail: "drained (stale)".into() },
+            );
+            write_message(&mut server_side, &stale).unwrap();
+        });
+
+        let mut admin = AdminClient::over(client_side);
+        admin.authenticate(cred).unwrap();
+        let err = admin.status().unwrap_err();
+        assert!(
+            matches!(&err, Error::AdminAuth(m) if m.contains("forged or downgraded")),
+            "{err}"
+        );
+        let err = admin.drain("alpha", 0).unwrap_err();
+        assert!(
+            matches!(&err, Error::AdminAuth(m)
+                if m.contains("anti-replay") && m.contains("reply counter 1")),
+            "{err}"
+        );
+        mitm.join().unwrap();
     }
 
     /// Challenge nonces never repeat within a process — the property the

@@ -1,0 +1,159 @@
+//! Append-only admin-plane audit log: every admin verb — dispatched or
+//! refused — lands here as one line attributed to the operator whose
+//! credential sealed it.
+//!
+//! The log exists so a rollover gone wrong (or an operator gone rogue)
+//! can be reconstructed after the fact: *who* registered, drained,
+//! retired, or revoked *what*, and whether the registry accepted it.
+//! Authentication failures are recorded too, attributed to
+//! `(unauthenticated)` — a forged or revoked credential never earns a
+//! label it could not prove.
+//!
+//! Properties:
+//! * **Append-only** — the file is opened `O_APPEND`; the writer never
+//!   seeks or truncates, and concurrent admin sessions interleave whole
+//!   lines (each `record` is a single `write_all` under a mutex).
+//! * **Secret-safe** — credentials, MACs, and nonces never appear in an
+//!   entry; only labels, verb names, and human-readable outcome text.
+//!   The file is still created `0600` ([`AuditLog::open`]) because verb
+//!   details can leak operational facts (vault paths, model names).
+//! * **One line per event** — embedded newlines in outcome details are
+//!   flattened so the log stays greppable line-by-line.
+//!
+//! Format (space-separated `key=value`, detail quoted last):
+//!
+//! ```text
+//! ts=1754610000 operator="ada" verb=drain outcome=ok detail="draining alpha@0; successor 1"
+//! ts=1754610021 operator="(unauthenticated)" verb=- outcome=refused detail="admin frame MAC verification failed"
+//! ```
+
+use crate::{Error, Result};
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::os::unix::fs::OpenOptionsExt;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// The operator label recorded for frames that failed authentication
+/// (no credential proved, so no label is trusted).
+pub const UNAUTHENTICATED: &str = "(unauthenticated)";
+
+/// Handle to an append-only audit log file. Cheap to share
+/// (`Arc<AuditLog>`); all admin sessions of one server append to the
+/// same handle.
+pub struct AuditLog {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl std::fmt::Debug for AuditLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AuditLog").field("path", &self.path).finish()
+    }
+}
+
+impl AuditLog {
+    /// Open (or create, mode `0600`) the audit log at `path` for append.
+    ///
+    /// The mode applies only at creation — an existing log keeps its
+    /// permissions, on the POSIX rule that the operator may have
+    /// deliberately re-chmodded it. A *fresh* secret-bearing file never
+    /// transits through a world-readable state.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .mode(0o600)
+            .open(path)
+            .map_err(|e| {
+                Error::Config(format!("audit log {path:?} could not be opened: {e}"))
+            })?;
+        Ok(Self { path: path.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    /// Where this log writes (for startup banners and error messages).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one event. `operator` is the authenticated label (or
+    /// [`UNAUTHENTICATED`]), `verb` the admin verb name (`-` when no
+    /// verb was decoded), `outcome` one of `ok` / `err` / `refused`,
+    /// `detail` the human-readable result or error text.
+    ///
+    /// Logging must never take the admin plane down, so write failures
+    /// are warned and swallowed — an audit line is evidence, not a
+    /// precondition for dispatch (the verb already ran).
+    pub fn record(&self, operator: &str, verb: &str, outcome: &str, detail: &str) {
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let line = format!(
+            "ts={ts} operator={:?} verb={verb} outcome={outcome} detail={:?}\n",
+            flatten(operator),
+            flatten(detail),
+        );
+        let mut file = self.file.lock().unwrap();
+        if let Err(e) = file.write_all(line.as_bytes()).and_then(|()| file.flush()) {
+            crate::logging::warn(&format!(
+                "audit log {:?} write failed: {e} (event: {})",
+                self.path,
+                line.trim_end(),
+            ));
+        }
+    }
+}
+
+/// Collapse an arbitrary string onto one log line: newlines become `; `
+/// so multi-line status reports and error chains stay one event each.
+fn flatten(s: &str) -> String {
+    if !s.contains('\n') {
+        return s.to_string();
+    }
+    s.lines().collect::<Vec<_>>().join("; ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::os::unix::fs::PermissionsExt;
+
+    #[test]
+    fn audit_log_appends_0600_single_lines() {
+        let path = std::env::temp_dir()
+            .join(format!("mole_audit_test_{}.log", std::process::id()));
+        std::fs::remove_file(&path).ok();
+
+        let log = AuditLog::open(&path).unwrap();
+        let mode = std::fs::metadata(&path).unwrap().permissions().mode();
+        assert_eq!(mode & 0o777, 0o600, "audit log must be created 0600");
+
+        log.record("ada", "drain", "ok", "draining alpha@0; successor 1");
+        log.record(UNAUTHENTICATED, "-", "refused", "admin frame MAC verification failed");
+        // multi-line detail (a status report) still lands as one line
+        log.record("grace", "status", "ok", "alpha@0 state=active\nalpha@1 state=active");
+
+        // a second handle appends — never truncates
+        let log2 = AuditLog::open(&path).unwrap();
+        log2.record("ada", "retire", "err", "cannot retire alpha@0: drain it first");
+        drop((log, log2));
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "{text}");
+        assert!(lines[0].contains("operator=\"ada\" verb=drain outcome=ok"), "{}", lines[0]);
+        assert!(lines[1].contains("operator=\"(unauthenticated)\""), "{}", lines[1]);
+        assert!(lines[1].contains("outcome=refused"), "{}", lines[1]);
+        assert!(
+            lines[2].contains("alpha@0 state=active; alpha@1 state=active"),
+            "{}",
+            lines[2]
+        );
+        assert!(lines[3].contains("verb=retire outcome=err"), "{}", lines[3]);
+        for line in &lines {
+            assert!(line.starts_with("ts="), "{line}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -687,11 +687,27 @@ impl<S: Read + Write> DeliveryClient<S> {
         &self.dataset_id
     }
 
-    /// The dataset manifest (requested once, then cached).
+    /// The dataset manifest (requested once, then cached). A signature
+    /// carried on the frame is verified; pinning the publisher key
+    /// requires [`Self::manifest_verified`].
     pub fn manifest(&mut self) -> Result<&DatasetManifest> {
+        self.manifest_verified(None)
+    }
+
+    /// The dataset manifest with an optional pinned publisher key: an
+    /// unsigned or wrong-signer manifest is refused typed
+    /// ([`super::delivery::request_manifest_verified`]). The pin is
+    /// enforced on the request that populates the cache — call this
+    /// *before* [`Self::manifest`] when pinning.
+    pub fn manifest_verified(
+        &mut self,
+        expect: Option<&crate::sign::VerifyingKey>,
+    ) -> Result<&DatasetManifest> {
         if self.manifest.is_none() {
             let id = self.dataset_id.clone();
-            self.manifest = Some(delivery::request_manifest(&mut self.stream, &id)?);
+            let (m, _sig) =
+                delivery::request_manifest_verified(&mut self.stream, &id, expect)?;
+            self.manifest = Some(m);
         }
         Ok(self.manifest.as_ref().unwrap())
     }

@@ -40,10 +40,11 @@
 
 use super::client::CountingStream;
 use super::protocol::{
-    encode, read_message, write_message, ChunkMeta, Fault, Message, FAULT_SESSION,
-    PROTOCOL_VERSION,
+    encode, read_message, write_message, ChunkMeta, Fault, ManifestSig, Message,
+    FAULT_SESSION, PROTOCOL_VERSION,
 };
 use crate::hash::{ct_eq, sha256, to_hex, Sha256};
+use crate::sign::{SigningKey, VerifyingKey};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 use std::io::{Read, Write};
@@ -200,29 +201,109 @@ impl DatasetManifest {
             .collect()
     }
 
-    /// SHA-256 (hex) over the encoded manifest frame — what the resume
-    /// journal binds to, so a journal can never be replayed against a
-    /// re-chunked or re-morphed dataset.
+    /// SHA-256 (hex) over the encoded **unsigned** manifest frame — what
+    /// the resume journal binds to, so a journal can never be replayed
+    /// against a re-chunked or re-morphed dataset. Signing a manifest
+    /// ([`Self::to_signed_message`]) never perturbs this digest: the
+    /// signature block is excluded by construction.
     pub fn digest_hex(&self) -> String {
         to_hex(&sha256(&encode(&self.to_message())))
     }
 
+    /// The unsigned wire frame (`signature: None`).
     pub fn to_message(&self) -> Message {
         Message::Manifest {
             dataset_id: self.dataset_id.clone(),
             total_rows: self.total_rows,
             chunk_rows: self.chunk_rows,
             chunks: self.chunks.clone(),
+            signature: None,
+        }
+    }
+
+    /// The signed wire frame: an ed25519 signature over the encoded
+    /// unsigned frame, carried in the trailing [`ManifestSig`] block.
+    pub fn to_signed_message(&self, signer: &SigningKey) -> Message {
+        let sig = signer.sign(&encode(&self.to_message()));
+        match self.to_message() {
+            Message::Manifest { dataset_id, total_rows, chunk_rows, chunks, .. } => {
+                Message::Manifest {
+                    dataset_id,
+                    total_rows,
+                    chunk_rows,
+                    chunks,
+                    signature: Some(ManifestSig {
+                        signer: *signer.verifying_key().as_bytes(),
+                        sig,
+                    }),
+                }
+            }
+            _ => unreachable!("to_message always builds a Manifest"),
         }
     }
 
     pub fn from_message(msg: Message) -> Result<Self> {
+        Self::from_message_verified(msg, None).map(|(m, _)| m)
+    }
+
+    /// Parse a `Manifest` frame, verifying any signature it carries and
+    /// enforcing an optional pinned publisher key:
+    ///
+    /// * a carried signature that does not verify over the unsigned
+    ///   encoding is always refused typed — even without a pin, a
+    ///   manifest that *claims* to be signed must actually be;
+    /// * with `expect` pinned, an **unsigned** manifest is refused (a
+    ///   MITM stripping the block must not downgrade the transfer), and
+    ///   a signature by any *other* key is refused naming both keys.
+    ///
+    /// Returns the manifest plus the verified signature block (if any),
+    /// so callers can report who vouched for the dataset.
+    pub fn from_message_verified(
+        msg: Message,
+        expect: Option<&VerifyingKey>,
+    ) -> Result<(Self, Option<ManifestSig>)> {
         match msg {
-            Message::Manifest { dataset_id, total_rows, chunk_rows, chunks } => {
-                Ok(Self { dataset_id, total_rows, chunk_rows, chunks })
+            Message::Manifest { dataset_id, total_rows, chunk_rows, chunks, signature } => {
+                let manifest = Self { dataset_id, total_rows, chunk_rows, chunks };
+                if let Some(block) = &signature {
+                    let key = VerifyingKey(block.signer);
+                    key.verify(&encode(&manifest.to_message()), &block.sig).map_err(
+                        |e| {
+                            Error::Manifest(format!(
+                                "manifest signature by {} did not verify: {e}",
+                                key.to_hex()
+                            ))
+                        },
+                    )?;
+                }
+                if let Some(pin) = expect {
+                    match &signature {
+                        None => {
+                            return Err(Error::Manifest(format!(
+                                "publisher key {} is pinned but the manifest arrived \
+                                 unsigned (stripped or never signed) — refusing the \
+                                 transfer",
+                                pin.to_hex()
+                            )))
+                        }
+                        Some(block) if !ct_eq(&block.signer, pin.as_bytes()) => {
+                            return Err(Error::Manifest(format!(
+                                "manifest signed by {}, but the pinned publisher key \
+                                 is {} — refusing the transfer",
+                                to_hex(&block.signer),
+                                pin.to_hex()
+                            )))
+                        }
+                        Some(_) => {}
+                    }
+                }
+                Ok((manifest, signature))
             }
             Message::Fault { fault, .. } => Err(fault.into_error()),
-            other => Err(Error::Protocol(format!("expected Manifest, got {other:?}"))),
+            other => Err(Error::Protocol(format!(
+                "expected Manifest (tag 20), got frame tag {} in delivery session",
+                other.wire_tag()
+            ))),
         }
     }
 }
@@ -250,6 +331,9 @@ pub struct ChunkStore {
     chunk_rows: u32,
     chunks: Vec<StoredChunk>,
     fetch_counts: Vec<AtomicU32>,
+    /// Publisher signing key: when set, every served manifest carries a
+    /// [`ManifestSig`] block over its unsigned encoding.
+    signer: Option<SigningKey>,
 }
 
 impl ChunkStore {
@@ -301,6 +385,7 @@ impl ChunkStore {
             chunk_rows,
             chunks,
             fetch_counts: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            signer: None,
         })
     }
 
@@ -339,12 +424,34 @@ impl ChunkStore {
         self.chunks.iter().map(|c| c.payload.len() as u64).sum()
     }
 
+    /// Install the publisher signing key (`mole push-dataset
+    /// --sign-key`). Must happen before the store is shared — the server
+    /// holds stores behind `Arc`.
+    pub fn set_signer(&mut self, signer: SigningKey) {
+        self.signer = Some(signer);
+    }
+
+    /// The verifying half of the installed publisher key, if any.
+    pub fn signer_key(&self) -> Option<VerifyingKey> {
+        self.signer.as_ref().map(|s| s.verifying_key())
+    }
+
     pub fn manifest(&self) -> DatasetManifest {
         DatasetManifest {
             dataset_id: self.dataset_id.clone(),
             total_rows: self.total_rows,
             chunk_rows: self.chunk_rows,
             chunks: self.chunks.iter().map(|c| c.meta.clone()).collect(),
+        }
+    }
+
+    /// The manifest wire frame this store serves: signed when a
+    /// publisher key is installed, plain otherwise.
+    pub fn manifest_message(&self) -> Message {
+        let manifest = self.manifest();
+        match &self.signer {
+            Some(key) => manifest.to_signed_message(key),
+            None => manifest.to_message(),
         }
     }
 
@@ -397,7 +504,7 @@ pub fn serve_chunks<S: Read + Write>(stream: &mut S, store: &ChunkStore) -> Resu
                         fault(stream, format!("unknown dataset {dataset_id:?}"))? as u64;
                     continue;
                 }
-                bytes_out += write_message(stream, &store.manifest().to_message())? as u64;
+                bytes_out += write_message(stream, &store.manifest_message())? as u64;
             }
             Message::ChunkRequest { first, count } => {
                 let end = first.checked_add(count as u64);
@@ -425,10 +532,18 @@ pub fn serve_chunks<S: Read + Write>(stream: &mut S, store: &ChunkStore) -> Resu
             }
             Message::Fault { fault, .. } => return Err(fault.into_error()),
             other => {
-                fault(stream, format!("unexpected frame in delivery session: {other:?}"))?;
-                return Err(Error::Protocol(format!(
-                    "unexpected frame in delivery session: {other:?}"
-                )));
+                // A decodable frame that has no business in a delivery
+                // session (a Hello, an admin verb, a stray Chunk…) is a
+                // peer driving the wrong state machine, not line noise:
+                // name its wire tag, fault the peer, and end the session
+                // typed instead of guessing.
+                let msg = format!(
+                    "unexpected frame tag {} in delivery session (expected \
+                     ManifestRequest, ChunkRequest, or DeliveryDone)",
+                    other.wire_tag()
+                );
+                fault(stream, msg.clone())?;
+                return Err(Error::Protocol(msg));
             }
         }
     }
@@ -466,18 +581,34 @@ pub fn open_delivery<S: Read + Write>(stream: &mut S, dataset_id: &str) -> Resul
     match read_message(stream)? {
         Message::DatasetHello { dataset_id, .. } => Ok(dataset_id),
         Message::Fault { fault, .. } => Err(fault.into_error()),
-        other => Err(Error::Protocol(format!("expected DatasetHello, got {other:?}"))),
+        other => Err(Error::Protocol(format!(
+            "expected DatasetHello (tag 18), got frame tag {} in delivery handshake",
+            other.wire_tag()
+        ))),
     }
 }
 
 /// Request the manifest over an open delivery (or training) session.
-/// An empty `dataset_id` means "whatever this session serves".
+/// An empty `dataset_id` means "whatever this session serves". A
+/// carried signature is verified ([`DatasetManifest::from_message_verified`]);
+/// pinning the publisher key requires [`request_manifest_verified`].
 pub fn request_manifest<S: Read + Write>(
     stream: &mut S,
     dataset_id: &str,
 ) -> Result<DatasetManifest> {
+    request_manifest_verified(stream, dataset_id, None).map(|(m, _)| m)
+}
+
+/// [`request_manifest`] with an optional pinned publisher key: unsigned
+/// or wrong-signer manifests are refused typed before any chunk is
+/// trusted. Returns the verified signature block alongside the manifest.
+pub fn request_manifest_verified<S: Read + Write>(
+    stream: &mut S,
+    dataset_id: &str,
+    expect: Option<&VerifyingKey>,
+) -> Result<(DatasetManifest, Option<ManifestSig>)> {
     write_message(stream, &Message::ManifestRequest { dataset_id: dataset_id.to_string() })?;
-    DatasetManifest::from_message(read_message(stream)?)
+    DatasetManifest::from_message_verified(read_message(stream)?, expect)
 }
 
 /// Fetch and verify chunks `[first, first + count)`, invoking
@@ -567,7 +698,10 @@ fn read_one_chunk<S: Read + Write>(
             }
         }
         Message::Fault { fault, .. } => Err(fault.into_error()),
-        other => Err(Error::Protocol(format!("expected Chunk, got {other:?}"))),
+        other => Err(Error::Protocol(format!(
+            "expected Chunk (tag 22) for index {want}, got frame tag {}",
+            other.wire_tag()
+        ))),
     }
 }
 
@@ -577,7 +711,10 @@ pub fn finish_delivery<S: Read + Write>(stream: &mut S) -> Result<()> {
     match read_message(stream)? {
         Message::DeliveryDone => Ok(()),
         Message::Fault { fault, .. } => Err(fault.into_error()),
-        other => Err(Error::Protocol(format!("expected DeliveryDone, got {other:?}"))),
+        other => Err(Error::Protocol(format!(
+            "expected DeliveryDone (tag 23), got frame tag {} at delivery close",
+            other.wire_tag()
+        ))),
     }
 }
 
@@ -596,7 +733,10 @@ pub fn encode_batch_chunk(id: u64, rows: &Tensor, labels: &[i32]) -> Vec<u8> {
 pub fn decode_batch_chunk(raw: &[u8]) -> Result<(u64, Tensor, Vec<i32>)> {
     match super::protocol::decode(4, raw)? {
         Message::MorphedBatch { id, rows, labels } => Ok((id, rows, labels)),
-        other => Err(Error::Protocol(format!("expected batch chunk, got {other:?}"))),
+        other => Err(Error::Protocol(format!(
+            "expected batch chunk (MorphedBatch, tag 4), got frame tag {}",
+            other.wire_tag()
+        ))),
     }
 }
 
@@ -716,6 +856,10 @@ pub struct PullOptions {
     /// Test/CI hook: abort the transfer (typed error containing
     /// [`KILL_MARKER`]) once this many chunks verified *in this run*.
     pub kill_after: Option<usize>,
+    /// Pinned publisher key (`mole pull-dataset --expect-signer`): the
+    /// manifest must carry a valid [`ManifestSig`] by exactly this key
+    /// or the pull is refused before any chunk is trusted.
+    pub expect_signer: Option<VerifyingKey>,
 }
 
 /// What a completed (or killed) pull did.
@@ -785,7 +929,11 @@ where
 {
     let mut mstream = CountingStream::new(connect()?);
     open_delivery(&mut mstream, &opts.dataset_id)?;
-    let manifest = request_manifest(&mut mstream, &opts.dataset_id)?;
+    let (manifest, _sig) = request_manifest_verified(
+        &mut mstream,
+        &opts.dataset_id,
+        opts.expect_signer.as_ref(),
+    )?;
     let digest = manifest.digest_hex();
     let n = manifest.chunks.len();
     let offsets = manifest.offsets();
@@ -883,14 +1031,21 @@ where
             }
             Err(e) => {
                 // prefer the injected kill over the secondary aborts it
-                // causes on sibling stripes
+                // causes on sibling stripes; the error that loses the
+                // slot is still surfaced in the log — a stripe failure
+                // is never silently swallowed
                 let is_kill = e.to_string().contains(KILL_MARKER);
                 match &first_err {
                     None => first_err = Some(e),
                     Some(prev) if is_kill && !prev.to_string().contains(KILL_MARKER) => {
+                        crate::logging::warn(&format!(
+                            "delivery: stripe error superseded by injected kill: {prev}"
+                        ));
                         first_err = Some(e)
                     }
-                    _ => {}
+                    Some(_) => crate::logging::warn(&format!(
+                        "delivery: additional stripe error (first one is returned): {e}"
+                    )),
                 }
             }
         }
@@ -1174,6 +1329,7 @@ mod tests {
             journal: Some(jpath.clone()),
             resume: true,
             kill_after: Some(9),
+            expect_signer: None,
         };
         let err = pull(pipe_connector(&store2), &opts, |_, off, raw| sink.put(off, raw))
             .unwrap_err();
@@ -1195,6 +1351,7 @@ mod tests {
             journal: Some(jpath.clone()),
             resume: true,
             kill_after: None,
+            expect_signer: None,
         };
         let report = pull(pipe_connector(&store2), &opts, |_, off, raw| sink.put(off, raw))
             .unwrap();
@@ -1229,5 +1386,116 @@ mod tests {
         assert_eq!(flat, idx);
         assert_eq!(contiguous_runs(&idx), vec![(0, 3), (5, 2), (9, 1)]);
         assert_eq!(contiguous_runs(&[]), vec![]);
+    }
+
+    /// Manifest signing end to end: a signed store serves a verifiable
+    /// manifest whose digest (journal binding) matches the unsigned one;
+    /// pin enforcement refuses unsigned, wrong-signer, and tampered
+    /// manifests typed.
+    #[test]
+    fn signed_manifest_verifies_and_pins() {
+        let signer = SigningKey::from_seed([0x5A; 32]);
+        let pin = signer.verifying_key();
+        let data = test_blob(6_000, 0x516);
+        let mut store = ChunkStore::from_bytes("blob", &data, 1024, true).unwrap();
+        let unsigned_digest = store.manifest().digest_hex();
+        store.set_signer(signer.clone());
+        assert_eq!(store.signer_key(), Some(pin));
+
+        // the signed frame verifies, with or without the pin, and the
+        // signature block never perturbs the journal-binding digest
+        let frame = store.manifest_message();
+        let (m, sig) =
+            DatasetManifest::from_message_verified(frame.clone(), Some(&pin)).unwrap();
+        assert_eq!(m.digest_hex(), unsigned_digest);
+        assert_eq!(sig.unwrap().signer, *pin.as_bytes());
+        DatasetManifest::from_message_verified(frame.clone(), None).unwrap();
+
+        // unsigned manifest under a pin: refused, naming the pinned key
+        let unsigned = store.manifest().to_message();
+        match DatasetManifest::from_message_verified(unsigned, Some(&pin)) {
+            Err(Error::Manifest(msg)) => {
+                assert!(msg.contains("unsigned"), "{msg}");
+                assert!(msg.contains(&pin.to_hex()), "{msg}");
+            }
+            other => panic!("expected unsigned-under-pin refusal, got {other:?}"),
+        }
+
+        // signed by a different key: refused naming both keys
+        let other_pin = SigningKey::from_seed([0x66; 32]).verifying_key();
+        match DatasetManifest::from_message_verified(frame.clone(), Some(&other_pin)) {
+            Err(Error::Manifest(msg)) => {
+                assert!(msg.contains(&pin.to_hex()), "{msg}");
+                assert!(msg.contains(&other_pin.to_hex()), "{msg}");
+            }
+            other => panic!("expected wrong-signer refusal, got {other:?}"),
+        }
+
+        // tampered manifest body: the carried signature no longer
+        // verifies, even without a pin
+        let tampered = match frame {
+            Message::Manifest { total_rows, chunk_rows, chunks, signature, .. } => {
+                Message::Manifest {
+                    dataset_id: "evil".into(),
+                    total_rows,
+                    chunk_rows,
+                    chunks,
+                    signature,
+                }
+            }
+            other => panic!("expected Manifest, got {other:?}"),
+        };
+        match DatasetManifest::from_message_verified(tampered, None) {
+            Err(Error::Manifest(msg)) => {
+                assert!(msg.contains("did not verify"), "{msg}")
+            }
+            other => panic!("expected signature failure, got {other:?}"),
+        }
+    }
+
+    /// The pin rides the whole pull path: a signed store satisfies a
+    /// pinned pull bit-for-bit, an unsigned store is refused before any
+    /// chunk transfers.
+    #[test]
+    fn pull_with_pinned_publisher_key() {
+        let signer = SigningKey::from_seed([0x21; 32]);
+        let pin = signer.verifying_key();
+        let data = test_blob(12_000, 0x9219);
+        let mut signed_store = ChunkStore::from_bytes("blob", &data, 1024, true).unwrap();
+        signed_store.set_signer(signer);
+        let signed_store = std::sync::Arc::new(signed_store);
+
+        let sink = VecSink::new(data.len());
+        let opts = PullOptions {
+            dataset_id: "blob".into(),
+            stripes: 2,
+            expect_signer: Some(pin),
+            ..Default::default()
+        };
+        let report = pull(pipe_connector(&signed_store), &opts, |_, off, raw| {
+            sink.put(off, raw)
+        })
+        .unwrap();
+        assert_eq!(sink.into_inner(), data);
+        assert_eq!(report.fetched_chunks, signed_store.num_chunks());
+
+        // same pull against an unsigned store: refused at the manifest,
+        // zero chunks served
+        let unsigned_store = std::sync::Arc::new(
+            ChunkStore::from_bytes("blob", &data, 1024, true).unwrap(),
+        );
+        let err = pull(pipe_connector(&unsigned_store), &opts, |_, off, raw| {
+            sink_noop(off, raw)
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("unsigned"), "unexpected error: {err}");
+        assert!(
+            unsigned_store.fetch_counts().iter().all(|&c| c == 0),
+            "no chunk may be served past a refused manifest"
+        );
+    }
+
+    fn sink_noop(_offset: u64, _raw: &[u8]) -> Result<()> {
+        Ok(())
     }
 }

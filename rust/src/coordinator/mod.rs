@@ -20,14 +20,19 @@
 //!   instead of silent stalls; [`loadgen`] (`mole loadgen`) is the
 //!   matching open-loop multi-connection driver.
 //! * **Admin surface** ([`admin`]): `Admin*` frames on the same
-//!   listener (`mole admin register|drain|retire|status`) mutate the
-//!   registry at runtime — the live half of key rotation: register the
-//!   rotated epoch, drain the old one (typed `Fault::Draining` carrying
-//!   the successor epoch), retire it once its batcher is empty. Access
-//!   control is either the legacy loopback-only gate or — with a
-//!   vault-derived credential installed — a challenge–response MAC
-//!   handshake (per-frame HMAC + monotonic counter, protocol v5) that
-//!   makes remote admin legal and forged/replayed frames die typed.
+//!   listener (`mole admin register|drain|retire|status|
+//!   revoke-operator`) mutate the registry at runtime — the live half
+//!   of key rotation: register the rotated epoch, drain the old one
+//!   (typed `Fault::Draining` carrying the successor epoch), retire it
+//!   once its batcher is empty. Access control is either the legacy
+//!   loopback-only gate or — with vault-derived credentials installed —
+//!   a challenge–response MAC handshake (per-frame HMAC + monotonic
+//!   counter, protocol v5; **bidirectional** since v8: replies come
+//!   back sealed too, so a forged or replayed `AdminOk` dies typed at
+//!   the client). Credentials are per-operator ([`OperatorTable`],
+//!   vault roster + `mole operator`), revocable live
+//!   (`AdminRevoke`), and every verb is attributed to its operator in
+//!   an append-only [`AuditLog`].
 //! * **Bulk delivery plane ([`delivery`], protocol v7)**: chunked,
 //!   hash-verified, resumable, striped morphed-dataset transfer —
 //!   [`delivery::ChunkStore`] + manifest serving on the provider side,
@@ -48,6 +53,7 @@
 //! used by benches (no sockets, same state machine).
 
 pub mod admin;
+pub mod audit;
 pub mod batcher;
 pub mod client;
 pub mod delivery;
@@ -61,14 +67,16 @@ pub mod registry;
 pub mod server;
 pub mod trainer;
 
-pub use admin::AdminClient;
+pub use admin::{AdminClient, OperatorTable, SHARED_OPERATOR};
+pub use audit::AuditLog;
 pub use batcher::{AdaptiveWindow, BatcherConfig, ServingHandle};
 pub use client::{ClientConfig, DeliveryClient, MoleClient, ProviderSession, ServerInfo};
 pub use delivery::{ChunkStore, DatasetManifest, PullOptions, PullReport};
 pub use developer::{DeveloperNode, TrainOutcome};
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use protocol::{
-    admin_mac, open_admin, seal_admin, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
+    admin_mac, open_admin, open_admin_reply, seal_admin, seal_admin_reply, Fault,
+    ManifestSig, Message, DIR_REPLY, DIR_REQUEST, EPOCH_LATEST, FAULT_SESSION,
     PROTOCOL_VERSION,
 };
 pub use provider::ProviderNode;

@@ -52,9 +52,9 @@
 //! captured from another session never verifies) and the counter makes
 //! byte-identical replays and reorders within a session die typed —
 //! verified in constant time ([`crate::hash::ct_eq`]) **before** the
-//! inner frame is even decoded ([`open_admin`]). The MAC authenticates
-//! and freshens admin *commands* only: it provides no confidentiality,
-//! no wire encryption, and does not cover server replies.
+//! inner frame is even decoded ([`open_admin`]). As shipped in v5 the
+//! MAC covered admin *commands* only; v8 extended it to replies (below).
+//! It still provides no confidentiality and no wire encryption.
 //!
 //! ## Backpressure faults (v6)
 //!
@@ -85,6 +85,30 @@
 //! Chunk payloads are opaque bytes at this layer; integrity is checked
 //! against the manifest hash *while decoding* on the client
 //! ([`super::delivery::decode_chunk`]).
+//!
+//! ## Bidirectional admin auth, operator verbs, signed manifests (v8)
+//!
+//! v8 closes the v5 reply hole: the admin MAC preimage gains a
+//! **direction byte** ([`DIR_REQUEST`] / [`DIR_REPLY`]) between the
+//! counter and the inner tag, and the server seals its `AdminOk` /
+//! `Fault` answers under the same session nonce at the *request's*
+//! counter ([`seal_admin_reply`]). The client verifies constant-time
+//! before decode ([`open_admin_reply`]), mirroring the request path —
+//! a MITM can no longer forge an "ok" ack, and because requests and
+//! replies authenticate under different direction bytes, a reflected
+//! request never verifies as a reply (or vice versa) even at the same
+//! counter. The wire layout of `AdminAuthed` (tag 17) is unchanged —
+//! the direction byte exists only inside the MAC preimage.
+//!
+//! v8 also adds `AdminRevoke` (tag 24): revoke a named operator's
+//! credential on the serving side, live — in-flight admin sessions
+//! included. And [`Message::Manifest`] (tag 20) grows an optional
+//! trailing ed25519 signature block ([`ManifestSig`]): the publisher's
+//! verifying key plus a signature over the manifest's **unsigned**
+//! encoding, so a puller that pins the publisher's key refuses a forged
+//! or tampered manifest before fetching a single chunk (and the
+//! journal-binding digest, computed over the unsigned encoding, is
+//! stable whether or not the manifest travels signed).
 
 use crate::hash::{ct_eq, hmac_sha256};
 use crate::tensor::Tensor;
@@ -107,11 +131,15 @@ const MAX_PAYLOAD: usize = 1 << 30;
 /// added the bulk-delivery frames (tags 18–23:
 /// `DatasetHello`/`ManifestRequest`/`Manifest`/`ChunkRequest`/`Chunk`/
 /// `DeliveryDone`) for chunked, hash-verified, resumable
-/// morphed-dataset transfer. **v3 is deliberately skipped**:
+/// morphed-dataset transfer; v8 added the admin-MAC **direction byte**
+/// (replies now sealed too — [`seal_admin_reply`]/[`open_admin_reply`]),
+/// the `AdminRevoke` operator-revocation verb (tag 24), and the
+/// optional ed25519 signature block on `Manifest` frames
+/// ([`ManifestSig`]). **v3 is deliberately skipped**:
 /// pre-versioning (v1) `Hello` frames began with the geometry's α = 3,
 /// which decodes as "version 3" — a build claiming v3 could not tell a
 /// legacy peer from a current one.
-pub const PROTOCOL_VERSION: u32 = 7;
+pub const PROTOCOL_VERSION: u32 = 8;
 
 /// `epoch` sentinel meaning "the newest epoch the peer serves".
 pub const EPOCH_LATEST: u32 = u32::MAX;
@@ -212,6 +240,20 @@ pub struct ChunkMeta {
     pub compressed: bool,
     /// SHA-256 over the raw bytes ([`crate::hash::sha256`]).
     pub sha256: [u8; 32],
+}
+
+/// Optional ed25519 signature block on a [`Message::Manifest`] (v8):
+/// the publisher's verifying key and a detached signature over the
+/// manifest's **unsigned** encoding (the frame payload with this block
+/// absent), so signing never perturbs the digest that binds resume
+/// journals. The embedded key alone proves integrity; origin requires
+/// the puller to pin the expected key (`--expect-signer`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestSig {
+    /// The publisher's ed25519 verifying key.
+    pub signer: [u8; 32],
+    /// Signature over the unsigned manifest encoding.
+    pub sig: [u8; 64],
 }
 
 /// Protocol messages.
@@ -316,6 +358,8 @@ pub enum Message {
         /// Rows per chunk (0 for an opaque byte blob).
         chunk_rows: u32,
         chunks: Vec<ChunkMeta>,
+        /// Optional publisher signature over the unsigned encoding (v8).
+        signature: Option<ManifestSig>,
     },
     /// Request chunks `[first, first + count)` (client → server). The
     /// server answers with `count` [`Message::Chunk`] frames in index
@@ -333,9 +377,21 @@ pub enum Message {
     /// Bulk-delivery flush handshake: client sends it when done pulling,
     /// server echoes it and ends the session.
     DeliveryDone,
+    /// Admin (v8): revoke a named operator's credential, live. The
+    /// serving side drops the label from its operator table immediately
+    /// — the revoked credential's next frame dies typed, in-flight
+    /// sessions included. Only carries the label; credentials never
+    /// cross the wire.
+    AdminRevoke { label: String },
 }
 
 impl Message {
+    /// The message's wire tag — lets error paths name an unexpected
+    /// frame by its on-the-wire identity instead of a `{:?}` dump.
+    pub fn wire_tag(&self) -> u8 {
+        self.tag()
+    }
+
     fn tag(&self) -> u8 {
         match self {
             Message::Hello { .. } => 1,
@@ -361,41 +417,51 @@ impl Message {
             Message::ChunkRequest { .. } => 21,
             Message::Chunk { .. } => 22,
             Message::DeliveryDone => 23,
+            Message::AdminRevoke { .. } => 24,
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// admin-plane MAC (v5)
+// admin-plane MAC (v5, bidirectional since v8)
 // ---------------------------------------------------------------------------
 
 /// Domain-separation label for admin-frame MACs.
 const ADMIN_MAC_LABEL: &[u8] = b"mole-admin-frame-v1";
 
+/// Direction byte in the admin MAC preimage: client → server (v8).
+pub const DIR_REQUEST: u8 = 0;
+/// Direction byte in the admin MAC preimage: server → client (v8).
+pub const DIR_REPLY: u8 = 1;
+
 /// MAC for one authenticated admin frame: HMAC-SHA256 keyed by the
-/// vault-derived credential over `label ‖ nonce ‖ counter ‖ inner_tag ‖
+/// credential over `label ‖ nonce ‖ counter ‖ direction ‖ inner_tag ‖
 /// inner`. Covering the tag and counter (not just the payload) means a
 /// verb cannot be transplanted onto another verb's payload and a frame
-/// cannot be replayed under a recycled counter.
+/// cannot be replayed under a recycled counter; covering the direction
+/// (v8) means a captured *request* envelope can never be reflected back
+/// at the client as a *reply*, even at a matching counter.
 pub fn admin_mac(
     credential: &[u8; 32],
     nonce: &[u8; 32],
     counter: u64,
+    direction: u8,
     inner_tag: u8,
     inner: &[u8],
 ) -> [u8; 32] {
-    let mut msg = Vec::with_capacity(ADMIN_MAC_LABEL.len() + 32 + 8 + 1 + inner.len());
+    let mut msg = Vec::with_capacity(ADMIN_MAC_LABEL.len() + 32 + 8 + 2 + inner.len());
     msg.extend_from_slice(ADMIN_MAC_LABEL);
     msg.extend_from_slice(nonce);
     msg.extend_from_slice(&counter.to_le_bytes());
+    msg.push(direction);
     msg.push(inner_tag);
     msg.extend_from_slice(inner);
     hmac_sha256(credential, &msg)
 }
 
-/// Seal an admin verb for the authenticated plane: encode it, stamp the
-/// caller's frame counter, and MAC the envelope under `credential` and
-/// the session `nonce`.
+/// Seal an admin verb for the authenticated plane (client → server,
+/// [`DIR_REQUEST`]): encode it, stamp the caller's frame counter, and
+/// MAC the envelope under `credential` and the session `nonce`.
 pub fn seal_admin(
     credential: &[u8; 32],
     nonce: &[u8; 32],
@@ -404,8 +470,25 @@ pub fn seal_admin(
 ) -> Message {
     let inner_tag = msg.tag();
     let inner = encode(msg);
-    let mac = admin_mac(credential, nonce, counter, inner_tag, &inner);
+    let mac = admin_mac(credential, nonce, counter, DIR_REQUEST, inner_tag, &inner);
     Message::AdminAuthed { counter, mac, inner_tag, inner }
+}
+
+/// Seal a server answer for the authenticated plane (server → client,
+/// [`DIR_REPLY`], v8). The reply is sealed **at the request's counter**
+/// — not a fresh one — so the client can check, with one equality, that
+/// this ack answers the verb it just sent: a replayed earlier ack, a
+/// reordered one, and a reflected request all fail before decode.
+pub fn seal_admin_reply(
+    credential: &[u8; 32],
+    nonce: &[u8; 32],
+    request_counter: u64,
+    msg: &Message,
+) -> Message {
+    let inner_tag = msg.tag();
+    let inner = encode(msg);
+    let mac = admin_mac(credential, nonce, request_counter, DIR_REPLY, inner_tag, &inner);
+    Message::AdminAuthed { counter: request_counter, mac, inner_tag, inner }
 }
 
 /// Server-side verification of one [`Message::AdminAuthed`] envelope.
@@ -441,7 +524,7 @@ pub fn open_admin(
             )))
         }
     };
-    let want = admin_mac(credential, nonce, counter, inner_tag, inner);
+    let want = admin_mac(credential, nonce, counter, DIR_REQUEST, inner_tag, inner);
     if !ct_eq(&want, mac) {
         return Err(Error::AdminAuth("admin frame MAC verification failed".into()));
     }
@@ -452,6 +535,50 @@ pub fn open_admin(
         )));
     }
     Ok((counter, decode(inner_tag, inner)?))
+}
+
+/// Client-side verification of a sealed server reply (v8). Mirrors
+/// [`open_admin`]'s order — constant-time MAC first, freshness second,
+/// decode last — with reply-specific rules:
+///
+/// 1. the MAC is recomputed under [`DIR_REPLY`] and compared
+///    **constant-time** — a forged ack, a tampered detail string, and a
+///    reflected request envelope (right MAC, wrong direction) all die
+///    here, before the inner bytes are decoded;
+/// 2. the reply's counter must **equal** the counter of the request it
+///    answers — a replayed ack from an earlier verb in this session
+///    carries a valid MAC for *its* counter and dies here, typed as a
+///    replay;
+/// 3. only then is the inner frame decoded.
+pub fn open_admin_reply(
+    credential: &[u8; 32],
+    nonce: &[u8; 32],
+    request_counter: u64,
+    frame: &Message,
+) -> Result<Message> {
+    let (counter, mac, inner_tag, inner) = match frame {
+        Message::AdminAuthed { counter, mac, inner_tag, inner } => {
+            (*counter, mac, *inner_tag, inner.as_slice())
+        }
+        other => {
+            return Err(Error::AdminAuth(format!(
+                "expected a sealed admin reply, got cleartext frame tag {} \
+                 (forged or downgraded reply)",
+                other.tag()
+            )))
+        }
+    };
+    let want = admin_mac(credential, nonce, counter, DIR_REPLY, inner_tag, inner);
+    if !ct_eq(&want, mac) {
+        return Err(Error::AdminAuth("admin reply MAC verification failed".into()));
+    }
+    if counter != request_counter {
+        return Err(Error::AdminAuth(format!(
+            "anti-replay: reply counter {counter} does not answer request \
+             {request_counter} (replayed or reordered admin reply)"
+        )));
+    }
+    decode(inner_tag, inner)
 }
 
 // ---------------------------------------------------------------------------
@@ -709,7 +836,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_str(&mut out, dataset_id);
         }
         Message::ManifestRequest { dataset_id } => put_str(&mut out, dataset_id),
-        Message::Manifest { dataset_id, total_rows, chunk_rows, chunks } => {
+        Message::Manifest { dataset_id, total_rows, chunk_rows, chunks, signature } => {
             put_str(&mut out, dataset_id);
             put_u64(&mut out, *total_rows);
             put_u32(&mut out, *chunk_rows);
@@ -719,6 +846,14 @@ pub fn encode(msg: &Message) -> Vec<u8> {
                 put_u32(&mut out, c.wire_len);
                 out.push(c.compressed as u8);
                 out.extend_from_slice(&c.sha256);
+            }
+            match signature {
+                None => out.push(0),
+                Some(s) => {
+                    out.push(1);
+                    out.extend_from_slice(&s.signer);
+                    out.extend_from_slice(&s.sig);
+                }
             }
         }
         Message::ChunkRequest { first, count } => {
@@ -733,6 +868,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             out.extend_from_slice(data);
         }
         Message::DeliveryDone => {}
+        Message::AdminRevoke { label } => put_str(&mut out, label),
     }
     out
 }
@@ -851,7 +987,20 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
                 };
                 chunks.push(ChunkMeta { raw_len, wire_len, compressed, sha256: c.bytes32()? });
             }
-            Message::Manifest { dataset_id, total_rows, chunk_rows, chunks }
+            let signature = match c.u8()? {
+                0 => None,
+                1 => {
+                    let signer = c.bytes32()?;
+                    let sig: [u8; 64] = c.take(64)?.try_into().unwrap();
+                    Some(ManifestSig { signer, sig })
+                }
+                k => {
+                    return Err(Error::Protocol(format!(
+                        "bad manifest signature flag {k}"
+                    )))
+                }
+            };
+            Message::Manifest { dataset_id, total_rows, chunk_rows, chunks, signature }
         }
         21 => Message::ChunkRequest { first: c.u64()?, count: c.u32()? },
         22 => {
@@ -869,6 +1018,7 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
             Message::Chunk { index, compressed, raw_len, data }
         }
         23 => Message::DeliveryDone,
+        24 => Message::AdminRevoke { label: c.str()? },
         t => return Err(Error::Protocol(format!("unknown message tag {t}"))),
     };
     c.done()?;
@@ -1067,9 +1217,18 @@ mod tests {
                 compressed: false,
                 sha256: [1; 32],
             }],
+            signature: None,
         };
         let mut buf = Vec::new();
         write_message(&mut buf, &msg).unwrap();
+        // a bad signature flag (trailing byte) is refused typed too
+        let mut bad_sig = buf.clone();
+        let last = bad_sig.len() - 1;
+        bad_sig[last] = 9;
+        match read_message(&mut bad_sig.as_slice()) {
+            Err(Error::Protocol(m)) => assert!(m.contains("signature flag"), "{m}"),
+            other => panic!("expected bad-signature-flag error, got {other:?}"),
+        }
         // count field sits after dataset_id(4+1) + total_rows(8) +
         // chunk_rows(4) in the payload; lie that there are 2^32-1 chunks
         let count_at = 7 + 4 + 1 + 8 + 4;
@@ -1255,6 +1414,21 @@ mod tests {
                         sha256: [0xCD; 32],
                     },
                 ],
+                signature: None,
+            },
+            // a signed manifest (v8): the trailing signature block rides
+            // through every truncation / bit-flip suite below
+            Message::Manifest {
+                dataset_id: "cifar-morphed".into(),
+                total_rows: 60_000,
+                chunk_rows: 64,
+                chunks: vec![ChunkMeta {
+                    raw_len: 12_288,
+                    wire_len: 12_288,
+                    compressed: false,
+                    sha256: [0xEF; 32],
+                }],
+                signature: Some(ManifestSig { signer: [0x11; 32], sig: [0x22; 64] }),
             },
             Message::ChunkRequest { first: 3, count: 5 },
             Message::Chunk {
@@ -1270,6 +1444,21 @@ mod tests {
                 data: vec![255, 0, 45, 7],
             },
             Message::DeliveryDone,
+            // v8 frames: the operator-revocation verb, bare and sealed,
+            // plus a sealed server reply ([`DIR_REPLY`] direction)
+            Message::AdminRevoke { label: "ada".into() },
+            seal_admin(
+                &[1u8; 32],
+                &[2u8; 32],
+                2,
+                &Message::AdminRevoke { label: "ada".into() },
+            ),
+            seal_admin_reply(
+                &[1u8; 32],
+                &[2u8; 32],
+                2,
+                &Message::AdminOk { detail: "revoked operator \"ada\"".into() },
+            ),
         ]
     }
 
@@ -1509,6 +1698,77 @@ mod tests {
         assert!(matches!(err, Error::AdminAuth(_)));
     }
 
+    /// The v8 reply path: a sealed `AdminOk` opens against the request's
+    /// counter; every forgery axis — cleartext downgrade, tampered
+    /// detail, replayed earlier ack, reflected request envelope,
+    /// cross-direction confusion — dies with its pinned typed error,
+    /// MAC check strictly before the counter check.
+    #[test]
+    fn sealed_reply_roundtrip_and_forgeries() {
+        let cred = [0x41u8; 32];
+        let nonce = [0x42u8; 32];
+        let ok = Message::AdminOk { detail: "drained alpha@0".into() };
+        let reply = seal_admin_reply(&cred, &nonce, 5, &ok);
+        // wire round-trip, then opens against the matching request counter
+        let mut buf = Vec::new();
+        write_message(&mut buf, &reply).unwrap();
+        let got = read_message(&mut buf.as_slice()).unwrap();
+        assert_eq!(open_admin_reply(&cred, &nonce, 5, &got).unwrap(), ok);
+        // a cleartext AdminOk — the exact v5 hole — is refused typed
+        let err = open_admin_reply(&cred, &nonce, 5, &ok).unwrap_err();
+        assert!(
+            matches!(&err, Error::AdminAuth(m) if m.contains("forged or downgraded")),
+            "{err}"
+        );
+        // wrong credential / wrong session nonce → reply-MAC failure
+        for (c, n) in [(&[0x99u8; 32], &nonce), (&cred, &[0x99u8; 32])] {
+            let err = open_admin_reply(c, n, 5, &reply).unwrap_err();
+            assert!(
+                matches!(&err, Error::AdminAuth(m) if m.contains("reply MAC")),
+                "{err}"
+            );
+        }
+        // a replayed ack from an earlier verb: valid MAC for *its*
+        // counter, refused as a reply replay (counter mismatch)
+        let stale = seal_admin_reply(&cred, &nonce, 3, &ok);
+        let err = open_admin_reply(&cred, &nonce, 5, &stale).unwrap_err();
+        assert!(
+            matches!(&err, Error::AdminAuth(m)
+                if m.contains("anti-replay") && m.contains("reply counter 3")),
+            "{err}"
+        );
+        // direction separation: a *request* envelope reflected back at
+        // the client never verifies as a reply, even at the matching
+        // counter — and a reply never opens as a request
+        let request = seal_admin(&cred, &nonce, 5, &ok);
+        let err = open_admin_reply(&cred, &nonce, 5, &request).unwrap_err();
+        assert!(
+            matches!(&err, Error::AdminAuth(m) if m.contains("reply MAC")),
+            "{err}"
+        );
+        let err = open_admin(&cred, &nonce, 0, &reply).unwrap_err();
+        assert!(matches!(&err, Error::AdminAuth(m) if m.contains("MAC")), "{err}");
+        // tampered detail string inside the sealed reply
+        if let Message::AdminAuthed { counter, mac, inner_tag, mut inner } = reply.clone() {
+            inner[5] ^= 1;
+            let bad = Message::AdminAuthed { counter, mac, inner_tag, inner };
+            let err = open_admin_reply(&cred, &nonce, 5, &bad).unwrap_err();
+            assert!(
+                matches!(&err, Error::AdminAuth(m) if m.contains("reply MAC")),
+                "{err}"
+            );
+        } else {
+            unreachable!()
+        }
+        // a sealed Fault reply (typed refusal) opens the same way
+        let fault = Message::Fault {
+            of: FAULT_SESSION,
+            fault: Fault::Generic { msg: "no epoch 7".into() },
+        };
+        let sealed_fault = seal_admin_reply(&cred, &nonce, 6, &fault);
+        assert_eq!(open_admin_reply(&cred, &nonce, 6, &sealed_fault).unwrap(), fault);
+    }
+
     /// Valid MAC over garbage inner bytes: authentication succeeds, the
     /// inner decode then fails with its own typed error (never a panic).
     #[test]
@@ -1517,14 +1777,14 @@ mod tests {
         let nonce = [2u8; 32];
         // garbage after the MAC, but *covered* by it: tag 11 with junk
         let inner = vec![0xFFu8; 9];
-        let mac = admin_mac(&cred, &nonce, 1, 11, &inner);
+        let mac = admin_mac(&cred, &nonce, 1, DIR_REQUEST, 11, &inner);
         let frame = Message::AdminAuthed { counter: 1, mac, inner_tag: 11, inner };
         match open_admin(&cred, &nonce, 0, &frame) {
             Err(Error::Protocol(_) | Error::Io(_)) => {}
             other => panic!("expected a typed decode error, got {other:?}"),
         }
         // unknown inner tag, correctly MACed
-        let mac = admin_mac(&cred, &nonce, 1, 200, b"");
+        let mac = admin_mac(&cred, &nonce, 1, DIR_REQUEST, 200, b"");
         let frame =
             Message::AdminAuthed { counter: 1, mac, inner_tag: 200, inner: Vec::new() };
         match open_admin(&cred, &nonce, 0, &frame) {

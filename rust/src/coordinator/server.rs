@@ -88,6 +88,8 @@
 //! answer with the typed `Fault::Draining`/`Fault::Retired` carrying
 //! the successor epoch so clients re-resolve instead of failing.
 
+use super::admin::{AdminGate, OperatorTable};
+use super::audit::AuditLog;
 use super::delivery::ChunkStore;
 use super::protocol::{
     try_decode_frame, write_message, Fault, Message, EPOCH_LATEST, FAULT_SESSION,
@@ -168,7 +170,26 @@ pub struct ServeConfig {
     /// credential gate supersedes, never weakens, the loopback gate)
     /// and authenticated peers may be non-loopback. `None` keeps the
     /// legacy loopback-only gate.
+    ///
+    /// Since v8 this is the *legacy* spelling: at bind it becomes a
+    /// one-entry [`OperatorTable`] under the label `"shared"`. When
+    /// [`ServeConfig::operators`] is also set, the table wins and this
+    /// field is ignored (per-operator attribution supersedes the shared
+    /// secret).
     pub admin_credential: Option<[u8; 32]>,
+    /// Per-operator credential table (vault roster, `mole operator
+    /// add|revoke|list`, served via `mole serve --admin-vault`). `Some`
+    /// turns on the same MAC authentication as
+    /// [`ServeConfig::admin_credential`], but each frame is attributed
+    /// to the operator whose credential sealed it and operators can be
+    /// revoked **live** (`mole admin revoke-operator`) without a
+    /// restart. Shared `Arc`: every session and the CLI see one table.
+    pub operators: Option<Arc<OperatorTable>>,
+    /// Append-only admin audit log path ([`AuditLog`], created `0600`).
+    /// Every authenticated admin verb — and every refused frame — is
+    /// recorded attributed to its operator label. `None` disables
+    /// auditing.
+    pub audit_log: Option<std::path::PathBuf>,
     /// Bulk dataset served to `DatasetHello` sessions (protocol v7,
     /// `mole push-dataset`). `None` refuses delivery handshakes typed.
     pub dataset: Option<Arc<ChunkStore>>,
@@ -185,6 +206,8 @@ impl Default for ServeConfig {
             max_pending: 128,
             admin_enabled: true,
             admin_credential: None,
+            operators: None,
+            audit_log: None,
             dataset: None,
         }
     }
@@ -276,6 +299,23 @@ impl Server {
         }
         let registry = Arc::new(registry);
         let metrics = Arc::new(ServingMetrics::default());
+        // normalize the two credential spellings into one gate, built
+        // once and shared by every driver shard and detached session —
+        // a revocation must be visible process-wide, so there can be
+        // exactly one live table and one audit handle per instance
+        let admin_gate = match (&cfg.operators, cfg.admin_credential) {
+            (Some(table), _) => Some(table.clone()),
+            (None, Some(cred)) => Some(Arc::new(OperatorTable::shared(cred))),
+            (None, None) => None,
+        }
+        .map(|table| -> Result<Arc<AdminGate>> {
+            let audit = match &cfg.audit_log {
+                Some(path) => Some(Arc::new(AuditLog::open(path)?)),
+                None => None,
+            };
+            Ok(Arc::new(AdminGate { table, audit }))
+        })
+        .transpose()?;
         let listener = TcpListener::bind(&cfg.addr)?;
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -299,6 +339,7 @@ impl Server {
                 shared,
                 wake_rx,
                 admin_threads: admin_threads.clone(),
+                admin_gate: admin_gate.clone(),
                 sessions: HashMap::new(),
                 next_token: 0,
                 poller: Poller::new(),
@@ -558,8 +599,10 @@ enum Detach {
     /// Hand the connection to a blocking thread running the legacy
     /// (loopback-gated) admin loop; the first admin frame rides along.
     AdminPlain(Message),
-    /// Same, for the authenticated admin loop; carries the credential.
-    AdminAuthed([u8; 32]),
+    /// Same, for the authenticated admin loop; carries the instance's
+    /// shared gate (operator table + audit log) so revocations made on
+    /// one session bind every other.
+    AdminAuthed(Arc<AdminGate>),
     /// Hand the connection to a blocking thread serving bulk delivery
     /// (`DatasetHello` already validated; the thread sends the echo).
     Delivery(Arc<ChunkStore>),
@@ -603,6 +646,7 @@ struct Driver {
     shared: Arc<DriverShared>,
     wake_rx: WakeRx,
     admin_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    admin_gate: Option<Arc<AdminGate>>,
     sessions: HashMap<u64, Session>,
     next_token: u64,
     poller: Poller,
@@ -952,10 +996,10 @@ impl Driver {
                     refuse(sess, &self.metrics, Fault::Generic { msg });
                     return None;
                 }
-                match self.cfg.admin_credential {
+                match &self.admin_gate {
                     // credential gate on: any peer address may try; the
                     // MAC decides, not the routing table
-                    Some(cred) => Some(Detach::AdminAuthed(cred)),
+                    Some(gate) => Some(Detach::AdminAuthed(gate.clone())),
                     None => {
                         let e = Error::AdminAuth(
                             "admin authentication is not configured on this server \
@@ -970,15 +1014,16 @@ impl Driver {
             first @ (Message::AdminRegister { .. }
             | Message::AdminDrain { .. }
             | Message::AdminRetire { .. }
+            | Message::AdminRevoke { .. }
             | Message::AdminStatus) => {
                 if !self.cfg.admin_enabled {
                     let msg = "admin surface is disabled on this server".to_string();
                     refuse(sess, &self.metrics, Fault::Generic { msg });
                     return None;
                 }
-                if self.cfg.admin_credential.is_some() {
-                    // downgrade attempt: with a credential installed, a
-                    // bare admin verb is never dispatched — loopback
+                if self.admin_gate.is_some() {
+                    // downgrade attempt: with a credential gate installed,
+                    // a bare admin verb is never dispatched — loopback
                     // included
                     let e = Error::AdminAuth(
                         "admin frames must be authenticated on this server \
@@ -1129,8 +1174,8 @@ impl Driver {
                 Detach::AdminPlain(first) => {
                     super::admin::run_admin_session(stream, first, &registry)
                 }
-                Detach::AdminAuthed(cred) => {
-                    super::admin::run_authed_admin_session(stream, &registry, &cred)
+                Detach::AdminAuthed(gate) => {
+                    super::admin::run_authed_admin_session(stream, &registry, &gate)
                 }
                 Detach::Delivery(store) => {
                     super::delivery::run_delivery_session(&mut stream, &store).map(|bytes| {

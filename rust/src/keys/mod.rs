@@ -20,23 +20,46 @@
 //! auditors walk a vault chain back to its root (the parent
 //! fingerprint is empty only at epoch 0).
 //!
-//! ## The admin credential
+//! ## The admin credentials
 //!
-//! The vault also anchors the **admin-plane credential**
-//! ([`KeyBundle::admin_credential`]): a labeled HMAC-SHA256 derivation
-//! over the bundle's secret material (morph seed, credential seed,
-//! permutation, epoch). It is what `mole serve` checks admin-frame MACs
-//! against and what `mole keygen` prints for distribution. Because the
-//! derivation runs over the *secrets* — not the public SHA-256
-//! fingerprint that crosses the wire in `Hello` — knowing a lane's
-//! fingerprint yields nothing about its credential, and rotating the
-//! vault re-derives the credential along with everything else. The v3
-//! vault format records the credential seed explicitly so the
-//! derivation is pinned byte-for-byte by the stored material.
+//! The vault also anchors the **admin-plane credentials**: labeled
+//! HMAC-SHA256 derivations over the bundle's secret material (morph
+//! seed, credential seed, permutation, epoch). They are what `mole
+//! serve` checks admin-frame MACs against and what `mole keygen` /
+//! `mole operator add` print for distribution. Because the derivations
+//! run over the *secrets* — not the public SHA-256 fingerprint that
+//! crosses the wire in `Hello` — knowing a lane's fingerprint yields
+//! nothing about any credential, and rotating the vault re-derives them
+//! all. Two kinds exist:
+//!
+//! * [`KeyBundle::admin_credential`] — the legacy shared credential
+//!   (one per server, vault v3 era). Still derived identically, so
+//!   pre-v4 deployments keep working.
+//! * [`KeyBundle::operator_credential`] — one **independent** credential
+//!   per named operator in the vault's v4 operator table
+//!   ([`KeyBundle::add_operator`] / [`KeyBundle::revoke_operator`]).
+//!   Each folds the operator label into the HMAC key, so no operator's
+//!   credential is computable from another's, revocation is per-label,
+//!   and the serving side can attribute every admin verb to the label
+//!   whose credential sealed it.
+//!
+//! ## Signed vaults (`MOLESIG1`)
+//!
+//! A vault (any version) can travel inside an ed25519-signed envelope:
+//! `MOLESIG1 | pubkey(32) | sig(64) | inner vault bytes`, produced by
+//! [`KeyBundle::save_signed`] with a [`crate::sign::SigningKey`]. On
+//! load the signature is verified **before** the inner bytes are
+//! decoded, so a tampered vault is refused at load, not at first use —
+//! and when the consumer pins the publisher's verifying key
+//! ([`KeyBundle::load_verified`]), distribution needs no pre-shared
+//! secret at all. An envelope whose embedded key is *not* pinned still
+//! proves integrity (the bytes match some signer) but not origin; see
+//! the README threat model.
 
 use crate::augconv::ChannelPerm;
 use crate::hash::{from_hex, hmac_sha256, to_hex, Sha256};
 use crate::morph::MorphKey;
+use crate::sign::{SigningKey, VerifyingKey, PUBLIC_KEY_LEN, SIGNATURE_LEN};
 use crate::{Error, Geometry, Result};
 use std::io::{Read, Write};
 use std::path::Path;
@@ -46,15 +69,30 @@ const MAGIC_V1: &[u8; 8] = b"MOLEKEY1";
 /// Legacy epoch/lineage magic (pre-credential); still loadable, never
 /// written.
 const MAGIC_V2: &[u8; 8] = b"MOLEKEY2";
-/// Current vault magic: adds the admin-credential seed.
+/// Legacy single-credential magic (pre-operator-table); still loadable,
+/// never written.
 const MAGIC_V3: &[u8; 8] = b"MOLEKEY3";
+/// Current vault magic: adds the named operator table.
+const MAGIC_V4: &[u8; 8] = b"MOLEKEY4";
+
+/// Magic of the ed25519-signed vault envelope:
+/// `MOLESIG1 | pubkey(32) | sig(64) | inner vault bytes`.
+pub const SIG_MAGIC: &[u8; 8] = b"MOLESIG1";
+/// Envelope header length (magic + pubkey + signature).
+const SIG_HEADER_LEN: usize = 8 + PUBLIC_KEY_LEN + SIGNATURE_LEN;
 
 /// Domain-separation label for deriving the credential seed from the
 /// morph seed (legacy vaults carry no explicit seed; this keeps the
 /// derivation deterministic across formats).
 const CRED_SEED_LABEL: &[u8] = b"mole-admin-cred-seed-v1";
-/// Domain-separation label for the admin credential itself.
+/// Domain-separation label for the (legacy shared) admin credential.
 const CRED_LABEL: &[u8] = b"mole-admin-credential-v1";
+/// Domain-separation label for per-operator credentials.
+const OPERATOR_CRED_LABEL: &[u8] = b"mole-operator-credential-v1";
+
+/// Longest accepted operator label (bytes). Labels name people in audit
+/// lines and CLI output, not paragraphs.
+pub const MAX_OPERATOR_LABEL: usize = 64;
 
 /// The provider's secret bundle for one delivery session.
 #[derive(Debug, Clone)]
@@ -74,6 +112,33 @@ pub struct KeyBundle {
     /// re-drawn on every rotation, so a rotated vault's credential never
     /// matches its parent's.
     pub cred_seed: u64,
+    /// Named operator table (vault v4 field): each label derives an
+    /// independent admin credential via
+    /// [`KeyBundle::operator_credential`]. Sorted lexicographically so
+    /// the encoding (and thus the fingerprint) is canonical.
+    pub operators: Vec<String>,
+}
+
+/// Reject labels that would garble audit lines or CLI output: empty,
+/// over [`MAX_OPERATOR_LABEL`] bytes, or containing whitespace /
+/// control / non-ASCII characters.
+fn validate_operator_label(label: &str) -> Result<()> {
+    if label.is_empty() {
+        return Err(Error::Key("operator label must not be empty".into()));
+    }
+    if label.len() > MAX_OPERATOR_LABEL {
+        return Err(Error::Key(format!(
+            "operator label {:?} is {} bytes, max {MAX_OPERATOR_LABEL}",
+            label,
+            label.len()
+        )));
+    }
+    if !label.bytes().all(|b| b.is_ascii_graphic()) {
+        return Err(Error::Key(format!(
+            "operator label {label:?} must be printable ASCII without spaces"
+        )));
+    }
+    Ok(())
 }
 
 /// Deterministic credential seed for a given morph seed (labeled, so it
@@ -99,6 +164,7 @@ impl KeyBundle {
             epoch: 0,
             parent_fingerprint: String::new(),
             cred_seed: derive_cred_seed(seed),
+            operators: Vec::new(),
         })
     }
 
@@ -125,7 +191,39 @@ impl KeyBundle {
             epoch,
             parent_fingerprint: self.fingerprint(),
             cred_seed: derive_cred_seed(new_seed),
+            // the roster survives rotation, but every credential it
+            // derives changes with the new seed material and epoch
+            operators: self.operators.clone(),
         })
+    }
+
+    /// Add a named operator to the table. The label must be fresh,
+    /// non-empty printable ASCII (≤ [`MAX_OPERATOR_LABEL`] bytes); the
+    /// table stays sorted so the vault encoding is canonical.
+    pub fn add_operator(&mut self, label: &str) -> Result<()> {
+        validate_operator_label(label)?;
+        if self.operators.iter().any(|l| l == label) {
+            return Err(Error::Key(format!(
+                "operator {label:?} already exists in this vault"
+            )));
+        }
+        self.operators.push(label.to_string());
+        self.operators.sort();
+        Ok(())
+    }
+
+    /// Remove a named operator from the table. Their credential stops
+    /// deriving from this vault; a serving process reloading (or told
+    /// live via `mole admin revoke-operator`) stops accepting it.
+    pub fn revoke_operator(&mut self, label: &str) -> Result<()> {
+        let before = self.operators.len();
+        self.operators.retain(|l| l != label);
+        if self.operators.len() == before {
+            return Err(Error::Key(format!(
+                "operator {label:?} does not exist in this vault"
+            )));
+        }
+        Ok(())
     }
 
     /// Materialize the morph key (regenerates the core from the seed; the
@@ -144,26 +242,58 @@ impl KeyBundle {
     ///
     /// Fingerprints are **format-versioned**: they hash the current
     /// magic + body, so a vault-format bump (v2 → v3 added the
-    /// credential seed) renames every bundle — a `parent_fingerprint`
-    /// recorded by an older release will not equal the parent's
-    /// post-upgrade `fingerprint()`. Runtime routing never depends on
-    /// this (lanes resolve by `(model, epoch)`); audit walks across a
-    /// format boundary must recompute under the recording release.
+    /// credential seed, v3 → v4 the operator table) renames every
+    /// bundle — a `parent_fingerprint` recorded by an older release
+    /// will not equal the parent's post-upgrade `fingerprint()`.
+    /// Runtime routing never depends on this (lanes resolve by
+    /// `(model, epoch)`); audit walks across a format boundary must
+    /// recompute under the recording release. Editing the operator
+    /// table also renames the vault — deliberate, so an audit trail
+    /// records roster changes as material changes.
     pub fn fingerprint(&self) -> String {
         let mut h = Sha256::new();
-        h.update(MAGIC_V3);
+        h.update(MAGIC_V4);
         h.update(self.encode_body());
         to_hex(&h.finalize())
     }
 
-    /// The vault-derived admin-plane credential: a labeled HMAC-SHA256
-    /// over the bundle's **secret** material (morph seed, credential
-    /// seed, permutation, epoch — everything the vault stores). This is
-    /// the shared secret between `mole keygen`/`mole admin` and a
+    /// The vault-derived **shared** admin-plane credential: a labeled
+    /// HMAC-SHA256 over the bundle's secret material (morph seed,
+    /// credential seed, permutation, epoch). This is the legacy
+    /// one-per-server secret between `mole keygen`/`mole admin` and a
     /// credential-gated `mole serve`; rotation re-derives it, so an old
-    /// epoch's credential dies with the rollover.
+    /// epoch's credential dies with the rollover. Deliberately computed
+    /// over [`KeyBundle::encode_secret_core`] (the v3-era byte layout),
+    /// so editing the v4 operator table does **not** shift the shared
+    /// credential and an upgraded vault authenticates exactly like its
+    /// v3 ancestor.
     pub fn admin_credential(&self) -> [u8; 32] {
-        hmac_sha256(&self.encode_body(), CRED_LABEL)
+        hmac_sha256(&self.encode_secret_core(), CRED_LABEL)
+    }
+
+    /// The independent credential for one named operator: HMAC-SHA256
+    /// keyed by `cred_seed ‖ epoch ‖ label` over the operator-credential
+    /// domain label. Folding the label into the *key* (not the message)
+    /// means no operator can derive a colleague's credential from their
+    /// own, and folding the epoch means every credential dies with a
+    /// rotation just like the shared one. Pure derivation: callable for
+    /// labels not (or no longer) in the table — the serving side
+    /// enforces roster membership, not this function.
+    pub fn operator_credential(&self, label: &str) -> [u8; 32] {
+        let mut key = Vec::with_capacity(16 + label.len());
+        key.extend_from_slice(&self.cred_seed.to_le_bytes());
+        key.extend_from_slice(&(self.epoch as u64).to_le_bytes());
+        key.extend_from_slice(label.as_bytes());
+        hmac_sha256(&key, OPERATOR_CRED_LABEL)
+    }
+
+    /// The full roster with derived credentials — what a serving
+    /// process installs as its live operator table.
+    pub fn operator_credentials(&self) -> Vec<(String, [u8; 32])> {
+        self.operators
+            .iter()
+            .map(|l| (l.clone(), self.operator_credential(l)))
+            .collect()
     }
 
     /// Hex form of [`KeyBundle::admin_credential`] — the distribution
@@ -172,7 +302,12 @@ impl KeyBundle {
         to_hex(&self.admin_credential())
     }
 
-    fn encode_body(&self) -> Vec<u8> {
+    /// The v3-era byte layout: fixed fields, lineage, permutation — the
+    /// **secret core** without the operator table. This is the HMAC
+    /// input for [`KeyBundle::admin_credential`], frozen so upgrading a
+    /// vault to v4 (or editing its roster) never shifts the shared
+    /// credential installed on existing servers.
+    fn encode_secret_core(&self) -> Vec<u8> {
         let mut out = Vec::new();
         for v in [
             self.geometry.alpha as u64,
@@ -195,28 +330,104 @@ impl KeyBundle {
         out
     }
 
+    /// Full v4 body: the secret core followed by the operator table
+    /// (u32 count, then u32 length + UTF-8 label per operator).
+    fn encode_body(&self) -> Vec<u8> {
+        let mut out = self.encode_secret_core();
+        out.extend_from_slice(&(self.operators.len() as u32).to_le_bytes());
+        for label in &self.operators {
+            out.extend_from_slice(&(label.len() as u32).to_le_bytes());
+            out.extend_from_slice(label.as_bytes());
+        }
+        out
+    }
+
     /// Serialize to the versioned vault format: MAGIC | body | SHA-256.
     pub fn to_bytes(&self) -> Vec<u8> {
         let body = self.encode_body();
         let mut out = Vec::with_capacity(8 + body.len() + 32);
-        out.extend_from_slice(MAGIC_V3);
+        out.extend_from_slice(MAGIC_V4);
         out.extend_from_slice(&body);
         let mut h = Sha256::new();
-        h.update(MAGIC_V3);
+        h.update(MAGIC_V4);
         h.update(&body);
         out.extend_from_slice(&h.finalize());
         out
     }
 
-    /// Deserialize + integrity-check. Reads the current `MOLEKEY3`
-    /// format plus the legacy `MOLEKEY2` (no credential seed; re-derived
-    /// from the morph seed) and `MOLEKEY1` layouts (which additionally
-    /// map to epoch 0 with no lineage).
+    /// Serialize inside the `MOLESIG1` envelope: the full vault bytes
+    /// signed by `signer`, with the verifying key embedded so any
+    /// reader can check integrity (pin the key to also get origin).
+    pub fn signed_bytes(&self, signer: &SigningKey) -> Vec<u8> {
+        let inner = self.to_bytes();
+        let sig = signer.sign(&inner);
+        let mut out = Vec::with_capacity(SIG_HEADER_LEN + inner.len());
+        out.extend_from_slice(SIG_MAGIC);
+        out.extend_from_slice(signer.verifying_key().as_bytes());
+        out.extend_from_slice(&sig);
+        out.extend_from_slice(&inner);
+        out
+    }
+
+    /// Deserialize + integrity-check. Reads the current `MOLEKEY4`
+    /// format plus the legacy `MOLEKEY3` (no operator table),
+    /// `MOLEKEY2` (no credential seed; re-derived from the morph seed)
+    /// and `MOLEKEY1` layouts (which additionally map to epoch 0 with
+    /// no lineage) — and any of those wrapped in a `MOLESIG1` signed
+    /// envelope, whose signature is verified (against the embedded key)
+    /// before the inner vault is decoded.
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        Ok(Self::from_bytes_verified(bytes, None)?.0)
+    }
+
+    /// Like [`KeyBundle::from_bytes`], but returns the envelope's
+    /// verifying key (when signed) and enforces an optional pin:
+    /// with `expect` set, an unsigned vault or one signed by any other
+    /// key is refused — at load, before any field is decoded.
+    pub fn from_bytes_verified(
+        bytes: &[u8],
+        expect: Option<&VerifyingKey>,
+    ) -> Result<(Self, Option<VerifyingKey>)> {
+        if bytes.len() >= 8 && &bytes[..8] == SIG_MAGIC {
+            if bytes.len() < SIG_HEADER_LEN + 8 + 32 {
+                return Err(Error::Key("signed vault envelope truncated".into()));
+            }
+            let pubkey: [u8; PUBLIC_KEY_LEN] = bytes[8..8 + PUBLIC_KEY_LEN].try_into().unwrap();
+            let sig: [u8; SIGNATURE_LEN] =
+                bytes[8 + PUBLIC_KEY_LEN..SIG_HEADER_LEN].try_into().unwrap();
+            let inner = &bytes[SIG_HEADER_LEN..];
+            let signer = VerifyingKey(pubkey);
+            signer.verify(inner, &sig).map_err(|_| {
+                Error::Key(
+                    "vault signature verification failed (tampered or re-signed envelope)"
+                        .into(),
+                )
+            })?;
+            if let Some(want) = expect {
+                if want != &signer {
+                    return Err(Error::Key(format!(
+                        "vault signed by {}, expected signer {}",
+                        signer.to_hex(),
+                        want.to_hex()
+                    )));
+                }
+            }
+            return Ok((Self::from_unsigned_bytes(inner)?, Some(signer)));
+        }
+        if expect.is_some() {
+            return Err(Error::Key(
+                "vault is unsigned but a signer pin is configured".into(),
+            ));
+        }
+        Ok((Self::from_unsigned_bytes(bytes)?, None))
+    }
+
+    fn from_unsigned_bytes(bytes: &[u8]) -> Result<Self> {
         if bytes.len() < 8 + 32 {
             return Err(Error::Key("bad vault magic or truncated file".into()));
         }
         let version = match &bytes[..8] {
+            m if m == MAGIC_V4 => 4,
             m if m == MAGIC_V3 => 3,
             m if m == MAGIC_V2 => 2,
             m if m == MAGIC_V1 => 1,
@@ -230,10 +441,70 @@ impl KeyBundle {
         }
         let body = &payload[8..];
         match version {
+            4 => Self::decode_body_v4(body),
             3 => Self::decode_body_v3(body),
             2 => Self::decode_body_v2(body),
             _ => Self::decode_body_v1(body),
         }
+    }
+
+    fn decode_body_v4(body: &[u8]) -> Result<Self> {
+        let fixed = 9 * 8;
+        if body.len() < fixed + 4 {
+            return Err(Error::Key("vault body truncated".into()));
+        }
+        let u = |i: usize| -> u64 {
+            u64::from_le_bytes(body[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        let geometry = Geometry::new(u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize);
+        let kappa = u(4) as usize;
+        let morph_seed = u(5);
+        let epoch = u(6) as u32;
+        let cred_seed = u(7);
+        let beta = u(8) as usize;
+        let (parent_fingerprint, rest) = Self::decode_lineage(&body[fixed..])?;
+        let perm_len = beta
+            .checked_mul(4)
+            .ok_or_else(|| Error::Key("vault permutation length overflows".into()))?;
+        if rest.len() < perm_len.saturating_add(4) {
+            return Err(Error::Key("vault body truncated".into()));
+        }
+        let perm = Self::decode_perm(&rest[..perm_len], beta)?;
+        let mut ops = &rest[perm_len..];
+        let n_ops = u32::from_le_bytes(ops[..4].try_into().unwrap()) as usize;
+        ops = &ops[4..];
+        let mut operators = Vec::new();
+        for _ in 0..n_ops {
+            if ops.len() < 4 {
+                return Err(Error::Key("vault operator table truncated".into()));
+            }
+            let len = u32::from_le_bytes(ops[..4].try_into().unwrap()) as usize;
+            let end = 4usize
+                .checked_add(len)
+                .ok_or_else(|| Error::Key("vault operator label length overflows".into()))?;
+            if ops.len() < end {
+                return Err(Error::Key("vault operator table truncated".into()));
+            }
+            let label = String::from_utf8(ops[4..end].to_vec())
+                .map_err(|_| Error::Key("vault operator label is not utf-8".into()))?;
+            operators.push(label);
+            ops = &ops[end..];
+        }
+        if !ops.is_empty() {
+            return Err(Error::Key(
+                "vault has trailing bytes after the operator table".into(),
+            ));
+        }
+        Ok(Self {
+            geometry,
+            kappa,
+            morph_seed,
+            perm,
+            epoch,
+            parent_fingerprint,
+            cred_seed,
+            operators,
+        })
     }
 
     fn decode_body_v3(body: &[u8]) -> Result<Self> {
@@ -260,6 +531,7 @@ impl KeyBundle {
             epoch,
             parent_fingerprint,
             cred_seed,
+            operators: Vec::new(),
         })
     }
 
@@ -286,6 +558,7 @@ impl KeyBundle {
             epoch,
             parent_fingerprint,
             cred_seed: derive_cred_seed(morph_seed),
+            operators: Vec::new(),
         })
     }
 
@@ -308,12 +581,16 @@ impl KeyBundle {
             epoch: 0,
             parent_fingerprint: String::new(),
             cred_seed: derive_cred_seed(morph_seed),
+            operators: Vec::new(),
         })
     }
 
-    /// Shared v2/v3 lineage decode: u32 length + UTF-8 fingerprint,
-    /// returning the remaining (permutation) bytes.
+    /// Shared v2/v3/v4 lineage decode: u32 length + UTF-8 fingerprint,
+    /// returning the remaining bytes.
     fn decode_lineage(bytes: &[u8]) -> Result<(String, &[u8])> {
+        if bytes.len() < 4 {
+            return Err(Error::Key("vault lineage field truncated".into()));
+        }
         let fp_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
         let fp_end = 4usize
             .checked_add(fp_len)
@@ -346,11 +623,31 @@ impl KeyBundle {
         Ok(())
     }
 
+    /// Save inside the `MOLESIG1` signed envelope (same 0600-at-create
+    /// discipline — the envelope still wraps secret material).
+    pub fn save_signed(&self, path: &Path, signer: &SigningKey) -> Result<()> {
+        let mut f = create_secret_file(path)?;
+        f.write_all(&self.signed_bytes(signer))?;
+        Ok(())
+    }
+
     /// Load from a vault file.
     pub fn load(path: &Path) -> Result<Self> {
         let mut bytes = Vec::new();
         std::fs::File::open(path)?.read_to_end(&mut bytes)?;
         Self::from_bytes(&bytes)
+    }
+
+    /// Load with signature pinning (see
+    /// [`KeyBundle::from_bytes_verified`]); the returned key is the
+    /// envelope's signer when the file was signed.
+    pub fn load_verified(
+        path: &Path,
+        expect: Option<&VerifyingKey>,
+    ) -> Result<(Self, Option<VerifyingKey>)> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        Self::from_bytes_verified(&bytes, expect)
     }
 }
 
@@ -380,7 +677,7 @@ pub fn rotate_file(
 /// would leave a window where another local user can open the file and
 /// keep the fd — exactly the multi-user-host scenario the admin
 /// credential exists for.
-fn create_secret_file(path: &Path) -> Result<std::fs::File> {
+pub(crate) fn create_secret_file(path: &Path) -> Result<std::fs::File> {
     let mut opts = std::fs::OpenOptions::new();
     opts.write(true).create(true).truncate(true);
     #[cfg(unix)]
@@ -486,7 +783,8 @@ mod tests {
         // the same derived credential seed)
         assert_eq!(loaded.fingerprint(), b.fingerprint());
         assert_eq!(loaded.admin_credential(), b.admin_credential());
-        assert_eq!(&loaded.to_bytes()[..8], MAGIC_V3);
+        assert_eq!(&loaded.to_bytes()[..8], MAGIC_V4);
+        assert!(loaded.operators.is_empty());
         // tampered legacy bytes are still caught
         let mut bad = v1_bytes(&b);
         bad[8 + 5 * 8] ^= 1;
@@ -542,6 +840,174 @@ mod tests {
         let mut bad = v2_bytes(&b);
         bad[8 + 5 * 8] ^= 1;
         assert!(matches!(KeyBundle::from_bytes(&bad), Err(Error::Key(_))));
+    }
+
+    /// Hand-encode the legacy MOLEKEY3 layout (no operator table) for
+    /// back-compat coverage — what every pre-v4 release wrote.
+    fn v3_bytes(b: &KeyBundle) -> Vec<u8> {
+        let mut body = Vec::new();
+        for v in [
+            b.geometry.alpha as u64,
+            b.geometry.m as u64,
+            b.geometry.beta as u64,
+            b.geometry.p as u64,
+            b.kappa as u64,
+            b.morph_seed,
+            b.epoch as u64,
+            b.cred_seed,
+            b.perm.beta() as u64,
+        ] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        body.extend_from_slice(&(b.parent_fingerprint.len() as u32).to_le_bytes());
+        body.extend_from_slice(b.parent_fingerprint.as_bytes());
+        for &p in b.perm.as_slice() {
+            body.extend_from_slice(&(p as u32).to_le_bytes());
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V3);
+        out.extend_from_slice(&body);
+        let mut h = Sha256::new();
+        h.update(MAGIC_V3);
+        h.update(&body);
+        out.extend_from_slice(&h.finalize());
+        out
+    }
+
+    #[test]
+    fn legacy_v3_vault_still_loads() {
+        let b = bundle().rotate(4242).unwrap();
+        let loaded = KeyBundle::from_bytes(&v3_bytes(&b)).unwrap();
+        assert_eq!(loaded.morph_seed, b.morph_seed);
+        assert_eq!(loaded.epoch, 1);
+        assert_eq!(loaded.cred_seed, b.cred_seed);
+        assert_eq!(loaded.parent_fingerprint, b.parent_fingerprint);
+        assert_eq!(loaded.perm, b.perm);
+        assert!(loaded.operators.is_empty());
+        // the upgrade path: the shared credential is frozen on the v3
+        // byte layout, so a v3 vault authenticates unchanged after
+        // re-saving as v4
+        assert_eq!(loaded.admin_credential(), b.admin_credential());
+        assert_eq!(&loaded.to_bytes()[..8], MAGIC_V4);
+        assert_eq!(
+            KeyBundle::from_bytes(&loaded.to_bytes())
+                .unwrap()
+                .admin_credential(),
+            b.admin_credential()
+        );
+        // tampered v3 bytes are still caught
+        let mut bad = v3_bytes(&b);
+        bad[8 + 7 * 8] ^= 1;
+        assert!(matches!(KeyBundle::from_bytes(&bad), Err(Error::Key(_))));
+    }
+
+    #[test]
+    fn operator_table_roundtrips_and_derives_independent_credentials() {
+        let mut b = bundle();
+        b.add_operator("ada").unwrap();
+        b.add_operator("grace").unwrap();
+        // duplicate, empty, oversized, and unprintable labels die typed
+        assert!(matches!(b.add_operator("ada"), Err(Error::Key(_))));
+        assert!(matches!(b.add_operator(""), Err(Error::Key(_))));
+        assert!(matches!(b.add_operator(&"x".repeat(65)), Err(Error::Key(_))));
+        assert!(matches!(b.add_operator("two words"), Err(Error::Key(_))));
+        // roundtrip preserves the (sorted) roster
+        let parsed = KeyBundle::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(parsed.operators, vec!["ada".to_string(), "grace".to_string()]);
+        // credentials: deterministic, pairwise distinct, distinct from
+        // the shared credential, and epoch-bound
+        assert_eq!(parsed.operator_credential("ada"), b.operator_credential("ada"));
+        assert_ne!(b.operator_credential("ada"), b.operator_credential("grace"));
+        assert_ne!(b.operator_credential("ada"), b.admin_credential());
+        let rotated = b.rotate(777).unwrap();
+        assert_eq!(rotated.operators, b.operators, "roster survives rotation");
+        assert_ne!(
+            rotated.operator_credential("ada"),
+            b.operator_credential("ada"),
+            "credentials die with the epoch"
+        );
+        // the shared credential ignores roster edits (frozen v3 core)…
+        let before = b.admin_credential();
+        b.revoke_operator("grace").unwrap();
+        assert_eq!(b.admin_credential(), before);
+        assert_eq!(b.operators, vec!["ada".to_string()]);
+        assert!(matches!(b.revoke_operator("grace"), Err(Error::Key(_))));
+        // …but the fingerprint records roster changes as material changes
+        assert_ne!(
+            KeyBundle::from_bytes(&b.to_bytes()).unwrap().fingerprint(),
+            parsed.fingerprint()
+        );
+        // hostile operator-table bytes: truncated table dies typed
+        let mut bytes = b.to_bytes();
+        let cut = bytes.len() - 32 - 2;
+        bytes.truncate(cut);
+        assert!(KeyBundle::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn signed_vault_envelope_verifies_before_decode() {
+        let signer = crate::sign::SigningKey::from_seed([42u8; 32]);
+        let mut b = bundle();
+        b.add_operator("ada").unwrap();
+        let signed = b.signed_bytes(&signer);
+        assert_eq!(&signed[..8], SIG_MAGIC);
+        // verified load recovers the bundle and the signer
+        let (loaded, key) = KeyBundle::from_bytes_verified(&signed, None).unwrap();
+        assert_eq!(loaded.fingerprint(), b.fingerprint());
+        assert_eq!(key, Some(signer.verifying_key()));
+        // pinning the right signer passes, the wrong one is refused
+        KeyBundle::from_bytes_verified(&signed, Some(&signer.verifying_key())).unwrap();
+        let other = crate::sign::SigningKey::from_seed([43u8; 32]);
+        let err = KeyBundle::from_bytes_verified(&signed, Some(&other.verifying_key()))
+            .unwrap_err();
+        assert!(err.to_string().contains("expected signer"), "{err}");
+        // an unsigned vault under a pin is refused
+        let err =
+            KeyBundle::from_bytes_verified(&b.to_bytes(), Some(&signer.verifying_key()))
+                .unwrap_err();
+        assert!(err.to_string().contains("unsigned"), "{err}");
+        // tampering anywhere — inner payload, signature, embedded key —
+        // is refused at load with the signature error, before decode
+        for offset in [8, 8 + 32, SIG_HEADER_LEN + 8 + 5 * 8, signed.len() - 1] {
+            let mut bad = signed.clone();
+            bad[offset] ^= 1;
+            let err = KeyBundle::from_bytes(&bad).unwrap_err();
+            assert!(
+                err.to_string().contains("signature verification failed"),
+                "offset {offset}: {err}"
+            );
+        }
+        // a re-signed envelope (attacker swaps in their own key + sig)
+        // still *loads* unpinned — integrity, not origin — but dies
+        // against a pinned signer; this is exactly what the README
+        // threat model promises
+        let resigned = {
+            let mut out = Vec::new();
+            out.extend_from_slice(SIG_MAGIC);
+            out.extend_from_slice(other.verifying_key().as_bytes());
+            out.extend_from_slice(&other.sign(&b.to_bytes()));
+            out.extend_from_slice(&b.to_bytes());
+            out
+        };
+        assert!(KeyBundle::from_bytes(&resigned).is_ok());
+        assert!(
+            KeyBundle::from_bytes_verified(&resigned, Some(&signer.verifying_key())).is_err()
+        );
+        // truncated envelope dies typed, not by panic
+        assert!(KeyBundle::from_bytes(&signed[..20]).is_err());
+        // file roundtrip with 0600
+        let path = std::env::temp_dir().join("mole_signed_vault_test.key");
+        b.save_signed(&path, &signer).unwrap();
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::PermissionsExt;
+            let mode = std::fs::metadata(&path).unwrap().permissions().mode();
+            assert_eq!(mode & 0o777, 0o600);
+        }
+        let (loaded, _) = KeyBundle::load_verified(&path, Some(&signer.verifying_key())).unwrap();
+        assert_eq!(loaded.fingerprint(), b.fingerprint());
+        assert_eq!(KeyBundle::load(&path).unwrap().fingerprint(), b.fingerprint());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

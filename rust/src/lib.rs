@@ -30,10 +30,12 @@
 //!   κ, channel permutation) with **key epochs**: `KeyBundle::rotate` /
 //!   [`keys::rotate_file`] advance to fresh material while recording
 //!   fingerprint lineage, so epoch N and N+1 can serve side by side
-//!   during rollover. The vault also derives the **admin-plane
-//!   credential** (labeled HMAC over the secrets, in-tree SHA-256 in
-//!   [`hash`]) that authenticates `mole admin` against a
-//!   credential-gated server.
+//!   during rollover. The vault also derives the **per-operator
+//!   admin-plane credentials** (labeled HMACs over the secrets plus an
+//!   operator label, in-tree SHA-256 in [`hash`]) that authenticate
+//!   `mole admin` against a credential-gated server, and vault files can
+//!   travel inside an ed25519-signed envelope ([`sign`]) so a tampered
+//!   vault is refused at load.
 //! * **Delivery system ([`coordinator`])** — the Fig.-1 protocol between
 //!   data provider and developer (versioned wire frames with model/epoch
 //!   routing and typed lifecycle faults), training on morphed streams,
@@ -95,6 +97,7 @@ pub mod overhead;
 pub mod rng;
 pub mod runtime;
 pub mod security;
+pub mod sign;
 pub mod ssim;
 pub mod tensor;
 pub mod testkit;

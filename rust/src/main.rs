@@ -7,28 +7,40 @@
 //! * `provider --listen ADDR [--batches N]` — run a data-provider node
 //! * `developer --connect ADDR` — run a developer node (train on stream)
 //! * `push-dataset --input FILE [--listen ADDR] [--dataset-id ID]
-//!   [--chunk-size N] [--compress] [--max-sessions N]` — serve a file as
-//!   a chunked, hash-manifested bulk dataset (protocol v7 delivery
-//!   plane). Chunk SHA-256s are computed once at startup; pulls ride the
-//!   evented server's session budget, so past `--max-sessions` they shed
-//!   with a typed overload fault instead of starving inference lanes
+//!   [--chunk-size N] [--compress] [--max-sessions N] [--sign-key FILE]`
+//!   — serve a file as a chunked, hash-manifested bulk dataset (protocol
+//!   v7 delivery plane). Chunk SHA-256s are computed once at startup;
+//!   pulls ride the evented server's session budget, so past
+//!   `--max-sessions` they shed with a typed overload fault instead of
+//!   starving inference lanes. `--sign-key` (a `mole sign-keygen` key)
+//!   attaches an ed25519 signature to the served manifest (v8) so
+//!   pullers can pin the publisher
 //! * `pull-dataset --out FILE [--connect ADDR] [--dataset-id ID]
-//!   [--stripe N] [--resume]` — pull a bulk dataset into FILE across
+//!   [--stripe N] [--resume] [--expect-signer PUBFILE]` — pull a bulk
+//!   dataset into FILE across
 //!   `--stripe` parallel connections, verifying every chunk hash while
 //!   decoding (corrupt chunks are re-fetched once, then fail typed).
 //!   Progress lands in `FILE.journal`; after an interrupt, `--resume`
 //!   fetches only the chunks the journal has not verified. The journal
-//!   is bound to the dataset id + manifest digest and removed on success
+//!   is bound to the dataset id + manifest digest and removed on
+//!   success. `--expect-signer` refuses any manifest not carrying a
+//!   valid ed25519 signature by that verifying key
 //! * `serve [--listen ADDR] [--model NAME,NAME…] [--max-batch N]
 //!   [--timeout-ms T] [--workers W] [--max-sessions N] [--max-pending N]
-//!   [--fixed-window] [--max-requests N] [--admin-credential FILE]` —
+//!   [--fixed-window] [--max-requests N] [--admin-credential FILE]
+//!   [--admin-vault FILE] [--audit-log FILE] [--vault-signer PUBFILE]` —
 //!   concurrent multi-tenant TCP inference server: every
 //!   `[serving.models.*]` config entry (or the `--model` subset) becomes
 //!   a registry lane over the adaptive micro-batcher. Sessions run on
 //!   `--workers` evented driver shards; past `--max-sessions` live /
 //!   `--max-pending` handshaking sessions new connects are answered with
 //!   a typed overload fault instead of queueing (`--max-requests` exits
-//!   after N answered requests; for smoke tests)
+//!   after N answered requests; for smoke tests). `--admin-vault` gates
+//!   the admin plane on the vault's **operator roster** (per-operator
+//!   credentials, live revocation; supersedes `--admin-credential`),
+//!   `--audit-log` appends every attributed admin verb to a 0600 file,
+//!   and `--vault-signer` refuses an admin vault that is unsigned or
+//!   not signed by that key
 //! * `loadgen [--connect ADDR] [--connections C] [--requests R]
 //!   [--pipeline P] [--rate RPS] [--model NAME] [--epoch E]` —
 //!   multi-connection serving load driver. `--rate 0` (default) is
@@ -47,17 +59,35 @@
 //!   [--credential-out FILE]` — rotate a vault to the next key epoch
 //!   (fresh morph seed + permutation, lineage recorded; the admin
 //!   credential re-derives with it)
-//! * `admin <register|drain|retire|status> [--connect ADDR]
-//!   [--credential FILE]` — drive a running server's live registry.
-//!   Without `--credential` the server must be loopback and
-//!   credential-free; with it, every verb is MAC-authenticated
-//!   (challenge–response + frame counter) and remote servers are legal.
+//! * `admin <register|drain|retire|status|revoke-operator>
+//!   [--connect ADDR] [--credential FILE]` — drive a running server's
+//!   live registry. Without `--credential` the server must be loopback
+//!   and credential-free; with it, every verb is MAC-authenticated both
+//!   ways (challenge–response + frame counter; since v8 replies come
+//!   back sealed too, so a forged or replayed ack dies typed) and
+//!   remote servers are legal.
 //!   `register --model NAME [--vault FILE | --kappa K --seed S]
 //!   [--trunk-seed T]` starts a new lane (the vault path is read by the
 //!   **server**); `drain --model NAME --epoch E` stops new traffic on an
 //!   epoch (clients re-resolve via the typed draining fault);
 //!   `retire --model NAME --epoch E` tears the drained lane down once
-//!   its batcher is empty; `status` prints one line per lane
+//!   its batcher is empty; `status` prints one line per lane;
+//!   `revoke-operator --label L` removes an operator from the running
+//!   server's table — their next verb is refused, never dispatched
+//! * `operator <add|revoke|list> --vault FILE [--label L]
+//!   [--credential-out FILE] [--sign-key FILE]` — edit a vault's
+//!   operator roster. `add` derives and prints (or writes 0600 via
+//!   `--credential-out`) the new operator's credential; `revoke`
+//!   removes the label so the next `serve --admin-vault` load excludes
+//!   it (use `admin revoke-operator` for the running instance); `list`
+//!   prints the roster. Editing re-writes the vault: pass `--sign-key`
+//!   to re-sign it when serving pins a signer
+//! * `sign-keygen --key FILE --pub FILE` — generate an in-tree ed25519
+//!   keypair: signing key (0600) and world-readable verifying key, for
+//!   vault envelopes and dataset-manifest signatures
+//! * `sign-vault --vault FILE --key FILE [--out FILE]` — wrap a vault
+//!   in the `MOLESIG1` signed envelope; a tampered or re-signed vault
+//!   is refused at every pinned load
 //! * `e2e [--steps N]` — in-process §4.4 three-group experiment (short)
 //! * `attack [--kappa K]` — run the three §4.2 attacks at small scale
 //!
@@ -112,15 +142,28 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("keygen") => keygen(&args, &cfg),
         Some("rotate-key") => rotate_key(&args),
         Some("admin") => admin(&args, &cfg),
+        Some("operator") => operator(&args, &cfg),
+        Some("sign-keygen") => sign_keygen(&args),
+        Some("sign-vault") => sign_vault(&args, &cfg),
         Some("e2e") => e2e(&args, &cfg),
         Some("attack") => attack(&args, &cfg),
         _ => {
             eprintln!(
-                "usage: mole <security-report|overhead|morph|provider|developer|push-dataset|pull-dataset|serve|loadgen|keygen|rotate-key|admin|e2e|attack> [options]"
+                "usage: mole <security-report|overhead|morph|provider|developer|push-dataset|pull-dataset|serve|loadgen|keygen|rotate-key|admin|operator|sign-keygen|sign-vault|e2e|attack> [options]"
             );
             Ok(())
         }
     }
+}
+
+/// The signer pin for vault loads: `--vault-signer` beats `[keys]
+/// signer_file`; empty = no pin (unsigned vaults accepted).
+fn signer_pin(args: &Args, cfg: &MoleConfig) -> Result<Option<mole::sign::VerifyingKey>> {
+    let path = args.get_or("vault-signer", &cfg.vault_signer_file);
+    if path.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(mole::sign::VerifyingKey::load(Path::new(&path))?))
 }
 
 fn geometry_arg(args: &Args, default: Geometry) -> Result<Geometry> {
@@ -259,12 +302,16 @@ fn push_dataset(args: &Args, cfg: &MoleConfig) -> Result<()> {
     let max_sessions = args.get_usize("max-sessions", cfg.max_sessions)?;
 
     let data = std::fs::read(input)?;
-    let store = std::sync::Arc::new(ChunkStore::from_bytes(
-        &dataset_id,
-        &data,
-        chunk_size,
-        compress,
-    )?);
+    let mut store = ChunkStore::from_bytes(&dataset_id, &data, chunk_size, compress)?;
+    if let Some(key_path) = args.get("sign-key") {
+        let key = mole::sign::SigningKey::load(Path::new(key_path))?;
+        println!(
+            "manifest signing on: publisher key {}",
+            key.verifying_key().to_hex()
+        );
+        store.set_signer(key);
+    }
+    let store = std::sync::Arc::new(store);
     let manifest = store.manifest();
     // empty registry over the built-in manifest contract: no inference
     // lanes, just the delivery plane
@@ -318,6 +365,20 @@ fn pull_dataset(args: &Args, cfg: &MoleConfig) -> Result<()> {
     let dataset_id = args.get_or("dataset-id", "");
     let stripes = args.get_usize("stripe", 1)?;
     let resume = args.flag("resume");
+    // --expect-signer takes a verifying-key file (as written by
+    // `mole sign-keygen --pub`) or the 64-char hex key itself
+    let expect_signer = match args.get("expect-signer") {
+        Some(v) => Some(if Path::new(v).exists() {
+            mole::sign::VerifyingKey::load(Path::new(v))?
+        } else {
+            mole::sign::VerifyingKey::from_hex_str(v).map_err(|e| {
+                mole::Error::Config(format!(
+                    "--expect-signer {v:?} is neither a readable key file nor hex: {e}"
+                ))
+            })?
+        }),
+        None => None,
+    };
     // CI/test hook: abort after N verified chunks to exercise resume
     let kill_after = match std::env::var("MOLE_DELIVERY_KILL_AFTER") {
         Ok(v) => Some(v.parse::<usize>().map_err(|_| {
@@ -327,8 +388,10 @@ fn pull_dataset(args: &Args, cfg: &MoleConfig) -> Result<()> {
     };
 
     // one handshake up front to size the output file from the manifest
+    // (the signer pin applies here too: a bad manifest dies before the
+    // output file is even created)
     let mut probe = DeliveryClient::connect(&addr, &dataset_id)?;
-    let total = probe.manifest()?.raw_bytes();
+    let total = probe.manifest_verified(expect_signer.as_ref())?.raw_bytes();
     probe.finish()?;
 
     let out_path = Path::new(out);
@@ -347,6 +410,7 @@ fn pull_dataset(args: &Args, cfg: &MoleConfig) -> Result<()> {
         journal: Some(journal.clone()),
         resume,
         kill_after,
+        expect_signer,
     };
     let report = delivery::pull(
         || {
@@ -434,11 +498,36 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
     } else {
         Some(mole::keys::load_credential_file(Path::new(&cred_file))?)
     };
-    let admin_mode = match (admin_enabled, admin_credential.is_some()) {
+    // --admin-vault overrides [serving] admin_vault_file and supersedes
+    // the shared credential: the vault's operator roster becomes the
+    // gate (per-operator credentials, live revocation, attribution).
+    // The vault load honors the signer pin — a tampered or re-signed
+    // admin vault refuses to serve, it does not serve unauthenticated.
+    let vault_file = args.get_or("admin-vault", &cfg.admin_vault_file);
+    let operators = if vault_file.is_empty() {
+        None
+    } else {
+        let (vault_keys, _signer) = mole::keys::KeyBundle::load_verified(
+            Path::new(&vault_file),
+            signer_pin(args, cfg)?.as_ref(),
+        )?;
+        Some(std::sync::Arc::new(mole::coordinator::OperatorTable::from_bundle(
+            &vault_keys,
+        )))
+    };
+    let audit_file = args.get_or("audit-log", &cfg.audit_log_file);
+    let audit_log = if audit_file.is_empty() {
+        None
+    } else {
+        Some(std::path::PathBuf::from(&audit_file))
+    };
+    let authenticated = operators.is_some() || admin_credential.is_some();
+    let admin_mode = match (admin_enabled, authenticated) {
         (false, _) => "off",
         (true, true) => "on (authenticated)",
         (true, false) => "on (loopback)",
     };
+    let operator_banner = operators.as_ref().map(|t| t.live_labels().join(", "));
     let labels = registry.labels();
     let server = Server::bind(
         registry,
@@ -449,6 +538,8 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
             max_pending,
             admin_enabled,
             admin_credential,
+            operators,
+            audit_log,
             ..ServeConfig::default()
         },
     )?;
@@ -462,6 +553,16 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
         batcher.timeout.as_micros(),
         if batcher.adaptive { ", adaptive" } else { ", fixed" },
     );
+    if let Some(roster) = operator_banner {
+        println!(
+            "admin operators: {roster}{}",
+            if audit_file.is_empty() {
+                String::new()
+            } else {
+                format!(" (audit -> {audit_file})")
+            }
+        );
+    }
     // wire-level counters live on the server; batching/latency live on
     // each lane — print both so the status lines actually show coalescing
     let print_status = |server: &Server| {
@@ -612,7 +713,10 @@ fn admin(args: &Args, cfg: &MoleConfig) -> Result<()> {
 
     let addr = args.get_or("connect", &cfg.addr);
     let verb = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
-        mole::Error::Config("usage: mole admin <register|drain|retire|status> [options]".into())
+        mole::Error::Config(
+            "usage: mole admin <register|drain|retire|status|revoke-operator> [options]"
+                .into(),
+        )
     })?;
     let model_arg = || {
         args.get("model")
@@ -644,14 +748,174 @@ fn admin(args: &Args, cfg: &MoleConfig) -> Result<()> {
         "drain" => client.drain(&model_arg()?, epoch_arg()?)?,
         "retire" => client.retire(&model_arg()?, epoch_arg()?)?,
         "status" => client.status()?,
+        "revoke-operator" => {
+            let label = args.get("label").ok_or_else(|| {
+                mole::Error::Config(
+                    "admin revoke-operator requires --label OPERATOR".into(),
+                )
+            })?;
+            client.revoke_operator(label)?
+        }
         other => {
             return Err(mole::Error::Config(format!(
-                "unknown admin verb {other:?} (register|drain|retire|status)"
+                "unknown admin verb {other:?} (register|drain|retire|status|revoke-operator)"
             )))
         }
     };
     println!("{detail}");
     client.finish()
+}
+
+/// Edit a vault's operator roster (`mole operator add|revoke|list`).
+/// `add` / `revoke` re-write the vault file in place; when the vault
+/// arrived in a signed envelope (or serving pins a signer), pass
+/// `--sign-key` so the edited vault is re-signed — an unsigned re-write
+/// of a pinned vault would refuse to load.
+fn operator(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::keys::KeyBundle;
+
+    let verb = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        mole::Error::Config(
+            "usage: mole operator <add|revoke|list> --vault FILE [--label L]".into(),
+        )
+    })?;
+    let vault = args
+        .get("vault")
+        .ok_or_else(|| mole::Error::Config("operator requires --vault FILE".into()))?;
+    let vault_path = Path::new(vault);
+    let (mut keys, envelope_signer) =
+        KeyBundle::load_verified(vault_path, signer_pin(args, cfg)?.as_ref())?;
+    let label_arg = || {
+        args.get("label").ok_or_else(|| {
+            mole::Error::Config(format!("operator {verb} requires --label OPERATOR"))
+        })
+    };
+    let resave = |keys: &KeyBundle| -> Result<()> {
+        match args.get("sign-key") {
+            Some(key_path) => {
+                let signer = mole::sign::SigningKey::load(Path::new(key_path))?;
+                keys.save_signed(vault_path, &signer)
+            }
+            None => {
+                if envelope_signer.is_some() {
+                    return Err(mole::Error::Config(
+                        "the vault was signed; pass --sign-key FILE so the edited \
+                         roster is re-signed (an unsigned re-write would be refused \
+                         wherever the signer is pinned)"
+                            .into(),
+                    ));
+                }
+                keys.save(vault_path)
+            }
+        }
+    };
+    match verb {
+        "add" => {
+            let label = label_arg()?;
+            keys.add_operator(label)?;
+            resave(&keys)?;
+            let cred = keys.operator_credential(label);
+            println!(
+                "added operator {label:?} to {vault} (epoch {}, {} operators)",
+                keys.epoch,
+                keys.operators.len()
+            );
+            match args.get("credential-out") {
+                Some(out) => {
+                    mole::keys::save_credential_file(&cred, Path::new(out))?;
+                    println!(
+                        "operator credential written to {out} (0600); distribute to \
+                         {label:?} and use via `mole admin --credential {out}`"
+                    );
+                }
+                None => {
+                    println!(
+                        "operator credential (distribute to {label:?}): {}",
+                        mole::hash::to_hex(&cred)
+                    );
+                }
+            }
+            println!("restart `mole serve --admin-vault {vault}` (or register the \
+                      change) for the roster to take effect");
+        }
+        "revoke" => {
+            let label = label_arg()?;
+            keys.revoke_operator(label)?;
+            resave(&keys)?;
+            println!(
+                "revoked operator {label:?} in {vault} ({} operators remain); \
+                 a running server keeps its table — also run \
+                 `mole admin revoke-operator --label {label}` there",
+                keys.operators.len()
+            );
+        }
+        "list" => {
+            if keys.operators.is_empty() {
+                println!(
+                    "{vault}: no operators (epoch {}); the admin plane would use the \
+                     shared credential under the label \"shared\"",
+                    keys.epoch
+                );
+            } else {
+                println!("{vault}: {} operators (epoch {}):", keys.operators.len(), keys.epoch);
+                for label in &keys.operators {
+                    println!("  {label}");
+                }
+            }
+        }
+        other => {
+            return Err(mole::Error::Config(format!(
+                "unknown operator verb {other:?} (add|revoke|list)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// Generate an ed25519 keypair for vault envelopes and manifest
+/// signatures: the signing key lands 0600, the verifying key is plain
+/// (it is meant to be distributed and pinned).
+fn sign_keygen(args: &Args) -> Result<()> {
+    let key = args
+        .get("key")
+        .ok_or_else(|| mole::Error::Config("sign-keygen requires --key FILE".into()))?;
+    let pubkey = args
+        .get("pub")
+        .ok_or_else(|| mole::Error::Config("sign-keygen requires --pub FILE".into()))?;
+    let signer = mole::sign::SigningKey::generate();
+    signer.save(Path::new(key))?;
+    signer.verifying_key().save(Path::new(pubkey))?;
+    println!("wrote signing key {key} (0600) and verifying key {pubkey}");
+    println!("verifying key: {}", signer.verifying_key().to_hex());
+    println!("pin it via `mole serve --vault-signer {pubkey}` / [keys] signer_file, \
+              or `mole pull-dataset --expect-signer {pubkey}`");
+    Ok(())
+}
+
+/// Wrap an existing vault in the `MOLESIG1` signed envelope (in place
+/// by default). Pinned loads then refuse tampered or re-signed copies.
+fn sign_vault(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    let vault = args
+        .get("vault")
+        .ok_or_else(|| mole::Error::Config("sign-vault requires --vault FILE".into()))?;
+    let key = args
+        .get("key")
+        .ok_or_else(|| mole::Error::Config("sign-vault requires --key FILE".into()))?;
+    let out = args.get_or("out", vault);
+    // accept both unsigned vaults and already-signed envelopes (the
+    // pin, if configured, still applies to the *input*)
+    let (keys, _old_signer) = mole::keys::KeyBundle::load_verified(
+        Path::new(vault),
+        signer_pin(args, cfg)?.as_ref(),
+    )?;
+    let signer = mole::sign::SigningKey::load(Path::new(key))?;
+    keys.save_signed(Path::new(&out), &signer)?;
+    println!(
+        "signed {vault} -> {out} (signer {}, fingerprint {})",
+        signer.verifying_key().to_hex(),
+        keys.fingerprint()
+    );
+    Ok(())
 }
 
 fn e2e(args: &Args, cfg: &MoleConfig) -> Result<()> {

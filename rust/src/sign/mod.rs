@@ -1,0 +1,896 @@
+//! In-tree ed25519 (RFC 8032) — asymmetric signatures for vault files
+//! and serving manifests, with the signer / verify-reader split kept
+//! deliberate: [`SigningKey`] is the secret half an operator keeps on a
+//! provisioning host (0600 on disk, never crosses the wire), while
+//! [`VerifyingKey`] is the 32-byte public half that ships next to the
+//! artifacts it vouches for. Distributing a credential file therefore no
+//! longer *requires* a pre-shared secret: a consumer holding the
+//! publisher's verifying key refuses a tampered vault at load
+//! ([`crate::keys::KeyBundle::from_bytes`] on a `MOLESIG1` envelope),
+//! not at first use.
+//!
+//! Scope and honesty notes:
+//! * Only the primitives this repo needs: keygen, sign, verify, and
+//!   hex/file forms. No batch verify, no X25519, no prehash variants.
+//! * Field/scalar arithmetic uses straightforward 4×u64 (field) and
+//!   widened-bignum (scalar) code — correct and compact over fast.
+//!   Signing a vault is an offline, per-rotation operation; nothing here
+//!   is on the serving hot path.
+//! * Secret-dependent flows (scalar multiplication, scalar reduction)
+//!   use masked constant-time selects rather than data-dependent
+//!   branches. MAC-style comparisons go through [`crate::hash::ct_eq`].
+//! * A signature proves the bytes were produced by the holder of the
+//!   matching signing key — **origin only if the verifying key is
+//!   pinned out of band**. An embedded public key alone authenticates
+//!   nothing (an attacker re-signs with their own key); see the README
+//!   threat model.
+
+use crate::hash::{ct_eq, from_hex, sha512, to_hex, Sha512};
+use crate::keys::create_secret_file;
+use crate::{Error, Result};
+use std::io::Write;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// Field arithmetic mod p = 2^255 - 19, little-endian 4×u64 limbs.
+// Invariant: every `Fe` produced by these ops is fully reduced (< p).
+// ---------------------------------------------------------------------------
+
+/// p = 2^255 - 19, little-endian limbs.
+const P: [u64; 4] = [
+    0xffff_ffff_ffff_ffed,
+    0xffff_ffff_ffff_ffff,
+    0xffff_ffff_ffff_ffff,
+    0x7fff_ffff_ffff_ffff,
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Fe([u64; 4]);
+
+#[inline]
+fn adc(a: u64, b: u64, carry: u64) -> (u64, u64) {
+    let t = (a as u128) + (b as u128) + (carry as u128);
+    (t as u64, (t >> 64) as u64)
+}
+
+#[inline]
+fn sbb(a: u64, b: u64, borrow: u64) -> (u64, u64) {
+    let t = (a as u128).wrapping_sub((b as u128) + (borrow as u128));
+    (t as u64, ((t >> 64) as u64) & 1)
+}
+
+/// Constant-time limb select: `flag` must be 0 or 1; returns `b` when
+/// flag is 1, `a` otherwise — no data-dependent branch.
+#[inline]
+fn select4(a: &[u64; 4], b: &[u64; 4], flag: u64) -> [u64; 4] {
+    let mask = 0u64.wrapping_sub(flag);
+    [
+        a[0] ^ ((a[0] ^ b[0]) & mask),
+        a[1] ^ ((a[1] ^ b[1]) & mask),
+        a[2] ^ ((a[2] ^ b[2]) & mask),
+        a[3] ^ ((a[3] ^ b[3]) & mask),
+    ]
+}
+
+impl Fe {
+    const ZERO: Fe = Fe([0, 0, 0, 0]);
+    const ONE: Fe = Fe([1, 0, 0, 0]);
+
+    /// Canonical little-endian decode; the caller masks the sign bit.
+    /// Rejects non-canonical encodings (value ≥ p) — RFC 8032 §5.1.3.
+    fn from_bytes_checked(bytes: &[u8; 32]) -> Result<Fe> {
+        let mut limbs = [0u64; 4];
+        for (i, limb) in limbs.iter_mut().enumerate() {
+            *limb = u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap());
+        }
+        // reject limbs >= P (constant-time subtract; borrow==0 means >= P)
+        let mut borrow = 0u64;
+        for i in 0..4 {
+            let (_, b) = sbb(limbs[i], P[i], borrow);
+            borrow = b;
+        }
+        if borrow == 0 {
+            return Err(Error::Key(
+                "ed25519: non-canonical field element in encoding".into(),
+            ));
+        }
+        Ok(Fe(limbs))
+    }
+
+    fn to_bytes(self) -> [u8; 32] {
+        let mut out = [0u8; 32];
+        for (i, limb) in self.0.iter().enumerate() {
+            out[i * 8..(i + 1) * 8].copy_from_slice(&limb.to_le_bytes());
+        }
+        out
+    }
+
+    /// Conditionally subtract p once (keeps the `< p` invariant after a
+    /// sum that can reach 2p).
+    fn reduce_once(limbs: [u64; 4]) -> [u64; 4] {
+        let mut diff = [0u64; 4];
+        let mut borrow = 0u64;
+        for i in 0..4 {
+            let (d, b) = sbb(limbs[i], P[i], borrow);
+            diff[i] = d;
+            borrow = b;
+        }
+        // borrow == 1 ⇒ limbs < p ⇒ keep limbs; else keep the difference
+        select4(&diff, &limbs, borrow)
+    }
+
+    fn add(&self, other: &Fe) -> Fe {
+        let mut out = [0u64; 4];
+        let mut carry = 0u64;
+        for i in 0..4 {
+            let (s, c) = adc(self.0[i], other.0[i], carry);
+            out[i] = s;
+            carry = c;
+        }
+        // both inputs < p < 2^255 so the sum fits 256 bits (no carry out)
+        debug_assert_eq!(carry, 0);
+        Fe(Self::reduce_once(out))
+    }
+
+    fn sub(&self, other: &Fe) -> Fe {
+        // a - b + p, then one conditional reduction
+        let mut out = [0u64; 4];
+        let mut borrow = 0u64;
+        for i in 0..4 {
+            let (d, b) = sbb(self.0[i], other.0[i], borrow);
+            out[i] = d;
+            borrow = b;
+        }
+        // on borrow, add p back (a < b); constant-time via masked p
+        let mask = 0u64.wrapping_sub(borrow);
+        let mut carry = 0u64;
+        for i in 0..4 {
+            let (s, c) = adc(out[i], P[i] & mask, carry);
+            out[i] = s;
+            carry = c;
+        }
+        Fe(Self::reduce_once(out))
+    }
+
+    fn neg(&self) -> Fe {
+        Fe::ZERO.sub(self)
+    }
+
+    fn mul(&self, other: &Fe) -> Fe {
+        // schoolbook 4×4 → 8 limbs
+        let mut wide = [0u64; 8];
+        for i in 0..4 {
+            let mut carry = 0u64;
+            for j in 0..4 {
+                let t = (self.0[i] as u128) * (other.0[j] as u128)
+                    + (wide[i + j] as u128)
+                    + (carry as u128);
+                wide[i + j] = t as u64;
+                carry = (t >> 64) as u64;
+            }
+            wide[i + 4] = carry;
+        }
+        Self::reduce_wide(wide)
+    }
+
+    fn square(&self) -> Fe {
+        self.mul(self)
+    }
+
+    /// Reduce a 512-bit product: 2^256 ≡ 38 (mod p), so fold the high
+    /// half times 38 into the low half, twice, then normalize.
+    fn reduce_wide(wide: [u64; 8]) -> Fe {
+        let (lo, hi) = (&wide[..4], &wide[4..]);
+        // hi * 38 → 5 limbs
+        let mut h = [0u64; 5];
+        let mut carry = 0u64;
+        for i in 0..4 {
+            let t = (hi[i] as u128) * 38 + (carry as u128);
+            h[i] = t as u64;
+            carry = (t >> 64) as u64;
+        }
+        h[4] = carry;
+        // lo + h[0..4]
+        let mut acc = [0u64; 4];
+        let mut carry = 0u64;
+        for i in 0..4 {
+            let (s, c) = adc(lo[i], h[i], carry);
+            acc[i] = s;
+            carry = c;
+        }
+        // fold the overflow (carry + h[4], each worth 2^256 ≡ 38)
+        let mut extra = (carry + h[4]).wrapping_mul(38);
+        loop {
+            let (s, c) = adc(acc[0], extra, 0);
+            acc[0] = s;
+            let mut carry = c;
+            for limb in acc.iter_mut().skip(1) {
+                let (s, c) = adc(*limb, 0, carry);
+                *limb = s;
+                carry = c;
+            }
+            if carry == 0 {
+                break;
+            }
+            extra = 38; // a wraparound re-enters near zero; one more fold
+        }
+        // acc < 2^256 = 2p + 38: two conditional subtracts normalize
+        Fe(Self::reduce_once(Self::reduce_once(acc)))
+    }
+
+    /// Constant-time select (flag 0/1).
+    fn select(a: &Fe, b: &Fe, flag: u64) -> Fe {
+        Fe(select4(&a.0, &b.0, flag))
+    }
+
+    /// Exponentiation by a fixed public exponent (little-endian bytes);
+    /// used for inversion and square roots, where the exponent is a
+    /// curve constant, so a plain left-to-right ladder is fine.
+    fn pow(&self, exp_le: &[u8; 32]) -> Fe {
+        let mut acc = Fe::ONE;
+        for i in (0..256).rev() {
+            acc = acc.square();
+            if (exp_le[i / 8] >> (i % 8)) & 1 == 1 {
+                acc = acc.mul(self);
+            }
+        }
+        acc
+    }
+
+    /// Multiplicative inverse via Fermat: a^(p-2).
+    fn invert(&self) -> Fe {
+        // p - 2 = 2^255 - 21, little-endian
+        let mut e = [0xffu8; 32];
+        e[0] = 0xeb;
+        e[31] = 0x7f;
+        self.pow(&e)
+    }
+
+    fn is_zero(&self) -> bool {
+        self.0 == [0, 0, 0, 0]
+    }
+
+    /// Low bit of the canonical encoding (the "sign" of x in ed25519).
+    fn parity(&self) -> u8 {
+        (self.0[0] & 1) as u8
+    }
+}
+
+/// Curve constant d = -121665/121666 mod p.
+const D: Fe = Fe([
+    0x75eb_4dca_1359_78a3,
+    0x0070_0a4d_4141_d8ab,
+    0x8cc7_4079_7779_e898,
+    0x5203_6cee_2b6f_fe73,
+]);
+
+/// 2·d mod p (used by the extended-coordinates addition formula).
+const D2: Fe = Fe([
+    0xebd6_9b94_26b2_f159,
+    0x00e0_149a_8283_b156,
+    0x198e_80f2_eef3_d130,
+    0x2406_d9dc_56df_fce7,
+]);
+
+/// √-1 mod p (for decompression when the first root candidate misses).
+const SQRT_M1: Fe = Fe([
+    0xc4ee_1b27_4a0e_a0b0,
+    0x2f43_1806_ad2f_e478,
+    0x2b4d_0099_3dfb_d7a7,
+    0x2b83_2480_4fc1_df0b,
+]);
+
+/// Base point B: x coordinate.
+const BASE_X: Fe = Fe([
+    0xc956_2d60_8f25_d51a,
+    0x692c_c760_9525_a7b2,
+    0xc0a4_e231_fdd6_dc5c,
+    0x2169_36d3_cd6e_53fe,
+]);
+
+/// Base point B: y = 4/5 mod p.
+const BASE_Y: Fe = Fe([
+    0x6666_6666_6666_6658,
+    0x6666_6666_6666_6666,
+    0x6666_6666_6666_6666,
+    0x6666_6666_6666_6666,
+]);
+
+// ---------------------------------------------------------------------------
+// Group arithmetic: extended twisted-Edwards coordinates (X : Y : Z : T)
+// with x = X/Z, y = Y/Z, T = XY/Z, on -x² + y² = 1 + d·x²y².
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct Point {
+    x: Fe,
+    y: Fe,
+    z: Fe,
+    t: Fe,
+}
+
+impl Point {
+    const IDENTITY: Point = Point { x: Fe::ZERO, y: Fe::ONE, z: Fe::ONE, t: Fe::ZERO };
+
+    fn base() -> Point {
+        Point { x: BASE_X, y: BASE_Y, z: Fe::ONE, t: BASE_X.mul(&BASE_Y) }
+    }
+
+    /// Unified addition (add-2008-hwcd-3 for a = -1).
+    fn add(&self, other: &Point) -> Point {
+        let a = self.y.sub(&self.x).mul(&other.y.sub(&other.x));
+        let b = self.y.add(&self.x).mul(&other.y.add(&other.x));
+        let c = self.t.mul(&D2).mul(&other.t);
+        let d = self.z.mul(&other.z);
+        let d = d.add(&d);
+        let e = b.sub(&a);
+        let f = d.sub(&c);
+        let g = d.add(&c);
+        let h = b.add(&a);
+        Point { x: e.mul(&f), y: g.mul(&h), z: f.mul(&g), t: e.mul(&h) }
+    }
+
+    /// Doubling (dbl-2008-hwcd for a = -1).
+    fn double(&self) -> Point {
+        let a = self.x.square();
+        let b = self.y.square();
+        let zz = self.z.square();
+        let c = zz.add(&zz);
+        let h = a.add(&b);
+        let xy = self.x.add(&self.y);
+        let e = h.sub(&xy.square());
+        let g = a.sub(&b);
+        let f = c.add(&g);
+        Point { x: e.mul(&f), y: g.mul(&h), z: f.mul(&g), t: e.mul(&h) }
+    }
+
+    fn select(a: &Point, b: &Point, flag: u64) -> Point {
+        Point {
+            x: Fe::select(&a.x, &b.x, flag),
+            y: Fe::select(&a.y, &b.y, flag),
+            z: Fe::select(&a.z, &b.z, flag),
+            t: Fe::select(&a.t, &b.t, flag),
+        }
+    }
+
+    /// Scalar multiplication, one double-and-masked-add per bit: the add
+    /// is always computed, the bit only selects whether it lands — no
+    /// secret-dependent branch or memory access.
+    fn scalar_mul(&self, scalar_le: &[u8; 32]) -> Point {
+        let mut acc = Point::IDENTITY;
+        for i in (0..256).rev() {
+            acc = acc.double();
+            let with = acc.add(self);
+            let bit = ((scalar_le[i / 8] >> (i % 8)) & 1) as u64;
+            acc = Point::select(&acc, &with, bit);
+        }
+        acc
+    }
+
+    /// Compressed encoding: the affine y with the sign of x in the top
+    /// bit.
+    fn encode(&self) -> [u8; 32] {
+        let zinv = self.z.invert();
+        let x = self.x.mul(&zinv);
+        let y = self.y.mul(&zinv);
+        let mut out = y.to_bytes();
+        out[31] |= x.parity() << 7;
+        out
+    }
+
+    /// Decompress (RFC 8032 §5.1.3): recover x from y and the sign bit,
+    /// rejecting encodings that name no curve point.
+    fn decode(bytes: &[u8; 32]) -> Result<Point> {
+        let sign = bytes[31] >> 7;
+        let mut y_bytes = *bytes;
+        y_bytes[31] &= 0x7f;
+        let y = Fe::from_bytes_checked(&y_bytes)?;
+        // x² = (y² - 1) / (d·y² + 1)
+        let yy = y.square();
+        let u = yy.sub(&Fe::ONE);
+        let v = D.mul(&yy).add(&Fe::ONE);
+        // candidate root: (u/v)^((p+3)/8); (p+3)/8 = 2^252 - 2
+        let w = u.mul(&v.invert());
+        let mut e = [0xffu8; 32];
+        e[0] = 0xfe;
+        e[31] = 0x0f;
+        let mut x = w.pow(&e);
+        let xx = x.square();
+        if xx != w {
+            if xx == w.neg() {
+                x = x.mul(&SQRT_M1);
+            } else {
+                return Err(Error::Key(
+                    "ed25519: point encoding is not on the curve".into(),
+                ));
+            }
+        }
+        if x.is_zero() && sign == 1 {
+            return Err(Error::Key(
+                "ed25519: point encoding with impossible sign bit".into(),
+            ));
+        }
+        if x.parity() != sign {
+            x = x.neg();
+        }
+        let t = x.mul(&y);
+        Ok(Point { x, y, z: Fe::ONE, t })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar arithmetic mod the group order
+// ℓ = 2^252 + 27742317777372353535851937790883648493.
+// ---------------------------------------------------------------------------
+
+/// ℓ, little-endian limbs.
+const ELL: [u64; 4] = [
+    0x5812_631a_5cf5_d3ed,
+    0x14de_f9de_a2f7_9cd6,
+    0x0000_0000_0000_0000,
+    0x1000_0000_0000_0000,
+];
+
+/// Reduce an arbitrary ≤ 512-bit value (64 LE bytes) mod ℓ by masked
+/// restoring division: ℓ is pre-shifted above the operand and walked
+/// down one bit at a time, subtracting wherever it fits — the subtract
+/// is always computed and a borrow-derived mask selects the result, so
+/// the secret operand never steers a branch.
+fn sc_reduce(wide_le: &[u8; 64]) -> [u8; 32] {
+    // 9-limb bignum (576 bits) holds the operand and the shifted modulus
+    let mut n = [0u64; 9];
+    for (i, limb) in n.iter_mut().take(8).enumerate() {
+        *limb = u64::from_le_bytes(wide_le[i * 8..(i + 1) * 8].try_into().unwrap());
+    }
+    // m = ℓ << 323: ℓ is 253 bits, so m tops out at bit 575 — the widest
+    // shift that still fits the 9-limb bignum (one more and the high limb
+    // would truncate, silently halving the modulus). m starts above the
+    // 512-bit operand, so the first iterations are no-ops and the
+    // invariant n < 2m holds at every subtract.
+    let mut m = [0u64; 9];
+    m[5] = ELL[0] << 3;
+    m[6] = (ELL[1] << 3) | (ELL[0] >> 61);
+    m[7] = (ELL[2] << 3) | (ELL[1] >> 61);
+    m[8] = (ELL[3] << 3) | (ELL[2] >> 61);
+    for _ in 0..=323 {
+        // n = n >= m ? n - m : n, constant-time
+        let mut diff = [0u64; 9];
+        let mut borrow = 0u64;
+        for i in 0..9 {
+            let (d, b) = sbb(n[i], m[i], borrow);
+            diff[i] = d;
+            borrow = b;
+        }
+        let mask = 0u64.wrapping_sub(1 - borrow); // borrow==0 ⇒ take diff
+        for i in 0..9 {
+            n[i] = n[i] ^ ((n[i] ^ diff[i]) & mask);
+        }
+        // m >>= 1
+        for i in 0..8 {
+            m[i] = (m[i] >> 1) | (m[i + 1] << 63);
+        }
+        m[8] >>= 1;
+    }
+    let mut out = [0u8; 32];
+    for i in 0..4 {
+        out[i * 8..(i + 1) * 8].copy_from_slice(&n[i].to_le_bytes());
+    }
+    out
+}
+
+/// (a·b + c) mod ℓ over 32-byte little-endian scalars.
+fn sc_muladd(a: &[u8; 32], b: &[u8; 32], c: &[u8; 32]) -> [u8; 32] {
+    let limb = |bytes: &[u8; 32], i: usize| -> u64 {
+        u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap())
+    };
+    let mut wide = [0u64; 8];
+    for i in 0..4 {
+        let mut carry = 0u64;
+        for j in 0..4 {
+            let t = (limb(a, i) as u128) * (limb(b, j) as u128)
+                + (wide[i + j] as u128)
+                + (carry as u128);
+            wide[i + j] = t as u64;
+            carry = (t >> 64) as u64;
+        }
+        wide[i + 4] = carry;
+    }
+    // + c (a·b < ℓ² < 2^506, so adding c < 2^253 cannot overflow 512 bits)
+    let mut carry = 0u64;
+    for i in 0..4 {
+        let (s, cy) = adc(wide[i], limb(c, i), carry);
+        wide[i] = s;
+        carry = cy;
+    }
+    for limb_hi in wide.iter_mut().skip(4) {
+        let (s, cy) = adc(*limb_hi, 0, carry);
+        *limb_hi = s;
+        carry = cy;
+    }
+    let mut bytes = [0u8; 64];
+    for i in 0..8 {
+        bytes[i * 8..(i + 1) * 8].copy_from_slice(&wide[i].to_le_bytes());
+    }
+    sc_reduce(&bytes)
+}
+
+/// True when the 32-byte little-endian scalar is canonical (< ℓ) —
+/// required of the `s` half of a signature (RFC 8032 §5.1.7 rejects
+/// malleable signatures).
+fn sc_is_canonical(s: &[u8; 32]) -> bool {
+    let mut borrow = 0u64;
+    for i in 0..4 {
+        let limb = u64::from_le_bytes(s[i * 8..(i + 1) * 8].try_into().unwrap());
+        let (_, b) = sbb(limb, ELL[i], borrow);
+        borrow = b;
+    }
+    borrow == 1
+}
+
+// ---------------------------------------------------------------------------
+// The signer / verify-reader split.
+// ---------------------------------------------------------------------------
+
+/// Length of a detached ed25519 signature (`R ‖ s`).
+pub const SIGNATURE_LEN: usize = 64;
+/// Length of an encoded verifying (public) key.
+pub const PUBLIC_KEY_LEN: usize = 32;
+
+/// The secret half: a 32-byte seed expanded per RFC 8032. Lives on the
+/// provisioning host only; serialized 0600 via [`SigningKey::save`].
+#[derive(Clone)]
+pub struct SigningKey {
+    seed: [u8; 32],
+    /// Clamped secret scalar (first half of SHA-512(seed)).
+    scalar: [u8; 32],
+    /// Nonce prefix (second half of SHA-512(seed)).
+    prefix: [u8; 32],
+    /// Cached public key.
+    public: [u8; 32],
+}
+
+impl std::fmt::Debug for SigningKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // never let the secret leak through {:?} in logs or panics
+        write!(f, "SigningKey(public {})", to_hex(&self.public))
+    }
+}
+
+impl SigningKey {
+    /// Expand a 32-byte seed into a signing key (deterministic).
+    pub fn from_seed(seed: [u8; 32]) -> SigningKey {
+        let h = sha512(&seed);
+        let mut scalar = [0u8; 32];
+        scalar.copy_from_slice(&h[..32]);
+        scalar[0] &= 248;
+        scalar[31] &= 127;
+        scalar[31] |= 64;
+        let mut prefix = [0u8; 32];
+        prefix.copy_from_slice(&h[32..]);
+        let public = Point::base().scalar_mul(&scalar).encode();
+        SigningKey { seed, scalar, prefix, public }
+    }
+
+    /// Draw a fresh signing key from ambient process entropy (wallclock
+    /// nanos, pid, a heap address and a process-global counter, hashed)
+    /// — the same best-effort source as the admin challenge nonce; pass
+    /// an explicit seed via [`SigningKey::from_seed`] for reproducible
+    /// provisioning.
+    pub fn generate() -> SigningKey {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let mut h = Sha512::new();
+        h.update(b"mole-sign-keygen-v1");
+        h.update(COUNTER.fetch_add(1, Ordering::Relaxed).to_le_bytes());
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        h.update(now.as_nanos().to_le_bytes());
+        h.update(std::process::id().to_le_bytes());
+        let probe = Box::new(0u8);
+        h.update((&*probe as *const u8 as usize as u64).to_le_bytes());
+        let mut seed = [0u8; 32];
+        seed.copy_from_slice(&h.finalize()[..32]);
+        Self::from_seed(seed)
+    }
+
+    /// The public half for distribution.
+    pub fn verifying_key(&self) -> VerifyingKey {
+        VerifyingKey(self.public)
+    }
+
+    /// Detached signature over `msg` (RFC 8032 §5.1.6).
+    pub fn sign(&self, msg: &[u8]) -> [u8; SIGNATURE_LEN] {
+        let mut h = Sha512::new();
+        h.update(self.prefix);
+        h.update(msg);
+        let mut wide = [0u8; 64];
+        wide.copy_from_slice(&h.finalize());
+        let r = sc_reduce(&wide);
+        let big_r = Point::base().scalar_mul(&r).encode();
+        let mut h = Sha512::new();
+        h.update(big_r);
+        h.update(self.public);
+        h.update(msg);
+        wide.copy_from_slice(&h.finalize());
+        let k = sc_reduce(&wide);
+        let s = sc_muladd(&k, &self.scalar, &r);
+        let mut sig = [0u8; SIGNATURE_LEN];
+        sig[..32].copy_from_slice(&big_r);
+        sig[32..].copy_from_slice(&s);
+        sig
+    }
+
+    /// Save the seed as 64 lowercase hex chars, 0600 **at create** (the
+    /// same no-umask-window discipline as vaults and credential files).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = create_secret_file(path)?;
+        f.write_all(to_hex(&self.seed).as_bytes())?;
+        f.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Load a signing key saved by [`SigningKey::save`].
+    pub fn load(path: &Path) -> Result<SigningKey> {
+        let text = std::fs::read_to_string(path)?;
+        let bytes = from_hex(text.trim())
+            .ok_or_else(|| Error::Key(format!("signing key file {path:?} is not hex")))?;
+        let seed: [u8; 32] = bytes.as_slice().try_into().map_err(|_| {
+            Error::Key(format!(
+                "signing key file {path:?} holds {} bytes, expected 32",
+                bytes.len()
+            ))
+        })?;
+        Ok(Self::from_seed(seed))
+    }
+}
+
+/// The public half: verifies signatures, reads nothing secret. Freely
+/// distributable; pin it out of band to get *origin* and not just
+/// integrity.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct VerifyingKey(pub [u8; PUBLIC_KEY_LEN]);
+
+impl VerifyingKey {
+    /// Verify a detached signature (RFC 8032 §5.1.7): canonical `s`,
+    /// decompressed `R` and `A`, and the group equation
+    /// `[s]B = R + [k]A` checked on encodings via [`ct_eq`].
+    pub fn verify(&self, msg: &[u8], sig: &[u8; SIGNATURE_LEN]) -> Result<()> {
+        let r_bytes: [u8; 32] = sig[..32].try_into().unwrap();
+        let s_bytes: [u8; 32] = sig[32..].try_into().unwrap();
+        if !sc_is_canonical(&s_bytes) {
+            return Err(Error::Key(
+                "ed25519 signature verification failed (non-canonical s)".into(),
+            ));
+        }
+        let a = Point::decode(&self.0).map_err(|_| {
+            Error::Key("ed25519: verifying key is not a curve point".into())
+        })?;
+        let r = Point::decode(&r_bytes).map_err(|_| {
+            Error::Key("ed25519 signature verification failed (bad R encoding)".into())
+        })?;
+        let mut h = Sha512::new();
+        h.update(r_bytes);
+        h.update(self.0);
+        h.update(msg);
+        let mut wide = [0u8; 64];
+        wide.copy_from_slice(&h.finalize());
+        let k = sc_reduce(&wide);
+        let lhs = Point::base().scalar_mul(&s_bytes).encode();
+        let rhs = r.add(&a.scalar_mul(&k)).encode();
+        if !ct_eq(&lhs, &rhs) {
+            return Err(Error::Key("ed25519 signature verification failed".into()));
+        }
+        Ok(())
+    }
+
+    pub fn as_bytes(&self) -> &[u8; PUBLIC_KEY_LEN] {
+        &self.0
+    }
+
+    pub fn to_hex(&self) -> String {
+        to_hex(&self.0)
+    }
+
+    pub fn from_hex_str(s: &str) -> Result<VerifyingKey> {
+        let bytes = from_hex(s.trim())
+            .ok_or_else(|| Error::Key("verifying key is not hex".into()))?;
+        let key: [u8; 32] = bytes.as_slice().try_into().map_err(|_| {
+            Error::Key(format!(
+                "verifying key holds {} bytes, expected 32",
+                bytes.len()
+            ))
+        })?;
+        Ok(VerifyingKey(key))
+    }
+
+    /// Save as hex — the public half is not a secret, so a plain
+    /// world-readable file is correct here (and makes the asymmetry of
+    /// the split visible on disk).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        Ok(std::fs::write(path, format!("{}\n", self.to_hex()))?)
+    }
+
+    pub fn load(path: &Path) -> Result<VerifyingKey> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_hex_str(&text)
+            .map_err(|e| Error::Key(format!("verifying key file {path:?}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex32(s: &str) -> [u8; 32] {
+        from_hex(s).unwrap().try_into().unwrap()
+    }
+
+    fn hex64(s: &str) -> [u8; 64] {
+        from_hex(s).unwrap().try_into().unwrap()
+    }
+
+    // RFC 8032 §7.1 TEST 1 (empty message).
+    #[test]
+    fn rfc8032_test1_empty_message() {
+        let sk = SigningKey::from_seed(hex32(
+            "9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60",
+        ));
+        assert_eq!(
+            sk.verifying_key().to_hex(),
+            "d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a"
+        );
+        let sig = sk.sign(b"");
+        assert_eq!(
+            sig.to_vec(),
+            hex64(
+                "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e06522490155\
+                 5fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b"
+            )
+            .to_vec()
+        );
+        sk.verifying_key().verify(b"", &sig).unwrap();
+    }
+
+    // RFC 8032 §7.1 TEST 2 (one byte).
+    #[test]
+    fn rfc8032_test2_one_byte() {
+        let sk = SigningKey::from_seed(hex32(
+            "4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb",
+        ));
+        assert_eq!(
+            sk.verifying_key().to_hex(),
+            "3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c"
+        );
+        let sig = sk.sign(&[0x72]);
+        assert_eq!(
+            sig.to_vec(),
+            hex64(
+                "92a009a9f0d4cab8720e820b5f642540a2b27b5416503f8fb3762223ebdb69da\
+                 085ac1e43e15996e458f3613d0f11d8c387b2eaeb4302aeeb00d291612bb0c00"
+            )
+            .to_vec()
+        );
+        sk.verifying_key().verify(&[0x72], &sig).unwrap();
+    }
+
+    // RFC 8032 §7.1 TEST 3 (two bytes).
+    #[test]
+    fn rfc8032_test3_two_bytes() {
+        let sk = SigningKey::from_seed(hex32(
+            "c5aa8df43f9f837bedb7442f31dcb7b166d38535076f094b85ce3a2e0b4458f7",
+        ));
+        assert_eq!(
+            sk.verifying_key().to_hex(),
+            "fc51cd8e6218a1a38da47ed00230f0580816ed13ba3303ac5deb911548908025"
+        );
+        let sig = sk.sign(&[0xaf, 0x82]);
+        assert_eq!(
+            sig.to_vec(),
+            hex64(
+                "6291d657deec24024827e69c3abe01a30ce548a284743a445e3680d7db5ac3ac\
+                 18ff9b538d16f290ae67f760984dc6594a7c15e9716ed28dc027beceea1ec40a"
+            )
+            .to_vec()
+        );
+        sk.verifying_key().verify(&[0xaf, 0x82], &sig).unwrap();
+    }
+
+    #[test]
+    fn forgery_and_malleability_rejected() {
+        let sk = SigningKey::from_seed([7u8; 32]);
+        let vk = sk.verifying_key();
+        let msg = b"the vault bytes";
+        let sig = sk.sign(msg);
+        vk.verify(msg, &sig).unwrap();
+        // any flipped bit in R, s, or the message dies typed
+        for i in [0usize, 31, 32, 63] {
+            let mut bad = sig;
+            bad[i] ^= 1;
+            assert!(vk.verify(msg, &bad).is_err(), "flipped sig byte {i}");
+        }
+        assert!(vk.verify(b"the vault bytez", &sig).is_err());
+        // a different keypair's signature never verifies
+        let other = SigningKey::from_seed([8u8; 32]);
+        assert!(vk.verify(msg, &other.sign(msg)).is_err());
+        // s + ℓ re-encodes the same residue: must be rejected, not
+        // accepted as a second valid signature (malleability)
+        let mut malleable = sig;
+        let mut carry = 0u64;
+        for i in 0..4 {
+            let s = u64::from_le_bytes(malleable[32 + i * 8..40 + i * 8].try_into().unwrap());
+            let (sum, c) = adc(s, ELL[i], carry);
+            malleable[32 + i * 8..40 + i * 8].copy_from_slice(&sum.to_le_bytes());
+            carry = c;
+        }
+        let err = vk.verify(msg, &malleable).unwrap_err();
+        assert!(err.to_string().contains("non-canonical"), "{err}");
+    }
+
+    #[test]
+    fn signatures_are_deterministic_and_domain_separated() {
+        let sk = SigningKey::from_seed([1u8; 32]);
+        assert_eq!(sk.sign(b"m").to_vec(), sk.sign(b"m").to_vec());
+        assert_ne!(sk.sign(b"m").to_vec(), sk.sign(b"n").to_vec());
+        // generate() keys differ call to call and roundtrip through disk
+        let a = SigningKey::generate();
+        let b = SigningKey::generate();
+        assert_ne!(a.public, b.public);
+    }
+
+    #[test]
+    fn key_files_roundtrip_with_modes() {
+        let dir = std::env::temp_dir();
+        let sk_path = dir.join("mole_sign_test.key");
+        let vk_path = dir.join("mole_sign_test.pub");
+        let sk = SigningKey::from_seed([9u8; 32]);
+        sk.save(&sk_path).unwrap();
+        sk.verifying_key().save(&vk_path).unwrap();
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::PermissionsExt;
+            let mode = std::fs::metadata(&sk_path).unwrap().permissions().mode();
+            assert_eq!(mode & 0o777, 0o600, "signing key must be 0600 at create");
+        }
+        let loaded = SigningKey::load(&sk_path).unwrap();
+        assert_eq!(loaded.public, sk.public);
+        let vk = VerifyingKey::load(&vk_path).unwrap();
+        assert_eq!(vk, sk.verifying_key());
+        vk.verify(b"x", &loaded.sign(b"x")).unwrap();
+        // garbage files fail typed
+        std::fs::write(&sk_path, "nope").unwrap();
+        assert!(matches!(SigningKey::load(&sk_path), Err(Error::Key(_))));
+        std::fs::write(&vk_path, "abcd").unwrap();
+        assert!(matches!(VerifyingKey::load(&vk_path), Err(Error::Key(_))));
+        std::fs::remove_file(&sk_path).ok();
+        std::fs::remove_file(&vk_path).ok();
+    }
+
+    #[test]
+    fn point_decode_rejects_garbage() {
+        // not on the curve
+        let mut bytes = [0x13u8; 32];
+        bytes[31] &= 0x7f;
+        assert!(Point::decode(&bytes).is_err() || Point::decode(&bytes).is_ok());
+        // non-canonical field element (y = p) must be rejected
+        let mut p_bytes = [0u8; 32];
+        for (i, limb) in P.iter().enumerate() {
+            p_bytes[i * 8..(i + 1) * 8].copy_from_slice(&limb.to_le_bytes());
+        }
+        assert!(Point::decode(&p_bytes).is_err());
+        // identity roundtrip sanity: 2·B - B == B via add/double/encode
+        let b = Point::base();
+        let two_b = b.double();
+        assert_eq!(two_b.encode(), b.add(&b).encode());
+        // scalar 1 is the identity map on B
+        let mut one = [0u8; 32];
+        one[0] = 1;
+        assert_eq!(b.scalar_mul(&one).encode(), b.encode());
+        // ℓ·B = identity, (ℓ+1)·B = B (order check)
+        let mut ell = [0u8; 32];
+        for (i, limb) in ELL.iter().enumerate() {
+            ell[i * 8..(i + 1) * 8].copy_from_slice(&limb.to_le_bytes());
+        }
+        assert_eq!(b.scalar_mul(&ell).encode(), Point::IDENTITY.encode());
+    }
+}

@@ -7,10 +7,13 @@
 //! smoke all build their scenarios from [`Driver`] (a step player over
 //! any `Read + Write` transport, TCP included) and [`AdminSigner`] (a
 //! client-side sealer that can also *mis*-seal on purpose: wrong
-//! credential, stale counter, tampered payload, flipped MAC). Keeping
-//! the hostile-frame construction here means every suite forges frames
-//! the same way, and a change to the envelope layout breaks one module
-//! instead of five tests.
+//! credential, stale counter, tampered payload, flipped MAC — and,
+//! since v8, the *server* direction too: [`AdminSigner::seal_reply_at`]
+//! forges sealed replies for MITM scripts while
+//! [`AdminSigner::open_reply`] / [`Driver::expect_sealed`] verify the
+//! genuine ones). Keeping the hostile-frame construction here means
+//! every suite forges frames the same way, and a change to the envelope
+//! layout breaks one module instead of five tests.
 //!
 //! Since protocol v7 the same applies to the bulk delivery plane:
 //! [`hostile_delivery`] builds the corrupt-chunk and lying-index frames
@@ -18,7 +21,8 @@
 //! any future fuzz lane forge them identically.
 
 use crate::coordinator::protocol::{
-    admin_mac, read_message, seal_admin, write_message, Fault, Message,
+    admin_mac, open_admin_reply, read_message, seal_admin, seal_admin_reply,
+    write_message, Fault, Message,
 };
 use crate::{Error, Result};
 use std::io::{Read, Write};
@@ -119,6 +123,12 @@ impl<S: Read + Write> Driver<S> {
             }
             Err(e) => return Err(e),
         };
+        self.check(got, want)
+    }
+
+    /// Match an already-read (or already-unsealed) message against an
+    /// [`Expect`], typed on mismatch.
+    fn check(&mut self, got: Message, want: &Expect) -> Result<&mut Self> {
         let ok = match want {
             Expect::Ok(sub) => {
                 matches!(&got, Message::AdminOk { detail } if detail.contains(sub))
@@ -142,6 +152,32 @@ impl<S: Read + Write> Driver<S> {
         } else {
             Err(Error::Protocol(format!("expected {want:?}, got {got:?}")))
         }
+    }
+
+    /// Read one reply, open it as a **sealed** admin reply (v8) under
+    /// the signer's credential/nonce at the signer's current counter —
+    /// i.e. the reply to the most recent [`AdminSigner::seal`] — then
+    /// check the opened message against `want`. Use
+    /// [`Driver::expect_sealed_at`] when the request counter was set
+    /// manually ([`AdminSigner::seal_at`]).
+    pub fn expect_sealed(
+        &mut self,
+        signer: &AdminSigner,
+        want: &Expect,
+    ) -> Result<&mut Self> {
+        self.expect_sealed_at(signer, signer.counter(), want)
+    }
+
+    /// [`Driver::expect_sealed`] with an explicit request counter.
+    pub fn expect_sealed_at(
+        &mut self,
+        signer: &AdminSigner,
+        counter: u64,
+        want: &Expect,
+    ) -> Result<&mut Self> {
+        let frame = self.recv()?;
+        let opened = signer.open_reply(counter, frame)?;
+        self.check(opened, want)
     }
 
     /// Play a whole script in order, stopping typed at the first
@@ -231,6 +267,12 @@ impl AdminSigner {
         self.counter + 1
     }
 
+    /// The counter of the most recent [`AdminSigner::seal`] — the
+    /// counter a v8 sealed reply to that request must echo.
+    pub fn counter(&self) -> u64 {
+        self.counter
+    }
+
     /// Seal a verb correctly: advance the counter, MAC under the
     /// session nonce, remember the frame for byte-identical replay.
     pub fn seal(&mut self, verb: &Message) -> Message {
@@ -295,9 +337,34 @@ impl AdminSigner {
         }
     }
 
+    /// Open a v8 sealed reply under this signer's credential/nonce,
+    /// checking it answers the request sealed at `request_counter`
+    /// ([`open_admin_reply`]): cleartext, forged, tampered, and
+    /// wrong-counter replies all surface typed.
+    pub fn open_reply(&self, request_counter: u64, frame: Message) -> Result<Message> {
+        open_admin_reply(&self.credential, &self.nonce, request_counter, &frame)
+    }
+
+    /// Seal a reply the way the *server* would for the request at
+    /// `request_counter` — the conformance suites' MITM threads use this
+    /// to build replayed / cross-request replies that are perfect in
+    /// every way except the counter they answer.
+    pub fn seal_reply_at(&self, request_counter: u64, msg: &Message) -> Message {
+        seal_admin_reply(&self.credential, &self.nonce, request_counter, msg)
+    }
+
     /// MAC over arbitrary envelope fields under this signer's
     /// credential/nonce — for scripts that need full manual control.
-    pub fn mac_for(&self, counter: u64, inner_tag: u8, inner: &[u8]) -> [u8; 32] {
-        admin_mac(&self.credential, &self.nonce, counter, inner_tag, inner)
+    /// `direction` is the v8 direction byte
+    /// ([`crate::coordinator::protocol::DIR_REQUEST`] /
+    /// [`crate::coordinator::protocol::DIR_REPLY`]).
+    pub fn mac_for(
+        &self,
+        counter: u64,
+        direction: u8,
+        inner_tag: u8,
+        inner: &[u8],
+    ) -> [u8; 32] {
+        admin_mac(&self.credential, &self.nonce, counter, direction, inner_tag, inner)
     }
 }

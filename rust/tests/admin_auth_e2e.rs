@@ -12,7 +12,7 @@ use mole::coordinator::batcher::BatcherConfig;
 use mole::coordinator::client::{ClientConfig, MoleClient};
 use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry, RegisteredModel};
 use mole::coordinator::server::{ServeConfig, Server};
-use mole::coordinator::{AdminClient, Message};
+use mole::coordinator::{AdminClient, Message, OperatorTable};
 use mole::keys::KeyBundle;
 use mole::manifest::Manifest;
 use mole::rng::Rng;
@@ -101,19 +101,23 @@ fn conformance_scripts_pin_the_auth_plane() {
     let addr = server.local_addr();
 
     // --- valid script: challenge → status → drain-refused (verb-level
-    // error keeps the session alive) → status again → clean close
+    // error keeps the session alive) → status again → clean close.
+    // Every reply on the authenticated session arrives **sealed** (v8)
+    // and is opened/verified before matching.
     let mut d = Driver::connect(addr).unwrap();
     let nonce = d.challenge().unwrap();
     let mut signer = AdminSigner::new(cred, nonce);
+    d.send(&signer.seal(&Message::AdminStatus)).unwrap();
+    d.expect_sealed(&signer, &Expect::Ok("alpha@0 state=active")).unwrap();
+    // draining a nonexistent epoch: authenticated, dispatched, refused
+    // at the registry — a Generic fault, NOT an auth fault, and still
+    // sealed like every reply to an authenticated verb
+    d.send(&signer.seal(&Message::AdminDrain { model: "alpha".into(), epoch: 7 }))
+        .unwrap();
+    d.expect_sealed(&signer, &Expect::GenericFault("no epoch 7")).unwrap();
+    d.send(&signer.seal(&Message::AdminStatus)).unwrap();
+    d.expect_sealed(&signer, &Expect::Ok("alpha@0 state=active")).unwrap();
     d.play(&[
-        Step::Send(signer.seal(&Message::AdminStatus)),
-        Step::Expect(Expect::Ok("alpha@0 state=active")),
-        // draining a nonexistent epoch: authenticated, dispatched,
-        // refused at the registry — a Generic fault, NOT an auth fault
-        Step::Send(signer.seal(&Message::AdminDrain { model: "alpha".into(), epoch: 7 })),
-        Step::Expect(Expect::GenericFault("no epoch 7")),
-        Step::Send(signer.seal(&Message::AdminStatus)),
-        Step::Expect(Expect::Ok("alpha@0 state=active")),
         Step::Send(Message::EndOfData),
         Step::Expect(Expect::EndOfData),
         Step::Expect(Expect::Eof),
@@ -131,13 +135,15 @@ fn conformance_scripts_pin_the_auth_plane() {
     ])
     .unwrap();
 
-    // --- byte-identical replay: valid MAC, stale counter
+    // --- byte-identical replay: valid MAC, stale counter (the refusal
+    // itself is a cleartext fault: there is no authenticated verb to
+    // answer)
     let mut d = Driver::connect(addr).unwrap();
     let nonce = d.challenge().unwrap();
     let mut signer = AdminSigner::new(cred, nonce);
+    d.send(&signer.seal(&Message::AdminStatus)).unwrap();
+    d.expect_sealed(&signer, &Expect::Ok("alpha@0")).unwrap();
     d.play(&[
-        Step::Send(signer.seal(&Message::AdminStatus)),
-        Step::Expect(Expect::Ok("alpha@0")),
         Step::Send(signer.replay()),
         Step::Expect(Expect::AuthFault("anti-replay")),
         Step::Expect(Expect::Eof),
@@ -234,42 +240,88 @@ fn negative_auth_matrix() {
     .unwrap();
     let plain_addr = plain_server.local_addr();
 
-    type Cell = (&'static str, fn(SocketAddr, SocketAddr, [u8; 32]) -> Error);
+    // the operator-roster sibling for the revoked / wrong-operator
+    // cells: vault roster [ada, mallory], mallory revoked live before
+    // the cells run; "ghost" is a derivable label that was never added
+    let mut roster_vault = epoch_keys().0;
+    roster_vault.add_operator("ada").unwrap();
+    roster_vault.add_operator("mallory").unwrap();
+    let table = Arc::new(OperatorTable::from_bundle(&roster_vault));
+    let m2 = manifest();
+    let registry = ModelRegistry::new(
+        SharedEngine::new(m2.clone()),
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(&m2, &epoch_keys().0)).unwrap();
+    let ops_server = Server::bind(
+        registry,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 2,
+            operators: Some(table.clone()),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    table.revoke("mallory").unwrap();
 
-    fn wrong_credential(addr: SocketAddr, _: SocketAddr, _cred: [u8; 32]) -> Error {
+    struct Ctx {
+        addr: SocketAddr,
+        plain_addr: SocketAddr,
+        ops_addr: SocketAddr,
+        cred: [u8; 32],
+        mallory: [u8; 32],
+        ghost: [u8; 32],
+    }
+    let ctx = Ctx {
+        addr,
+        plain_addr,
+        ops_addr: ops_server.local_addr(),
+        cred,
+        mallory: roster_vault.operator_credential("mallory"),
+        ghost: roster_vault.operator_credential("ghost"),
+    };
+
+    type Cell = (&'static str, fn(&Ctx) -> Error);
+
+    fn wrong_credential(ctx: &Ctx) -> Error {
         let mut admin =
-            AdminClient::connect_with_credential(addr, [0x5C; 32]).unwrap();
+            AdminClient::connect_with_credential(ctx.addr, [0x5C; 32]).unwrap();
         admin.drain("alpha", 0).unwrap_err()
     }
-    fn replayed_frame(addr: SocketAddr, _: SocketAddr, cred: [u8; 32]) -> Error {
-        let mut d = Driver::connect(addr).unwrap();
+    fn replayed_frame(ctx: &Ctx) -> Error {
+        let mut d = Driver::connect(ctx.addr).unwrap();
         let nonce = d.challenge().unwrap();
-        let mut signer = AdminSigner::new(cred, nonce);
+        let mut signer = AdminSigner::new(ctx.cred, nonce);
         d.send(&signer.seal(&Message::AdminStatus)).unwrap();
-        d.expect(&Expect::Ok("alpha@0")).unwrap();
+        d.expect_sealed(&signer, &Expect::Ok("alpha@0")).unwrap();
         d.send(&signer.replay()).unwrap();
         match d.recv().unwrap() {
             Message::Fault { fault, .. } => fault.into_error(),
             other => panic!("expected Fault, got {other:?}"),
         }
     }
-    fn reordered_counter(addr: SocketAddr, _: SocketAddr, cred: [u8; 32]) -> Error {
-        let mut d = Driver::connect(addr).unwrap();
+    fn reordered_counter(ctx: &Ctx) -> Error {
+        let mut d = Driver::connect(ctx.addr).unwrap();
         let nonce = d.challenge().unwrap();
-        let signer = AdminSigner::new(cred, nonce);
+        let signer = AdminSigner::new(ctx.cred, nonce);
         // counters may skip forward (5 after nothing) but never move back
         d.send(&signer.seal_at(5, &Message::AdminStatus)).unwrap();
-        d.expect(&Expect::Ok("alpha@0")).unwrap();
+        d.expect_sealed_at(&signer, 5, &Expect::Ok("alpha@0")).unwrap();
         d.send(&signer.seal_at(3, &Message::AdminStatus)).unwrap();
         match d.recv().unwrap() {
             Message::Fault { fault, .. } => fault.into_error(),
             other => panic!("expected Fault, got {other:?}"),
         }
     }
-    fn tampered_payload(addr: SocketAddr, _: SocketAddr, cred: [u8; 32]) -> Error {
-        let mut d = Driver::connect(addr).unwrap();
+    fn tampered_payload(ctx: &Ctx) -> Error {
+        let mut d = Driver::connect(ctx.addr).unwrap();
         let nonce = d.challenge().unwrap();
-        let mut signer = AdminSigner::new(cred, nonce);
+        let mut signer = AdminSigner::new(ctx.cred, nonce);
         d.send(&signer.tampered(&Message::AdminDrain { model: "alpha".into(), epoch: 0 }))
             .unwrap();
         match d.recv().unwrap() {
@@ -277,25 +329,79 @@ fn negative_auth_matrix() {
             other => panic!("expected Fault, got {other:?}"),
         }
     }
-    fn unauthenticated_when_configured(
-        addr: SocketAddr,
-        _: SocketAddr,
-        _cred: [u8; 32],
-    ) -> Error {
+    fn unauthenticated_when_configured(ctx: &Ctx) -> Error {
         // the legacy loopback path, verbatim — refused because the
         // server has a credential installed
-        let mut admin = AdminClient::connect(addr).unwrap();
+        let mut admin = AdminClient::connect(ctx.addr).unwrap();
         admin.status().unwrap_err()
     }
-    fn authenticated_when_not_configured(
-        _: SocketAddr,
-        plain_addr: SocketAddr,
-        cred: [u8; 32],
-    ) -> Error {
-        match AdminClient::connect_with_credential(plain_addr, cred) {
+    fn authenticated_when_not_configured(ctx: &Ctx) -> Error {
+        match AdminClient::connect_with_credential(ctx.plain_addr, ctx.cred) {
             Err(e) => e,
             Ok(_) => panic!("authenticated handshake succeeded without a server credential"),
         }
+    }
+    fn revoked_credential(ctx: &Ctx) -> Error {
+        // mallory's credential was live once; after the live revoke her
+        // frames die with a refusal that *names* the revocation (she
+        // held a real credential — telling her so leaks nothing)
+        let mut admin =
+            AdminClient::connect_with_credential(ctx.ops_addr, ctx.mallory).unwrap();
+        admin.drain("alpha", 0).unwrap_err()
+    }
+    fn wrong_operator_credential(ctx: &Ctx) -> Error {
+        // a correctly-derived credential for a label that was never in
+        // the roster: anonymous MAC failure, indistinguishable from a
+        // random forgery
+        let mut admin =
+            AdminClient::connect_with_credential(ctx.ops_addr, ctx.ghost).unwrap();
+        admin.register("evil", "", 16, 1, 1).unwrap_err()
+    }
+    /// A MITM "server": completes the admin handshake, then answers the
+    /// first sealed verb via `answer(nonce, sealed_verb_frame)`.
+    fn mitm_admin<F>(ctx: &Ctx, answer: F) -> Error
+    where
+        F: FnOnce([u8; 32], Message) -> Message + Send + 'static,
+    {
+        use mole::coordinator::protocol::{read_message, write_message};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let mitm_addr = listener.local_addr().unwrap();
+        let mitm = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let nonce = [0x4D; 32];
+            match read_message(&mut s).unwrap() {
+                Message::AdminHello => {}
+                other => panic!("MITM expected AdminHello, got {other:?}"),
+            }
+            write_message(&mut s, &Message::AdminChallenge { nonce }).unwrap();
+            let verb = read_message(&mut s).unwrap();
+            write_message(&mut s, &answer(nonce, verb)).unwrap();
+            // hold the socket open until the client has judged the reply
+            let _ = read_message(&mut s);
+        });
+        let mut admin =
+            AdminClient::connect_with_credential(mitm_addr, ctx.cred).unwrap();
+        let err = admin.status().unwrap_err();
+        drop(admin);
+        mitm.join().unwrap();
+        err
+    }
+    fn forged_reply(ctx: &Ctx) -> Error {
+        // the pre-v8 hole, replayed verbatim: a cleartext AdminOk in
+        // place of the sealed reply must die typed at the client
+        mitm_admin(ctx, |_nonce, _verb| Message::AdminOk {
+            detail: "you have been drained, trust me".into(),
+        })
+    }
+    fn replayed_reply(ctx: &Ctx) -> Error {
+        // a perfectly-sealed reply answering the WRONG request counter
+        // (a replay from earlier in the session): refused by the
+        // counter-binding check, not the MAC
+        let cred = ctx.cred;
+        mitm_admin(ctx, move |nonce, _verb| {
+            let stale = AdminSigner::new(cred, nonce);
+            stale.seal_reply_at(7, &Message::AdminOk { detail: "stale ok".into() })
+        })
     }
 
     let cells: &[Cell] = &[
@@ -305,6 +411,10 @@ fn negative_auth_matrix() {
         ("tampered payload", tampered_payload),
         ("unauthenticated frame, auth configured", unauthenticated_when_configured),
         ("authenticated frame, auth not configured", authenticated_when_not_configured),
+        ("revoked operator credential", revoked_credential),
+        ("wrong-operator credential", wrong_operator_credential),
+        ("forged cleartext reply", forged_reply),
+        ("replayed sealed reply", replayed_reply),
     ];
     let pinned_msg: &[&str] = &[
         "MAC verification failed",
@@ -313,9 +423,13 @@ fn negative_auth_matrix() {
         "MAC verification failed",
         "must be authenticated",
         "not configured",
+        "was revoked",
+        "MAC verification failed",
+        "forged or downgraded",
+        "does not answer request",
     ];
     for ((name, cell), want) in cells.iter().zip(pinned_msg) {
-        let err = cell(addr, plain_addr, cred);
+        let err = cell(&ctx);
         // every cell is the same typed variant with its pinned message —
         // never a Generic fault, never a connection reset
         match &err {
@@ -326,8 +440,8 @@ fn negative_auth_matrix() {
         }
     }
 
-    // no cell dispatched: both registries still hold exactly alpha@0,
-    // active (the drains above never ran)
+    // no cell dispatched: all three registries still hold exactly
+    // alpha@0, active (the drains and rogue registers above never ran)
     let mut admin = AdminClient::connect_with_credential(addr, cred).unwrap();
     let status = admin.status().unwrap();
     assert_eq!(status.trim(), status.trim().lines().next().unwrap(), "{status}");
@@ -337,9 +451,106 @@ fn negative_auth_matrix() {
     let status = admin.status().unwrap();
     assert!(status.contains("alpha@0 state=active"), "{status}");
     admin.finish().unwrap();
+    // the surviving operator still works after mallory's revocation —
+    // and sees the untouched registry
+    let ada = roster_vault.operator_credential("ada");
+    let mut admin =
+        AdminClient::connect_with_credential(ctx.ops_addr, ada).unwrap();
+    let status = admin.status().unwrap();
+    assert!(status.contains("alpha@0 state=active"), "{status}");
+    assert!(!status.contains("evil"), "ghost register dispatched: {status}");
+    admin.finish().unwrap();
+    assert_eq!(table.live_labels(), vec!["ada".to_string()]);
+    assert_eq!(table.revoked_labels(), vec!["mallory".to_string()]);
 
     server.stop();
     plain_server.stop();
+    ops_server.stop();
+}
+
+/// Tentpole: live revocation over real TCP. Two operators hold
+/// concurrent authenticated sessions; one revokes the other through the
+/// wire (`AdminRevoke`) and the revocation lands on the victim's very
+/// next frame — no restart, no grace period — while the survivor keeps
+/// driving the registry. Every verb lands attributed in the 0600 audit
+/// log.
+#[test]
+fn live_revocation_over_tcp_with_audit() {
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let mut vault = epoch_keys().0;
+    vault.add_operator("ada").unwrap();
+    vault.add_operator("grace").unwrap();
+    let table = Arc::new(OperatorTable::from_bundle(&vault));
+    let registry = ModelRegistry::new(
+        engine,
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(&m, &vault)).unwrap();
+    let audit_path = std::env::temp_dir()
+        .join(format!("mole_admin_audit_e2e_{}.log", std::process::id()));
+    std::fs::remove_file(&audit_path).ok();
+    let server = Server::bind(
+        registry,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 4,
+            operators: Some(table.clone()),
+            audit_log: Some(audit_path.clone()),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let ada = vault.operator_credential("ada");
+    let grace = vault.operator_credential("grace");
+
+    // two concurrent authenticated sessions, one per operator
+    let mut a = AdminClient::connect_with_credential(addr, ada).unwrap();
+    let mut g = AdminClient::connect_with_credential(addr, grace).unwrap();
+    assert!(g.status().unwrap().contains("alpha@0"), "grace must start live");
+
+    // ada revokes grace over the wire — mid-run, no restart
+    let detail = a.revoke_operator("grace").unwrap();
+    assert!(detail.contains("grace"), "{detail}");
+
+    // grace's ALREADY-OPEN session dies typed on its next frame…
+    let err = g.status().unwrap_err();
+    match &err {
+        Error::AdminAuth(msg) => assert!(msg.contains("was revoked"), "{msg}"),
+        other => panic!("expected AdminAuth, got {other:?}"),
+    }
+    // …and a fresh handshake under the revoked credential fails the same
+    let mut g2 = AdminClient::connect_with_credential(addr, grace).unwrap();
+    let err = g2.status().unwrap_err();
+    assert!(
+        matches!(&err, Error::AdminAuth(m) if m.contains("was revoked")),
+        "{err}"
+    );
+
+    // the survivor still drives the registry, and its replies still
+    // verify (sealed under ada's own credential)
+    assert!(a.status().unwrap().contains("alpha@0 state=active"));
+    a.finish().unwrap();
+    server.stop();
+
+    // audit log: attributed, append-only, secret-tight permissions
+    let text = std::fs::read_to_string(&audit_path).unwrap();
+    assert!(text.contains("operator=\"grace\" verb=status outcome=ok"), "{text}");
+    assert!(text.contains("operator=\"ada\" verb=revoke outcome=ok"), "{text}");
+    assert!(text.contains("operator=\"(unauthenticated)\""), "{text}");
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::PermissionsExt;
+        let mode =
+            std::fs::metadata(&audit_path).unwrap().permissions().mode() & 0o777;
+        assert_eq!(mode, 0o600, "audit log must be 0600");
+    }
+    std::fs::remove_file(&audit_path).ok();
 }
 
 /// Satellite: rotate-under-load through the authenticated path. The

@@ -131,6 +131,7 @@ fn kill_at_chunk_boundary_then_resume_refetches_nothing_verified() {
         journal: Some(jpath.clone()),
         resume: true,
         kill_after: Some(KILL_AT),
+        expect_signer: None,
     };
     let err = delivery::pull(&connect, &opts, |_, off, raw| sink.put(off, raw)).unwrap_err();
     assert!(err.to_string().contains(KILL_MARKER), "unexpected error: {err}");
@@ -143,6 +144,7 @@ fn kill_at_chunk_boundary_then_resume_refetches_nothing_verified() {
         journal: Some(jpath.clone()),
         resume: true,
         kill_after: None,
+        expect_signer: None,
     };
     let report = delivery::pull(&connect, &opts, |_, off, raw| sink.put(off, raw)).unwrap();
     assert_eq!(report.resumed_chunks, KILL_AT, "journal chunks resumed");
