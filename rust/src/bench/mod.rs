@@ -48,10 +48,23 @@ pub fn bench<R>(name: &str, warmup: usize, trials: usize, mut f: impl FnMut() ->
     }
     times.sort_unstable();
     let mean = times.iter().sum::<Duration>() / trials as u32;
-    let p50 = times[trials / 2];
-    let p95 = times[(trials * 95 / 100).min(trials - 1)];
-    let p99 = times[(trials * 99 / 100).min(trials - 1)];
+    let p50 = times[percentile_index(trials, 50)];
+    let p95 = times[percentile_index(trials, 95)];
+    let p99 = times[percentile_index(trials, 99)];
     BenchResult { name: name.to_string(), trials, mean, p50, p95, p99 }
+}
+
+/// Index of the nearest-rank percentile in a sorted sample of `n`
+/// observations: `rank = ceil(p/100 · n)` clamped into `[1, n]`, then
+/// 0-based. The same formula [`crate::metrics::Histogram`] uses, so a
+/// bench p50 and a serving-histogram p50 mean the same order statistic —
+/// the old p50 here was `times[n / 2]` (the *upper* median, unclamped),
+/// which at the tiny trial counts of `MOLE_BENCH_BUDGET_MS` smoke runs
+/// recorded a different, larger statistic than p95/p99's clamped form.
+pub fn percentile_index(n: usize, p: usize) -> usize {
+    debug_assert!(n > 0 && p >= 1 && p <= 100);
+    let rank = (p * n).div_ceil(100);
+    rank.clamp(1, n) - 1
 }
 
 /// Auto-pick trial count so the bench takes roughly `budget`.
@@ -229,6 +242,33 @@ mod tests {
         assert!(r.p95 >= r.p50);
         assert_eq!(r.trials, 10);
         assert!(r.throughput(10_000.0) > 0.0);
+    }
+
+    #[test]
+    fn percentile_indices_pinned() {
+        // nearest-rank: rank = ceil(p/100 · n), 0-based after clamp.
+        // Pinned per ISSUE 10 for the trial counts smoke runs produce.
+        for (n, i50, i95, i99) in [
+            (1, 0, 0, 0),
+            (2, 0, 1, 1),
+            (4, 1, 3, 3),
+            (5, 2, 4, 4),
+            (100, 49, 94, 98),
+        ] {
+            assert_eq!(percentile_index(n, 50), i50, "p50 @ n={n}");
+            assert_eq!(percentile_index(n, 95), i95, "p95 @ n={n}");
+            assert_eq!(percentile_index(n, 99), i99, "p99 @ n={n}");
+        }
+        // the old p50 form `n / 2` (upper median) disagreed at every
+        // even n — e.g. n=4 gave index 2, nearest-rank gives 1
+        assert_ne!(percentile_index(4, 50), 4 / 2);
+        // and always in bounds, p100 = max sample
+        for n in 1..=128 {
+            for p in 1..=100 {
+                assert!(percentile_index(n, p) < n);
+            }
+            assert_eq!(percentile_index(n, 100), n - 1);
+        }
     }
 
     #[test]

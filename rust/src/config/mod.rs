@@ -124,6 +124,27 @@ pub struct ModelSpec {
     pub epochs: u32,
 }
 
+/// One `[gateway.shards.NAME]` entry: which backends serve which
+/// epochs of a model behind `mole gateway`. Kept stringly here — the
+/// epoch selector grammar (`"*"` / `"N"` / `"N-M"`) is owned by
+/// [`crate::coordinator::gateway::EpochSelector::parse`], which the
+/// gateway runs at bind so a typo fails startup, not a session.
+///
+/// Shards match in section-name order (the parser sorts sections), so
+/// name them to order them (`alpha0`, `alpha1`, …) when one model needs
+/// several — an explicit `model` key routes a section whose name is
+/// not the model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayShardSpec {
+    /// Model routed to this shard (`model` key; defaults to the
+    /// section name).
+    pub model: String,
+    /// Epoch selector source text (`epochs` key; default `"*"`).
+    pub epochs: String,
+    /// Comma-separated `backends` list, split and trimmed.
+    pub backends: Vec<String>,
+}
+
 /// Full launcher configuration with defaults matching the repo layout.
 #[derive(Debug, Clone)]
 pub struct MoleConfig {
@@ -204,6 +225,20 @@ pub struct MoleConfig {
     /// sections; defaults to one `demo_model` entry built from the
     /// top-level κ/seed when none are configured).
     pub models: Vec<ModelSpec>,
+    /// Gateway: listen address for `mole gateway`.
+    pub gateway_listen: String,
+    /// Gateway: backend health-probe cadence, in ms.
+    pub gateway_probe_interval_ms: u64,
+    /// Gateway: per-backend dial timeout (data path, probes, fan-out).
+    pub gateway_connect_timeout_ms: u64,
+    /// Gateway: operator-credential file. Doubles as the inbound admin
+    /// gate (sealed sessions terminate at the gateway) and the outbound
+    /// credential the gateway authenticates to each backend with. Empty
+    /// = the gateway refuses all admin frames typed.
+    pub gateway_credential_file: String,
+    /// Gateway shard map (`[gateway.shards.MODEL]` sections, matched in
+    /// order). Empty = `mole gateway` refuses to start.
+    pub gateway_shards: Vec<GatewayShardSpec>,
 }
 
 impl Default for MoleConfig {
@@ -240,6 +275,11 @@ impl Default for MoleConfig {
                 seed: 20190506,
                 epochs: 1,
             }],
+            gateway_listen: "127.0.0.1:7600".to_string(),
+            gateway_probe_interval_ms: 500,
+            gateway_connect_timeout_ms: 1000,
+            gateway_credential_file: String::new(),
+            gateway_shards: Vec::new(),
         }
     }
 }
@@ -273,6 +313,26 @@ impl MoleConfig {
         }
         if models.is_empty() {
             models.push(ModelSpec { name: "demo_model".to_string(), kappa, seed, epochs: 1 });
+        }
+        let mut gateway_shards = Vec::new();
+        for name in raw.section_names_under("gateway.shards") {
+            let section = format!("gateway.shards.{name}");
+            let backends: Vec<String> = raw
+                .get_or(&section, "backends", "")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if backends.is_empty() {
+                return Err(Error::Config(format!(
+                    "[{section}] needs a non-empty comma-separated `backends` list"
+                )));
+            }
+            gateway_shards.push(GatewayShardSpec {
+                model: raw.get_or(&section, "model", &name).to_string(),
+                epochs: raw.get_or(&section, "epochs", "*").to_string(),
+                backends,
+            });
         }
         Ok(Self {
             artifacts_dir: raw.get_or("mole", "artifacts_dir", &d.artifacts_dir).to_string(),
@@ -313,6 +373,21 @@ impl MoleConfig {
             backend: raw.get_or("backend", "kind", &d.backend).to_string(),
             backend_threads: raw.get_usize("backend", "threads", d.backend_threads)?,
             models,
+            gateway_listen: raw.get_or("gateway", "listen", &d.gateway_listen).to_string(),
+            gateway_probe_interval_ms: raw.get_u64(
+                "gateway",
+                "probe_interval_ms",
+                d.gateway_probe_interval_ms,
+            )?,
+            gateway_connect_timeout_ms: raw.get_u64(
+                "gateway",
+                "connect_timeout_ms",
+                d.gateway_connect_timeout_ms,
+            )?,
+            gateway_credential_file: raw
+                .get_or("gateway", "credential_file", &d.gateway_credential_file)
+                .to_string(),
+            gateway_shards,
         })
     }
 
@@ -496,6 +571,79 @@ epochs = 2
         // epochs = 0 is rejected
         let raw =
             RawConfig::parse("[serving.models.x]\nepochs = 0\n").unwrap();
+        assert!(MoleConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn gateway_table() {
+        // absent ⇒ defaults, and an empty shard map (the gateway itself
+        // refuses to start on one — config just reports what was written)
+        let cfg = MoleConfig::from_raw(&RawConfig::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.gateway_listen, "127.0.0.1:7600");
+        assert_eq!(cfg.gateway_probe_interval_ms, 500);
+        assert_eq!(cfg.gateway_connect_timeout_ms, 1000);
+        assert!(cfg.gateway_credential_file.is_empty());
+        assert!(cfg.gateway_shards.is_empty());
+
+        let src = r#"
+[gateway]
+listen = "0.0.0.0:7700"
+probe_interval_ms = 250
+connect_timeout_ms = 400
+credential_file = "ops/gateway.cred"
+
+[gateway.shards.alpha]
+epochs = "0-3"
+backends = "127.0.0.1:7433, 127.0.0.1:7434 ,127.0.0.1:7435"
+
+[gateway.shards.beta]
+backends = "127.0.0.1:7436"
+
+# a second alpha shard: section names must be unique and order the
+# match (sorted), so the catch-all names itself last and routes via
+# the explicit model key
+[gateway.shards.zz-alpha-rest]
+model = "alpha"
+backends = "127.0.0.1:7437"
+"#;
+        let cfg = MoleConfig::from_raw(&RawConfig::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.gateway_listen, "0.0.0.0:7700");
+        assert_eq!(cfg.gateway_probe_interval_ms, 250);
+        assert_eq!(cfg.gateway_connect_timeout_ms, 400);
+        assert_eq!(cfg.gateway_credential_file, "ops/gateway.cred");
+        assert_eq!(
+            cfg.gateway_shards,
+            vec![
+                GatewayShardSpec {
+                    model: "alpha".into(),
+                    epochs: "0-3".into(),
+                    // comma-split and whitespace-trimmed
+                    backends: vec![
+                        "127.0.0.1:7433".into(),
+                        "127.0.0.1:7434".into(),
+                        "127.0.0.1:7435".into(),
+                    ],
+                },
+                // epochs defaults to the match-everything selector
+                GatewayShardSpec {
+                    model: "beta".into(),
+                    epochs: "*".into(),
+                    backends: vec!["127.0.0.1:7436".into()],
+                },
+                // explicit model key overrides the section name
+                GatewayShardSpec {
+                    model: "alpha".into(),
+                    epochs: "*".into(),
+                    backends: vec!["127.0.0.1:7437".into()],
+                },
+            ]
+        );
+
+        // a shard with no backends is a config error, not a silent
+        // zero-replica shard
+        let raw = RawConfig::parse("[gateway.shards.x]\nepochs = \"*\"\n").unwrap();
+        assert!(MoleConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[gateway.shards.x]\nbackends = \" , \"\n").unwrap();
         assert!(MoleConfig::from_raw(&raw).is_err());
     }
 

@@ -196,7 +196,7 @@ impl OperatorTable {
     /// credential earns the typed "revoked" refusal (audit-attributable),
     /// anything else the same anonymous MAC error a single-credential
     /// server gives.
-    fn open_request(
+    pub(crate) fn open_request(
         &self,
         nonce: &[u8; 32],
         last_counter: u64,
@@ -277,6 +277,7 @@ fn verb_name(msg: &Message) -> &'static str {
         Message::AdminRetire { .. } => "retire",
         Message::AdminStatus => "status",
         Message::AdminRevoke { .. } => "revoke",
+        Message::AdminFleetStatus => "fleet-status",
         _ => "-",
     }
 }
@@ -333,6 +334,14 @@ fn apply(registry: &Arc<ModelRegistry>, msg: &Message) -> Result<String> {
              (there is no operator table behind the loopback gate)"
                 .into(),
         )),
+        // A lone serving process answering for "the fleet" would collapse
+        // per-node truth into one bool — the whole point of the verb is
+        // that it aggregates. Only the gateway tier answers it.
+        Message::AdminFleetStatus => Err(Error::Config(
+            "fleet-status is answered by a mole gateway, not a serving \
+             process (this node has no fleet view; use `status` here)"
+                .into(),
+        )),
         other => Err(Error::Protocol(format!(
             "admin session got non-admin frame {other:?}"
         ))),
@@ -347,7 +356,7 @@ fn apply(registry: &Arc<ModelRegistry>, msg: &Message) -> Result<String> {
 /// sessions can never see the same nonce within one process (the
 /// counter alone guarantees that), and restarts are separated by
 /// time/pid/ASLR entropy.
-fn fresh_nonce() -> [u8; 32] {
+pub(crate) fn fresh_nonce() -> [u8; 32] {
     use std::sync::atomic::{AtomicU64, Ordering};
     static COUNTER: AtomicU64 = AtomicU64::new(0);
     let mut h = Sha256::new();
@@ -597,6 +606,14 @@ impl<S: Read + Write> AdminClient<S> {
         }
     }
 
+    /// One raw request/reply round trip for in-crate callers that
+    /// already hold a verb frame — the gateway's fan-out replays the
+    /// operator's verb to each backend without re-parsing it into the
+    /// per-verb methods below.
+    pub(crate) fn request(&mut self, msg: &Message) -> Result<String> {
+        self.call(msg)
+    }
+
     /// Register `(model, epoch)` live. With a non-empty `vault_path` the
     /// server loads that vault from **its own** filesystem (the epoch
     /// comes from the vault); otherwise it generates a root bundle from
@@ -640,6 +657,14 @@ impl<S: Read + Write> AdminClient<S> {
     /// The revoked operator's next frame is refused, never dispatched.
     pub fn revoke_operator(&mut self, label: &str) -> Result<String> {
         self.call(&Message::AdminRevoke { label: label.to_string() })
+    }
+
+    /// Per-node fleet report (v9) — answered only when the peer is a
+    /// `mole gateway`: one line per backend with its health and the ack
+    /// of the last fan-out verb. A serving process refuses it typed,
+    /// which is itself a useful probe ("am I talking to a gateway?").
+    pub fn fleet_status(&mut self) -> Result<String> {
+        self.call(&Message::AdminFleetStatus)
     }
 
     /// Graceful close (`EndOfData` both ways; EOF tolerated).

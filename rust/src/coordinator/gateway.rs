@@ -1,0 +1,1063 @@
+//! `mole gateway` — the fleet tier: one TCP front for N serving
+//! processes.
+//!
+//! A single `mole serve` owns one registry and one engine; the gateway
+//! is the layer that turns N of them into a fleet without changing a
+//! single client. Three jobs:
+//!
+//! * **Shard routing.** Each serving session opens with `Hello
+//!   { model, epoch, .. }`; the gateway decodes exactly that first frame,
+//!   resolves it against its shard map (`[gateway.shards.MODEL]` config:
+//!   an epoch selector `"*"` / `"N"` / `"N-M"` plus a replica list),
+//!   connects to a healthy replica, replays the `Hello` verbatim, and
+//!   from then on splices bytes both ways on the shared `poll(2)`
+//!   reactor ([`super::reactor`]). The gateway never re-frames traffic
+//!   past the first message — backend `Fault::Draining` / `Retired` /
+//!   `Overloaded` frames reach the client untouched, so
+//!   [`super::MoleClient`]'s redirect and backoff logic works unchanged
+//!   behind the gateway.
+//! * **Health.** A probe thread dials every backend each
+//!   `probe_interval`: TCP connect (bounded), one `Hello`, one reply —
+//!   a `Hello` *or any typed `Fault`* proves the peer is alive and
+//!   speaking the protocol. An unresponsive backend is marked out and
+//!   its shard's traffic respreads over the remaining replicas; same-
+//!   shard load spreads round-robin. A connect failure on the data path
+//!   marks the node out immediately (faster than the next probe tick)
+//!   and the router retries the next replica, so one dead node costs at
+//!   most one connect timeout, not an error surfaced to the client. A
+//!   shard with **no** healthy replica answers the typed
+//!   `Fault::Overloaded` — retryable, honest, never a silent hang.
+//! * **Fleet admin.** With a credential configured the gateway
+//!   terminates the operator's sealed admin session itself (same v8
+//!   envelope — challenge nonce, per-frame MACs, sealed replies, see
+//!   [`super::admin`]) and **fans every verb out** to the whole fleet,
+//!   authenticating to each backend *as an operator* with the same
+//!   credential. The reply aggregates one ack line per node — a partial
+//!   failure is reported per node, never collapsed into one bool. The
+//!   v9 `fleet-status` verb ([`Message::AdminFleetStatus`]) returns the
+//!   probe view plus each node's last fan-out ack; serving processes
+//!   refuse that verb typed, because a lone node has no fleet view.
+//!
+//! What the gateway does **not** authenticate: data-plane sessions.
+//! Serving traffic is routed, not inspected — morphed rows are already
+//! the paper's privacy boundary and the backends enforce their own
+//! budgets. The admin plane is the opposite: nothing unsealed is ever
+//! fanned out, and a gateway without a credential refuses `AdminHello`
+//! outright (there is no loopback-legacy mode here — a gateway is by
+//! definition a remote front).
+//!
+//! Bulk delivery (`DatasetHello`) is refused typed: chunked dataset
+//! pulls are point-to-point with per-chunk integrity and a resume
+//! journal keyed to one server's store — proxying them would only add a
+//! copy. Clients pull datasets from a backend directly.
+
+use super::admin::{fresh_nonce, AdminClient, OperatorTable};
+use super::protocol::{
+    read_message, seal_admin_reply, write_message, Fault, Message, FAULT_SESSION,
+};
+use super::reactor::{waker, Interest, Poller, Waker, WakeRx};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Ceiling on one proxy poll round (drivers notice shutdown promptly).
+const POLL_CAP: Duration = Duration::from_millis(250);
+/// Per-direction splice buffer: big enough to stream batched tensors
+/// without syscall churn, small enough that a stalled reader exerts
+/// backpressure on its writer instead of buffering a session's world.
+const PROXY_BUF: usize = 64 * 1024;
+/// Concurrent routing handshakes in flight. Routing reads one frame and
+/// dials one backend on a short-lived thread; past the cap new
+/// connections are shed typed, mirroring the serving accept budget.
+const ROUTE_CAP: usize = 256;
+/// Backoff hint on gateway-side sheds (route cap, no healthy replica).
+const GATEWAY_RETRY_MS: u64 = 500;
+/// How long a routing thread waits for the client's first frame.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Which epochs of a model a shard serves. Parsed from the config's
+/// `epochs` key: `"*"` (any, including the [`EPOCH_LATEST`] sentinel),
+/// `"4"` (exactly 4), `"2-5"` (inclusive range).
+///
+/// [`EPOCH_LATEST`] matches **only** the `"*"` selector: "latest" is
+/// resolved by the backend registry, so a pinned-epoch shard cannot
+/// claim it — it does not know what latest is.
+///
+/// [`EPOCH_LATEST`]: super::protocol::EPOCH_LATEST
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpochSelector {
+    Any,
+    One(u32),
+    Range(u32, u32),
+}
+
+impl EpochSelector {
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s == "*" {
+            return Ok(Self::Any);
+        }
+        let bad = |k: &str| Error::Config(format!("bad epoch selector {s:?}: {k}"));
+        if let Some((lo, hi)) = s.split_once('-') {
+            let lo: u32 = lo.trim().parse().map_err(|_| bad("range start not a number"))?;
+            let hi: u32 = hi.trim().parse().map_err(|_| bad("range end not a number"))?;
+            if lo > hi {
+                return Err(bad("range start above end"));
+            }
+            if hi == u32::MAX {
+                return Err(bad("u32::MAX is the reserved latest-epoch sentinel"));
+            }
+            return Ok(Self::Range(lo, hi));
+        }
+        let n: u32 = s.parse().map_err(|_| bad("expected \"*\", \"N\" or \"N-M\""))?;
+        if n == u32::MAX {
+            return Err(bad("u32::MAX is the reserved latest-epoch sentinel"));
+        }
+        Ok(Self::One(n))
+    }
+
+    pub fn matches(&self, epoch: u32) -> bool {
+        match self {
+            Self::Any => true,
+            Self::One(n) => epoch == *n,
+            Self::Range(lo, hi) => (*lo..=*hi).contains(&epoch),
+        }
+    }
+}
+
+/// One shard: a model, the epochs it covers, and its replica set.
+#[derive(Debug)]
+pub struct ShardSpec {
+    pub model: String,
+    pub epochs: EpochSelector,
+    pub backends: Vec<String>,
+    /// Round-robin cursor over `backends` (skipping unhealthy ones).
+    cursor: AtomicUsize,
+}
+
+impl ShardSpec {
+    pub fn new(model: &str, epochs: EpochSelector, backends: Vec<String>) -> Result<Self> {
+        if backends.is_empty() {
+            return Err(Error::Config(format!("shard {model:?} has no backends")));
+        }
+        Ok(Self { model: model.to_string(), epochs, backends, cursor: AtomicUsize::new(0) })
+    }
+}
+
+/// The (model, epoch) → replica-set map. First matching shard wins, in
+/// config order, so an operator can pin `epochs = "0-3"` to old capacity
+/// and let a trailing `epochs = "*"` shard catch the rest.
+#[derive(Debug)]
+pub struct ShardMap {
+    shards: Vec<ShardSpec>,
+}
+
+impl ShardMap {
+    pub fn new(shards: Vec<ShardSpec>) -> Result<Self> {
+        if shards.is_empty() {
+            return Err(Error::Config(
+                "gateway needs at least one [gateway.shards.MODEL] entry".into(),
+            ));
+        }
+        Ok(Self { shards })
+    }
+
+    /// The deduped union of every shard's backends, in first-seen order —
+    /// the fleet that admin verbs fan out to and the probe loop watches.
+    pub fn fleet(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for s in &self.shards {
+            for b in &s.backends {
+                if !seen.contains(b) {
+                    seen.push(b.clone());
+                }
+            }
+        }
+        seen
+    }
+
+    /// The shard serving `(model, epoch)`, if any.
+    pub fn resolve(&self, model: &str, epoch: u32) -> Option<&ShardSpec> {
+        self.shards.iter().find(|s| s.model == model && s.epochs.matches(epoch))
+    }
+
+    /// Healthy replicas for one shard in round-robin order, starting
+    /// from the shard's advancing cursor: the router tries them in turn
+    /// so a replica that fails to connect costs one timeout, not the
+    /// session.
+    fn replica_order(&self, shard: &ShardSpec, fleet: &FleetHealth) -> Vec<String> {
+        let n = shard.backends.len();
+        let start = shard.cursor.fetch_add(1, Ordering::Relaxed) % n;
+        (0..n)
+            .map(|i| &shard.backends[(start + i) % n])
+            .filter(|b| fleet.is_healthy(b))
+            .cloned()
+            .collect()
+    }
+}
+
+struct FleetNode {
+    addr: String,
+    healthy: AtomicBool,
+    /// Ack of the last admin verb fanned out to this node ("-" before
+    /// the first), shown in `fleet-status`.
+    last_ack: Mutex<String>,
+}
+
+/// Live health + last-ack view of every backend, shared by the probe
+/// thread, the routers, and the fleet admin sessions.
+pub struct FleetHealth {
+    nodes: Vec<FleetNode>,
+}
+
+impl FleetHealth {
+    fn new(addrs: Vec<String>) -> Self {
+        Self {
+            nodes: addrs
+                .into_iter()
+                .map(|addr| FleetNode {
+                    addr,
+                    // optimistic until the first probe round (bind runs
+                    // one synchronously, so a dead node is out before
+                    // the gateway accepts traffic)
+                    healthy: AtomicBool::new(true),
+                    last_ack: Mutex::new("-".to_string()),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn is_healthy(&self, addr: &str) -> bool {
+        self.nodes
+            .iter()
+            .find(|n| n.addr == addr)
+            .map(|n| n.healthy.load(Ordering::SeqCst))
+            .unwrap_or(false)
+    }
+
+    pub fn mark(&self, addr: &str, healthy: bool) {
+        if let Some(n) = self.nodes.iter().find(|n| n.addr == addr) {
+            if n.healthy.swap(healthy, Ordering::SeqCst) != healthy {
+                crate::logging::info(&format!(
+                    "gateway: backend {addr} marked {}",
+                    if healthy { "in" } else { "out" }
+                ));
+            }
+        }
+    }
+
+    fn record_ack(&self, addr: &str, ack: &str) {
+        if let Some(n) = self.nodes.iter().find(|n| n.addr == addr) {
+            *n.last_ack.lock().unwrap() = ack.to_string();
+        }
+    }
+
+    /// The `fleet-status` detail: one line per node, never a summary
+    /// bool. `up`/`down` is the probe view; `last:` is the most recent
+    /// fan-out ack for that node.
+    pub fn report(&self) -> String {
+        self.nodes
+            .iter()
+            .map(|n| {
+                format!(
+                    "node {} {} last: {}",
+                    n.addr,
+                    if n.healthy.load(Ordering::SeqCst) { "up" } else { "down" },
+                    n.last_ack.lock().unwrap()
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Gateway tuning — built from the `[gateway]` config table or directly
+/// by tests.
+#[derive(Debug)]
+pub struct GatewayConfig {
+    /// Listen address (`[gateway] listen`).
+    pub addr: String,
+    /// The shard map (`[gateway.shards.MODEL]` tables).
+    pub shards: Vec<ShardSpec>,
+    /// Health-probe cadence (`[gateway] probe_interval_ms`).
+    pub probe_interval: Duration,
+    /// Bound on each backend dial — routing threads block at most this
+    /// long on a dead host (`[gateway] connect_timeout_ms`).
+    pub connect_timeout: Duration,
+    /// Inbound operator gate **and** outbound fan-out credential
+    /// (`[gateway] credential_file`). `None` disables the admin plane.
+    pub credential: Option<[u8; 32]>,
+    /// Proxy driver shards.
+    pub workers: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            shards: Vec::new(),
+            probe_interval: Duration::from_millis(500),
+            connect_timeout: Duration::from_millis(1000),
+            credential: None,
+            workers: 2,
+        }
+    }
+}
+
+/// Everything a routing thread needs, shared behind one `Arc`.
+struct RouterCtx {
+    map: ShardMap,
+    fleet: FleetHealth,
+    credential: Option<[u8; 32]>,
+    connect_timeout: Duration,
+    routers: AtomicUsize,
+    proxy_shards: Vec<Arc<ProxyShared>>,
+    next_shard: AtomicUsize,
+}
+
+struct ProxyShared {
+    inbox: Mutex<Vec<(TcpStream, TcpStream)>>,
+    waker: Waker,
+}
+
+/// A running gateway: acceptor + routing threads + proxy drivers +
+/// probe loop. [`Gateway::stop`] tears all of it down.
+pub struct Gateway {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    ctx: Arc<RouterCtx>,
+    acceptor: Option<JoinHandle<()>>,
+    probe: Option<JoinHandle<()>>,
+    drivers: Vec<JoinHandle<()>>,
+}
+
+impl Gateway {
+    pub fn bind(cfg: GatewayConfig) -> Result<Self> {
+        let map = ShardMap::new(cfg.shards)?;
+        let fleet = FleetHealth::new(map.fleet());
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let workers = cfg.workers.max(1);
+        let mut proxy_shards = Vec::with_capacity(workers);
+        let mut drivers = Vec::with_capacity(workers);
+        let mut rxs = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (wk, rx) = waker().map_err(Error::Io)?;
+            proxy_shards.push(Arc::new(ProxyShared { inbox: Mutex::new(Vec::new()), waker: wk }));
+            rxs.push(rx);
+        }
+
+        // one synchronous probe round before accepting anything: a
+        // backend that is already dead never receives a first session
+        for node in map.fleet() {
+            let up = probe_backend(&node, cfg.connect_timeout);
+            fleet.mark(&node, up);
+        }
+
+        let ctx = Arc::new(RouterCtx {
+            map,
+            fleet,
+            credential: cfg.credential,
+            connect_timeout: cfg.connect_timeout,
+            routers: AtomicUsize::new(0),
+            proxy_shards,
+            next_shard: AtomicUsize::new(0),
+        });
+
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let shared = ctx.proxy_shards[i].clone();
+            let shutdown = shutdown.clone();
+            drivers.push(
+                std::thread::Builder::new()
+                    .name(format!("mole-gw-proxy-{i}"))
+                    .spawn(move || ProxyDriver::new(shared, rx, shutdown).run())
+                    .map_err(Error::Io)?,
+            );
+        }
+
+        let probe = {
+            let ctx = ctx.clone();
+            let shutdown = shutdown.clone();
+            let interval = cfg.probe_interval;
+            std::thread::Builder::new()
+                .name("mole-gw-probe".into())
+                .spawn(move || {
+                    while !shutdown.load(Ordering::SeqCst) {
+                        // sleep in slices so stop() is never blocked on a
+                        // long probe interval
+                        let mut left = interval;
+                        while left > Duration::ZERO && !shutdown.load(Ordering::SeqCst) {
+                            let step = left.min(Duration::from_millis(50));
+                            std::thread::sleep(step);
+                            left = left.saturating_sub(step);
+                        }
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        for node in ctx.map.fleet() {
+                            let up = probe_backend(&node, ctx.connect_timeout);
+                            ctx.fleet.mark(&node, up);
+                        }
+                    }
+                })
+                .map_err(Error::Io)?
+        };
+
+        let acceptor = {
+            let ctx = ctx.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("mole-gw-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let sock = match conn {
+                            Ok(s) => s,
+                            Err(e) => {
+                                crate::logging::warn(&format!("gateway accept failed: {e}"));
+                                continue;
+                            }
+                        };
+                        sock.set_nodelay(true).ok();
+                        if ctx.routers.fetch_add(1, Ordering::SeqCst) >= ROUTE_CAP {
+                            ctx.routers.fetch_sub(1, Ordering::SeqCst);
+                            refuse(
+                                sock,
+                                Fault::Overloaded { retry_after_ms: GATEWAY_RETRY_MS },
+                            );
+                            continue;
+                        }
+                        let ctx = ctx.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("mole-gw-route".into())
+                            .spawn(move || {
+                                route_session(sock, &ctx);
+                                ctx.routers.fetch_sub(1, Ordering::SeqCst);
+                            });
+                        if let Err(e) = spawned {
+                            ctx.routers.fetch_sub(1, Ordering::SeqCst);
+                            crate::logging::warn(&format!("gateway route spawn failed: {e}"));
+                        }
+                    }
+                })
+                .map_err(Error::Io)?
+        };
+
+        Ok(Self {
+            local_addr,
+            shutdown,
+            ctx,
+            acceptor: Some(acceptor),
+            probe: Some(probe),
+            drivers,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The live fleet view (tests poll it; operators use `fleet-status`).
+    pub fn fleet_report(&self) -> String {
+        self.ctx.fleet.report()
+    }
+
+    /// Stop accepting, wake and join every thread. In-flight proxy
+    /// sessions are dropped — stop the gateway after its clients.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr); // unblock accept()
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for s in &self.ctx.proxy_shards {
+            s.waker.wake();
+        }
+        for d in self.drivers.drain(..) {
+            let _ = d.join();
+        }
+        if let Some(p) = self.probe.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+/// Liveness probe: bounded connect, one `Hello`, one reply. A `Hello`
+/// *or any typed `Fault`* is proof of life — the probe's empty model
+/// name resolves to nothing on purpose, so the backend answers a typed
+/// refusal without ever standing up a session. Dead TCP, a stalled
+/// read, or unframed garbage is what "down" means.
+fn probe_backend(addr: &str, timeout: Duration) -> bool {
+    let Some(sa) = resolve_addr(addr) else { return false };
+    let Ok(mut sock) = TcpStream::connect_timeout(&sa, timeout) else {
+        return false;
+    };
+    sock.set_nodelay(true).ok();
+    sock.set_read_timeout(Some(timeout)).ok();
+    sock.set_write_timeout(Some(timeout)).ok();
+    let hello = Message::Hello {
+        version: super::protocol::PROTOCOL_VERSION,
+        model: String::new(),
+        epoch: 0,
+        geometry: crate::Geometry::new(0, 0, 0, 0),
+        kappa: 0,
+        fingerprint: String::new(),
+        num_batches: 0,
+        batch_size: 0,
+    };
+    if write_message(&mut sock, &hello).is_err() {
+        return false;
+    }
+    matches!(read_message(&mut sock), Ok(Message::Hello { .. } | Message::Fault { .. }))
+}
+
+fn resolve_addr(addr: &str) -> Option<SocketAddr> {
+    use std::net::ToSocketAddrs;
+    addr.to_socket_addrs().ok()?.next()
+}
+
+/// Best-effort typed refusal on a connection the gateway won't route.
+fn refuse(mut sock: TcpStream, fault: Fault) {
+    sock.set_write_timeout(Some(Duration::from_millis(250))).ok();
+    let _ = write_message(&mut sock, &Message::Fault { of: FAULT_SESSION, fault });
+    let _ = sock.shutdown(Shutdown::Write);
+}
+
+/// One routing handshake: read the client's first frame, decide where
+/// the session belongs, and either hand the spliced pair to a proxy
+/// driver, run the fleet admin session, or refuse typed.
+fn route_session(mut sock: TcpStream, ctx: &RouterCtx) {
+    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+    sock.set_write_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+    let first = match read_message(&mut sock) {
+        Ok(m) => m,
+        Err(e) => {
+            refuse(sock, Fault::from_error(&e));
+            return;
+        }
+    };
+    match first {
+        Message::Hello { ref model, epoch, .. } => {
+            let Some(shard) = ctx.map.resolve(model, epoch) else {
+                refuse(
+                    sock,
+                    Fault::Generic {
+                        msg: format!("gateway has no shard for {model}@{epoch}"),
+                    },
+                );
+                return;
+            };
+            // try each healthy replica once; a failed dial marks the
+            // node out right now instead of waiting for the next probe
+            for addr in ctx.map.replica_order(shard, &ctx.fleet) {
+                let Some(sa) = resolve_addr(&addr) else {
+                    ctx.fleet.mark(&addr, false);
+                    continue;
+                };
+                let backend = match TcpStream::connect_timeout(&sa, ctx.connect_timeout) {
+                    Ok(b) => b,
+                    Err(_) => {
+                        ctx.fleet.mark(&addr, false);
+                        continue;
+                    }
+                };
+                backend.set_nodelay(true).ok();
+                let mut backend = backend;
+                if write_message(&mut backend, &first).is_err() {
+                    ctx.fleet.mark(&addr, false);
+                    continue;
+                }
+                // routed: timeouts off, sockets go evented
+                sock.set_read_timeout(None).ok();
+                sock.set_write_timeout(None).ok();
+                let shard_idx =
+                    ctx.next_shard.fetch_add(1, Ordering::Relaxed) % ctx.proxy_shards.len();
+                let shared = &ctx.proxy_shards[shard_idx];
+                shared.inbox.lock().unwrap().push((sock, backend));
+                shared.waker.wake();
+                return;
+            }
+            refuse(sock, Fault::Overloaded { retry_after_ms: GATEWAY_RETRY_MS });
+        }
+        Message::AdminHello => match ctx.credential {
+            Some(cred) => {
+                if let Err(e) = run_fleet_admin_session(&mut sock, cred, ctx) {
+                    crate::logging::warn(&format!("gateway admin session ended: {e}"));
+                }
+            }
+            None => refuse(
+                sock,
+                Fault::AdminAuth {
+                    msg: "gateway has no admin credential configured; the fleet \
+                          admin plane is disabled"
+                        .into(),
+                },
+            ),
+        },
+        Message::DatasetHello { .. } => refuse(
+            sock,
+            Fault::Generic {
+                msg: "bulk delivery does not traverse the gateway; pull datasets \
+                      from a backend directly"
+                    .into(),
+            },
+        ),
+        Message::AdminRegister { .. }
+        | Message::AdminDrain { .. }
+        | Message::AdminRetire { .. }
+        | Message::AdminStatus
+        | Message::AdminRevoke { .. }
+        | Message::AdminFleetStatus => refuse(
+            sock,
+            Fault::AdminAuth {
+                msg: "gateway admin verbs must ride the authenticated plane \
+                      (open with AdminHello)"
+                    .into(),
+            },
+        ),
+        other => refuse(
+            sock,
+            Fault::Generic {
+                msg: format!(
+                    "gateway sessions open with Hello or AdminHello, got tag {}",
+                    other.wire_tag()
+                ),
+            },
+        ),
+    }
+}
+
+/// Fan one admin verb out to every fleet node as an authenticated
+/// operator, recording each node's ack. The aggregate is **always** one
+/// line per node — `ok:` or `failed:` — so a partial fan-out reads as
+/// exactly that, never as a single collapsed success/failure.
+fn fan_out(ctx: &RouterCtx, cred: [u8; 32], verb: &Message) -> String {
+    let mut lines = Vec::new();
+    for addr in ctx.map.fleet() {
+        let outcome = fan_out_one(&addr, cred, ctx.connect_timeout, verb);
+        let line = match outcome {
+            Ok(detail) => {
+                let first = detail.lines().next().unwrap_or("").to_string();
+                ctx.fleet.record_ack(&addr, &format!("ok: {first}"));
+                // multi-line details (status) stay grouped under their
+                // node, continuation lines indented
+                format!("node {addr} ok: {}", detail.replace('\n', "\n  "))
+            }
+            Err(e) => {
+                ctx.fleet.record_ack(&addr, &format!("failed: {e}"));
+                format!("node {addr} failed: {e}")
+            }
+        };
+        lines.push(line);
+    }
+    lines.join("\n")
+}
+
+fn fan_out_one(
+    addr: &str,
+    cred: [u8; 32],
+    timeout: Duration,
+    verb: &Message,
+) -> Result<String> {
+    let sa = resolve_addr(addr)
+        .ok_or_else(|| Error::Config(format!("unresolvable backend {addr:?}")))?;
+    let sock = TcpStream::connect_timeout(&sa, timeout)?;
+    sock.set_nodelay(true).ok();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    sock.set_write_timeout(Some(Duration::from_secs(10))).ok();
+    let mut admin = AdminClient::over(sock);
+    admin.authenticate(cred)?;
+    let detail = admin.request(verb)?;
+    let _ = admin.finish();
+    Ok(detail)
+}
+
+/// The gateway's side of an operator's sealed admin session. Protocol
+/// v8 sealing reused verbatim ([`super::admin`] semantics: auth failure
+/// answers the one legitimately-cleartext fault and ends the session;
+/// verb failures answer sealed and keep it alive) — only the dispatch
+/// differs: verbs fan out to the fleet, `fleet-status` answers from the
+/// live health/ack view, and nothing here touches a registry because
+/// the gateway has none.
+fn run_fleet_admin_session(
+    stream: &mut TcpStream,
+    cred: [u8; 32],
+    ctx: &RouterCtx,
+) -> Result<()> {
+    let table = OperatorTable::shared(cred);
+    let nonce = fresh_nonce();
+    write_message(stream, &Message::AdminChallenge { nonce })?;
+    let mut last_counter = 0u64;
+    loop {
+        let frame = match read_message(stream) {
+            Ok(Message::EndOfData) => {
+                let _ = write_message(stream, &Message::EndOfData);
+                return Ok(());
+            }
+            Ok(m) => m,
+            Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Ok(())
+            }
+            Err(e) => return Err(e),
+        };
+        let (_operator, op_cred, counter, inner) =
+            match table.open_request(&nonce, last_counter, &frame) {
+                Ok(opened) => opened,
+                Err(e) => {
+                    let _ = write_message(
+                        stream,
+                        &Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
+                    );
+                    return Err(e);
+                }
+            };
+        last_counter = counter;
+        let outcome: Result<String> = match &inner {
+            Message::AdminFleetStatus => Ok(ctx.fleet.report()),
+            verb @ (Message::AdminRegister { .. }
+            | Message::AdminDrain { .. }
+            | Message::AdminRetire { .. }
+            | Message::AdminStatus
+            | Message::AdminRevoke { .. }) => Ok(fan_out(ctx, cred, verb)),
+            other => Err(Error::Protocol(format!(
+                "fleet admin session got non-admin frame {other:?}"
+            ))),
+        };
+        let reply = match outcome {
+            Ok(detail) => {
+                crate::logging::info(&format!(
+                    "gateway admin: {}",
+                    detail.lines().next().unwrap_or("")
+                ));
+                Message::AdminOk { detail }
+            }
+            Err(e) => Message::Fault { of: FAULT_SESSION, fault: Fault::from_error(&e) },
+        };
+        write_message(stream, &seal_admin_reply(&op_cred, &nonce, counter, &reply))?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// evented byte splice
+// ---------------------------------------------------------------------------
+
+/// One routed session: two sockets, two bounded per-direction buffers.
+/// Bytes are forwarded verbatim — the proxy never re-frames.
+struct Proxy {
+    client: TcpStream,
+    backend: TcpStream,
+    /// client → backend bytes awaiting write.
+    c2b: Vec<u8>,
+    /// backend → client bytes awaiting write.
+    b2c: Vec<u8>,
+    c_eof: bool,
+    b_eof: bool,
+    c_shut: bool,
+    b_shut: bool,
+}
+
+impl Proxy {
+    fn new(client: TcpStream, backend: TcpStream) -> std::io::Result<Self> {
+        client.set_nonblocking(true)?;
+        backend.set_nonblocking(true)?;
+        Ok(Self {
+            client,
+            backend,
+            c2b: Vec::new(),
+            b2c: Vec::new(),
+            c_eof: false,
+            b_eof: false,
+            c_shut: false,
+            b_shut: false,
+        })
+    }
+
+    /// Move whatever can move without blocking, in both directions, and
+    /// propagate half-closes. Returns false when the session is spent
+    /// (both directions EOF and flushed) or dead (I/O error — teardown
+    /// drops both sockets, which is all a byte proxy can honestly do).
+    fn pump(&mut self) -> bool {
+        // half-duplex forwarding is symmetric; run (read, write, FIN)
+        // for each direction
+        if !self.c_eof && self.c2b.len() < PROXY_BUF {
+            match read_some(&mut self.client, &mut self.c2b) {
+                Ok(eof) => self.c_eof |= eof,
+                Err(_) => return false,
+            }
+        }
+        if !self.c2b.is_empty() && write_some(&mut self.backend, &mut self.c2b).is_err() {
+            return false;
+        }
+        if self.c_eof && self.c2b.is_empty() && !self.b_shut {
+            let _ = self.backend.shutdown(Shutdown::Write);
+            self.b_shut = true;
+        }
+
+        if !self.b_eof && self.b2c.len() < PROXY_BUF {
+            match read_some(&mut self.backend, &mut self.b2c) {
+                Ok(eof) => self.b_eof |= eof,
+                Err(_) => return false,
+            }
+        }
+        if !self.b2c.is_empty() && write_some(&mut self.client, &mut self.b2c).is_err() {
+            return false;
+        }
+        if self.b_eof && self.b2c.is_empty() && !self.c_shut {
+            let _ = self.client.shutdown(Shutdown::Write);
+            self.c_shut = true;
+        }
+
+        !(self.c_eof && self.b_eof && self.c2b.is_empty() && self.b2c.is_empty())
+    }
+
+    /// (client interest, backend interest) for the next poll round;
+    /// `None` means that socket has nothing to wait for right now.
+    fn interests(&self) -> (Option<Interest>, Option<Interest>) {
+        let side = |eof: bool, inbuf: &Vec<u8>, outbuf: &Vec<u8>| {
+            let rd = !eof && inbuf.len() < PROXY_BUF;
+            let wr = !outbuf.is_empty();
+            match (rd, wr) {
+                (true, true) => Some(Interest::BOTH),
+                (true, false) => Some(Interest::READ),
+                (false, true) => Some(Interest::WRITE),
+                (false, false) => None,
+            }
+        };
+        (side(self.c_eof, &self.c2b, &self.b2c), side(self.b_eof, &self.b2c, &self.c2b))
+    }
+}
+
+/// Drain the socket into `buf` until `WouldBlock`, the buffer cap, or
+/// EOF (returned as `Ok(true)`).
+fn read_some(sock: &mut TcpStream, buf: &mut Vec<u8>) -> std::io::Result<bool> {
+    let mut chunk = [0u8; 8192];
+    while buf.len() < PROXY_BUF {
+        match sock.read(&mut chunk) {
+            Ok(0) => return Ok(true),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(false)
+}
+
+/// Write as much of `buf` as the socket takes without blocking.
+fn write_some(sock: &mut TcpStream, buf: &mut Vec<u8>) -> std::io::Result<()> {
+    while !buf.is_empty() {
+        match sock.write(buf) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                buf.drain(..n);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// One proxy driver: adopts routed pairs from its inbox, splices them
+/// on a shared [`Poller`], tears down spent or broken sessions.
+struct ProxyDriver {
+    shared: Arc<ProxyShared>,
+    wake_rx: WakeRx,
+    shutdown: Arc<AtomicBool>,
+    sessions: HashMap<u64, Proxy>,
+    next_id: u64,
+    poller: Poller,
+}
+
+impl ProxyDriver {
+    fn new(shared: Arc<ProxyShared>, wake_rx: WakeRx, shutdown: Arc<AtomicBool>) -> Self {
+        Self {
+            shared,
+            wake_rx,
+            shutdown,
+            sessions: HashMap::new(),
+            next_id: 0,
+            poller: Poller::new(),
+        }
+    }
+
+    fn run(mut self) {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return; // drops every in-flight session
+            }
+            // adopt routed pairs; a first pump moves the replayed Hello's
+            // reply without waiting a poll round
+            let adopted = std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+            for (client, backend) in adopted {
+                if let Ok(mut p) = Proxy::new(client, backend) {
+                    if p.pump() {
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        self.sessions.insert(id, p);
+                    }
+                }
+            }
+
+            // interest list: slot 0 is the waker, then every socket that
+            // has something to wait for
+            let mut fds: Vec<(std::os::unix::io::RawFd, Interest)> =
+                vec![(self.wake_rx.fd(), Interest::READ)];
+            let mut who: Vec<u64> = Vec::new();
+            for (&id, p) in &self.sessions {
+                let (ci, bi) = p.interests();
+                if let Some(i) = ci {
+                    fds.push((p.client.as_raw_fd(), i));
+                    who.push(id);
+                }
+                if let Some(i) = bi {
+                    fds.push((p.backend.as_raw_fd(), i));
+                    who.push(id);
+                }
+            }
+
+            let events = match self.poller.wait(&fds, Some(POLL_CAP)) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    crate::logging::warn(&format!("gateway proxy poll failed: {e}"));
+                    return;
+                }
+            };
+            let mut dead: Vec<u64> = Vec::new();
+            for ev in events {
+                if ev.slot == 0 {
+                    self.wake_rx.drain();
+                    continue;
+                }
+                let id = who[ev.slot - 1];
+                if dead.contains(&id) {
+                    continue;
+                }
+                // pump handles readable/writable/hangup alike: reads see
+                // the EOF or error a hangup implies, writes flush what
+                // readiness allows
+                if let Some(p) = self.sessions.get_mut(&id) {
+                    if !p.pump() {
+                        dead.push(id);
+                    }
+                }
+            }
+            for id in dead {
+                self.sessions.remove(&id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(model: &str, epochs: &str, backends: &[&str]) -> ShardSpec {
+        ShardSpec::new(
+            model,
+            EpochSelector::parse(epochs).unwrap(),
+            backends.iter().map(|s| s.to_string()).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn epoch_selectors_parse_and_match() {
+        assert_eq!(EpochSelector::parse("*").unwrap(), EpochSelector::Any);
+        assert_eq!(EpochSelector::parse("4").unwrap(), EpochSelector::One(4));
+        assert_eq!(EpochSelector::parse(" 2-5 ").unwrap(), EpochSelector::Range(2, 5));
+        assert!(EpochSelector::parse("5-2").is_err());
+        assert!(EpochSelector::parse("x").is_err());
+        assert!(EpochSelector::parse("").is_err());
+        // the latest-epoch sentinel is reserved: only "*" may claim it
+        assert!(EpochSelector::parse("4294967295").is_err());
+        assert!(EpochSelector::parse("0-4294967295").is_err());
+
+        let latest = super::super::protocol::EPOCH_LATEST;
+        assert!(EpochSelector::Any.matches(latest));
+        assert!(EpochSelector::Any.matches(0));
+        assert!(EpochSelector::One(4).matches(4));
+        assert!(!EpochSelector::One(4).matches(5));
+        assert!(!EpochSelector::One(4).matches(latest));
+        assert!(EpochSelector::Range(2, 5).matches(2));
+        assert!(EpochSelector::Range(2, 5).matches(5));
+        assert!(!EpochSelector::Range(2, 5).matches(6));
+        assert!(!EpochSelector::Range(2, 5).matches(latest));
+    }
+
+    #[test]
+    fn shard_map_routes_first_match_in_config_order() {
+        let map = ShardMap::new(vec![
+            shard("alpha", "0-1", &["n1", "n2"]),
+            shard("alpha", "*", &["n3"]),
+            shard("beta", "*", &["n1", "n4"]),
+        ])
+        .unwrap();
+        assert_eq!(map.resolve("alpha", 0).unwrap().backends, vec!["n1", "n2"]);
+        assert_eq!(map.resolve("alpha", 1).unwrap().backends, vec!["n1", "n2"]);
+        assert_eq!(map.resolve("alpha", 2).unwrap().backends, vec!["n3"]);
+        let latest = super::super::protocol::EPOCH_LATEST;
+        assert_eq!(map.resolve("alpha", latest).unwrap().backends, vec!["n3"]);
+        assert_eq!(map.resolve("beta", 7).unwrap().backends, vec!["n1", "n4"]);
+        assert!(map.resolve("gamma", 0).is_none());
+        // fleet is the deduped union in first-seen order
+        assert_eq!(map.fleet(), vec!["n1", "n2", "n3", "n4"]);
+    }
+
+    #[test]
+    fn replica_order_round_robins_and_skips_unhealthy() {
+        let map = ShardMap::new(vec![shard("alpha", "*", &["n1", "n2", "n3"])]).unwrap();
+        let fleet = FleetHealth::new(map.fleet());
+        let s = map.resolve("alpha", 0).unwrap();
+        // all healthy: successive routes start at rotating offsets but
+        // always list every replica once
+        let a = map.replica_order(s, &fleet);
+        let b = map.replica_order(s, &fleet);
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 3);
+        assert_ne!(a[0], b[0], "cursor must advance between routes");
+        // one node out: it vanishes from the candidate list entirely
+        fleet.mark("n2", false);
+        for _ in 0..6 {
+            let order = map.replica_order(s, &fleet);
+            assert_eq!(order.len(), 2);
+            assert!(!order.contains(&"n2".to_string()));
+        }
+        // none healthy: empty order → the router sheds typed Overloaded
+        fleet.mark("n1", false);
+        fleet.mark("n3", false);
+        assert!(map.replica_order(s, &fleet).is_empty());
+        // recovery: the probe marks it back in and traffic respreads
+        fleet.mark("n2", true);
+        assert_eq!(map.replica_order(s, &fleet), vec!["n2"]);
+    }
+
+    #[test]
+    fn fleet_report_is_per_node_never_collapsed() {
+        let fleet = FleetHealth::new(vec!["n1".into(), "n2".into()]);
+        fleet.mark("n2", false);
+        fleet.record_ack("n1", "ok: drained alpha@0");
+        let report = fleet.report();
+        assert_eq!(report.lines().count(), 2);
+        assert!(report.contains("node n1 up last: ok: drained alpha@0"), "{report}");
+        assert!(report.contains("node n2 down last: -"), "{report}");
+    }
+
+    #[test]
+    fn empty_shard_configs_are_refused() {
+        assert!(ShardMap::new(Vec::new()).is_err());
+        assert!(ShardSpec::new("alpha", EpochSelector::Any, Vec::new()).is_err());
+    }
+}

@@ -33,6 +33,14 @@
 //!   vault roster + `mole operator`), revocable live
 //!   (`AdminRevoke`), and every verb is attributed to its operator in
 //!   an append-only [`AuditLog`].
+//! * **Fleet gateway ([`gateway`], protocol v9)**: one TCP front for N
+//!   serving processes — sessions route by a (model, epoch) shard map
+//!   and splice verbatim on the shared [`reactor`] (lifecycle faults
+//!   pass through untouched, so client redirects work unchanged), a
+//!   probe loop marks unresponsive backends out and respreads their
+//!   shard, and the sealed admin plane fans `register`/`drain`/
+//!   `retire`/`revoke-operator` out fleet-wide with per-node acks plus
+//!   the aggregated `fleet-status` verb.
 //! * **Bulk delivery plane ([`delivery`], protocol v7)**: chunked,
 //!   hash-verified, resumable, striped morphed-dataset transfer —
 //!   [`delivery::ChunkStore`] + manifest serving on the provider side,
@@ -59,6 +67,7 @@ pub mod client;
 pub mod delivery;
 pub mod developer;
 pub mod experiment;
+pub mod gateway;
 pub mod loadgen;
 pub mod protocol;
 pub mod provider;
@@ -73,6 +82,7 @@ pub use batcher::{AdaptiveWindow, BatcherConfig, ServingHandle};
 pub use client::{ClientConfig, DeliveryClient, MoleClient, ProviderSession, ServerInfo};
 pub use delivery::{ChunkStore, DatasetManifest, PullOptions, PullReport};
 pub use developer::{DeveloperNode, TrainOutcome};
+pub use gateway::{EpochSelector, Gateway, GatewayConfig, ShardMap, ShardSpec};
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use protocol::{
     admin_mac, open_admin, open_admin_reply, seal_admin, seal_admin_reply, Fault,

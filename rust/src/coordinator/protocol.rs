@@ -109,6 +109,20 @@
 //! or tampered manifest before fetching a single chunk (and the
 //! journal-binding digest, computed over the unsigned encoding, is
 //! stable whether or not the manifest travels signed).
+//!
+//! ## Fleet admin (v9)
+//!
+//! v9 adds `AdminFleetStatus` (tag 25, empty payload): a sealed,
+//! gateway-only query that returns the aggregated per-node health and
+//! ack state of every backend behind a `mole gateway`
+//! ([`super::gateway`]). It rides the existing v8 sealing unchanged —
+//! same MAC preimage, same direction bytes, same counters — because the
+//! gateway terminates the operator's sealed session itself and then
+//! re-authenticates *as an operator* to each backend with ordinary
+//! `register`/`drain`/`retire`/`revoke-operator`/`status` verbs. A
+//! backend that receives `AdminFleetStatus` directly refuses it typed:
+//! fleet aggregation is the gateway's job, and a lone serving process
+//! answering "fleet ok" would collapse per-node truth into one bool.
 
 use crate::hash::{ct_eq, hmac_sha256};
 use crate::tensor::Tensor;
@@ -135,11 +149,14 @@ const MAX_PAYLOAD: usize = 1 << 30;
 /// (replies now sealed too — [`seal_admin_reply`]/[`open_admin_reply`]),
 /// the `AdminRevoke` operator-revocation verb (tag 24), and the
 /// optional ed25519 signature block on `Manifest` frames
-/// ([`ManifestSig`]). **v3 is deliberately skipped**:
+/// ([`ManifestSig`]); v9 added the fleet-status verb (tag 25,
+/// [`Message::AdminFleetStatus`]) answered by the gateway tier with
+/// per-node acks — serving processes refuse it typed.
+/// **v3 is deliberately skipped**:
 /// pre-versioning (v1) `Hello` frames began with the geometry's α = 3,
 /// which decodes as "version 3" — a build claiming v3 could not tell a
 /// legacy peer from a current one.
-pub const PROTOCOL_VERSION: u32 = 8;
+pub const PROTOCOL_VERSION: u32 = 9;
 
 /// `epoch` sentinel meaning "the newest epoch the peer serves".
 pub const EPOCH_LATEST: u32 = u32::MAX;
@@ -383,6 +400,12 @@ pub enum Message {
     /// sessions included. Only carries the label; credentials never
     /// cross the wire.
     AdminRevoke { label: String },
+    /// Admin (v9): ask the **gateway** for the per-node health + last
+    /// fan-out ack of every backend in its fleet. Empty payload; the
+    /// reply is a sealed `AdminOk` whose detail carries one line per
+    /// node, never a collapsed boolean. Serving processes are not the
+    /// fleet — they refuse this verb typed.
+    AdminFleetStatus,
 }
 
 impl Message {
@@ -418,6 +441,7 @@ impl Message {
             Message::Chunk { .. } => 22,
             Message::DeliveryDone => 23,
             Message::AdminRevoke { .. } => 24,
+            Message::AdminFleetStatus => 25,
         }
     }
 }
@@ -869,6 +893,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
         }
         Message::DeliveryDone => {}
         Message::AdminRevoke { label } => put_str(&mut out, label),
+        Message::AdminFleetStatus => {}
     }
     out
 }
@@ -1019,6 +1044,7 @@ pub fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
         }
         23 => Message::DeliveryDone,
         24 => Message::AdminRevoke { label: c.str()? },
+        25 => Message::AdminFleetStatus,
         t => return Err(Error::Protocol(format!("unknown message tag {t}"))),
     };
     c.done()?;
@@ -1458,6 +1484,19 @@ mod tests {
                 &[2u8; 32],
                 2,
                 &Message::AdminOk { detail: "revoked operator \"ada\"".into() },
+            ),
+            // v9 frames: the fleet-status query, bare and sealed, plus a
+            // sealed per-node aggregate reply as the gateway sends it
+            Message::AdminFleetStatus,
+            seal_admin(&[1u8; 32], &[2u8; 32], 3, &Message::AdminFleetStatus),
+            seal_admin_reply(
+                &[1u8; 32],
+                &[2u8; 32],
+                3,
+                &Message::AdminOk {
+                    detail: "node 127.0.0.1:4101 ok | node 127.0.0.1:4102 failed: probe timeout"
+                        .into(),
+                },
             ),
         ]
     }

@@ -108,11 +108,40 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Backoff hint stamped on connections shed at accept. Accept-time sheds
-/// happen before any lane is known, so there is no live backlog to
-/// derive a hint from; a flat 100 ms keeps refused clients from
-/// hammering a saturated listener without pinning them for long.
-const ACCEPT_RETRY_AFTER_MS: u64 = 100;
+/// Floor of the accept-shed backoff hint: even a shed that races a
+/// just-freed slot tells the client to wait at least this long.
+const ACCEPT_RETRY_MIN_MS: u64 = 25;
+/// Ceiling of the accept-shed backoff hint. Matches the documented
+/// `retry_after_ms` contract of [1, 1000] ms — a gateway or SDK must
+/// never be pinned out for more than a second by one hint.
+const ACCEPT_RETRY_MAX_MS: u64 = 1000;
+/// Every this-many *consecutive* sheds (no admit in between), the hint
+/// doubles: a sustained storm is told to back off harder than a blip.
+const ACCEPT_BURST_STEP: u64 = 8;
+
+/// Backoff hint for a connection shed at accept, derived from live shed
+/// pressure rather than a flat constant (the old fixed 100 ms taught
+/// gateways nothing about *how* overloaded the listener was).
+///
+/// Two signals, both available on the accept path before any lane is
+/// known:
+///
+/// * `pending` / `max_pending` — the depth of the pending-handshake
+///   budget, the queue an accepted socket would join. The hint scales
+///   linearly from [`ACCEPT_RETRY_MIN_MS`] (empty) to 250 ms (full).
+/// * `shed_burst` — consecutive sheds since the last admit, a proxy for
+///   the recent `accept_shed` rate. Each [`ACCEPT_BURST_STEP`] sheds
+///   double the hint (capped at ×32) so a storm self-disperses instead
+///   of re-arriving in lockstep.
+///
+/// The result is clamped to [[`ACCEPT_RETRY_MIN_MS`],
+/// [`ACCEPT_RETRY_MAX_MS`]], inside the documented [1, 1000] ms
+/// contract.
+fn accept_retry_hint(pending: u64, max_pending: u64, shed_burst: u64) -> u64 {
+    let fill = 225 * pending.min(max_pending) / max_pending.max(1);
+    let doubling = (shed_burst / ACCEPT_BURST_STEP).min(5);
+    ((ACCEPT_RETRY_MIN_MS + fill) << doubling).clamp(ACCEPT_RETRY_MIN_MS, ACCEPT_RETRY_MAX_MS)
+}
 
 /// How long a driver keeps serving open sessions after [`Server::stop`]
 /// before dropping them. Bounds `stop()` even against a peer that never
@@ -362,6 +391,9 @@ impl Server {
                 .name("mole-accept".into())
                 .spawn(move || {
                     let mut next = 0usize;
+                    // consecutive sheds since the last admit — feeds the
+                    // burst-doubling term of the retry hint
+                    let mut shed_burst = 0u64;
                     for conn in listener.incoming() {
                         if shutdown.load(Ordering::SeqCst) {
                             return;
@@ -382,9 +414,16 @@ impl Server {
                         if live.load(Ordering::SeqCst) >= max_sessions
                             || pending.load(Ordering::SeqCst) >= max_pending
                         {
-                            shed_accept(sock, &metrics);
+                            let hint = accept_retry_hint(
+                                pending.load(Ordering::SeqCst),
+                                max_pending,
+                                shed_burst,
+                            );
+                            shed_burst += 1;
+                            shed_accept(sock, hint, &metrics);
                             continue;
                         }
+                        shed_burst = 0;
                         let slot = LiveSlot::claim(&live, &metrics);
                         let pend = PendingSlot::claim(&pending);
                         if sock.set_nonblocking(true).is_err() {
@@ -486,13 +525,13 @@ const SHED_DRAIN_WINDOW: Duration = Duration::from_millis(250);
 /// ([`SHED_DRAIN_CAP`]), time ([`SHED_DRAIN_WINDOW`]) and bytes. Past
 /// the thread cap the close is abrupt — under a genuine shed storm an
 /// occasional reset beats unbounded thread growth, and the well-behaved
-/// retry path ([`ACCEPT_RETRY_AFTER_MS`]) keeps storms self-limiting.
-fn shed_accept(mut sock: TcpStream, metrics: &Arc<ServingMetrics>) {
+/// retry path ([`accept_retry_hint`]) keeps storms self-limiting.
+fn shed_accept(mut sock: TcpStream, retry_after_ms: u64, metrics: &Arc<ServingMetrics>) {
     metrics.accept_shed.inc();
     sock.set_write_timeout(Some(Duration::from_millis(250))).ok();
     let fault = Message::Fault {
         of: FAULT_SESSION,
-        fault: Fault::Overloaded { retry_after_ms: ACCEPT_RETRY_AFTER_MS },
+        fault: Fault::Overloaded { retry_after_ms },
     };
     if let Ok(n) = write_message(&mut sock, &fault) {
         metrics.bytes_out.add(n as u64);
@@ -1191,5 +1230,38 @@ impl Driver {
             Ok(handle) => self.admin_threads.lock().unwrap().push(handle),
             Err(e) => crate::logging::warn(&format!("detached session spawn failed: {e}")),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_hint_scales_with_pending_fill() {
+        // empty pending queue → floor; full → floor + 225 = 250 ms
+        assert_eq!(accept_retry_hint(0, 128, 0), ACCEPT_RETRY_MIN_MS);
+        assert_eq!(accept_retry_hint(64, 128, 0), 25 + 112);
+        assert_eq!(accept_retry_hint(128, 128, 0), 250);
+        // pending can transiently exceed max_pending (race with release);
+        // the fill term saturates instead of overshooting
+        assert_eq!(accept_retry_hint(1000, 128, 0), 250);
+    }
+
+    #[test]
+    fn accept_hint_doubles_per_burst_step_and_clamps() {
+        let base = accept_retry_hint(128, 128, 0);
+        assert_eq!(accept_retry_hint(128, 128, ACCEPT_BURST_STEP - 1), base);
+        assert_eq!(accept_retry_hint(128, 128, ACCEPT_BURST_STEP), base * 2);
+        assert_eq!(accept_retry_hint(128, 128, 2 * ACCEPT_BURST_STEP), ACCEPT_RETRY_MAX_MS);
+        // doubling is capped, so even absurd bursts stay in contract
+        for burst in [0, 7, 8, 100, u64::MAX] {
+            for pending in [0, 1, 64, 128, u64::MAX] {
+                let hint = accept_retry_hint(pending, 128, burst);
+                assert!((ACCEPT_RETRY_MIN_MS..=ACCEPT_RETRY_MAX_MS).contains(&hint));
+            }
+        }
+        // degenerate max_pending never divides by zero
+        assert!(accept_retry_hint(5, 0, 0) >= ACCEPT_RETRY_MIN_MS);
     }
 }

@@ -41,6 +41,20 @@
 //!   `--audit-log` appends every attributed admin verb to a 0600 file,
 //!   and `--vault-signer` refuses an admin vault that is unsigned or
 //!   not signed by that key
+//! * `gateway [--listen ADDR] [--credential FILE] [--probe-ms T]
+//!   [--connect-timeout-ms T] [--workers W]` — fleet front (protocol
+//!   v9): one TCP address for N `mole serve` processes. Serving
+//!   sessions route by the `[gateway.shards.MODEL]` (model, epoch)
+//!   shard map — first matching shard in config order, round-robin
+//!   across its healthy replicas — then splice bytes verbatim, so
+//!   lifecycle faults (`Draining`/`Retired`/`Overloaded`) pass through
+//!   untouched and client redirects work unchanged. A typed-probe loop
+//!   (`--probe-ms`) marks unresponsive backends out and respreads
+//!   their shard. With `--credential`, sealed admin sessions terminate
+//!   at the gateway and `register|drain|retire|status|revoke-operator`
+//!   fan out fleet-wide with one line per node (never collapsed into
+//!   one bool); `fleet-status` reports the gateway's live per-node
+//!   health. Without it every admin frame is refused typed
 //! * `loadgen [--connect ADDR] [--connections C] [--requests R]
 //!   [--pipeline P] [--rate RPS] [--model NAME] [--epoch E]` —
 //!   multi-connection serving load driver. `--rate 0` (default) is
@@ -59,13 +73,15 @@
 //!   [--credential-out FILE]` — rotate a vault to the next key epoch
 //!   (fresh morph seed + permutation, lineage recorded; the admin
 //!   credential re-derives with it)
-//! * `admin <register|drain|retire|status|revoke-operator>
+//! * `admin <register|drain|retire|status|revoke-operator|fleet-status>
 //!   [--connect ADDR] [--credential FILE]` — drive a running server's
 //!   live registry. Without `--credential` the server must be loopback
 //!   and credential-free; with it, every verb is MAC-authenticated both
 //!   ways (challenge–response + frame counter; since v8 replies come
 //!   back sealed too, so a forged or replayed ack dies typed) and
-//!   remote servers are legal.
+//!   remote servers are legal. Pointed at a `mole gateway`, the same
+//!   verbs fan out fleet-wide with per-node acks, and `fleet-status`
+//!   (v9, gateway-only) prints the gateway's per-node health view.
 //!   `register --model NAME [--vault FILE | --kappa K --seed S]
 //!   [--trunk-seed T]` starts a new lane (the vault path is read by the
 //!   **server**); `drain --model NAME --epoch E` stops new traffic on an
@@ -138,6 +154,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("push-dataset") => push_dataset(&args, &cfg),
         Some("pull-dataset") => pull_dataset(&args, &cfg),
         Some("serve") => serve(&args, &cfg),
+        Some("gateway") => gateway(&args, &cfg),
         Some("loadgen") => loadgen(&args, &cfg),
         Some("keygen") => keygen(&args, &cfg),
         Some("rotate-key") => rotate_key(&args),
@@ -149,7 +166,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("attack") => attack(&args, &cfg),
         _ => {
             eprintln!(
-                "usage: mole <security-report|overhead|morph|provider|developer|push-dataset|pull-dataset|serve|loadgen|keygen|rotate-key|admin|operator|sign-keygen|sign-vault|e2e|attack> [options]"
+                "usage: mole <security-report|overhead|morph|provider|developer|push-dataset|pull-dataset|serve|gateway|loadgen|keygen|rotate-key|admin|operator|sign-keygen|sign-vault|e2e|attack> [options]"
             );
             Ok(())
         }
@@ -603,6 +620,70 @@ fn serve(args: &Args, cfg: &MoleConfig) -> Result<()> {
     }
 }
 
+/// `mole gateway` — front a fleet of serving processes (protocol v9).
+/// The shard map comes from `[gateway.shards.MODEL]` config tables;
+/// selector/backends validation happens here at startup (a typo refuses
+/// to launch, it never eats a session later).
+fn gateway(args: &Args, cfg: &MoleConfig) -> Result<()> {
+    use mole::coordinator::gateway::{EpochSelector, Gateway, GatewayConfig, ShardSpec};
+
+    if cfg.gateway_shards.is_empty() {
+        return Err(mole::Error::Config(
+            "gateway needs at least one [gateway.shards.MODEL] config table \
+             (with `backends = \"HOST:PORT, ...\"`)"
+                .into(),
+        ));
+    }
+    let mut shards = Vec::with_capacity(cfg.gateway_shards.len());
+    for spec in &cfg.gateway_shards {
+        shards.push(ShardSpec::new(
+            &spec.model,
+            EpochSelector::parse(&spec.epochs)?,
+            spec.backends.clone(),
+        )?);
+    }
+    let cred_file = args.get_or("credential", &cfg.gateway_credential_file);
+    let credential = if cred_file.is_empty() {
+        None
+    } else {
+        Some(mole::keys::load_credential_file(Path::new(&cred_file))?)
+    };
+    let gw_cfg = GatewayConfig {
+        addr: args.get_or("listen", &cfg.gateway_listen),
+        shards,
+        probe_interval: std::time::Duration::from_millis(
+            args.get_u64("probe-ms", cfg.gateway_probe_interval_ms)?,
+        ),
+        connect_timeout: std::time::Duration::from_millis(
+            args.get_u64("connect-timeout-ms", cfg.gateway_connect_timeout_ms)?,
+        ),
+        credential,
+        workers: args.get_usize("workers", GatewayConfig::default().workers)?,
+    };
+    let shard_banner: Vec<String> = cfg
+        .gateway_shards
+        .iter()
+        .map(|s| format!("{}@{} -> {}", s.model, s.epochs, s.backends.join("|")))
+        .collect();
+    let gw = Gateway::bind(gw_cfg)?;
+    println!(
+        "gateway on {} fronting [{}] (admin {})",
+        gw.local_addr(),
+        shard_banner.join(", "),
+        if cred_file.is_empty() { "off" } else { "authenticated, fleet fan-out" },
+    );
+    // park forever, logging the fleet view whenever it changes
+    let mut last = String::new();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        let view = gw.fleet_report();
+        if view != last {
+            println!("fleet:\n{view}");
+            last = view;
+        }
+    }
+}
+
 fn loadgen(args: &Args, cfg: &MoleConfig) -> Result<()> {
     use mole::coordinator::loadgen::{run, LoadgenConfig};
     use mole::coordinator::EPOCH_LATEST;
@@ -714,7 +795,7 @@ fn admin(args: &Args, cfg: &MoleConfig) -> Result<()> {
     let addr = args.get_or("connect", &cfg.addr);
     let verb = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
         mole::Error::Config(
-            "usage: mole admin <register|drain|retire|status|revoke-operator> [options]"
+            "usage: mole admin <register|drain|retire|status|revoke-operator|fleet-status> [options]"
                 .into(),
         )
     })?;
@@ -748,6 +829,8 @@ fn admin(args: &Args, cfg: &MoleConfig) -> Result<()> {
         "drain" => client.drain(&model_arg()?, epoch_arg()?)?,
         "retire" => client.retire(&model_arg()?, epoch_arg()?)?,
         "status" => client.status()?,
+        // gateway-only (v9): a plain serving process refuses it typed
+        "fleet-status" => client.fleet_status()?,
         "revoke-operator" => {
             let label = args.get("label").ok_or_else(|| {
                 mole::Error::Config(
@@ -758,7 +841,7 @@ fn admin(args: &Args, cfg: &MoleConfig) -> Result<()> {
         }
         other => {
             return Err(mole::Error::Config(format!(
-                "unknown admin verb {other:?} (register|drain|retire|status|revoke-operator)"
+                "unknown admin verb {other:?} (register|drain|retire|status|revoke-operator|fleet-status)"
             )))
         }
     };

@@ -37,6 +37,10 @@ pub enum Expect {
     AuthFault(&'static str),
     /// A `Fault::Generic` whose message contains the substring.
     GenericFault(&'static str),
+    /// A typed `Fault::Overloaded` whose `retry_after_ms` hint sits in
+    /// the documented [1, 1000] ms contract (the shed paths carry no
+    /// message string, so the hint range is the whole observable).
+    OverloadFault,
     /// An `AdminChallenge` (any nonce).
     Challenge,
     /// An `EndOfData` frame (the close handshake's second half).
@@ -142,6 +146,11 @@ impl<S: Read + Write> Driver<S> {
                 &got,
                 Message::Fault { fault: Fault::Generic { msg }, .. }
                     if msg.contains(sub)
+            ),
+            Expect::OverloadFault => matches!(
+                &got,
+                Message::Fault { fault: Fault::Overloaded { retry_after_ms }, .. }
+                    if (1..=1000).contains(retry_after_ms)
             ),
             Expect::Challenge => matches!(&got, Message::AdminChallenge { .. }),
             Expect::EndOfData => matches!(&got, Message::EndOfData),

@@ -1,0 +1,334 @@
+//! Gateway end-to-end tests: a fleet of three serving processes behind
+//! one `Gateway`, driven through a real rotation under load.
+//!
+//! The acceptance scenario reuses the barrier harness of
+//! `lifecycle_e2e.rs` — phase 1 strictly before the rollover, phase 2
+//! strictly after — so every assertion is exact: zero lost responses,
+//! every logits vector bitwise-equal to single-row inference on
+//! whichever epoch served it, and (the fleet-specific part) one backend
+//! deliberately killed mid-drain and reported as **failed in that
+//! node's ack line**, while the other nodes' acks stay individually
+//! green — a partial fan-out is never collapsed into one bool.
+
+use mole::coordinator::batcher::BatcherConfig;
+use mole::coordinator::client::{ClientConfig, MoleClient};
+use mole::coordinator::gateway::{EpochSelector, Gateway, GatewayConfig, ShardSpec};
+use mole::coordinator::registry::{demo_entry_from_keys, ModelRegistry, RegisteredModel};
+use mole::coordinator::server::{ServeConfig, Server};
+use mole::coordinator::AdminClient;
+use mole::keys::KeyBundle;
+use mole::manifest::Manifest;
+use mole::rng::Rng;
+use mole::runtime::{Arg, SharedEngine};
+use mole::tensor::Tensor;
+use mole::Geometry;
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+const KAPPA: usize = 16;
+const SEED: u64 = 4242;
+/// Shared operator credential: the gateway's inbound gate and its
+/// outbound per-backend identity, and every backend's admin gate.
+const CRED: [u8; 32] = [0x5A; 32];
+
+fn manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).unwrap()
+}
+
+fn epoch_keys() -> (KeyBundle, KeyBundle) {
+    let root = KeyBundle::generate(Geometry::SMALL, KAPPA, SEED).unwrap();
+    let rotated = root.rotate(SEED + 1).unwrap();
+    (root, rotated)
+}
+
+fn entry(m: &Manifest, keys: &KeyBundle) -> RegisteredModel {
+    demo_entry_from_keys(m, "alpha", keys, SEED).unwrap()
+}
+
+/// Reference: one row through the batch-1 artifact — what every served
+/// response must match bitwise, per epoch, no matter which backend the
+/// gateway picked.
+fn single_row_logits(engine: &SharedEngine, e: &RegisteredModel, row: &[f32]) -> Vec<f32> {
+    let mut args: Vec<Arg> = vec![
+        Arg::T(e.layer.matrix().clone()),
+        Arg::T(Tensor::new(&[e.layer.bias().len()], e.layer.bias().to_vec()).unwrap()),
+    ];
+    for p in &e.params {
+        args.push(Arg::T(p.clone()));
+    }
+    args.push(Arg::T(Tensor::new(&[1, row.len()], row.to_vec()).unwrap()));
+    engine.exec("infer_aug_small_b1", &args).unwrap()[0].data().to_vec()
+}
+
+fn client_rows(client_id: u64, phase: u64, n: usize, d_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0x6A7E ^ (client_id * 7919) ^ (phase * 104729));
+    (0..n).map(|_| rng.normal_vec(d_len, 0.5)).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One in-process backend serving `alpha@0`, admin plane gated on the
+/// shared credential (so the gateway's fan-out can authenticate to it).
+fn spawn_backend(m: &Manifest, engine: &SharedEngine, root: &KeyBundle) -> Server {
+    let registry = ModelRegistry::new(
+        engine.clone(),
+        BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_millis(5),
+            ..BatcherConfig::default()
+        },
+    );
+    registry.register(entry(m, root)).unwrap();
+    Server::bind(
+        registry,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 4,
+            admin_credential: Some(CRED),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn gateway_over(backends: Vec<String>, credential: Option<[u8; 32]>) -> Gateway {
+    Gateway::bind(GatewayConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: vec![ShardSpec::new("alpha", EpochSelector::Any, backends).unwrap()],
+        probe_interval: Duration::from_millis(100),
+        connect_timeout: Duration::from_millis(500),
+        credential,
+        workers: 2,
+    })
+    .unwrap()
+}
+
+/// The ack line for one node in a fan-out / fleet-status detail.
+fn node_line<'a>(detail: &'a str, addr: &str) -> &'a str {
+    detail
+        .lines()
+        .find(|l| l.starts_with(&format!("node {addr} ")))
+        .unwrap_or_else(|| panic!("no ack line for {addr} in:\n{detail}"))
+}
+
+/// Acceptance: rotate under load across three backend processes behind
+/// the gateway, one node killed mid-drain. Zero lost responses, bitwise
+/// correctness per epoch, and the dead node reported failed **per node**
+/// in both the fan-out ack and `fleet-status`.
+#[test]
+fn fleet_rotate_under_load_with_node_killed_mid_drain() {
+    const CLIENTS: usize = 3;
+    const PER_PHASE: usize = 4;
+
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let (root, rotated) = epoch_keys();
+
+    let mut servers: Vec<Option<Server>> =
+        (0..3).map(|_| Some(spawn_backend(&m, &engine, &root))).collect();
+    let addrs: Vec<String> =
+        servers.iter().map(|s| s.as_ref().unwrap().local_addr().to_string()).collect();
+    let gw = gateway_over(addrs.clone(), Some(CRED));
+    let gw_addr = gw.local_addr();
+
+    // the rotated epoch's vault: the register fan-out carries this path
+    // and every backend loads it from its own filesystem
+    let vault = std::env::temp_dir().join(format!("mole_gateway_vault_{SEED}.key"));
+    rotated.save(&vault).unwrap();
+
+    let rotate_start = Arc::new(Barrier::new(CLIENTS + 1));
+    let rotate_done = Arc::new(Barrier::new(CLIENTS + 1));
+
+    let mut threads = Vec::new();
+    for c in 0..CLIENTS as u64 {
+        let (b1, b2) = (rotate_start.clone(), rotate_done.clone());
+        threads.push(std::thread::spawn(move || {
+            // phase 1: strictly before the rollover — epoch 0 serves,
+            // reached through whichever replica the gateway picked
+            let mut client =
+                MoleClient::connect_with(gw_addr, ClientConfig::pinned("alpha", 0)).unwrap();
+            assert_eq!(client.server_info().unwrap().epoch, 0);
+            let d = client.d_len();
+            let rows1 = client_rows(c, 1, PER_PHASE, d);
+            let got1 = client.infer_batch(&rows1).unwrap();
+            assert_eq!(client.drain_redirects(), 0);
+            // close before the rollover so no spliced session straddles
+            // the deliberate backend kill
+            client.finish().unwrap();
+            b1.wait();
+            b2.wait();
+            // phase 2: strictly after the drain — a fresh session pinned
+            // to the drained epoch is refused typed by the backend, the
+            // fault passes through the gateway untouched, and the client
+            // re-resolves to epoch 1 exactly as it would un-fronted
+            let mut client =
+                MoleClient::connect_with(gw_addr, ClientConfig::pinned("alpha", 0)).unwrap();
+            assert_eq!(client.server_info().unwrap().epoch, 1);
+            let rows2 = client_rows(c, 2, PER_PHASE, d);
+            let got2 = client.infer_batch(&rows2).unwrap();
+            let redirects = client.drain_redirects();
+            client.finish().unwrap();
+            (got1, got2, redirects)
+        }));
+    }
+
+    rotate_start.wait();
+    // live rollover through the gateway's sealed fleet admin plane
+    let mut admin = AdminClient::connect_with_credential(gw_addr, CRED).unwrap();
+    let detail = admin
+        .register("alpha", vault.to_str().unwrap(), KAPPA, SEED, SEED)
+        .unwrap();
+    assert_eq!(detail.lines().count(), 3, "{detail}");
+    for addr in &addrs {
+        let line = node_line(&detail, addr);
+        assert!(line.contains("ok: registered alpha@1"), "{line}");
+    }
+    // kill one node mid-drain: register reached it, drain will not
+    let victim = addrs[1].clone();
+    servers[1].take().unwrap().stop();
+    let detail = admin.drain("alpha", 0).unwrap();
+    assert_eq!(detail.lines().count(), 3, "{detail}");
+    for addr in &addrs {
+        let line = node_line(&detail, addr);
+        if *addr == victim {
+            assert!(line.contains("failed:"), "dead node not reported failed: {line}");
+        } else {
+            assert!(line.contains("ok:") && line.contains("successor 1"), "{line}");
+        }
+    }
+    rotate_done.wait();
+
+    let results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    std::fs::remove_file(&vault).ok();
+
+    // bitwise ground truth per epoch, rebuilt from the same keys
+    let (e0, e1) = (entry(&m, &root), entry(&m, &rotated));
+    let d_len = m.geometry("small").unwrap().d_len();
+    for (c, (got1, got2, redirects)) in results.iter().enumerate() {
+        assert_eq!(got1.len(), PER_PHASE, "client {c} lost phase-1 responses");
+        assert_eq!(got2.len(), PER_PHASE, "client {c} lost phase-2 responses");
+        for (i, row) in client_rows(c as u64, 1, PER_PHASE, d_len).iter().enumerate() {
+            assert_eq!(
+                bits(&got1[i]),
+                bits(&single_row_logits(&engine, &e0, row)),
+                "client {c} phase-1 row {i} not bitwise-equal on epoch 0"
+            );
+        }
+        for (i, row) in client_rows(c as u64, 2, PER_PHASE, d_len).iter().enumerate() {
+            assert_eq!(
+                bits(&got2[i]),
+                bits(&single_row_logits(&engine, &e1, row)),
+                "client {c} phase-2 row {i} not bitwise-equal on epoch 1"
+            );
+        }
+        // the phase-2 handshake took exactly one typed redirect
+        assert_eq!(*redirects, 1, "client {c}");
+    }
+
+    // fleet-status: per-node, never collapsed. The probe marks the
+    // killed node down (poll briefly — its cadence is 100ms); its last
+    // ack stays the failed drain, the others' the successful one.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let status = loop {
+        let status = admin.fleet_status().unwrap();
+        if node_line(&status, &victim).contains(" down ") {
+            break status;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "probe never marked the killed node down:\n{status}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(status.lines().count(), 3, "{status}");
+    assert!(node_line(&status, &victim).contains("down last: failed:"), "{status}");
+    for addr in addrs.iter().filter(|a| **a != victim) {
+        assert!(node_line(&status, addr).contains("up last: ok:"), "{status}");
+    }
+
+    // the rollover completes on the surviving fleet; the dead node is
+    // still reported per node, still failed
+    let detail = admin.retire("alpha", 0).unwrap();
+    assert_eq!(detail.lines().count(), 3, "{detail}");
+    for addr in &addrs {
+        let line = node_line(&detail, addr);
+        if *addr == victim {
+            assert!(line.contains("failed:"), "{line}");
+        } else {
+            assert!(line.contains("ok: retired alpha@0"), "{line}");
+        }
+    }
+    admin.finish().unwrap();
+
+    // a late client pinned to the retired epoch re-resolves through the
+    // gateway and is served bitwise-correctly by epoch 1
+    let mut late =
+        MoleClient::connect_with(gw_addr, ClientConfig::pinned("alpha", 0)).unwrap();
+    assert_eq!(late.server_info().unwrap().epoch, 1);
+    let row = client_rows(99, 3, 1, d_len).remove(0);
+    assert_eq!(
+        bits(&late.infer(&row).unwrap()),
+        bits(&single_row_logits(&engine, &e1, &row))
+    );
+    late.finish().unwrap();
+
+    gw.stop();
+    for s in servers.into_iter().flatten() {
+        s.stop();
+    }
+}
+
+/// The gateway's refusals are all typed: no credential ⇒ no admin plane
+/// at all (sealed or bare), unrouteable models are named, bulk delivery
+/// is pointed at a backend — while routed serving traffic is spliced
+/// verbatim and bitwise-correct.
+#[test]
+fn gateway_refusals_are_typed_and_routing_is_verbatim() {
+    let m = manifest();
+    let engine = SharedEngine::new(m.clone());
+    let (root, _) = epoch_keys();
+    let server = spawn_backend(&m, &engine, &root);
+    let backend_addr = server.local_addr();
+    let gw = gateway_over(vec![backend_addr.to_string()], None);
+    let gw_addr = gw.local_addr();
+
+    // no credential configured: the sealed handshake is refused typed…
+    let err = AdminClient::connect_with_credential(gw_addr, CRED).unwrap_err();
+    assert!(err.to_string().contains("no admin credential"), "{err}");
+    // …and bare admin verbs are refused too — the gateway never proxies
+    // an unsealed admin frame to a backend
+    let err = AdminClient::connect(gw_addr).unwrap().status().unwrap_err();
+    assert!(err.to_string().contains("AdminHello"), "{err}");
+
+    // a model outside the shard map is refused with its name
+    let err =
+        MoleClient::connect_with(gw_addr, ClientConfig::pinned("ghost", 0)).unwrap_err();
+    assert!(err.to_string().contains("no shard for ghost@0"), "{err}");
+
+    // fleet-status straight at a serving process: refused typed — a lone
+    // node has no fleet view
+    let mut direct = AdminClient::connect_with_credential(backend_addr, CRED).unwrap();
+    let err = direct.fleet_status().unwrap_err();
+    assert!(err.to_string().contains("mole gateway"), "{err}");
+    direct.finish().unwrap();
+
+    // routed serving traffic is untouched: bitwise equal through the
+    // splice to single-row inference on the backend's epoch
+    let e0 = entry(&m, &root);
+    let d_len = m.geometry("small").unwrap().d_len();
+    let mut client =
+        MoleClient::connect_with(gw_addr, ClientConfig::pinned("alpha", 0)).unwrap();
+    let rows = client_rows(1, 1, 3, d_len);
+    let got = client.infer_batch(&rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(bits(&got[i]), bits(&single_row_logits(&engine, &e0, row)));
+    }
+    client.finish().unwrap();
+
+    gw.stop();
+    server.stop();
+}

@@ -22,8 +22,10 @@ use mole::manifest::Manifest;
 use mole::rng::Rng;
 use mole::runtime::{Arg, SharedEngine};
 use mole::tensor::Tensor;
+use mole::testkit::conformance::{Driver, Expect};
 use mole::Error;
 use mole::Geometry;
+use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -93,13 +95,22 @@ fn accept_budget_sheds_typed_and_recovers() {
     let c1 = MoleClient::connect(addr).unwrap();
     let mut c2 = MoleClient::connect(addr).unwrap();
 
-    // budget full: every further connect is a typed shed
+    // budget full: every further connect is a typed shed. The hint is
+    // now *derived* from shed pressure (pending fill + consecutive-shed
+    // burst), not the old flat 100 ms: with both sessions fully
+    // handshaked the pending queue is empty and the burst (3 < 8 sheds)
+    // hasn't doubled anything yet, so each hint is exactly the 25 ms
+    // floor — and always inside the documented [1, 1000] contract.
     for attempt in 0..3 {
         match MoleClient::connect(addr) {
             Err(Error::Overloaded { retry_after_ms }) => {
                 assert!(
                     (1..=1000).contains(&retry_after_ms),
-                    "attempt {attempt}: hint {retry_after_ms} ms not actionable"
+                    "attempt {attempt}: hint {retry_after_ms} ms out of contract"
+                );
+                assert_eq!(
+                    retry_after_ms, 25,
+                    "attempt {attempt}: idle-pending short burst should hint the 25 ms floor"
                 );
             }
             Err(other) => panic!("attempt {attempt}: expected typed Overloaded, got {other}"),
@@ -131,6 +142,85 @@ fn accept_budget_sheds_typed_and_recovers() {
     assert!(!readmitted.infer(&row).unwrap().is_empty());
     c2.finish().unwrap();
     readmitted.finish().unwrap();
+    server.stop();
+}
+
+/// The `shed_accept` drain-cap edge. Below `SHED_DRAIN_CAP` (32)
+/// concurrent drains, a shed peer that already wrote bytes still
+/// receives the typed `Overloaded` fault and a clean FIN — the detached
+/// drainer reads the peer's unread bytes so `close(2)` never answers
+/// RST and destroys the fault frame in flight. Past the cap the close is
+/// documented to be abrupt: an over-cap shed resolves promptly as
+/// *either* the typed fault or a connection reset — that disjunction is
+/// the contract — and never as a hang.
+#[test]
+fn shed_drain_cap_typed_below_abrupt_above() {
+    use std::io::{Read as _, Write as _};
+    let (server, _engine) = start_server(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            session_workers: 1,
+            max_sessions: 1,
+            ..ServeConfig::default()
+        },
+        BatcherConfig::default(),
+    );
+    let addr = server.local_addr();
+    let _occupant = MoleClient::connect(addr).unwrap();
+
+    // Below the cap: a well-behaved peer whose handshake bytes sit
+    // unread in the server's receive queue still gets the typed fault,
+    // then a clean EOF — never a reset.
+    let mut d = Driver::connect(addr).unwrap();
+    d.raw(&[0u8; 64]).unwrap();
+    d.expect(&Expect::OverloadFault).unwrap().expect(&Expect::Eof).unwrap();
+
+    // Saturate the drain-thread cap: each holder is shed, writes bytes,
+    // and then neither reads nor closes — its drainer sits in a blocked
+    // read for up to the full 250 ms SHED_DRAIN_WINDOW.
+    const CAP: usize = 32; // = server::SHED_DRAIN_CAP
+    const EXTRAS: usize = 8;
+    let mut holders = Vec::with_capacity(CAP);
+    for _ in 0..CAP {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&[0u8; 64]).unwrap();
+        holders.push(s);
+    }
+
+    // Over the cap: each extra shed races the holders' drain slots, so
+    // it lands typed (a slot freed, or the FIN outran our bytes) or
+    // abruptly reset — but a bounded read always resolves it.
+    let mut typed = 0usize;
+    let mut reset = 0usize;
+    for i in 0..EXTRAS {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&[0u8; 64]).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = Vec::new();
+        match s.read_to_end(&mut buf) {
+            Ok(_) => {
+                assert!(!buf.is_empty(), "extra {i}: clean EOF without a fault frame");
+                typed += 1;
+            }
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+                    ),
+                    "extra {i}: shed must resolve as typed fault or reset, got {e}"
+                );
+                reset += 1;
+            }
+        }
+    }
+    assert_eq!(typed + reset, EXTRAS, "every over-cap shed resolved, none hung");
+
+    // every refused connection was counted as a shed, typed or abrupt,
+    // and none of them registered as a protocol fault
+    assert_eq!(server.metrics().accept_shed.get() as usize, 1 + CAP + EXTRAS);
+    assert_eq!(server.metrics().faults.get(), 0);
+    drop(holders);
     server.stop();
 }
 
